@@ -1,0 +1,81 @@
+"""AOT lowering: jit -> stablehlo -> XlaComputation -> HLO *text*.
+
+HLO text (NOT `.serialize()`) is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts (one fused HLO module per model step per shape variant):
+    artifacts/pagerank_step_n{N}_k{K}.hlo.txt
+    artifacts/bfs_pull_step_n{N}_k{K}.hlo.txt
+    artifacts/manifest.txt   (name, shapes — parsed by rust/src/runtime)
+
+Usage: cd python && python -m compile.aot --out ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# Shape variants the Rust runtime can select from. Graphs are padded by the
+# coordinator to the smallest variant that fits (n >= vertices, k >= max
+# in-degree after ELL clipping).
+VARIANTS = [
+    (1024, 64),
+    (4096, 32),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_pagerank(n: int, k: int) -> str:
+    cols = jax.ShapeDtypeStruct((n, k), jnp.int32)
+    vals = jax.ShapeDtypeStruct((n, k), jnp.float32)
+    pr = jax.ShapeDtypeStruct((n,), jnp.float32)
+    dang = jax.ShapeDtypeStruct((n,), jnp.float32)
+    return to_hlo_text(jax.jit(model.pagerank_step).lower(cols, vals, pr, dang))
+
+
+def lower_bfs_pull(n: int, k: int) -> str:
+    cols = jax.ShapeDtypeStruct((n, k), jnp.int32)
+    visited = jax.ShapeDtypeStruct((n,), jnp.float32)
+    return to_hlo_text(jax.jit(model.bfs_pull_step).lower(cols, visited))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = []
+    for n, k in VARIANTS:
+        for name, fn in (("pagerank_step", lower_pagerank), ("bfs_pull_step", lower_bfs_pull)):
+            fname = f"{name}_n{n}_k{k}.hlo.txt"
+            text = fn(n, k)
+            path = os.path.join(args.out, fname)
+            with open(path, "w") as f:
+                f.write(text)
+            manifest.append(f"{name} {n} {k} {fname}")
+            print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"wrote {len(manifest)} artifacts to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""L1 Pallas kernel: pull-direction (bottom-up) BFS step.
+
+Gunrock's direction-optimized traversal (paper §5.1.4) switches from
+push-based advance to a pull phase in which every *unvisited* vertex scans
+its incoming neighbors for a visited parent.  On the GPU that is a
+bitmap-probing gather; on TPU we express it over the same ELL slab layout
+as the SpMV kernel: a (BLOCK_ROWS, K) block of in-neighbor ids streams
+through VMEM while the visited bitmap (as f32 0/1) stays resident.
+
+interpret=True only — see spmv_ell.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_ROWS = 256
+
+
+def _bfs_pull_kernel(cols_ref, vis_blk_ref, vis_full_ref, out_ref):
+    cols = cols_ref[...]  # (B, K) int32, -1 padding
+    row_vis = vis_blk_ref[...]  # (B,)   visited flags of this row block
+    visited = vis_full_ref[...]  # (N,)   full visited vector
+    mask = cols >= 0
+    safe = jnp.where(mask, cols, 0)
+    parent_visited = jnp.where(mask, visited[safe], 0.0)
+    any_parent = jnp.max(parent_visited, axis=1)
+    out_ref[...] = (1.0 - row_vis) * any_parent
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def bfs_pull_step(
+    cols: jnp.ndarray,
+    visited: jnp.ndarray,
+    *,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool = True,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (new_frontier, new_visited) as f32 0/1 vectors."""
+    n, k = cols.shape
+    b = min(block_rows, n)
+    if n % b != 0:
+        b = n
+    grid = (n // b,)
+    new_frontier = pl.pallas_call(
+        _bfs_pull_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, k), lambda i: (i, 0)),
+            pl.BlockSpec((b,), lambda i: (i,)),
+            pl.BlockSpec(visited.shape, lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((b,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=interpret,
+    )(cols, visited, visited)
+    new_visited = jnp.clip(visited + new_frontier, 0.0, 1.0)
+    return new_frontier, new_visited

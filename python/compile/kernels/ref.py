@@ -1,0 +1,69 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the ground truth the L1 kernels are validated against in pytest
+(`python/tests/test_kernel.py`). They intentionally use only plain jnp ops
+so any disagreement is a kernel bug, not an oracle bug.
+
+The data layout mirrors Gunrock's CSR-derived padded representation: on the
+GPU Gunrock load-balances ragged CSR neighbor lists across warps; on TPU the
+natural analog is an ELL slab — every vertex row padded to a fixed width K
+so the HBM->VMEM schedule is expressible with a static BlockSpec
+(DESIGN.md §Hardware-Adaptation).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def spmv_ell_ref(cols: jnp.ndarray, vals: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """y[i] = sum_k vals[i,k] * x[cols[i,k]], padded entries have cols<0.
+
+    cols: int32[N, K] padded column indices, -1 marks padding.
+    vals: float32[N, K] edge values (0 at padding).
+    x:    float32[M]    input vector.
+    """
+    mask = cols >= 0
+    safe = jnp.where(mask, cols, 0)
+    gathered = jnp.where(mask, x[safe], 0.0)
+    return jnp.sum(vals * gathered, axis=1)
+
+
+def pagerank_step_ref(
+    cols: jnp.ndarray,
+    vals: jnp.ndarray,
+    pr: jnp.ndarray,
+    dangling: jnp.ndarray,
+    damp: float = 0.85,
+) -> jnp.ndarray:
+    """One PageRank power iteration.
+
+    cols/vals form the ELL slab of the *transposed*, out-degree-normalized
+    adjacency matrix (row i lists the in-neighbors of vertex i, with value
+    1/outdeg(neighbor)). `dangling` is a 0/1 mask of zero-out-degree
+    vertices whose rank mass is redistributed uniformly.
+    """
+    n = pr.shape[0]
+    contrib = spmv_ell_ref(cols, vals, pr)
+    dangling_mass = jnp.sum(pr * dangling)
+    return (1.0 - damp) / n + damp * (contrib + dangling_mass / n)
+
+
+def bfs_pull_step_ref(
+    cols: jnp.ndarray, visited: jnp.ndarray
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """One pull-direction BFS step (Beamer-style bottom-up).
+
+    cols:    int32[N, K] ELL slab of *incoming* neighbors, -1 padding.
+    visited: float32[N]  1.0 where the vertex is already in the BFS tree.
+
+    Returns (new_frontier, new_visited): a vertex joins the new frontier iff
+    it is unvisited and any in-neighbor is visited.
+    """
+    mask = cols >= 0
+    safe = jnp.where(mask, cols, 0)
+    parent_visited = jnp.where(mask, visited[safe], 0.0)
+    any_parent = jnp.max(parent_visited, axis=1, initial=0.0)
+    new_frontier = (1.0 - visited) * any_parent
+    new_visited = jnp.clip(visited + new_frontier, 0.0, 1.0)
+    return new_frontier, new_visited

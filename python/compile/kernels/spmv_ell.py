@@ -1,0 +1,68 @@
+"""L1 Pallas kernel: row-blocked ELL SpMV.
+
+This is the compute hot-spot of Gunrock's PageRank ("congruent to sparse
+matrix-vector multiply", paper §6.5), rethought for the TPU memory system:
+
+- The GPU code load-balances ragged CSR rows across warps (Merrill-style
+  TWC).  A TPU has no warps; the equivalent insight is to make the
+  HBM->VMEM schedule static.  We pad every row to width K (ELL slab) so a
+  `BlockSpec` of (BLOCK_ROWS, K) streams the slab block-by-block while the
+  dense vector x stays resident in VMEM.
+- Padding entries carry col = -1 / val = 0 so they contribute nothing.
+- The gather x[cols] is a VPU (vector) workload, not an MXU matmul; see
+  DESIGN.md §Perf for the utilization estimate.
+
+Must be lowered with interpret=True: real TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_ROWS = 256
+
+
+def _spmv_ell_kernel(cols_ref, vals_ref, x_ref, y_ref):
+    """One row-block: y[block] = sum_k vals[block,k] * x[cols[block,k]]."""
+    cols = cols_ref[...]  # (B, K) int32
+    vals = vals_ref[...]  # (B, K) f32
+    x = x_ref[...]  # (M,)   f32, fully VMEM-resident
+    mask = cols >= 0
+    safe = jnp.where(mask, cols, 0)
+    gathered = jnp.where(mask, x[safe], 0.0)
+    y_ref[...] = jnp.sum(vals * gathered, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def spmv_ell(
+    cols: jnp.ndarray,
+    vals: jnp.ndarray,
+    x: jnp.ndarray,
+    *,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Pallas ELL SpMV: y[i] = sum_k vals[i,k] * x[cols[i,k]]."""
+    n, k = cols.shape
+    b = min(block_rows, n)
+    if n % b != 0:
+        # Fall back to a single block for odd sizes (tests sweep shapes).
+        b = n
+    grid = (n // b,)
+    return pl.pallas_call(
+        _spmv_ell_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, k), lambda i: (i, 0)),
+            pl.BlockSpec((b, k), lambda i: (i, 0)),
+            pl.BlockSpec(x.shape, lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((b,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=interpret,
+    )(cols, vals, x)

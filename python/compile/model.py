@@ -1,0 +1,52 @@
+"""L2 JAX model: per-iteration compute graphs for the AOT artifacts.
+
+The Rust coordinator (L3) drives the iterative-convergent loop; each step
+that is dense and fixed-shape — PageRank power iteration, pull-direction
+BFS — is a single jitted function here, calling the L1 Pallas kernels so
+that kernel and surrounding glue lower into one fused HLO module.
+
+These functions are lowered ONCE by `python/compile/aot.py` into
+artifacts/*.hlo.txt; Python never runs on the request path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.bfs_pull import bfs_pull_step as _bfs_pull_kernel
+from compile.kernels.spmv_ell import spmv_ell
+
+DAMP = 0.85
+
+
+def pagerank_step(
+    cols: jnp.ndarray,
+    vals: jnp.ndarray,
+    pr: jnp.ndarray,
+    dangling: jnp.ndarray,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """One PageRank power iteration over the ELL slab of A^T (normalized).
+
+    Returns (new_pr, l1_delta). The coordinator checks l1_delta < eps on the
+    host to terminate — the only per-iteration host round-trip.
+    """
+    n = pr.shape[0]
+    contrib = spmv_ell(cols, vals, pr)
+    dangling_mass = jnp.sum(pr * dangling)
+    new_pr = (1.0 - DAMP) / n + DAMP * (contrib + dangling_mass / n)
+    delta = jnp.sum(jnp.abs(new_pr - pr))
+    return new_pr, delta
+
+
+def bfs_pull_step(
+    cols: jnp.ndarray, visited: jnp.ndarray
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One pull-direction BFS step over the incoming-neighbor ELL slab.
+
+    Returns (new_frontier, new_visited, frontier_size); the coordinator
+    stops when frontier_size == 0 and uses it for the paper's push/pull
+    direction heuristic (do_a / do_b, §5.1.4).
+    """
+    new_frontier, new_visited = _bfs_pull_kernel(cols, visited)
+    return new_frontier, new_visited, jnp.sum(new_frontier)

@@ -1,0 +1,44 @@
+//! Ablation (DESIGN.md §design-choices): the near/far two-level priority
+//! queue (paper §5.1.5). SSSP runtime vs delta, including delta=0
+//! (Bellman-Ford, queue disabled) and the multisplit-based multi-level
+//! queue for comparison — quantifying the workload reduction the paper
+//! attributes to delta-stepping.
+
+use gunrock::config::Config;
+use gunrock::graph::datasets;
+use gunrock::harness::{self, fmt_ms, suite};
+
+fn main() {
+    let deltas = [0u64, 8, 32, 128, 512];
+    let mut rows = Vec::new();
+    for name in ["soc-livejournal1", "rmat_s23_e32", "rgg_n_24", "roadnet_USA"] {
+        let g = datasets::load(name, true);
+        let mut row = vec![name.to_string()];
+        let mut edges_row = vec![String::new()];
+        for &delta in &deltas {
+            let mut cfg = Config::default();
+            cfg.sssp_delta = delta;
+            let mut ms: Vec<f64> = Vec::new();
+            let mut edges = 0u64;
+            for _ in 0..3 {
+                let r = suite::run_sssp(name, &g, &cfg);
+                ms.push(r.runtime_ms);
+                edges = r.result.edges_visited;
+            }
+            ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            row.push(fmt_ms(ms[1]));
+            edges_row.push(format!("{:.2}|E|", edges as f64 / g.num_edges() as f64));
+        }
+        rows.push(row);
+        rows.push(edges_row);
+        eprintln!("done {name}");
+    }
+    harness::print_table(
+        "Ablation: SSSP near/far priority queue — runtime (ms) / edges relaxed vs delta",
+        &["Dataset", "delta=0 (BF)", "delta=8", "delta=32", "delta=128", "delta=512"],
+        &rows,
+    );
+    println!("\nexpected shape: moderate delta minimizes relaxations (delta-stepping");
+    println!("sweet spot); delta=0 over-relaxes on weighted scale-free graphs; very");
+    println!("large delta degenerates toward Bellman-Ford again.");
+}

@@ -1,0 +1,52 @@
+//! Fig 21: heatmap of BFS throughput (MTEPS) as a function of the
+//! direction-optimization parameters do_a and do_b, on six dataset
+//! analogs, 5 runs averaged per cell (paper uses 25 random sources).
+
+use gunrock::config::Config;
+use gunrock::graph::datasets;
+use gunrock::harness::suite;
+use gunrock::util::rng::Pcg32;
+
+const DO_VALUES: [f64; 6] = [0.00001, 0.0001, 0.001, 0.01, 0.1, 1.0];
+
+fn main() {
+    let datasets_run =
+        ["hollywood-09", "indochina-04", "rmat_s22_e64", "rmat_s23_e32", "soc-livejournal1", "soc-orkut"];
+    for name in datasets_run {
+        let g = datasets::load(name, false);
+        println!("\n=== Fig 21 heatmap: {name} (cells = avg MTEPS over 5 random sources) ===");
+        print!("{:>10}", "do_a\\do_b");
+        for b in DO_VALUES {
+            print!("{b:>10.5}");
+        }
+        println!();
+        let mut best = (0.0f64, 0.0, 0.0);
+        for a in DO_VALUES {
+            print!("{a:>10.5}");
+            for b in DO_VALUES {
+                let mut cfg = Config::default();
+                cfg.direction_optimized = true;
+                cfg.do_a = a;
+                cfg.do_b = b;
+                let mut rng = Pcg32::new(7);
+                let mut acc = 0.0;
+                for _ in 0..5 {
+                    let src = rng.below(g.num_vertices as u32);
+                    let (_, st) = gunrock::primitives::bfs::bfs(&g, src, &cfg);
+                    acc += st.result.mteps();
+                }
+                let mteps = acc / 5.0;
+                if mteps > best.0 {
+                    best = (mteps, a, b);
+                }
+                print!("{mteps:>10.1}");
+            }
+            println!();
+        }
+        println!("best: {:.1} MTEPS at do_a={} do_b={}", best.0, best.1, best.2);
+        eprintln!("done {name}");
+    }
+    println!("\nshape targets (paper): a rectangular high-throughput region per dataset;");
+    println!("increasing do_a first helps (earlier pull switch) then hurts; small do_b");
+    println!("(never switching back) is best on most graphs; optimum is dataset-specific.");
+}

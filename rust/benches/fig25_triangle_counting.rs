@@ -1,0 +1,55 @@
+//! Fig 25: TC execution-time speedup of the two Gunrock intersection
+//! variants and comparator strategies, normalized to the Schank-Wagner
+//! forward CPU baseline, on six triangle-relevant dataset analogs.
+
+use gunrock::baselines::tc_forward::tc_forward;
+use gunrock::config::Config;
+use gunrock::graph::datasets;
+use gunrock::harness;
+use gunrock::primitives::tc;
+use gunrock::util::timer::time_ms;
+
+fn main() {
+    let cfg = Config::default();
+    let mut rows = Vec::new();
+    for name in datasets::TC_DATASETS {
+        let g = datasets::load(name, false);
+        let (want, base_ms) = time_ms(|| tc_forward(&g));
+        // median of 3
+        let med = |f: &dyn Fn() -> f64| {
+            let mut v: Vec<f64> = (0..3).map(|_| f()).collect();
+            v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            v[1]
+        };
+        let full_ms = med(&|| {
+            let (r, run) = tc::tc_intersect_full(&g, &cfg);
+            assert_eq!(r.triangles, want);
+            run.runtime_ms
+        });
+        let filt_ms = med(&|| {
+            let (r, run) = tc::tc_intersect_filtered(&g, &cfg);
+            assert_eq!(r.triangles, want);
+            run.runtime_ms
+        });
+        rows.push(vec![
+            name.to_string(),
+            want.to_string(),
+            format!("{base_ms:.2}"),
+            format!("{:.2}x", base_ms / full_ms),
+            format!("{:.2}x", base_ms / filt_ms),
+            format!("{:.2}x", full_ms / filt_ms),
+        ]);
+        eprintln!("done {name}");
+    }
+    harness::print_table(
+        "Fig 25: TC speedup over Schank-Wagner forward CPU baseline",
+        &[
+            "Dataset", "triangles", "baseline ms", "tc-intersect-full", "tc-intersect-filtered",
+            "filtered/full gain",
+        ],
+        &rows,
+    );
+    println!("\nshape targets (paper): filtered variant consistently beats full (workload");
+    println!("reduction by induced-subgraph reform); gains largest on scale-free graphs,");
+    println!("small or negative on road networks (segmented-reduction overhead).");
+}

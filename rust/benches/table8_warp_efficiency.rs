@@ -1,0 +1,49 @@
+//! Table 8: average warp execution efficiency (fraction of SIMD lanes
+//! active) for BFS / SSSP / PageRank on the nine datasets — the paper's
+//! load-balancing-quality metric. Gunrock's merge-based LB is compared
+//! against the static mapping that frameworks without fine-grained load
+//! balancing effectively use (Medusa/CuSha class).
+
+use gunrock::config::Config;
+use gunrock::graph::datasets;
+use gunrock::harness::{self, suite};
+use gunrock::load_balance::StrategyKind;
+
+fn main() {
+    let mut rows = Vec::new();
+    for name in datasets::TABLE4 {
+        let (g, gw) = suite::load_pair(name);
+        let pct = |x: f64| format!("{:.2}%", x * 100.0);
+
+        let eff = |strategy: Option<StrategyKind>| -> (f64, f64, f64) {
+            let mut cfg = Config::default();
+            cfg.strategy = strategy;
+            let b = suite::run_bfs(name, &g, &cfg).warp_efficiency;
+            let s = suite::run_sssp(name, &gw, &cfg).warp_efficiency;
+            let p = suite::run_pagerank(name, &g, &cfg).warp_efficiency;
+            (b, s, p)
+        };
+        let (gb, gs, gp) = eff(None); // Gunrock auto (LB family / TWC)
+        let (tb, ts, tp) = eff(Some(StrategyKind::ThreadExpand)); // static (CuSha-class)
+        rows.push(vec![
+            name.to_string(),
+            pct(gb),
+            pct(gs),
+            pct(gp),
+            pct(tb),
+            pct(ts),
+            pct(tp),
+        ]);
+        eprintln!("done {name}");
+    }
+    harness::print_table(
+        "Table 8: warp execution efficiency (Gunrock auto vs static mapping)",
+        &[
+            "Dataset", "Gunrock BFS", "Gunrock SSSP", "Gunrock PR",
+            "Static BFS", "Static SSSP", "Static PR",
+        ],
+        &rows,
+    );
+    println!("\nshape targets (paper): Gunrock 80-99% across datasets; static-mapping");
+    println!("frameworks collapse on scale-free datasets (CuSha 42-70%) but hold on meshes.");
+}

@@ -1,0 +1,72 @@
+//! Quadratic BFS (Harish & Narayanan [32] / Medusa-style): every iteration
+//! scans *all* vertices, relaxing those at the current depth — the
+//! no-frontier, no-load-balancing strategy early GPU implementations used,
+//! and the comparator whose gap Table 5's Medusa column reflects.
+
+use crate::graph::{Csr, VertexId};
+use crate::util::par;
+
+/// Depths from src; parallel over vertices per level, O(n) work per level
+/// even when the frontier is tiny.
+pub fn bfs_quadratic(g: &Csr, src: VertexId, workers: usize) -> (Vec<u32>, u64) {
+    let n = g.num_vertices;
+    let mut depth = vec![u32::MAX; n];
+    depth[src as usize] = 0;
+    let mut level = 0u32;
+    let mut edges_scanned = 0u64;
+    loop {
+        let snapshot = depth.clone();
+        let results = par::run_partitioned(n, workers, |_, s, e| {
+            let mut updates: Vec<(usize, u32)> = Vec::new();
+            let mut scanned = 0u64;
+            for v in s..e {
+                if snapshot[v] == level {
+                    scanned += g.degree(v as VertexId) as u64;
+                    for &u in g.neighbors(v as VertexId) {
+                        if snapshot[u as usize] == u32::MAX {
+                            updates.push((u as usize, level + 1));
+                        }
+                    }
+                }
+            }
+            (updates, scanned)
+        });
+        let mut any = false;
+        for (updates, scanned) in results {
+            edges_scanned += scanned;
+            for (v, d) in updates {
+                if depth[v] == u32::MAX {
+                    depth[v] = d;
+                    any = true;
+                }
+            }
+        }
+        if !any {
+            break;
+        }
+        level += 1;
+    }
+    (depth, edges_scanned)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::bfs_serial::bfs_serial;
+    use crate::graph::generators::{rmat, rmat::RmatParams};
+
+    #[test]
+    fn matches_serial() {
+        let g = rmat(&RmatParams { scale: 9, edge_factor: 8, ..Default::default() });
+        let (got, _) = bfs_quadratic(&g, 0, 4);
+        assert_eq!(got, bfs_serial(&g, 0));
+    }
+
+    #[test]
+    fn simple() {
+        let g = crate::graph::builder::from_edges(4, &[(0, 1), (1, 2), (2, 3)]);
+        let (d, edges) = bfs_quadratic(&g, 0, 2);
+        assert_eq!(d, vec![0, 1, 2, 3]);
+        assert_eq!(edges, 3);
+    }
+}

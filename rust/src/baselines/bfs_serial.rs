@@ -1,0 +1,52 @@
+//! Serial queue-based BFS — the BGL-style single-threaded comparator and
+//! correctness oracle.
+
+use std::collections::VecDeque;
+
+use crate::graph::{Csr, VertexId};
+
+/// Depths from src (u32::MAX = unreachable).
+pub fn bfs_serial(g: &Csr, src: VertexId) -> Vec<u32> {
+    let n = g.num_vertices;
+    let mut depth = vec![u32::MAX; n];
+    depth[src as usize] = 0;
+    let mut q = VecDeque::new();
+    q.push_back(src);
+    while let Some(v) = q.pop_front() {
+        let d = depth[v as usize];
+        for &u in g.neighbors(v) {
+            if depth[u as usize] == u32::MAX {
+                depth[u as usize] = d + 1;
+                q.push_back(u);
+            }
+        }
+    }
+    depth
+}
+
+/// Edges the BFS actually relaxed (for MTEPS accounting parity).
+pub fn bfs_edges_touched(g: &Csr, src: VertexId) -> u64 {
+    let depth = bfs_serial(g, src);
+    (0..g.num_vertices)
+        .filter(|&v| depth[v] != u32::MAX)
+        .map(|v| g.degree(v as VertexId) as u64)
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder;
+
+    #[test]
+    fn simple_depths() {
+        let g = builder::from_edges(5, &[(0, 1), (0, 2), (1, 3), (3, 4)]);
+        assert_eq!(bfs_serial(&g, 0), vec![0, 1, 1, 2, 3]);
+    }
+
+    #[test]
+    fn disconnected() {
+        let g = builder::from_edges(3, &[(0, 1)]);
+        assert_eq!(bfs_serial(&g, 0)[2], u32::MAX);
+    }
+}

@@ -1,0 +1,133 @@
+//! Cassovary-style WTF comparator (paper §7.5.2): Twitter's original
+//! CPU implementation computed PPR by Monte-Carlo random walks and ranked
+//! with SALSA serially. This mirrors that strategy — serial random walks
+//! for the circle of trust, then serial SALSA — for the Table 11 rows.
+
+use std::collections::HashMap;
+
+use crate::graph::{Csr, VertexId};
+use crate::util::rng::Pcg32;
+
+pub struct CassovaryResult {
+    pub circle_of_trust: Vec<VertexId>,
+    pub recommendations: Vec<VertexId>,
+    pub ppr_ms: f64,
+    pub cot_ms: f64,
+    pub money_ms: f64,
+}
+
+/// Monte-Carlo PPR: `walks` random walks of geometric length from `user`,
+/// visit counts approximate the stationary PPR distribution.
+pub fn mc_ppr(g: &Csr, user: VertexId, walks: usize, restart: f64, seed: u64) -> HashMap<VertexId, u32> {
+    let mut rng = Pcg32::new(seed);
+    let mut visits: HashMap<VertexId, u32> = HashMap::new();
+    for _ in 0..walks {
+        let mut v = user;
+        loop {
+            if rng.f64() < restart {
+                break;
+            }
+            let deg = g.degree(v);
+            if deg == 0 {
+                break;
+            }
+            let k = rng.below_usize(deg);
+            v = g.neighbors(v)[k];
+            *visits.entry(v).or_insert(0) += 1;
+        }
+    }
+    visits
+}
+
+/// Full serial WTF pipeline.
+pub fn cassovary_wtf(
+    g: &Csr,
+    user: VertexId,
+    k: usize,
+    num_recs: usize,
+    seed: u64,
+) -> CassovaryResult {
+    use crate::util::timer::Timer;
+
+    let t = Timer::start();
+    let visits = mc_ppr(g, user, 10_000, 0.15, seed);
+    let ppr_ms = t.elapsed_ms();
+
+    let t = Timer::start();
+    let mut cot: Vec<(VertexId, u32)> =
+        visits.iter().filter(|&(&v, _)| v != user).map(|(&v, &c)| (v, c)).collect();
+    cot.sort_unstable_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+    cot.truncate(k);
+    let cot: Vec<VertexId> = cot.into_iter().map(|(v, _)| v).collect();
+    let cot_ms = t.elapsed_ms();
+
+    // Serial SALSA over the bipartite CoT -> followed graph.
+    let t = Timer::start();
+    let n = g.num_vertices;
+    let mut hub = vec![0.0f64; n];
+    for &h in &cot {
+        hub[h as usize] = 1.0 / cot.len().max(1) as f64;
+    }
+    let mut auth_indeg = vec![0u32; n];
+    for &h in &cot {
+        for &a in g.neighbors(h) {
+            auth_indeg[a as usize] += 1;
+        }
+    }
+    let mut auth = vec![0.0f64; n];
+    for _ in 0..8 {
+        auth.iter_mut().for_each(|x| *x = 0.0);
+        for &h in &cot {
+            let deg = g.degree(h);
+            if deg == 0 {
+                continue;
+            }
+            let share = hub[h as usize] / deg as f64;
+            for &a in g.neighbors(h) {
+                auth[a as usize] += share;
+            }
+        }
+        for &h in &cot {
+            let mut acc = 0.0;
+            for &a in g.neighbors(h) {
+                if auth_indeg[a as usize] > 0 {
+                    acc += auth[a as usize] / auth_indeg[a as usize] as f64;
+                }
+            }
+            hub[h as usize] = acc;
+        }
+    }
+    let follows: std::collections::HashSet<VertexId> = g.neighbors(user).iter().copied().collect();
+    let mut recs: Vec<VertexId> = (0..n as VertexId)
+        .filter(|&v| v != user && !follows.contains(&v) && auth[v as usize] > 0.0)
+        .collect();
+    recs.sort_unstable_by(|&a, &b| {
+        auth[b as usize].partial_cmp(&auth[a as usize]).unwrap().then(a.cmp(&b))
+    });
+    recs.truncate(num_recs);
+    let money_ms = t.elapsed_ms();
+
+    CassovaryResult { circle_of_trust: cot, recommendations: recs, ppr_ms, cot_ms, money_ms }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder;
+
+    #[test]
+    fn walks_stay_in_reachable_set() {
+        let g = builder::from_edges(5, &[(0, 1), (1, 2), (2, 0), (3, 4)]);
+        let visits = mc_ppr(&g, 0, 1000, 0.2, 7);
+        assert!(!visits.contains_key(&3));
+        assert!(!visits.contains_key(&4));
+        assert!(visits.contains_key(&1));
+    }
+
+    #[test]
+    fn pipeline_recommends_2hop() {
+        let g = builder::from_edges(5, &[(0, 1), (0, 2), (1, 3), (2, 3), (2, 4)]);
+        let r = cassovary_wtf(&g, 0, 3, 2, 42);
+        assert_eq!(r.recommendations.first(), Some(&3));
+    }
+}

@@ -1,0 +1,71 @@
+//! Union-find connected components — the serial oracle (and the
+//! algorithmic shape of the fastest CPU CC codes the paper compares to).
+
+use crate::graph::Csr;
+
+struct Dsu {
+    parent: Vec<u32>,
+}
+
+impl Dsu {
+    fn new(n: usize) -> Self {
+        Dsu { parent: (0..n as u32).collect() }
+    }
+
+    fn find(&mut self, v: u32) -> u32 {
+        let mut v = v;
+        while self.parent[v as usize] != v {
+            // path halving
+            let gp = self.parent[self.parent[v as usize] as usize];
+            self.parent[v as usize] = gp;
+            v = gp;
+        }
+        v
+    }
+
+    fn union(&mut self, a: u32, b: u32) {
+        let (ra, rb) = (self.find(a), self.find(b));
+        if ra != rb {
+            let (lo, hi) = if ra < rb { (ra, rb) } else { (rb, ra) };
+            self.parent[hi as usize] = lo;
+        }
+    }
+}
+
+/// (component labels canonicalized to root ids, number of components).
+pub fn cc_unionfind(g: &Csr) -> (Vec<u32>, usize) {
+    let n = g.num_vertices;
+    let mut dsu = Dsu::new(n);
+    for v in 0..n as u32 {
+        for &u in g.neighbors(v) {
+            dsu.union(v, u);
+        }
+    }
+    let labels: Vec<u32> = (0..n as u32).map(|v| dsu.find(v)).collect();
+    let mut roots = labels.clone();
+    roots.sort_unstable();
+    roots.dedup();
+    (labels, roots.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder;
+
+    #[test]
+    fn components_counted() {
+        let g = builder::undirected_from_edges(7, &[(0, 1), (1, 2), (3, 4), (5, 6)]);
+        let (labels, count) = cc_unionfind(&g);
+        assert_eq!(count, 3);
+        assert_eq!(labels[0], labels[2]);
+        assert_ne!(labels[0], labels[3]);
+    }
+
+    #[test]
+    fn isolated_vertices_are_own_components() {
+        let g = builder::from_edges(4, &[]);
+        let (_, count) = cc_unionfind(&g);
+        assert_eq!(count, 4);
+    }
+}

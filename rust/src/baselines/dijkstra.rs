@@ -1,0 +1,62 @@
+//! Serial Dijkstra with a binary heap — the textbook (BGL-style) SSSP
+//! comparator and the correctness oracle for the delta-stepping primitive.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::graph::{Csr, VertexId};
+use crate::primitives::sssp::INFINITY_DIST;
+
+/// Shortest distances from `src` (INFINITY_DIST where unreachable).
+pub fn dijkstra(g: &Csr, src: VertexId) -> Vec<u64> {
+    let n = g.num_vertices;
+    let mut dist = vec![INFINITY_DIST; n];
+    dist[src as usize] = 0;
+    let mut heap: BinaryHeap<Reverse<(u64, VertexId)>> = BinaryHeap::new();
+    heap.push(Reverse((0, src)));
+    while let Some(Reverse((d, v))) = heap.pop() {
+        if d > dist[v as usize] {
+            continue; // stale entry
+        }
+        for e in g.edge_range(v) {
+            let u = g.col_indices[e];
+            let nd = d + g.weight(e) as u64;
+            if nd < dist[u as usize] {
+                dist[u as usize] = nd;
+                heap.push(Reverse((nd, u)));
+            }
+        }
+    }
+    dist
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{builder, Coo};
+
+    #[test]
+    fn simple_weighted() {
+        let mut coo = Coo::new(4);
+        coo.push_weighted(0, 1, 5);
+        coo.push_weighted(0, 2, 1);
+        coo.push_weighted(2, 1, 1);
+        coo.push_weighted(1, 3, 1);
+        let g = builder::from_coo(&coo, false);
+        let d = dijkstra(&g, 0);
+        assert_eq!(d, vec![0, 2, 1, 3]);
+    }
+
+    #[test]
+    fn unweighted_counts_hops() {
+        let g = builder::from_edges(4, &[(0, 1), (1, 2), (2, 3)]);
+        let d = dijkstra(&g, 0);
+        assert_eq!(d, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn unreachable() {
+        let g = builder::from_edges(3, &[(0, 1)]);
+        assert_eq!(dijkstra(&g, 0)[2], INFINITY_DIST);
+    }
+}

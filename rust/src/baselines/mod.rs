@@ -1,0 +1,19 @@
+//! Comparator implementations (paper §7): each mirrors the *algorithmic
+//! strategy* of a system the paper benchmarks against, per the
+//! substitution table in DESIGN.md — serial textbook code for BGL,
+//! quadratic/edge-parallel traversal for the early GPU works and Medusa,
+//! Bellman-Ford for Ligra's SSSP, union-find for hardwired CC, Brandes
+//! for BC, the Schank-Wagner forward algorithm for TC, and a
+//! Cassovary-style random-walk WTF.
+
+pub mod bc_brandes;
+pub mod bellman_ford;
+pub mod bfs_parallel;
+pub mod bfs_quadratic;
+pub mod bfs_serial;
+pub mod cassovary_wtf;
+pub mod cc_unionfind;
+pub mod dijkstra;
+pub mod gas_full;
+pub mod pagerank_serial;
+pub mod tc_forward;

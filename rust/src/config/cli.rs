@@ -1,0 +1,105 @@
+//! Minimal CLI argument parser (clap is unavailable offline): subcommand +
+//! `--flag value` / `--flag=value` / boolean `--flag` options +
+//! positionals, with generated usage text.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+#[derive(Clone, Debug, Default)]
+pub struct ParsedArgs {
+    pub subcommand: Option<String>,
+    pub positionals: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl ParsedArgs {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_bool(&self, name: &str) -> bool {
+        matches!(self.get(name), Some("true") | Some("1") | Some(""))
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => match v.parse::<T>() {
+                Ok(t) => Ok(Some(t)),
+                Err(e) => bail!("--{name}: {e}"),
+            },
+        }
+    }
+}
+
+/// Flags that take no value (presence = true).
+pub fn parse(args: &[String], boolean_flags: &[&str]) -> Result<ParsedArgs> {
+    let mut out = ParsedArgs::default();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        if let Some(flag) = a.strip_prefix("--") {
+            if let Some(eq) = flag.find('=') {
+                out.flags.insert(flag[..eq].to_string(), flag[eq + 1..].to_string());
+            } else if boolean_flags.contains(&flag) {
+                out.flags.insert(flag.to_string(), "true".to_string());
+            } else {
+                i += 1;
+                if i >= args.len() {
+                    bail!("--{flag} expects a value");
+                }
+                out.flags.insert(flag.to_string(), args[i].clone());
+            }
+        } else if out.subcommand.is_none() && out.positionals.is_empty() && out.flags.is_empty() {
+            out.subcommand = Some(a.clone());
+        } else {
+            out.positionals.push(a.clone());
+        }
+        i += 1;
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let p = parse(&v(&["run", "--dataset", "rgg_n_24", "--idempotence", "bfs"]), &["idempotence"]).unwrap();
+        assert_eq!(p.subcommand.as_deref(), Some("run"));
+        assert_eq!(p.get("dataset"), Some("rgg_n_24"));
+        assert!(p.get_bool("idempotence"));
+        assert_eq!(p.positionals, vec!["bfs"]);
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let p = parse(&v(&["bench", "--table=6"]), &[]).unwrap();
+        assert_eq!(p.get("table"), Some("6"));
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(parse(&v(&["run", "--dataset"]), &[]).is_err());
+    }
+
+    #[test]
+    fn typed_parse() {
+        let p = parse(&v(&["x", "--n", "128"]), &[]).unwrap();
+        assert_eq!(p.get_parse::<usize>("n").unwrap(), Some(128));
+        assert!(parse(&v(&["x", "--n", "abc"]), &[]).unwrap().get_parse::<usize>("n").is_err());
+    }
+}

@@ -1,0 +1,217 @@
+//! Configuration system: a typed `Config` struct loadable from a
+//! TOML-subset file (`key = value` lines under `[section]` headers) and
+//! overridable from CLI flags — serde is unavailable offline, so the
+//! parser lives here too.
+
+pub mod cli;
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::load_balance::StrategyKind;
+
+/// Runtime configuration shared by the CLI, examples, and benches.
+#[derive(Clone, Debug)]
+pub struct Config {
+    /// Worker threads for the virtual-GPU pool (0 = auto).
+    pub threads: usize,
+    /// Traversal strategy; None = auto-select from topology (§5.1.3).
+    pub strategy: Option<StrategyKind>,
+    /// Direction-optimization parameters (paper §5.1.4).
+    pub do_a: f64,
+    pub do_b: f64,
+    /// Enable direction-optimized (push/pull) traversal.
+    pub direction_optimized: bool,
+    /// Enable idempotent advance (skip atomics, allow duplicates; §5.2.1).
+    pub idempotence: bool,
+    /// LB input/output-balance switch threshold (paper: 4096).
+    pub lb_switch_threshold: usize,
+    /// Delta for the SSSP near/far priority queue.
+    pub sssp_delta: u64,
+    /// PageRank damping and convergence.
+    pub pr_damping: f64,
+    pub pr_epsilon: f64,
+    pub pr_max_iters: usize,
+    /// Max iterations safeguard for iterative primitives.
+    pub max_iters: usize,
+    /// RNG seed for workloads.
+    pub seed: u64,
+    /// Directory holding AOT artifacts for the XLA offload path.
+    pub artifacts_dir: String,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            threads: 0,
+            strategy: None,
+            do_a: 0.001,
+            do_b: 0.2,
+            direction_optimized: false,
+            idempotence: false,
+            lb_switch_threshold: 4096,
+            sssp_delta: 32,
+            pr_damping: 0.85,
+            pr_epsilon: 1e-6,
+            pr_max_iters: 50,
+            max_iters: 10_000,
+            seed: 42,
+            artifacts_dir: "artifacts".to_string(),
+        }
+    }
+}
+
+impl Config {
+    pub fn effective_threads(&self) -> usize {
+        if self.threads == 0 {
+            crate::util::par::num_threads()
+        } else {
+            self.threads
+        }
+    }
+
+    /// Apply a parsed `section.key -> value` map.
+    pub fn apply(&mut self, kv: &BTreeMap<String, String>) -> Result<()> {
+        for (key, value) in kv {
+            let v = value.as_str();
+            match key.as_str() {
+                "runtime.threads" | "threads" => self.threads = v.parse()?,
+                "runtime.artifacts_dir" | "artifacts_dir" => self.artifacts_dir = v.to_string(),
+                "runtime.seed" | "seed" => self.seed = v.parse()?,
+                "traversal.strategy" | "strategy" => {
+                    self.strategy = Some(v.parse().map_err(anyhow::Error::msg)?)
+                }
+                "traversal.do_a" | "do_a" => self.do_a = v.parse()?,
+                "traversal.do_b" | "do_b" => self.do_b = v.parse()?,
+                "traversal.direction_optimized" | "direction_optimized" => {
+                    self.direction_optimized = parse_bool(v)?
+                }
+                "traversal.idempotence" | "idempotence" => self.idempotence = parse_bool(v)?,
+                "traversal.lb_switch_threshold" | "lb_switch_threshold" => {
+                    self.lb_switch_threshold = v.parse()?
+                }
+                "sssp.delta" | "sssp_delta" => self.sssp_delta = v.parse()?,
+                "pagerank.damping" | "pr_damping" => self.pr_damping = v.parse()?,
+                "pagerank.epsilon" | "pr_epsilon" => self.pr_epsilon = v.parse()?,
+                "pagerank.max_iters" | "pr_max_iters" => self.pr_max_iters = v.parse()?,
+                "runtime.max_iters" | "max_iters" => self.max_iters = v.parse()?,
+                other => bail!("unknown config key: {other}"),
+            }
+        }
+        Ok(())
+    }
+
+    /// Load from a TOML-subset file.
+    pub fn from_file(path: &Path) -> Result<Config> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read config {}", path.display()))?;
+        let kv = parse_toml_subset(&text)?;
+        let mut cfg = Config::default();
+        cfg.apply(&kv)?;
+        Ok(cfg)
+    }
+}
+
+fn parse_bool(v: &str) -> Result<bool> {
+    match v {
+        "true" | "1" | "yes" | "on" => Ok(true),
+        "false" | "0" | "no" | "off" => Ok(false),
+        other => bail!("expected bool, got {other}"),
+    }
+}
+
+/// Parse `[section]` / `key = value` lines; `#` comments; quoted or bare
+/// values. Returns dotted keys.
+pub fn parse_toml_subset(text: &str) -> Result<BTreeMap<String, String>> {
+    let mut out = BTreeMap::new();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = match raw.find('#') {
+            Some(i) => &raw[..i],
+            None => raw,
+        }
+        .trim();
+        if line.is_empty() {
+            continue;
+        }
+        if line.starts_with('[') {
+            if !line.ends_with(']') {
+                bail!("line {}: malformed section header {line}", lineno + 1);
+            }
+            section = line[1..line.len() - 1].trim().to_string();
+            continue;
+        }
+        let eq = line
+            .find('=')
+            .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+        let key = line[..eq].trim();
+        let mut value = line[eq + 1..].trim();
+        if (value.starts_with('"') && value.ends_with('"') && value.len() >= 2)
+            || (value.starts_with('\'') && value.ends_with('\'') && value.len() >= 2)
+        {
+            value = &value[1..value.len() - 1];
+        }
+        let full_key =
+            if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
+        out.insert(full_key, value.to_string());
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_sections_and_comments() {
+        let kv = parse_toml_subset(
+            "# top\nthreads = 8\n[traversal]\nstrategy = \"twc\" # inline\ndo_a = 0.01\n",
+        )
+        .unwrap();
+        assert_eq!(kv["threads"], "8");
+        assert_eq!(kv["traversal.strategy"], "twc");
+        assert_eq!(kv["traversal.do_a"], "0.01");
+    }
+
+    #[test]
+    fn apply_sets_fields() {
+        let mut cfg = Config::default();
+        let kv = parse_toml_subset(
+            "[traversal]\nidempotence = true\ndirection_optimized = on\n[sssp]\ndelta = 64\n",
+        )
+        .unwrap();
+        cfg.apply(&kv).unwrap();
+        assert!(cfg.idempotence);
+        assert!(cfg.direction_optimized);
+        assert_eq!(cfg.sssp_delta, 64);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let mut cfg = Config::default();
+        let mut kv = BTreeMap::new();
+        kv.insert("nope".to_string(), "1".to_string());
+        assert!(cfg.apply(&kv).is_err());
+    }
+
+    #[test]
+    fn file_round_trip() {
+        let mut p = std::env::temp_dir();
+        p.push(format!("gunrock_cfg_{}.toml", std::process::id()));
+        std::fs::write(&p, "[pagerank]\ndamping = 0.9\nmax_iters = 7\n").unwrap();
+        let cfg = Config::from_file(&p).unwrap();
+        assert_eq!(cfg.pr_damping, 0.9);
+        assert_eq!(cfg.pr_max_iters, 7);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn bad_bool_rejected() {
+        let mut cfg = Config::default();
+        let mut kv = BTreeMap::new();
+        kv.insert("idempotence".to_string(), "maybe".to_string());
+        assert!(cfg.apply(&kv).is_err());
+    }
+}

@@ -1,0 +1,246 @@
+//! The enactor (paper §3.1 "Gunrock's software architecture"): the entry
+//! point of a graph primitive, running its bulk-synchronous operator
+//! sequence to convergence while collecting per-iteration statistics —
+//! frontier sizes, per-iteration runtimes, and the virtual-GPU counters
+//! that feed Tables 7-8 and Figures 18-23.
+
+pub mod problem;
+
+use crate::config::Config;
+use crate::gpu_sim::WarpCounters;
+use crate::graph::Csr;
+use crate::load_balance::{self, StrategyKind};
+use crate::operators::OpContext;
+use crate::util::stats;
+use crate::util::timer::Timer;
+
+/// Per-iteration record (Figs 22-23 plot advance MTEPS against these).
+#[derive(Clone, Copy, Debug)]
+pub struct IterationStats {
+    pub iteration: usize,
+    pub input_frontier: usize,
+    pub output_frontier: usize,
+    pub elapsed_ms: f64,
+    pub edges_this_iter: u64,
+    /// Direction used this iteration (true = pull).
+    pub pull: bool,
+}
+
+/// Whole-run result returned by every primitive.
+#[derive(Clone, Debug, Default)]
+pub struct RunResult {
+    pub runtime_ms: f64,
+    pub edges_visited: u64,
+    pub iterations: Vec<IterationStats>,
+    pub warp_efficiency: f64,
+    pub kernel_launches: u64,
+    pub atomics: u64,
+}
+
+impl RunResult {
+    pub fn mteps(&self) -> f64 {
+        stats::mteps(self.edges_visited, self.runtime_ms)
+    }
+
+    pub fn num_iterations(&self) -> usize {
+        self.iterations.len()
+    }
+}
+
+/// The enactor owns the worker pool width, strategy selection, counters,
+/// and the iteration bookkeeping primitives use.
+pub struct Enactor {
+    pub config: Config,
+    pub counters: WarpCounters,
+    pub workers: usize,
+    timer: Timer,
+    iterations: Vec<IterationStats>,
+    edges_at_iter_start: u64,
+}
+
+impl Enactor {
+    pub fn new(config: Config) -> Self {
+        let workers = config.effective_threads();
+        Enactor {
+            config,
+            counters: WarpCounters::new(),
+            workers,
+            timer: Timer::start(),
+            iterations: Vec::new(),
+            edges_at_iter_start: 0,
+        }
+    }
+
+    pub fn ctx(&self) -> OpContext<'_> {
+        OpContext::new(self.workers, &self.counters)
+    }
+
+    /// Strategy for this iteration: explicit config override, else the
+    /// paper's topology + frontier-size heuristic (§5.1.3).
+    pub fn strategy_for(&self, g: &Csr, frontier_len: usize) -> StrategyKind {
+        if let Some(s) = self.config.strategy {
+            s
+        } else {
+            load_balance::auto_select(
+                g.average_degree(),
+                frontier_len,
+                self.config.lb_switch_threshold,
+            )
+        }
+    }
+
+    /// Restart timers/counters for a fresh run.
+    pub fn begin_run(&mut self) {
+        self.counters.reset();
+        self.iterations.clear();
+        self.edges_at_iter_start = 0;
+        self.timer = Timer::start();
+    }
+
+    /// Record one finished BSP iteration.
+    pub fn record_iteration(
+        &mut self,
+        input_frontier: usize,
+        output_frontier: usize,
+        iter_ms: f64,
+        pull: bool,
+    ) {
+        let edges_now = self.counters.edges();
+        self.iterations.push(IterationStats {
+            iteration: self.iterations.len(),
+            input_frontier,
+            output_frontier,
+            elapsed_ms: iter_ms,
+            edges_this_iter: edges_now - self.edges_at_iter_start,
+            pull,
+        });
+        self.edges_at_iter_start = edges_now;
+    }
+
+    /// Convergence guard: true while under the iteration cap.
+    pub fn within_iteration_cap(&self) -> bool {
+        self.iterations.len() < self.config.max_iters
+    }
+
+    /// Finish the run, producing the result record.
+    pub fn finish_run(&mut self) -> RunResult {
+        RunResult {
+            runtime_ms: self.timer.elapsed_ms(),
+            edges_visited: self.counters.edges(),
+            iterations: std::mem::take(&mut self.iterations),
+            warp_efficiency: self.counters.warp_efficiency(),
+            kernel_launches: self.counters.launches(),
+            atomics: self.counters.atomics(),
+        }
+    }
+}
+
+/// Direction-optimization controller (paper §5.1.4, Algorithm 2): decides
+/// push vs pull per iteration from frontier-size estimates.
+///
+/// The paper's GPU adaptation avoids the two extra prefix-sums by
+/// estimating   m_f = n_f * m / n   (edges from the frontier) and
+///              m_u = n_u * n / (n - n_u)   (edges from unvisited),
+/// switching push->pull when m_f > m_u * do_a and back when
+/// m_f < m_u * do_b.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Direction {
+    Push,
+    Pull,
+}
+
+#[derive(Clone, Debug)]
+pub struct DirectionHeuristic {
+    pub do_a: f64,
+    pub do_b: f64,
+    pub enabled: bool,
+    mode: Direction,
+}
+
+impl DirectionHeuristic {
+    pub fn new(enabled: bool, do_a: f64, do_b: f64) -> Self {
+        DirectionHeuristic { do_a, do_b, enabled, mode: Direction::Push }
+    }
+
+    pub fn mode(&self) -> Direction {
+        self.mode
+    }
+
+    /// Decide the direction for the next iteration.
+    /// n = vertices, m = edges, n_f = frontier size, n_u = unvisited count.
+    pub fn decide(&mut self, n: usize, m: usize, n_f: usize, n_u: usize) -> Direction {
+        if !self.enabled || n == 0 || n_u == 0 || n_u >= n {
+            self.mode = Direction::Push;
+            return self.mode;
+        }
+        let m_f = n_f as f64 * m as f64 / n as f64;
+        let m_u = n_u as f64 * n as f64 / (n - n_u) as f64;
+        match self.mode {
+            Direction::Push => {
+                if m_f > m_u * self.do_a {
+                    self.mode = Direction::Pull;
+                }
+            }
+            Direction::Pull => {
+                if m_f < m_u * self.do_b {
+                    self.mode = Direction::Push;
+                }
+            }
+        }
+        self.mode
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_result_mteps() {
+        let r = RunResult { runtime_ms: 10.0, edges_visited: 1_000_000, ..Default::default() };
+        assert!((r.mteps() - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn enactor_records_iterations() {
+        let mut e = Enactor::new(Config::default());
+        e.begin_run();
+        e.counters.add_edges(100);
+        e.record_iteration(1, 10, 0.5, false);
+        e.counters.add_edges(50);
+        e.record_iteration(10, 0, 0.3, true);
+        let r = e.finish_run();
+        assert_eq!(r.iterations.len(), 2);
+        assert_eq!(r.iterations[0].edges_this_iter, 100);
+        assert_eq!(r.iterations[1].edges_this_iter, 50);
+        assert!(r.iterations[1].pull);
+        assert_eq!(r.edges_visited, 150);
+    }
+
+    #[test]
+    fn direction_switches_push_to_pull_and_back() {
+        let mut d = DirectionHeuristic::new(true, 0.001, 0.2);
+        assert_eq!(d.mode(), Direction::Push);
+        // large frontier, many unvisited -> pull
+        let n = 1000;
+        let m = 10_000;
+        assert_eq!(d.decide(n, m, 400, 500), Direction::Pull);
+        // tiny frontier, few unvisited -> back to push
+        assert_eq!(d.decide(n, m, 1, 50), Direction::Push);
+    }
+
+    #[test]
+    fn disabled_always_push() {
+        let mut d = DirectionHeuristic::new(false, 1e9, 0.0);
+        assert_eq!(d.decide(100, 10_000, 99, 1), Direction::Push);
+    }
+
+    #[test]
+    fn strategy_override_wins() {
+        let mut cfg = Config::default();
+        cfg.strategy = Some(StrategyKind::Twc);
+        let e = Enactor::new(cfg);
+        let g = crate::graph::builder::from_edges(3, &[(0, 1), (1, 2)]);
+        assert_eq!(e.strategy_for(&g, 100_000), StrategyKind::Twc);
+    }
+}

@@ -1,0 +1,114 @@
+//! The frontier — Gunrock's core abstraction (paper §3): the subset of
+//! vertices or edges actively participating in the computation. All
+//! operators consume one or more input frontiers and produce output
+//! frontiers; primitives run until the frontier empties (or another
+//! convergence criterion fires).
+
+pub mod priority_queue;
+
+use crate::graph::VertexId;
+use crate::util::bitset::AtomicBitset;
+
+/// Whether the ids in a frontier name vertices or edges. Gunrock is the
+/// only high-level GPU framework supporting both (Table 1: "v-c, e-c").
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FrontierKind {
+    Vertex,
+    Edge,
+}
+
+/// A frontier of vertex or edge ids. Double-buffering (input/output
+/// queues, paper §5.3) is handled by the enactor holding two of these and
+/// swapping.
+#[derive(Clone, Debug)]
+pub struct Frontier {
+    pub kind: FrontierKind,
+    pub ids: Vec<VertexId>,
+}
+
+impl Frontier {
+    pub fn vertices(ids: Vec<VertexId>) -> Self {
+        Frontier { kind: FrontierKind::Vertex, ids }
+    }
+
+    pub fn edges(ids: Vec<VertexId>) -> Self {
+        Frontier { kind: FrontierKind::Edge, ids }
+    }
+
+    pub fn single(v: VertexId) -> Self {
+        Frontier::vertices(vec![v])
+    }
+
+    pub fn empty(kind: FrontierKind) -> Self {
+        Frontier { kind, ids: Vec::new() }
+    }
+
+    /// All vertices 0..n (PageRank-style full frontier).
+    pub fn all_vertices(n: usize) -> Self {
+        Frontier::vertices((0..n as VertexId).collect())
+    }
+
+    /// All edge ids 0..m (CC hooking starts from the full edge frontier).
+    pub fn all_edges(m: usize) -> Self {
+        Frontier::edges((0..m as VertexId).collect())
+    }
+
+    pub fn len(&self) -> usize {
+        self.ids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ids.is_empty()
+    }
+
+    pub fn clear(&mut self) {
+        self.ids.clear();
+    }
+}
+
+/// Pull-phase bookkeeping: the *unvisited* frontier plus visited bitmap
+/// (paper §5.1.4 keeps two active frontiers — the capability that
+/// "differentiates Gunrock from other GPU graph processing models").
+pub struct DirectionState {
+    pub visited: AtomicBitset,
+    /// Cached unvisited list, regenerated when switching push -> pull.
+    pub unvisited: Vec<VertexId>,
+}
+
+impl DirectionState {
+    pub fn new(n: usize) -> Self {
+        DirectionState { visited: AtomicBitset::new(n), unvisited: Vec::new() }
+    }
+
+    pub fn rebuild_unvisited(&mut self) {
+        self.unvisited = self.visited.unset_indices();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors() {
+        let f = Frontier::single(3);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f.kind, FrontierKind::Vertex);
+        let a = Frontier::all_vertices(5);
+        assert_eq!(a.ids, vec![0, 1, 2, 3, 4]);
+        let e = Frontier::all_edges(3);
+        assert_eq!(e.kind, FrontierKind::Edge);
+        assert_eq!(e.len(), 3);
+    }
+
+    #[test]
+    fn direction_state_unvisited() {
+        let mut ds = DirectionState::new(10);
+        ds.visited.set(0);
+        ds.visited.set(5);
+        ds.rebuild_unvisited();
+        assert_eq!(ds.unvisited.len(), 8);
+        assert!(!ds.unvisited.contains(&0));
+        assert!(!ds.unvisited.contains(&5));
+    }
+}

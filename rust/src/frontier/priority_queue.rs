@@ -1,0 +1,118 @@
+//! Two-level (near/far) priority queue — Gunrock's generalization of
+//! Davidson et al.'s delta-stepping workload reorganization (paper §5.1.5).
+//!
+//! Implemented, as the paper describes, as a modified filter: one pass
+//! splits the input frontier into a "near" slice (processed next) and a
+//! "far" pile (deferred). When the near slice exhausts, the priority
+//! threshold advances and the far pile is re-split.
+
+use crate::graph::VertexId;
+
+pub struct NearFarQueue {
+    /// Deferred items (the "far" pile).
+    far: Vec<VertexId>,
+    /// Current priority threshold; items with priority < threshold are near.
+    pub threshold: u64,
+    /// Threshold increment per level (delta in delta-stepping).
+    pub delta: u64,
+}
+
+impl NearFarQueue {
+    pub fn new(delta: u64) -> Self {
+        NearFarQueue { far: Vec::new(), threshold: delta.max(1), delta: delta.max(1) }
+    }
+
+    /// Split `items` by `priority(v) < threshold` into (near, retained-far).
+    /// Far items accumulate internally.
+    pub fn split(
+        &mut self,
+        items: impl IntoIterator<Item = VertexId>,
+        priority: impl Fn(VertexId) -> u64,
+    ) -> Vec<VertexId> {
+        let mut near = Vec::new();
+        for v in items {
+            if priority(v) < self.threshold {
+                near.push(v);
+            } else {
+                self.far.push(v);
+            }
+        }
+        near
+    }
+
+    /// Advance to the next priority level: bump threshold, drain and
+    /// re-split the far pile. `priority` may have changed since items were
+    /// deferred (distances relax), so stale entries can be filtered by the
+    /// caller's validity check in `still_valid`.
+    pub fn next_level(
+        &mut self,
+        priority: impl Fn(VertexId) -> u64,
+        still_valid: impl Fn(VertexId) -> bool,
+    ) -> Vec<VertexId> {
+        let mut near = Vec::new();
+        while near.is_empty() && !self.far.is_empty() {
+            self.threshold += self.delta;
+            let pending = std::mem::take(&mut self.far);
+            for v in pending {
+                if !still_valid(v) {
+                    continue;
+                }
+                if priority(v) < self.threshold {
+                    near.push(v);
+                } else {
+                    self.far.push(v);
+                }
+            }
+        }
+        near
+    }
+
+    pub fn far_len(&self) -> usize {
+        self.far.len()
+    }
+
+    pub fn is_exhausted(&self) -> bool {
+        self.far.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_respects_threshold() {
+        let mut q = NearFarQueue::new(10);
+        let near = q.split(vec![0, 1, 2, 3], |v| (v as u64) * 6);
+        // priorities 0, 6 < 10 near; 12, 18 far
+        assert_eq!(near, vec![0, 1]);
+        assert_eq!(q.far_len(), 2);
+    }
+
+    #[test]
+    fn next_level_drains_far() {
+        let mut q = NearFarQueue::new(10);
+        q.split(vec![0, 1, 2, 3], |v| (v as u64) * 6);
+        let near = q.next_level(|v| (v as u64) * 6, |_| true);
+        // threshold now 20: 12, 18 both near
+        assert_eq!(near, vec![2, 3]);
+        assert!(q.is_exhausted());
+    }
+
+    #[test]
+    fn next_level_skips_stale() {
+        let mut q = NearFarQueue::new(5);
+        q.split(vec![7, 8], |_| 100);
+        let near = q.next_level(|_| 100, |v| v == 8);
+        assert_eq!(near, vec![8]);
+    }
+
+    #[test]
+    fn skips_multiple_empty_levels() {
+        let mut q = NearFarQueue::new(1);
+        q.split(vec![5], |_| 1000);
+        let near = q.next_level(|_| 1000, |_| true);
+        assert_eq!(near, vec![5]);
+        assert!(q.threshold > 1000);
+    }
+}

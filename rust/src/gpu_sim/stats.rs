@@ -1,0 +1,167 @@
+//! Per-run virtual-warp counters.
+//!
+//! Strategies in `load_balance` report every virtual warp they retire:
+//! `record_warp(active_lanes)` with `active_lanes <= WARP_WIDTH`. The
+//! resulting warp execution efficiency (active / (warps * width)) is the
+//! paper's Table 8 metric. Additional counters track edges, atomics, and
+//! kernel launches for the §5 throughput analyses.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::WARP_WIDTH;
+
+#[derive(Default)]
+pub struct WarpCounters {
+    lanes_active: AtomicU64,
+    warps_retired: AtomicU64,
+    edges_processed: AtomicU64,
+    atomics_issued: AtomicU64,
+    kernel_launches: AtomicU64,
+    filter_culled: AtomicU64,
+}
+
+impl WarpCounters {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record a retired virtual warp with `active` active lanes.
+    #[inline]
+    pub fn record_warp(&self, active: usize) {
+        debug_assert!(active <= WARP_WIDTH);
+        self.lanes_active.fetch_add(active as u64, Ordering::Relaxed);
+        self.warps_retired.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record `n` full warps plus the ragged tail over `items` lanes of
+    /// work — convenience for strategies that process contiguous runs.
+    #[inline]
+    pub fn record_run(&self, items: usize) {
+        let full = items / WARP_WIDTH;
+        let tail = items % WARP_WIDTH;
+        if full > 0 {
+            self.lanes_active.fetch_add((full * WARP_WIDTH) as u64, Ordering::Relaxed);
+            self.warps_retired.fetch_add(full as u64, Ordering::Relaxed);
+        }
+        if tail > 0 {
+            self.record_warp(tail);
+        }
+    }
+
+    /// Record a SIMD-lockstep group directly: `warps` warp-issues carrying
+    /// `active` active lanes in total. Used by strategies that model a
+    /// 32-item group running in lockstep for max(deg) steps — e.g.
+    /// ThreadExpand, where each lane serially walks its own neighbor list
+    /// and short lists idle while the longest in the warp finishes.
+    #[inline]
+    pub fn record_simd(&self, active: u64, warps: u64) {
+        debug_assert!(active <= warps * WARP_WIDTH as u64);
+        self.lanes_active.fetch_add(active, Ordering::Relaxed);
+        self.warps_retired.fetch_add(warps, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add_edges(&self, n: u64) {
+        self.edges_processed.fetch_add(n, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add_atomics(&self, n: u64) {
+        self.atomics_issued.fetch_add(n, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add_kernel_launch(&self) {
+        self.kernel_launches.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add_culled(&self, n: u64) {
+        self.filter_culled.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn edges(&self) -> u64 {
+        self.edges_processed.load(Ordering::Relaxed)
+    }
+
+    pub fn atomics(&self) -> u64 {
+        self.atomics_issued.load(Ordering::Relaxed)
+    }
+
+    pub fn launches(&self) -> u64 {
+        self.kernel_launches.load(Ordering::Relaxed)
+    }
+
+    pub fn culled(&self) -> u64 {
+        self.filter_culled.load(Ordering::Relaxed)
+    }
+
+    pub fn warps(&self) -> u64 {
+        self.warps_retired.load(Ordering::Relaxed)
+    }
+
+    /// Paper Table 8: "fraction of threads active during computation".
+    pub fn warp_efficiency(&self) -> f64 {
+        let warps = self.warps_retired.load(Ordering::Relaxed);
+        if warps == 0 {
+            return 1.0;
+        }
+        let active = self.lanes_active.load(Ordering::Relaxed);
+        active as f64 / (warps * WARP_WIDTH as u64) as f64
+    }
+
+    pub fn reset(&self) {
+        self.lanes_active.store(0, Ordering::Relaxed);
+        self.warps_retired.store(0, Ordering::Relaxed);
+        self.edges_processed.store(0, Ordering::Relaxed);
+        self.atomics_issued.store(0, Ordering::Relaxed);
+        self.kernel_launches.store(0, Ordering::Relaxed);
+        self.filter_culled.store(0, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn efficiency_full_warps() {
+        let c = WarpCounters::new();
+        c.record_warp(32);
+        c.record_warp(32);
+        assert_eq!(c.warp_efficiency(), 1.0);
+    }
+
+    #[test]
+    fn efficiency_half() {
+        let c = WarpCounters::new();
+        c.record_warp(16);
+        assert_eq!(c.warp_efficiency(), 0.5);
+    }
+
+    #[test]
+    fn record_run_splits_tail() {
+        let c = WarpCounters::new();
+        c.record_run(70); // 2 full warps + 6-lane tail
+        assert_eq!(c.warps(), 3);
+        let eff = c.warp_efficiency();
+        assert!((eff - 70.0 / 96.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reset_zeroes() {
+        let c = WarpCounters::new();
+        c.record_warp(10);
+        c.add_edges(5);
+        c.add_atomics(2);
+        c.reset();
+        assert_eq!(c.edges(), 0);
+        assert_eq!(c.warps(), 0);
+        assert_eq!(c.warp_efficiency(), 1.0);
+    }
+
+    #[test]
+    fn empty_counters_are_perfect() {
+        assert_eq!(WarpCounters::new().warp_efficiency(), 1.0);
+    }
+}

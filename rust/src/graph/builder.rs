@@ -1,0 +1,193 @@
+//! COO -> CSR conversion (counting sort over sources) with optional CSC
+//! construction. Parallel over vertices for the scatter phase.
+
+use super::{Coo, Csr, SizeT, VertexId};
+use crate::util::par;
+
+/// Build a CSR (and optionally CSC) graph from a COO edge list. Neighbor
+/// lists come out sorted by destination id, which segmented intersection
+/// relies on (paper §4.3 assumes sorted adjacency lists).
+pub fn from_coo(coo: &Coo, build_csc: bool) -> Csr {
+    let n = coo.num_vertices;
+    let m = coo.num_edges();
+    let weighted = coo.is_weighted();
+
+    // Count out-degrees.
+    let mut row_offsets = vec![0 as SizeT; n + 1];
+    for &s in &coo.src {
+        row_offsets[s as usize + 1] += 1;
+    }
+    for v in 0..n {
+        row_offsets[v + 1] += row_offsets[v];
+    }
+
+    // Scatter edges.
+    let mut cursor: Vec<SizeT> = row_offsets[..n].to_vec();
+    let mut col_indices = vec![0 as VertexId; m];
+    let mut edge_weights = if weighted { vec![0; m] } else { Vec::new() };
+    for i in 0..m {
+        let s = coo.src[i] as usize;
+        let pos = cursor[s] as usize;
+        cursor[s] += 1;
+        col_indices[pos] = coo.dst[i];
+        if weighted {
+            edge_weights[pos] = coo.weights[i];
+        }
+    }
+
+    // Sort each neighbor list by destination (weights follow).
+    let nt = par::num_threads();
+    if weighted {
+        // Sort index permutation per row to keep weights aligned.
+        let mut perm: Vec<(Vec<VertexId>, Vec<u32>)> = Vec::new();
+        let _ = &mut perm; // (serial fallback below keeps code simple)
+        for v in 0..n {
+            let s = row_offsets[v] as usize;
+            let e = row_offsets[v + 1] as usize;
+            let mut pairs: Vec<(VertexId, u32)> = (s..e)
+                .map(|i| (col_indices[i], edge_weights[i]))
+                .collect();
+            pairs.sort_unstable_by_key(|p| p.0);
+            for (j, (c, w)) in pairs.into_iter().enumerate() {
+                col_indices[s + j] = c;
+                edge_weights[s + j] = w;
+            }
+        }
+    } else {
+        let ro = &row_offsets;
+        // Parallel per-vertex-range sort via disjoint slices.
+        let chunks: Vec<(usize, usize)> =
+            par::run_partitioned(n, nt, |_, vs, ve| (vs, ve));
+        let col_ptr = std::sync::atomic::AtomicPtr::new(col_indices.as_mut_ptr());
+        std::thread::scope(|scope| {
+            for &(vs, ve) in &chunks {
+                let col_ptr = &col_ptr;
+                scope.spawn(move || {
+                    let base = col_ptr.load(std::sync::atomic::Ordering::Relaxed);
+                    for v in vs..ve {
+                        let s = ro[v] as usize;
+                        let e = ro[v + 1] as usize;
+                        // SAFETY: vertex ranges [s, e) are disjoint across
+                        // vertices, and chunks partition the vertex set.
+                        let slice = unsafe { std::slice::from_raw_parts_mut(base.add(s), e - s) };
+                        slice.sort_unstable();
+                    }
+                });
+            }
+        });
+    }
+
+    let mut csr = Csr {
+        num_vertices: n,
+        row_offsets,
+        col_indices,
+        edge_weights,
+        csc_offsets: Vec::new(),
+        csc_indices: Vec::new(),
+    };
+
+    if build_csc {
+        attach_csc(&mut csr, coo);
+    }
+    csr
+}
+
+/// Build the CSC (incoming) view from the same COO.
+pub fn attach_csc(csr: &mut Csr, coo: &Coo) {
+    let n = coo.num_vertices;
+    let m = coo.num_edges();
+    let mut csc_offsets = vec![0 as SizeT; n + 1];
+    for &d in &coo.dst {
+        csc_offsets[d as usize + 1] += 1;
+    }
+    for v in 0..n {
+        csc_offsets[v + 1] += csc_offsets[v];
+    }
+    let mut cursor: Vec<SizeT> = csc_offsets[..n].to_vec();
+    let mut csc_indices = vec![0 as VertexId; m];
+    for i in 0..m {
+        let d = coo.dst[i] as usize;
+        let pos = cursor[d] as usize;
+        cursor[d] += 1;
+        csc_indices[pos] = coo.src[i];
+    }
+    for v in 0..n {
+        let s = csc_offsets[v] as usize;
+        let e = csc_offsets[v + 1] as usize;
+        csc_indices[s..e].sort_unstable();
+    }
+    csr.csc_offsets = csc_offsets;
+    csr.csc_indices = csc_indices;
+}
+
+/// Build CSR directly from an (n, edges) pair — convenience for tests.
+pub fn from_edges(n: usize, edges: &[(VertexId, VertexId)]) -> Csr {
+    let mut coo = Coo::with_capacity(n, edges.len(), false);
+    for &(s, d) in edges {
+        coo.push(s, d);
+    }
+    from_coo(&coo, true)
+}
+
+/// Build an undirected (symmetrized, deduped) CSR from an edge list.
+pub fn undirected_from_edges(n: usize, edges: &[(VertexId, VertexId)]) -> Csr {
+    let mut coo = Coo::with_capacity(n, edges.len() * 2, false);
+    for &(s, d) in edges {
+        coo.push(s, d);
+    }
+    coo.to_undirected();
+    from_coo(&coo, true)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn neighbor_lists_sorted() {
+        let g = from_edges(4, &[(0, 3), (0, 1), (0, 2), (2, 1), (2, 0)]);
+        assert_eq!(g.neighbors(0), &[1, 2, 3]);
+        assert_eq!(g.neighbors(2), &[0, 1]);
+        assert_eq!(g.degree(1), 0);
+    }
+
+    #[test]
+    fn weighted_build_keeps_alignment() {
+        let mut coo = Coo::new(3);
+        coo.push_weighted(0, 2, 20);
+        coo.push_weighted(0, 1, 10);
+        coo.push_weighted(1, 2, 30);
+        let g = from_coo(&coo, false);
+        assert_eq!(g.neighbors(0), &[1, 2]);
+        assert_eq!(&g.edge_weights[g.edge_range(0)], &[10, 20]);
+        assert_eq!(&g.edge_weights[g.edge_range(1)], &[30]);
+    }
+
+    #[test]
+    fn csc_in_degrees_match() {
+        let g = from_edges(5, &[(0, 1), (2, 1), (3, 1), (1, 4)]);
+        assert_eq!(g.in_degree(1), 3);
+        assert_eq!(g.in_neighbors(1), &[0, 2, 3]);
+        assert_eq!(g.in_degree(4), 1);
+        assert_eq!(g.in_degree(0), 0);
+    }
+
+    #[test]
+    fn undirected_builder_symmetric() {
+        let g = undirected_from_edges(4, &[(0, 1), (1, 2), (2, 3)]);
+        for v in 0..4u32 {
+            for &u in g.neighbors(v) {
+                assert!(g.neighbors(u).contains(&v), "missing reverse {u}->{v}");
+            }
+        }
+    }
+
+    #[test]
+    fn offsets_are_monotone_and_total() {
+        let g = from_edges(6, &[(5, 0), (4, 1), (3, 2), (0, 5), (0, 4)]);
+        assert_eq!(*g.row_offsets.last().unwrap() as usize, g.num_edges());
+        for w in g.row_offsets.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+    }
+}

@@ -1,0 +1,132 @@
+//! Coordinate-list (COO) edge representation — the input format of the
+//! generators and IO, and the edge-centric view some operators use
+//! (paper §5.4 allows COO for edge-centric operations).
+
+use super::{VertexId, Weight};
+
+#[derive(Clone, Debug, Default)]
+pub struct Coo {
+    pub num_vertices: usize,
+    pub src: Vec<VertexId>,
+    pub dst: Vec<VertexId>,
+    /// Per-edge weights; empty means unweighted.
+    pub weights: Vec<Weight>,
+}
+
+impl Coo {
+    pub fn new(num_vertices: usize) -> Self {
+        Coo { num_vertices, src: Vec::new(), dst: Vec::new(), weights: Vec::new() }
+    }
+
+    pub fn with_capacity(num_vertices: usize, edges: usize, weighted: bool) -> Self {
+        Coo {
+            num_vertices,
+            src: Vec::with_capacity(edges),
+            dst: Vec::with_capacity(edges),
+            weights: if weighted { Vec::with_capacity(edges) } else { Vec::new() },
+        }
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.src.len()
+    }
+
+    pub fn is_weighted(&self) -> bool {
+        !self.weights.is_empty()
+    }
+
+    pub fn push(&mut self, s: VertexId, d: VertexId) {
+        debug_assert!((s as usize) < self.num_vertices && (d as usize) < self.num_vertices);
+        self.src.push(s);
+        self.dst.push(d);
+    }
+
+    pub fn push_weighted(&mut self, s: VertexId, d: VertexId, w: Weight) {
+        self.push(s, d);
+        self.weights.push(w);
+    }
+
+    /// Remove self-loops and duplicate edges (paper Table 4: "Self-loops
+    /// and duplicated edges are removed"). Keeps the first weight seen.
+    pub fn dedup(&mut self) {
+        let weighted = self.is_weighted();
+        let mut order: Vec<usize> = (0..self.num_edges()).collect();
+        order.sort_unstable_by_key(|&i| (self.src[i], self.dst[i]));
+        let mut src = Vec::with_capacity(self.src.len());
+        let mut dst = Vec::with_capacity(self.dst.len());
+        let mut weights = Vec::with_capacity(self.weights.len());
+        let mut last: Option<(VertexId, VertexId)> = None;
+        for i in order {
+            let e = (self.src[i], self.dst[i]);
+            if e.0 == e.1 || last == Some(e) {
+                continue;
+            }
+            last = Some(e);
+            src.push(e.0);
+            dst.push(e.1);
+            if weighted {
+                weights.push(self.weights[i]);
+            }
+        }
+        self.src = src;
+        self.dst = dst;
+        self.weights = weights;
+    }
+
+    /// Symmetrize: add the reverse of every edge, then dedup (paper: "All
+    /// datasets have been converted to undirected graphs").
+    pub fn to_undirected(&mut self) {
+        let m = self.num_edges();
+        let weighted = self.is_weighted();
+        for i in 0..m {
+            let (s, d) = (self.src[i], self.dst[i]);
+            self.src.push(d);
+            self.dst.push(s);
+            if weighted {
+                let w = self.weights[i];
+                self.weights.push(w);
+            }
+        }
+        self.dedup();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dedup_removes_self_loops_and_dupes() {
+        let mut g = Coo::new(4);
+        g.push(0, 1);
+        g.push(0, 1);
+        g.push(1, 1); // self-loop
+        g.push(2, 3);
+        g.dedup();
+        assert_eq!(g.num_edges(), 2);
+        assert_eq!((g.src[0], g.dst[0]), (0, 1));
+        assert_eq!((g.src[1], g.dst[1]), (2, 3));
+    }
+
+    #[test]
+    fn undirected_adds_reverse() {
+        let mut g = Coo::new(3);
+        g.push(0, 1);
+        g.push(1, 2);
+        g.to_undirected();
+        assert_eq!(g.num_edges(), 4);
+        let has = |s: u32, d: u32| (0..4).any(|i| g.src[i] == s && g.dst[i] == d);
+        assert!(has(1, 0) && has(2, 1) && has(0, 1) && has(1, 2));
+    }
+
+    #[test]
+    fn weights_follow_dedup() {
+        let mut g = Coo::new(3);
+        g.push_weighted(0, 1, 5);
+        g.push_weighted(0, 1, 9);
+        g.push_weighted(1, 2, 7);
+        g.dedup();
+        assert_eq!(g.num_edges(), 2);
+        assert_eq!(g.weights, vec![5, 7]);
+    }
+}

@@ -1,0 +1,225 @@
+//! Compressed sparse row graph — Gunrock's default storage (paper §5.4,
+//! Fig 6): `row_offsets[v]..row_offsets[v+1]` indexes `col_indices` with
+//! the neighbor list of v. Per-edge weights are SoA alongside the columns.
+//!
+//! The optional CSC view (in-edges) backs pull-direction traversal; it is
+//! built lazily by `Csr::with_csc` / `builder::from_coo`.
+
+use super::{Coo, SizeT, VertexId, Weight};
+
+#[derive(Clone, Debug, Default)]
+pub struct Csr {
+    pub num_vertices: usize,
+    pub row_offsets: Vec<SizeT>,
+    pub col_indices: Vec<VertexId>,
+    /// Per-edge weights, aligned with col_indices; empty = unweighted.
+    pub edge_weights: Vec<Weight>,
+    /// Incoming view (CSC): built on demand for pull traversal.
+    pub csc_offsets: Vec<SizeT>,
+    pub csc_indices: Vec<VertexId>,
+}
+
+impl Csr {
+    pub fn num_edges(&self) -> usize {
+        self.col_indices.len()
+    }
+
+    pub fn is_weighted(&self) -> bool {
+        !self.edge_weights.is_empty()
+    }
+
+    pub fn has_csc(&self) -> bool {
+        !self.csc_offsets.is_empty()
+    }
+
+    /// Out-degree of vertex v.
+    #[inline]
+    pub fn degree(&self, v: VertexId) -> usize {
+        (self.row_offsets[v as usize + 1] - self.row_offsets[v as usize]) as usize
+    }
+
+    /// Neighbor slice of vertex v.
+    #[inline]
+    pub fn neighbors(&self, v: VertexId) -> &[VertexId] {
+        let s = self.row_offsets[v as usize] as usize;
+        let e = self.row_offsets[v as usize + 1] as usize;
+        &self.col_indices[s..e]
+    }
+
+    /// Edge-id range of vertex v's neighbor list.
+    #[inline]
+    pub fn edge_range(&self, v: VertexId) -> std::ops::Range<usize> {
+        self.row_offsets[v as usize] as usize..self.row_offsets[v as usize + 1] as usize
+    }
+
+    /// In-neighbors (requires CSC).
+    #[inline]
+    pub fn in_neighbors(&self, v: VertexId) -> &[VertexId] {
+        debug_assert!(self.has_csc());
+        let s = self.csc_offsets[v as usize] as usize;
+        let e = self.csc_offsets[v as usize + 1] as usize;
+        &self.csc_indices[s..e]
+    }
+
+    #[inline]
+    pub fn in_degree(&self, v: VertexId) -> usize {
+        (self.csc_offsets[v as usize + 1] - self.csc_offsets[v as usize]) as usize
+    }
+
+    /// Edge weight of edge id e (1 if unweighted).
+    #[inline]
+    pub fn weight(&self, e: usize) -> Weight {
+        if self.edge_weights.is_empty() {
+            1
+        } else {
+            self.edge_weights[e]
+        }
+    }
+
+    /// Destination of edge id e.
+    #[inline]
+    pub fn edge_dst(&self, e: usize) -> VertexId {
+        self.col_indices[e]
+    }
+
+    /// Source of edge id e via binary search over row_offsets (the same
+    /// search the merge-based LB strategy performs, paper §5.1.3).
+    pub fn edge_src(&self, e: usize) -> VertexId {
+        let e = e as SizeT;
+        // partition_point: first v with row_offsets[v+1] > e
+        let mut lo = 0usize;
+        let mut hi = self.num_vertices;
+        while lo < hi {
+            let mid = (lo + hi) / 2;
+            if self.row_offsets[mid + 1] <= e {
+                lo = mid + 1;
+            } else {
+                hi = mid;
+            }
+        }
+        lo as VertexId
+    }
+
+    /// Convert back to COO (debug / IO round trip).
+    pub fn to_coo(&self) -> Coo {
+        let mut coo = Coo::with_capacity(self.num_vertices, self.num_edges(), self.is_weighted());
+        for v in 0..self.num_vertices as VertexId {
+            for e in self.edge_range(v) {
+                if self.is_weighted() {
+                    coo.push_weighted(v, self.col_indices[e], self.edge_weights[e]);
+                } else {
+                    coo.push(v, self.col_indices[e]);
+                }
+            }
+        }
+        coo
+    }
+
+    /// Average degree — the paper's metric for choosing the LB strategy
+    /// ("When the graph has an average degree of 5 or larger..." §5.1.3).
+    pub fn average_degree(&self) -> f64 {
+        if self.num_vertices == 0 {
+            0.0
+        } else {
+            self.num_edges() as f64 / self.num_vertices as f64
+        }
+    }
+
+    /// Export the padded ELL slab used by the AOT PageRank artifact: rows
+    /// are in-neighbor lists (CSC) normalized by the source's out-degree,
+    /// clipped/padded to width k. Returns (cols, vals, dangling) in
+    /// row-major order, plus the number of dropped entries if any row
+    /// exceeded k.
+    pub fn to_ell_transposed(&self, n_pad: usize, k: usize) -> (Vec<i32>, Vec<f32>, Vec<f32>, usize) {
+        assert!(self.has_csc(), "ELL export needs the CSC view");
+        assert!(n_pad >= self.num_vertices);
+        let mut cols = vec![-1i32; n_pad * k];
+        let mut vals = vec![0f32; n_pad * k];
+        let mut dangling = vec![0f32; n_pad];
+        let mut dropped = 0usize;
+        for v in 0..self.num_vertices {
+            let ins = self.in_neighbors(v as VertexId);
+            for (j, &u) in ins.iter().enumerate() {
+                if j >= k {
+                    dropped += ins.len() - k;
+                    break;
+                }
+                cols[v * k + j] = u as i32;
+                vals[v * k + j] = 1.0 / self.degree(u) as f32;
+            }
+            if self.degree(v as VertexId) == 0 {
+                dangling[v] = 1.0;
+            }
+        }
+        // Padding rows are "dangling" with zero rank: leave mask 0 so they
+        // contribute nothing.
+        (cols, vals, dangling, dropped)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::builder;
+    use super::*;
+
+    fn sample() -> Csr {
+        // Paper Fig 5-ish small directed graph.
+        let mut coo = Coo::new(5);
+        for &(s, d) in &[(0, 1), (0, 2), (1, 3), (2, 3), (3, 4), (4, 0)] {
+            coo.push(s, d);
+        }
+        builder::from_coo(&coo, true)
+    }
+
+    #[test]
+    fn degrees_and_neighbors() {
+        let g = sample();
+        assert_eq!(g.num_edges(), 6);
+        assert_eq!(g.degree(0), 2);
+        assert_eq!(g.neighbors(0), &[1, 2]);
+        assert_eq!(g.degree(3), 1);
+        assert_eq!(g.neighbors(4), &[0]);
+    }
+
+    #[test]
+    fn csc_view() {
+        let g = sample();
+        assert!(g.has_csc());
+        assert_eq!(g.in_neighbors(3), &[1, 2]);
+        assert_eq!(g.in_degree(0), 1);
+        assert_eq!(g.in_neighbors(0), &[4]);
+    }
+
+    #[test]
+    fn edge_src_binary_search() {
+        let g = sample();
+        for v in 0..5u32 {
+            for e in g.edge_range(v) {
+                assert_eq!(g.edge_src(e), v, "edge {e}");
+            }
+        }
+    }
+
+    #[test]
+    fn coo_round_trip() {
+        let g = sample();
+        let coo = g.to_coo();
+        let g2 = builder::from_coo(&coo, false);
+        assert_eq!(g.row_offsets, g2.row_offsets);
+        assert_eq!(g.col_indices, g2.col_indices);
+    }
+
+    #[test]
+    fn ell_export_shapes_and_norms() {
+        let g = sample();
+        let (cols, vals, dangling, dropped) = g.to_ell_transposed(8, 4);
+        assert_eq!(cols.len(), 8 * 4);
+        assert_eq!(dropped, 0);
+        // vertex 3 has in-neighbors 1 (deg 1) and 2 (deg 1) -> vals 1.0
+        let row3: Vec<i32> = cols[3 * 4..3 * 4 + 4].to_vec();
+        assert_eq!(&row3[..2], &[1, 2]);
+        assert_eq!(&vals[3 * 4..3 * 4 + 2], &[1.0, 1.0]);
+        // no dangling vertices in the sample (4 -> 0 exists, all have out)
+        assert_eq!(dangling.iter().sum::<f32>(), 0.0);
+    }
+}

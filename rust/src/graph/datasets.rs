@@ -1,0 +1,168 @@
+//! Dataset registry: maps the paper's dataset names (Table 4 / Table 9) to
+//! scaled-down synthetic analogs of the same topology class, per the
+//! substitution rule in DESIGN.md. Every bench requests datasets through
+//! this registry so the analog parameters live in exactly one place.
+//!
+//! Scale note: the paper's graphs are 85M-680M edges on a 12GB K40c; our
+//! analogs are 2^13-2^16 vertices so the full 9-dataset x 5-primitive
+//! matrix finishes on CPU in minutes. Table 7 (scalability) sweeps scales
+//! directly.
+
+use super::generators::{
+    bipartite::{bipartite_follow_graph, FollowGraphParams},
+    grid::{grid2d, GridParams},
+    rgg::{rgg, RggParams},
+    rmat::{rmat, RmatParams},
+    smallworld::{smallworld, SmallWorldParams},
+};
+use super::Csr;
+
+/// Topology classes from Table 4: r = real-world, g = generated,
+/// s = scale-free, m = mesh-like.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GraphClass {
+    ScaleFree,
+    MeshLike,
+    Bipartite,
+}
+
+#[derive(Clone, Debug)]
+pub struct DatasetSpec {
+    /// Paper dataset name this analog stands in for.
+    pub name: &'static str,
+    pub class: GraphClass,
+    pub description: &'static str,
+}
+
+/// The nine datasets of Table 4.
+pub const TABLE4: &[&str] = &[
+    "soc-orkut",
+    "soc-livejournal1",
+    "hollywood-09",
+    "indochina-04",
+    "rmat_s22_e64",
+    "rmat_s23_e32",
+    "rmat_s24_e16",
+    "rgg_n_24",
+    "roadnet_USA",
+];
+
+/// Datasets used in the TC evaluation (Fig 25) — triangle-dense subset.
+pub const TC_DATASETS: &[&str] =
+    &["soc-livejournal1", "hollywood-09", "smallworld", "rgg_n_24", "roadnet_USA", "rmat_s22_e64"];
+
+/// WTF follow graphs (Table 9).
+pub const WTF_DATASETS: &[&str] = &["wiki-Vote", "twitter-SNAP", "gplus-SNAP", "twitter09"];
+
+pub fn spec(name: &str) -> DatasetSpec {
+    let (class, description) = match name {
+        "soc-orkut" | "soc-livejournal1" | "hollywood-09" | "indochina-04" => (
+            GraphClass::ScaleFree,
+            "real-world scale-free analog (R-MAT, high edge factor)",
+        ),
+        n if n.starts_with("rmat") || n.starts_with("kron") => {
+            (GraphClass::ScaleFree, "generated R-MAT / Kronecker (Graph500 initiator)")
+        }
+        "rgg_n_24" => (GraphClass::MeshLike, "random geometric graph"),
+        "roadnet_USA" => (GraphClass::MeshLike, "road-network mesh (2D grid analog)"),
+        "smallworld" => (GraphClass::ScaleFree, "Watts-Strogatz, triangle-dense"),
+        "wiki-Vote" | "twitter-SNAP" | "gplus-SNAP" | "twitter09" => {
+            (GraphClass::Bipartite, "directed follow graph (WTF)")
+        }
+        _ => (GraphClass::ScaleFree, "default R-MAT analog"),
+    };
+    DatasetSpec { name: Box::leak(name.to_string().into_boxed_str()), class, description }
+}
+
+/// Instantiate the analog for a paper dataset name. `weighted` attaches
+/// the paper's uniform [1, 64] SSSP weights.
+pub fn load(name: &str, weighted: bool) -> Csr {
+    match name {
+        // Social graphs: R-MAT analogs with decreasing edge factor,
+        // mirroring relative densities of the originals.
+        "soc-orkut" => rmat(&RmatParams { scale: 14, edge_factor: 32, seed: 101, weighted, ..Default::default() }),
+        "soc-livejournal1" => rmat(&RmatParams { scale: 14, edge_factor: 16, seed: 102, weighted, ..Default::default() }),
+        "hollywood-09" => smallworld_weighted(SmallWorldParams { n: 1 << 13, k: 48, beta: 0.3, seed: 103 }, weighted),
+        "indochina-04" => rmat(&RmatParams { scale: 14, edge_factor: 24, seed: 104, weighted, a: 0.45, b: 0.25, c: 0.25, ..Default::default() }),
+        "rmat_s22_e64" => rmat(&RmatParams { scale: 12, edge_factor: 64, seed: 122, weighted, ..Default::default() }),
+        "rmat_s23_e32" => rmat(&RmatParams { scale: 13, edge_factor: 32, seed: 123, weighted, ..Default::default() }),
+        "rmat_s24_e16" => rmat(&RmatParams { scale: 14, edge_factor: 16, seed: 124, weighted, ..Default::default() }),
+        "rgg_n_24" => rgg_weighted(RggParams { n: 1 << 14, radius: None, seed: 125, weighted }, weighted),
+        "roadnet_USA" => grid2d(&GridParams { width: 160, height: 128, seed: 126, weighted, ..Default::default() }),
+        "smallworld" => smallworld_weighted(SmallWorldParams { n: 1 << 12, k: 16, beta: 0.1, seed: 130 }, weighted),
+        // WTF follow graphs, scaled like Table 9's relative sizes.
+        "wiki-Vote" => bipartite_follow_graph(&FollowGraphParams { users: 1 << 10, avg_follows: 14, seed: 141, ..Default::default() }),
+        "twitter-SNAP" => bipartite_follow_graph(&FollowGraphParams { users: 1 << 12, avg_follows: 30, seed: 142, ..Default::default() }),
+        "gplus-SNAP" => bipartite_follow_graph(&FollowGraphParams { users: 1 << 12, avg_follows: 64, seed: 143, ..Default::default() }),
+        "twitter09" => bipartite_follow_graph(&FollowGraphParams { users: 1 << 14, avg_follows: 22, seed: 144, ..Default::default() }),
+        // Small mesh-class datasets sized for the AOT ELL artifacts
+        // (n <= 1024/4096, max in-degree <= 64/32): the XLA offload path.
+        "grid_1k" => grid2d(&GridParams { width: 32, height: 32, seed: 160, weighted, ..Default::default() }),
+        "grid_4k" => grid2d(&GridParams { width: 64, height: 64, seed: 161, weighted, ..Default::default() }),
+        "rgg_1k" => rgg_weighted(RggParams { n: 1 << 10, radius: None, seed: 162, weighted }, weighted),
+        // kron_g500-lognXX used by Table 7: scale parsed from name.
+        n if n.starts_with("kron_g500-logn") => {
+            let scale: u32 = n["kron_g500-logn".len()..].parse().unwrap_or(16);
+            rmat(&RmatParams { scale, edge_factor: 16, seed: 150 + scale as u64, weighted, ..Default::default() })
+        }
+        other => panic!("unknown dataset {other}; register it in graph::datasets"),
+    }
+}
+
+fn smallworld_weighted(p: SmallWorldParams, weighted: bool) -> Csr {
+    let mut g = smallworld(&p);
+    if weighted {
+        attach_uniform_weights(&mut g, p.seed);
+    }
+    g
+}
+
+fn rgg_weighted(p: RggParams, weighted: bool) -> Csr {
+    let mut g = rgg(&p);
+    if weighted && !g.is_weighted() {
+        attach_uniform_weights(&mut g, p.seed);
+    }
+    g
+}
+
+/// Attach the paper's uniform random [1, 64] edge weights.
+pub fn attach_uniform_weights(g: &mut Csr, seed: u64) {
+    use crate::util::rng::Pcg32;
+    let mut rng = Pcg32::new(seed ^ 0x57e1_6475);
+    g.edge_weights = (0..g.num_edges()).map(|_| rng.weight(1, 64)).collect();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_table4_datasets_load() {
+        for name in TABLE4 {
+            let g = load(name, false);
+            assert!(g.num_vertices > 0 && g.num_edges() > 0, "{name}");
+        }
+    }
+
+    #[test]
+    fn class_matches_topology() {
+        use crate::graph::properties::analyze;
+        let sf = analyze(&load("rmat_s22_e64", false));
+        assert!(sf.is_scale_free());
+        let mesh = analyze(&load("roadnet_USA", false));
+        assert!(!mesh.is_scale_free());
+    }
+
+    #[test]
+    fn weighted_load_attaches_weights() {
+        let g = load("soc-livejournal1", true);
+        assert!(g.is_weighted());
+        assert!(g.edge_weights.iter().all(|&w| (1..=64).contains(&w)));
+    }
+
+    #[test]
+    fn kron_names_parse_scale() {
+        let g = load("kron_g500-logn10", false);
+        assert_eq!(g.num_vertices, 1024);
+    }
+}

@@ -1,0 +1,94 @@
+//! Bipartite follow-graph analog for the WTF (Who-To-Follow) experiments
+//! (paper §7.5, Tables 9-11): a directed "follows" graph with a
+//! preferential-attachment-style skew so that hub accounts (celebrities)
+//! accumulate followers, as in the Twitter/Google+ datasets used there.
+
+use crate::graph::{builder, Coo, Csr, VertexId};
+use crate::util::rng::Pcg32;
+
+#[derive(Clone, Copy, Debug)]
+pub struct FollowGraphParams {
+    pub users: usize,
+    pub avg_follows: usize,
+    /// Zipf-ish skew exponent for target popularity (higher = more skewed).
+    pub skew: f64,
+    pub seed: u64,
+}
+
+impl Default for FollowGraphParams {
+    fn default() -> Self {
+        FollowGraphParams { users: 1 << 13, avg_follows: 16, skew: 1.0, seed: 42 }
+    }
+}
+
+/// Directed follow graph: edge u -> v means "u follows v". Targets are
+/// drawn with probability proportional to (rank+1)^-skew over a random
+/// permutation of users, approximating preferential attachment.
+pub fn bipartite_follow_graph(p: &FollowGraphParams) -> Csr {
+    let n = p.users;
+    let m = n * p.avg_follows;
+    let mut rng = Pcg32::new(p.seed);
+
+    // Popularity permutation: perm[rank] = user with that popularity rank.
+    let mut perm: Vec<u32> = (0..n as u32).collect();
+    rng.shuffle(&mut perm);
+
+    // Precompute cumulative Zipf weights.
+    let mut cum = Vec::with_capacity(n);
+    let mut acc = 0.0f64;
+    for r in 0..n {
+        acc += 1.0 / ((r + 1) as f64).powf(p.skew);
+        cum.push(acc);
+    }
+    let total = acc;
+
+    let mut coo = Coo::with_capacity(n, m, false);
+    for _ in 0..m {
+        let u = rng.below_usize(n) as VertexId;
+        let t = rng.f64() * total;
+        // binary search cumulative weights
+        let rank = cum.partition_point(|&c| c < t).min(n - 1);
+        let v = perm[rank];
+        if u != v {
+            coo.push(u, v);
+        }
+    }
+    coo.dedup();
+    builder::from_coo(&coo, true)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn follower_counts_are_skewed() {
+        let g = bipartite_follow_graph(&FollowGraphParams {
+            users: 2048,
+            avg_follows: 8,
+            ..Default::default()
+        });
+        let mut in_degs: Vec<usize> = (0..g.num_vertices as u32).map(|v| g.in_degree(v)).collect();
+        in_degs.sort_unstable_by(|a, b| b.cmp(a));
+        let top_share: usize = in_degs[..20].iter().sum();
+        let total: usize = in_degs.iter().sum();
+        assert!(
+            top_share as f64 > 0.10 * total as f64,
+            "top-20 hubs should hold >10% of follows ({top_share}/{total})"
+        );
+    }
+
+    #[test]
+    fn directed_no_self_follows() {
+        let g = bipartite_follow_graph(&FollowGraphParams { users: 512, avg_follows: 4, ..Default::default() });
+        for v in 0..g.num_vertices as u32 {
+            assert!(!g.neighbors(v).contains(&v));
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let p = FollowGraphParams { users: 256, avg_follows: 4, ..Default::default() };
+        assert_eq!(bipartite_follow_graph(&p).col_indices, bipartite_follow_graph(&p).col_indices);
+    }
+}

@@ -1,0 +1,93 @@
+//! 2D grid "road network" analog: the roadnet_USA class in Table 4 —
+//! huge diameter, max degree ~9, extremely even degree distribution. We
+//! generate a W×H 4-connected grid with a fraction of random perturbations
+//! (missing edges ~ rivers, diagonal shortcuts ~ highways).
+
+use crate::graph::{builder, Coo, Csr, VertexId};
+use crate::util::rng::Pcg32;
+
+#[derive(Clone, Copy, Debug)]
+pub struct GridParams {
+    pub width: usize,
+    pub height: usize,
+    /// Probability an edge of the grid is removed.
+    pub drop_prob: f64,
+    /// Probability a vertex gains a diagonal shortcut.
+    pub diag_prob: f64,
+    pub seed: u64,
+    pub weighted: bool,
+}
+
+impl Default for GridParams {
+    fn default() -> Self {
+        GridParams {
+            width: 128,
+            height: 128,
+            drop_prob: 0.03,
+            diag_prob: 0.05,
+            seed: 42,
+            weighted: false,
+        }
+    }
+}
+
+pub fn grid2d(p: &GridParams) -> Csr {
+    let (w, h) = (p.width, p.height);
+    let n = w * h;
+    let id = |x: usize, y: usize| (y * w + x) as VertexId;
+    let mut rng = Pcg32::new(p.seed);
+    let mut coo = Coo::with_capacity(n, n * 3, p.weighted);
+    let push = |coo: &mut Coo, rng: &mut Pcg32, a: VertexId, b: VertexId| {
+        if p.weighted {
+            let wt = rng.weight(1, 64);
+            coo.push_weighted(a, b, wt);
+        } else {
+            coo.push(a, b);
+        }
+    };
+    for y in 0..h {
+        for x in 0..w {
+            if x + 1 < w && rng.f64() >= p.drop_prob {
+                push(&mut coo, &mut rng, id(x, y), id(x + 1, y));
+            }
+            if y + 1 < h && rng.f64() >= p.drop_prob {
+                push(&mut coo, &mut rng, id(x, y), id(x, y + 1));
+            }
+            if x + 1 < w && y + 1 < h && rng.f64() < p.diag_prob {
+                push(&mut coo, &mut rng, id(x, y), id(x + 1, y + 1));
+            }
+        }
+    }
+    coo.to_undirected();
+    builder::from_coo(&coo, true)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_shape() {
+        let g = grid2d(&GridParams { width: 32, height: 16, drop_prob: 0.0, diag_prob: 0.0, ..Default::default() });
+        assert_eq!(g.num_vertices, 512);
+        // interior vertex has degree 4
+        let interior = (8 * 32 + 16) as u32;
+        assert_eq!(g.degree(interior), 4);
+        // corner has degree 2
+        assert_eq!(g.degree(0), 2);
+    }
+
+    #[test]
+    fn low_max_degree() {
+        let g = grid2d(&GridParams::default());
+        let max = (0..g.num_vertices as u32).map(|v| g.degree(v)).max().unwrap();
+        assert!(max <= 9, "road-like max degree, got {max}");
+    }
+
+    #[test]
+    fn weighted_grid() {
+        let g = grid2d(&GridParams { width: 16, height: 16, weighted: true, ..Default::default() });
+        assert!(g.is_weighted());
+        assert_eq!(g.edge_weights.len(), g.num_edges());
+    }
+}

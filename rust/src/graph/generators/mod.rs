@@ -1,0 +1,15 @@
+//! Synthetic workload generators matching the paper's dataset classes
+//! (Table 4): R-MAT / Kronecker scale-free graphs with the Graph500
+//! initiator, random geometric graphs (rgg), 2D road-like meshes, plus
+//! bipartite follow-graphs for the WTF experiments (Tables 9-11).
+
+pub mod bipartite;
+pub mod grid;
+pub mod rgg;
+pub mod rmat;
+pub mod smallworld;
+
+pub use bipartite::bipartite_follow_graph;
+pub use grid::grid2d;
+pub use rgg::rgg;
+pub use rmat::rmat;

@@ -1,0 +1,112 @@
+//! Random geometric graph: n points uniform in the unit square, edge when
+//! distance < threshold. The paper's rgg_n_24 uses threshold 0.000548; we
+//! scale the threshold with n to keep the same expected degree
+//! (E[deg] ≈ n·π·r² stays fixed when r ∝ 1/√n). Produces the paper's
+//! "large diameter, small and evenly distributed degree" class (Table 4).
+
+use crate::graph::{builder, Coo, Csr, VertexId};
+use crate::util::rng::Pcg32;
+
+#[derive(Clone, Copy, Debug)]
+pub struct RggParams {
+    pub n: usize,
+    /// Edge threshold; if None, chosen so expected degree ~= 15
+    /// (rgg_n_24's average degree in Table 4).
+    pub radius: Option<f64>,
+    pub seed: u64,
+    pub weighted: bool,
+}
+
+impl Default for RggParams {
+    fn default() -> Self {
+        RggParams { n: 1 << 14, radius: None, seed: 42, weighted: false }
+    }
+}
+
+pub fn rgg(p: &RggParams) -> Csr {
+    let n = p.n;
+    let radius = p.radius.unwrap_or_else(|| (15.0 / (n as f64 * std::f64::consts::PI)).sqrt());
+    let mut rng = Pcg32::new(p.seed);
+    let pts: Vec<(f64, f64)> = (0..n).map(|_| (rng.f64(), rng.f64())).collect();
+
+    // Uniform grid spatial hash: cell size = radius.
+    let cells = ((1.0 / radius).floor() as usize).max(1);
+    let cell_of = |x: f64, y: f64| -> (usize, usize) {
+        (
+            ((x * cells as f64) as usize).min(cells - 1),
+            ((y * cells as f64) as usize).min(cells - 1),
+        )
+    };
+    let mut grid: Vec<Vec<u32>> = vec![Vec::new(); cells * cells];
+    for (i, &(x, y)) in pts.iter().enumerate() {
+        let (cx, cy) = cell_of(x, y);
+        grid[cy * cells + cx].push(i as u32);
+    }
+
+    let r2 = radius * radius;
+    let mut coo = Coo::with_capacity(n, n * 16, p.weighted);
+    for i in 0..n {
+        let (x, y) = pts[i];
+        let (cx, cy) = cell_of(x, y);
+        for dy in -1i64..=1 {
+            for dx in -1i64..=1 {
+                let nx = cx as i64 + dx;
+                let ny = cy as i64 + dy;
+                if nx < 0 || ny < 0 || nx >= cells as i64 || ny >= cells as i64 {
+                    continue;
+                }
+                for &j in &grid[ny as usize * cells + nx as usize] {
+                    let j = j as usize;
+                    if j <= i {
+                        continue; // emit each pair once; symmetrize below
+                    }
+                    let (px, py) = pts[j];
+                    let (ddx, ddy) = (x - px, y - py);
+                    if ddx * ddx + ddy * ddy < r2 {
+                        if p.weighted {
+                            let w = rng.weight(1, 64);
+                            coo.push_weighted(i as VertexId, j as VertexId, w);
+                        } else {
+                            coo.push(i as VertexId, j as VertexId);
+                        }
+                    }
+                }
+            }
+        }
+    }
+    coo.to_undirected();
+    builder::from_coo(&coo, true)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn expected_degree_close_to_target() {
+        let g = rgg(&RggParams { n: 4096, ..Default::default() });
+        let avg = g.average_degree();
+        assert!((8.0..25.0).contains(&avg), "avg degree {avg}");
+    }
+
+    #[test]
+    fn even_degree_distribution() {
+        // Mesh-like class: low degree variance relative to scale-free.
+        let g = rgg(&RggParams { n: 4096, ..Default::default() });
+        let max = (0..g.num_vertices as u32).map(|v| g.degree(v)).max().unwrap();
+        assert!((max as f64) < 4.0 * g.average_degree() + 8.0, "max {max}");
+    }
+
+    #[test]
+    fn symmetric_and_deterministic() {
+        let p = RggParams { n: 1024, ..Default::default() };
+        let g1 = rgg(&p);
+        let g2 = rgg(&p);
+        assert_eq!(g1.col_indices, g2.col_indices);
+        for v in 0..g1.num_vertices as u32 {
+            for &u in g1.neighbors(v) {
+                assert!(g1.neighbors(u).contains(&v));
+            }
+        }
+    }
+}

@@ -1,0 +1,137 @@
+//! R-MAT / Kronecker generator with the paper's Graph500 parameters:
+//! a=0.57, b=0.19, c=0.19, d=0.05, edge factor 16/32/64 (§7 "Datasets").
+
+use crate::graph::{builder, Coo, Csr, VertexId};
+use crate::util::{par, rng::Pcg32};
+
+#[derive(Clone, Copy, Debug)]
+pub struct RmatParams {
+    pub a: f64,
+    pub b: f64,
+    pub c: f64,
+    /// scale: num_vertices = 2^scale
+    pub scale: u32,
+    pub edge_factor: usize,
+    pub seed: u64,
+    /// Symmetrize + dedup like the paper's dataset preparation.
+    pub undirected: bool,
+    /// Attach uniform random weights in [1, 64] (paper's SSSP setup).
+    pub weighted: bool,
+}
+
+impl Default for RmatParams {
+    fn default() -> Self {
+        RmatParams {
+            a: 0.57,
+            b: 0.19,
+            c: 0.19,
+            scale: 14,
+            edge_factor: 16,
+            seed: 42,
+            undirected: true,
+            weighted: false,
+        }
+    }
+}
+
+/// Generate the COO edge list (before symmetrization).
+pub fn rmat_coo(p: &RmatParams) -> Coo {
+    let n = 1usize << p.scale;
+    let m = n * p.edge_factor;
+    let nt = par::num_threads();
+    let chunks = par::run_partitioned(m, nt, |w, start, end| {
+        let mut rng = Pcg32::with_stream(p.seed ^ (w as u64).wrapping_mul(0x9e3779b97f4a7c15), w as u64);
+        let mut src = Vec::with_capacity(end - start);
+        let mut dst = Vec::with_capacity(end - start);
+        let mut wts = if p.weighted { Vec::with_capacity(end - start) } else { Vec::new() };
+        for _ in start..end {
+            let (mut s, mut d) = (0usize, 0usize);
+            for _ in 0..p.scale {
+                let r = rng.f64();
+                let (sb, db) = if r < p.a {
+                    (0, 0)
+                } else if r < p.a + p.b {
+                    (0, 1)
+                } else if r < p.a + p.b + p.c {
+                    (1, 0)
+                } else {
+                    (1, 1)
+                };
+                s = (s << 1) | sb;
+                d = (d << 1) | db;
+            }
+            src.push(s as VertexId);
+            dst.push(d as VertexId);
+            if p.weighted {
+                wts.push(rng.weight(1, 64));
+            }
+        }
+        (src, dst, wts)
+    });
+    let mut coo = Coo::with_capacity(n, m, p.weighted);
+    for (src, dst, wts) in chunks {
+        coo.src.extend(src);
+        coo.dst.extend(dst);
+        coo.weights.extend(wts);
+    }
+    coo
+}
+
+/// Generate a CSR graph (with CSC view) per the paper's preparation:
+/// optional symmetrization, self-loop/dup removal.
+pub fn rmat(p: &RmatParams) -> Csr {
+    let mut coo = rmat_coo(p);
+    if p.undirected {
+        coo.to_undirected();
+    } else {
+        coo.dedup();
+    }
+    builder::from_coo(&coo, true)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sizes_and_determinism() {
+        let p = RmatParams { scale: 8, edge_factor: 8, ..Default::default() };
+        let g1 = rmat(&p);
+        let g2 = rmat(&p);
+        assert_eq!(g1.num_vertices, 256);
+        assert!(g1.num_edges() > 0);
+        assert_eq!(g1.col_indices, g2.col_indices, "not deterministic");
+    }
+
+    #[test]
+    fn skewed_degree_distribution() {
+        // Scale-free: max degree should dwarf the average.
+        let p = RmatParams { scale: 10, edge_factor: 16, ..Default::default() };
+        let g = rmat(&p);
+        let avg = g.average_degree();
+        let max = (0..g.num_vertices as VertexId).map(|v| g.degree(v)).max().unwrap();
+        assert!(
+            (max as f64) > 5.0 * avg,
+            "max {max} should be >> avg {avg} for R-MAT"
+        );
+    }
+
+    #[test]
+    fn undirected_is_symmetric() {
+        let p = RmatParams { scale: 7, edge_factor: 4, ..Default::default() };
+        let g = rmat(&p);
+        for v in 0..g.num_vertices as VertexId {
+            for &u in g.neighbors(v) {
+                assert!(g.neighbors(u).contains(&v));
+            }
+        }
+    }
+
+    #[test]
+    fn weighted_in_range() {
+        let p = RmatParams { scale: 7, edge_factor: 4, weighted: true, ..Default::default() };
+        let g = rmat(&p);
+        assert!(g.is_weighted());
+        assert!(g.edge_weights.iter().all(|&w| (1..=64).contains(&w)));
+    }
+}

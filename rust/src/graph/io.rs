@@ -1,0 +1,214 @@
+//! Graph IO: whitespace edge lists (SNAP style) and MatrixMarket
+//! coordinate files (UF Sparse Matrix Collection style) — the two formats
+//! the paper's datasets ship in.
+
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::{builder, Coo, Csr, VertexId};
+
+/// Read a SNAP-style edge list: lines of `src dst [weight]`, `#` comments.
+/// Vertex ids are used as-is; num_vertices = max id + 1.
+pub fn read_edge_list(path: &Path) -> Result<Coo> {
+    let f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let mut coo = Coo::new(0);
+    let mut max_id: u64 = 0;
+    for (lineno, line) in BufReader::new(f).lines().enumerate() {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') || t.starts_with('%') {
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        let s: u64 = it.next().context("missing src")?.parse().with_context(|| format!("line {}", lineno + 1))?;
+        let d: u64 = it.next().context("missing dst")?.parse().with_context(|| format!("line {}", lineno + 1))?;
+        max_id = max_id.max(s).max(d);
+        coo.src.push(s as VertexId);
+        coo.dst.push(d as VertexId);
+        if let Some(w) = it.next() {
+            coo.weights.push(w.parse().unwrap_or(1));
+        }
+    }
+    if !coo.weights.is_empty() && coo.weights.len() != coo.src.len() {
+        bail!("mixed weighted/unweighted lines in {}", path.display());
+    }
+    coo.num_vertices = (max_id + 1) as usize;
+    Ok(coo)
+}
+
+/// Write a SNAP-style edge list.
+pub fn write_edge_list(path: &Path, coo: &Coo) -> Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    writeln!(w, "# gunrock-rs edge list: {} vertices {} edges", coo.num_vertices, coo.num_edges())?;
+    for i in 0..coo.num_edges() {
+        if coo.is_weighted() {
+            writeln!(w, "{} {} {}", coo.src[i], coo.dst[i], coo.weights[i])?;
+        } else {
+            writeln!(w, "{} {}", coo.src[i], coo.dst[i])?;
+        }
+    }
+    Ok(())
+}
+
+/// Read a MatrixMarket coordinate file (1-indexed; `%%MatrixMarket` header;
+/// optional `symmetric` qualifier which we expand).
+pub fn read_matrix_market(path: &Path) -> Result<Coo> {
+    let f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let mut lines = BufReader::new(f).lines();
+    let header = loop {
+        match lines.next() {
+            Some(l) => {
+                let l = l?;
+                if l.starts_with("%%MatrixMarket") {
+                    break l;
+                } else if !l.starts_with('%') && !l.trim().is_empty() {
+                    bail!("missing MatrixMarket header in {}", path.display());
+                }
+            }
+            None => bail!("empty file {}", path.display()),
+        }
+    };
+    let symmetric = header.contains("symmetric");
+    let pattern = header.contains("pattern");
+
+    // size line
+    let size_line = loop {
+        match lines.next() {
+            Some(l) => {
+                let l = l?;
+                if !l.starts_with('%') && !l.trim().is_empty() {
+                    break l;
+                }
+            }
+            None => bail!("missing size line"),
+        }
+    };
+    let mut it = size_line.split_whitespace();
+    let rows: usize = it.next().context("rows")?.parse()?;
+    let cols: usize = it.next().context("cols")?.parse()?;
+    let nnz: usize = it.next().context("nnz")?.parse()?;
+    let n = rows.max(cols);
+
+    let mut coo = Coo::with_capacity(n, if symmetric { nnz * 2 } else { nnz }, !pattern);
+    for line in lines {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('%') {
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        let r: usize = it.next().context("row")?.parse()?;
+        let c: usize = it.next().context("col")?.parse()?;
+        let w: u32 = if pattern {
+            1
+        } else {
+            it.next().map(|v| v.parse::<f64>().unwrap_or(1.0).abs().max(1.0) as u32).unwrap_or(1)
+        };
+        let (s, d) = ((r - 1) as VertexId, (c - 1) as VertexId);
+        if pattern {
+            coo.push(s, d);
+            if symmetric && s != d {
+                coo.push(d, s);
+            }
+        } else {
+            coo.push_weighted(s, d, w);
+            if symmetric && s != d {
+                coo.push_weighted(d, s, w);
+            }
+        }
+    }
+    Ok(coo)
+}
+
+/// Write a MatrixMarket pattern file (general, 1-indexed).
+pub fn write_matrix_market(path: &Path, coo: &Coo) -> Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    writeln!(w, "%%MatrixMarket matrix coordinate pattern general")?;
+    writeln!(w, "{} {} {}", coo.num_vertices, coo.num_vertices, coo.num_edges())?;
+    for i in 0..coo.num_edges() {
+        writeln!(w, "{} {}", coo.src[i] + 1, coo.dst[i] + 1)?;
+    }
+    Ok(())
+}
+
+/// Load a graph file by extension: .mtx -> MatrixMarket, else edge list.
+pub fn load_graph(path: &Path, undirected: bool) -> Result<Csr> {
+    let mut coo = if path.extension().and_then(|e| e.to_str()) == Some("mtx") {
+        read_matrix_market(path)?
+    } else {
+        read_edge_list(path)?
+    };
+    if undirected {
+        coo.to_undirected();
+    } else {
+        coo.dedup();
+    }
+    Ok(builder::from_coo(&coo, true))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("gunrock_io_test_{}_{}", std::process::id(), name));
+        p
+    }
+
+    #[test]
+    fn edge_list_round_trip() {
+        let mut coo = Coo::new(5);
+        coo.push_weighted(0, 1, 3);
+        coo.push_weighted(4, 2, 7);
+        let p = tmp("el.txt");
+        write_edge_list(&p, &coo).unwrap();
+        let got = read_edge_list(&p).unwrap();
+        assert_eq!(got.num_vertices, 5);
+        assert_eq!(got.src, vec![0, 4]);
+        assert_eq!(got.dst, vec![1, 2]);
+        assert_eq!(got.weights, vec![3, 7]);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn matrix_market_round_trip() {
+        let mut coo = Coo::new(4);
+        coo.push(0, 1);
+        coo.push(2, 3);
+        coo.push(3, 0);
+        let p = tmp("g.mtx");
+        write_matrix_market(&p, &coo).unwrap();
+        let got = read_matrix_market(&p).unwrap();
+        assert_eq!(got.num_edges(), 3);
+        assert_eq!(got.src, vec![0, 2, 3]);
+        assert_eq!(got.dst, vec![1, 3, 0]);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn matrix_market_symmetric_expansion() {
+        let p = tmp("sym.mtx");
+        std::fs::write(
+            &p,
+            "%%MatrixMarket matrix coordinate pattern symmetric\n3 3 2\n2 1\n3 2\n",
+        )
+        .unwrap();
+        let got = read_matrix_market(&p).unwrap();
+        assert_eq!(got.num_edges(), 4);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn comments_and_blank_lines_skipped() {
+        let p = tmp("comments.txt");
+        std::fs::write(&p, "# header\n\n0 1\n# mid\n1 2\n").unwrap();
+        let got = read_edge_list(&p).unwrap();
+        assert_eq!(got.num_edges(), 2);
+        std::fs::remove_file(p).ok();
+    }
+}

@@ -1,0 +1,25 @@
+//! Graph storage and workload generation.
+//!
+//! Gunrock stores graphs in compressed sparse row (CSR) form (paper §5.4):
+//! a row-offsets array `R` and column-indices array `C`, with per-edge
+//! values in structure-of-array layout. We additionally keep the CSC
+//! (incoming) view when a primitive needs pull-direction traversal or
+//! in-neighbor iteration (PageRank, pull-BFS).
+
+pub mod builder;
+pub mod coo;
+pub mod csr;
+pub mod datasets;
+pub mod generators;
+pub mod io;
+pub mod properties;
+
+pub use coo::Coo;
+pub use csr::Csr;
+
+/// Vertex id type (paper uses 32-bit VertexId).
+pub type VertexId = u32;
+/// Edge id / size type.
+pub type SizeT = u32;
+/// Edge weight type.
+pub type Weight = u32;

@@ -1,0 +1,119 @@
+//! Graph topology metrics mirroring the columns of the paper's Table 4:
+//! vertex/edge counts, max degree, degree standard deviation, (pseudo-)
+//! diameter, and the scale-free-vs-mesh classification the framework's
+//! strategy heuristics key on.
+
+use super::{Csr, VertexId};
+use crate::util::stats;
+
+#[derive(Clone, Debug)]
+pub struct GraphProperties {
+    pub vertices: usize,
+    pub edges: usize,
+    pub max_degree: usize,
+    pub avg_degree: f64,
+    pub degree_stddev: f64,
+    /// BFS eccentricity from a few samples — the paper's "Diameter" column
+    /// is likewise an estimate for the large datasets.
+    pub pseudo_diameter: usize,
+    /// Fraction of vertices with degree < 64 (paper: "80% of nodes have
+    /// degree less than 64" for the scale-free class).
+    pub frac_low_degree: f64,
+}
+
+impl GraphProperties {
+    /// Scale-free heuristic used to pick traversal strategy defaults:
+    /// high degree variance + small diameter.
+    pub fn is_scale_free(&self) -> bool {
+        self.degree_stddev > self.avg_degree && self.max_degree as f64 > 16.0 * self.avg_degree
+    }
+}
+
+/// BFS levels from `src`, returning eccentricity (serial; used only for
+/// diagnostics, not on the hot path).
+fn eccentricity(g: &Csr, src: VertexId) -> usize {
+    let n = g.num_vertices;
+    let mut depth = vec![u32::MAX; n];
+    depth[src as usize] = 0;
+    let mut frontier = vec![src];
+    let mut level = 0usize;
+    while !frontier.is_empty() {
+        let mut next = Vec::new();
+        for &v in &frontier {
+            for &u in g.neighbors(v) {
+                if depth[u as usize] == u32::MAX {
+                    depth[u as usize] = depth[v as usize] + 1;
+                    next.push(u);
+                }
+            }
+        }
+        if !next.is_empty() {
+            level += 1;
+        }
+        frontier = next;
+    }
+    level
+}
+
+pub fn analyze(g: &Csr) -> GraphProperties {
+    let n = g.num_vertices;
+    let degs: Vec<f64> = (0..n as VertexId).map(|v| g.degree(v) as f64).collect();
+    let max_degree = degs.iter().cloned().fold(0.0, f64::max) as usize;
+    let avg_degree = g.average_degree();
+    let degree_stddev = stats::stddev(&degs);
+    let frac_low_degree = degs.iter().filter(|&&d| d < 64.0).count() as f64 / n.max(1) as f64;
+
+    // Pseudo-diameter: max eccentricity over up to 4 sample sources
+    // (pick the max-degree vertex + 3 spread samples).
+    let mut samples: Vec<VertexId> = Vec::new();
+    if n > 0 {
+        let max_v = (0..n as VertexId).max_by_key(|&v| g.degree(v)).unwrap();
+        samples.push(max_v);
+        for i in 1..=3 {
+            samples.push(((n * i) / 4) as VertexId % n as VertexId);
+        }
+        samples.dedup();
+    }
+    let pseudo_diameter = samples.iter().map(|&s| eccentricity(g, s)).max().unwrap_or(0);
+
+    GraphProperties {
+        vertices: n,
+        edges: g.num_edges(),
+        max_degree,
+        avg_degree,
+        degree_stddev,
+        pseudo_diameter,
+        frac_low_degree,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::{grid::GridParams, grid2d, rmat, rmat::RmatParams};
+
+    #[test]
+    fn rmat_classified_scale_free() {
+        let g = rmat(&RmatParams { scale: 10, edge_factor: 16, ..Default::default() });
+        let p = analyze(&g);
+        assert!(p.is_scale_free(), "{p:?}");
+        assert!(p.pseudo_diameter < 12, "{p:?}");
+    }
+
+    #[test]
+    fn grid_classified_mesh() {
+        let g = grid2d(&GridParams { width: 48, height: 48, ..Default::default() });
+        let p = analyze(&g);
+        assert!(!p.is_scale_free(), "{p:?}");
+        assert!(p.pseudo_diameter > 20, "{p:?}");
+    }
+
+    #[test]
+    fn counts_match() {
+        let g = grid2d(&GridParams { width: 8, height: 8, drop_prob: 0.0, diag_prob: 0.0, ..Default::default() });
+        let p = analyze(&g);
+        assert_eq!(p.vertices, 64);
+        assert_eq!(p.edges, g.num_edges());
+        assert_eq!(p.max_degree, 4);
+    }
+}

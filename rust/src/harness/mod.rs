@@ -1,0 +1,99 @@
+//! Benchmark harness: measurement loop (criterion is unavailable offline),
+//! paper-style table printing, and the shared dataset-suite runners behind
+//! the per-table/figure bench binaries in `rust/benches/`.
+
+pub mod suite;
+
+use crate::util::{stats, timer};
+
+/// One measured series.
+#[derive(Clone, Debug)]
+pub struct BenchStat {
+    pub name: String,
+    pub reps: usize,
+    pub mean_ms: f64,
+    pub median_ms: f64,
+    pub min_ms: f64,
+    pub stddev_ms: f64,
+}
+
+/// Measure `f` with warmup + repetitions.
+pub fn measure<T>(name: &str, warmup: usize, reps: usize, f: impl FnMut() -> T) -> BenchStat {
+    let times = timer::bench_ms(warmup, reps, f);
+    BenchStat {
+        name: name.to_string(),
+        reps,
+        mean_ms: stats::mean(&times),
+        median_ms: stats::median(&times),
+        min_ms: stats::min(&times),
+        stddev_ms: stats::stddev(&times),
+    }
+}
+
+/// Render an aligned text table (markdown-ish, parsed by EXPERIMENTS.md).
+pub fn print_table(title: &str, headers: &[&str], rows: &[Vec<String>]) {
+    println!("\n=== {title} ===");
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let line = |cells: &[String]| {
+        let mut s = String::from("|");
+        for (i, c) in cells.iter().enumerate() {
+            s.push_str(&format!(" {:<w$} |", c, w = widths.get(i).copied().unwrap_or(c.len())));
+        }
+        s
+    };
+    println!("{}", line(&headers.iter().map(|h| h.to_string()).collect::<Vec<_>>()));
+    println!(
+        "|{}|",
+        widths.iter().map(|w| "-".repeat(w + 2)).collect::<Vec<_>>().join("|")
+    );
+    for row in rows {
+        println!("{}", line(row));
+    }
+}
+
+/// Format milliseconds compactly.
+pub fn fmt_ms(ms: f64) -> String {
+    if ms >= 100.0 {
+        format!("{ms:.0}")
+    } else if ms >= 1.0 {
+        format!("{ms:.2}")
+    } else {
+        format!("{ms:.4}")
+    }
+}
+
+/// Format MTEPS compactly.
+pub fn fmt_mteps(x: f64) -> String {
+    if x >= 100.0 {
+        format!("{x:.0}")
+    } else {
+        format!("{x:.2}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_counts_reps() {
+        let s = measure("noop", 1, 4, || 0u8);
+        assert_eq!(s.reps, 4);
+        assert!(s.min_ms <= s.mean_ms + 1e-12);
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(fmt_ms(123.4), "123");
+        assert_eq!(fmt_ms(1.234), "1.23");
+        assert_eq!(fmt_ms(0.1234), "0.1234");
+        assert_eq!(fmt_mteps(123.4), "123");
+    }
+}

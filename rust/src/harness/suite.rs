@@ -1,0 +1,218 @@
+//! Shared experiment runners: one function per primitive that executes it
+//! on a named dataset analog and returns the paper's metrics (runtime ms,
+//! MTEPS, warp efficiency, iteration trace). The bench binaries compose
+//! these into each table/figure.
+
+use crate::baselines;
+use crate::config::Config;
+use crate::enactor::RunResult;
+use crate::graph::{datasets, Csr, VertexId};
+use crate::primitives::{bc, bfs, cc, pagerank, sssp, tc};
+use crate::util::stats;
+
+/// Source vertex policy matching the paper: highest-degree vertex (stable
+/// across runs, guaranteed in the giant component of the analogs).
+pub fn pick_source(g: &Csr) -> VertexId {
+    (0..g.num_vertices as VertexId).max_by_key(|&v| g.degree(v)).unwrap_or(0)
+}
+
+#[derive(Clone, Debug)]
+pub struct PrimitiveRun {
+    pub primitive: &'static str,
+    pub dataset: String,
+    pub runtime_ms: f64,
+    pub mteps: f64,
+    pub warp_efficiency: f64,
+    pub result: RunResult,
+}
+
+pub fn run_bfs(name: &str, g: &Csr, cfg: &Config) -> PrimitiveRun {
+    let src = pick_source(g);
+    let (_, stats_) = bfs::bfs(g, src, cfg);
+    PrimitiveRun {
+        primitive: "BFS",
+        dataset: name.to_string(),
+        runtime_ms: stats_.result.runtime_ms,
+        mteps: stats_.result.mteps(),
+        warp_efficiency: stats_.result.warp_efficiency,
+        result: stats_.result,
+    }
+}
+
+pub fn run_sssp(name: &str, g: &Csr, cfg: &Config) -> PrimitiveRun {
+    let src = pick_source(g);
+    let (_, r) = sssp::sssp(g, src, cfg);
+    PrimitiveRun {
+        primitive: "SSSP",
+        dataset: name.to_string(),
+        runtime_ms: r.runtime_ms,
+        mteps: r.mteps(),
+        warp_efficiency: r.warp_efficiency,
+        result: r,
+    }
+}
+
+pub fn run_bc(name: &str, g: &Csr, cfg: &Config) -> PrimitiveRun {
+    let src = pick_source(g);
+    let (_, r) = bc::bc_from_source(g, src, cfg);
+    PrimitiveRun {
+        primitive: "BC",
+        dataset: name.to_string(),
+        runtime_ms: r.runtime_ms,
+        mteps: stats::mteps(2 * r.edges_visited, r.runtime_ms), // paper: 2|E|/t
+        warp_efficiency: r.warp_efficiency,
+        result: r,
+    }
+}
+
+pub fn run_pagerank(name: &str, g: &Csr, cfg: &Config) -> PrimitiveRun {
+    // paper: "All PageRank implementations were executed with maximum
+    // iteration set to 1" for the cross-library comparison.
+    let mut cfg = cfg.clone();
+    cfg.pr_max_iters = 1;
+    let (_, r) = pagerank::pagerank(g, &cfg);
+    PrimitiveRun {
+        primitive: "PageRank",
+        dataset: name.to_string(),
+        runtime_ms: r.runtime_ms,
+        mteps: r.mteps(),
+        warp_efficiency: r.warp_efficiency,
+        result: r,
+    }
+}
+
+pub fn run_cc(name: &str, g: &Csr, cfg: &Config) -> PrimitiveRun {
+    let (_, r) = cc::cc(g, cfg);
+    PrimitiveRun {
+        primitive: "CC",
+        dataset: name.to_string(),
+        runtime_ms: r.runtime_ms,
+        mteps: r.mteps(),
+        warp_efficiency: r.warp_efficiency,
+        result: r,
+    }
+}
+
+pub fn run_tc(name: &str, g: &Csr, cfg: &Config) -> PrimitiveRun {
+    let (_, r) = tc::tc_intersect_filtered(g, cfg);
+    PrimitiveRun {
+        primitive: "TC",
+        dataset: name.to_string(),
+        runtime_ms: r.runtime_ms,
+        mteps: r.mteps(),
+        warp_efficiency: r.warp_efficiency,
+        result: r,
+    }
+}
+
+/// Baseline timings for a dataset (ms), keyed by comparator label.
+pub struct BaselineTimes {
+    pub bfs_serial_ms: f64,      // BGL-like
+    pub bfs_parallel_ms: f64,    // Ligra/Galois-like
+    pub bfs_quadratic_ms: f64,   // Medusa-like
+    pub bfs_gas_ms: f64,         // PowerGraph-like
+    pub sssp_dijkstra_ms: f64,   // BGL-like
+    pub sssp_bf_ms: f64,         // Ligra-like (Bellman-Ford)
+    pub sssp_gas_ms: f64,        // PowerGraph-like
+    pub pr_serial_ms: f64,       // BGL-like
+    pub pr_gas_ms: f64,          // PowerGraph/Ligra-like
+    pub cc_unionfind_ms: f64,    // hardwired CPU
+    pub bc_brandes_src_ms: f64,  // single-source Brandes (serial)
+}
+
+pub fn run_baselines(g: &Csr, g_weighted: &Csr, workers: usize) -> BaselineTimes {
+    use crate::util::timer::time_ms;
+    let src = pick_source(g);
+    let (_, bfs_serial_ms) = time_ms(|| baselines::bfs_serial::bfs_serial(g, src));
+    let (_, bfs_parallel_ms) = time_ms(|| baselines::bfs_parallel::bfs_parallel(g, src, workers));
+    let (_, bfs_quadratic_ms) = time_ms(|| baselines::bfs_quadratic::bfs_quadratic(g, src, workers));
+    let (_, bfs_gas_ms) = time_ms(|| baselines::gas_full::gas_bfs(g, src, workers));
+    let (_, sssp_dijkstra_ms) = time_ms(|| baselines::dijkstra::dijkstra(g_weighted, src));
+    let (_, sssp_bf_ms) = time_ms(|| baselines::bellman_ford::bellman_ford(g_weighted, src, workers));
+    let (_, sssp_gas_ms) = time_ms(|| baselines::gas_full::gas_sssp(g_weighted, src, workers));
+    let (_, pr_serial_ms) = time_ms(|| baselines::pagerank_serial::pagerank_serial(g, 0.85, 1, 0.0));
+    let (_, pr_gas_ms) = time_ms(|| baselines::gas_full::gas_pagerank(g, 0.85, 1, workers));
+    let (_, cc_unionfind_ms) = time_ms(|| baselines::cc_unionfind::cc_unionfind(g));
+    let (_, bc_brandes_src_ms) = time_ms(|| single_source_brandes(g, src));
+    BaselineTimes {
+        bfs_serial_ms,
+        bfs_parallel_ms,
+        bfs_quadratic_ms,
+        bfs_gas_ms,
+        sssp_dijkstra_ms,
+        sssp_bf_ms,
+        sssp_gas_ms,
+        pr_serial_ms,
+        pr_gas_ms,
+        cc_unionfind_ms,
+        bc_brandes_src_ms,
+    }
+}
+
+/// One-source Brandes slice (comparable to `bc_from_source`).
+fn single_source_brandes(g: &Csr, s: VertexId) -> Vec<f64> {
+    use std::collections::VecDeque;
+    let n = g.num_vertices;
+    let mut stack = Vec::new();
+    let mut preds: Vec<Vec<VertexId>> = vec![Vec::new(); n];
+    let mut sigma = vec![0u64; n];
+    let mut dist = vec![i64::MAX; n];
+    sigma[s as usize] = 1;
+    dist[s as usize] = 0;
+    let mut q = VecDeque::new();
+    q.push_back(s);
+    while let Some(v) = q.pop_front() {
+        stack.push(v);
+        for &w in g.neighbors(v) {
+            if dist[w as usize] == i64::MAX {
+                dist[w as usize] = dist[v as usize] + 1;
+                q.push_back(w);
+            }
+            if dist[w as usize] == dist[v as usize] + 1 {
+                sigma[w as usize] += sigma[v as usize];
+                preds[w as usize].push(v);
+            }
+        }
+    }
+    let mut delta = vec![0.0f64; n];
+    while let Some(w) = stack.pop() {
+        for &v in &preds[w as usize] {
+            delta[v as usize] +=
+                sigma[v as usize] as f64 / sigma[w as usize] as f64 * (1.0 + delta[w as usize]);
+        }
+    }
+    delta
+}
+
+/// Load the unweighted + weighted variants of a dataset analog.
+pub fn load_pair(name: &str) -> (Csr, Csr) {
+    (datasets::load(name, false), datasets::load(name, true))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suite_runs_on_small_dataset() {
+        let cfg = Config::default();
+        let g = datasets::load("kron_g500-logn8", false);
+        let gw = datasets::load("kron_g500-logn8", true);
+        let b = run_bfs("kron8", &g, &cfg);
+        assert!(b.runtime_ms > 0.0);
+        assert!(b.result.edges_visited > 0);
+        let s = run_sssp("kron8", &gw, &cfg);
+        assert!(s.runtime_ms > 0.0);
+        let p = run_pagerank("kron8", &g, &cfg);
+        assert_eq!(p.primitive, "PageRank");
+    }
+
+    #[test]
+    fn baselines_all_run() {
+        let g = datasets::load("kron_g500-logn8", false);
+        let gw = datasets::load("kron_g500-logn8", true);
+        let b = run_baselines(&g, &gw, 2);
+        assert!(b.bfs_serial_ms >= 0.0);
+        assert!(b.sssp_bf_ms >= 0.0);
+    }
+}

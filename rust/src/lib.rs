@@ -1,0 +1,32 @@
+//! # gunrock-rs — Gunrock: GPU Graph Analytics, reproduced
+//!
+//! A CPU-simulated, three-layer (Rust + JAX + Pallas) reproduction of
+//! *Gunrock: GPU Graph Analytics* (Wang et al., ACM TOPC 2017).
+//!
+//! The paper's data-centric, frontier-oriented programming model lives in
+//! this crate: frontiers ([`frontier`]), the four graph operators
+//! ([`operators`]), GPU workload-mapping strategies executed on a
+//! virtual-warp model ([`load_balance`], [`gpu_sim`]), the enactor/problem
+//! architecture ([`enactor`]), and the paper's graph primitives
+//! ([`primitives`]) with their CPU comparators ([`baselines`]).
+//!
+//! Dense fixed-shape iteration steps (PageRank, pull-BFS) can also execute
+//! through AOT-compiled XLA artifacts authored in JAX/Pallas at build time
+//! ([`runtime`]); Python is never on the request path.
+//!
+//! See DESIGN.md for the paper -> module map and EXPERIMENTS.md for
+//! paper-vs-measured results on every table and figure.
+
+pub mod baselines;
+pub mod config;
+pub mod enactor;
+pub mod frontier;
+pub mod gpu_sim;
+pub mod graph;
+pub mod harness;
+pub mod load_balance;
+pub mod multi_gpu;
+pub mod operators;
+pub mod primitives;
+pub mod runtime;
+pub mod util;

@@ -1,0 +1,71 @@
+//! Merge-path partition search (Davidson et al. [16], Baxter's
+//! load-balanced search [5]) — finds, for a target output position, which
+//! input item produces it, by binary searching an arithmetic progression
+//! of `0, N, 2N, ...` against the scanned degree array (paper §5.1.3,
+//! Fig 11).
+
+/// Given exclusive-scanned offsets (len = items + 1, offsets[items] =
+/// total), find the item index whose range contains output position `pos`
+/// — i.e. the greatest i with offsets[i] <= pos.
+#[inline]
+pub fn search(offsets: &[usize], pos: usize) -> usize {
+    debug_assert!(!offsets.is_empty());
+    // partition_point returns first i with offsets[i] > pos; item is i-1.
+    let i = offsets.partition_point(|&o| o <= pos);
+    i.saturating_sub(1)
+}
+
+/// Compute the starting (item, within-item offset) pairs for `parts`
+/// equal-output-size chunks: the "global sorted search of an arithmetic
+/// progression in the output offset array" from §5.1.3.
+pub fn partition_output(offsets: &[usize], parts: usize) -> Vec<(usize, usize)> {
+    let total = *offsets.last().unwrap_or(&0);
+    let parts = parts.max(1);
+    let per = total.div_ceil(parts.max(1)).max(1);
+    let mut out = Vec::with_capacity(parts);
+    for p in 0..parts {
+        let pos = (p * per).min(total);
+        let item = search(offsets, pos);
+        out.push((item, pos));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn search_finds_owner() {
+        // degrees [2, 0, 3, 1] -> offsets [0, 2, 2, 5, 6]
+        let offsets = [0usize, 2, 2, 5, 6];
+        assert_eq!(search(&offsets, 0), 0);
+        assert_eq!(search(&offsets, 1), 0);
+        assert_eq!(search(&offsets, 2), 2); // item 1 empty -> item 2 owns pos 2
+        assert_eq!(search(&offsets, 4), 2);
+        assert_eq!(search(&offsets, 5), 3);
+    }
+
+    #[test]
+    fn partition_covers_output() {
+        let offsets = [0usize, 10, 10, 30, 31, 100];
+        let parts = partition_output(&offsets, 4);
+        assert_eq!(parts.len(), 4);
+        assert_eq!(parts[0].1, 0);
+        // positions non-decreasing, each a valid output index
+        for w in parts.windows(2) {
+            assert!(w[0].1 <= w[1].1);
+        }
+        for &(item, pos) in &parts {
+            assert!(offsets[item] <= pos && pos <= offsets[item + 1], "{item} {pos}");
+        }
+    }
+
+    #[test]
+    fn degenerate_empty() {
+        let offsets = [0usize];
+        assert_eq!(search(&offsets, 0), 0);
+        let parts = partition_output(&offsets, 3);
+        assert!(parts.iter().all(|&(i, p)| i == 0 && p == 0));
+    }
+}

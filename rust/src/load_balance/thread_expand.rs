@@ -1,0 +1,99 @@
+//! Static workload mapping ("ThreadExpand", paper §5.1.1): one input item
+//! per (virtual) thread; each thread serially walks its neighbor list.
+//!
+//! Negligible balancing overhead, but lanes in a 32-wide virtual warp run
+//! in lockstep for max(deg) steps while carrying only sum(deg) useful
+//! lane-cycles — severe efficiency loss on skewed degree distributions,
+//! which is exactly what Table 8 / Fig 20 measure.
+
+use crate::gpu_sim::{WarpCounters, WARP_WIDTH};
+use crate::graph::{Csr, VertexId};
+use crate::load_balance::EdgeVisit;
+use crate::util::par;
+
+pub fn expand<F: EdgeVisit>(
+    g: &Csr,
+    items: &[VertexId],
+    workers: usize,
+    counters: &WarpCounters,
+    visit: F,
+) -> Vec<VertexId> {
+    let chunks = par::run_partitioned(items.len(), workers, |_, start, end| {
+        let mut out = Vec::new();
+        let mut edges = 0u64;
+        // Virtual-warp accounting: 32 consecutive items run in lockstep.
+        let mut w = start;
+        while w < end {
+            let we = (w + WARP_WIDTH).min(end);
+            let mut max_deg = 0usize;
+            let mut sum_deg = 0usize;
+            for (idx, &v) in items[w..we].iter().enumerate() {
+                let deg = g.degree(v);
+                max_deg = max_deg.max(deg);
+                sum_deg += deg;
+                for e in g.edge_range(v) {
+                    visit(w + idx, v, e, g.col_indices[e], &mut out);
+                }
+            }
+            edges += sum_deg as u64;
+            if max_deg > 0 {
+                counters.record_simd(sum_deg as u64, max_deg as u64);
+            }
+            w = we;
+        }
+        counters.add_edges(edges);
+        out
+    });
+    let mut out = Vec::with_capacity(chunks.iter().map(Vec::len).sum());
+    for c in chunks {
+        out.extend(c);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder;
+
+    #[test]
+    fn visits_all_edges_in_order_per_item() {
+        let g = builder::from_edges(4, &[(0, 1), (0, 2), (1, 3), (3, 0)]);
+        let counters = WarpCounters::new();
+        let out = expand(&g, &[0, 1, 3], 2, &counters, |_, s, _, d, out: &mut Vec<u32>| {
+            out.push(s * 10 + d);
+        });
+        assert_eq!(out, vec![1, 2, 13, 30]);
+        assert_eq!(counters.edges(), 4);
+    }
+
+    #[test]
+    fn skewed_degrees_hurt_efficiency() {
+        // One hub of degree 63 among 31 degree-1 vertices: lockstep costs
+        // 63 warp-steps for 63+31 active lanes.
+        let mut edges = Vec::new();
+        for d in 0..63u32 {
+            edges.push((0u32, 64 + d));
+        }
+        for v in 1..32u32 {
+            edges.push((v, 0));
+        }
+        let g = builder::from_edges(128, &edges);
+        let counters = WarpCounters::new();
+        let items: Vec<u32> = (0..32).collect();
+        expand(&g, &items, 1, &counters, |_, _, _, _, _: &mut Vec<u32>| {});
+        let eff = counters.warp_efficiency();
+        assert!(eff < 0.1, "lockstep efficiency should collapse, got {eff}");
+    }
+
+    #[test]
+    fn uniform_degrees_high_efficiency() {
+        // 64 vertices in a ring: every degree == 1.
+        let edges: Vec<(u32, u32)> = (0..64u32).map(|v| (v, (v + 1) % 64)).collect();
+        let g = builder::from_edges(64, &edges);
+        let counters = WarpCounters::new();
+        let items: Vec<u32> = (0..64).collect();
+        expand(&g, &items, 2, &counters, |_, _, _, _, _: &mut Vec<u32>| {});
+        assert!(counters.warp_efficiency() > 0.99);
+    }
+}

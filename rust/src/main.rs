@@ -1,0 +1,280 @@
+//! gunrock CLI — the L3 coordinator entry point.
+//!
+//! Subcommands:
+//!   run <primitive>    run a primitive on a dataset analog or graph file
+//!   generate           emit a synthetic dataset to an edge-list file
+//!   info               print dataset topology properties (Table 4 columns)
+//!   offload <what>     run PageRank / pull-BFS through the AOT XLA artifact
+//!   datasets           list registered paper-dataset analogs
+//!
+//! Examples:
+//!   gunrock run bfs --dataset soc-orkut --direction-optimized
+//!   gunrock run sssp --dataset roadnet_USA --strategy twc
+//!   gunrock offload pagerank --dataset kron_g500-logn10
+//!   gunrock generate --dataset rmat_s22_e64 --out /tmp/rmat.txt
+
+use anyhow::{bail, Context, Result};
+
+use gunrock::config::{cli, Config};
+use gunrock::graph::{datasets, io, properties};
+use gunrock::harness::suite;
+use gunrock::primitives::{bfs, cc, color, label_propagation, mst, pagerank, sssp, tc, traversal_extras, wtf};
+
+const BOOL_FLAGS: &[&str] =
+    &["direction-optimized", "idempotence", "weighted", "undirected", "pull"];
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() {
+    println!(
+        "gunrock — Gunrock: GPU Graph Analytics (TOPC 2017), CPU-simulated reproduction\n\
+         \n\
+         USAGE: gunrock <subcommand> [flags]\n\
+         \n\
+         SUBCOMMANDS\n\
+           run <bfs|sssp|bc|pagerank|cc|tc|wtf|mst|color|mis|lp|radii>\n\
+                                                  run a primitive\n\
+           offload <pagerank|bfs>                 run through the AOT XLA artifact\n\
+           info                                   dataset topology properties\n\
+           generate                               write a dataset analog to a file\n\
+           datasets                               list paper-dataset analogs\n\
+         \n\
+         COMMON FLAGS\n\
+           --dataset <name>      paper dataset analog (see `gunrock datasets`)\n\
+           --graph <path>        load .mtx or edge-list file instead\n\
+           --config <path>       TOML config file\n\
+           --threads <n>         worker threads (default: all cores)\n\
+           --strategy <s>        ThreadExpand|TWC|LB|LB_LIGHT|LB_CULL (default auto)\n\
+           --src <v>             source vertex (default: max-degree vertex)\n\
+           --direction-optimized  enable push/pull switching (BFS)\n\
+           --idempotence          enable idempotent advance (BFS)\n\
+           --do-a <f> --do-b <f>  direction heuristic parameters\n\
+           --delta <n>            SSSP near/far delta (0 = Bellman-Ford)\n"
+    );
+}
+
+fn build_config(p: &cli::ParsedArgs) -> Result<Config> {
+    let mut cfg = match p.get("config") {
+        Some(path) => Config::from_file(std::path::Path::new(path))?,
+        None => Config::default(),
+    };
+    if let Some(t) = p.get_parse::<usize>("threads")? {
+        cfg.threads = t;
+    }
+    if let Some(s) = p.get("strategy") {
+        cfg.strategy = Some(s.parse().map_err(anyhow::Error::msg)?);
+    }
+    if p.get_bool("direction-optimized") {
+        cfg.direction_optimized = true;
+    }
+    if p.get_bool("idempotence") {
+        cfg.idempotence = true;
+    }
+    if let Some(v) = p.get_parse::<f64>("do-a")? {
+        cfg.do_a = v;
+    }
+    if let Some(v) = p.get_parse::<f64>("do-b")? {
+        cfg.do_b = v;
+    }
+    if let Some(v) = p.get_parse::<u64>("delta")? {
+        cfg.sssp_delta = v;
+    }
+    if let Some(v) = p.get("artifacts-dir") {
+        cfg.artifacts_dir = v.to_string();
+    }
+    Ok(cfg)
+}
+
+fn load_graph(p: &cli::ParsedArgs, weighted: bool) -> Result<(String, gunrock::graph::Csr)> {
+    if let Some(path) = p.get("graph") {
+        let g = io::load_graph(std::path::Path::new(path), p.get_bool("undirected"))?;
+        let mut g = g;
+        if weighted && !g.is_weighted() {
+            datasets::attach_uniform_weights(&mut g, 42);
+        }
+        Ok((path.to_string(), g))
+    } else {
+        let name = p.get_or("dataset", "rmat_s22_e64").to_string();
+        Ok((name.clone(), datasets::load(&name, weighted)))
+    }
+}
+
+fn run(args: &[String]) -> Result<()> {
+    let p = cli::parse(args, BOOL_FLAGS)?;
+    match p.subcommand.as_deref() {
+        None | Some("help") | Some("--help") => {
+            usage();
+            Ok(())
+        }
+        Some("datasets") => {
+            println!("paper dataset -> analog (see graph::datasets)");
+            for name in datasets::TABLE4 {
+                let spec = datasets::spec(name);
+                println!("  {:18} {:?}: {}", name, spec.class, spec.description);
+            }
+            for name in datasets::WTF_DATASETS {
+                let spec = datasets::spec(name);
+                println!("  {:18} {:?}: {}", name, spec.class, spec.description);
+            }
+            Ok(())
+        }
+        Some("info") => {
+            let (name, g) = load_graph(&p, false)?;
+            let props = properties::analyze(&g);
+            println!("dataset: {name}");
+            println!("  vertices:        {}", props.vertices);
+            println!("  edges:           {}", props.edges);
+            println!("  max degree:      {}", props.max_degree);
+            println!("  avg degree:      {:.2}", props.avg_degree);
+            println!("  degree stddev:   {:.2}", props.degree_stddev);
+            println!("  pseudo-diameter: {}", props.pseudo_diameter);
+            println!("  deg<64 fraction: {:.2}", props.frac_low_degree);
+            println!("  class:           {}", if props.is_scale_free() { "scale-free" } else { "mesh-like" });
+            Ok(())
+        }
+        Some("generate") => {
+            let (name, g) = load_graph(&p, p.get_bool("weighted"))?;
+            let out = p.get("out").context("--out <path> required")?;
+            io::write_edge_list(std::path::Path::new(out), &g.to_coo())?;
+            println!("wrote {name} analog ({} vertices, {} edges) to {out}", g.num_vertices, g.num_edges());
+            Ok(())
+        }
+        Some("run") => {
+            let prim = p.positionals.first().context("run <primitive>")?.clone();
+            let cfg = build_config(&p)?;
+            let weighted = matches!(prim.as_str(), "sssp" | "mst");
+            let (name, g) = load_graph(&p, weighted)?;
+            let src = p.get_parse::<u32>("src")?.unwrap_or_else(|| suite::pick_source(&g));
+            println!(
+                "{} on {name}: {} vertices, {} edges, {} threads",
+                prim, g.num_vertices, g.num_edges(), cfg.effective_threads()
+            );
+            match prim.as_str() {
+                "bfs" => {
+                    let (prob, st) = bfs::bfs(&g, src, &cfg);
+                    let reached = prob.labels.iter().filter(|&&d| d != bfs::INFINITY_DEPTH).count();
+                    report(&st.result, &format!(
+                        "src={src} reached={reached} depth_max={} push_iters={} pull_iters={}",
+                        prob.labels.iter().filter(|&&d| d != bfs::INFINITY_DEPTH).max().unwrap_or(&0),
+                        st.push_iterations, st.pull_iterations
+                    ));
+                }
+                "sssp" => {
+                    let (prob, r) = sssp::sssp(&g, src, &cfg);
+                    let reached = prob.dist.iter().filter(|&&d| d < sssp::INFINITY_DIST).count();
+                    report(&r, &format!("src={src} reached={reached}"));
+                }
+                "bc" => {
+                    let (_, r) = gunrock::primitives::bc::bc_from_source(&g, src, &cfg);
+                    report(&r, &format!("src={src}"));
+                }
+                "pagerank" | "pr" => {
+                    let (prob, r) = pagerank::pagerank(&g, &cfg);
+                    let top: Vec<usize> = top_k(&prob.ranks, 5);
+                    report(&r, &format!("iters={} top5={top:?}", prob.iterations));
+                }
+                "cc" => {
+                    let (prob, r) = cc::cc(&g, &cfg);
+                    report(&r, &format!("components={}", prob.num_components));
+                }
+                "tc" => {
+                    let (res, r) = tc::tc_intersect_filtered(&g, &cfg);
+                    report(&r, &format!("triangles={}", res.triangles));
+                }
+                "wtf" => {
+                    let (res, r) = wtf::wtf(&g, src, 100, 10, &cfg);
+                    report(&r, &format!(
+                        "user={src} recs={:?} (ppr {:.2}ms, cot {:.2}ms, money {:.2}ms)",
+                        res.recommendations, res.ppr_ms, res.cot_ms, res.money_ms
+                    ));
+                }
+                "mst" => {
+                    let mut gw = g.clone();
+                    if !gw.is_weighted() {
+                        datasets::attach_uniform_weights(&mut gw, cfg.seed);
+                    }
+                    let (res, r) = mst::mst(&gw, &cfg);
+                    report(&r, &format!("forest_edges={} weight={}", res.tree_edges.len(), res.total_weight));
+                }
+                "color" => {
+                    let (res, r) = color::color(&g, &cfg);
+                    report(&r, &format!("colors={}", res.num_colors));
+                }
+                "mis" => {
+                    let (in_mis, r) = color::mis(&g, &cfg);
+                    report(&r, &format!("independent={}", in_mis.iter().filter(|&&b| b).count()));
+                }
+                "lp" | "label-propagation" => {
+                    let (res, r) = label_propagation::label_propagation(&g, &cfg);
+                    report(&r, &format!("communities={} iters={}", res.num_communities, res.iterations));
+                }
+                "radii" => {
+                    let (radius, eccs) = traversal_extras::estimate_radius(&g, 8, &cfg, cfg.seed);
+                    println!("  pseudo-radius {radius} from samples {eccs:?}");
+                }
+                other => bail!("unknown primitive {other}"),
+            }
+            Ok(())
+        }
+        Some("offload") => {
+            let what = p.positionals.first().context("offload <pagerank|bfs>")?.clone();
+            let cfg = build_config(&p)?;
+            // AOT artifacts exist at n in {1024, 4096}; default to a graph
+            // that fits the small variant.
+            let name = p.get_or("dataset", "grid_1k").to_string();
+            let g = datasets::load(&name, false);
+            let mut rt = gunrock::runtime::XlaRuntime::new(std::path::Path::new(&cfg.artifacts_dir))?;
+            println!("PJRT platform: {}", rt.platform());
+            match what.as_str() {
+                "pagerank" | "pr" => {
+                    let t = gunrock::util::timer::Timer::start();
+                    let (ranks, iters) = rt.pagerank(&g, 1e-6, 50)?;
+                    println!(
+                        "XLA PageRank on {name}: {} vertices, {iters} iterations, {:.2} ms, top5={:?}",
+                        g.num_vertices, t.elapsed_ms(),
+                        top_k(&ranks.iter().map(|&x| x as f64).collect::<Vec<_>>(), 5)
+                    );
+                }
+                "bfs" => {
+                    let src = p.get_parse::<u32>("src")?.unwrap_or_else(|| suite::pick_source(&g));
+                    let t = gunrock::util::timer::Timer::start();
+                    let (depth, iters) = rt.bfs_pull(&g, src, 1000)?;
+                    let reached = depth.iter().filter(|&&d| d != u32::MAX).count();
+                    println!(
+                        "XLA pull-BFS on {name}: src={src} reached={reached} iters={iters} {:.2} ms",
+                        t.elapsed_ms()
+                    );
+                }
+                other => bail!("unknown offload target {other}"),
+            }
+            Ok(())
+        }
+        Some(other) => {
+            usage();
+            bail!("unknown subcommand {other}");
+        }
+    }
+}
+
+fn top_k(xs: &[f64], k: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..xs.len()).collect();
+    idx.sort_unstable_by(|&a, &b| xs[b].partial_cmp(&xs[a]).unwrap());
+    idx.truncate(k);
+    idx
+}
+
+fn report(r: &gunrock::enactor::RunResult, extra: &str) {
+    println!(
+        "  runtime {:.3} ms | {:.1} MTEPS | {} iterations | warp efficiency {:.2}% | {extra}",
+        r.runtime_ms,
+        r.mteps(),
+        r.num_iterations(),
+        r.warp_efficiency * 100.0
+    );
+}

@@ -1,0 +1,158 @@
+//! Multi-GPU scale-out simulation (paper §8.2.1 / Pan et al. [56]): the
+//! single-device data-centric core stays unchanged; a partition layer
+//! assigns vertices to virtual devices and a communication layer exchanges
+//! remote frontiers between BSP supersteps, accounting bytes moved —
+//! reproducing the paper's "tradeoffs between computation and
+//! communication for inter-GPU data exchange".
+
+pub mod partition;
+
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+
+use crate::config::Config;
+use crate::graph::{Csr, VertexId};
+use crate::util::timer::Timer;
+
+pub use partition::{partition, PartitionMethod, Partitioning};
+
+/// Per-device + communication statistics for a multi-device run.
+#[derive(Clone, Debug, Default)]
+pub struct MultiGpuStats {
+    pub devices: usize,
+    pub runtime_ms: f64,
+    pub iterations: usize,
+    /// Edges relaxed per device (computation balance).
+    pub edges_per_device: Vec<u64>,
+    /// Total remote-frontier vertices exchanged (communication volume).
+    pub vertices_exchanged: u64,
+    /// Bytes moved between devices (4 B per vertex id + 4 B per label).
+    pub bytes_exchanged: u64,
+}
+
+impl MultiGpuStats {
+    /// Computation balance: min/max edges across devices (1.0 = perfect).
+    pub fn compute_balance(&self) -> f64 {
+        let max = self.edges_per_device.iter().copied().max().unwrap_or(0);
+        let min = self.edges_per_device.iter().copied().min().unwrap_or(0);
+        if max == 0 {
+            1.0
+        } else {
+            min as f64 / max as f64
+        }
+    }
+}
+
+/// Multi-device BFS: each virtual device owns a vertex partition and
+/// expands only its local frontier slice; discoveries of remote vertices
+/// are buffered and exchanged at the superstep barrier (the paper's
+/// multi-GPU execution model with an unchanged single-device core).
+pub fn multi_gpu_bfs(
+    g: &Csr,
+    src: VertexId,
+    parts: &Partitioning,
+    _config: &Config,
+) -> (Vec<u32>, MultiGpuStats) {
+    let n = g.num_vertices;
+    let d = parts.num_parts;
+    let t = Timer::start();
+
+    let labels: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(u32::MAX)).collect();
+    labels[src as usize].store(0, Ordering::Relaxed);
+    let edges_per_device: Vec<AtomicU64> = (0..d).map(|_| AtomicU64::new(0)).collect();
+    let mut vertices_exchanged = 0u64;
+
+    // per-device local frontiers
+    let mut frontiers: Vec<Vec<VertexId>> = vec![Vec::new(); d];
+    frontiers[parts.owner(src)].push(src);
+
+    let mut depth = 0u32;
+    let mut iterations = 0usize;
+    while frontiers.iter().any(|f| !f.is_empty()) {
+        iterations += 1;
+        depth += 1;
+        // Each device expands its local frontier; remote discoveries go
+        // to that device's outbox (one outbox per peer).
+        let mut outboxes: Vec<Vec<Vec<VertexId>>> = vec![vec![Vec::new(); d]; d];
+        let mut next_local: Vec<Vec<VertexId>> = vec![Vec::new(); d];
+        for dev in 0..d {
+            let frontier = std::mem::take(&mut frontiers[dev]);
+            for &v in &frontier {
+                edges_per_device[dev].fetch_add(g.degree(v) as u64, Ordering::Relaxed);
+                for &u in g.neighbors(v) {
+                    if labels[u as usize]
+                        .compare_exchange(u32::MAX, depth, Ordering::Relaxed, Ordering::Relaxed)
+                        .is_ok()
+                    {
+                        let owner = parts.owner(u);
+                        if owner == dev {
+                            next_local[dev].push(u);
+                        } else {
+                            outboxes[dev][owner].push(u);
+                        }
+                    }
+                }
+            }
+        }
+        // Superstep barrier: exchange outboxes.
+        for dev in 0..d {
+            frontiers[dev] = std::mem::take(&mut next_local[dev]);
+            for sender in 0..d {
+                let incoming = std::mem::take(&mut outboxes[sender][dev]);
+                vertices_exchanged += incoming.len() as u64;
+                frontiers[dev].extend(incoming);
+            }
+        }
+    }
+
+    let stats = MultiGpuStats {
+        devices: d,
+        runtime_ms: t.elapsed_ms(),
+        iterations,
+        edges_per_device: edges_per_device.into_iter().map(|a| a.into_inner()).collect(),
+        vertices_exchanged,
+        bytes_exchanged: vertices_exchanged * 8,
+    };
+    (labels.into_iter().map(|a| a.into_inner()).collect(), stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::bfs_serial::bfs_serial;
+    use crate::graph::datasets;
+
+    #[test]
+    fn multi_device_bfs_matches_serial() {
+        let g = datasets::load("kron_g500-logn10", false);
+        let want = bfs_serial(&g, 0);
+        for d in [1usize, 2, 4] {
+            for method in [PartitionMethod::Random, PartitionMethod::Contiguous] {
+                let parts = partition(&g, d, method, 42);
+                let (got, stats) = multi_gpu_bfs(&g, 0, &parts, &Config::default());
+                assert_eq!(got, want, "d={d} {method:?}");
+                assert_eq!(stats.devices, d);
+                if d == 1 {
+                    assert_eq!(stats.vertices_exchanged, 0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn communication_grows_with_devices() {
+        let g = datasets::load("kron_g500-logn10", false);
+        let p2 = partition(&g, 2, PartitionMethod::Random, 42);
+        let p4 = partition(&g, 4, PartitionMethod::Random, 42);
+        let (_, s2) = multi_gpu_bfs(&g, 0, &p2, &Config::default());
+        let (_, s4) = multi_gpu_bfs(&g, 0, &p4, &Config::default());
+        assert!(s4.vertices_exchanged > s2.vertices_exchanged);
+    }
+
+    #[test]
+    fn random_partition_balances_compute() {
+        let g = datasets::load("rmat_s22_e64", false);
+        let parts = partition(&g, 4, PartitionMethod::Random, 7);
+        let (_, stats) = multi_gpu_bfs(&g, crate::harness::suite::pick_source(&g), &parts, &Config::default());
+        assert!(stats.compute_balance() > 0.5, "balance {}", stats.compute_balance());
+    }
+}

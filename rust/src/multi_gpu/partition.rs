@@ -1,0 +1,124 @@
+//! Vertex partitioning for the multi-device simulation: random hashing
+//! (the paper's multi-GPU work found random vertex assignment gives the
+//! best compute balance on scale-free graphs) vs contiguous ranges
+//! (locality-preserving, less communication on meshes) — the partitioning
+//! tradeoff §8.2.1 poses as an open question.
+
+use crate::graph::{Csr, VertexId};
+use crate::util::rng::Pcg32;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PartitionMethod {
+    Random,
+    Contiguous,
+    /// Greedy degree-balanced: assign vertices (heaviest first) to the
+    /// device with the least total degree — a cheap vertex-cut-flavored
+    /// balance heuristic.
+    DegreeBalanced,
+}
+
+pub struct Partitioning {
+    pub num_parts: usize,
+    pub assignment: Vec<u16>,
+    /// Fraction of edges crossing partitions.
+    pub edge_cut: f64,
+}
+
+impl Partitioning {
+    #[inline]
+    pub fn owner(&self, v: VertexId) -> usize {
+        self.assignment[v as usize] as usize
+    }
+}
+
+pub fn partition(g: &Csr, parts: usize, method: PartitionMethod, seed: u64) -> Partitioning {
+    assert!(parts >= 1 && parts <= u16::MAX as usize);
+    let n = g.num_vertices;
+    let assignment: Vec<u16> = match method {
+        PartitionMethod::Random => {
+            let mut rng = Pcg32::new(seed);
+            (0..n).map(|_| rng.below(parts as u32) as u16).collect()
+        }
+        PartitionMethod::Contiguous => {
+            let per = n.div_ceil(parts);
+            (0..n).map(|v| (v / per) as u16).collect()
+        }
+        PartitionMethod::DegreeBalanced => {
+            let mut order: Vec<VertexId> = (0..n as VertexId).collect();
+            order.sort_unstable_by_key(|&v| std::cmp::Reverse(g.degree(v)));
+            let mut load = vec![0u64; parts];
+            let mut assignment = vec![0u16; n];
+            for v in order {
+                let dev = (0..parts).min_by_key(|&p| load[p]).unwrap();
+                assignment[v as usize] = dev as u16;
+                load[dev] += g.degree(v) as u64 + 1;
+            }
+            assignment
+        }
+    };
+    // edge cut
+    let mut cut = 0u64;
+    for v in 0..n as VertexId {
+        for &u in g.neighbors(v) {
+            if assignment[v as usize] != assignment[u as usize] {
+                cut += 1;
+            }
+        }
+    }
+    let edge_cut = if g.num_edges() == 0 { 0.0 } else { cut as f64 / g.num_edges() as f64 };
+    Partitioning { num_parts: parts, assignment, edge_cut }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::datasets;
+    use crate::graph::generators::{grid::GridParams, grid2d};
+
+    #[test]
+    fn all_methods_cover_all_parts() {
+        let g = datasets::load("kron_g500-logn9", false);
+        for m in [PartitionMethod::Random, PartitionMethod::Contiguous, PartitionMethod::DegreeBalanced] {
+            let p = partition(&g, 4, m, 1);
+            let mut seen = [false; 4];
+            for &a in &p.assignment {
+                seen[a as usize] = true;
+            }
+            assert!(seen.iter().all(|&s| s), "{m:?}");
+            assert!((0.0..=1.0).contains(&p.edge_cut));
+        }
+    }
+
+    #[test]
+    fn contiguous_cuts_fewer_mesh_edges_than_random() {
+        let g = grid2d(&GridParams { width: 64, height: 64, ..Default::default() });
+        let pr = partition(&g, 4, PartitionMethod::Random, 5);
+        let pc = partition(&g, 4, PartitionMethod::Contiguous, 5);
+        assert!(
+            pc.edge_cut < pr.edge_cut / 2.0,
+            "contiguous {} vs random {}",
+            pc.edge_cut,
+            pr.edge_cut
+        );
+    }
+
+    #[test]
+    fn degree_balanced_balances_degrees() {
+        let g = datasets::load("rmat_s22_e64", false);
+        let p = partition(&g, 4, PartitionMethod::DegreeBalanced, 3);
+        let mut load = [0u64; 4];
+        for v in 0..g.num_vertices as u32 {
+            load[p.owner(v)] += g.degree(v) as u64;
+        }
+        let max = *load.iter().max().unwrap() as f64;
+        let min = *load.iter().min().unwrap() as f64;
+        assert!(min / max > 0.9, "{load:?}");
+    }
+
+    #[test]
+    fn single_part_zero_cut() {
+        let g = datasets::load("kron_g500-logn8", false);
+        let p = partition(&g, 1, PartitionMethod::Random, 1);
+        assert_eq!(p.edge_cut, 0.0);
+    }
+}

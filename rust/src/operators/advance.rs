@@ -1,0 +1,255 @@
+//! The advance operator (paper §3, §4.1): visit the neighbor list of every
+//! item in the input frontier, applying a fused per-edge functor, and
+//! produce an output frontier. Supports the four frontier-type
+//! combinations (V-to-V, V-to-E, E-to-V, E-to-E), push and pull
+//! directions, and idempotent (atomic-free) operation.
+
+use crate::frontier::{Frontier, FrontierKind};
+use crate::graph::{Csr, VertexId};
+use crate::load_balance::{self, StrategyKind};
+use crate::operators::OpContext;
+use crate::util::bitset::AtomicBitset;
+use crate::util::par;
+
+/// What the output frontier contains.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdvanceType {
+    V2V,
+    V2E,
+    E2V,
+    E2E,
+}
+
+impl AdvanceType {
+    pub fn output_kind(self) -> FrontierKind {
+        match self {
+            AdvanceType::V2V | AdvanceType::E2V => FrontierKind::Vertex,
+            AdvanceType::V2E | AdvanceType::E2E => FrontierKind::Edge,
+        }
+    }
+}
+
+/// Per-edge functor, mirroring the paper's `AdvanceFunctor(s_id, d_id,
+/// e_id, ...)`: return true to emit the edge's output item into the output
+/// frontier. Side effects (label updates, atomicMin relaxations) happen
+/// inside the functor — that is the kernel fusion the paper's API enables.
+pub trait AdvanceFunctor: Sync {
+    fn apply(&self, src: VertexId, dst: VertexId, edge_id: usize) -> bool;
+}
+
+impl<F> AdvanceFunctor for F
+where
+    F: Fn(VertexId, VertexId, usize) -> bool + Sync,
+{
+    #[inline]
+    fn apply(&self, src: VertexId, dst: VertexId, edge_id: usize) -> bool {
+        self(src, dst, edge_id)
+    }
+}
+
+/// Resolve the input items to expand: a vertex frontier expands its ids;
+/// an edge frontier expands the *destination* vertices of its edge ids
+/// (the paper's E-to-* advance visits the far end's neighbor list).
+fn expansion_sources(g: &Csr, input: &Frontier) -> Vec<VertexId> {
+    match input.kind {
+        FrontierKind::Vertex => input.ids.clone(),
+        FrontierKind::Edge => input.ids.iter().map(|&e| g.edge_dst(e as usize)).collect(),
+    }
+}
+
+/// Push-based advance through a load-balancing strategy.
+pub fn advance<F: AdvanceFunctor>(
+    ctx: &OpContext,
+    g: &Csr,
+    input: &Frontier,
+    ty: AdvanceType,
+    strategy: StrategyKind,
+    functor: &F,
+) -> Frontier {
+    let sources = expansion_sources(g, input);
+    let emit_edges = matches!(ty, AdvanceType::V2E | AdvanceType::E2E);
+    let ids = load_balance::expand(
+        strategy,
+        g,
+        &sources,
+        ctx.workers,
+        ctx.counters,
+        |_idx, src, eid, dst, out: &mut Vec<VertexId>| {
+            if functor.apply(src, dst, eid) {
+                out.push(if emit_edges { eid as VertexId } else { dst });
+            }
+        },
+    );
+    Frontier { kind: ty.output_kind(), ids }
+}
+
+/// LB_CULL-style fused advance+filter (paper §5.3 "Fuse filter step with
+/// traversal operators"): the per-destination cull (an atomic bitmask
+/// claim) runs inside the expansion, so duplicate destinations never
+/// materialize in the output frontier and no second kernel is launched.
+pub fn advance_culled<F: AdvanceFunctor>(
+    ctx: &OpContext,
+    g: &Csr,
+    input: &Frontier,
+    strategy: StrategyKind,
+    functor: &F,
+    cull_mask: &AtomicBitset,
+) -> Frontier {
+    let sources = expansion_sources(g, input);
+    let ids = load_balance::expand(
+        strategy,
+        g,
+        &sources,
+        ctx.workers,
+        ctx.counters,
+        |_idx, src, eid, dst, out: &mut Vec<VertexId>| {
+            if functor.apply(src, dst, eid) && cull_mask.set(dst as usize) {
+                out.push(dst);
+            }
+        },
+    );
+    Frontier::vertices(ids)
+}
+
+/// Pull-based advance ("Inverse_Expand", paper §5.1.4): instead of
+/// expanding the active frontier, scan each *unvisited* vertex's incoming
+/// neighbor list for a member of the current frontier; emit the vertex on
+/// first hit (early exit — the saving that makes bottom-up BFS win on
+/// scale-free graphs). `in_frontier` must answer membership in the current
+/// active frontier.
+pub fn advance_pull(
+    ctx: &OpContext,
+    g: &Csr,
+    unvisited: &[VertexId],
+    in_frontier: &AtomicBitset,
+    mut on_discover: impl FnMut(VertexId, VertexId),
+) -> Frontier {
+    assert!(g.has_csc(), "pull traversal requires the CSC view");
+    let results = par::run_partitioned(unvisited.len(), ctx.workers, |_, s, e| {
+        let mut found: Vec<(VertexId, VertexId)> = Vec::new();
+        let mut scanned = 0u64;
+        for &v in &unvisited[s..e] {
+            for &u in g.in_neighbors(v) {
+                scanned += 1;
+                if in_frontier.get(u as usize) {
+                    found.push((v, u));
+                    break; // early exit: one visited parent suffices
+                }
+            }
+        }
+        ctx.counters.add_edges(scanned);
+        ctx.counters.record_run(scanned as usize);
+        found
+    });
+    ctx.counters.add_kernel_launch();
+    let mut out = Vec::new();
+    for chunk in results {
+        for (v, parent) in chunk {
+            on_discover(v, parent);
+            out.push(v);
+        }
+    }
+    Frontier::vertices(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu_sim::WarpCounters;
+    use crate::graph::builder;
+
+    fn diamond() -> Csr {
+        // 0 -> {1,2} -> 3 -> 4
+        builder::from_edges(5, &[(0, 1), (0, 2), (1, 3), (2, 3), (3, 4)])
+    }
+
+    #[test]
+    fn v2v_expands_neighbors_with_duplicates() {
+        let g = diamond();
+        let c = WarpCounters::new();
+        let ctx = OpContext::new(2, &c);
+        let f = Frontier::vertices(vec![1, 2]);
+        let out = advance(&ctx, &g, &f, AdvanceType::V2V, StrategyKind::Lb, &|_s, _d, _e| true);
+        assert_eq!(out.kind, FrontierKind::Vertex);
+        // both 1 and 2 discover 3: duplicates retained without culling
+        assert_eq!(out.ids, vec![3, 3]);
+    }
+
+    #[test]
+    fn v2e_emits_edge_ids() {
+        let g = diamond();
+        let c = WarpCounters::new();
+        let ctx = OpContext::new(1, &c);
+        let f = Frontier::single(0);
+        let out = advance(&ctx, &g, &f, AdvanceType::V2E, StrategyKind::ThreadExpand, &|_, _, _| true);
+        assert_eq!(out.kind, FrontierKind::Edge);
+        let mut ids = out.ids.clone();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![0, 1]); // edges 0->1, 0->2
+    }
+
+    #[test]
+    fn e2v_expands_destination_neighbors() {
+        let g = diamond();
+        let c = WarpCounters::new();
+        let ctx = OpContext::new(1, &c);
+        // edge frontier containing edge id of (0 -> 1)
+        let f = Frontier::edges(vec![0]);
+        let out = advance(&ctx, &g, &f, AdvanceType::E2V, StrategyKind::Twc, &|_, _, _| true);
+        assert_eq!(out.ids, vec![3]); // neighbors of vertex 1
+    }
+
+    #[test]
+    fn functor_filters_edges() {
+        let g = diamond();
+        let c = WarpCounters::new();
+        let ctx = OpContext::new(2, &c);
+        let f = Frontier::vertices(vec![0, 3]);
+        let out =
+            advance(&ctx, &g, &f, AdvanceType::V2V, StrategyKind::Lb, &|_s, d: u32, _e| d % 2 == 0);
+        let mut ids = out.ids.clone();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![2, 4]);
+    }
+
+    #[test]
+    fn culled_advance_dedups() {
+        let g = diamond();
+        let c = WarpCounters::new();
+        let ctx = OpContext::new(2, &c);
+        let f = Frontier::vertices(vec![1, 2]);
+        let mask = AtomicBitset::new(5);
+        let out = advance_culled(&ctx, &g, &f, StrategyKind::LbCull, &|_, _, _| true, &mask);
+        assert_eq!(out.ids, vec![3]); // duplicate 3 culled in-pass
+    }
+
+    #[test]
+    fn pull_discovers_from_unvisited() {
+        let g = diamond();
+        let c = WarpCounters::new();
+        let ctx = OpContext::new(2, &c);
+        let active = AtomicBitset::new(5);
+        active.set(1);
+        active.set(2);
+        let unvisited = vec![3u32, 4u32];
+        let out = advance_pull(&ctx, &g, &unvisited, &active, |_v, _p| {});
+        assert_eq!(out.ids, vec![3]); // 3 has visited in-parents; 4 does not
+    }
+
+    #[test]
+    fn pull_early_exit_saves_edges() {
+        // vertex with many visited in-neighbors: scan stops at first hit.
+        let mut edges: Vec<(u32, u32)> = (0..64).map(|u| (u, 64)).collect();
+        edges.push((64, 0));
+        let g = builder::from_edges(65, &edges);
+        let c = WarpCounters::new();
+        let ctx = OpContext::new(1, &c);
+        let active = AtomicBitset::new(65);
+        for u in 0..64 {
+            active.set(u);
+        }
+        let out = advance_pull(&ctx, &g, &[64], &active, |_, _| {});
+        assert_eq!(out.ids, vec![64]);
+        assert_eq!(c.edges(), 1, "early exit must stop at the first visited parent");
+    }
+}

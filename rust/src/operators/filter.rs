@@ -1,0 +1,197 @@
+//! The filter operator (paper §3, §4.2): stream compaction of the input
+//! frontier by a validity functor, in two flavors:
+//!
+//! - **exact**: parallel compaction keeping exactly the passing items, in
+//!   order (global scan + scatter on the GPU; per-chunk collect here);
+//! - **inexact** ("uniquification", §5.2.1): Merrill-style cheap culling
+//!   heuristics — a global bitmask plus block- and warp-level history hash
+//!   tables — that remove *most* duplicates without guaranteeing full
+//!   dedup, trading exactness for avoiding atomics. Idempotent primitives
+//!   (BFS) tolerate the leftovers.
+
+use crate::frontier::Frontier;
+use crate::graph::VertexId;
+use crate::operators::OpContext;
+use crate::util::bitset::AtomicBitset;
+use crate::util::par;
+
+/// Validity functor, mirroring the paper's `FilterFunctor(node, ...)`.
+pub trait FilterFunctor: Sync {
+    fn keep(&self, id: VertexId) -> bool;
+}
+
+impl<F> FilterFunctor for F
+where
+    F: Fn(VertexId) -> bool + Sync,
+{
+    #[inline]
+    fn keep(&self, id: VertexId) -> bool {
+        self(id)
+    }
+}
+
+/// Exact filter: keeps passing items, preserves relative order.
+pub fn filter<F: FilterFunctor>(ctx: &OpContext, input: &Frontier, functor: &F) -> Frontier {
+    ctx.counters.add_kernel_launch();
+    let chunks = par::run_partitioned(input.ids.len(), ctx.workers, |_, s, e| {
+        let mut keep = Vec::new();
+        for &id in &input.ids[s..e] {
+            if functor.keep(id) {
+                keep.push(id);
+            }
+        }
+        ctx.counters.record_run(e - s);
+        keep
+    });
+    let culled = input.ids.len() - chunks.iter().map(Vec::len).sum::<usize>();
+    ctx.counters.add_culled(culled as u64);
+    let mut ids = Vec::with_capacity(input.ids.len() - culled);
+    for c in chunks {
+        ids.extend(c);
+    }
+    Frontier { kind: input.kind, ids }
+}
+
+/// Block-level history hash table size (paper §5.2.1 keeps these in
+/// shared memory; sizes tunable for the perf/redundancy tradeoff).
+const BLOCK_HASH: usize = 1024;
+/// Warp-level history table size.
+const WARP_HASH: usize = 64;
+
+/// Inexact (uniquifying) filter: drops items failing `functor` AND most
+/// duplicate ids, via (1) a global bitmask claim, (2) a block history
+/// hash table, (3) a warp history hash table. The bitmask makes the first
+/// occurrence win; hash tables are heuristic and may pass rare dupes when
+/// different ids collide — exactly the paper's semantics ("reduce, but
+/// not eliminate, redundant entries").
+pub fn filter_uniquify<F: FilterFunctor>(
+    ctx: &OpContext,
+    input: &Frontier,
+    functor: &F,
+    visited_mask: &AtomicBitset,
+) -> Frontier {
+    ctx.counters.add_kernel_launch();
+    let chunks = par::run_partitioned(input.ids.len(), ctx.workers, |_, s, e| {
+        let mut keep = Vec::new();
+        let mut block_hist = [VertexId::MAX; BLOCK_HASH];
+        let mut warp_hist = [VertexId::MAX; WARP_HASH];
+        for &id in &input.ids[s..e] {
+            // warp-level history: cheapest check first
+            let wslot = (id as usize) % WARP_HASH;
+            if warp_hist[wslot] == id {
+                continue;
+            }
+            warp_hist[wslot] = id;
+            // block-level history
+            let bslot = (id as usize) % BLOCK_HASH;
+            if block_hist[bslot] == id {
+                continue;
+            }
+            block_hist[bslot] = id;
+            if !functor.keep(id) {
+                continue;
+            }
+            // global bitmask: atomic claim, first occurrence wins
+            if !visited_mask.set(id as usize) {
+                continue;
+            }
+            keep.push(id);
+        }
+        ctx.counters.record_run(e - s);
+        keep
+    });
+    let culled = input.ids.len() - chunks.iter().map(Vec::len).sum::<usize>();
+    ctx.counters.add_culled(culled as u64);
+    let mut ids = Vec::new();
+    for c in chunks {
+        ids.extend(c);
+    }
+    Frontier { kind: input.kind, ids }
+}
+
+/// Split filter (paper §5.1.5 priority queue building block): partition
+/// the frontier into (pass, fail) — both retained.
+pub fn split<F: FilterFunctor>(
+    ctx: &OpContext,
+    input: &Frontier,
+    functor: &F,
+) -> (Frontier, Frontier) {
+    ctx.counters.add_kernel_launch();
+    let chunks = par::run_partitioned(input.ids.len(), ctx.workers, |_, s, e| {
+        let mut pass = Vec::new();
+        let mut fail = Vec::new();
+        for &id in &input.ids[s..e] {
+            if functor.keep(id) {
+                pass.push(id);
+            } else {
+                fail.push(id);
+            }
+        }
+        ctx.counters.record_run(e - s);
+        (pass, fail)
+    });
+    let mut pass = Vec::new();
+    let mut fail = Vec::new();
+    for (p, f) in chunks {
+        pass.extend(p);
+        fail.extend(f);
+    }
+    (Frontier { kind: input.kind, ids: pass }, Frontier { kind: input.kind, ids: fail })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu_sim::WarpCounters;
+
+    #[test]
+    fn exact_filter_keeps_order() {
+        let c = WarpCounters::new();
+        let ctx = OpContext::new(3, &c);
+        let f = Frontier::vertices((0..100).collect());
+        let out = filter(&ctx, &f, &|v: u32| v % 7 == 0);
+        assert_eq!(out.ids, (0..100).filter(|v| v % 7 == 0).collect::<Vec<u32>>());
+        assert_eq!(c.culled(), 100 - out.ids.len() as u64);
+    }
+
+    #[test]
+    fn uniquify_removes_duplicates() {
+        let c = WarpCounters::new();
+        let ctx = OpContext::new(2, &c);
+        let mask = AtomicBitset::new(16);
+        let f = Frontier::vertices(vec![3, 3, 5, 3, 5, 7, 7, 7, 3]);
+        let out = filter_uniquify(&ctx, &f, &|_| true, &mask);
+        let mut ids = out.ids.clone();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![3, 5, 7]);
+    }
+
+    #[test]
+    fn uniquify_respects_prior_mask() {
+        let c = WarpCounters::new();
+        let ctx = OpContext::new(1, &c);
+        let mask = AtomicBitset::new(8);
+        mask.set(2); // already visited in an earlier iteration
+        let f = Frontier::vertices(vec![1, 2, 3]);
+        let out = filter_uniquify(&ctx, &f, &|_| true, &mask);
+        assert_eq!(out.ids, vec![1, 3]);
+    }
+
+    #[test]
+    fn split_partitions() {
+        let c = WarpCounters::new();
+        let ctx = OpContext::new(2, &c);
+        let f = Frontier::vertices((0..10).collect());
+        let (near, far) = split(&ctx, &f, &|v: u32| v < 5);
+        assert_eq!(near.ids, vec![0, 1, 2, 3, 4]);
+        assert_eq!(far.ids, vec![5, 6, 7, 8, 9]);
+    }
+
+    #[test]
+    fn empty_input_ok() {
+        let c = WarpCounters::new();
+        let ctx = OpContext::new(4, &c);
+        let f = Frontier::vertices(vec![]);
+        assert!(filter(&ctx, &f, &|_| true).is_empty());
+    }
+}

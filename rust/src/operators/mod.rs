@@ -1,0 +1,27 @@
+//! Gunrock's graph operators (paper §3, §4): advance, filter, segmented
+//! intersection, neighborhood reduction, and compute. Each consumes
+//! input frontier(s) and produces output frontier(s); user computation is
+//! supplied as functors fused into the operator pass (paper §5.3
+//! "Fuse computation with graph operator").
+
+pub mod advance;
+pub mod compute;
+pub mod filter;
+pub mod multisplit;
+pub mod neighborhood_reduce;
+pub mod sampling;
+pub mod segmented_intersection;
+
+use crate::gpu_sim::WarpCounters;
+
+/// Shared per-operator context: worker pool width + virtual-GPU counters.
+pub struct OpContext<'a> {
+    pub workers: usize,
+    pub counters: &'a WarpCounters,
+}
+
+impl<'a> OpContext<'a> {
+    pub fn new(workers: usize, counters: &'a WarpCounters) -> Self {
+        OpContext { workers, counters }
+    }
+}

@@ -1,0 +1,89 @@
+//! Sampling operator (paper §8.2.3): "an extension to the standard
+//! filter" that keeps a random subset of the frontier — the building
+//! block for approximate BC and approximate TC.
+
+use crate::frontier::Frontier;
+use crate::operators::OpContext;
+use crate::util::par;
+use crate::util::rng::Pcg32;
+
+/// Keep each frontier element independently with probability `p`
+/// (deterministic per seed; per-chunk RNG streams).
+pub fn sample(ctx: &OpContext, input: &Frontier, p: f64, seed: u64) -> Frontier {
+    ctx.counters.add_kernel_launch();
+    let chunks = par::run_partitioned(input.ids.len(), ctx.workers, |w, s, e| {
+        let mut rng = Pcg32::with_stream(seed, w as u64);
+        let mut keep = Vec::new();
+        for &id in &input.ids[s..e] {
+            if rng.f64() < p {
+                keep.push(id);
+            }
+        }
+        ctx.counters.record_run(e - s);
+        keep
+    });
+    let mut ids = Vec::new();
+    for c in chunks {
+        ids.extend(c);
+    }
+    Frontier { kind: input.kind, ids }
+}
+
+/// Sample exactly `k` elements without replacement (reservoir).
+pub fn sample_k(input: &Frontier, k: usize, seed: u64) -> Frontier {
+    let mut rng = Pcg32::new(seed);
+    let mut reservoir: Vec<u32> = Vec::with_capacity(k);
+    for (i, &id) in input.ids.iter().enumerate() {
+        if i < k {
+            reservoir.push(id);
+        } else {
+            let j = rng.below_usize(i + 1);
+            if j < k {
+                reservoir[j] = id;
+            }
+        }
+    }
+    Frontier { kind: input.kind, ids: reservoir }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu_sim::WarpCounters;
+
+    #[test]
+    fn sample_rate_approximate() {
+        let c = WarpCounters::new();
+        let ctx = OpContext::new(2, &c);
+        let f = Frontier::vertices((0..10_000).collect());
+        let s = sample(&ctx, &f, 0.3, 42);
+        let rate = s.len() as f64 / 10_000.0;
+        assert!((rate - 0.3).abs() < 0.03, "rate {rate}");
+    }
+
+    #[test]
+    fn sample_deterministic_per_seed() {
+        let c = WarpCounters::new();
+        let ctx = OpContext::new(2, &c);
+        let f = Frontier::vertices((0..1000).collect());
+        assert_eq!(sample(&ctx, &f, 0.5, 7).ids, sample(&ctx, &f, 0.5, 7).ids);
+    }
+
+    #[test]
+    fn sample_k_exact_count_and_subset() {
+        let f = Frontier::vertices((0..500).collect());
+        let s = sample_k(&f, 50, 9);
+        assert_eq!(s.len(), 50);
+        assert!(s.ids.iter().all(|&v| v < 500));
+        let mut uniq = s.ids.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(uniq.len(), 50);
+    }
+
+    #[test]
+    fn sample_k_larger_than_input() {
+        let f = Frontier::vertices(vec![1, 2, 3]);
+        assert_eq!(sample_k(&f, 10, 1).len(), 3);
+    }
+}

@@ -1,0 +1,243 @@
+//! Breadth-first search (paper §6.1) — advance + filter per iteration,
+//! with the full §5 optimization set:
+//!
+//! - push advance through any load-balancing strategy, or the fused
+//!   LB_CULL advance+filter;
+//! - idempotent mode (§5.2.1): atomic-free label writes, duplicates culled
+//!   inexactly by the filter heuristics;
+//! - direction-optimized traversal (§5.1.4, Algorithm 2): push/pull
+//!   switching controlled by the do_a/do_b heuristic.
+
+use std::sync::atomic::{AtomicU32, Ordering};
+
+use crate::config::Config;
+use crate::enactor::{Direction, DirectionHeuristic, Enactor, RunResult};
+use crate::frontier::Frontier;
+use crate::graph::{Csr, VertexId};
+use crate::load_balance::StrategyKind;
+use crate::operators::{advance, filter};
+use crate::util::bitset::AtomicBitset;
+use crate::util::timer::Timer;
+
+pub const INFINITY_DEPTH: u32 = u32::MAX;
+
+/// BFS problem state (paper: the Problem class holds labels + preds).
+pub struct BfsProblem {
+    pub labels: Vec<u32>,
+    pub preds: Vec<i64>,
+    pub src: VertexId,
+}
+
+#[derive(Clone, Debug)]
+pub struct BfsStats {
+    pub result: RunResult,
+    pub pull_iterations: usize,
+    pub push_iterations: usize,
+}
+
+/// Run BFS from `src` under `config`. Returns (problem, stats).
+pub fn bfs(g: &Csr, src: VertexId, config: &Config) -> (BfsProblem, BfsStats) {
+    let n = g.num_vertices;
+    let mut enactor = Enactor::new(config.clone());
+    enactor.begin_run();
+
+    // SoA problem data, shared across worker threads through atomics.
+    let labels: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(INFINITY_DEPTH)).collect();
+    let preds: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(u32::MAX)).collect();
+    labels[src as usize].store(0, Ordering::Relaxed);
+
+    // Visited bitmask: doubles as the LB_CULL / idempotent-filter mask and
+    // the pull-phase membership oracle.
+    let visited = AtomicBitset::new(n);
+    visited.set(src as usize);
+
+    let mut heuristic =
+        DirectionHeuristic::new(config.direction_optimized, config.do_a, config.do_b);
+    let idempotent = config.idempotence;
+
+    let mut frontier = Frontier::single(src);
+    let mut depth: u32 = 0;
+    let mut visited_count: usize = 1;
+    let mut pull_iters = 0usize;
+    let mut push_iters = 0usize;
+    // Frontier membership bitmap for the pull phase (rebuilt per pull
+    // iteration from the current frontier).
+    while !frontier.is_empty() && enactor.within_iteration_cap() {
+        let iter_timer = Timer::start();
+        let prev_edges = enactor.counters.edges();
+        let input_len = frontier.len();
+        depth += 1;
+        let dir = heuristic.decide(n, g.num_edges(), input_len, n - visited_count);
+
+        let next = match dir {
+            Direction::Pull => {
+                pull_iters += 1;
+                // Build the active-frontier bitmap + unvisited list.
+                let active = AtomicBitset::new(n);
+                for &v in &frontier.ids {
+                    active.set(v as usize);
+                }
+                let unvisited = visited.unset_indices();
+                let ctx = enactor.ctx();
+                let d = depth;
+                let out = advance::advance_pull(&ctx, g, &unvisited, &active, |v, parent| {
+                    labels[v as usize].store(d, Ordering::Relaxed);
+                    preds[v as usize].store(parent, Ordering::Relaxed);
+                });
+                for &v in &out.ids {
+                    visited.set(v as usize);
+                }
+                out
+            }
+            Direction::Push => {
+                push_iters += 1;
+                let strategy = enactor.strategy_for(g, input_len);
+                let ctx = enactor.ctx();
+                let d = depth;
+                if matches!(strategy, StrategyKind::LbCull) || !idempotent {
+                    // Non-idempotent path: atomic claim on the visited mask
+                    // decides the unique discoverer; fused cull produces a
+                    // duplicate-free frontier in one pass (LB_CULL).
+                    let fun = |s: VertexId, dst: VertexId, _e: usize| {
+                        if visited.set(dst as usize) {
+                            labels[dst as usize].store(d, Ordering::Relaxed);
+                            preds[dst as usize].store(s, Ordering::Relaxed);
+                            true
+                        } else {
+                            false
+                        }
+                    };
+                    advance::advance(&ctx, g, &frontier, advance::AdvanceType::V2V, strategy, &fun)
+                } else {
+                    // Idempotent path: no atomics on discovery — write the
+                    // label unconditionally (idempotent op), emit dups, and
+                    // cull them inexactly in the follow-up filter.
+                    let fun = |s: VertexId, dst: VertexId, _e: usize| {
+                        if labels[dst as usize].load(Ordering::Relaxed) == INFINITY_DEPTH {
+                            labels[dst as usize].store(d, Ordering::Relaxed);
+                            preds[dst as usize].store(s, Ordering::Relaxed);
+                            true
+                        } else {
+                            false
+                        }
+                    };
+                    let raw =
+                        advance::advance(&ctx, g, &frontier, advance::AdvanceType::V2V, strategy, &fun);
+                    filter::filter_uniquify(&ctx, &raw, &|_| true, &visited)
+                }
+            }
+        };
+
+        visited_count += next.len();
+        if dir == Direction::Push && !idempotent {
+            // one visited-mask atomic per traversed edge (batched stat —
+            // a per-edge atomic counter would double the atomic traffic)
+            let e = enactor.counters.edges();
+            enactor.counters.add_atomics(e.saturating_sub(prev_edges));
+        }
+        enactor.record_iteration(input_len, next.len(), iter_timer.elapsed_ms(), dir == Direction::Pull);
+        frontier = next;
+    }
+
+    let result = enactor.finish_run();
+    let problem = BfsProblem {
+        labels: labels.into_iter().map(|a| a.into_inner()).collect(),
+        preds: preds
+            .into_iter()
+            .map(|a| {
+                let v = a.into_inner();
+                if v == u32::MAX {
+                    -1
+                } else {
+                    v as i64
+                }
+            })
+            .collect(),
+        src,
+    };
+    let stats = BfsStats { result, pull_iterations: pull_iters, push_iterations: push_iters };
+    (problem, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder;
+    use crate::graph::generators::{rmat, rmat::RmatParams};
+
+    fn path_graph(n: usize) -> Csr {
+        let edges: Vec<(u32, u32)> = (0..n as u32 - 1).map(|v| (v, v + 1)).collect();
+        builder::undirected_from_edges(n, &edges)
+    }
+
+    #[test]
+    fn path_depths() {
+        let g = path_graph(10);
+        let (p, s) = bfs(&g, 0, &Config::default());
+        for v in 0..10 {
+            assert_eq!(p.labels[v], v as u32);
+        }
+        assert_eq!(s.result.num_iterations(), 9 + 1); // 9 levels + empty tail... (last iteration produces empty)
+    }
+
+    #[test]
+    fn unreachable_stays_infinity() {
+        let g = builder::from_edges(4, &[(0, 1)]);
+        let (p, _) = bfs(&g, 0, &Config::default());
+        assert_eq!(p.labels[2], INFINITY_DEPTH);
+        assert_eq!(p.preds[2], -1);
+    }
+
+    #[test]
+    fn preds_form_valid_tree() {
+        let g = rmat(&RmatParams { scale: 9, edge_factor: 8, ..Default::default() });
+        let (p, _) = bfs(&g, 0, &Config::default());
+        for v in 0..g.num_vertices {
+            if p.labels[v] != INFINITY_DEPTH && v != 0 {
+                let pred = p.preds[v];
+                assert!(pred >= 0);
+                assert_eq!(p.labels[pred as usize] + 1, p.labels[v], "v={v}");
+                assert!(g.neighbors(pred as u32).contains(&(v as u32)));
+            }
+        }
+    }
+
+    #[test]
+    fn idempotent_matches_exact() {
+        let g = rmat(&RmatParams { scale: 10, edge_factor: 16, ..Default::default() });
+        let (exact, _) = bfs(&g, 3, &Config::default());
+        let mut cfg = Config::default();
+        cfg.idempotence = true;
+        let (idem, _) = bfs(&g, 3, &cfg);
+        assert_eq!(exact.labels, idem.labels);
+    }
+
+    #[test]
+    fn direction_optimized_matches_push_only() {
+        let g = rmat(&RmatParams { scale: 10, edge_factor: 16, ..Default::default() });
+        let (push, _) = bfs(&g, 7, &Config::default());
+        let mut cfg = Config::default();
+        cfg.direction_optimized = true;
+        let (dopt, stats) = bfs(&g, 7, &cfg);
+        assert_eq!(push.labels, dopt.labels);
+        assert!(stats.pull_iterations > 0, "scale-free BFS should enter pull phase");
+    }
+
+    #[test]
+    fn all_strategies_agree() {
+        let g = rmat(&RmatParams { scale: 9, edge_factor: 8, ..Default::default() });
+        let (want, _) = bfs(&g, 0, &Config::default());
+        for strat in [
+            StrategyKind::ThreadExpand,
+            StrategyKind::Twc,
+            StrategyKind::Lb,
+            StrategyKind::LbLight,
+            StrategyKind::LbCull,
+        ] {
+            let mut cfg = Config::default();
+            cfg.strategy = Some(strat);
+            let (got, _) = bfs(&g, 0, &cfg);
+            assert_eq!(want.labels, got.labels, "{strat}");
+        }
+    }
+}

@@ -1,0 +1,160 @@
+//! Connected components (paper §6.4), after Soman et al.: alternating
+//! **hooking** (an operation over the edge frontier trying to join the two
+//! endpoints' components) and **pointer-jumping** (a filter over the
+//! vertex frontier collapsing component trees to stars), repeated until no
+//! component id changes.
+//!
+//! Within one hooking round every write is oriented consistently (odd
+//! rounds: higher root id hooks under lower; even rounds: the reverse —
+//! Soman's alternation, which speeds convergence), so the parent links
+//! cannot form cycles. Edges are only *dropped* from the frontier by the
+//! filter step after pointer-jumping has stabilized the labels — dropping
+//! on transient mid-round ids could split components (lost-update races).
+
+use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
+
+use crate::config::Config;
+use crate::enactor::{Enactor, RunResult};
+use crate::frontier::Frontier;
+use crate::graph::{Csr, VertexId};
+use crate::operators::{compute, filter};
+use crate::util::timer::Timer;
+
+pub struct CcProblem {
+    pub component: Vec<u32>,
+    pub num_components: usize,
+}
+
+pub fn cc(g: &Csr, config: &Config) -> (CcProblem, RunResult) {
+    let n = g.num_vertices;
+    let m = g.num_edges();
+    let mut enactor = Enactor::new(config.clone());
+    enactor.begin_run();
+
+    let comp: Vec<AtomicU32> = (0..n).map(|v| AtomicU32::new(v as u32)).collect();
+    let mut edge_frontier = Frontier::all_edges(m);
+    let mut odd = true;
+
+    while !edge_frontier.is_empty() && enactor.within_iteration_cap() {
+        let t = Timer::start();
+        let input_len = edge_frontier.len();
+
+        // --- Hooking: one pass over the edge frontier. Writes go to the
+        // *root* slot (comp values are roots after the previous jumping
+        // phase), consistently oriented within the round.
+        {
+            let ctx = enactor.ctx();
+            let counters = &enactor.counters;
+            let hook = |e: VertexId| {
+                let eid = e as usize;
+                let (s, d) = (g.edge_src(eid), g.edge_dst(eid));
+                let cs = comp[s as usize].load(Ordering::Relaxed);
+                let cd = comp[d as usize].load(Ordering::Relaxed);
+                counters.add_edges(1);
+                if cs == cd {
+                    return;
+                }
+                let (winner, loser) =
+                    if odd == (cs < cd) { (cs, cd) } else { (cd, cs) };
+                counters.add_atomics(1);
+                comp[loser as usize].store(winner, Ordering::Relaxed);
+            };
+            compute::compute(&ctx, &edge_frontier, hook);
+        }
+        odd = !odd;
+
+        // --- Pointer-jumping: collapse parent chains to stars.
+        let vertex_frontier = Frontier::all_vertices(n);
+        let jumping = AtomicBool::new(true);
+        while jumping.swap(false, Ordering::Relaxed) {
+            let ctx = enactor.ctx();
+            let jump = |v: VertexId| -> bool {
+                let c = comp[v as usize].load(Ordering::Relaxed);
+                let cc = comp[c as usize].load(Ordering::Relaxed);
+                if c != cc {
+                    comp[v as usize].store(cc, Ordering::Relaxed);
+                    jumping.store(true, Ordering::Relaxed);
+                    true
+                } else {
+                    false
+                }
+            };
+            filter::filter(&ctx, &vertex_frontier, &jump);
+        }
+
+        // --- Filter: drop edges whose endpoints now share a (stable,
+        // post-jump) component id.
+        {
+            let ctx = enactor.ctx();
+            let keep = |e: VertexId| {
+                let eid = e as usize;
+                let cs = comp[g.edge_src(eid) as usize].load(Ordering::Relaxed);
+                let cd = comp[g.edge_dst(eid) as usize].load(Ordering::Relaxed);
+                cs != cd
+            };
+            edge_frontier = filter::filter(&ctx, &edge_frontier, &keep);
+        }
+
+        enactor.record_iteration(input_len, edge_frontier.len(), t.elapsed_ms(), false);
+    }
+
+    let component: Vec<u32> = comp.into_iter().map(|a| a.into_inner()).collect();
+    let mut roots: Vec<u32> = component.clone();
+    roots.sort_unstable();
+    roots.dedup();
+    let result = enactor.finish_run();
+    (CcProblem { component, num_components: roots.len() }, result)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::cc_unionfind::cc_unionfind;
+    use crate::graph::builder;
+    use crate::graph::generators::{rmat, rmat::RmatParams};
+
+    #[test]
+    fn two_components() {
+        let g = builder::undirected_from_edges(6, &[(0, 1), (1, 2), (3, 4)]);
+        let (p, _) = cc(&g, &Config::default());
+        assert_eq!(p.num_components, 3); // {0,1,2} {3,4} {5}
+        assert_eq!(p.component[0], p.component[1]);
+        assert_eq!(p.component[1], p.component[2]);
+        assert_eq!(p.component[3], p.component[4]);
+        assert_ne!(p.component[0], p.component[3]);
+        assert_ne!(p.component[5], p.component[0]);
+    }
+
+    #[test]
+    fn matches_union_find() {
+        let g = rmat(&RmatParams { scale: 10, edge_factor: 4, ..Default::default() });
+        let (p, _) = cc(&g, &Config::default());
+        let want = cc_unionfind(&g);
+        assert_eq!(p.num_components, want.1);
+        // same partition: neighbors always share labels
+        for v in 0..g.num_vertices {
+            for &u in g.neighbors(v as u32) {
+                assert_eq!(p.component[v], p.component[u as usize]);
+                assert_eq!(want.0[v], want.0[u as usize]);
+            }
+        }
+    }
+
+    #[test]
+    fn fully_connected_single_component() {
+        let g = builder::undirected_from_edges(5, &[(0, 1), (1, 2), (2, 3), (3, 4)]);
+        let (p, _) = cc(&g, &Config::default());
+        assert_eq!(p.num_components, 1);
+    }
+
+    #[test]
+    fn labels_are_roots() {
+        // every label must itself be a fixed point (star property)
+        let g = rmat(&RmatParams { scale: 8, edge_factor: 2, ..Default::default() });
+        let (p, _) = cc(&g, &Config::default());
+        for v in 0..g.num_vertices {
+            let c = p.component[v] as usize;
+            assert_eq!(p.component[c], p.component[v] , "non-star at {v}");
+        }
+    }
+}

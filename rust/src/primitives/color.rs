@@ -1,0 +1,174 @@
+//! Graph coloring and maximal independent set (paper §8.2.4): both built
+//! from neighborhood reduction + filter in the Jones-Plassmann style —
+//! each round, vertices that are local maxima of a random priority among
+//! their uncolored neighbors take the smallest available color (or join
+//! the MIS), then leave the frontier.
+
+use std::sync::atomic::{AtomicU32, Ordering};
+
+use crate::config::Config;
+use crate::enactor::{Enactor, RunResult};
+use crate::frontier::Frontier;
+use crate::graph::{Csr, VertexId};
+use crate::operators::filter;
+use crate::util::rng::Pcg32;
+use crate::util::timer::Timer;
+
+pub const UNCOLORED: u32 = u32::MAX;
+
+pub struct ColoringResult {
+    pub colors: Vec<u32>,
+    pub num_colors: usize,
+}
+
+/// Jones-Plassmann greedy coloring over undirected graphs.
+pub fn color(g: &Csr, config: &Config) -> (ColoringResult, RunResult) {
+    let n = g.num_vertices;
+    let mut enactor = Enactor::new(config.clone());
+    enactor.begin_run();
+
+    // random priorities (ties by id)
+    let mut rng = Pcg32::new(config.seed);
+    let prio: Vec<u64> = (0..n).map(|v| (rng.next_u32() as u64) << 32 | v as u64).collect();
+    let colors: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(UNCOLORED)).collect();
+
+    let mut frontier = Frontier::all_vertices(n);
+    while !frontier.is_empty() && enactor.within_iteration_cap() {
+        let t = Timer::start();
+        let input_len = frontier.len();
+        let ctx = enactor.ctx();
+        let counters = &enactor.counters;
+
+        // Local maxima among uncolored neighbors claim a color.
+        let claim = |v: VertexId| -> bool {
+            let pv = prio[v as usize];
+            counters.add_edges(g.degree(v) as u64);
+            let is_max = g
+                .neighbors(v)
+                .iter()
+                .all(|&u| colors[u as usize].load(Ordering::Relaxed) != UNCOLORED || prio[u as usize] < pv);
+            if !is_max {
+                return true; // stay in the frontier
+            }
+            // smallest color unused by colored neighbors
+            let mut used: Vec<u32> =
+                g.neighbors(v)
+                    .iter()
+                    .filter_map(|&u| {
+                        let c = colors[u as usize].load(Ordering::Relaxed);
+                        (c != UNCOLORED).then_some(c)
+                    })
+                    .collect();
+            used.sort_unstable();
+            used.dedup();
+            let mut c = 0u32;
+            for &u in &used {
+                if u == c {
+                    c += 1;
+                } else if u > c {
+                    break;
+                }
+            }
+            colors[v as usize].store(c, Ordering::Relaxed);
+            false // colored: leave the frontier
+        };
+        frontier = filter::filter(&ctx, &frontier, &claim);
+        enactor.record_iteration(input_len, frontier.len(), t.elapsed_ms(), false);
+    }
+
+    let colors: Vec<u32> = colors.into_iter().map(|a| a.into_inner()).collect();
+    let num_colors = colors.iter().filter(|&&c| c != UNCOLORED).max().map(|&m| m as usize + 1).unwrap_or(0);
+    let result = enactor.finish_run();
+    (ColoringResult { colors, num_colors }, result)
+}
+
+/// Maximal independent set via the same local-maxima rounds (Luby-style).
+pub fn mis(g: &Csr, config: &Config) -> (Vec<bool>, RunResult) {
+    let n = g.num_vertices;
+    let mut enactor = Enactor::new(config.clone());
+    enactor.begin_run();
+
+    let mut rng = Pcg32::new(config.seed ^ 0x15);
+    let prio: Vec<u64> = (0..n).map(|v| (rng.next_u32() as u64) << 32 | v as u64).collect();
+    // 0 = undecided, 1 = in MIS, 2 = excluded
+    let state: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(0)).collect();
+
+    let mut frontier = Frontier::all_vertices(n);
+    while !frontier.is_empty() && enactor.within_iteration_cap() {
+        let t = Timer::start();
+        let input_len = frontier.len();
+        let ctx = enactor.ctx();
+        let counters = &enactor.counters;
+        // Phase 1: local maxima among undecided neighbors join the MIS.
+        let winners: Vec<VertexId> = frontier
+            .ids
+            .iter()
+            .copied()
+            .filter(|&v| {
+                counters.add_edges(g.degree(v) as u64);
+                g.neighbors(v).iter().all(|&u| {
+                    state[u as usize].load(Ordering::Relaxed) != 0 || prio[u as usize] < prio[v as usize]
+                })
+            })
+            .collect();
+        for &v in &winners {
+            state[v as usize].store(1, Ordering::Relaxed);
+            for &u in g.neighbors(v) {
+                let _ = state[u as usize].compare_exchange(0, 2, Ordering::Relaxed, Ordering::Relaxed);
+            }
+        }
+        // Phase 2: drop decided vertices from the frontier.
+        frontier = filter::filter(&ctx, &frontier, &|v: VertexId| {
+            state[v as usize].load(Ordering::Relaxed) == 0
+        });
+        enactor.record_iteration(input_len, frontier.len(), t.elapsed_ms(), false);
+    }
+    let in_mis: Vec<bool> = state.into_iter().map(|a| a.into_inner() == 1).collect();
+    (in_mis, enactor.finish_run())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder;
+    use crate::graph::generators::{rmat, rmat::RmatParams, smallworld::smallworld, smallworld::SmallWorldParams};
+
+    #[test]
+    fn coloring_is_proper() {
+        let g = smallworld(&SmallWorldParams { n: 512, k: 8, beta: 0.2, ..Default::default() });
+        let (r, _) = color(&g, &Config::default());
+        for v in 0..g.num_vertices as u32 {
+            assert_ne!(r.colors[v as usize], UNCOLORED);
+            for &u in g.neighbors(v) {
+                assert_ne!(r.colors[v as usize], r.colors[u as usize], "edge {v}-{u}");
+            }
+        }
+        assert!(r.num_colors >= 2);
+    }
+
+    #[test]
+    fn bipartite_graph_gets_few_colors() {
+        // even cycle is 2-colorable; greedy JP should stay small (<= 3)
+        let edges: Vec<(u32, u32)> = (0..16u32).map(|v| (v, (v + 1) % 16)).collect();
+        let g = builder::undirected_from_edges(16, &edges);
+        let (r, _) = color(&g, &Config::default());
+        assert!(r.num_colors <= 3, "{}", r.num_colors);
+    }
+
+    #[test]
+    fn mis_is_independent_and_maximal() {
+        let g = rmat(&RmatParams { scale: 9, edge_factor: 4, ..Default::default() });
+        let (in_mis, _) = mis(&g, &Config::default());
+        for v in 0..g.num_vertices as u32 {
+            if in_mis[v as usize] {
+                for &u in g.neighbors(v) {
+                    assert!(!in_mis[u as usize] || u == v, "edge {v}-{u} inside MIS");
+                }
+            } else {
+                // maximality: some neighbor (or itself via self loop) in MIS
+                let covered = g.neighbors(v).iter().any(|&u| in_mis[u as usize]);
+                assert!(covered, "vertex {v} not covered");
+            }
+        }
+    }
+}

@@ -1,0 +1,139 @@
+//! Label propagation community detection (paper §5.1.5 / §8.2 mention LP
+//! among the primitives that benefit from frontier reorganization): each
+//! vertex repeatedly adopts the most frequent label among its neighbors;
+//! vertices whose label changed re-activate their neighborhood.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU32, Ordering};
+
+use crate::config::Config;
+use crate::enactor::{Enactor, RunResult};
+use crate::frontier::Frontier;
+use crate::graph::{Csr, VertexId};
+use crate::operators::filter;
+use crate::util::bitset::AtomicBitset;
+use crate::util::timer::Timer;
+
+pub struct LpResult {
+    pub labels: Vec<u32>,
+    pub num_communities: usize,
+    pub iterations: usize,
+}
+
+pub fn label_propagation(g: &Csr, config: &Config) -> (LpResult, RunResult) {
+    let n = g.num_vertices;
+    let mut enactor = Enactor::new(config.clone());
+    enactor.begin_run();
+
+    let labels: Vec<AtomicU32> = (0..n).map(|v| AtomicU32::new(v as u32)).collect();
+    let mut frontier = Frontier::all_vertices(n);
+    let mut iters = 0usize;
+    let max_rounds = config.max_iters.min(100);
+
+    while !frontier.is_empty() && iters < max_rounds {
+        let t = Timer::start();
+        iters += 1;
+        let input_len = frontier.len();
+        let changed = AtomicBitset::new(n);
+        let ctx = enactor.ctx();
+        let counters = &enactor.counters;
+
+        // adopt the plurality label of the neighborhood (ties -> smaller
+        // label, for determinism)
+        let update = |v: VertexId| -> bool {
+            let neigh = g.neighbors(v);
+            counters.add_edges(neigh.len() as u64);
+            if neigh.is_empty() {
+                return false;
+            }
+            let mut counts: HashMap<u32, u32> = HashMap::with_capacity(neigh.len());
+            for &u in neigh {
+                *counts.entry(labels[u as usize].load(Ordering::Relaxed)).or_insert(0) += 1;
+            }
+            let (&best, _) = counts
+                .iter()
+                .max_by(|a, b| a.1.cmp(b.1).then(b.0.cmp(a.0)))
+                .unwrap();
+            let old = labels[v as usize].swap(best, Ordering::Relaxed);
+            if old != best {
+                changed.set(v as usize);
+                true
+            } else {
+                false
+            }
+        };
+        filter::filter(&ctx, &frontier, &update);
+
+        // next frontier: vertices adjacent to a change (plus the changed)
+        let mut next: Vec<VertexId> = Vec::new();
+        let seen = AtomicBitset::new(n);
+        for v in changed.iter_set() {
+            if seen.set(v) {
+                next.push(v as VertexId);
+            }
+            for &u in g.neighbors(v as VertexId) {
+                if seen.set(u as usize) {
+                    next.push(u);
+                }
+            }
+        }
+        frontier = Frontier::vertices(next);
+        enactor.record_iteration(input_len, frontier.len(), t.elapsed_ms(), false);
+    }
+
+    let labels: Vec<u32> = labels.into_iter().map(|a| a.into_inner()).collect();
+    let mut uniq = labels.clone();
+    uniq.sort_unstable();
+    uniq.dedup();
+    let result = enactor.finish_run();
+    (LpResult { labels, num_communities: uniq.len(), iterations: iters }, result)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder;
+
+    /// Two dense cliques joined by one bridge edge.
+    fn two_cliques(k: usize) -> Csr {
+        let mut edges = Vec::new();
+        for a in 0..k as u32 {
+            for b in a + 1..k as u32 {
+                edges.push((a, b));
+                edges.push((k as u32 + a, k as u32 + b));
+            }
+        }
+        edges.push((0, k as u32));
+        builder::undirected_from_edges(2 * k, &edges)
+    }
+
+    #[test]
+    fn cliques_form_communities() {
+        let g = two_cliques(8);
+        let (r, _) = label_propagation(&g, &Config::default());
+        // all members of clique 1 share a label; same for clique 2
+        for v in 1..8 {
+            assert_eq!(r.labels[v], r.labels[1], "clique A not uniform");
+        }
+        for v in 9..16 {
+            assert_eq!(r.labels[v], r.labels[9], "clique B not uniform");
+        }
+        assert!(r.num_communities <= 3);
+    }
+
+    #[test]
+    fn converges_and_terminates() {
+        let g = two_cliques(5);
+        let (r, run) = label_propagation(&g, &Config::default());
+        assert!(r.iterations < 100);
+        assert!(run.num_iterations() == r.iterations);
+    }
+
+    #[test]
+    fn isolated_vertices_keep_own_label() {
+        let g = builder::from_edges(3, &[]);
+        let (r, _) = label_propagation(&g, &Config::default());
+        assert_eq!(r.labels, vec![0, 1, 2]);
+        assert_eq!(r.num_communities, 3);
+    }
+}

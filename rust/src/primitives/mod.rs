@@ -1,0 +1,16 @@
+//! The paper's graph primitives (§6), each assembled from the operator
+//! set: BFS, SSSP, BC, PageRank, CC, TC, the WTF (Who-To-Follow)
+//! pipeline, and subgraph matching.
+
+pub mod bc;
+pub mod bfs;
+pub mod cc;
+pub mod color;
+pub mod label_propagation;
+pub mod mst;
+pub mod pagerank;
+pub mod sm;
+pub mod sssp;
+pub mod traversal_extras;
+pub mod tc;
+pub mod wtf;

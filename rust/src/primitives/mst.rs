@@ -1,0 +1,231 @@
+//! Minimum spanning tree / forest via Borůvka with supervertex forming —
+//! the paper's MST primitive (§8.2.3: "In our current minimum-spanning-
+//! tree primitive, we have implemented a supervertex-forming phase using
+//! a series of filter, advance, sort, and prefix-sum").
+//!
+//! Each round: (1) neighborhood-reduce per component to find the minimum
+//! outgoing edge; (2) hook components along those edges (cycle-breaking
+//! by id); (3) pointer-jump to collapse the supervertex forest; until no
+//! component has an outgoing edge.
+
+use std::sync::atomic::{AtomicU32, Ordering};
+
+use crate::config::Config;
+use crate::enactor::{Enactor, RunResult};
+use crate::graph::{Csr, VertexId};
+use crate::util::par;
+use crate::util::timer::Timer;
+
+pub struct MstResult {
+    /// Edge ids (into the CSR) selected into the forest.
+    pub tree_edges: Vec<usize>,
+    pub total_weight: u64,
+    /// Supervertex (component) label per vertex after convergence.
+    pub component: Vec<u32>,
+}
+
+/// Borůvka MST on an undirected weighted graph (each edge stored in both
+/// directions; ties broken by edge id so both directions agree).
+pub fn mst(g: &Csr, config: &Config) -> (MstResult, RunResult) {
+    assert!(g.is_weighted(), "MST needs edge weights");
+    let n = g.num_vertices;
+    let mut enactor = Enactor::new(config.clone());
+    enactor.begin_run();
+
+    let comp: Vec<AtomicU32> = (0..n).map(|v| AtomicU32::new(v as u32)).collect();
+    let mut tree_edges: Vec<usize> = Vec::new();
+    let mut total_weight = 0u64;
+
+    loop {
+        let t = Timer::start();
+        let label = |v: VertexId| comp[v as usize].load(Ordering::Relaxed);
+
+        // (1) min outgoing edge per component: scan all vertices' edges in
+        // parallel, reduce per source component. Candidates are ordered by
+        // (weight, canonical undirected endpoints, edge id) — a globally
+        // consistent total order on *undirected* edges, which guarantees
+        // the component pointer graph has only 2-cycles (mutual minima),
+        // the classical Boruvka cycle-safety argument.
+        type Cand = (u32, u32, u32, usize); // (w, min_end, max_end, eid)
+        let cand_of = |eid: usize, s: u32| -> Cand {
+            let d = g.edge_dst(eid);
+            (g.weight(eid), s.min(d), s.max(d), eid)
+        };
+        let candidates = par::run_partitioned(n, enactor.workers, |_, s, e| {
+            let mut local: std::collections::HashMap<u32, Cand> = std::collections::HashMap::new();
+            for v in s..e {
+                let cv = label(v as u32);
+                for eid in g.edge_range(v as u32) {
+                    let u = g.col_indices[eid];
+                    if label(u) == cv {
+                        continue; // internal edge
+                    }
+                    let cand = cand_of(eid, v as u32);
+                    let entry = local.entry(cv).or_insert(cand);
+                    if (cand.0, cand.1, cand.2) < (entry.0, entry.1, entry.2) {
+                        *entry = cand;
+                    }
+                }
+            }
+            local
+        });
+        enactor.counters.add_edges(g.num_edges() as u64);
+        let mut best: std::collections::HashMap<u32, Cand> = std::collections::HashMap::new();
+        for chunk in candidates {
+            for (c, cand) in chunk {
+                let entry = best.entry(c).or_insert(cand);
+                if (cand.0, cand.1, cand.2) < (entry.0, entry.1, entry.2) {
+                    *entry = cand;
+                }
+            }
+        }
+        if best.is_empty() {
+            enactor.record_iteration(n, 0, t.elapsed_ms(), false);
+            break;
+        }
+
+        // (2) hook along the chosen edges. All (src_comp, dst_comp) pairs
+        // are resolved against the labels at the START of the round (the
+        // BSP snapshot) — resolving against in-round stores would see a
+        // partner's hook and double-add mutual edges. Mutual minima (both
+        // components selected the same undirected edge) would form a
+        // 2-cycle: only the lower-labelled component performs that hook.
+        let hooks: Vec<(u32, u32, u32, usize)> = best
+            .iter()
+            .map(|(&c, &(w, _a, _b, eid))| {
+                let dst_comp = label(g.edge_dst(eid));
+                (c, dst_comp, w, eid)
+            })
+            .collect();
+        let mut added = 0usize;
+        for &(src_comp, dst_comp, w, eid) in &hooks {
+            debug_assert_ne!(src_comp, dst_comp);
+            let (w1, a1, b1, _) = best[&src_comp];
+            let mutual = best
+                .get(&dst_comp)
+                .map(|&(w2, a2, b2, _)| (w2, a2, b2) == (w1, a1, b1))
+                .unwrap_or(false);
+            let _ = w1;
+            if mutual && src_comp > dst_comp {
+                continue; // the lower component performs the hook
+            }
+            comp[src_comp as usize].store(dst_comp, Ordering::Relaxed);
+            tree_edges.push(eid);
+            total_weight += w as u64;
+            added += 1;
+        }
+
+        // (3) pointer-jump to collapse supervertices.
+        loop {
+            let mut changed = false;
+            for v in 0..n {
+                let c = comp[v].load(Ordering::Relaxed);
+                let cc = comp[c as usize].load(Ordering::Relaxed);
+                if c != cc {
+                    comp[v].store(cc, Ordering::Relaxed);
+                    changed = true;
+                }
+            }
+            if !changed {
+                break;
+            }
+        }
+
+        enactor.record_iteration(n, added, t.elapsed_ms(), false);
+        if added == 0 || !enactor.within_iteration_cap() {
+            break;
+        }
+    }
+
+    let component: Vec<u32> = comp.into_iter().map(|a| a.into_inner()).collect();
+    let result = enactor.finish_run();
+    (MstResult { tree_edges, total_weight, component }, result)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{builder, Coo};
+
+    fn weighted_undirected(n: usize, edges: &[(u32, u32, u32)]) -> Csr {
+        let mut coo = Coo::new(n);
+        for &(s, d, w) in edges {
+            coo.push_weighted(s, d, w);
+            coo.push_weighted(d, s, w);
+        }
+        builder::from_coo(&coo, true)
+    }
+
+    /// Serial Kruskal oracle.
+    fn kruskal_weight(n: usize, edges: &[(u32, u32, u32)]) -> u64 {
+        let mut es: Vec<_> = edges.to_vec();
+        es.sort_by_key(|e| e.2);
+        let mut parent: Vec<u32> = (0..n as u32).collect();
+        fn find(p: &mut Vec<u32>, v: u32) -> u32 {
+            let mut v = v;
+            while p[v as usize] != v {
+                p[v as usize] = p[p[v as usize] as usize];
+                v = p[v as usize];
+            }
+            v
+        }
+        let mut total = 0u64;
+        for (s, d, w) in es {
+            let (rs, rd) = (find(&mut parent, s), find(&mut parent, d));
+            if rs != rd {
+                parent[rs as usize] = rd;
+                total += w as u64;
+            }
+        }
+        total
+    }
+
+    #[test]
+    fn simple_mst_weight() {
+        let edges = [(0, 1, 1), (1, 2, 2), (0, 2, 10), (2, 3, 3)];
+        let g = weighted_undirected(4, &edges);
+        let (r, _) = mst(&g, &Config::default());
+        assert_eq!(r.total_weight, 6); // 1 + 2 + 3
+        assert_eq!(r.tree_edges.len(), 3);
+    }
+
+    #[test]
+    fn forest_on_disconnected_graph() {
+        let edges = [(0, 1, 4), (2, 3, 7)];
+        let g = weighted_undirected(5, &edges);
+        let (r, _) = mst(&g, &Config::default());
+        assert_eq!(r.total_weight, 11);
+        assert_eq!(r.tree_edges.len(), 2);
+        // components: {0,1}, {2,3}, {4}
+        let mut roots: Vec<u32> = r.component.clone();
+        roots.sort_unstable();
+        roots.dedup();
+        assert_eq!(roots.len(), 3);
+    }
+
+    #[test]
+    fn matches_kruskal_on_random_graphs() {
+        use crate::util::rng::Pcg32;
+        for seed in 0..6u64 {
+            let mut rng = Pcg32::new(seed);
+            let n = 40 + rng.below_usize(60);
+            let mut edges = Vec::new();
+            let mut seen = std::collections::HashSet::new();
+            for _ in 0..n * 3 {
+                let s = rng.below(n as u32);
+                let d = rng.below(n as u32);
+                if s == d {
+                    continue;
+                }
+                let key = (s.min(d), s.max(d));
+                if !seen.insert(key) {
+                    continue;
+                }
+                edges.push((key.0, key.1, rng.weight(1, 100)));
+            }
+            let g = weighted_undirected(n, &edges);
+            let (r, _) = mst(&g, &Config::default());
+            assert_eq!(r.total_weight, kruskal_weight(n, &edges), "seed {seed}");
+        }
+    }
+}

@@ -1,0 +1,194 @@
+//! PageRank (paper §6.5): full-vertex frontier, per iteration an advance
+//! accumulates rank contributions (atomicAdd) and a filter retires
+//! converged vertices. Also exposes a pull-mode (CSC gather, atomic-free)
+//! variant and the XLA-offload path that executes the AOT Pallas/JAX
+//! artifact through PJRT (see `runtime`).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::config::Config;
+use crate::enactor::{Enactor, RunResult};
+use crate::frontier::Frontier;
+use crate::graph::{Csr, VertexId};
+use crate::operators::{advance, filter, neighborhood_reduce};
+use crate::util::timer::Timer;
+
+pub struct PageRankProblem {
+    pub ranks: Vec<f64>,
+    pub iterations: usize,
+}
+
+/// f64 atomic add via u64-bits CAS (the GPU's atomicAdd analog).
+#[inline]
+fn atomic_add_f64(slot: &AtomicU64, add: f64) {
+    let mut cur = slot.load(Ordering::Relaxed);
+    loop {
+        let new = f64::from_bits(cur) + add;
+        match slot.compare_exchange_weak(cur, new.to_bits(), Ordering::Relaxed, Ordering::Relaxed)
+        {
+            Ok(_) => return,
+            Err(now) => cur = now,
+        }
+    }
+}
+
+/// Push-mode PageRank: scatter rank/deg contributions along out-edges.
+pub fn pagerank(g: &Csr, config: &Config) -> (PageRankProblem, RunResult) {
+    let n = g.num_vertices;
+    let damp = config.pr_damping;
+    let eps = config.pr_epsilon;
+    let mut enactor = Enactor::new(config.clone());
+    enactor.begin_run();
+
+    let mut ranks: Vec<f64> = vec![1.0 / n as f64; n];
+    let mut frontier = Frontier::all_vertices(n);
+    let mut iters = 0usize;
+
+    while !frontier.is_empty() && iters < config.pr_max_iters {
+        let t = Timer::start();
+        iters += 1;
+        let next: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0f64.to_bits())).collect();
+
+        // Dangling mass (zero-out-degree vertices redistribute uniformly).
+        let dangling: f64 = (0..n as VertexId)
+            .filter(|&v| g.degree(v) == 0)
+            .map(|v| ranks[v as usize])
+            .sum();
+
+        let strategy = enactor.strategy_for(g, frontier.len());
+        let ctx = enactor.ctx();
+        // Hoist the per-source division out of the per-edge path (§Perf):
+        // shares[v] = rank(v)/outdeg(v), computed once per iteration.
+        let shares: Vec<f64> = (0..n)
+            .map(|v| {
+                let d = g.degree(v as VertexId);
+                if d == 0 { 0.0 } else { ranks[v] / d as f64 }
+            })
+            .collect();
+        let shares_ref = &shares;
+        // Advance over the full frontier: each edge scatters src rank.
+        let scatter = |s: VertexId, d: VertexId, _e: usize| {
+            atomic_add_f64(&next[d as usize], shares_ref[s as usize]);
+            false // no output frontier from the advance itself
+        };
+        advance::advance(&ctx, g, &Frontier::all_vertices(n), advance::AdvanceType::V2V, strategy, &scatter);
+        // one accumulation atomic per edge (batched stat)
+        enactor.counters.add_atomics(g.num_edges() as u64);
+
+        let base = (1.0 - damp) / n as f64 + damp * dangling / n as f64;
+        let new_ranks: Vec<f64> =
+            next.iter().map(|a| base + damp * f64::from_bits(a.load(Ordering::Relaxed))).collect();
+
+        // Filter: keep only unconverged vertices in the frontier (the
+        // paper removes "vertices whose PageRanks have already converged").
+        let old_ranks = std::mem::replace(&mut ranks, new_ranks);
+        let input_len = frontier.len();
+        let ranks_now = &ranks;
+        let keep = |v: VertexId| (ranks_now[v as usize] - old_ranks[v as usize]).abs() > eps;
+        let next_frontier = filter::filter(&ctx, &frontier, &keep);
+
+        enactor.record_iteration(input_len, next_frontier.len(), t.elapsed_ms(), false);
+        frontier = next_frontier;
+    }
+
+    let result = enactor.finish_run();
+    (PageRankProblem { ranks, iterations: iters }, result)
+}
+
+/// Pull-mode PageRank: gather over in-neighbors (atomic-free, the
+/// neighborhood-reduce operator) — the mode the AOT ELL artifact mirrors.
+pub fn pagerank_pull(g: &Csr, config: &Config) -> (PageRankProblem, RunResult) {
+    assert!(g.has_csc());
+    let n = g.num_vertices;
+    let damp = config.pr_damping;
+    let mut enactor = Enactor::new(config.clone());
+    enactor.begin_run();
+
+    let mut ranks: Vec<f64> = vec![1.0 / n as f64; n];
+    let all: Vec<VertexId> = (0..n as VertexId).collect();
+    let mut iters = 0usize;
+    loop {
+        let t = Timer::start();
+        iters += 1;
+        let dangling: f64 = (0..n as VertexId)
+            .filter(|&v| g.degree(v) == 0)
+            .map(|v| ranks[v as usize])
+            .sum();
+        let ctx = enactor.ctx();
+        let ranks_ref = &ranks;
+        let contribs = neighborhood_reduce::in_neighborhood_reduce(
+            &ctx,
+            g,
+            &all,
+            0.0f64,
+            |_v, u| ranks_ref[u as usize] / g.degree(u) as f64,
+            |a, b| a + b,
+        );
+        let base = (1.0 - damp) / n as f64 + damp * dangling / n as f64;
+        let new_ranks: Vec<f64> = contribs.iter().map(|c| base + damp * c).collect();
+        let delta: f64 =
+            new_ranks.iter().zip(&ranks).map(|(a, b)| (a - b).abs()).sum();
+        ranks = new_ranks;
+        enactor.record_iteration(n, n, t.elapsed_ms(), true);
+        if delta < config.pr_epsilon * n as f64 || iters >= config.pr_max_iters {
+            break;
+        }
+    }
+    let result = enactor.finish_run();
+    (PageRankProblem { ranks, iterations: iters }, result)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::pagerank_serial::pagerank_serial;
+    use crate::graph::builder;
+    use crate::graph::generators::{rmat, rmat::RmatParams};
+
+    fn close(a: &[f64], b: &[f64], tol: f64) {
+        assert_eq!(a.len(), b.len());
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert!((x - y).abs() < tol, "idx {i}: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn ranks_sum_to_one() {
+        let g = rmat(&RmatParams { scale: 9, edge_factor: 8, ..Default::default() });
+        let (p, _) = pagerank(&g, &Config::default());
+        let sum: f64 = p.ranks.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-6, "sum {sum}");
+    }
+
+    #[test]
+    fn matches_serial_reference() {
+        let g = rmat(&RmatParams { scale: 8, edge_factor: 8, ..Default::default() });
+        let mut cfg = Config::default();
+        cfg.pr_max_iters = 30;
+        let (p, _) = pagerank(&g, &cfg);
+        let want = pagerank_serial(&g, cfg.pr_damping, 30, cfg.pr_epsilon);
+        close(&p.ranks, &want, 1e-6);
+    }
+
+    #[test]
+    fn pull_matches_push() {
+        let g = rmat(&RmatParams { scale: 8, edge_factor: 8, ..Default::default() });
+        let mut cfg = Config::default();
+        cfg.pr_max_iters = 25;
+        cfg.pr_epsilon = 0.0; // run all iterations in both modes
+        let (push, _) = pagerank(&g, &cfg);
+        let (pull, _) = pagerank_pull(&g, &cfg);
+        close(&push.ranks, &pull.ranks, 1e-9);
+    }
+
+    #[test]
+    fn hub_ranks_highest() {
+        // star: center receives all rank contributions
+        let edges: Vec<(u32, u32)> = (1..=8).map(|v| (v, 0)).collect();
+        let g = builder::from_edges(9, &edges);
+        let (p, _) = pagerank(&g, &Config::default());
+        for v in 1..9 {
+            assert!(p.ranks[0] > p.ranks[v]);
+        }
+    }
+}

@@ -1,0 +1,154 @@
+//! Subgraph matching (paper §6.7): filtering-and-joining. The filtering
+//! phase prunes candidate vertices by label and degree with the filter
+//! operator; the joining phase grows partial embeddings edge-by-edge in
+//! query order, verifying adjacency via (sorted) neighbor-list binary
+//! search — the paper's "optimized set-intersection"-flavored join.
+
+use crate::config::Config;
+use crate::enactor::{Enactor, RunResult};
+use crate::frontier::Frontier;
+use crate::graph::{Csr, VertexId};
+use crate::operators::filter;
+use crate::util::timer::Timer;
+
+/// Query pattern: labeled vertices + undirected edges. Small (< ~6 nodes),
+/// as in the paper's evaluation.
+#[derive(Clone, Debug)]
+pub struct Query {
+    pub labels: Vec<u32>,
+    pub edges: Vec<(usize, usize)>,
+}
+
+impl Query {
+    pub fn triangle(label: u32) -> Query {
+        Query { labels: vec![label; 3], edges: vec![(0, 1), (1, 2), (0, 2)] }
+    }
+
+    pub fn path3(a: u32, b: u32, c: u32) -> Query {
+        Query { labels: vec![a, b, c], edges: vec![(0, 1), (1, 2)] }
+    }
+
+    fn degree(&self, q: usize) -> usize {
+        self.edges.iter().filter(|&&(a, b)| a == q || b == q).count()
+    }
+}
+
+pub struct SmResult {
+    /// Each embedding maps query vertex i -> data vertex embeddings[k][i].
+    pub embeddings: Vec<Vec<VertexId>>,
+}
+
+/// Find all embeddings of `q` in `g` (labels on data vertices given by
+/// `labels`). Isomorphism semantics: distinct data vertices per embedding.
+pub fn subgraph_match(
+    g: &Csr,
+    labels: &[u32],
+    q: &Query,
+    config: &Config,
+) -> (SmResult, RunResult) {
+    assert_eq!(labels.len(), g.num_vertices);
+    let mut enactor = Enactor::new(config.clone());
+    enactor.begin_run();
+    let t = Timer::start();
+
+    // ---- Filtering phase: candidates per query vertex (label + degree).
+    let mut candidates: Vec<Vec<VertexId>> = Vec::with_capacity(q.labels.len());
+    for (qi, &ql) in q.labels.iter().enumerate() {
+        let qdeg = q.degree(qi);
+        let ctx = enactor.ctx();
+        let all = Frontier::all_vertices(g.num_vertices);
+        let keep = |v: VertexId| labels[v as usize] == ql && g.degree(v) >= qdeg;
+        let f = filter::filter(&ctx, &all, &keep);
+        candidates.push(f.ids);
+    }
+
+    // ---- Joining phase: extend partial embeddings in query-vertex order.
+    // (Matching order: as given; production systems pick min-candidate
+    // order — the bench queries are tiny so ordering hardly matters.)
+    let mut partials: Vec<Vec<VertexId>> = candidates[0].iter().map(|&v| vec![v]).collect();
+    for qi in 1..q.labels.len() {
+        // query edges from qi to already-matched query vertices
+        let back_edges: Vec<usize> = q
+            .edges
+            .iter()
+            .filter_map(|&(a, b)| {
+                if a == qi && b < qi {
+                    Some(b)
+                } else if b == qi && a < qi {
+                    Some(a)
+                } else {
+                    None
+                }
+            })
+            .collect();
+        let mut next: Vec<Vec<VertexId>> = Vec::new();
+        for partial in &partials {
+            for &cand in &candidates[qi] {
+                if partial.contains(&cand) {
+                    continue; // isomorphism: injective mapping
+                }
+                let ok = back_edges
+                    .iter()
+                    .all(|&bq| g.neighbors(partial[bq]).binary_search(&cand).is_ok());
+                if ok {
+                    let mut e = partial.clone();
+                    e.push(cand);
+                    next.push(e);
+                }
+            }
+        }
+        partials = next;
+        enactor.counters.add_edges(partials.len() as u64);
+        if partials.is_empty() {
+            break;
+        }
+    }
+
+    enactor.record_iteration(candidates[0].len(), partials.len(), t.elapsed_ms(), false);
+    let result = enactor.finish_run();
+    (SmResult { embeddings: partials }, result)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder;
+
+    #[test]
+    fn triangle_query_finds_all_orientations() {
+        // one triangle 0-1-2 plus a dangling vertex
+        let g = builder::undirected_from_edges(4, &[(0, 1), (1, 2), (0, 2), (2, 3)]);
+        let labels = vec![7, 7, 7, 9];
+        let (r, _) = subgraph_match(&g, &labels, &Query::triangle(7), &Config::default());
+        // 3! = 6 automorphic embeddings of one triangle
+        assert_eq!(r.embeddings.len(), 6);
+    }
+
+    #[test]
+    fn labels_prune_candidates() {
+        let g = builder::undirected_from_edges(4, &[(0, 1), (1, 2), (0, 2), (2, 3)]);
+        let labels = vec![1, 2, 3, 9];
+        let (r, _) = subgraph_match(&g, &labels, &Query::path3(1, 2, 3), &Config::default());
+        // only 0(1) - 1(2) - 2(3)? But query path edges are (0,1),(1,2):
+        // 0-1 adjacent, 1-2 adjacent. Exactly one embedding.
+        assert_eq!(r.embeddings, vec![vec![0, 1, 2]]);
+    }
+
+    #[test]
+    fn no_match_when_label_absent() {
+        let g = builder::undirected_from_edges(3, &[(0, 1), (1, 2)]);
+        let labels = vec![1, 1, 1];
+        let (r, _) = subgraph_match(&g, &labels, &Query::triangle(2), &Config::default());
+        assert!(r.embeddings.is_empty());
+    }
+
+    #[test]
+    fn degree_filter_prunes() {
+        // path graph has no vertex of degree >= 2 except middle; triangle
+        // query needs all degree >= 2
+        let g = builder::undirected_from_edges(3, &[(0, 1), (1, 2)]);
+        let labels = vec![5, 5, 5];
+        let (r, _) = subgraph_match(&g, &labels, &Query::triangle(5), &Config::default());
+        assert!(r.embeddings.is_empty());
+    }
+}

@@ -1,0 +1,186 @@
+//! Single-source shortest path (paper §6.2, Algorithm 1): per iteration an
+//! advance relaxes distances with atomicMin, a filter removes redundant
+//! vertices, and the optional two-level near/far priority queue
+//! (delta-stepping, §5.1.5) reorganizes the remaining workload.
+
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+
+use crate::config::Config;
+use crate::enactor::{Enactor, RunResult};
+use crate::frontier::priority_queue::NearFarQueue;
+use crate::frontier::Frontier;
+use crate::graph::{Csr, VertexId};
+use crate::operators::{advance, filter};
+use crate::util::timer::Timer;
+
+pub const INFINITY_DIST: u64 = u64::MAX / 4;
+
+pub struct SsspProblem {
+    pub dist: Vec<u64>,
+    pub preds: Vec<i64>,
+    pub src: VertexId,
+}
+
+/// Atomic min over u64 distance slots.
+#[inline]
+fn atomic_min(slot: &AtomicU64, value: u64) -> u64 {
+    let mut cur = slot.load(Ordering::Relaxed);
+    while value < cur {
+        match slot.compare_exchange_weak(cur, value, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return cur,
+            Err(now) => cur = now,
+        }
+    }
+    cur
+}
+
+/// Run SSSP from `src`. With `config.sssp_delta > 0` the near/far priority
+/// queue is used (delta-stepping); delta = 0 degenerates to Bellman-Ford
+/// style full-frontier relaxation.
+pub fn sssp(g: &Csr, src: VertexId, config: &Config) -> (SsspProblem, RunResult) {
+    assert!(g.is_weighted(), "SSSP needs edge weights (paper: uniform [1,64])");
+    let n = g.num_vertices;
+    let mut enactor = Enactor::new(config.clone());
+    enactor.begin_run();
+
+    let dist: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(INFINITY_DIST)).collect();
+    let preds: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(u32::MAX)).collect();
+    dist[src as usize].store(0, Ordering::Relaxed);
+
+    // Output-queue-id stamps for redundant-vertex removal (Algorithm 1's
+    // Remove_Redundant): a vertex stays in the new frontier only if it was
+    // stamped during *this* iteration, collapsing duplicates to one copy.
+    let stamps: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(0)).collect();
+    let mut queue_id: u32 = 0;
+
+    let use_pq = config.sssp_delta > 0;
+    let mut pq = NearFarQueue::new(config.sssp_delta.max(1));
+
+    let mut frontier = Frontier::single(src);
+    while !frontier.is_empty() && enactor.within_iteration_cap() {
+        let t = Timer::start();
+        let prev_edges = enactor.counters.edges();
+        let input_len = frontier.len();
+        queue_id += 1;
+        let qid = queue_id;
+
+        let strategy = enactor.strategy_for(g, input_len);
+        let ctx = enactor.ctx();
+
+        // Advance: relax distances (Update_Label + Set_Pred fused).
+        let relax = |s: VertexId, d: VertexId, e: usize| {
+            let new_dist = dist[s as usize].load(Ordering::Relaxed) + g.weight(e) as u64;
+            let old = atomic_min(&dist[d as usize], new_dist);
+            if new_dist < old {
+                preds[d as usize].store(s, Ordering::Relaxed);
+                // first stamper this iteration emits the vertex
+                stamps[d as usize].swap(qid, Ordering::Relaxed) != qid
+            } else {
+                false
+            }
+        };
+        let raw = advance::advance(&ctx, g, &frontier, advance::AdvanceType::V2V, strategy, &relax);
+
+        // Filter: Remove_Redundant — keep one copy per stamped vertex.
+        // (the stamp swap in the advance already collapses most dupes; the
+        // exact pass cleans up the rest deterministically.)
+        let seen = crate::util::bitset::AtomicBitset::new(n);
+        let deduped = filter::filter(&ctx, &raw, &|v: VertexId| seen.set(v as usize));
+
+        // Priority queue: split into near/far, defer far work.
+        let next = if use_pq {
+            let near = pq.split(deduped.ids.iter().copied(), |v| {
+                dist[v as usize].load(Ordering::Relaxed)
+            });
+            if near.is_empty() {
+                let lvl = pq.next_level(
+                    |v| dist[v as usize].load(Ordering::Relaxed),
+                    |v| dist[v as usize].load(Ordering::Relaxed) < INFINITY_DIST,
+                );
+                Frontier::vertices(lvl)
+            } else {
+                Frontier::vertices(near)
+            }
+        } else {
+            deduped
+        };
+
+        // one relaxation atomic per traversed edge (batched stat)
+        let e_now = enactor.counters.edges();
+        enactor.counters.add_atomics(e_now.saturating_sub(prev_edges));
+        enactor.record_iteration(input_len, next.len(), t.elapsed_ms(), false);
+        frontier = next;
+    }
+
+    let result = enactor.finish_run();
+    let problem = SsspProblem {
+        dist: dist.into_iter().map(|a| a.into_inner()).collect(),
+        preds: preds
+            .into_iter()
+            .map(|a| {
+                let v = a.into_inner();
+                if v == u32::MAX {
+                    -1
+                } else {
+                    v as i64
+                }
+            })
+            .collect(),
+        src,
+    };
+    (problem, result)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::dijkstra::dijkstra;
+    use crate::graph::generators::{grid::GridParams, grid2d, rmat, rmat::RmatParams};
+    use crate::graph::{builder, Coo};
+
+    fn weighted_triangle() -> Csr {
+        let mut coo = Coo::new(3);
+        coo.push_weighted(0, 1, 10);
+        coo.push_weighted(0, 2, 3);
+        coo.push_weighted(2, 1, 3);
+        builder::from_coo(&coo, true)
+    }
+
+    #[test]
+    fn takes_cheaper_path() {
+        let g = weighted_triangle();
+        let (p, _) = sssp(&g, 0, &Config::default());
+        assert_eq!(p.dist[1], 6); // via 2, not direct 10
+        assert_eq!(p.dist[2], 3);
+        assert_eq!(p.preds[1], 2);
+    }
+
+    #[test]
+    fn matches_dijkstra_on_rmat() {
+        let g = rmat(&RmatParams { scale: 10, edge_factor: 8, weighted: true, ..Default::default() });
+        let (p, _) = sssp(&g, 0, &Config::default());
+        let want = dijkstra(&g, 0);
+        assert_eq!(p.dist, want);
+    }
+
+    #[test]
+    fn matches_dijkstra_on_grid_with_and_without_pq() {
+        let g = grid2d(&GridParams { width: 24, height: 24, weighted: true, ..Default::default() });
+        let want = dijkstra(&g, 0);
+        let (with_pq, _) = sssp(&g, 0, &Config::default());
+        assert_eq!(with_pq.dist, want);
+        let mut cfg = Config::default();
+        cfg.sssp_delta = 0; // Bellman-Ford mode
+        let (no_pq, _) = sssp(&g, 0, &cfg);
+        assert_eq!(no_pq.dist, want);
+    }
+
+    #[test]
+    fn unreachable_is_infinity() {
+        let mut coo = Coo::new(3);
+        coo.push_weighted(0, 1, 1);
+        let g = builder::from_coo(&coo, true);
+        let (p, _) = sssp(&g, 0, &Config::default());
+        assert_eq!(p.dist[2], INFINITY_DIST);
+    }
+}

@@ -1,0 +1,245 @@
+//! Who-To-Follow (paper §7.5, after Geil et al. [20]): Twitter's
+//! recommendation pipeline on a directed follow graph —
+//!
+//! 1. **PPR**: personalized PageRank from the query user;
+//! 2. **CoT**: the "Circle of Trust" — top-K vertices by PPR score;
+//! 3. **Money/SALSA**: bipartite link analysis with the CoT as hubs and
+//!    everything the CoT follows as authorities; authority scores rank the
+//!    final recommendations.
+//!
+//! All three stages run through Gunrock operators (advance-based scatter /
+//! neighborhood gather), demonstrating the 2-hop bipartite traversal the
+//! paper highlights.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::config::Config;
+use crate::enactor::{Enactor, RunResult};
+use crate::frontier::Frontier;
+use crate::graph::{Csr, VertexId};
+use crate::operators::advance;
+use crate::util::timer::Timer;
+
+pub struct WtfResult {
+    pub circle_of_trust: Vec<VertexId>,
+    pub recommendations: Vec<VertexId>,
+    pub ppr_scores: Vec<f64>,
+    pub ppr_ms: f64,
+    pub cot_ms: f64,
+    pub money_ms: f64,
+}
+
+#[inline]
+fn atomic_add_f64(slot: &AtomicU64, add: f64) {
+    let mut cur = slot.load(Ordering::Relaxed);
+    loop {
+        let new = f64::from_bits(cur) + add;
+        match slot.compare_exchange_weak(cur, new.to_bits(), Ordering::Relaxed, Ordering::Relaxed)
+        {
+            Ok(_) => return,
+            Err(now) => cur = now,
+        }
+    }
+}
+
+/// Personalized PageRank with restart at `user` (push-mode advance).
+pub fn ppr(g: &Csr, user: VertexId, iters: usize, damp: f64, enactor: &mut Enactor) -> Vec<f64> {
+    let n = g.num_vertices;
+    let mut scores = vec![0.0f64; n];
+    scores[user as usize] = 1.0;
+    for _ in 0..iters {
+        let next: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0f64.to_bits())).collect();
+        let strategy = enactor.strategy_for(g, n);
+        let ctx = enactor.ctx();
+        let scores_ref = &scores;
+        let scatter = |s: VertexId, d: VertexId, _e: usize| {
+            let deg = g.degree(s);
+            if deg > 0 {
+                atomic_add_f64(&next[d as usize], scores_ref[s as usize] / deg as f64);
+            }
+            false
+        };
+        advance::advance(&ctx, g, &Frontier::all_vertices(n), advance::AdvanceType::V2V, strategy, &scatter);
+        // dangling mass restarts at the user, like the walk teleporting home
+        let dangling: f64 = (0..n as VertexId)
+            .filter(|&v| g.degree(v) == 0)
+            .map(|v| scores[v as usize])
+            .sum();
+        for (v, slot) in next.iter().enumerate() {
+            let mut x = damp * f64::from_bits(slot.load(Ordering::Relaxed));
+            if v == user as usize {
+                x += (1.0 - damp) + damp * dangling;
+            }
+            scores[v] = x;
+        }
+    }
+    scores
+}
+
+/// Top-k vertices by score, excluding the user (the Circle of Trust; the
+/// original WTF uses K = 1000).
+pub fn circle_of_trust(scores: &[f64], user: VertexId, k: usize) -> Vec<VertexId> {
+    let mut idx: Vec<VertexId> = (0..scores.len() as VertexId)
+        .filter(|&v| v != user && scores[v as usize] > 0.0)
+        .collect();
+    idx.sort_unstable_by(|&a, &b| {
+        scores[b as usize].partial_cmp(&scores[a as usize]).unwrap().then(a.cmp(&b))
+    });
+    idx.truncate(k);
+    idx
+}
+
+/// Money/SALSA on the bipartite (CoT -> followed) graph; returns
+/// (authority_scores, hub_scores) dense over the data graph's vertices.
+pub fn money(
+    g: &Csr,
+    cot: &[VertexId],
+    iters: usize,
+    enactor: &mut Enactor,
+) -> (Vec<f64>, Vec<f64>) {
+    let n = g.num_vertices;
+    // in-CoT marker + hub scores init uniform
+    let mut hub = vec![0.0f64; n];
+    for &h in cot {
+        hub[h as usize] = 1.0 / cot.len().max(1) as f64;
+    }
+    let mut auth = vec![0.0f64; n];
+    // Authority in-degree *restricted to CoT hubs* for the SALSA backward
+    // normalization.
+    let mut auth_indeg = vec![0u32; n];
+    for &h in cot {
+        for &a in g.neighbors(h) {
+            auth_indeg[a as usize] += 1;
+        }
+    }
+
+    for _ in 0..iters {
+        // forward: hubs scatter to authorities (2-hop bipartite advance)
+        let next_auth: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0f64.to_bits())).collect();
+        let hub_frontier = Frontier::vertices(cot.to_vec());
+        let strategy = enactor.strategy_for(g, cot.len());
+        let ctx = enactor.ctx();
+        let hub_ref = &hub;
+        let fwd = |s: VertexId, d: VertexId, _e: usize| {
+            let deg = g.degree(s);
+            if deg > 0 {
+                atomic_add_f64(&next_auth[d as usize], hub_ref[s as usize] / deg as f64);
+            }
+            false
+        };
+        advance::advance(&ctx, g, &hub_frontier, advance::AdvanceType::V2V, strategy, &fwd);
+        for v in 0..n {
+            auth[v] = f64::from_bits(next_auth[v].load(Ordering::Relaxed));
+        }
+
+        // backward: authorities push back to hubs (via hubs' own edges:
+        // hub gathers auth/auth_indeg over its followings).
+        let next_hub: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0f64.to_bits())).collect();
+        let ctx = enactor.ctx();
+        let auth_ref = &auth;
+        let auth_indeg_ref = &auth_indeg;
+        let bwd = |s: VertexId, d: VertexId, _e: usize| {
+            let indeg = auth_indeg_ref[d as usize];
+            if indeg > 0 {
+                atomic_add_f64(&next_hub[s as usize], auth_ref[d as usize] / indeg as f64);
+            }
+            false
+        };
+        advance::advance(&ctx, g, &hub_frontier, advance::AdvanceType::V2V, strategy, &bwd);
+        for &h in cot {
+            hub[h as usize] = f64::from_bits(next_hub[h as usize].load(Ordering::Relaxed));
+        }
+    }
+    (auth, hub)
+}
+
+/// Full WTF pipeline for `user`. K = CoT size (paper uses 1000),
+/// `num_recs` recommendations returned.
+pub fn wtf(
+    g: &Csr,
+    user: VertexId,
+    k: usize,
+    num_recs: usize,
+    config: &Config,
+) -> (WtfResult, RunResult) {
+    let mut enactor = Enactor::new(config.clone());
+    enactor.begin_run();
+
+    let t = Timer::start();
+    let scores = ppr(g, user, 10, 0.85, &mut enactor);
+    let ppr_ms = t.elapsed_ms();
+
+    let t = Timer::start();
+    let cot = circle_of_trust(&scores, user, k);
+    let cot_ms = t.elapsed_ms();
+
+    let t = Timer::start();
+    let (auth, _hub) = money(g, &cot, 8, &mut enactor);
+    let money_ms = t.elapsed_ms();
+
+    // Recommend top authorities the user does not already follow.
+    let follows: std::collections::HashSet<VertexId> = g.neighbors(user).iter().copied().collect();
+    let mut recs: Vec<VertexId> = (0..g.num_vertices as VertexId)
+        .filter(|&v| v != user && !follows.contains(&v) && auth[v as usize] > 0.0)
+        .collect();
+    recs.sort_unstable_by(|&a, &b| {
+        auth[b as usize].partial_cmp(&auth[a as usize]).unwrap().then(a.cmp(&b))
+    });
+    recs.truncate(num_recs);
+
+    enactor.record_iteration(g.num_vertices, recs.len(), ppr_ms + cot_ms + money_ms, false);
+    let result = enactor.finish_run();
+    (
+        WtfResult {
+            circle_of_trust: cot,
+            recommendations: recs,
+            ppr_scores: scores,
+            ppr_ms,
+            cot_ms,
+            money_ms,
+        },
+        result,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder;
+    use crate::graph::generators::{bipartite_follow_graph, bipartite::FollowGraphParams};
+
+    #[test]
+    fn ppr_concentrates_near_user() {
+        // 0 follows 1, 1 follows 2, 3 isolated-ish
+        let g = builder::from_edges(4, &[(0, 1), (1, 2), (3, 0)]);
+        let mut e = Enactor::new(Config::default());
+        let s = ppr(&g, 0, 20, 0.85, &mut e);
+        assert!(s[0] > s[2], "restart mass at user");
+        assert!(s[1] > s[2], "1-hop beats 2-hop");
+        assert!(s[3] < 1e-12, "nothing flows to non-reachable 3");
+    }
+
+    #[test]
+    fn cot_excludes_user_and_ranks() {
+        let scores = vec![0.5, 0.1, 0.3, 0.0];
+        let cot = circle_of_trust(&scores, 0, 2);
+        assert_eq!(cot, vec![2, 1]);
+    }
+
+    #[test]
+    fn wtf_recommends_friends_of_friends() {
+        // user 0 follows 1,2; 1 and 2 both follow 3 => recommend 3.
+        let g = builder::from_edges(5, &[(0, 1), (0, 2), (1, 3), (2, 3), (2, 4)]);
+        let (r, _) = wtf(&g, 0, 3, 2, &Config::default());
+        assert_eq!(r.recommendations.first(), Some(&3));
+    }
+
+    #[test]
+    fn wtf_runs_on_generated_follow_graph() {
+        let g = bipartite_follow_graph(&FollowGraphParams { users: 512, avg_follows: 8, ..Default::default() });
+        let (r, run) = wtf(&g, 5, 50, 10, &Config::default());
+        assert_eq!(r.circle_of_trust.len(), 50);
+        assert!(r.recommendations.len() <= 10);
+        assert!(run.edges_visited > 0);
+    }
+}

@@ -1,0 +1,221 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the XLA CPU client via the
+//! `xla` crate — the request-path half of the three-layer architecture
+//! (Python only ever runs at build time).
+//!
+//! Artifacts are described by `artifacts/manifest.txt` lines:
+//! `<name> <n> <k> <filename>`; executables are compiled on first use and
+//! cached per (name, n, k).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::graph::Csr;
+
+/// One artifact variant from the manifest.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub n: usize,
+    pub k: usize,
+    pub file: PathBuf,
+}
+
+/// Parse the artifact manifest.
+pub fn read_manifest(dir: &Path) -> Result<Vec<ArtifactSpec>> {
+    let path = dir.join("manifest.txt");
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("read manifest {} (run `make artifacts`)", path.display()))?;
+    let mut out = Vec::new();
+    for line in text.lines() {
+        let t = line.trim();
+        if t.is_empty() {
+            continue;
+        }
+        let parts: Vec<&str> = t.split_whitespace().collect();
+        if parts.len() != 4 {
+            bail!("malformed manifest line: {t}");
+        }
+        out.push(ArtifactSpec {
+            name: parts[0].to_string(),
+            n: parts[1].parse()?,
+            k: parts[2].parse()?,
+            file: dir.join(parts[3]),
+        });
+    }
+    Ok(out)
+}
+
+/// PJRT client + compiled-executable cache.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+    specs: Vec<ArtifactSpec>,
+    cache: HashMap<(String, usize, usize), xla::PjRtLoadedExecutable>,
+}
+
+impl XlaRuntime {
+    /// Create a CPU PJRT client and load the manifest from `artifacts_dir`.
+    pub fn new(artifacts_dir: &Path) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT: {e:?}"))?;
+        let specs = read_manifest(artifacts_dir)?;
+        Ok(XlaRuntime { client, specs, cache: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Smallest manifest variant of `name` fitting (min_n, min_k).
+    fn pick_spec(&self, name: &str, min_n: usize, min_k: usize) -> Result<ArtifactSpec> {
+        self.specs
+            .iter()
+            .filter(|s| s.name == name && s.n >= min_n && s.k >= min_k)
+            .min_by_key(|s| (s.n, s.k))
+            .cloned()
+            .with_context(|| {
+                format!("no '{name}' artifact with n>={min_n}, k>={min_k}; rerun `make artifacts`")
+            })
+    }
+
+    /// Compile (with cache) and return the executable for a spec.
+    fn compiled(&mut self, spec: &ArtifactSpec) -> Result<&xla::PjRtLoadedExecutable> {
+        let key = (spec.name.clone(), spec.n, spec.k);
+        if !self.cache.contains_key(&key) {
+            let proto =
+                xla::HloModuleProto::from_text_file(spec.file.to_str().context("non-utf8 path")?)
+                    .map_err(|e| anyhow!("parse {}: {e:?}", spec.file.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {}: {e:?}", spec.file.display()))?;
+            self.cache.insert(key.clone(), exe);
+        }
+        Ok(self.cache.get(&key).unwrap())
+    }
+
+    /// Run PageRank on `g` through the AOT artifact: pads the graph into
+    /// the ELL slab, iterates `pagerank_step` until the on-device L1 delta
+    /// drops below eps. Returns (ranks, iterations).
+    pub fn pagerank(&mut self, g: &Csr, eps: f32, max_iters: usize) -> Result<(Vec<f32>, usize)> {
+        let nv = g.num_vertices;
+        let max_in = (0..nv).map(|v| g.in_degree(v as u32)).max().unwrap_or(0);
+        let spec = self.pick_spec("pagerank_step", nv, max_in.max(1))?;
+        let (n, k) = (spec.n, spec.k);
+        let (cols, vals, dangling, dropped) = g.to_ell_transposed(n, k);
+        if dropped > 0 {
+            bail!("graph exceeds ELL width k={k} (dropped {dropped} entries)");
+        }
+
+        let cols_lit =
+            xla::Literal::vec1(&cols).reshape(&[n as i64, k as i64]).map_err(|e| anyhow!("{e:?}"))?;
+        let vals_lit =
+            xla::Literal::vec1(&vals).reshape(&[n as i64, k as i64]).map_err(|e| anyhow!("{e:?}"))?;
+        let dang_lit = xla::Literal::vec1(&dangling);
+        // padded init: rank mass only on real vertices
+        let mut pr: Vec<f32> = vec![0.0; n];
+        for x in pr.iter_mut().take(nv) {
+            *x = 1.0 / nv as f32;
+        }
+
+        let exe = self.compiled(&spec)?;
+        let mut iters = 0usize;
+        loop {
+            iters += 1;
+            let pr_lit = xla::Literal::vec1(&pr);
+            let args: Vec<&xla::Literal> = vec![&cols_lit, &vals_lit, &pr_lit, &dang_lit];
+            let result = exe.execute::<&xla::Literal>(&args).map_err(|e| anyhow!("execute: {e:?}"))?
+                [0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("{e:?}"))?;
+            // jit lowered with return_tuple=True: (new_pr, delta)
+            let elems = result.to_tuple().map_err(|e| anyhow!("{e:?}"))?;
+            let new_pr = elems[0].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+            let delta: f32 =
+                elems[1].get_first_element::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+            pr = new_pr;
+            if delta < eps || iters >= max_iters {
+                break;
+            }
+        }
+        pr.truncate(nv);
+        Ok((pr, iters))
+    }
+
+    /// Run pull-direction BFS through the AOT artifact. Returns depth
+    /// labels (u32::MAX unreachable) and iteration count.
+    pub fn bfs_pull(&mut self, g: &Csr, src: u32, max_iters: usize) -> Result<(Vec<u32>, usize)> {
+        let nv = g.num_vertices;
+        let max_in = (0..nv).map(|v| g.in_degree(v as u32)).max().unwrap_or(0);
+        let spec = self.pick_spec("bfs_pull_step", nv, max_in.max(1))?;
+        let (n, k) = (spec.n, spec.k);
+        // incoming-neighbor ELL slab (cols only)
+        let (cols, _vals, _dang, dropped) = g.to_ell_transposed(n, k);
+        if dropped > 0 {
+            bail!("graph exceeds ELL width k={k}");
+        }
+        let cols_lit =
+            xla::Literal::vec1(&cols).reshape(&[n as i64, k as i64]).map_err(|e| anyhow!("{e:?}"))?;
+
+        let mut visited: Vec<f32> = vec![0.0; n];
+        visited[src as usize] = 1.0;
+        let mut depth = vec![u32::MAX; nv];
+        depth[src as usize] = 0;
+
+        let exe = self.compiled(&spec)?;
+        let mut iters = 0usize;
+        loop {
+            iters += 1;
+            let vis_lit = xla::Literal::vec1(&visited);
+            let args: Vec<&xla::Literal> = vec![&cols_lit, &vis_lit];
+            let result = exe.execute::<&xla::Literal>(&args).map_err(|e| anyhow!("execute: {e:?}"))?
+                [0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("{e:?}"))?;
+            let elems = result.to_tuple().map_err(|e| anyhow!("{e:?}"))?;
+            let frontier = elems[0].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+            let new_visited = elems[1].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+            let size: f32 = elems[2].get_first_element::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+            for (v, d) in depth.iter_mut().enumerate().take(nv) {
+                if *d == u32::MAX && frontier[v] > 0.5 {
+                    *d = iters as u32;
+                }
+            }
+            visited = new_visited;
+            if size < 0.5 || iters >= max_iters {
+                break;
+            }
+        }
+        Ok((depth, iters))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parser() {
+        let dir = std::env::temp_dir().join(format!("gunrock_manifest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.txt"),
+            "pagerank_step 1024 64 pagerank_step_n1024_k64.hlo.txt\nbfs_pull_step 4096 32 x.hlo.txt\n",
+        )
+        .unwrap();
+        let specs = read_manifest(&dir).unwrap();
+        assert_eq!(specs.len(), 2);
+        assert_eq!(specs[0].name, "pagerank_step");
+        assert_eq!(specs[0].n, 1024);
+        assert_eq!(specs[1].k, 32);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn manifest_missing_is_error() {
+        let dir = std::env::temp_dir().join("gunrock_no_such_dir_xyz");
+        assert!(read_manifest(&dir).is_err());
+    }
+}

@@ -1,0 +1,159 @@
+//! Atomic bitset — the "per-node bitmap" the paper uses for visited-status
+//! checks in idempotent / pull-based traversal (§5.1.4, §5.2.1).
+//!
+//! All mutation goes through atomics so concurrent operator chunks can mark
+//! vertices without locks, mirroring the GPU's global bitmask.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+pub struct AtomicBitset {
+    words: Vec<AtomicU64>,
+    len: usize,
+}
+
+impl AtomicBitset {
+    pub fn new(len: usize) -> Self {
+        let words = (0..len.div_ceil(64)).map(|_| AtomicU64::new(0)).collect();
+        AtomicBitset { words, len }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Set bit `i`; returns true if this call flipped it 0 -> 1 (i.e. we
+    /// "won" the concurrent discovery of vertex i).
+    #[inline]
+    pub fn set(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        let mask = 1u64 << (i & 63);
+        let prev = self.words[i >> 6].fetch_or(mask, Ordering::Relaxed);
+        prev & mask == 0
+    }
+
+    /// Non-atomic-looking read (Relaxed). Fine for the BSP model: readers
+    /// in step k only need writes from step k-1, which a barrier ordered.
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        self.words[i >> 6].load(Ordering::Relaxed) & (1u64 << (i & 63)) != 0
+    }
+
+    #[inline]
+    pub fn clear_bit(&self, i: usize) {
+        let mask = !(1u64 << (i & 63));
+        self.words[i >> 6].fetch_and(mask, Ordering::Relaxed);
+    }
+
+    pub fn clear_all(&self) {
+        for w in &self.words {
+            w.store(0, Ordering::Relaxed);
+        }
+    }
+
+    /// Population count.
+    pub fn count(&self) -> usize {
+        self.words.iter().map(|w| w.load(Ordering::Relaxed).count_ones() as usize).sum()
+    }
+
+    /// Iterate set bit indices (ascending).
+    pub fn iter_set(&self) -> impl Iterator<Item = usize> + '_ {
+        self.words.iter().enumerate().flat_map(move |(wi, w)| {
+            let mut bits = w.load(Ordering::Relaxed);
+            std::iter::from_fn(move || {
+                if bits == 0 {
+                    None
+                } else {
+                    let tz = bits.trailing_zeros() as usize;
+                    bits &= bits - 1;
+                    Some(wi * 64 + tz)
+                }
+            })
+        })
+    }
+
+    /// Collect unset bit indices < len (the "unvisited frontier" for pull).
+    pub fn unset_indices(&self) -> Vec<u32> {
+        let mut out = Vec::with_capacity(self.len - self.count());
+        for i in 0..self.len {
+            if !self.get(i) {
+                out.push(i as u32);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_and_get() {
+        let b = AtomicBitset::new(130);
+        assert!(!b.get(0));
+        assert!(b.set(0));
+        assert!(!b.set(0)); // second set loses the race with itself
+        assert!(b.get(0));
+        assert!(b.set(129));
+        assert!(b.get(129));
+        assert_eq!(b.count(), 2);
+    }
+
+    #[test]
+    fn clear() {
+        let b = AtomicBitset::new(64);
+        b.set(5);
+        b.set(63);
+        b.clear_bit(5);
+        assert!(!b.get(5));
+        assert!(b.get(63));
+        b.clear_all();
+        assert_eq!(b.count(), 0);
+    }
+
+    #[test]
+    fn iter_set_matches() {
+        let b = AtomicBitset::new(200);
+        for i in (0..200).step_by(7) {
+            b.set(i);
+        }
+        let got: Vec<usize> = b.iter_set().collect();
+        let want: Vec<usize> = (0..200).step_by(7).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn unset_indices_complement() {
+        let b = AtomicBitset::new(50);
+        for i in 0..50 {
+            if i % 3 == 0 {
+                b.set(i);
+            }
+        }
+        let unset = b.unset_indices();
+        assert!(unset.iter().all(|&i| i % 3 != 0));
+        assert_eq!(unset.len() + b.count(), 50);
+    }
+
+    #[test]
+    fn concurrent_set_exactly_one_winner() {
+        let b = AtomicBitset::new(1024);
+        let wins = crate::util::par::run_partitioned(8, 8, |_, _, _| {
+            let mut w = 0usize;
+            for i in 0..1024 {
+                if b.set(i) {
+                    w += 1;
+                }
+            }
+            w
+        });
+        assert_eq!(wins.iter().sum::<usize>(), 1024);
+    }
+}

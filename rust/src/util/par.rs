@@ -1,0 +1,272 @@
+//! Scoped parallel-for worker pool over `std::thread` (no rayon offline).
+//!
+//! The framework's operators are bulk-synchronous: each operator splits its
+//! frontier into contiguous chunks ("thread blocks" in the virtual-GPU
+//! model, see `gpu_sim`) and processes chunks on a fixed set of worker
+//! threads with a barrier at the end — exactly the BSP step semantics of
+//! the paper's abstraction.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads to use. Overridable via the GUNROCK_THREADS
+/// environment variable (the config system also plumbs this through).
+pub fn num_threads() -> usize {
+    if let Ok(v) = std::env::var("GUNROCK_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            if n >= 1 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// Run `f(worker_id, start, end)` over `[0, len)` split into `workers`
+/// contiguous slices, one per worker, in parallel. Returns each worker's
+/// result in worker order. A barrier is implied (scope join).
+pub fn run_partitioned<T, F>(len: usize, workers: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize, usize, usize) -> T + Sync,
+{
+    let workers = workers.max(1);
+    if len == 0 {
+        return Vec::new();
+    }
+    if workers == 1 || len < 2 {
+        return vec![f(0, 0, len)];
+    }
+    let per = len.div_ceil(workers);
+    let mut out: Vec<Option<T>> = (0..workers).map(|_| None).collect();
+    std::thread::scope(|s| {
+        let mut handles = Vec::with_capacity(workers);
+        for (w, slot) in out.iter_mut().enumerate() {
+            let start = (w * per).min(len);
+            let end = ((w + 1) * per).min(len);
+            let f = &f;
+            handles.push(s.spawn(move || {
+                *slot = Some(f(w, start, end));
+            }));
+        }
+    });
+    out.into_iter().map(|o| o.expect("worker panicked")).collect()
+}
+
+/// Dynamic work-stealing variant: workers grab fixed-size chunks from a
+/// shared atomic counter until the range is exhausted. Better for ragged
+/// per-item cost (e.g. TWC advance on scale-free frontiers).
+pub fn run_dynamic<T, F>(len: usize, workers: usize, chunk: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize, usize, usize) -> T + Sync,
+    T: Default,
+{
+    let workers = workers.max(1);
+    let chunk = chunk.max(1);
+    if len == 0 {
+        return Vec::new();
+    }
+    if workers == 1 {
+        return vec![f(0, 0, len)];
+    }
+    let cursor = AtomicUsize::new(0);
+    let results: Vec<std::sync::Mutex<Vec<T>>> =
+        (0..workers).map(|_| std::sync::Mutex::new(Vec::new())).collect();
+    std::thread::scope(|s| {
+        for w in 0..workers {
+            let cursor = &cursor;
+            let f = &f;
+            let slot = &results[w];
+            s.spawn(move || {
+                let mut local = Vec::new();
+                loop {
+                    let start = cursor.fetch_add(chunk, Ordering::Relaxed);
+                    if start >= len {
+                        break;
+                    }
+                    let end = (start + chunk).min(len);
+                    local.push(f(w, start, end));
+                }
+                *slot.lock().unwrap() = local;
+            });
+        }
+    });
+    results
+        .into_iter()
+        .flat_map(|m| m.into_inner().unwrap())
+        .collect()
+}
+
+/// Parallel in-place transform of a mutable slice: each worker gets a
+/// contiguous sub-slice. `f(global_index, &mut item)`.
+pub fn for_each_mut<T, F>(xs: &mut [T], workers: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut T) + Sync,
+{
+    let workers = workers.max(1);
+    let len = xs.len();
+    if len == 0 {
+        return;
+    }
+    if workers == 1 {
+        for (i, x) in xs.iter_mut().enumerate() {
+            f(i, x);
+        }
+        return;
+    }
+    let per = len.div_ceil(workers);
+    std::thread::scope(|s| {
+        let mut rest = xs;
+        let mut base = 0usize;
+        while !rest.is_empty() {
+            let take = per.min(rest.len());
+            let (head, tail) = rest.split_at_mut(take);
+            let f = &f;
+            let start = base;
+            s.spawn(move || {
+                for (i, x) in head.iter_mut().enumerate() {
+                    f(start + i, x);
+                }
+            });
+            rest = tail;
+            base += take;
+        }
+    });
+}
+
+/// Parallel map-reduce: map each index, combine with `combine`.
+pub fn map_reduce<T, M, C>(len: usize, workers: usize, identity: T, map: M, combine: C) -> T
+where
+    T: Send + Sync + Clone,
+    M: Fn(usize) -> T + Sync,
+    C: Fn(T, T) -> T + Sync + Send,
+{
+    let partials = run_partitioned(len, workers, |_, start, end| {
+        let mut acc = identity.clone();
+        for i in start..end {
+            acc = combine(acc, map(i));
+        }
+        acc
+    });
+    partials.into_iter().fold(identity, |a, b| combine(a, b))
+}
+
+/// Exclusive prefix sum (scan) — the workhorse of frontier allocation
+/// (paper §4.1: "the first part is typically implemented with prefix-sum").
+/// Two-pass parallel scan for large inputs. Returns the total.
+pub fn exclusive_scan(xs: &mut [usize], workers: usize) -> usize {
+    let len = xs.len();
+    if len == 0 {
+        return 0;
+    }
+    let workers = workers.max(1);
+    if workers == 1 || len < 4096 {
+        let mut acc = 0usize;
+        for x in xs.iter_mut() {
+            let v = *x;
+            *x = acc;
+            acc += v;
+        }
+        return acc;
+    }
+    // Pass 1: per-chunk sums.
+    let per = len.div_ceil(workers);
+    let sums = run_partitioned(len, workers, |_, start, end| {
+        xs[start..end].iter().sum::<usize>()
+    });
+    // Chunk offsets.
+    let mut offsets = Vec::with_capacity(sums.len());
+    let mut acc = 0usize;
+    for s in &sums {
+        offsets.push(acc);
+        acc += s;
+    }
+    let total = acc;
+    // Pass 2: local scan with chunk offset. Need split_at_mut juggling.
+    std::thread::scope(|s| {
+        let mut rest: &mut [usize] = xs;
+        let mut idx = 0usize;
+        let mut w = 0usize;
+        while !rest.is_empty() {
+            let take = per.min(rest.len());
+            let (head, tail) = rest.split_at_mut(take);
+            let base = offsets[w];
+            s.spawn(move || {
+                let mut acc = base;
+                for x in head.iter_mut() {
+                    let v = *x;
+                    *x = acc;
+                    acc += v;
+                }
+            });
+            rest = tail;
+            idx += take;
+            w += 1;
+        }
+        let _ = idx;
+    });
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partitioned_covers_range_once() {
+        let counts: Vec<usize> = run_partitioned(1000, 7, |_, s, e| e - s);
+        assert_eq!(counts.iter().sum::<usize>(), 1000);
+    }
+
+    #[test]
+    fn partitioned_single_worker() {
+        let r = run_partitioned(10, 1, |w, s, e| (w, s, e));
+        assert_eq!(r, vec![(0, 0, 10)]);
+    }
+
+    #[test]
+    fn dynamic_covers_range_once() {
+        let pieces = run_dynamic(10_000, 8, 64, |_, s, e| (s, e));
+        let mut sorted = pieces.clone();
+        sorted.sort();
+        let mut expect = 0;
+        for (s, e) in sorted {
+            assert_eq!(s, expect);
+            expect = e;
+        }
+        assert_eq!(expect, 10_000);
+    }
+
+    #[test]
+    fn for_each_mut_touches_all() {
+        let mut xs = vec![0usize; 5000];
+        for_each_mut(&mut xs, 4, |i, x| *x = i * 2);
+        for (i, x) in xs.iter().enumerate() {
+            assert_eq!(*x, i * 2);
+        }
+    }
+
+    #[test]
+    fn map_reduce_sum() {
+        let total = map_reduce(1000, 4, 0usize, |i| i, |a, b| a + b);
+        assert_eq!(total, 999 * 1000 / 2);
+    }
+
+    #[test]
+    fn scan_matches_serial() {
+        for n in [0usize, 1, 2, 100, 5000, 10_000] {
+            let mut xs: Vec<usize> = (0..n).map(|i| (i * 7 + 3) % 11).collect();
+            let mut expect = xs.clone();
+            let mut acc = 0usize;
+            for x in expect.iter_mut() {
+                let v = *x;
+                *x = acc;
+                acc += v;
+            }
+            let total = exclusive_scan(&mut xs, 4);
+            assert_eq!(xs, expect, "n={n}");
+            assert_eq!(total, acc);
+        }
+    }
+}

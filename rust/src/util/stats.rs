@@ -1,0 +1,96 @@
+//! Summary statistics used by the bench harness and the virtual-GPU
+//! counters: mean / geomean / median / percentiles, and the MTEPS metric
+//! definition from the paper's measurement methodology (§7).
+
+/// Arithmetic mean.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Geometric mean (paper reports geomean speedups, Table 5).
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let log_sum: f64 = xs.iter().map(|&x| x.max(1e-300).ln()).sum();
+    (log_sum / xs.len() as f64).exp()
+}
+
+/// p-th percentile (0..=100), nearest-rank on a sorted copy.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
+    v[rank.min(v.len() - 1)]
+}
+
+pub fn median(xs: &[f64]) -> f64 {
+    percentile(xs, 50.0)
+}
+
+pub fn min(xs: &[f64]) -> f64 {
+    xs.iter().cloned().fold(f64::INFINITY, f64::min)
+}
+
+pub fn max(xs: &[f64]) -> f64 {
+    xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+}
+
+/// Sample standard deviation.
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    let var = xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64;
+    var.sqrt()
+}
+
+/// Millions of traversed edges per second — the paper's throughput metric:
+/// edges visited during the run divided by runtime (§7, "Measurement
+/// methodology").
+pub fn mteps(edges_visited: u64, runtime_ms: f64) -> f64 {
+    if runtime_ms <= 0.0 {
+        return 0.0;
+    }
+    edges_visited as f64 / (runtime_ms * 1e3)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_geomean() {
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        let g = geomean(&[1.0, 100.0]);
+        assert!((g - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentile_median() {
+        let xs = [5.0, 1.0, 3.0, 2.0, 4.0];
+        assert_eq!(median(&xs), 3.0);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+    }
+
+    #[test]
+    fn mteps_definition() {
+        // 1M edges in 1000 ms = 1 MTEPS.
+        assert!((mteps(1_000_000, 1000.0) - 1.0).abs() < 1e-12);
+        assert_eq!(mteps(100, 0.0), 0.0);
+    }
+
+    #[test]
+    fn stddev_constant_is_zero() {
+        assert_eq!(stddev(&[2.0, 2.0, 2.0]), 0.0);
+        assert!(stddev(&[1.0, 3.0]) > 0.0);
+    }
+}

@@ -1,0 +1,65 @@
+//! Wall-clock timers and a tiny bench loop (criterion is unavailable
+//! offline; `harness::bench` builds on this).
+
+use std::time::Instant;
+
+/// Simple scope timer returning elapsed milliseconds.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer { start: Instant::now() }
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e3
+    }
+
+    pub fn elapsed_us(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e6
+    }
+}
+
+/// Time a closure, returning (result, milliseconds).
+pub fn time_ms<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t = Timer::start();
+    let r = f();
+    (r, t.elapsed_ms())
+}
+
+/// Run `f` `warmup` times unmeasured then `reps` times measured; returns
+/// per-rep milliseconds.
+pub fn bench_ms<T>(warmup: usize, reps: usize, mut f: impl FnMut() -> T) -> Vec<f64> {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut times = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t = Timer::start();
+        std::hint::black_box(f());
+        times.push(t.elapsed_ms());
+    }
+    times
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_monotone() {
+        let t = Timer::start();
+        let a = t.elapsed_us();
+        let b = t.elapsed_us();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn bench_returns_reps() {
+        let times = bench_ms(1, 5, || 1 + 1);
+        assert_eq!(times.len(), 5);
+        assert!(times.iter().all(|&t| t >= 0.0));
+    }
+}

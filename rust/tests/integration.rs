@@ -1,0 +1,274 @@
+//! Integration tests: primitives cross-validated against independent
+//! baselines on whole dataset analogs, with the full operator/enactor
+//! stack in the loop (multiple strategies, optimizations on and off).
+
+use gunrock::baselines::{
+    bc_brandes::bc_brandes, bfs_serial::bfs_serial, cc_unionfind::cc_unionfind,
+    dijkstra::dijkstra, pagerank_serial::pagerank_serial, tc_forward::tc_forward,
+};
+use gunrock::config::Config;
+use gunrock::graph::{datasets, properties};
+use gunrock::harness::suite;
+use gunrock::load_balance::StrategyKind;
+use gunrock::primitives::{bc, bfs, cc, pagerank, sssp, tc, wtf};
+
+fn small_suite() -> Vec<&'static str> {
+    vec!["kron_g500-logn9", "grid_4k", "rgg_1k", "smallworld"]
+}
+
+#[test]
+fn bfs_matches_serial_on_every_dataset_class() {
+    for name in small_suite() {
+        let g = datasets::load(name, false);
+        let src = suite::pick_source(&g);
+        let want = bfs_serial(&g, src);
+        for (dopt, idem) in [(false, false), (true, false), (false, true), (true, true)] {
+            let mut cfg = Config::default();
+            cfg.direction_optimized = dopt;
+            cfg.idempotence = idem;
+            let (p, _) = bfs::bfs(&g, src, &cfg);
+            assert_eq!(p.labels, want, "{name} dopt={dopt} idem={idem}");
+        }
+    }
+}
+
+#[test]
+fn sssp_matches_dijkstra_on_every_dataset_class() {
+    for name in small_suite() {
+        let g = datasets::load(name, true);
+        let src = suite::pick_source(&g);
+        let want = dijkstra(&g, src);
+        for delta in [0u64, 16, 32, 128] {
+            let mut cfg = Config::default();
+            cfg.sssp_delta = delta;
+            let (p, _) = sssp::sssp(&g, src, &cfg);
+            assert_eq!(p.dist, want, "{name} delta={delta}");
+        }
+    }
+}
+
+#[test]
+fn cc_matches_union_find_partition() {
+    for name in small_suite() {
+        let g = datasets::load(name, false);
+        let (p, _) = cc::cc(&g, &Config::default());
+        let (labels, count) = cc_unionfind(&g);
+        assert_eq!(p.num_components, count, "{name}");
+        // identical partition: build map from our label -> uf label
+        let mut map = std::collections::HashMap::new();
+        for v in 0..g.num_vertices {
+            let entry = map.entry(p.component[v]).or_insert(labels[v]);
+            assert_eq!(*entry, labels[v], "{name}: partition mismatch at {v}");
+        }
+    }
+}
+
+#[test]
+fn pagerank_matches_serial_within_tolerance() {
+    for name in ["kron_g500-logn9", "grid_4k"] {
+        let g = datasets::load(name, false);
+        let mut cfg = Config::default();
+        cfg.pr_max_iters = 20;
+        cfg.pr_epsilon = 0.0;
+        let (p, _) = pagerank::pagerank(&g, &cfg);
+        let want = pagerank_serial(&g, cfg.pr_damping, 20, 0.0);
+        for v in 0..g.num_vertices {
+            assert!((p.ranks[v] - want[v]).abs() < 1e-9, "{name} v={v}");
+        }
+    }
+}
+
+#[test]
+fn bc_matches_brandes_full() {
+    let g = datasets::load("kron_g500-logn8", false);
+    let (got, _) = bc::bc(&g, None, &Config::default());
+    let want = bc_brandes(&g);
+    for v in 0..g.num_vertices {
+        assert!(
+            (got[v] - want[v]).abs() < 1e-6 * (1.0 + want[v].abs()),
+            "v={v}: {} vs {}",
+            got[v],
+            want[v]
+        );
+    }
+}
+
+#[test]
+fn tc_variants_match_forward_baseline() {
+    for name in ["smallworld", "rgg_1k", "kron_g500-logn9"] {
+        let g = datasets::load(name, false);
+        let want = tc_forward(&g);
+        let (full, _) = tc::tc_intersect_full(&g, &Config::default());
+        let (filt, _) = tc::tc_intersect_filtered(&g, &Config::default());
+        assert_eq!(full.triangles, want, "{name} full");
+        assert_eq!(filt.triangles, want, "{name} filtered");
+    }
+}
+
+#[test]
+fn strategies_equivalent_end_to_end() {
+    let g = datasets::load("kron_g500-logn9", false);
+    let src = suite::pick_source(&g);
+    let want = bfs_serial(&g, src);
+    for strat in [
+        StrategyKind::ThreadExpand,
+        StrategyKind::Twc,
+        StrategyKind::Lb,
+        StrategyKind::LbLight,
+        StrategyKind::LbCull,
+    ] {
+        let mut cfg = Config::default();
+        cfg.strategy = Some(strat);
+        let (p, _) = bfs::bfs(&g, src, &cfg);
+        assert_eq!(p.labels, want, "{strat}");
+    }
+}
+
+#[test]
+fn wtf_pipeline_end_to_end() {
+    let g = datasets::load("wiki-Vote", false);
+    let user = suite::pick_source(&g);
+    let (r, run) = wtf::wtf(&g, user, 100, 10, &Config::default());
+    assert!(!r.circle_of_trust.is_empty());
+    assert!(run.runtime_ms > 0.0);
+    // recommendations are not already followed and not the user
+    let follows: std::collections::HashSet<u32> = g.neighbors(user).iter().copied().collect();
+    for &rec in &r.recommendations {
+        assert_ne!(rec, user);
+        assert!(!follows.contains(&rec));
+    }
+}
+
+#[test]
+fn dataset_classes_match_paper_table4() {
+    // scale-free analogs must classify scale-free; mesh analogs mesh-like
+    for name in ["soc-orkut", "rmat_s22_e64"] {
+        let p = properties::analyze(&datasets::load(name, false));
+        assert!(p.is_scale_free(), "{name}: {p:?}");
+        assert!(p.pseudo_diameter <= 15, "{name} diameter {p:?}");
+    }
+    for name in ["roadnet_USA", "rgg_n_24"] {
+        let p = properties::analyze(&datasets::load(name, false));
+        assert!(!p.is_scale_free(), "{name}: {p:?}");
+        assert!(p.pseudo_diameter >= 20, "{name} diameter {p:?}");
+    }
+}
+
+#[test]
+fn mteps_accounting_consistent() {
+    // BFS visits each reachable vertex's neighbor list exactly once in
+    // non-idempotent push mode: edges_visited == sum of reached degrees.
+    let g = datasets::load("grid_4k", false);
+    let src = suite::pick_source(&g);
+    let (p, st) = bfs::bfs(&g, src, &Config::default());
+    let expect: u64 = (0..g.num_vertices)
+        .filter(|&v| p.labels[v] != bfs::INFINITY_DEPTH)
+        .map(|v| g.degree(v as u32) as u64)
+        .sum();
+    assert_eq!(st.result.edges_visited, expect);
+}
+
+#[test]
+fn config_plumbs_through_enactor() {
+    let g = datasets::load("grid_4k", true);
+    let src = suite::pick_source(&g);
+    let mut cfg = Config::default();
+    cfg.max_iters = 3; // hard cap
+    let (_, r) = sssp::sssp(&g, src, &cfg);
+    assert!(r.num_iterations() <= 3);
+}
+
+// ---- extension primitives (paper §8.2) ----
+
+#[test]
+fn mst_weight_matches_kruskal_on_dataset() {
+    let g = datasets::load("grid_4k", true);
+    let (r, _) = gunrock::primitives::mst::mst(&g, &Config::default());
+    // Kruskal oracle over the undirected edge set (each edge stored twice)
+    let mut edges: Vec<(u32, u32, u32)> = Vec::new();
+    for v in 0..g.num_vertices as u32 {
+        for e in g.edge_range(v) {
+            let u = g.col_indices[e];
+            if v < u {
+                edges.push((v, u, g.weight(e)));
+            }
+        }
+    }
+    edges.sort_by_key(|e| e.2);
+    let mut parent: Vec<u32> = (0..g.num_vertices as u32).collect();
+    fn find(p: &mut Vec<u32>, mut v: u32) -> u32 {
+        while p[v as usize] != v {
+            p[v as usize] = p[p[v as usize] as usize];
+            v = p[v as usize];
+        }
+        v
+    }
+    let mut want = 0u64;
+    for (s, d, w) in edges {
+        let (rs, rd) = (find(&mut parent, s), find(&mut parent, d));
+        if rs != rd {
+            parent[rs as usize] = rd;
+            want += w as u64;
+        }
+    }
+    assert_eq!(r.total_weight, want);
+}
+
+#[test]
+fn coloring_proper_on_all_classes() {
+    for name in ["kron_g500-logn9", "rgg_1k", "smallworld"] {
+        let g = datasets::load(name, false);
+        let (r, _) = gunrock::primitives::color::color(&g, &Config::default());
+        for v in 0..g.num_vertices as u32 {
+            for &u in g.neighbors(v) {
+                if u != v {
+                    assert_ne!(r.colors[v as usize], r.colors[u as usize], "{name} {v}-{u}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn label_propagation_converges_on_social_analog() {
+    let g = datasets::load("soc-livejournal1", false);
+    let (r, _) = gunrock::primitives::label_propagation::label_propagation(&g, &Config::default());
+    assert!(r.num_communities >= 1);
+    assert!(r.iterations < 100);
+}
+
+#[test]
+fn multi_gpu_bfs_agrees_across_partitioners() {
+    use gunrock::multi_gpu::{multi_gpu_bfs, partition, PartitionMethod};
+    let g = datasets::load("rmat_s22_e64", false);
+    let src = suite::pick_source(&g);
+    let want = bfs_serial(&g, src);
+    for method in [PartitionMethod::Random, PartitionMethod::Contiguous, PartitionMethod::DegreeBalanced] {
+        let parts = partition(&g, 4, method, 11);
+        let (got, stats) = multi_gpu_bfs(&g, src, &parts, &Config::default());
+        assert_eq!(got, want, "{method:?}");
+        assert!(stats.bytes_exchanged > 0);
+    }
+}
+
+#[test]
+fn sampled_bc_correlates_with_exact() {
+    // approximate BC via the sampling operator (paper §8.2.3)
+    let g = datasets::load("kron_g500-logn8", false);
+    let (exact, _) = bc::bc(&g, None, &Config::default());
+    let sources: Vec<u32> = {
+        use gunrock::frontier::Frontier;
+        use gunrock::operators::sampling;
+        sampling::sample_k(&Frontier::all_vertices(g.num_vertices), 64, 3).ids
+    };
+    let (approx, _) = bc::bc(&g, Some(&sources), &Config::default());
+    // rank correlation on the top vertices: the exact top-10 should rank
+    // highly in the sampled scores
+    let mut by_exact: Vec<usize> = (0..g.num_vertices).collect();
+    by_exact.sort_unstable_by(|&a, &b| exact[b].partial_cmp(&exact[a]).unwrap());
+    let mut by_approx: Vec<usize> = (0..g.num_vertices).collect();
+    by_approx.sort_unstable_by(|&a, &b| approx[b].partial_cmp(&approx[a]).unwrap());
+    let top_approx: std::collections::HashSet<usize> = by_approx[..50].iter().copied().collect();
+    let hits = by_exact[..10].iter().filter(|v| top_approx.contains(v)).count();
+    assert!(hits >= 7, "only {hits}/10 exact-top vertices in sampled top-50");
+}

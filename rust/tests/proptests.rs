@@ -1,0 +1,225 @@
+//! Property-based tests (proptest is unavailable offline; this is a
+//! seeded-sweep mini-harness: N random cases per property, failure output
+//! includes the seed for reproduction).
+
+use gunrock::baselines::{bfs_serial::bfs_serial, cc_unionfind::cc_unionfind, dijkstra::dijkstra, tc_forward::tc_forward};
+use gunrock::config::Config;
+use gunrock::frontier::Frontier;
+use gunrock::gpu_sim::WarpCounters;
+use gunrock::graph::{builder, datasets, Coo, Csr};
+use gunrock::load_balance::StrategyKind;
+use gunrock::operators::{advance, filter, segmented_intersection, OpContext};
+use gunrock::primitives::{bfs, cc, sssp, tc};
+use gunrock::util::rng::Pcg32;
+
+const CASES: u64 = 12;
+
+/// Random graph: n in [2, 400], m edges with optional weights.
+fn random_graph(seed: u64, weighted: bool, undirected: bool) -> Csr {
+    let mut rng = Pcg32::new(seed);
+    let n = 2 + rng.below_usize(399);
+    let m = rng.below_usize(n * 8) + 1;
+    let mut coo = Coo::with_capacity(n, m, weighted);
+    for _ in 0..m {
+        let s = rng.below_usize(n) as u32;
+        let d = rng.below_usize(n) as u32;
+        if s == d {
+            continue;
+        }
+        if weighted {
+            let w = rng.weight(1, 64);
+            coo.push_weighted(s, d, w);
+        } else {
+            coo.push(s, d);
+        }
+    }
+    if undirected {
+        coo.to_undirected();
+    } else {
+        coo.dedup();
+    }
+    builder::from_coo(&coo, true)
+}
+
+#[test]
+fn prop_bfs_depths_match_serial_and_satisfy_edge_inequality() {
+    for seed in 0..CASES {
+        let g = random_graph(seed * 7 + 1, false, true);
+        if g.num_edges() == 0 {
+            continue;
+        }
+        let src = (seed % g.num_vertices as u64) as u32;
+        let (p, _) = bfs::bfs(&g, src, &Config::default());
+        let want = bfs_serial(&g, src);
+        assert_eq!(p.labels, want, "seed {seed}");
+        // edge inequality: |depth(u) - depth(v)| <= 1 for every edge
+        for v in 0..g.num_vertices as u32 {
+            if p.labels[v as usize] == bfs::INFINITY_DEPTH {
+                continue;
+            }
+            for &u in g.neighbors(v) {
+                let (a, b) = (p.labels[v as usize] as i64, p.labels[u as usize] as i64);
+                assert!(b != bfs::INFINITY_DEPTH as i64 && (a - b).abs() <= 1, "seed {seed} edge {v}-{u}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_sssp_triangle_inequality_and_oracle() {
+    for seed in 0..CASES {
+        let g = random_graph(seed * 13 + 3, true, true);
+        if g.num_edges() == 0 {
+            continue;
+        }
+        let src = (seed % g.num_vertices as u64) as u32;
+        let (p, _) = sssp::sssp(&g, src, &Config::default());
+        assert_eq!(p.dist, dijkstra(&g, src), "seed {seed}");
+        // relaxed triangle inequality over every edge
+        for v in 0..g.num_vertices as u32 {
+            let dv = p.dist[v as usize];
+            if dv >= sssp::INFINITY_DIST {
+                continue;
+            }
+            for e in g.edge_range(v) {
+                let u = g.col_indices[e];
+                assert!(
+                    p.dist[u as usize] <= dv + g.weight(e) as u64,
+                    "seed {seed}: edge {v}->{u} violates relaxation"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_cc_partition_equals_union_find() {
+    for seed in 0..CASES {
+        let g = random_graph(seed * 17 + 5, false, true);
+        let (p, _) = cc::cc(&g, &Config::default());
+        let (_, count) = cc_unionfind(&g);
+        assert_eq!(p.num_components, count, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_tc_matches_forward() {
+    for seed in 0..CASES {
+        let g = random_graph(seed * 23 + 7, false, true);
+        let want = tc_forward(&g);
+        let (got, _) = tc::tc_intersect_filtered(&g, &Config::default());
+        assert_eq!(got.triangles, want, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_advance_emits_each_edge_exactly_once_per_strategy() {
+    for seed in 0..CASES {
+        let g = random_graph(seed * 29 + 11, false, false);
+        let counters = WarpCounters::new();
+        let ctx = OpContext::new(2, &counters);
+        let frontier = Frontier::all_vertices(g.num_vertices);
+        for strat in [StrategyKind::ThreadExpand, StrategyKind::Twc, StrategyKind::Lb, StrategyKind::LbLight] {
+            let out = advance::advance(&ctx, &g, &frontier, advance::AdvanceType::V2E, strat, &|_, _, _| true);
+            let mut ids = out.ids.clone();
+            ids.sort_unstable();
+            let want: Vec<u32> = (0..g.num_edges() as u32).collect();
+            assert_eq!(ids, want, "seed {seed} {strat}");
+        }
+    }
+}
+
+#[test]
+fn prop_filter_partition_invariants() {
+    for seed in 0..CASES {
+        let mut rng = Pcg32::new(seed + 100);
+        let ids: Vec<u32> = (0..rng.below(2000)).map(|_| rng.below(500)).collect();
+        let counters = WarpCounters::new();
+        let ctx = OpContext::new(3, &counters);
+        let f = Frontier::vertices(ids.clone());
+        let pred = |v: u32| v % 3 != 0;
+        let kept = filter::filter(&ctx, &f, &pred);
+        // order-preserving subset
+        let want: Vec<u32> = ids.iter().copied().filter(|&v| pred(v)).collect();
+        assert_eq!(kept.ids, want, "seed {seed}");
+        // split partitions losslessly
+        let (pass, fail) = filter::split(&ctx, &f, &pred);
+        assert_eq!(pass.len() + fail.len(), ids.len());
+        assert!(fail.ids.iter().all(|&v| v % 3 == 0));
+    }
+}
+
+#[test]
+fn prop_segmented_intersection_counts_are_symmetric() {
+    for seed in 0..CASES {
+        let g = random_graph(seed * 31 + 13, false, true);
+        if g.num_vertices < 4 {
+            continue;
+        }
+        let counters = WarpCounters::new();
+        let ctx = OpContext::new(2, &counters);
+        let mut rng = Pcg32::new(seed);
+        let pairs: Vec<(u32, u32)> = (0..20)
+            .map(|_| {
+                (rng.below(g.num_vertices as u32), rng.below(g.num_vertices as u32))
+            })
+            .collect();
+        let swapped: Vec<(u32, u32)> = pairs.iter().map(|&(a, b)| (b, a)).collect();
+        let r1 = segmented_intersection::segmented_intersect(&ctx, &g, &pairs, false);
+        let r2 = segmented_intersection::segmented_intersect(&ctx, &g, &swapped, false);
+        assert_eq!(r1.counts, r2.counts, "seed {seed}: |A∩B| must equal |B∩A|");
+    }
+}
+
+#[test]
+fn prop_idempotent_bfs_equals_exact_bfs() {
+    for seed in 0..CASES {
+        let g = random_graph(seed * 37 + 17, false, true);
+        if g.num_edges() == 0 {
+            continue;
+        }
+        let src = (seed % g.num_vertices as u64) as u32;
+        let (a, _) = bfs::bfs(&g, src, &Config::default());
+        let mut cfg = Config::default();
+        cfg.idempotence = true;
+        cfg.direction_optimized = true;
+        let (b, _) = bfs::bfs(&g, src, &cfg);
+        assert_eq!(a.labels, b.labels, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_graph_build_round_trips() {
+    for seed in 0..CASES {
+        let g = random_graph(seed * 41 + 19, false, false);
+        let coo = g.to_coo();
+        let g2 = builder::from_coo(&coo, true);
+        assert_eq!(g.row_offsets, g2.row_offsets, "seed {seed}");
+        assert_eq!(g.col_indices, g2.col_indices, "seed {seed}");
+        // CSC edge count equals CSR edge count
+        assert_eq!(g2.csc_indices.len(), g2.col_indices.len());
+    }
+}
+
+#[test]
+fn prop_ell_export_preserves_in_edges() {
+    for seed in 0..4 {
+        // small graphs that fit ELL width
+        let g = datasets::load("grid_1k", false);
+        let (cols, vals, _d, dropped) = g.to_ell_transposed(1024, 64);
+        assert_eq!(dropped, 0, "seed {seed}");
+        // every in-edge appears exactly once with 1/outdeg value
+        let mut count = 0;
+        for v in 0..g.num_vertices {
+            for kk in 0..64 {
+                let c = cols[v * 64 + kk];
+                if c >= 0 {
+                    count += 1;
+                    let expect = 1.0 / g.degree(c as u32) as f32;
+                    assert!((vals[v * 64 + kk] - expect).abs() < 1e-7);
+                }
+            }
+        }
+        assert_eq!(count, g.num_edges());
+    }
+}

@@ -1,0 +1,65 @@
+//! Runtime integration: the AOT HLO artifacts loaded through PJRT must
+//! agree with the CPU primitives. Requires `make artifacts` to have run
+//! (tests skip with a message if the manifest is missing).
+
+use std::path::Path;
+
+use gunrock::baselines::{bfs_serial::bfs_serial, pagerank_serial::pagerank_serial};
+use gunrock::graph::datasets;
+use gunrock::runtime::XlaRuntime;
+
+fn artifacts_dir() -> Option<&'static Path> {
+    let p = Path::new("artifacts");
+    if p.join("manifest.txt").exists() {
+        Some(p)
+    } else {
+        eprintln!("skipping: artifacts/manifest.txt missing (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn xla_pagerank_matches_cpu_reference() {
+    let Some(dir) = artifacts_dir() else { return };
+    let g = datasets::load("grid_1k", false);
+    let mut rt = XlaRuntime::new(dir).expect("PJRT client");
+    let (ranks, iters) = rt.pagerank(&g, 0.0, 20).expect("offload PR");
+    assert!(iters >= 20);
+    let want = pagerank_serial(&g, 0.85, 20, 0.0);
+    for v in 0..g.num_vertices {
+        assert!(
+            (ranks[v] as f64 - want[v]).abs() < 1e-4,
+            "v={v}: xla {} vs cpu {}",
+            ranks[v],
+            want[v]
+        );
+    }
+}
+
+#[test]
+fn xla_bfs_pull_matches_serial() {
+    let Some(dir) = artifacts_dir() else { return };
+    let g = datasets::load("grid_1k", false);
+    let mut rt = XlaRuntime::new(dir).expect("PJRT client");
+    let (depth, _) = rt.bfs_pull(&g, 0, 2000).expect("offload BFS");
+    let want = bfs_serial(&g, 0);
+    assert_eq!(depth, want);
+}
+
+#[test]
+fn xla_variant_selection_prefers_smallest_fit() {
+    let Some(dir) = artifacts_dir() else { return };
+    // grid_4k needs the n=4096 variant; it must load and agree too.
+    let g = datasets::load("grid_4k", false);
+    let mut rt = XlaRuntime::new(dir).expect("PJRT client");
+    let (depth, _) = rt.bfs_pull(&g, 7, 2000).expect("offload BFS 4k");
+    assert_eq!(depth, bfs_serial(&g, 7));
+}
+
+#[test]
+fn xla_rejects_oversized_graph() {
+    let Some(dir) = artifacts_dir() else { return };
+    let g = datasets::load("soc-livejournal1", false); // 16k vertices > 4096
+    let mut rt = XlaRuntime::new(dir).expect("PJRT client");
+    assert!(rt.pagerank(&g, 1e-6, 5).is_err());
+}

@@ -17,6 +17,10 @@ use crate::load_balance::StrategyKind;
 pub struct Config {
     /// Worker threads for the virtual-GPU pool (0 = auto).
     pub threads: usize,
+    /// Persistent worker-pool width (parked OS threads incl. the caller;
+    /// 0 = follow `threads`). Lets deployments pin the pool wider than a
+    /// single run's worker count so later, wider runs never spawn.
+    pub pool_threads: usize,
     /// Traversal strategy; None = auto-select from topology (§5.1.3).
     pub strategy: Option<StrategyKind>,
     /// Direction-optimization parameters (paper §5.1.4).
@@ -46,6 +50,7 @@ impl Default for Config {
     fn default() -> Self {
         Config {
             threads: 0,
+            pool_threads: 0,
             strategy: None,
             do_a: 0.001,
             do_b: 0.2,
@@ -72,12 +77,23 @@ impl Config {
         }
     }
 
+    /// Width the persistent worker pool is warmed to (`Enactor::new`):
+    /// the explicit `pool_threads` override, else the run's worker count.
+    pub fn pool_capacity(&self) -> usize {
+        if self.pool_threads == 0 {
+            self.effective_threads()
+        } else {
+            self.pool_threads
+        }
+    }
+
     /// Apply a parsed `section.key -> value` map.
     pub fn apply(&mut self, kv: &BTreeMap<String, String>) -> Result<()> {
         for (key, value) in kv {
             let v = value.as_str();
             match key.as_str() {
                 "runtime.threads" | "threads" => self.threads = v.parse()?,
+                "runtime.pool_threads" | "pool_threads" => self.pool_threads = v.parse()?,
                 "runtime.artifacts_dir" | "artifacts_dir" => self.artifacts_dir = v.to_string(),
                 "runtime.seed" | "seed" => self.seed = v.parse()?,
                 "traversal.strategy" | "strategy" => {

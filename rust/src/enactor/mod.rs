@@ -7,12 +7,13 @@
 pub mod problem;
 
 use crate::config::Config;
+use crate::frontier::DoubleBuffer;
 use crate::gpu_sim::WarpCounters;
 use crate::graph::Csr;
 use crate::load_balance::{self, StrategyKind};
 use crate::operators::OpContext;
-use crate::util::stats;
 use crate::util::timer::Timer;
+use crate::util::{pool, stats};
 
 /// Per-iteration record (Figs 22-23 plot advance MTEPS against these).
 #[derive(Clone, Copy, Debug)]
@@ -48,11 +49,18 @@ impl RunResult {
 }
 
 /// The enactor owns the worker pool width, strategy selection, counters,
-/// and the iteration bookkeeping primitives use.
+/// the double-buffered frontier storage, and the iteration bookkeeping
+/// primitives use. Constructing one warms the process-wide persistent
+/// worker pool to the configured width, so the first operator dispatch
+/// pays no thread-spawn cost.
 pub struct Enactor {
     pub config: Config,
     pub counters: WarpCounters,
     pub workers: usize,
+    /// Ping-pong frontier queues (paper §5.3). Primitives `mem::take`
+    /// these for the duration of a run and hand them back, so buffer
+    /// capacity survives across runs of the same enactor.
+    pub frontiers: DoubleBuffer,
     timer: Timer,
     iterations: Vec<IterationStats>,
     edges_at_iter_start: u64,
@@ -61,10 +69,14 @@ pub struct Enactor {
 impl Enactor {
     pub fn new(config: Config) -> Self {
         let workers = config.effective_threads();
+        // Warm the persistent pool ("launch the persistent kernel"): all
+        // subsequent operator dispatches reuse these parked threads.
+        pool::ensure_capacity(config.pool_capacity());
         Enactor {
             config,
             counters: WarpCounters::new(),
             workers,
+            frontiers: DoubleBuffer::new(),
             timer: Timer::start(),
             iterations: Vec::new(),
             edges_at_iter_start: 0,

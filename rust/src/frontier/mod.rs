@@ -26,6 +26,12 @@ pub struct Frontier {
     pub ids: Vec<VertexId>,
 }
 
+impl Default for Frontier {
+    fn default() -> Self {
+        Frontier::empty(FrontierKind::Vertex)
+    }
+}
+
 impl Frontier {
     pub fn vertices(ids: Vec<VertexId>) -> Self {
         Frontier { kind: FrontierKind::Vertex, ids }
@@ -64,6 +70,64 @@ impl Frontier {
     pub fn clear(&mut self) {
         self.ids.clear();
     }
+
+    /// Empty the frontier and retag it, keeping the allocated capacity —
+    /// the reuse primitive of the zero-alloc pipeline.
+    pub fn reset(&mut self, kind: FrontierKind) {
+        self.kind = kind;
+        self.ids.clear();
+    }
+}
+
+/// Double-buffered frontier pair (paper §5.3's ping-pong input/output
+/// queues). The enactor owns one of these per run; operators write into
+/// `next` while reading `current`, and the BSP step boundary is a `swap`
+/// — no per-iteration allocation once both buffers are warm.
+#[derive(Clone, Debug, Default)]
+pub struct DoubleBuffer {
+    current: Frontier,
+    next: Frontier,
+}
+
+impl DoubleBuffer {
+    pub fn new() -> Self {
+        DoubleBuffer::default()
+    }
+
+    /// Reset both buffers (keeping capacity) and seed the current frontier
+    /// with a single vertex — the common traversal entry state.
+    pub fn reset_single(&mut self, v: VertexId) {
+        self.current.reset(FrontierKind::Vertex);
+        self.next.reset(FrontierKind::Vertex);
+        self.current.ids.push(v);
+    }
+
+    pub fn current(&self) -> &Frontier {
+        &self.current
+    }
+
+    pub fn current_mut(&mut self) -> &mut Frontier {
+        &mut self.current
+    }
+
+    pub fn next(&self) -> &Frontier {
+        &self.next
+    }
+
+    pub fn next_mut(&mut self) -> &mut Frontier {
+        &mut self.next
+    }
+
+    /// Borrow the input frontier and the output buffer simultaneously —
+    /// the shape every `*_into` operator call wants.
+    pub fn split_mut(&mut self) -> (&Frontier, &mut Frontier) {
+        (&self.current, &mut self.next)
+    }
+
+    /// BSP step boundary: the output queue becomes the next input queue.
+    pub fn swap(&mut self) {
+        std::mem::swap(&mut self.current, &mut self.next);
+    }
 }
 
 /// Pull-phase bookkeeping: the *unvisited* frontier plus visited bitmap
@@ -99,6 +163,22 @@ mod tests {
         let e = Frontier::all_edges(3);
         assert_eq!(e.kind, FrontierKind::Edge);
         assert_eq!(e.len(), 3);
+    }
+
+    #[test]
+    fn double_buffer_swap_keeps_capacity() {
+        let mut db = DoubleBuffer::new();
+        db.reset_single(7);
+        assert_eq!(db.current().ids, vec![7]);
+        db.next_mut().ids.extend([1, 2, 3]);
+        db.swap();
+        assert_eq!(db.current().ids, vec![1, 2, 3]);
+        assert_eq!(db.next().ids, vec![7]);
+        let cap = db.next().ids.capacity();
+        db.next_mut().reset(FrontierKind::Edge);
+        assert!(db.next().is_empty());
+        assert_eq!(db.next().kind, FrontierKind::Edge);
+        assert_eq!(db.next().ids.capacity(), cap);
     }
 
     #[test]

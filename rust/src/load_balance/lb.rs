@@ -6,36 +6,57 @@
 //! equal-size chunks, merge-path-search each chunk's starting item, then
 //! each (virtual) block cooperatively processes exactly `chunk` edges —
 //! inter- and intra-block balance by construction, at the cost of the scan
-//! + per-edge source binary search.
+//! + per-edge source binary search. The degree scan itself runs through
+//! `par::exclusive_scan` for large frontiers, so the "allocation" phase
+//! is parallel too.
 //!
 //! Input balance: equal *input item* counts per block with cooperative
 //! intra-block processing — cheaper setup, good when the frontier is small
 //! (the paper switches on frontier size, default threshold 4096).
+//!
+//! Both expansions write into a caller-owned output buffer (`*_into`) and
+//! draw their per-worker locals from the pool's scratch recycler, so a
+//! warm BSP iteration performs no frontier-sized allocations.
 
 use crate::gpu_sim::WarpCounters;
 use crate::graph::{Csr, VertexId};
 use crate::load_balance::{merge_path, EdgeVisit};
-use crate::util::par;
+use crate::util::{par, pool};
 
-/// LB: balance over the output frontier.
-pub fn expand_output_balanced<F: EdgeVisit>(
+/// Frontier size at which the degree prefix-sum switches to the parallel
+/// scan (matches `par::exclusive_scan`'s own serial cutoff).
+const PARALLEL_SCAN_MIN: usize = 4096;
+
+/// LB: balance over the output frontier, appending to `out`.
+pub fn expand_output_balanced_into<F: EdgeVisit>(
     g: &Csr,
     items: &[VertexId],
     workers: usize,
     counters: &WarpCounters,
     visit: F,
-) -> Vec<VertexId> {
-    // Prefix-sum of degrees (the "allocation" part of advance, §4.1).
-    let mut offsets = Vec::with_capacity(items.len() + 1);
-    offsets.push(0usize);
-    let mut acc = 0usize;
-    for &v in items {
-        acc += g.degree(v);
-        offsets.push(acc);
-    }
-    let total = acc;
+    out: &mut Vec<VertexId>,
+) {
+    // Prefix-sum of degrees (the "allocation" part of advance, §4.1):
+    // offsets[i] = edges before item i, offsets[len] = total.
+    let mut offsets = pool::take_offsets();
+    offsets.resize(items.len() + 1, 0);
+    let total = if items.len() >= PARALLEL_SCAN_MIN {
+        let (degs, _last) = offsets.split_at_mut(items.len());
+        par::for_each_mut(degs, workers, |i, slot| *slot = g.degree(items[i]));
+        offsets[items.len()] = 0;
+        par::exclusive_scan(&mut offsets, workers)
+    } else {
+        let mut acc = 0usize;
+        for (i, &v) in items.iter().enumerate() {
+            offsets[i] = acc;
+            acc += g.degree(v);
+        }
+        offsets[items.len()] = acc;
+        acc
+    };
     if total == 0 {
-        return Vec::new();
+        pool::recycle_offsets(offsets);
+        return;
     }
 
     // Equal-output chunks, one virtual block each.
@@ -43,7 +64,7 @@ pub fn expand_output_balanced<F: EdgeVisit>(
     let starts = merge_path::partition_output(&offsets, parts);
 
     let chunk_outputs = par::run_partitioned(parts, workers, |_, ps, pe| {
-        let mut local = Vec::new();
+        let mut local = pool::take_ids();
         for p in ps..pe {
             let (mut item, start_pos) = starts[p];
             let end_pos = if p + 1 < parts { starts[p + 1].1 } else { total };
@@ -73,24 +94,39 @@ pub fn expand_output_balanced<F: EdgeVisit>(
         }
         local
     });
+    pool::recycle_offsets(offsets);
 
-    let mut out = Vec::with_capacity(total);
+    out.reserve(chunk_outputs.iter().map(Vec::len).sum());
     for c in chunk_outputs {
-        out.extend(c);
+        out.extend_from_slice(&c);
+        pool::recycle_ids(c);
     }
-    out
 }
 
-/// LB_LIGHT: balance over the input frontier.
-pub fn expand_input_balanced<F: EdgeVisit>(
+/// LB: balance over the output frontier (allocating wrapper).
+pub fn expand_output_balanced<F: EdgeVisit>(
     g: &Csr,
     items: &[VertexId],
     workers: usize,
     counters: &WarpCounters,
     visit: F,
 ) -> Vec<VertexId> {
+    let mut out = Vec::new();
+    expand_output_balanced_into(g, items, workers, counters, visit, &mut out);
+    out
+}
+
+/// LB_LIGHT: balance over the input frontier, appending to `out`.
+pub fn expand_input_balanced_into<F: EdgeVisit>(
+    g: &Csr,
+    items: &[VertexId],
+    workers: usize,
+    counters: &WarpCounters,
+    visit: F,
+    out: &mut Vec<VertexId>,
+) {
     let chunks = par::run_partitioned(items.len(), workers, |_, s, e| {
-        let mut local = Vec::new();
+        let mut local = pool::take_ids();
         let mut edges = 0usize;
         for (idx, &v) in items[s..e].iter().enumerate() {
             for eid in g.edge_range(v) {
@@ -106,10 +142,23 @@ pub fn expand_input_balanced<F: EdgeVisit>(
         counters.add_edges(edges as u64);
         local
     });
-    let mut out = Vec::with_capacity(chunks.iter().map(Vec::len).sum());
+    out.reserve(chunks.iter().map(Vec::len).sum());
     for c in chunks {
-        out.extend(c);
+        out.extend_from_slice(&c);
+        pool::recycle_ids(c);
     }
+}
+
+/// LB_LIGHT: balance over the input frontier (allocating wrapper).
+pub fn expand_input_balanced<F: EdgeVisit>(
+    g: &Csr,
+    items: &[VertexId],
+    workers: usize,
+    counters: &WarpCounters,
+    visit: F,
+) -> Vec<VertexId> {
+    let mut out = Vec::new();
+    expand_input_balanced_into(g, items, workers, counters, visit, &mut out);
     out
 }
 
@@ -179,5 +228,41 @@ mod tests {
         let mut got = got;
         got.sort_unstable();
         assert_eq!(got, vec![1, 2, 40, 41, 45]);
+    }
+
+    #[test]
+    fn parallel_prefix_sum_path_matches_serial_path() {
+        // Frontier above PARALLEL_SCAN_MIN exercises the parallel degree
+        // scan; the visited edge set must be identical to a small run's
+        // semantics (every edge exactly once).
+        let g = random_graph(6000, 21);
+        let items: Vec<u32> = (0..6000).collect();
+        assert!(items.len() >= PARALLEL_SCAN_MIN);
+        let c = WarpCounters::new();
+        let mut got = expand_output_balanced(&g, &items, 4, &c, |_, _, e, _, o: &mut Vec<u32>| {
+            o.push(e as u32)
+        });
+        got.sort_unstable();
+        assert_eq!(got, (0..g.num_edges() as u32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn into_variant_appends_and_reuses_buffer() {
+        let g = random_graph(200, 5);
+        let items: Vec<u32> = (0..200).collect();
+        let c = WarpCounters::new();
+        let mut out = Vec::new();
+        expand_output_balanced_into(&g, &items, 4, &c, |_, _, e, _, o: &mut Vec<u32>| {
+            o.push(e as u32)
+        }, &mut out);
+        let first = out.len();
+        assert_eq!(first, g.num_edges());
+        let cap = out.capacity();
+        out.clear();
+        expand_output_balanced_into(&g, &items, 4, &c, |_, _, e, _, o: &mut Vec<u32>| {
+            o.push(e as u32)
+        }, &mut out);
+        assert_eq!(out.len(), first);
+        assert_eq!(out.capacity(), cap, "warm buffer must not grow");
     }
 }

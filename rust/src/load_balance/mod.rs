@@ -89,7 +89,38 @@ pub fn auto_select(avg_degree: f64, frontier_len: usize, lb_switch_threshold: us
 pub trait EdgeVisit: Fn(usize, VertexId, usize, VertexId, &mut Vec<VertexId>) + Sync {}
 impl<F: Fn(usize, VertexId, usize, VertexId, &mut Vec<VertexId>) + Sync> EdgeVisit for F {}
 
-/// Dispatch an expansion through the chosen strategy.
+/// Dispatch an expansion through the chosen strategy, appending the output
+/// frontier into a caller-owned buffer (the zero-alloc pipeline's entry:
+/// operators pass their reusable `Frontier` storage here).
+pub fn expand_into<F: EdgeVisit>(
+    kind: StrategyKind,
+    g: &Csr,
+    items: &[VertexId],
+    workers: usize,
+    counters: &WarpCounters,
+    visit: F,
+    out: &mut Vec<VertexId>,
+) {
+    counters.add_kernel_launch();
+    match kind {
+        StrategyKind::ThreadExpand => {
+            thread_expand::expand_into(g, items, workers, counters, visit, out)
+        }
+        StrategyKind::Twc => twc::expand_into(g, items, workers, counters, visit, out),
+        StrategyKind::Lb => lb::expand_output_balanced_into(g, items, workers, counters, visit, out),
+        StrategyKind::LbLight => {
+            lb::expand_input_balanced_into(g, items, workers, counters, visit, out)
+        }
+        // LB_CULL fuses the follow-up filter; at this level the expansion
+        // itself behaves like LB with the cull applied by the caller's
+        // visitor (operators::advance wires the bitmask cull in).
+        StrategyKind::LbCull => {
+            lb::expand_output_balanced_into(g, items, workers, counters, visit, out)
+        }
+    }
+}
+
+/// Dispatch an expansion through the chosen strategy (allocating wrapper).
 pub fn expand<F: EdgeVisit>(
     kind: StrategyKind,
     g: &Csr,
@@ -98,17 +129,9 @@ pub fn expand<F: EdgeVisit>(
     counters: &WarpCounters,
     visit: F,
 ) -> Vec<VertexId> {
-    counters.add_kernel_launch();
-    match kind {
-        StrategyKind::ThreadExpand => thread_expand::expand(g, items, workers, counters, visit),
-        StrategyKind::Twc => twc::expand(g, items, workers, counters, visit),
-        StrategyKind::Lb => lb::expand_output_balanced(g, items, workers, counters, visit),
-        StrategyKind::LbLight => lb::expand_input_balanced(g, items, workers, counters, visit),
-        // LB_CULL fuses the follow-up filter; at this level the expansion
-        // itself behaves like LB with the cull applied by the caller's
-        // visitor (operators::advance wires the bitmask cull in).
-        StrategyKind::LbCull => lb::expand_output_balanced(g, items, workers, counters, visit),
-    }
+    let mut out = Vec::new();
+    expand_into(kind, g, items, workers, counters, visit, &mut out);
+    out
 }
 
 #[cfg(test)]

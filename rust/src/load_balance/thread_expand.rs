@@ -9,17 +9,20 @@
 use crate::gpu_sim::{WarpCounters, WARP_WIDTH};
 use crate::graph::{Csr, VertexId};
 use crate::load_balance::EdgeVisit;
-use crate::util::par;
+use crate::util::{par, pool};
 
-pub fn expand<F: EdgeVisit>(
+/// ThreadExpand, appending into a caller-owned buffer; per-worker locals
+/// come from the scratch recycler (zero allocations when warm).
+pub fn expand_into<F: EdgeVisit>(
     g: &Csr,
     items: &[VertexId],
     workers: usize,
     counters: &WarpCounters,
     visit: F,
-) -> Vec<VertexId> {
+    out: &mut Vec<VertexId>,
+) {
     let chunks = par::run_partitioned(items.len(), workers, |_, start, end| {
-        let mut out = Vec::new();
+        let mut local = pool::take_ids();
         let mut edges = 0u64;
         // Virtual-warp accounting: 32 consecutive items run in lockstep.
         let mut w = start;
@@ -32,7 +35,7 @@ pub fn expand<F: EdgeVisit>(
                 max_deg = max_deg.max(deg);
                 sum_deg += deg;
                 for e in g.edge_range(v) {
-                    visit(w + idx, v, e, g.col_indices[e], &mut out);
+                    visit(w + idx, v, e, g.col_indices[e], &mut local);
                 }
             }
             edges += sum_deg as u64;
@@ -42,12 +45,25 @@ pub fn expand<F: EdgeVisit>(
             w = we;
         }
         counters.add_edges(edges);
-        out
+        local
     });
-    let mut out = Vec::with_capacity(chunks.iter().map(Vec::len).sum());
+    out.reserve(chunks.iter().map(Vec::len).sum());
     for c in chunks {
-        out.extend(c);
+        out.extend_from_slice(&c);
+        pool::recycle_ids(c);
     }
+}
+
+/// ThreadExpand (allocating wrapper).
+pub fn expand<F: EdgeVisit>(
+    g: &Csr,
+    items: &[VertexId],
+    workers: usize,
+    counters: &WarpCounters,
+    visit: F,
+) -> Vec<VertexId> {
+    let mut out = Vec::new();
+    expand_into(g, items, workers, counters, visit, &mut out);
     out
 }
 

@@ -13,19 +13,22 @@
 use crate::gpu_sim::{WarpCounters, BLOCK_THREADS, WARP_WIDTH};
 use crate::graph::{Csr, VertexId};
 use crate::load_balance::EdgeVisit;
-use crate::util::par;
+use crate::util::{par, pool};
 
-pub fn expand<F: EdgeVisit>(
+/// TWC_FORWARD, appending into a caller-owned buffer. Classification lists
+/// and per-worker locals come from the scratch recycler.
+pub fn expand_into<F: EdgeVisit>(
     g: &Csr,
     items: &[VertexId],
     workers: usize,
     counters: &WarpCounters,
     visit: F,
-) -> Vec<VertexId> {
+    out: &mut Vec<VertexId>,
+) {
     // Classification pass (the dynamic-grouping overhead).
-    let mut small: Vec<usize> = Vec::new();
-    let mut medium: Vec<usize> = Vec::new();
-    let mut large: Vec<usize> = Vec::new();
+    let mut small = pool::take_offsets();
+    let mut medium = pool::take_offsets();
+    let mut large = pool::take_offsets();
     for (i, &v) in items.iter().enumerate() {
         let d = g.degree(v);
         if d >= BLOCK_THREADS {
@@ -37,12 +40,10 @@ pub fn expand<F: EdgeVisit>(
         }
     }
 
-    let mut out: Vec<VertexId> = Vec::new();
-
     // Large lists: block-cooperative. Entire block (256 lanes) strip-mines
     // one neighbor list; parallelize the *list* across workers.
     let large_chunks = par::run_dynamic(large.len(), workers, 1, |_, s, e| {
-        let mut local = Vec::new();
+        let mut local = pool::take_ids();
         for &i in &large[s..e] {
             let v = items[i];
             for eid in g.edge_range(v) {
@@ -55,12 +56,13 @@ pub fn expand<F: EdgeVisit>(
         local
     });
     for c in large_chunks {
-        out.extend(c);
+        out.extend_from_slice(&c);
+        pool::recycle_ids(c);
     }
 
     // Medium lists: warp-cooperative.
     let medium_chunks = par::run_dynamic(medium.len(), workers, 8, |_, s, e| {
-        let mut local = Vec::new();
+        let mut local = pool::take_ids();
         for &i in &medium[s..e] {
             let v = items[i];
             for eid in g.edge_range(v) {
@@ -73,12 +75,13 @@ pub fn expand<F: EdgeVisit>(
         local
     });
     for c in medium_chunks {
-        out.extend(c);
+        out.extend_from_slice(&c);
+        pool::recycle_ids(c);
     }
 
     // Small lists: per-thread with lockstep accounting (ThreadExpand-like).
     let small_chunks = par::run_partitioned(small.len(), workers, |_, s, e| {
-        let mut local = Vec::new();
+        let mut local = pool::take_ids();
         let mut w = s;
         while w < e {
             let we = (w + WARP_WIDTH).min(e);
@@ -102,9 +105,25 @@ pub fn expand<F: EdgeVisit>(
         local
     });
     for c in small_chunks {
-        out.extend(c);
+        out.extend_from_slice(&c);
+        pool::recycle_ids(c);
     }
 
+    pool::recycle_offsets(small);
+    pool::recycle_offsets(medium);
+    pool::recycle_offsets(large);
+}
+
+/// TWC_FORWARD (allocating wrapper).
+pub fn expand<F: EdgeVisit>(
+    g: &Csr,
+    items: &[VertexId],
+    workers: usize,
+    counters: &WarpCounters,
+    visit: F,
+) -> Vec<VertexId> {
+    let mut out = Vec::new();
+    expand_into(g, items, workers, counters, visit, &mut out);
     out
 }
 

@@ -50,6 +50,7 @@ fn usage() {
            --graph <path>        load .mtx or edge-list file instead\n\
            --config <path>       TOML config file\n\
            --threads <n>         worker threads (default: all cores)\n\
+           --pool-threads <n>    persistent pool width (default: --threads)\n\
            --strategy <s>        ThreadExpand|TWC|LB|LB_LIGHT|LB_CULL (default auto)\n\
            --src <v>             source vertex (default: max-degree vertex)\n\
            --direction-optimized  enable push/pull switching (BFS)\n\
@@ -66,6 +67,9 @@ fn build_config(p: &cli::ParsedArgs) -> Result<Config> {
     };
     if let Some(t) = p.get_parse::<usize>("threads")? {
         cfg.threads = t;
+    }
+    if let Some(t) = p.get_parse::<usize>("pool-threads")? {
+        cfg.pool_threads = t;
     }
     if let Some(s) = p.get("strategy") {
         cfg.strategy = Some(s.parse().map_err(anyhow::Error::msg)?);

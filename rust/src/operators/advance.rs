@@ -9,7 +9,7 @@ use crate::graph::{Csr, VertexId};
 use crate::load_balance::{self, StrategyKind};
 use crate::operators::OpContext;
 use crate::util::bitset::AtomicBitset;
-use crate::util::par;
+use crate::util::{par, pool};
 
 /// What the output frontier contains.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -47,17 +47,68 @@ where
     }
 }
 
-/// Resolve the input items to expand: a vertex frontier expands its ids;
-/// an edge frontier expands the *destination* vertices of its edge ids
-/// (the paper's E-to-* advance visits the far end's neighbor list).
-fn expansion_sources(g: &Csr, input: &Frontier) -> Vec<VertexId> {
+/// Resolve the input items to expand: a vertex frontier expands its ids
+/// (borrowed in place — no clone); an edge frontier expands the
+/// *destination* vertices of its edge ids (the paper's E-to-* advance
+/// visits the far end's neighbor list), materialized into the caller's
+/// reusable scratch buffer.
+fn expansion_sources<'a>(
+    g: &Csr,
+    input: &'a Frontier,
+    scratch: &'a mut Option<Vec<VertexId>>,
+) -> &'a [VertexId] {
     match input.kind {
-        FrontierKind::Vertex => input.ids.clone(),
-        FrontierKind::Edge => input.ids.iter().map(|&e| g.edge_dst(e as usize)).collect(),
+        FrontierKind::Vertex => &input.ids,
+        FrontierKind::Edge => {
+            // Lazy: only edge frontiers pay the recycler round-trip.
+            let buf = scratch.get_or_insert_with(pool::take_ids);
+            buf.clear();
+            buf.extend(input.ids.iter().map(|&e| g.edge_dst(e as usize)));
+            buf
+        }
     }
 }
 
-/// Push-based advance through a load-balancing strategy.
+/// Return a lazily-taken expansion scratch buffer to the recycler.
+fn recycle_sources(scratch: Option<Vec<VertexId>>) {
+    if let Some(buf) = scratch {
+        pool::recycle_ids(buf);
+    }
+}
+
+/// Push-based advance through a load-balancing strategy, writing the
+/// output frontier into a caller-owned (enactor-owned, in practice)
+/// buffer. The input frontier is borrowed, never cloned.
+pub fn advance_into<F: AdvanceFunctor>(
+    ctx: &OpContext,
+    g: &Csr,
+    input: &Frontier,
+    ty: AdvanceType,
+    strategy: StrategyKind,
+    functor: &F,
+    out: &mut Frontier,
+) {
+    out.reset(ty.output_kind());
+    let mut scratch = None;
+    let sources = expansion_sources(g, input, &mut scratch);
+    let emit_edges = matches!(ty, AdvanceType::V2E | AdvanceType::E2E);
+    load_balance::expand_into(
+        strategy,
+        g,
+        sources,
+        ctx.workers,
+        ctx.counters,
+        |_idx, src, eid, dst, local: &mut Vec<VertexId>| {
+            if functor.apply(src, dst, eid) {
+                local.push(if emit_edges { eid as VertexId } else { dst });
+            }
+        },
+        &mut out.ids,
+    );
+    recycle_sources(scratch);
+}
+
+/// Push-based advance (allocating wrapper).
 pub fn advance<F: AdvanceFunctor>(
     ctx: &OpContext,
     g: &Csr,
@@ -66,27 +117,44 @@ pub fn advance<F: AdvanceFunctor>(
     strategy: StrategyKind,
     functor: &F,
 ) -> Frontier {
-    let sources = expansion_sources(g, input);
-    let emit_edges = matches!(ty, AdvanceType::V2E | AdvanceType::E2E);
-    let ids = load_balance::expand(
-        strategy,
-        g,
-        &sources,
-        ctx.workers,
-        ctx.counters,
-        |_idx, src, eid, dst, out: &mut Vec<VertexId>| {
-            if functor.apply(src, dst, eid) {
-                out.push(if emit_edges { eid as VertexId } else { dst });
-            }
-        },
-    );
-    Frontier { kind: ty.output_kind(), ids }
+    let mut out = Frontier::empty(ty.output_kind());
+    advance_into(ctx, g, input, ty, strategy, functor, &mut out);
+    out
 }
 
 /// LB_CULL-style fused advance+filter (paper §5.3 "Fuse filter step with
 /// traversal operators"): the per-destination cull (an atomic bitmask
 /// claim) runs inside the expansion, so duplicate destinations never
 /// materialize in the output frontier and no second kernel is launched.
+pub fn advance_culled_into<F: AdvanceFunctor>(
+    ctx: &OpContext,
+    g: &Csr,
+    input: &Frontier,
+    strategy: StrategyKind,
+    functor: &F,
+    cull_mask: &AtomicBitset,
+    out: &mut Frontier,
+) {
+    out.reset(FrontierKind::Vertex);
+    let mut scratch = None;
+    let sources = expansion_sources(g, input, &mut scratch);
+    load_balance::expand_into(
+        strategy,
+        g,
+        sources,
+        ctx.workers,
+        ctx.counters,
+        |_idx, src, eid, dst, local: &mut Vec<VertexId>| {
+            if functor.apply(src, dst, eid) && cull_mask.set(dst as usize) {
+                local.push(dst);
+            }
+        },
+        &mut out.ids,
+    );
+    recycle_sources(scratch);
+}
+
+/// LB_CULL-style fused advance+filter (allocating wrapper).
 pub fn advance_culled<F: AdvanceFunctor>(
     ctx: &OpContext,
     g: &Csr,
@@ -95,20 +163,9 @@ pub fn advance_culled<F: AdvanceFunctor>(
     functor: &F,
     cull_mask: &AtomicBitset,
 ) -> Frontier {
-    let sources = expansion_sources(g, input);
-    let ids = load_balance::expand(
-        strategy,
-        g,
-        &sources,
-        ctx.workers,
-        ctx.counters,
-        |_idx, src, eid, dst, out: &mut Vec<VertexId>| {
-            if functor.apply(src, dst, eid) && cull_mask.set(dst as usize) {
-                out.push(dst);
-            }
-        },
-    );
-    Frontier::vertices(ids)
+    let mut out = Frontier::empty(FrontierKind::Vertex);
+    advance_culled_into(ctx, g, input, strategy, functor, cull_mask, &mut out);
+    out
 }
 
 /// Pull-based advance ("Inverse_Expand", paper §5.1.4): instead of
@@ -116,23 +173,27 @@ pub fn advance_culled<F: AdvanceFunctor>(
 /// neighbor list for a member of the current frontier; emit the vertex on
 /// first hit (early exit — the saving that makes bottom-up BFS win on
 /// scale-free graphs). `in_frontier` must answer membership in the current
-/// active frontier.
-pub fn advance_pull(
+/// active frontier. Per-worker discovery lists are recycled scratch
+/// buffers storing (vertex, parent) pairs flat.
+pub fn advance_pull_into(
     ctx: &OpContext,
     g: &Csr,
     unvisited: &[VertexId],
     in_frontier: &AtomicBitset,
     mut on_discover: impl FnMut(VertexId, VertexId),
-) -> Frontier {
+    out: &mut Frontier,
+) {
     assert!(g.has_csc(), "pull traversal requires the CSC view");
+    out.reset(FrontierKind::Vertex);
     let results = par::run_partitioned(unvisited.len(), ctx.workers, |_, s, e| {
-        let mut found: Vec<(VertexId, VertexId)> = Vec::new();
+        let mut found = pool::take_ids(); // flat (vertex, parent) pairs
         let mut scanned = 0u64;
         for &v in &unvisited[s..e] {
             for &u in g.in_neighbors(v) {
                 scanned += 1;
                 if in_frontier.get(u as usize) {
-                    found.push((v, u));
+                    found.push(v);
+                    found.push(u);
                     break; // early exit: one visited parent suffices
                 }
             }
@@ -142,14 +203,26 @@ pub fn advance_pull(
         found
     });
     ctx.counters.add_kernel_launch();
-    let mut out = Vec::new();
     for chunk in results {
-        for (v, parent) in chunk {
-            on_discover(v, parent);
-            out.push(v);
+        for pair in chunk.chunks_exact(2) {
+            on_discover(pair[0], pair[1]);
+            out.ids.push(pair[0]);
         }
+        pool::recycle_ids(chunk);
     }
-    Frontier::vertices(out)
+}
+
+/// Pull-based advance (allocating wrapper).
+pub fn advance_pull(
+    ctx: &OpContext,
+    g: &Csr,
+    unvisited: &[VertexId],
+    in_frontier: &AtomicBitset,
+    on_discover: impl FnMut(VertexId, VertexId),
+) -> Frontier {
+    let mut out = Frontier::empty(FrontierKind::Vertex);
+    advance_pull_into(ctx, g, unvisited, in_frontier, on_discover, &mut out);
+    out
 }
 
 #[cfg(test)]

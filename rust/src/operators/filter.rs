@@ -13,7 +13,7 @@ use crate::frontier::Frontier;
 use crate::graph::VertexId;
 use crate::operators::OpContext;
 use crate::util::bitset::AtomicBitset;
-use crate::util::par;
+use crate::util::{par, pool};
 
 /// Validity functor, mirroring the paper's `FilterFunctor(node, ...)`.
 pub trait FilterFunctor: Sync {
@@ -30,11 +30,18 @@ where
     }
 }
 
-/// Exact filter: keeps passing items, preserves relative order.
-pub fn filter<F: FilterFunctor>(ctx: &OpContext, input: &Frontier, functor: &F) -> Frontier {
+/// Exact filter: keeps passing items, preserves relative order; writes the
+/// compacted frontier into a caller-owned buffer.
+pub fn filter_into<F: FilterFunctor>(
+    ctx: &OpContext,
+    input: &Frontier,
+    functor: &F,
+    out: &mut Frontier,
+) {
+    out.reset(input.kind);
     ctx.counters.add_kernel_launch();
     let chunks = par::run_partitioned(input.ids.len(), ctx.workers, |_, s, e| {
-        let mut keep = Vec::new();
+        let mut keep = pool::take_ids();
         for &id in &input.ids[s..e] {
             if functor.keep(id) {
                 keep.push(id);
@@ -43,13 +50,20 @@ pub fn filter<F: FilterFunctor>(ctx: &OpContext, input: &Frontier, functor: &F) 
         ctx.counters.record_run(e - s);
         keep
     });
-    let culled = input.ids.len() - chunks.iter().map(Vec::len).sum::<usize>();
-    ctx.counters.add_culled(culled as u64);
-    let mut ids = Vec::with_capacity(input.ids.len() - culled);
+    let kept: usize = chunks.iter().map(Vec::len).sum();
+    ctx.counters.add_culled((input.ids.len() - kept) as u64);
+    out.ids.reserve(kept);
     for c in chunks {
-        ids.extend(c);
+        out.ids.extend_from_slice(&c);
+        pool::recycle_ids(c);
     }
-    Frontier { kind: input.kind, ids }
+}
+
+/// Exact filter (allocating wrapper).
+pub fn filter<F: FilterFunctor>(ctx: &OpContext, input: &Frontier, functor: &F) -> Frontier {
+    let mut out = Frontier::empty(input.kind);
+    filter_into(ctx, input, functor, &mut out);
+    out
 }
 
 /// Block-level history hash table size (paper §5.2.1 keeps these in
@@ -64,15 +78,17 @@ const WARP_HASH: usize = 64;
 /// occurrence win; hash tables are heuristic and may pass rare dupes when
 /// different ids collide — exactly the paper's semantics ("reduce, but
 /// not eliminate, redundant entries").
-pub fn filter_uniquify<F: FilterFunctor>(
+pub fn filter_uniquify_into<F: FilterFunctor>(
     ctx: &OpContext,
     input: &Frontier,
     functor: &F,
     visited_mask: &AtomicBitset,
-) -> Frontier {
+    out: &mut Frontier,
+) {
+    out.reset(input.kind);
     ctx.counters.add_kernel_launch();
     let chunks = par::run_partitioned(input.ids.len(), ctx.workers, |_, s, e| {
-        let mut keep = Vec::new();
+        let mut keep = pool::take_ids();
         let mut block_hist = [VertexId::MAX; BLOCK_HASH];
         let mut warp_hist = [VertexId::MAX; WARP_HASH];
         for &id in &input.ids[s..e] {
@@ -100,13 +116,25 @@ pub fn filter_uniquify<F: FilterFunctor>(
         ctx.counters.record_run(e - s);
         keep
     });
-    let culled = input.ids.len() - chunks.iter().map(Vec::len).sum::<usize>();
-    ctx.counters.add_culled(culled as u64);
-    let mut ids = Vec::new();
+    let kept: usize = chunks.iter().map(Vec::len).sum();
+    ctx.counters.add_culled((input.ids.len() - kept) as u64);
+    out.ids.reserve(kept);
     for c in chunks {
-        ids.extend(c);
+        out.ids.extend_from_slice(&c);
+        pool::recycle_ids(c);
     }
-    Frontier { kind: input.kind, ids }
+}
+
+/// Inexact (uniquifying) filter (allocating wrapper).
+pub fn filter_uniquify<F: FilterFunctor>(
+    ctx: &OpContext,
+    input: &Frontier,
+    functor: &F,
+    visited_mask: &AtomicBitset,
+) -> Frontier {
+    let mut out = Frontier::empty(input.kind);
+    filter_uniquify_into(ctx, input, functor, visited_mask, &mut out);
+    out
 }
 
 /// Split filter (paper §5.1.5 priority queue building block): partition

@@ -55,39 +55,56 @@ pub fn bfs(g: &Csr, src: VertexId, config: &Config) -> (BfsProblem, BfsStats) {
         DirectionHeuristic::new(config.direction_optimized, config.do_a, config.do_b);
     let idempotent = config.idempotence;
 
-    let mut frontier = Frontier::single(src);
+    // Zero-alloc pipeline state: the enactor's ping-pong frontier queues
+    // (taken for the run, returned at the end), a reusable raw-output
+    // frontier for the idempotent advance+filter pair, and lazily-built
+    // pull-phase scratch (active bitmap + unvisited list) that survives
+    // across iterations.
+    let mut bufs = std::mem::take(&mut enactor.frontiers);
+    bufs.reset_single(src);
+    let mut raw = Frontier::default();
+    let mut active: Option<AtomicBitset> = None;
+    let mut unvisited: Vec<VertexId> = Vec::new();
+
     let mut depth: u32 = 0;
     let mut visited_count: usize = 1;
     let mut pull_iters = 0usize;
     let mut push_iters = 0usize;
-    // Frontier membership bitmap for the pull phase (rebuilt per pull
-    // iteration from the current frontier).
-    while !frontier.is_empty() && enactor.within_iteration_cap() {
+    while !bufs.current().is_empty() && enactor.within_iteration_cap() {
         let iter_timer = Timer::start();
         let prev_edges = enactor.counters.edges();
-        let input_len = frontier.len();
+        let input_len = bufs.current().len();
         depth += 1;
         let dir = heuristic.decide(n, g.num_edges(), input_len, n - visited_count);
 
-        let next = match dir {
+        match dir {
             Direction::Pull => {
                 pull_iters += 1;
-                // Build the active-frontier bitmap + unvisited list.
-                let active = AtomicBitset::new(n);
-                for &v in &frontier.ids {
-                    active.set(v as usize);
+                // Rebuild the active-frontier bitmap + unvisited list in
+                // the reusable scratch.
+                let bitmap = active.get_or_insert_with(|| AtomicBitset::new(n));
+                bitmap.clear_all();
+                for &v in &bufs.current().ids {
+                    bitmap.set(v as usize);
                 }
-                let unvisited = visited.unset_indices();
+                visited.unset_indices_into(&mut unvisited);
                 let ctx = enactor.ctx();
                 let d = depth;
-                let out = advance::advance_pull(&ctx, g, &unvisited, &active, |v, parent| {
-                    labels[v as usize].store(d, Ordering::Relaxed);
-                    preds[v as usize].store(parent, Ordering::Relaxed);
-                });
+                let (_, out) = bufs.split_mut();
+                advance::advance_pull_into(
+                    &ctx,
+                    g,
+                    &unvisited,
+                    bitmap,
+                    |v, parent| {
+                        labels[v as usize].store(d, Ordering::Relaxed);
+                        preds[v as usize].store(parent, Ordering::Relaxed);
+                    },
+                    out,
+                );
                 for &v in &out.ids {
                     visited.set(v as usize);
                 }
-                out
             }
             Direction::Push => {
                 push_iters += 1;
@@ -107,7 +124,16 @@ pub fn bfs(g: &Csr, src: VertexId, config: &Config) -> (BfsProblem, BfsStats) {
                             false
                         }
                     };
-                    advance::advance(&ctx, g, &frontier, advance::AdvanceType::V2V, strategy, &fun)
+                    let (input, out) = bufs.split_mut();
+                    advance::advance_into(
+                        &ctx,
+                        g,
+                        input,
+                        advance::AdvanceType::V2V,
+                        strategy,
+                        &fun,
+                        out,
+                    );
                 } else {
                     // Idempotent path: no atomics on discovery — write the
                     // label unconditionally (idempotent op), emit dups, and
@@ -121,23 +147,32 @@ pub fn bfs(g: &Csr, src: VertexId, config: &Config) -> (BfsProblem, BfsStats) {
                             false
                         }
                     };
-                    let raw =
-                        advance::advance(&ctx, g, &frontier, advance::AdvanceType::V2V, strategy, &fun);
-                    filter::filter_uniquify(&ctx, &raw, &|_| true, &visited)
+                    advance::advance_into(
+                        &ctx,
+                        g,
+                        bufs.current(),
+                        advance::AdvanceType::V2V,
+                        strategy,
+                        &fun,
+                        &mut raw,
+                    );
+                    filter::filter_uniquify_into(&ctx, &raw, &|_| true, &visited, bufs.next_mut());
                 }
             }
         };
 
-        visited_count += next.len();
+        let out_len = bufs.next().len();
+        visited_count += out_len;
         if dir == Direction::Push && !idempotent {
             // one visited-mask atomic per traversed edge (batched stat —
             // a per-edge atomic counter would double the atomic traffic)
             let e = enactor.counters.edges();
             enactor.counters.add_atomics(e.saturating_sub(prev_edges));
         }
-        enactor.record_iteration(input_len, next.len(), iter_timer.elapsed_ms(), dir == Direction::Pull);
-        frontier = next;
+        enactor.record_iteration(input_len, out_len, iter_timer.elapsed_ms(), dir == Direction::Pull);
+        bufs.swap();
     }
+    enactor.frontiers = bufs;
 
     let result = enactor.finish_run();
     let problem = BfsProblem {

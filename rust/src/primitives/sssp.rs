@@ -56,11 +56,18 @@ pub fn sssp(g: &Csr, src: VertexId, config: &Config) -> (SsspProblem, RunResult)
     let use_pq = config.sssp_delta > 0;
     let mut pq = NearFarQueue::new(config.sssp_delta.max(1));
 
-    let mut frontier = Frontier::single(src);
-    while !frontier.is_empty() && enactor.within_iteration_cap() {
+    // Zero-alloc pipeline state: enactor-owned ping-pong queues, one
+    // reusable raw-advance buffer, and a dedup bitset cleared (not
+    // reallocated) per iteration.
+    let mut bufs = std::mem::take(&mut enactor.frontiers);
+    bufs.reset_single(src);
+    let mut raw = Frontier::default();
+    let seen = crate::util::bitset::AtomicBitset::new(n);
+
+    while !bufs.current().is_empty() && enactor.within_iteration_cap() {
         let t = Timer::start();
         let prev_edges = enactor.counters.edges();
-        let input_len = frontier.len();
+        let input_len = bufs.current().len();
         queue_id += 1;
         let qid = queue_id;
 
@@ -79,38 +86,48 @@ pub fn sssp(g: &Csr, src: VertexId, config: &Config) -> (SsspProblem, RunResult)
                 false
             }
         };
-        let raw = advance::advance(&ctx, g, &frontier, advance::AdvanceType::V2V, strategy, &relax);
+        advance::advance_into(
+            &ctx,
+            g,
+            bufs.current(),
+            advance::AdvanceType::V2V,
+            strategy,
+            &relax,
+            &mut raw,
+        );
 
         // Filter: Remove_Redundant — keep one copy per stamped vertex.
         // (the stamp swap in the advance already collapses most dupes; the
         // exact pass cleans up the rest deterministically.)
-        let seen = crate::util::bitset::AtomicBitset::new(n);
-        let deduped = filter::filter(&ctx, &raw, &|v: VertexId| seen.set(v as usize));
+        seen.clear_all();
+        filter::filter_into(&ctx, &raw, &|v: VertexId| seen.set(v as usize), bufs.next_mut());
 
         // Priority queue: split into near/far, defer far work.
-        let next = if use_pq {
-            let near = pq.split(deduped.ids.iter().copied(), |v| {
+        if use_pq {
+            let near = pq.split(bufs.next().ids.iter().copied(), |v| {
                 dist[v as usize].load(Ordering::Relaxed)
             });
+            // Adopt the split's allocation (no copy); the replaced
+            // buffer's allocation is dropped, matching the pre-pipeline
+            // cost of the PQ path (the split itself must allocate).
             if near.is_empty() {
                 let lvl = pq.next_level(
                     |v| dist[v as usize].load(Ordering::Relaxed),
                     |v| dist[v as usize].load(Ordering::Relaxed) < INFINITY_DIST,
                 );
-                Frontier::vertices(lvl)
+                bufs.next_mut().ids = lvl;
             } else {
-                Frontier::vertices(near)
+                bufs.next_mut().ids = near;
             }
-        } else {
-            deduped
-        };
+        }
 
         // one relaxation atomic per traversed edge (batched stat)
         let e_now = enactor.counters.edges();
         enactor.counters.add_atomics(e_now.saturating_sub(prev_edges));
-        enactor.record_iteration(input_len, next.len(), t.elapsed_ms(), false);
-        frontier = next;
+        enactor.record_iteration(input_len, bufs.next().len(), t.elapsed_ms(), false);
+        bufs.swap();
     }
+    enactor.frontiers = bufs;
 
     let result = enactor.finish_run();
     let problem = SsspProblem {

@@ -7,10 +7,11 @@
 //! `<name> <n> <k> <filename>`; executables are compiled on first use and
 //! cached per (name, n, k).
 
-use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{bail, Context, Result};
+#[cfg(feature = "xla")]
+use {anyhow::anyhow, std::collections::HashMap};
 
 use crate::graph::Csr;
 
@@ -48,13 +49,48 @@ pub fn read_manifest(dir: &Path) -> Result<Vec<ArtifactSpec>> {
     Ok(out)
 }
 
+/// Stub used when the crate is built without the `xla` feature (the
+/// offline default — the external `xla` crate cannot be vendored). Keeps
+/// the public API shape so callers compile; every entry point reports how
+/// to enable the real path.
+#[cfg(not(feature = "xla"))]
+pub struct XlaRuntime {
+    _private: (),
+}
+
+#[cfg(not(feature = "xla"))]
+impl XlaRuntime {
+    /// Validate the manifest, then report that offload is unavailable.
+    pub fn new(artifacts_dir: &Path) -> Result<Self> {
+        let _specs = read_manifest(artifacts_dir)?;
+        bail!(
+            "gunrock was built without the `xla` feature; rebuild with \
+             `cargo build --features xla` (requires the xla crate) to run AOT offload"
+        )
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable (built without the `xla` feature)".to_string()
+    }
+
+    pub fn pagerank(&mut self, _g: &Csr, _eps: f32, _max_iters: usize) -> Result<(Vec<f32>, usize)> {
+        bail!("AOT offload unavailable: built without the `xla` feature")
+    }
+
+    pub fn bfs_pull(&mut self, _g: &Csr, _src: u32, _max_iters: usize) -> Result<(Vec<u32>, usize)> {
+        bail!("AOT offload unavailable: built without the `xla` feature")
+    }
+}
+
 /// PJRT client + compiled-executable cache.
+#[cfg(feature = "xla")]
 pub struct XlaRuntime {
     client: xla::PjRtClient,
     specs: Vec<ArtifactSpec>,
     cache: HashMap<(String, usize, usize), xla::PjRtLoadedExecutable>,
 }
 
+#[cfg(feature = "xla")]
 impl XlaRuntime {
     /// Create a CPU PJRT client and load the manifest from `artifacts_dir`.
     pub fn new(artifacts_dir: &Path) -> Result<Self> {

@@ -80,13 +80,22 @@ impl AtomicBitset {
 
     /// Collect unset bit indices < len (the "unvisited frontier" for pull).
     pub fn unset_indices(&self) -> Vec<u32> {
-        let mut out = Vec::with_capacity(self.len - self.count());
+        let mut out = Vec::new();
+        self.unset_indices_into(&mut out);
+        out
+    }
+
+    /// Collect unset bit indices into a caller-owned buffer (cleared
+    /// first) — lets the pull phase reuse its unvisited list across
+    /// iterations instead of reallocating it.
+    pub fn unset_indices_into(&self, out: &mut Vec<u32>) {
+        out.clear();
+        out.reserve(self.len - self.count());
         for i in 0..self.len {
             if !self.get(i) {
                 out.push(i as u32);
             }
         }
-        out
     }
 }
 

@@ -1,12 +1,13 @@
 //! Small self-contained substrates the framework is built on.
 //!
 //! Everything here is written from scratch because the build is fully
-//! offline (no rand / rayon / crossbeam): a PCG-based RNG, a scoped
-//! parallel-for worker pool, an atomic bitset, timers and summary
-//! statistics.
+//! offline (no rand / rayon / crossbeam): a PCG-based RNG, a persistent
+//! worker-pool runtime with BSP parallel-for entry points, an atomic
+//! bitset, timers and summary statistics.
 
 pub mod bitset;
 pub mod par;
+pub mod pool;
 pub mod rng;
 pub mod stats;
 pub mod timer;

@@ -1,12 +1,18 @@
-//! Scoped parallel-for worker pool over `std::thread` (no rayon offline).
+//! Bulk-synchronous parallel-for entry points, executed on the persistent
+//! worker pool ([`crate::util::pool`]).
 //!
 //! The framework's operators are bulk-synchronous: each operator splits its
 //! frontier into contiguous chunks ("thread blocks" in the virtual-GPU
 //! model, see `gpu_sim`) and processes chunks on a fixed set of worker
 //! threads with a barrier at the end — exactly the BSP step semantics of
-//! the paper's abstraction.
+//! the paper's abstraction. Every entry point here dispatches to the
+//! process-wide pool; nothing on the operator hot path spawns OS threads
+//! (the pool's parked workers are the CPU analog of a persistent GPU
+//! kernel, and a dispatch is the analog of a cheap kernel launch).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::util::pool;
 
 /// Number of worker threads to use. Overridable via the GUNROCK_THREADS
 /// environment variable (the config system also plumbs this through).
@@ -21,9 +27,37 @@ pub fn num_threads() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
 }
 
+/// A raw pointer into a slice whose disjoint elements are written by
+/// distinct logical workers. SAFETY: every `set`/`get_mut` index must be
+/// owned by exactly one logical worker of the enclosing dispatch, and the
+/// dispatch barrier orders the writes before the caller reads them.
+struct Slots<T>(*mut T);
+
+unsafe impl<T: Send> Send for Slots<T> {}
+unsafe impl<T: Send> Sync for Slots<T> {}
+
+impl<T> Slots<T> {
+    fn new(xs: &mut [T]) -> Self {
+        Slots(xs.as_mut_ptr())
+    }
+
+    /// Replace element `i`. SAFETY: see type docs — `i` must be this
+    /// worker's exclusive slot and in bounds.
+    unsafe fn set(&self, i: usize, value: T) {
+        *self.0.add(i) = value;
+    }
+
+    /// Exclusive reference to element `i`. SAFETY: see type docs.
+    #[allow(clippy::mut_from_ref)]
+    unsafe fn get_mut(&self, i: usize) -> &mut T {
+        &mut *self.0.add(i)
+    }
+}
+
 /// Run `f(worker_id, start, end)` over `[0, len)` split into `workers`
-/// contiguous slices, one per worker, in parallel. Returns each worker's
-/// result in worker order. A barrier is implied (scope join).
+/// contiguous slices, one per worker, in parallel on the persistent pool.
+/// Returns each worker's result in worker order. A barrier is implied
+/// (epoch barrier in the pool dispatch).
 pub fn run_partitioned<T, F>(len: usize, workers: usize, f: F) -> Vec<T>
 where
     T: Send,
@@ -38,28 +72,26 @@ where
     }
     let per = len.div_ceil(workers);
     let mut out: Vec<Option<T>> = (0..workers).map(|_| None).collect();
-    std::thread::scope(|s| {
-        let mut handles = Vec::with_capacity(workers);
-        for (w, slot) in out.iter_mut().enumerate() {
+    {
+        let slots = Slots::new(&mut out);
+        pool::global().broadcast(workers, |w| {
             let start = (w * per).min(len);
             let end = ((w + 1) * per).min(len);
-            let f = &f;
-            handles.push(s.spawn(move || {
-                *slot = Some(f(w, start, end));
-            }));
-        }
-    });
-    out.into_iter().map(|o| o.expect("worker panicked")).collect()
+            // SAFETY: each logical worker writes only its own slot.
+            unsafe { slots.set(w, Some(f(w, start, end))) };
+        });
+    }
+    out.into_iter().map(|o| o.expect("pool worker produced no result")).collect()
 }
 
 /// Dynamic work-stealing variant: workers grab fixed-size chunks from a
 /// shared atomic counter until the range is exhausted. Better for ragged
-/// per-item cost (e.g. TWC advance on scale-free frontiers).
+/// per-item cost (e.g. TWC advance on scale-free frontiers). Each logical
+/// worker owns a private result slot (single writer — no locks).
 pub fn run_dynamic<T, F>(len: usize, workers: usize, chunk: usize, f: F) -> Vec<T>
 where
     T: Send,
     F: Fn(usize, usize, usize) -> T + Sync,
-    T: Default,
 {
     let workers = workers.max(1);
     let chunk = chunk.max(1);
@@ -70,31 +102,23 @@ where
         return vec![f(0, 0, len)];
     }
     let cursor = AtomicUsize::new(0);
-    let results: Vec<std::sync::Mutex<Vec<T>>> =
-        (0..workers).map(|_| std::sync::Mutex::new(Vec::new())).collect();
-    std::thread::scope(|s| {
-        for w in 0..workers {
-            let cursor = &cursor;
-            let f = &f;
-            let slot = &results[w];
-            s.spawn(move || {
-                let mut local = Vec::new();
-                loop {
-                    let start = cursor.fetch_add(chunk, Ordering::Relaxed);
-                    if start >= len {
-                        break;
-                    }
-                    let end = (start + chunk).min(len);
-                    local.push(f(w, start, end));
+    let mut results: Vec<Vec<T>> = (0..workers).map(|_| Vec::new()).collect();
+    {
+        let slots = Slots::new(&mut results);
+        pool::global().broadcast(workers, |w| {
+            // SAFETY: slot `w` has exactly one writer — this logical worker.
+            let local = unsafe { slots.get_mut(w) };
+            loop {
+                let start = cursor.fetch_add(chunk, Ordering::Relaxed);
+                if start >= len {
+                    break;
                 }
-                *slot.lock().unwrap() = local;
-            });
-        }
-    });
-    results
-        .into_iter()
-        .flat_map(|m| m.into_inner().unwrap())
-        .collect()
+                let end = (start + chunk).min(len);
+                local.push(f(w, start, end));
+            }
+        });
+    }
+    results.into_iter().flatten().collect()
 }
 
 /// Parallel in-place transform of a mutable slice: each worker gets a
@@ -116,21 +140,13 @@ where
         return;
     }
     let per = len.div_ceil(workers);
-    std::thread::scope(|s| {
-        let mut rest = xs;
-        let mut base = 0usize;
-        while !rest.is_empty() {
-            let take = per.min(rest.len());
-            let (head, tail) = rest.split_at_mut(take);
-            let f = &f;
-            let start = base;
-            s.spawn(move || {
-                for (i, x) in head.iter_mut().enumerate() {
-                    f(start + i, x);
-                }
-            });
-            rest = tail;
-            base += take;
+    let slots = Slots::new(xs);
+    pool::global().broadcast(workers, |w| {
+        let start = (w * per).min(len);
+        let end = ((w + 1) * per).min(len);
+        for i in start..end {
+            // SAFETY: contiguous per-worker ranges are disjoint.
+            f(i, unsafe { slots.get_mut(i) });
         }
     });
 }
@@ -170,11 +186,9 @@ pub fn exclusive_scan(xs: &mut [usize], workers: usize) -> usize {
         }
         return acc;
     }
-    // Pass 1: per-chunk sums.
+    // Pass 1: per-chunk sums (chunking must match pass 2).
     let per = len.div_ceil(workers);
-    let sums = run_partitioned(len, workers, |_, start, end| {
-        xs[start..end].iter().sum::<usize>()
-    });
+    let sums = run_partitioned(len, workers, |_, start, end| xs[start..end].iter().sum::<usize>());
     // Chunk offsets.
     let mut offsets = Vec::with_capacity(sums.len());
     let mut acc = 0usize;
@@ -183,30 +197,57 @@ pub fn exclusive_scan(xs: &mut [usize], workers: usize) -> usize {
         acc += s;
     }
     let total = acc;
-    // Pass 2: local scan with chunk offset. Need split_at_mut juggling.
-    std::thread::scope(|s| {
-        let mut rest: &mut [usize] = xs;
-        let mut idx = 0usize;
-        let mut w = 0usize;
-        while !rest.is_empty() {
-            let take = per.min(rest.len());
-            let (head, tail) = rest.split_at_mut(take);
-            let base = offsets[w];
-            s.spawn(move || {
-                let mut acc = base;
-                for x in head.iter_mut() {
-                    let v = *x;
-                    *x = acc;
-                    acc += v;
-                }
-            });
-            rest = tail;
-            idx += take;
-            w += 1;
+    // Pass 2: local scan with chunk offset, on the pool.
+    let slots = Slots::new(xs);
+    pool::global().broadcast(workers, |w| {
+        let start = (w * per).min(len);
+        let end = ((w + 1) * per).min(len);
+        let mut acc = offsets[w];
+        for i in start..end {
+            // SAFETY: contiguous per-worker ranges are disjoint.
+            let x = unsafe { slots.get_mut(i) };
+            let v = *x;
+            *x = acc;
+            acc += v;
         }
-        let _ = idx;
     });
     total
+}
+
+/// Scoped-spawn reference implementations — the pre-pool runtime, kept
+/// **off** every hot path. Used only by the launch-overhead ablation bench
+/// and by tests that cross-validate the pooled entry points. Do not call
+/// these from operators.
+pub mod scoped {
+    /// `run_partitioned` via `std::thread::scope`: spawns and joins fresh
+    /// OS threads on every call (the per-"kernel-launch" cost the
+    /// persistent pool exists to eliminate).
+    pub fn run_partitioned<T, F>(len: usize, workers: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize, usize, usize) -> T + Sync,
+    {
+        let workers = workers.max(1);
+        if len == 0 {
+            return Vec::new();
+        }
+        if workers == 1 || len < 2 {
+            return vec![f(0, 0, len)];
+        }
+        let per = len.div_ceil(workers);
+        let mut out: Vec<Option<T>> = (0..workers).map(|_| None).collect();
+        std::thread::scope(|s| {
+            for (w, slot) in out.iter_mut().enumerate() {
+                let start = (w * per).min(len);
+                let end = ((w + 1) * per).min(len);
+                let f = &f;
+                s.spawn(move || {
+                    *slot = Some(f(w, start, end));
+                });
+            }
+        });
+        out.into_iter().map(|o| o.expect("worker panicked")).collect()
+    }
 }
 
 #[cfg(test)]
@@ -223,6 +264,15 @@ mod tests {
     fn partitioned_single_worker() {
         let r = run_partitioned(10, 1, |w, s, e| (w, s, e));
         assert_eq!(r, vec![(0, 0, 10)]);
+    }
+
+    #[test]
+    fn partitioned_matches_scoped_baseline() {
+        for workers in [2, 3, 8, 17] {
+            let pooled = run_partitioned(999, workers, |w, s, e| (w, s, e));
+            let scoped = scoped::run_partitioned(999, workers, |w, s, e| (w, s, e));
+            assert_eq!(pooled, scoped, "workers={workers}");
+        }
     }
 
     #[test]
@@ -268,5 +318,14 @@ mod tests {
             assert_eq!(xs, expect, "n={n}");
             assert_eq!(total, acc);
         }
+    }
+
+    #[test]
+    fn nested_par_calls_do_not_deadlock() {
+        // An operator closure calling back into par::* must run inline.
+        let sums = run_partitioned(64, 4, |_, s, e| {
+            map_reduce(e - s, 4, 0usize, |i| s + i, |a, b| a + b)
+        });
+        assert_eq!(sums.into_iter().sum::<usize>(), 63 * 64 / 2);
     }
 }

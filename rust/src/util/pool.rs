@@ -1,0 +1,492 @@
+//! Persistent worker-pool runtime — the CPU analog of the GPU's
+//! persistent-kernel execution model (paper §5.3 "kernel fusion / cheap
+//! launches", GraphBLAST's launch-overhead analysis).
+//!
+//! The previous runtime spawned fresh OS threads through
+//! `std::thread::scope` on **every** operator call, so iteration-bound
+//! workloads (road networks, late BFS levels, near-empty SSSP frontiers)
+//! paid a thread-create + join cost per "kernel launch" that dwarfed the
+//! actual edge work. This module replaces that with a set of parked
+//! worker threads spawned once per process (demand-sized: grown to the
+//! widest dispatch seen, capped at [`crate::util::par::num_threads`],
+//! never shrunk) and dispatched through a broadcast job slot:
+//!
+//! - **dispatch**: the caller publishes an epoch-stamped job (a borrowed
+//!   closure plus a logical-worker count) under a mutex and wakes the
+//!   parked workers;
+//! - **execution**: every participant — the pool threads *and the calling
+//!   thread itself* — claims logical worker ids from an atomic counter and
+//!   runs the job for each claimed id, so a dispatch never blocks the
+//!   caller on an idle core and `workers` may exceed the physical pool
+//!   size (ids are multiplexed);
+//! - **barrier**: the caller returns only after every logical id has
+//!   finished (epoch barrier), which is exactly the BSP step-boundary
+//!   semantics the operators already assume — and what makes lending a
+//!   non-`'static` closure to long-lived threads sound;
+//! - **reuse**: a process-wide recycler of frontier-sized scratch buffers
+//!   ([`take_ids`] / [`recycle_ids`]) lets operator internals keep their
+//!   per-worker output storage across calls instead of reallocating it
+//!   every BSP iteration.
+//!
+//! Nested parallelism (an operator closure calling back into `par::*`) and
+//! re-entrant dispatch are detected through a thread-local flag and run
+//! serially inline — matching the GPU model, where a kernel cannot launch
+//! a blocking child grid. Concurrent enactors on different user threads
+//! serialize at the dispatch lock; each still computes with the full pool.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+type JobFn = dyn Fn(usize) + Sync;
+
+/// One broadcast job: a lifetime-erased borrowed closure plus the claim /
+/// completion counters for its epoch. Workers hold an `Arc<Job>` so a
+/// straggler waking after the job finished can only observe an exhausted
+/// claim counter — it can never touch `f` once the dispatcher returned.
+struct Job {
+    /// Borrowed from the dispatching stack frame. SAFETY: only dereferenced
+    /// by a participant holding a claimed id < `count`, and the dispatcher
+    /// blocks until `completed == count`, so the borrow outlives every use.
+    f: *const JobFn,
+    count: usize,
+    next: AtomicUsize,
+    completed: AtomicUsize,
+    panic: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+}
+
+unsafe impl Send for Job {}
+unsafe impl Sync for Job {}
+
+struct PoolState {
+    epoch: u64,
+    job: Option<Arc<Job>>,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<PoolState>,
+    work: Condvar,
+    done: Condvar,
+}
+
+thread_local! {
+    /// True while this thread is executing inside a pool job (worker
+    /// threads permanently; the dispatcher for the duration of its own
+    /// share). Nested `broadcast` calls from such a context run inline.
+    static BUSY: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+}
+
+struct BusyGuard {
+    prev: bool,
+}
+
+impl BusyGuard {
+    fn enter() -> Self {
+        let prev = BUSY.with(|b| b.replace(true));
+        BusyGuard { prev }
+    }
+}
+
+impl Drop for BusyGuard {
+    fn drop(&mut self) {
+        let prev = self.prev;
+        BUSY.with(|b| b.set(prev));
+    }
+}
+
+/// A fixed set of parked worker threads dispatched via a broadcast job
+/// slot + epoch barrier. One process-wide instance (see [`global`]) backs
+/// all `par::*` entry points; standalone instances exist for tests.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    /// Serializes dispatches: one in-flight job at a time (BSP semantics).
+    dispatch_lock: Mutex<()>,
+    /// Number of spawned pool threads (the caller is an extra participant).
+    threads: AtomicUsize,
+    handles: Mutex<Vec<JoinHandle<()>>>,
+    /// Grow lazily to the demanded dispatch width (capped at machine
+    /// width). Set for the global pool so a process that only ever runs
+    /// narrow jobs (`--threads 1`) never spawns idle workers; fixed-size
+    /// test pools keep it off.
+    auto_grow: bool,
+}
+
+impl WorkerPool {
+    /// Create a fixed pool with `threads` parked workers. The dispatching
+    /// thread always participates too, so `threads == n - 1` serves
+    /// `n`-wide jobs.
+    pub fn new(threads: usize) -> Self {
+        let pool = WorkerPool {
+            shared: Arc::new(Shared {
+                state: Mutex::new(PoolState { epoch: 0, job: None, shutdown: false }),
+                work: Condvar::new(),
+                done: Condvar::new(),
+            }),
+            dispatch_lock: Mutex::new(()),
+            threads: AtomicUsize::new(0),
+            handles: Mutex::new(Vec::new()),
+            auto_grow: false,
+        };
+        pool.reserve(threads);
+        pool
+    }
+
+    /// The process-wide pool starts empty and grows on demand.
+    fn new_demand_sized() -> Self {
+        let mut pool = WorkerPool::new(0);
+        pool.auto_grow = true;
+        pool
+    }
+
+    /// Number of spawned pool threads.
+    pub fn threads(&self) -> usize {
+        self.threads.load(Ordering::Acquire)
+    }
+
+    /// Grow the pool to at least `threads` parked workers (never shrinks).
+    pub fn reserve(&self, threads: usize) {
+        if self.threads() >= threads {
+            return;
+        }
+        let mut handles = self.handles.lock().unwrap();
+        while handles.len() < threads {
+            let shared = Arc::clone(&self.shared);
+            let idx = handles.len();
+            let h = std::thread::Builder::new()
+                .name(format!("gunrock-worker-{idx}"))
+                .spawn(move || worker_loop(&shared))
+                .expect("spawn pool worker");
+            handles.push(h);
+        }
+        self.threads.store(handles.len(), Ordering::Release);
+    }
+
+    /// Run `f(id)` for every logical worker id in `0..workers`, in
+    /// parallel across the pool plus the calling thread, returning after
+    /// all ids completed (epoch barrier). Panics inside `f` are forwarded
+    /// to the caller after the barrier, like `std::thread::scope`.
+    pub fn broadcast<F>(&self, workers: usize, f: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        let count = workers.max(1);
+        // Serial fast paths: single logical worker or a nested call from
+        // inside a job.
+        if count == 1 || BUSY.with(|b| b.get()) {
+            for id in 0..count {
+                f(id);
+            }
+            return;
+        }
+        // Demand-driven sizing (global pool): spawn just enough parked
+        // workers for this dispatch width, capped at machine width — a
+        // process that only runs narrow jobs never pays for idle threads.
+        if self.auto_grow && self.threads() + 1 < count {
+            let cap = crate::util::par::num_threads();
+            self.reserve(count.min(cap).saturating_sub(1));
+        }
+        // No pool threads (single-core, or fixed zero-width test pool):
+        // run serially on the caller.
+        if self.threads() == 0 {
+            for id in 0..count {
+                f(id);
+            }
+            return;
+        }
+
+        let fref: &JobFn = &f;
+        let job = Arc::new(Job {
+            f: fref as *const JobFn,
+            count,
+            next: AtomicUsize::new(0),
+            completed: AtomicUsize::new(0),
+            panic: Mutex::new(None),
+        });
+
+        let dispatch = self.dispatch_lock.lock().unwrap();
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.epoch += 1;
+            st.job = Some(Arc::clone(&job));
+        }
+        self.shared.work.notify_all();
+
+        // The caller is a participant too; mark it busy so nested par
+        // calls inside `f` run inline instead of self-deadlocking on the
+        // dispatch lock.
+        {
+            let _busy = BusyGuard::enter();
+            run_job(&job, &self.shared);
+        }
+
+        // Epoch barrier: wait for stragglers, then retire the job slot.
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            while job.completed.load(Ordering::Acquire) < count {
+                st = self.shared.done.wait(st).unwrap();
+            }
+            st.job = None;
+        }
+        drop(dispatch);
+
+        if let Some(payload) = job.panic.lock().unwrap().take() {
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.work.notify_all();
+        for h in self.handles.lock().unwrap().drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    // Pool threads only ever run inside jobs: permanently "busy" so any
+    // nested par call from a job closure executes inline.
+    BUSY.with(|b| b.set(true));
+    let mut last_epoch = 0u64;
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch != last_epoch {
+                    break;
+                }
+                st = shared.work.wait(st).unwrap();
+            }
+            last_epoch = st.epoch;
+            st.job.clone()
+        };
+        if let Some(job) = job {
+            run_job(&job, shared);
+        }
+    }
+}
+
+/// Claim logical ids until the job is exhausted, running `f` for each.
+/// Every participant (pool threads and the dispatcher) runs this loop.
+fn run_job(job: &Job, shared: &Shared) {
+    loop {
+        let id = job.next.fetch_add(1, Ordering::Relaxed);
+        if id >= job.count {
+            break;
+        }
+        // SAFETY: id < count, so the dispatcher is still inside
+        // `broadcast` waiting on the barrier and the borrow behind `f`
+        // is alive (see Job docs).
+        let f = unsafe { &*job.f };
+        if let Err(payload) = catch_unwind(AssertUnwindSafe(|| f(id))) {
+            let mut slot = job.panic.lock().unwrap();
+            if slot.is_none() {
+                *slot = Some(payload);
+            }
+        }
+        // Release pairs with the dispatcher's Acquire load: all of f's
+        // writes are visible once the barrier observes completion.
+        if job.completed.fetch_add(1, Ordering::Release) + 1 == job.count {
+            let _st = shared.state.lock().unwrap();
+            shared.done.notify_all();
+        }
+    }
+}
+
+/// The process-wide pool ("the device"). Starts empty and grows on
+/// demand — each dispatch spawns at most enough parked workers for its
+/// own width, capped at machine width — so a `--threads 1` run on a
+/// many-core box never spawns idle workers. [`reserve`](WorkerPool::reserve)
+/// (via [`ensure_capacity`]) pre-warms it when a config asks.
+pub fn global() -> &'static WorkerPool {
+    static POOL: OnceLock<WorkerPool> = OnceLock::new();
+    POOL.get_or_init(WorkerPool::new_demand_sized)
+}
+
+/// Ensure the global pool can serve `workers`-wide dispatches without id
+/// multiplexing. Called by `Enactor::new` with the configured pool width.
+pub fn ensure_capacity(workers: usize) {
+    global().reserve(workers.saturating_sub(1));
+}
+
+// ---------------------------------------------------------------------------
+// Reusable scratch buffers (the zero-alloc half of the runtime).
+//
+// Operator internals used to allocate a fresh `Vec` per worker per call
+// for chunk outputs, expansion sources, and classification lists. These
+// free-lists let those buffers survive across operator calls: after
+// warm-up, a BSP iteration performs no frontier-sized allocations.
+// ---------------------------------------------------------------------------
+
+/// Cap on retained buffers per free-list, bounding idle buffer count.
+const MAX_RECYCLED: usize = 256;
+/// Cap on a single retained buffer's capacity **in elements** (u32: 16 MB,
+/// usize: 32 MB). Buffers sized by a one-off giant frontier are dropped on
+/// recycle instead of pinning worst-case RSS for the process lifetime.
+const MAX_RECYCLED_ELEMS: usize = 4 << 20;
+
+static ID_BUFFERS: Mutex<Vec<Vec<u32>>> = Mutex::new(Vec::new());
+static OFFSET_BUFFERS: Mutex<Vec<Vec<usize>>> = Mutex::new(Vec::new());
+
+/// Take a reusable `Vec<u32>` (vertex/edge id) scratch buffer. The buffer
+/// is empty but retains the capacity of its previous life.
+pub fn take_ids() -> Vec<u32> {
+    ID_BUFFERS.lock().unwrap().pop().unwrap_or_default()
+}
+
+/// Return an id scratch buffer to the recycler.
+pub fn recycle_ids(mut buf: Vec<u32>) {
+    if buf.capacity() == 0 || buf.capacity() > MAX_RECYCLED_ELEMS {
+        return;
+    }
+    buf.clear();
+    let mut pool = ID_BUFFERS.lock().unwrap();
+    if pool.len() < MAX_RECYCLED {
+        pool.push(buf);
+    }
+}
+
+/// Take a reusable `Vec<usize>` (offset/index) scratch buffer.
+pub fn take_offsets() -> Vec<usize> {
+    OFFSET_BUFFERS.lock().unwrap().pop().unwrap_or_default()
+}
+
+/// Return an offset scratch buffer to the recycler.
+pub fn recycle_offsets(mut buf: Vec<usize>) {
+    if buf.capacity() == 0 || buf.capacity() > MAX_RECYCLED_ELEMS {
+        return;
+    }
+    buf.clear();
+    let mut pool = OFFSET_BUFFERS.lock().unwrap();
+    if pool.len() < MAX_RECYCLED {
+        pool.push(buf);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn broadcast_runs_every_id_once() {
+        let pool = WorkerPool::new(3);
+        let hits: Vec<AtomicU64> = (0..16).map(|_| AtomicU64::new(0)).collect();
+        pool.broadcast(16, |id| {
+            hits[id].fetch_add(1, Ordering::Relaxed);
+        });
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 1, "id {i}");
+        }
+    }
+
+    #[test]
+    fn repeated_dispatch_reuses_threads() {
+        let pool = WorkerPool::new(2);
+        let total = AtomicU64::new(0);
+        for _ in 0..500 {
+            pool.broadcast(4, |id| {
+                total.fetch_add(id as u64, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(total.load(Ordering::Relaxed), 500 * 6); // 6 = 0+1+2+3
+        assert_eq!(pool.threads(), 2);
+    }
+
+    #[test]
+    fn wider_than_pool_multiplexes() {
+        let pool = WorkerPool::new(1);
+        let hits: Vec<AtomicU64> = (0..64).map(|_| AtomicU64::new(0)).collect();
+        pool.broadcast(64, |id| {
+            hits[id].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn zero_thread_pool_runs_serially() {
+        let pool = WorkerPool::new(0);
+        let total = AtomicU64::new(0);
+        pool.broadcast(8, |id| {
+            total.fetch_add(id as u64, Ordering::Relaxed);
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 28);
+    }
+
+    #[test]
+    fn nested_broadcast_runs_inline() {
+        let pool = global();
+        let total = AtomicU64::new(0);
+        pool.broadcast(4, |_| {
+            // Nested dispatch from inside a job: must not deadlock.
+            pool.broadcast(4, |id| {
+                total.fetch_add(id as u64 + 1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 4 * (1 + 2 + 3 + 4));
+    }
+
+    #[test]
+    fn panic_propagates_after_barrier() {
+        let pool = WorkerPool::new(2);
+        let ran = AtomicU64::new(0);
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            pool.broadcast(8, |id| {
+                ran.fetch_add(1, Ordering::Relaxed);
+                if id == 3 {
+                    panic!("boom from worker {id}");
+                }
+            });
+        }));
+        assert!(result.is_err(), "panic must propagate to the dispatcher");
+        // Barrier semantics: the other ids still ran.
+        assert_eq!(ran.load(Ordering::Relaxed), 8);
+        // Pool must remain usable after a panicked job.
+        let ok = AtomicU64::new(0);
+        pool.broadcast(4, |_| {
+            ok.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(ok.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn reserve_grows_pool() {
+        let pool = WorkerPool::new(1);
+        assert_eq!(pool.threads(), 1);
+        pool.reserve(3);
+        assert_eq!(pool.threads(), 3);
+        pool.reserve(2); // never shrinks
+        assert_eq!(pool.threads(), 3);
+    }
+
+    #[test]
+    fn scratch_buffers_recycle_empty() {
+        // The free-lists are process-global (shared with concurrently
+        // running tests), so only assert properties that hold regardless
+        // of interleaving: recycled buffers come back empty and non-tiny
+        // capacities are retained somewhere in the pool.
+        let mut a = take_ids();
+        a.extend(0..1000u32);
+        recycle_ids(a);
+        let b = take_ids();
+        assert!(b.is_empty(), "recycled buffers must be cleared");
+        recycle_ids(b);
+
+        let mut o = take_offsets();
+        o.extend(0..100usize);
+        recycle_offsets(o);
+        let o2 = take_offsets();
+        assert!(o2.is_empty());
+        recycle_offsets(o2);
+    }
+}

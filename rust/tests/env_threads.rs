@@ -1,0 +1,27 @@
+//! GUNROCK_THREADS override test, isolated in its own integration-test
+//! binary: cargo runs each tests/*.rs file as a separate process, and
+//! this is the only test in it, so `std::env::set_var` never races a
+//! concurrent `getenv` from sibling tests (setenv/getenv from parallel
+//! threads is UB on glibc).
+
+use gunrock::util::par;
+
+#[test]
+fn gunrock_threads_env_override() {
+    let prev = std::env::var("GUNROCK_THREADS").ok();
+    // Valid value: honored exactly.
+    std::env::set_var("GUNROCK_THREADS", "3");
+    assert_eq!(par::num_threads(), 3);
+    let total: usize =
+        par::run_partitioned(999, par::num_threads(), |_, s, e| e - s).into_iter().sum();
+    assert_eq!(total, 999);
+    // Zero and garbage: fall back to machine parallelism (>= 1).
+    std::env::set_var("GUNROCK_THREADS", "0");
+    assert!(par::num_threads() >= 1);
+    std::env::set_var("GUNROCK_THREADS", "not-a-number");
+    assert!(par::num_threads() >= 1);
+    match prev {
+        Some(v) => std::env::set_var("GUNROCK_THREADS", v),
+        None => std::env::remove_var("GUNROCK_THREADS"),
+    }
+}

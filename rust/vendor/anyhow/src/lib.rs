@@ -1,0 +1,159 @@
+//! Minimal offline shim of the `anyhow` error-handling API.
+//!
+//! The build runs with no registry access, so the real crate cannot be
+//! fetched; this shim implements exactly the surface the workspace uses:
+//! [`Result`], [`Error`] (with `{:#}` chain formatting), [`Error::msg`],
+//! the [`anyhow!`] / [`bail!`] macros, and the [`Context`] extension
+//! trait on `Result` and `Option`. Swap in the real crate by deleting
+//! `vendor/anyhow` and pointing Cargo.toml at the registry.
+
+use std::fmt;
+
+/// `Result` specialized to the shim's [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A context-chained error value. Stores the rendered message chain
+/// (outermost first) rather than boxed sources — enough for display,
+/// propagation, and tests.
+pub struct Error {
+    /// chain[0] is the outermost message; later entries are causes.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from any displayable message (mirrors
+    /// `anyhow::Error::msg`; usable as `map_err(Error::msg)`).
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Push an outer context message onto the chain.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}` renders the whole cause chain, like anyhow.
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or("unknown error"))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.join(": "))
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Self {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($msg:expr $(,)?) => {
+        $crate::Error::msg($msg)
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Context-attachment extension for `Result` and `Option`.
+pub trait Context<T> {
+    /// Wrap the error (or `None`) with an outer context message.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    /// Like [`Context::context`], evaluating the message lazily.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E> Context<T> for std::result::Result<T, E>
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_num(s: &str) -> Result<i64> {
+        let n: i64 = s.parse().context("not a number")?;
+        if n < 0 {
+            bail!("negative: {n}");
+        }
+        Ok(n)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        assert_eq!(parse_num("41").unwrap(), 41);
+        let e = parse_num("x").unwrap_err();
+        assert!(format!("{e:#}").starts_with("not a number: "));
+    }
+
+    #[test]
+    fn bail_formats() {
+        let e = parse_num("-3").unwrap_err();
+        assert_eq!(format!("{e}"), "negative: -3");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u8> = None;
+        let e = v.with_context(|| format!("missing {}", "thing")).unwrap_err();
+        assert_eq!(format!("{e}"), "missing thing");
+    }
+
+    #[test]
+    fn error_msg_from_string() {
+        let e: Error = Error::msg(String::from("boom"));
+        assert_eq!(format!("{e:?}"), "boom");
+    }
+}

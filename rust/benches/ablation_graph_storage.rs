@@ -1,0 +1,152 @@
+//! Ablation: compressed graph storage — bytes/edge and traversal MTEPS,
+//! raw CSR vs gap-compressed (`graph/compressed/`), per dataset.
+//!
+//! Three questions, per dataset class:
+//!
+//! 1. footprint: adjacency bytes/edge (offsets + columns for raw CSR;
+//!    payload + both indexes for compressed) under each codec;
+//! 2. traversal cost: full-stack BFS MTEPS over `Csr` vs `CompressedCsr`
+//!    (decode-on-advance through the same operator pipeline), results
+//!    cross-checked for equality;
+//! 3. determinism: single-threaded PageRank must be bit-identical across
+//!    representations (same edge-id space, same visit order).
+//!
+//! Emits BENCH_graph_storage.json for the experiment ledger (CI uploads
+//! it next to BENCH_launch_overhead.json).
+
+use gunrock::config::Config;
+use gunrock::graph::compressed::raw_csr_bytes;
+use gunrock::graph::{datasets, Codec, CompressedCsr};
+use gunrock::harness::{self, suite};
+use gunrock::primitives::{bfs, pagerank};
+use gunrock::util::par;
+use gunrock::util::timer::Timer;
+
+const CODECS: &[Codec] = &[Codec::Varint, Codec::Zeta(2), Codec::Zeta(3)];
+
+/// Power-law + mesh coverage: the acceptance bar is on the power-law
+/// entries (rmat / kron), where gap coding wins hardest; the road mesh
+/// shows the honest worst case (long gaps, low degree).
+const DATASETS: &[&str] = &["rmat_s22_e64", "kron_g500-logn14", "roadnet_USA"];
+
+struct DatasetReport {
+    name: String,
+    vertices: usize,
+    edges: usize,
+    raw_bpe: f64,
+    codec_bpe: Vec<(Codec, f64, f64)>, // (codec, bytes/edge, payload bits/edge)
+    bfs_csr_mteps: f64,
+    bfs_gsr_mteps: f64,
+    results_match: bool,
+}
+
+fn main() {
+    gunrock::util::pool::ensure_capacity(par::num_threads());
+    let mut reports = Vec::new();
+
+    for &name in DATASETS {
+        let g = datasets::load(name, false);
+        let raw = raw_csr_bytes(g.num_vertices, g.num_edges());
+        let raw_bpe = raw as f64 / g.num_edges().max(1) as f64;
+
+        let mut codec_bpe = Vec::new();
+        for &codec in CODECS {
+            let cg = CompressedCsr::from_csr(&g, codec);
+            codec_bpe.push((codec, cg.bytes_per_edge(), cg.payload_bits_per_edge()));
+        }
+
+        // Traversal: BFS over both representations (varint payload), warm
+        // run first, timed second; labels must agree exactly.
+        let cg = CompressedCsr::from_csr(&g, Codec::Varint);
+        let src = suite::pick_source(&g);
+        let cfg = Config::default();
+        let (want, _) = bfs::bfs(&g, src, &cfg);
+        let (_, csr_stats) = bfs::bfs(&g, src, &cfg);
+        let (got, _) = bfs::bfs(&cg, src, &cfg);
+        let (_, gsr_stats) = bfs::bfs(&cg, src, &cfg);
+        let mut results_match = want.labels == got.labels;
+
+        // Determinism: single-threaded PageRank bit-identical across reps.
+        let mut pr_cfg = Config::default();
+        pr_cfg.threads = 1;
+        pr_cfg.pr_max_iters = 5;
+        let (pr_a, _) = pagerank::pagerank(&g, &pr_cfg);
+        let (pr_b, _) = pagerank::pagerank(&cg, &pr_cfg);
+        results_match &= pr_a.ranks == pr_b.ranks;
+
+        reports.push(DatasetReport {
+            name: name.to_string(),
+            vertices: g.num_vertices,
+            edges: g.num_edges(),
+            raw_bpe,
+            codec_bpe,
+            bfs_csr_mteps: csr_stats.result.mteps(),
+            bfs_gsr_mteps: gsr_stats.result.mteps(),
+            results_match,
+        });
+    }
+
+    let mut rows = Vec::new();
+    for r in &reports {
+        let best = r
+            .codec_bpe
+            .iter()
+            .map(|&(_, bpe, _)| bpe)
+            .fold(f64::INFINITY, f64::min);
+        rows.push(vec![
+            r.name.clone(),
+            format!("{:.2}", r.raw_bpe),
+            format!("{best:.2}"),
+            format!("{:.0}%", 100.0 * best / r.raw_bpe),
+            format!("{:.1}", r.bfs_csr_mteps),
+            format!("{:.1}", r.bfs_gsr_mteps),
+            r.results_match.to_string(),
+        ]);
+    }
+    harness::print_table(
+        "Ablation: graph storage (raw CSR vs gap-compressed)",
+        &["dataset", "raw B/e", "best B/e", "ratio", "BFS MTEPS csr", "BFS MTEPS gsr", "match"],
+        &rows,
+    );
+
+    let t = Timer::start();
+    let mut json = String::from("{\n  \"bench\": \"graph_storage\",\n  \"datasets\": [\n");
+    for (i, r) in reports.iter().enumerate() {
+        let mut codecs = String::new();
+        for (j, (codec, bpe, bits)) in r.codec_bpe.iter().enumerate() {
+            codecs.push_str(&format!(
+                "{}\"{codec}\": {{\"bytes_per_edge\": {bpe:.3}, \"payload_bits_per_edge\": {bits:.2}, \"ratio_vs_raw\": {:.3}}}",
+                if j == 0 { "" } else { ", " },
+                bpe / r.raw_bpe,
+            ));
+        }
+        json.push_str(&format!(
+            "    {{\"name\": \"{}\", \"vertices\": {}, \"edges\": {}, \
+             \"raw_bytes_per_edge\": {:.3}, \"codecs\": {{{codecs}}}, \
+             \"bfs_mteps\": {{\"csr\": {:.2}, \"compressed\": {:.2}}}, \
+             \"results_match\": {}}}{}\n",
+            r.name,
+            r.vertices,
+            r.edges,
+            r.raw_bpe,
+            r.bfs_csr_mteps,
+            r.bfs_gsr_mteps,
+            r.results_match,
+            if i + 1 < reports.len() { "," } else { "" },
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    std::fs::write("BENCH_graph_storage.json", &json).expect("write BENCH_graph_storage.json");
+    println!("wrote BENCH_graph_storage.json in {:.1} ms", t.elapsed_ms());
+
+    let power_law_ok = reports
+        .iter()
+        .filter(|r| r.name.starts_with("rmat") || r.name.starts_with("kron"))
+        .any(|r| {
+            r.codec_bpe.iter().any(|&(_, bpe, _)| bpe <= 0.6 * r.raw_bpe)
+        });
+    println!(
+        "power-law compression target (<= 60% of raw bytes/edge): {}",
+        if power_law_ok { "MET" } else { "MISSED" }
+    );
+}

@@ -9,7 +9,7 @@ pub mod problem;
 use crate::config::Config;
 use crate::frontier::DoubleBuffer;
 use crate::gpu_sim::WarpCounters;
-use crate::graph::Csr;
+use crate::graph::GraphRep;
 use crate::load_balance::{self, StrategyKind};
 use crate::operators::OpContext;
 use crate::util::timer::Timer;
@@ -88,8 +88,9 @@ impl Enactor {
     }
 
     /// Strategy for this iteration: explicit config override, else the
-    /// paper's topology + frontier-size heuristic (§5.1.3).
-    pub fn strategy_for(&self, g: &Csr, frontier_len: usize) -> StrategyKind {
+    /// paper's topology + frontier-size heuristic (§5.1.3). Works on any
+    /// graph representation (the heuristic only reads the average degree).
+    pub fn strategy_for<G: GraphRep>(&self, g: &G, frontier_len: usize) -> StrategyKind {
         if let Some(s) = self.config.strategy {
             s
         } else {

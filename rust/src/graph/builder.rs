@@ -1,7 +1,10 @@
 //! COO -> CSR conversion (counting sort over sources) with optional CSC
-//! construction. Parallel over vertices for the scatter phase.
+//! construction. The per-row neighbor sort runs on the persistent worker
+//! pool (the last scoped-spawn site outside the operator hot path moved
+//! there — ROADMAP item): vertex ranges partition the edge arrays into
+//! disjoint slices, one contiguous range per logical worker.
 
-use super::{Coo, Csr, SizeT, VertexId};
+use super::{Coo, Csr, SizeT, VertexId, Weight};
 use crate::util::par;
 
 /// Build a CSR (and optionally CSC) graph from a COO edge list. Neighbor
@@ -35,44 +38,45 @@ pub fn from_coo(coo: &Coo, build_csc: bool) -> Csr {
         }
     }
 
-    // Sort each neighbor list by destination (weights follow).
+    // Sort each neighbor list by destination (weights follow), in
+    // parallel on the persistent pool — no scoped thread spawns. Rows
+    // [ro[v], ro[v+1]) are disjoint across vertices and the dispatch
+    // partitions 0..n, so per-row exclusive slices are sound.
     let nt = par::num_threads();
+    let ro = &row_offsets;
+    let col_slots = par::Slots::new(col_indices.as_mut_slice());
+    let col_slots = &col_slots;
     if weighted {
-        // Sort index permutation per row to keep weights aligned.
-        let mut perm: Vec<(Vec<VertexId>, Vec<u32>)> = Vec::new();
-        let _ = &mut perm; // (serial fallback below keeps code simple)
-        for v in 0..n {
-            let s = row_offsets[v] as usize;
-            let e = row_offsets[v + 1] as usize;
-            let mut pairs: Vec<(VertexId, u32)> = (s..e)
-                .map(|i| (col_indices[i], edge_weights[i]))
-                .collect();
-            pairs.sort_unstable_by_key(|p| p.0);
-            for (j, (c, w)) in pairs.into_iter().enumerate() {
-                col_indices[s + j] = c;
-                edge_weights[s + j] = w;
+        let wt_slots = par::Slots::new(edge_weights.as_mut_slice());
+        let wt_slots = &wt_slots;
+        par::run_partitioned(n, nt, |_, vs, ve| {
+            let mut pairs: Vec<(VertexId, Weight)> = Vec::new();
+            for v in vs..ve {
+                let s = ro[v] as usize;
+                let e = ro[v + 1] as usize;
+                if e - s <= 1 {
+                    continue;
+                }
+                // SAFETY: this worker owns rows vs..ve exclusively.
+                let cols = unsafe { col_slots.slice_mut(s, e - s) };
+                let wts = unsafe { wt_slots.slice_mut(s, e - s) };
+                pairs.clear();
+                pairs.extend(cols.iter().copied().zip(wts.iter().copied()));
+                pairs.sort_unstable_by_key(|p| p.0);
+                for (j, &(c, w)) in pairs.iter().enumerate() {
+                    cols[j] = c;
+                    wts[j] = w;
+                }
             }
-        }
+        });
     } else {
-        let ro = &row_offsets;
-        // Parallel per-vertex-range sort via disjoint slices.
-        let chunks: Vec<(usize, usize)> =
-            par::run_partitioned(n, nt, |_, vs, ve| (vs, ve));
-        let col_ptr = std::sync::atomic::AtomicPtr::new(col_indices.as_mut_ptr());
-        std::thread::scope(|scope| {
-            for &(vs, ve) in &chunks {
-                let col_ptr = &col_ptr;
-                scope.spawn(move || {
-                    let base = col_ptr.load(std::sync::atomic::Ordering::Relaxed);
-                    for v in vs..ve {
-                        let s = ro[v] as usize;
-                        let e = ro[v + 1] as usize;
-                        // SAFETY: vertex ranges [s, e) are disjoint across
-                        // vertices, and chunks partition the vertex set.
-                        let slice = unsafe { std::slice::from_raw_parts_mut(base.add(s), e - s) };
-                        slice.sort_unstable();
-                    }
-                });
+        par::run_partitioned(n, nt, |_, vs, ve| {
+            for v in vs..ve {
+                let s = ro[v] as usize;
+                let e = ro[v + 1] as usize;
+                // SAFETY: this worker owns rows vs..ve exclusively.
+                let slice = unsafe { col_slots.slice_mut(s, e - s) };
+                slice.sort_unstable();
             }
         });
     }
@@ -115,6 +119,35 @@ pub fn attach_csc(csr: &mut Csr, coo: &Coo) {
         let s = csc_offsets[v] as usize;
         let e = csc_offsets[v + 1] as usize;
         csc_indices[s..e].sort_unstable();
+    }
+    csr.csc_offsets = csc_offsets;
+    csr.csc_indices = csc_indices;
+}
+
+/// Build the CSC (incoming) view directly from the CSR arrays — no COO
+/// copy. Sources scatter in ascending vertex order, so each in-neighbor
+/// list comes out sorted without a per-row sort. This keeps the `.gsr`
+/// load path free of edge-sized transient allocations beyond the CSC
+/// arrays themselves (the whole point of the compressed representation).
+pub fn attach_csc_inplace(csr: &mut Csr) {
+    let n = csr.num_vertices;
+    let m = csr.num_edges();
+    let mut csc_offsets = vec![0 as SizeT; n + 1];
+    for &d in &csr.col_indices {
+        csc_offsets[d as usize + 1] += 1;
+    }
+    for v in 0..n {
+        csc_offsets[v + 1] += csc_offsets[v];
+    }
+    let mut cursor: Vec<SizeT> = csc_offsets[..n].to_vec();
+    let mut csc_indices = vec![0 as VertexId; m];
+    for v in 0..n as VertexId {
+        for e in csr.edge_range(v) {
+            let d = csr.col_indices[e] as usize;
+            let pos = cursor[d] as usize;
+            cursor[d] += 1;
+            csc_indices[pos] = v;
+        }
     }
     csr.csc_offsets = csc_offsets;
     csr.csc_indices = csc_indices;
@@ -170,6 +203,20 @@ mod tests {
         assert_eq!(g.in_neighbors(1), &[0, 2, 3]);
         assert_eq!(g.in_degree(4), 1);
         assert_eq!(g.in_degree(0), 0);
+    }
+
+    #[test]
+    fn csc_inplace_matches_coo_built_csc() {
+        let mut coo = Coo::new(7);
+        for &(s, d) in &[(0, 3), (1, 3), (5, 3), (2, 0), (6, 1), (4, 0), (0, 6)] {
+            coo.push(s, d);
+        }
+        let want = from_coo(&coo, true); // CSC via the COO scatter + sort
+        let mut got = from_coo(&coo, false);
+        assert!(!got.has_csc());
+        attach_csc_inplace(&mut got);
+        assert_eq!(got.csc_offsets, want.csc_offsets);
+        assert_eq!(got.csc_indices, want.csc_indices);
     }
 
     #[test]

@@ -1,0 +1,430 @@
+//! Neighbor-list codecs for the compressed graph representation: byte-
+//! aligned LEB128 varints and bit-level zeta-k codes (Boldi & Vigna's
+//! WebGraph family — the reference compressed-graph framework the
+//! `vigna/webgraph-rs` port implements in Rust).
+//!
+//! Both codecs encode a sorted neighbor list as *gaps*: the first neighbor
+//! id verbatim, every following one as the non-negative difference from
+//! its predecessor. Power-law graphs have dense, clustered adjacency
+//! lists, so most gaps are tiny and code in a handful of bits — that is
+//! where compression beats raw 32-bit CSR columns.
+//!
+//! Every vertex's encoded stream starts on a byte boundary (the per-vertex
+//! offset index stores byte positions), so decoding one vertex never needs
+//! bit context from another — the property that keeps random access and
+//! parallel traversal cheap. The alignment pads at most 7 bits per vertex.
+
+use crate::graph::VertexId;
+
+/// Gap codec selector.
+///
+/// - `Varint`: LEB128, 7 value bits per byte. Fast, byte-aligned,
+///   1 byte for gaps < 128 — the all-round default.
+/// - `Zeta(k)`: zeta_k bit code (unary bucket exponent + k-bit-per-level
+///   mantissa). Near-optimal for power-law gap distributions; `k` tunes
+///   the distribution's heaviness (k=1 favors tiny gaps hardest).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Codec {
+    Varint,
+    Zeta(u32),
+}
+
+impl Default for Codec {
+    fn default() -> Self {
+        Codec::Varint
+    }
+}
+
+impl std::fmt::Display for Codec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Codec::Varint => f.write_str("varint"),
+            Codec::Zeta(k) => write!(f, "zeta{k}"),
+        }
+    }
+}
+
+impl std::str::FromStr for Codec {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        let t = s.to_ascii_lowercase();
+        match t.as_str() {
+            "varint" | "leb128" | "vbyte" => Ok(Codec::Varint),
+            "zeta" => Ok(Codec::Zeta(2)),
+            _ => {
+                if let Some(rest) = t.strip_prefix("zeta") {
+                    let rest = rest.trim_start_matches(|c| c == '-' || c == '_');
+                    match rest.parse::<u32>() {
+                        Ok(k) if (1..=8).contains(&k) => Ok(Codec::Zeta(k)),
+                        _ => Err(format!("bad zeta parameter in {s:?} (want zeta1..zeta8)")),
+                    }
+                } else {
+                    Err(format!("unknown codec {s:?} (want varint | zeta<k>)"))
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// LEB128 varints
+// ---------------------------------------------------------------------------
+
+/// Append `x` as a LEB128 varint (7 value bits per byte, MSB = continue).
+pub fn write_varint(out: &mut Vec<u8>, mut x: u64) {
+    loop {
+        let b = (x & 0x7f) as u8;
+        x >>= 7;
+        if x == 0 {
+            out.push(b);
+            return;
+        }
+        out.push(b | 0x80);
+    }
+}
+
+/// Read one LEB128 varint at `*pos`, advancing it. Returns `None` on a
+/// truncated stream (the `.gsr` loader rejects files whose sections do not
+/// decode cleanly even after the checksum passed).
+pub fn read_varint(bytes: &[u8], pos: &mut usize) -> Option<u64> {
+    let mut x = 0u64;
+    let mut shift = 0u32;
+    loop {
+        let b = *bytes.get(*pos)?;
+        *pos += 1;
+        x |= ((b & 0x7f) as u64) << shift;
+        if b & 0x80 == 0 {
+            return Some(x);
+        }
+        shift += 7;
+        if shift >= 64 {
+            return None;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// MSB-first bit IO (zeta codes)
+// ---------------------------------------------------------------------------
+
+/// MSB-first bit appender over a byte buffer. `finish` pads the trailing
+/// partial byte with zeros (each vertex stream is independently aligned,
+/// so the padding is never misread as data — the decoder stops after
+/// `degree` values).
+pub struct BitWriter<'a> {
+    out: &'a mut Vec<u8>,
+    cur: u32,
+    nbits: u32,
+}
+
+impl<'a> BitWriter<'a> {
+    pub fn new(out: &'a mut Vec<u8>) -> Self {
+        BitWriter { out, cur: 0, nbits: 0 }
+    }
+
+    #[inline]
+    fn push_bit(&mut self, bit: u64) {
+        self.cur = (self.cur << 1) | (bit as u32 & 1);
+        self.nbits += 1;
+        if self.nbits == 8 {
+            self.out.push(self.cur as u8);
+            self.cur = 0;
+            self.nbits = 0;
+        }
+    }
+
+    /// Append the low `width` bits of `value`, most significant first.
+    pub fn push_bits(&mut self, value: u64, width: u32) {
+        for i in (0..width).rev() {
+            self.push_bit((value >> i) & 1);
+        }
+    }
+
+    /// Flush the trailing partial byte (left-aligned, zero-padded).
+    pub fn finish(self) {
+        if self.nbits > 0 {
+            self.out.push((self.cur << (8 - self.nbits)) as u8);
+        }
+    }
+}
+
+/// MSB-first bit cursor over a byte slice.
+pub struct BitReader<'a> {
+    bytes: &'a [u8],
+    bitpos: usize,
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(bytes: &'a [u8]) -> Self {
+        BitReader { bytes, bitpos: 0 }
+    }
+
+    #[inline]
+    pub fn read_bit(&mut self) -> u64 {
+        let byte = self.bytes[self.bitpos >> 3];
+        let bit = 7 - (self.bitpos & 7);
+        self.bitpos += 1;
+        ((byte >> bit) & 1) as u64
+    }
+
+    pub fn read_bits(&mut self, width: u32) -> u64 {
+        let mut x = 0u64;
+        for _ in 0..width {
+            x = (x << 1) | self.read_bit();
+        }
+        x
+    }
+}
+
+/// Zeta-k encode `x >= 0`: with n = x+1 and h = floor(log2 n)/k, write h
+/// in unary (h ones, then a zero) followed by n - 2^(hk) in (h+1)k bits.
+/// Small values (n < 2^k) cost 1 + k bits — under a byte for k <= 7.
+pub fn zeta_write(w: &mut BitWriter<'_>, x: u64, k: u32) {
+    debug_assert!(k >= 1);
+    let n = x + 1;
+    let log = 63 - n.leading_zeros() as u32;
+    let h = log / k;
+    for _ in 0..h {
+        w.push_bit(1);
+    }
+    w.push_bit(0);
+    w.push_bits(n - (1u64 << (h * k)), (h + 1) * k);
+}
+
+/// Decode one zeta-k value (inverse of [`zeta_write`]).
+pub fn zeta_read(r: &mut BitReader<'_>, k: u32) -> u64 {
+    let mut h = 0u32;
+    while r.read_bit() == 1 {
+        h += 1;
+    }
+    let offset = r.read_bits((h + 1) * k);
+    (1u64 << (h * k)) + offset - 1
+}
+
+/// Structural validation of one encoded stream: true iff `bytes` decodes
+/// exactly `degree` values without overrunning the slice and leaves only
+/// sub-byte zero padding (zeta) or nothing (varint) behind. Never panics —
+/// the `.gsr` loader runs this on every vertex before any real decode, so
+/// a well-checksummed but internally inconsistent file (e.g. swapped
+/// per-vertex stream sizes from a buggy writer) is rejected at load
+/// instead of blowing up mid-traversal inside a pool worker.
+pub fn validate_stream(codec: Codec, bytes: &[u8], degree: usize) -> bool {
+    match codec {
+        Codec::Varint => {
+            let mut pos = 0usize;
+            for _ in 0..degree {
+                if read_varint(bytes, &mut pos).is_none() {
+                    return false;
+                }
+            }
+            pos == bytes.len()
+        }
+        Codec::Zeta(k) => {
+            let total_bits = bytes.len() * 8;
+            let mut r = BitReader::new(bytes);
+            let mut used = 0usize;
+            for _ in 0..degree {
+                let mut h = 0u32;
+                loop {
+                    if used >= total_bits {
+                        return false;
+                    }
+                    used += 1;
+                    if r.read_bit() == 0 {
+                        break;
+                    }
+                    h += 1;
+                    if h > 64 {
+                        return false; // no valid code has a 64+ unary run
+                    }
+                }
+                let width = (h + 1) * k;
+                if width > 64 || used + width as usize > total_bits {
+                    return false; // would overflow the decode shift / slice
+                }
+                r.read_bits(width);
+                used += width as usize;
+            }
+            if total_bits - used >= 8 {
+                return false; // more than alignment padding left over
+            }
+            while used < total_bits {
+                if r.read_bit() != 0 {
+                    return false; // padding must be zero bits
+                }
+                used += 1;
+            }
+            true
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// List encoding (gap transform + codec dispatch)
+// ---------------------------------------------------------------------------
+
+/// Encode a sorted neighbor list as first-value + gaps under `codec`,
+/// appending to `out`. Duplicate neighbors (gap 0) are legal. Panics if
+/// the list is not sorted ascending — CSR builders guarantee sortedness,
+/// and a silent wrap here would corrupt the graph.
+pub fn encode_list(codec: Codec, neighbors: &[VertexId], out: &mut Vec<u8>) {
+    match codec {
+        Codec::Varint => {
+            let mut prev = 0u64;
+            for (i, &d) in neighbors.iter().enumerate() {
+                let v = d as u64;
+                let gap = if i == 0 {
+                    v
+                } else {
+                    v.checked_sub(prev).expect("neighbor list must be sorted ascending")
+                };
+                write_varint(out, gap);
+                prev = v;
+            }
+        }
+        Codec::Zeta(k) => {
+            let mut w = BitWriter::new(out);
+            let mut prev = 0u64;
+            for (i, &d) in neighbors.iter().enumerate() {
+                let v = d as u64;
+                let gap = if i == 0 {
+                    v
+                } else {
+                    v.checked_sub(prev).expect("neighbor list must be sorted ascending")
+                };
+                zeta_write(&mut w, gap, k);
+                prev = v;
+            }
+            w.finish();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn varint_round_trips() {
+        let mut buf = Vec::new();
+        let values = [0u64, 1, 127, 128, 300, 16_383, 16_384, u32::MAX as u64, u64::MAX];
+        for &v in &values {
+            write_varint(&mut buf, v);
+        }
+        let mut pos = 0;
+        for &v in &values {
+            assert_eq!(read_varint(&buf, &mut pos), Some(v));
+        }
+        assert_eq!(pos, buf.len());
+    }
+
+    #[test]
+    fn varint_truncation_detected() {
+        let mut buf = Vec::new();
+        write_varint(&mut buf, 1 << 20);
+        buf.pop();
+        let mut pos = 0;
+        assert_eq!(read_varint(&buf, &mut pos), None);
+    }
+
+    #[test]
+    fn bit_io_round_trips() {
+        let mut buf = Vec::new();
+        {
+            let mut w = BitWriter::new(&mut buf);
+            w.push_bits(0b1011, 4);
+            w.push_bits(0x3ff, 10);
+            w.push_bits(0, 3);
+            w.push_bits(u32::MAX as u64, 32);
+            w.finish();
+        }
+        let mut r = BitReader::new(&buf);
+        assert_eq!(r.read_bits(4), 0b1011);
+        assert_eq!(r.read_bits(10), 0x3ff);
+        assert_eq!(r.read_bits(3), 0);
+        assert_eq!(r.read_bits(32), u32::MAX as u64);
+    }
+
+    #[test]
+    fn zeta_round_trips_all_k() {
+        for k in 1..=8u32 {
+            let mut buf = Vec::new();
+            let values: Vec<u64> =
+                (0..200u64).chain([1000, 65_535, 1 << 20, u32::MAX as u64]).collect();
+            {
+                let mut w = BitWriter::new(&mut buf);
+                for &v in &values {
+                    zeta_write(&mut w, v, k);
+                }
+                w.finish();
+            }
+            let mut r = BitReader::new(&buf);
+            for &v in &values {
+                assert_eq!(zeta_read(&mut r, k), v, "k={k} v={v}");
+            }
+        }
+    }
+
+    #[test]
+    fn zeta_small_gaps_beat_varint() {
+        // 1000 gaps of value 0..3: zeta2 spends 3 bits each, varint 8.
+        let gaps: Vec<VertexId> = (0..1000u32).map(|i| i % 4).collect();
+        // encode as raw values via a fake "sorted list" of cumulative sums
+        let mut list = Vec::new();
+        let mut acc = 0u32;
+        for g in &gaps {
+            acc += g;
+            list.push(acc);
+        }
+        let mut zeta = Vec::new();
+        encode_list(Codec::Zeta(2), &list, &mut zeta);
+        let mut varint = Vec::new();
+        encode_list(Codec::Varint, &list, &mut varint);
+        assert!(zeta.len() < varint.len(), "zeta {} vs varint {}", zeta.len(), varint.len());
+    }
+
+    #[test]
+    fn validate_stream_accepts_good_rejects_bad() {
+        for codec in [Codec::Varint, Codec::Zeta(1), Codec::Zeta(2), Codec::Zeta(4)] {
+            let list: Vec<VertexId> = vec![3, 9, 9, 40, 1000, 65_536];
+            let mut buf = Vec::new();
+            encode_list(codec, &list, &mut buf);
+            assert!(validate_stream(codec, &buf, list.len()), "{codec} good stream");
+            // too few values leaves undecoded payload behind
+            assert!(!validate_stream(codec, &buf, list.len().saturating_sub(2)), "{codec} under-read");
+            // truncated payload
+            if buf.len() > 1 {
+                assert!(
+                    !validate_stream(codec, &buf[..buf.len() - 1], list.len()),
+                    "{codec} truncated"
+                );
+            }
+            // empty stream only valid for degree 0
+            assert!(validate_stream(codec, &[], 0), "{codec} empty");
+            assert!(!validate_stream(codec, &[], 1), "{codec} empty nonzero degree");
+        }
+        // over-read is always detectable for the byte-aligned codec (zeta
+        // zero padding can legally absorb a spurious tiny code for k=1,
+        // which is why the loader trusts the degree section, not the
+        // stream, for list lengths)
+        let mut buf = Vec::new();
+        encode_list(Codec::Varint, &[1, 2, 3], &mut buf);
+        assert!(!validate_stream(Codec::Varint, &buf, 4));
+        // zeta: all-ones garbage must not loop or panic
+        assert!(!validate_stream(Codec::Zeta(2), &[0xff; 32], 1));
+    }
+
+    #[test]
+    fn codec_parse_round_trip() {
+        assert_eq!("varint".parse::<Codec>().unwrap(), Codec::Varint);
+        assert_eq!("LEB128".parse::<Codec>().unwrap(), Codec::Varint);
+        assert_eq!("zeta".parse::<Codec>().unwrap(), Codec::Zeta(2));
+        assert_eq!("zeta3".parse::<Codec>().unwrap(), Codec::Zeta(3));
+        assert_eq!("zeta-4".parse::<Codec>().unwrap(), Codec::Zeta(4));
+        assert!("zeta0".parse::<Codec>().is_err());
+        assert!("huffman".parse::<Codec>().is_err());
+        for c in [Codec::Varint, Codec::Zeta(2), Codec::Zeta(7)] {
+            assert_eq!(c.to_string().parse::<Codec>().unwrap(), c);
+        }
+    }
+}

@@ -1,0 +1,115 @@
+//! Sequential, bounded neighbor-list decoder: yields a vertex's neighbors
+//! one at a time straight out of the encoded payload — no intermediate
+//! `Vec` is ever materialized. Operators drive it through
+//! [`GraphRep::for_neighbor_range`](crate::graph::GraphRep), so
+//! decode-on-advance allocates nothing beyond the recycled per-worker
+//! output buffers the zero-alloc pipeline already owns.
+
+use crate::graph::VertexId;
+
+use super::codec::{read_varint, BitReader, Codec};
+
+enum Stream<'a> {
+    Varint { bytes: &'a [u8], pos: usize },
+    Zeta { reader: BitReader<'a>, k: u32 },
+}
+
+/// Iterator over one vertex's neighbors, decoded lazily from its gap
+/// stream. Bounded: stops after `degree` values, never reading past the
+/// vertex's payload slice (trailing zeta alignment bits are ignored).
+pub struct NeighborDecoder<'a> {
+    stream: Stream<'a>,
+    remaining: usize,
+    prev: u64,
+    first: bool,
+}
+
+impl<'a> NeighborDecoder<'a> {
+    /// Decode `degree` neighbors from `bytes` (one vertex's payload slice).
+    pub fn new(codec: Codec, bytes: &'a [u8], degree: usize) -> Self {
+        let stream = match codec {
+            Codec::Varint => Stream::Varint { bytes, pos: 0 },
+            Codec::Zeta(k) => Stream::Zeta { reader: BitReader::new(bytes), k },
+        };
+        NeighborDecoder { stream, remaining: degree, prev: 0, first: true }
+    }
+}
+
+impl Iterator for NeighborDecoder<'_> {
+    type Item = VertexId;
+
+    #[inline]
+    fn next(&mut self) -> Option<VertexId> {
+        if self.remaining == 0 {
+            return None;
+        }
+        self.remaining -= 1;
+        let gap = match &mut self.stream {
+            Stream::Varint { bytes, pos } => {
+                read_varint(bytes, pos).expect("truncated varint neighbor stream")
+            }
+            Stream::Zeta { reader, k } => super::codec::zeta_read(reader, *k),
+        };
+        let value = if self.first {
+            self.first = false;
+            gap
+        } else {
+            self.prev + gap
+        };
+        self.prev = value;
+        Some(value as VertexId)
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        (self.remaining, Some(self.remaining))
+    }
+}
+
+impl ExactSizeIterator for NeighborDecoder<'_> {}
+
+#[cfg(test)]
+mod tests {
+    use super::super::codec::encode_list;
+    use super::*;
+
+    fn round_trip(codec: Codec, list: &[VertexId]) {
+        let mut payload = Vec::new();
+        encode_list(codec, list, &mut payload);
+        let got: Vec<VertexId> = NeighborDecoder::new(codec, &payload, list.len()).collect();
+        assert_eq!(got, list, "{codec}");
+    }
+
+    #[test]
+    fn decodes_lists_for_every_codec() {
+        for codec in [Codec::Varint, Codec::Zeta(1), Codec::Zeta(2), Codec::Zeta(3)] {
+            round_trip(codec, &[]);
+            round_trip(codec, &[0]);
+            round_trip(codec, &[7]);
+            round_trip(codec, &[0, 1, 2, 3, 4]);
+            round_trip(codec, &[5, 5, 5, 9, 9]); // duplicates: gap 0
+            round_trip(codec, &[3, 100, 101, 65_000, 4_000_000_000]);
+        }
+    }
+
+    #[test]
+    fn bounded_stops_at_degree() {
+        let list = [2u32, 4, 8, 16];
+        let mut payload = Vec::new();
+        encode_list(Codec::Varint, &list, &mut payload);
+        let mut dec = NeighborDecoder::new(Codec::Varint, &payload, 2);
+        assert_eq!(dec.next(), Some(2));
+        assert_eq!(dec.next(), Some(4));
+        assert_eq!(dec.next(), None);
+        assert_eq!(dec.next(), None);
+    }
+
+    #[test]
+    fn nth_skips_prefix() {
+        let list = [10u32, 20, 30, 40, 50];
+        let mut payload = Vec::new();
+        encode_list(Codec::Zeta(2), &list, &mut payload);
+        let mut dec = NeighborDecoder::new(Codec::Zeta(2), &payload, list.len());
+        assert_eq!(dec.nth(2), Some(30));
+        assert_eq!(dec.next(), Some(40));
+    }
+}

@@ -1,13 +1,45 @@
-//! Graph IO: whitespace edge lists (SNAP style) and MatrixMarket
-//! coordinate files (UF Sparse Matrix Collection style) — the two formats
-//! the paper's datasets ship in.
+//! Graph IO: whitespace edge lists (SNAP style), MatrixMarket coordinate
+//! files (UF Sparse Matrix Collection style) — the two formats the paper's
+//! datasets ship in — plus the `.gsr` compressed-graph container
+//! ([`save_gsr`] / [`load_gsr`]).
+//!
+//! ## `.gsr` container (version 1, little-endian)
+//!
+//! ```text
+//! magic    "GSR1"
+//! u32      version (= 1)
+//! u8       codec tag (0 = varint, 1 = zeta)   u8  zeta k (0 for varint)
+//! u8       flags (bit 0: weighted)            u8  reserved
+//! u64      num_vertices        u64 num_edges
+//! section  degrees      (u64 byte length + one varint per vertex)
+//! section  stream sizes (u64 byte length + one varint per vertex)
+//! section  payload      (u64 byte length + encoded gap streams)
+//! section  weights      (present iff weighted; u64 length + varints)
+//! u64      FNV-1a checksum of every preceding byte
+//! ```
+//!
+//! Degrees and per-vertex stream sizes are stored as varint *deltas* of
+//! the in-memory prefix arrays, which the loader reconstructs; both are
+//! cross-checked against `num_edges` / the payload length, and the
+//! trailing checksum rejects torn or corrupted files. Beyond the
+//! checksum, the loader validates every vertex's stream structurally
+//! (decodes to exactly its degree, in bounds, sorted, ids < n) so an
+//! internally inconsistent file from a buggy writer fails at load — a
+//! loaded graph can never panic mid-traversal.
 
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
+use super::compressed::codec::{read_varint, write_varint};
+use super::compressed::{Codec, CompressedCsr};
 use super::{builder, Coo, Csr, VertexId};
+
+/// `.gsr` magic bytes.
+pub const GSR_MAGIC: &[u8; 4] = b"GSR1";
+/// Current `.gsr` container version.
+pub const GSR_VERSION: u32 = 1;
 
 /// Read a SNAP-style edge list: lines of `src dst [weight]`, `#` comments.
 /// Vertex ids are used as-is; num_vertices = max id + 1.
@@ -135,8 +167,257 @@ pub fn write_matrix_market(path: &Path, coo: &Coo) -> Result<()> {
     Ok(())
 }
 
-/// Load a graph file by extension: .mtx -> MatrixMarket, else edge list.
+// ---------------------------------------------------------------------------
+// .gsr container
+// ---------------------------------------------------------------------------
+
+fn put_u32(out: &mut Vec<u8>, x: u32) {
+    out.extend_from_slice(&x.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, x: u64) {
+    out.extend_from_slice(&x.to_le_bytes());
+}
+
+/// FNV-1a 64-bit (dependency-free integrity check).
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Bounds-checked little-endian cursor for parsing `.gsr` buffers.
+struct Cur<'a> {
+    b: &'a [u8],
+    p: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.p + n > self.b.len() {
+            bail!("truncated .gsr: wanted {n} bytes at offset {}", self.p);
+        }
+        let s = &self.b[self.p..self.p + n];
+        self.p += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn section(&mut self) -> Result<&'a [u8]> {
+        let len = self.u64()? as usize;
+        self.take(len)
+    }
+}
+
+/// Decode `count` varints from a section into prefix-sum form starting at
+/// 0. Returns the n+1 prefix array; fails if the section is truncated or
+/// has trailing garbage.
+fn read_varint_prefix(section: &[u8], count: usize, what: &str) -> Result<Vec<u64>> {
+    let mut prefix = Vec::with_capacity(count + 1);
+    prefix.push(0u64);
+    let mut pos = 0usize;
+    let mut acc = 0u64;
+    for i in 0..count {
+        let v = match read_varint(section, &mut pos) {
+            Some(v) => v,
+            None => bail!("truncated {what} section at entry {i}"),
+        };
+        acc = match acc.checked_add(v) {
+            Some(a) => a,
+            None => bail!("{what} section overflows u64 at entry {i}"),
+        };
+        prefix.push(acc);
+    }
+    if pos != section.len() {
+        bail!("{what} section has {} trailing bytes", section.len() - pos);
+    }
+    Ok(prefix)
+}
+
+/// Serialize a compressed graph into the `.gsr` container format.
+pub fn save_gsr(path: &Path, g: &CompressedCsr) -> Result<()> {
+    let n = g.num_vertices;
+    let mut buf: Vec<u8> = Vec::with_capacity(g.payload.len() + n * 2 + 64);
+    buf.extend_from_slice(GSR_MAGIC);
+    put_u32(&mut buf, GSR_VERSION);
+    let (tag, k) = match g.codec {
+        Codec::Varint => (0u8, 0u8),
+        Codec::Zeta(k) => (1u8, k as u8),
+    };
+    buf.push(tag);
+    buf.push(k);
+    buf.push(u8::from(g.is_weighted()));
+    buf.push(0); // reserved
+    put_u64(&mut buf, n as u64);
+    put_u64(&mut buf, g.num_edges() as u64);
+
+    let mut degs = Vec::new();
+    for v in 0..n {
+        write_varint(&mut degs, (g.edge_offsets[v + 1] - g.edge_offsets[v]) as u64);
+    }
+    put_u64(&mut buf, degs.len() as u64);
+    buf.extend_from_slice(&degs);
+
+    let mut lens = Vec::new();
+    for v in 0..n {
+        write_varint(&mut lens, g.byte_offsets[v + 1] - g.byte_offsets[v]);
+    }
+    put_u64(&mut buf, lens.len() as u64);
+    buf.extend_from_slice(&lens);
+
+    put_u64(&mut buf, g.payload.len() as u64);
+    buf.extend_from_slice(&g.payload);
+
+    if g.is_weighted() {
+        let mut ws = Vec::new();
+        for &w in &g.edge_weights {
+            write_varint(&mut ws, w as u64);
+        }
+        put_u64(&mut buf, ws.len() as u64);
+        buf.extend_from_slice(&ws);
+    }
+
+    let checksum = fnv1a(&buf);
+    put_u64(&mut buf, checksum);
+    std::fs::write(path, &buf).with_context(|| format!("write {}", path.display()))?;
+    Ok(())
+}
+
+/// Load a `.gsr` container, verifying checksum, version, and section
+/// consistency before handing back the compressed graph.
+pub fn load_gsr(path: &Path) -> Result<CompressedCsr> {
+    let bytes = std::fs::read(path).with_context(|| format!("open {}", path.display()))?;
+    if bytes.len() < GSR_MAGIC.len() + 8 {
+        bail!("{} is too short to be a .gsr file", path.display());
+    }
+    let (body, tail) = bytes.split_at(bytes.len() - 8);
+    let stored = u64::from_le_bytes(tail.try_into().unwrap());
+    if fnv1a(body) != stored {
+        bail!("{}: checksum mismatch (corrupted or torn file)", path.display());
+    }
+
+    let mut c = Cur { b: body, p: 0 };
+    if c.take(4)? != GSR_MAGIC {
+        bail!("{}: bad magic (not a .gsr file)", path.display());
+    }
+    let version = c.u32()?;
+    if version != GSR_VERSION {
+        bail!("{}: unsupported .gsr version {version}", path.display());
+    }
+    let tag = c.u8()?;
+    let k = c.u8()?;
+    let codec = match (tag, k) {
+        (0, _) => Codec::Varint,
+        (1, k) if (1..=8).contains(&k) => Codec::Zeta(k as u32),
+        _ => bail!("{}: unknown codec tag {tag}/{k}", path.display()),
+    };
+    let flags = c.u8()?;
+    let weighted = flags & 1 != 0;
+    let _reserved = c.u8()?;
+    let n = c.u64()? as usize;
+    let m = c.u64()? as usize;
+
+    let deg_section = c.section()?;
+    let edge_prefix = read_varint_prefix(deg_section, n, "degree")?;
+    if edge_prefix[n] != m as u64 {
+        bail!("degree section sums to {} but header says {m} edges", edge_prefix[n]);
+    }
+    let len_section = c.section()?;
+    let byte_offsets = read_varint_prefix(len_section, n, "stream-size")?;
+    let payload = c.section()?.to_vec();
+    if byte_offsets[n] != payload.len() as u64 {
+        bail!(
+            "stream sizes sum to {} but payload is {} bytes",
+            byte_offsets[n],
+            payload.len()
+        );
+    }
+    let edge_weights = if weighted {
+        let ws = c.section()?;
+        let mut pos = 0usize;
+        let mut out = Vec::with_capacity(m);
+        for i in 0..m {
+            match read_varint(ws, &mut pos) {
+                Some(w) => out.push(w as super::Weight),
+                None => bail!("truncated weight section at edge {i}"),
+            }
+        }
+        if pos != ws.len() {
+            bail!("weight section has trailing bytes");
+        }
+        out
+    } else {
+        Vec::new()
+    };
+    if c.p != body.len() {
+        bail!("{}: {} trailing bytes after last section", path.display(), body.len() - c.p);
+    }
+
+    let g = CompressedCsr {
+        num_vertices: n,
+        codec,
+        edge_offsets: edge_prefix.into_iter().map(|x| x as super::SizeT).collect(),
+        byte_offsets,
+        payload,
+        edge_weights,
+    };
+
+    // The checksum only proves the file arrived as written; a buggy or
+    // adversarial writer can still emit internally inconsistent sections
+    // (e.g. swapped per-vertex stream sizes that sum correctly). Validate
+    // every stream structurally (never panics), then decode-check that
+    // neighbor ids are sorted and in range, so traversal can never blow
+    // up inside a pool worker on a loaded file.
+    use super::compressed::codec::validate_stream;
+    for v in 0..n as VertexId {
+        let s = g.byte_offsets[v as usize] as usize;
+        let e = g.byte_offsets[v as usize + 1] as usize;
+        let deg = g.degree(v);
+        if !validate_stream(codec, &g.payload[s..e], deg) {
+            bail!("vertex {v}: encoded stream does not decode to its degree ({deg})");
+        }
+        let mut prev = 0u64;
+        for (i, d) in g.decode_neighbors(v).enumerate() {
+            let d = d as u64;
+            if d >= n as u64 {
+                bail!("vertex {v}: neighbor {d} out of range (n = {n})");
+            }
+            if i > 0 && d < prev {
+                bail!("vertex {v}: neighbor list not sorted ascending");
+            }
+            prev = d;
+        }
+    }
+
+    Ok(g)
+}
+
+/// Load a graph file by extension: .mtx -> MatrixMarket, .gsr -> the
+/// compressed container (decompressed to CSR + CSC; the `undirected` flag
+/// is ignored — a .gsr stores its final edge set), else edge list.
 pub fn load_graph(path: &Path, undirected: bool) -> Result<Csr> {
+    if path.extension().and_then(|e| e.to_str()) == Some("gsr") {
+        let cg = load_gsr(path)?;
+        let mut g = cg.to_csr();
+        // CSC straight from the CSR arrays — no COO round trip, so the
+        // memory-frugal load path stays free of edge-sized copies.
+        builder::attach_csc_inplace(&mut g);
+        return Ok(g);
+    }
     let mut coo = if path.extension().and_then(|e| e.to_str()) == Some("mtx") {
         read_matrix_market(path)?
     } else {
@@ -200,6 +481,79 @@ mod tests {
         .unwrap();
         let got = read_matrix_market(&p).unwrap();
         assert_eq!(got.num_edges(), 4);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn gsr_round_trip_weighted_and_unweighted() {
+        use crate::graph::datasets::attach_uniform_weights;
+        let mut g = builder::from_edges(7, &[(0, 1), (0, 2), (2, 5), (5, 6), (6, 0)]);
+        for weighted in [false, true] {
+            if weighted {
+                attach_uniform_weights(&mut g, 3);
+            }
+            for codec in [Codec::Varint, Codec::Zeta(2)] {
+                let cg = CompressedCsr::from_csr(&g, codec);
+                let p = tmp(&format!("rt_{weighted}_{codec}.gsr"));
+                save_gsr(&p, &cg).unwrap();
+                let back = load_gsr(&p).unwrap();
+                assert_eq!(back.codec, cg.codec);
+                assert_eq!(back.edge_offsets, cg.edge_offsets);
+                assert_eq!(back.byte_offsets, cg.byte_offsets);
+                assert_eq!(back.payload, cg.payload);
+                assert_eq!(back.edge_weights, cg.edge_weights);
+                std::fs::remove_file(p).ok();
+            }
+        }
+    }
+
+    #[test]
+    fn gsr_corruption_rejected() {
+        let g = builder::from_edges(4, &[(0, 1), (1, 2), (2, 3)]);
+        let cg = CompressedCsr::from_csr(&g, Codec::Varint);
+        let p = tmp("corrupt.gsr");
+        save_gsr(&p, &cg).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xff;
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(load_gsr(&p).is_err(), "flipped byte must fail the checksum");
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn gsr_internally_inconsistent_sections_rejected() {
+        // A buggy writer can produce a file whose checksum is fine but
+        // whose per-vertex stream sizes are swapped (sums unchanged).
+        let g = builder::from_edges(2, &[(0, 1)]);
+        let cg = CompressedCsr::from_csr(&g, Codec::Varint);
+        let p = tmp("swapped.gsr");
+        save_gsr(&p, &cg).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        let body_len = bytes.len() - 8;
+        // stream-size varints live right after the degree section:
+        // header(28) + deg section(8 + 2) + size-section length(8) = 46
+        assert_eq!(bytes[46], 1, "size(v0)");
+        assert_eq!(bytes[47], 0, "size(v1)");
+        bytes.swap(46, 47);
+        let ck = fnv1a(&bytes[..body_len]).to_le_bytes();
+        bytes[body_len..].copy_from_slice(&ck);
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(load_gsr(&p).is_err(), "inconsistent stream sizes must fail at load");
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn load_graph_reads_gsr_with_csc() {
+        let g = builder::from_edges(5, &[(0, 1), (1, 2), (3, 2), (4, 0)]);
+        let cg = CompressedCsr::from_csr(&g, Codec::Zeta(3));
+        let p = tmp("load.gsr");
+        save_gsr(&p, &cg).unwrap();
+        let loaded = load_graph(&p, false).unwrap();
+        assert_eq!(loaded.row_offsets, g.row_offsets);
+        assert_eq!(loaded.col_indices, g.col_indices);
+        assert!(loaded.has_csc());
+        assert_eq!(loaded.in_neighbors(2), &[1, 3]);
         std::fs::remove_file(p).ok();
     }
 

@@ -5,17 +5,26 @@
 //! values in structure-of-array layout. We additionally keep the CSC
 //! (incoming) view when a primitive needs pull-direction traversal or
 //! in-neighbor iteration (PageRank, pull-BFS).
+//!
+//! Storage is pluggable through the [`GraphRep`] trait: the operator and
+//! load-balance layers traverse any implementor, currently raw [`Csr`]
+//! and the gap-compressed [`CompressedCsr`] (module [`compressed`]; the
+//! `.gsr` on-disk container lives in [`io`]).
 
 pub mod builder;
+pub mod compressed;
 pub mod coo;
 pub mod csr;
 pub mod datasets;
 pub mod generators;
 pub mod io;
 pub mod properties;
+pub mod rep;
 
+pub use compressed::{Codec, CompressedCsr};
 pub use coo::Coo;
 pub use csr::Csr;
+pub use rep::GraphRep;
 
 /// Vertex id type (paper uses 32-bit VertexId).
 pub type VertexId = u32;

@@ -1,0 +1,193 @@
+//! The pluggable graph-representation trait. Operators, load-balance
+//! policies, and (where it pays) primitives are generic over [`GraphRep`]
+//! instead of hard-wired to [`Csr`](crate::graph::Csr), so the same
+//! advance/filter pipeline traverses raw CSR arrays or the
+//! gap-compressed [`CompressedCsr`](crate::graph::CompressedCsr) payload
+//! without a decompress-to-CSR step.
+//!
+//! The contract mirrors what the operator layer actually consumes:
+//! O(1) degrees (TWC classification, LB prefix-sums), a global edge-id
+//! space identical across representations (functors receive the same
+//! `edge_id` either way — that is what makes results bit-identical), and
+//! bounded in-order neighbor visitation (`for_neighbor_range`) so the
+//! merge-path LB walk can start mid-list. Everything is callback-based:
+//! a compressed representation decodes lazily and never materializes a
+//! neighbor slice.
+
+use super::{VertexId, Weight};
+
+/// A graph representation the operator layer can traverse.
+///
+/// `Sync` is a supertrait: operators share `&G` across the persistent
+/// worker pool. All methods are monomorphized (the per-edge visitor is the
+/// hottest call in the framework); the trait is deliberately not
+/// object-safe.
+pub trait GraphRep: Sync {
+    fn num_vertices(&self) -> usize;
+
+    fn num_edges(&self) -> usize;
+
+    /// Out-degree of `v` — must be O(1) (LB/TWC classify on it).
+    fn degree(&self, v: VertexId) -> usize;
+
+    /// Global edge id of the first edge in `v`'s neighbor list. Edge ids
+    /// are the CSR convention: `edge_start(v) + position_in_list`,
+    /// identical for every representation of the same graph.
+    fn edge_start(&self, v: VertexId) -> usize;
+
+    /// Visit positions `[start, end)` of `v`'s neighbor list, in order, as
+    /// `f(edge_id, dst)`. `end` is clamped to the degree. Compressed
+    /// representations decode sequentially and stop at `end` (bounded
+    /// decode); `start > 0` costs a prefix decode there, which the
+    /// merge-path LB amortizes over its chunk walk.
+    fn for_neighbor_range(&self, v: VertexId, start: usize, end: usize, f: impl FnMut(usize, VertexId));
+
+    /// Visit the whole neighbor list of `v` as `f(edge_id, dst)`.
+    fn for_each_neighbor(&self, v: VertexId, f: impl FnMut(usize, VertexId)) {
+        self.for_neighbor_range(v, 0, usize::MAX, f);
+    }
+
+    /// Destination of global edge id `e`. O(1) on CSR; O(log n + deg) on
+    /// compressed representations (edge-frontier expansion only — never on
+    /// the per-edge hot path).
+    fn edge_dst(&self, e: usize) -> VertexId;
+
+    /// Weight of edge id `e` (1 when unweighted).
+    fn weight(&self, e: usize) -> Weight;
+
+    fn is_weighted(&self) -> bool;
+
+    /// The paper's LB-selection metric (§5.1.3).
+    fn average_degree(&self) -> f64 {
+        if self.num_vertices() == 0 {
+            0.0
+        } else {
+            self.num_edges() as f64 / self.num_vertices() as f64
+        }
+    }
+
+    /// Whether an incoming-edge view exists (pull traversal, §5.1.4).
+    fn has_in_edges(&self) -> bool {
+        false
+    }
+
+    /// Visit in-neighbors of `v` until `f` returns false (the early exit
+    /// that makes bottom-up BFS win). Only meaningful when
+    /// [`has_in_edges`](GraphRep::has_in_edges) is true.
+    fn for_each_in_neighbor_until(&self, _v: VertexId, _f: impl FnMut(VertexId) -> bool) {
+        panic!("this graph representation has no in-edge view (has_in_edges() == false)");
+    }
+}
+
+impl GraphRep for super::Csr {
+    #[inline]
+    fn num_vertices(&self) -> usize {
+        self.num_vertices
+    }
+
+    #[inline]
+    fn num_edges(&self) -> usize {
+        self.col_indices.len()
+    }
+
+    #[inline]
+    fn degree(&self, v: VertexId) -> usize {
+        super::Csr::degree(self, v)
+    }
+
+    #[inline]
+    fn edge_start(&self, v: VertexId) -> usize {
+        self.row_offsets[v as usize] as usize
+    }
+
+    #[inline]
+    fn for_neighbor_range(&self, v: VertexId, start: usize, end: usize, mut f: impl FnMut(usize, VertexId)) {
+        let s = self.row_offsets[v as usize] as usize;
+        let e = self.row_offsets[v as usize + 1] as usize;
+        let end = end.min(e - s);
+        if start >= end {
+            return;
+        }
+        for (i, &d) in self.col_indices[s + start..s + end].iter().enumerate() {
+            f(s + start + i, d);
+        }
+    }
+
+    #[inline]
+    fn edge_dst(&self, e: usize) -> VertexId {
+        self.col_indices[e]
+    }
+
+    #[inline]
+    fn weight(&self, e: usize) -> Weight {
+        super::Csr::weight(self, e)
+    }
+
+    #[inline]
+    fn is_weighted(&self) -> bool {
+        !self.edge_weights.is_empty()
+    }
+
+    #[inline]
+    fn has_in_edges(&self) -> bool {
+        self.has_csc()
+    }
+
+    #[inline]
+    fn for_each_in_neighbor_until(&self, v: VertexId, mut f: impl FnMut(VertexId) -> bool) {
+        for &u in self.in_neighbors(v) {
+            if !f(u) {
+                return;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::builder;
+    use super::*;
+
+    fn sample() -> super::super::Csr {
+        builder::from_edges(5, &[(0, 1), (0, 2), (1, 3), (2, 3), (3, 4), (4, 0)])
+    }
+
+    #[test]
+    fn csr_trait_view_matches_inherent() {
+        let g = sample();
+        assert_eq!(GraphRep::num_vertices(&g), 5);
+        assert_eq!(GraphRep::num_edges(&g), 6);
+        for v in 0..5u32 {
+            assert_eq!(GraphRep::degree(&g, v), g.neighbors(v).len());
+            assert_eq!(g.edge_start(v), g.edge_range(v).start);
+            let mut got = Vec::new();
+            g.for_each_neighbor(v, |e, d| got.push((e, d)));
+            let want: Vec<(usize, u32)> =
+                g.edge_range(v).map(|e| (e, g.col_indices[e])).collect();
+            assert_eq!(got, want, "v={v}");
+        }
+    }
+
+    #[test]
+    fn ranged_visit_is_bounded_and_clamped() {
+        let g = sample();
+        let mut got = Vec::new();
+        g.for_neighbor_range(0, 1, usize::MAX, |_, d| got.push(d));
+        assert_eq!(got, vec![2]);
+        got.clear();
+        g.for_neighbor_range(0, 2, 5, |_, d| got.push(d));
+        assert!(got.is_empty());
+    }
+
+    #[test]
+    fn in_neighbor_visit_early_exits() {
+        let g = sample();
+        assert!(g.has_in_edges());
+        let mut seen = Vec::new();
+        g.for_each_in_neighbor_until(3, |u| {
+            seen.push(u);
+            false // stop after the first
+        });
+        assert_eq!(seen, vec![1]);
+    }
+}

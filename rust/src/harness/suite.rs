@@ -6,14 +6,15 @@
 use crate::baselines;
 use crate::config::Config;
 use crate::enactor::RunResult;
-use crate::graph::{datasets, Csr, VertexId};
+use crate::graph::{datasets, Csr, GraphRep, VertexId};
 use crate::primitives::{bc, bfs, cc, pagerank, sssp, tc};
 use crate::util::stats;
 
 /// Source vertex policy matching the paper: highest-degree vertex (stable
-/// across runs, guaranteed in the giant component of the analogs).
-pub fn pick_source(g: &Csr) -> VertexId {
-    (0..g.num_vertices as VertexId).max_by_key(|&v| g.degree(v)).unwrap_or(0)
+/// across runs, guaranteed in the giant component of the analogs). Works
+/// on any graph representation.
+pub fn pick_source<G: GraphRep>(g: &G) -> VertexId {
+    (0..g.num_vertices() as VertexId).max_by_key(|&v| g.degree(v)).unwrap_or(0)
 }
 
 #[derive(Clone, Debug)]

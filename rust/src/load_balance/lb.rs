@@ -19,7 +19,7 @@
 //! warm BSP iteration performs no frontier-sized allocations.
 
 use crate::gpu_sim::WarpCounters;
-use crate::graph::{Csr, VertexId};
+use crate::graph::{GraphRep, VertexId};
 use crate::load_balance::{merge_path, EdgeVisit};
 use crate::util::{par, pool};
 
@@ -28,8 +28,8 @@ use crate::util::{par, pool};
 const PARALLEL_SCAN_MIN: usize = 4096;
 
 /// LB: balance over the output frontier, appending to `out`.
-pub fn expand_output_balanced_into<F: EdgeVisit>(
-    g: &Csr,
+pub fn expand_output_balanced_into<G: GraphRep, F: EdgeVisit>(
+    g: &G,
     items: &[VertexId],
     workers: usize,
     counters: &WarpCounters,
@@ -74,18 +74,20 @@ pub fn expand_output_balanced_into<F: EdgeVisit>(
             let mut pos = start_pos;
             // Walk edges [start_pos, end_pos), advancing `item` with the
             // merge path (each step's binary search is amortized to the
-            // linear walk here, matching the GPU's per-block search).
+            // linear walk here, matching the GPU's per-block search). The
+            // bounded neighbor-range visit lets a chunk start mid-list —
+            // a compressed representation decodes the skipped prefix once
+            // per chunk boundary, amortized over the chunk's edges.
             while pos < end_pos {
                 while offsets[item + 1] <= pos {
                     item += 1;
                 }
                 let v = items[item];
                 let within = pos - offsets[item];
-                let e = g.row_offsets[v as usize] as usize + within;
                 let run = (offsets[item + 1].min(end_pos)) - pos;
-                for k in 0..run {
-                    visit(item, v, e + k, g.col_indices[e + k], &mut local);
-                }
+                g.for_neighbor_range(v, within, within + run, |eid, dst| {
+                    visit(item, v, eid, dst, &mut local)
+                });
                 pos += run;
             }
             let produced = end_pos - start_pos;
@@ -104,8 +106,8 @@ pub fn expand_output_balanced_into<F: EdgeVisit>(
 }
 
 /// LB: balance over the output frontier (allocating wrapper).
-pub fn expand_output_balanced<F: EdgeVisit>(
-    g: &Csr,
+pub fn expand_output_balanced<G: GraphRep, F: EdgeVisit>(
+    g: &G,
     items: &[VertexId],
     workers: usize,
     counters: &WarpCounters,
@@ -117,8 +119,8 @@ pub fn expand_output_balanced<F: EdgeVisit>(
 }
 
 /// LB_LIGHT: balance over the input frontier, appending to `out`.
-pub fn expand_input_balanced_into<F: EdgeVisit>(
-    g: &Csr,
+pub fn expand_input_balanced_into<G: GraphRep, F: EdgeVisit>(
+    g: &G,
     items: &[VertexId],
     workers: usize,
     counters: &WarpCounters,
@@ -129,9 +131,7 @@ pub fn expand_input_balanced_into<F: EdgeVisit>(
         let mut local = pool::take_ids();
         let mut edges = 0usize;
         for (idx, &v) in items[s..e].iter().enumerate() {
-            for eid in g.edge_range(v) {
-                visit(s + idx, v, eid, g.col_indices[eid], &mut local);
-            }
+            g.for_each_neighbor(v, |eid, dst| visit(s + idx, v, eid, dst, &mut local));
             edges += g.degree(v);
         }
         // Block-cooperative processing: lanes stay busy within the block,
@@ -150,8 +150,8 @@ pub fn expand_input_balanced_into<F: EdgeVisit>(
 }
 
 /// LB_LIGHT: balance over the input frontier (allocating wrapper).
-pub fn expand_input_balanced<F: EdgeVisit>(
-    g: &Csr,
+pub fn expand_input_balanced<G: GraphRep, F: EdgeVisit>(
+    g: &G,
     items: &[VertexId],
     workers: usize,
     counters: &WarpCounters,

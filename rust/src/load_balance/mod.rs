@@ -20,8 +20,8 @@ pub mod merge_path;
 pub mod thread_expand;
 pub mod twc;
 
-use crate::graph::{Csr, VertexId};
 use crate::gpu_sim::WarpCounters;
+use crate::graph::{GraphRep, VertexId};
 
 /// Strategy selector (module names from paper Table 2).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -91,10 +91,12 @@ impl<F: Fn(usize, VertexId, usize, VertexId, &mut Vec<VertexId>) + Sync> EdgeVis
 
 /// Dispatch an expansion through the chosen strategy, appending the output
 /// frontier into a caller-owned buffer (the zero-alloc pipeline's entry:
-/// operators pass their reusable `Frontier` storage here).
-pub fn expand_into<F: EdgeVisit>(
+/// operators pass their reusable `Frontier` storage here). Generic over
+/// the graph representation: raw CSR slices and compressed gap streams
+/// traverse through the same strategies.
+pub fn expand_into<G: GraphRep, F: EdgeVisit>(
     kind: StrategyKind,
-    g: &Csr,
+    g: &G,
     items: &[VertexId],
     workers: usize,
     counters: &WarpCounters,
@@ -121,9 +123,9 @@ pub fn expand_into<F: EdgeVisit>(
 }
 
 /// Dispatch an expansion through the chosen strategy (allocating wrapper).
-pub fn expand<F: EdgeVisit>(
+pub fn expand<G: GraphRep, F: EdgeVisit>(
     kind: StrategyKind,
-    g: &Csr,
+    g: &G,
     items: &[VertexId],
     workers: usize,
     counters: &WarpCounters,
@@ -173,6 +175,36 @@ mod tests {
             StrategyKind::LbCull,
         ] {
             assert_eq!(collect_all(kind), want, "{kind}");
+        }
+    }
+
+    #[test]
+    fn all_strategies_agree_on_compressed_representation() {
+        use crate::graph::{Codec, CompressedCsr};
+        let g = star();
+        let cg = CompressedCsr::from_csr(&g, Codec::Zeta(2));
+        let items: Vec<u32> = (0..9).collect();
+        for kind in [
+            StrategyKind::ThreadExpand,
+            StrategyKind::Twc,
+            StrategyKind::Lb,
+            StrategyKind::LbLight,
+            StrategyKind::LbCull,
+        ] {
+            let counters = WarpCounters::new();
+            // encode (edge_id, dst) into one id — both reps must emit the
+            // same multiset with identical edge ids
+            let mut got = expand(kind, &cg, &items, 4, &counters, |_, _s, e, d, out: &mut Vec<u32>| {
+                out.push(e as u32 * 16 + d);
+            });
+            let c2 = WarpCounters::new();
+            let mut want = expand(kind, &g, &items, 4, &c2, |_, _s, e, d, out: &mut Vec<u32>| {
+                out.push(e as u32 * 16 + d);
+            });
+            got.sort_unstable();
+            want.sort_unstable();
+            assert_eq!(got, want, "{kind}");
+            assert_eq!(counters.edges(), c2.edges(), "{kind}");
         }
     }
 

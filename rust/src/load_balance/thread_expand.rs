@@ -7,14 +7,14 @@
 //! which is exactly what Table 8 / Fig 20 measure.
 
 use crate::gpu_sim::{WarpCounters, WARP_WIDTH};
-use crate::graph::{Csr, VertexId};
+use crate::graph::{GraphRep, VertexId};
 use crate::load_balance::EdgeVisit;
 use crate::util::{par, pool};
 
 /// ThreadExpand, appending into a caller-owned buffer; per-worker locals
 /// come from the scratch recycler (zero allocations when warm).
-pub fn expand_into<F: EdgeVisit>(
-    g: &Csr,
+pub fn expand_into<G: GraphRep, F: EdgeVisit>(
+    g: &G,
     items: &[VertexId],
     workers: usize,
     counters: &WarpCounters,
@@ -34,9 +34,7 @@ pub fn expand_into<F: EdgeVisit>(
                 let deg = g.degree(v);
                 max_deg = max_deg.max(deg);
                 sum_deg += deg;
-                for e in g.edge_range(v) {
-                    visit(w + idx, v, e, g.col_indices[e], &mut local);
-                }
+                g.for_each_neighbor(v, |e, dst| visit(w + idx, v, e, dst, &mut local));
             }
             edges += sum_deg as u64;
             if max_deg > 0 {
@@ -55,8 +53,8 @@ pub fn expand_into<F: EdgeVisit>(
 }
 
 /// ThreadExpand (allocating wrapper).
-pub fn expand<F: EdgeVisit>(
-    g: &Csr,
+pub fn expand<G: GraphRep, F: EdgeVisit>(
+    g: &G,
     items: &[VertexId],
     workers: usize,
     counters: &WarpCounters,

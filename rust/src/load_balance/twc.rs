@@ -11,14 +11,14 @@
 //! sequential passes) is the "moderate cost" Table 3 mentions.
 
 use crate::gpu_sim::{WarpCounters, BLOCK_THREADS, WARP_WIDTH};
-use crate::graph::{Csr, VertexId};
+use crate::graph::{GraphRep, VertexId};
 use crate::load_balance::EdgeVisit;
 use crate::util::{par, pool};
 
 /// TWC_FORWARD, appending into a caller-owned buffer. Classification lists
 /// and per-worker locals come from the scratch recycler.
-pub fn expand_into<F: EdgeVisit>(
-    g: &Csr,
+pub fn expand_into<G: GraphRep, F: EdgeVisit>(
+    g: &G,
     items: &[VertexId],
     workers: usize,
     counters: &WarpCounters,
@@ -46,9 +46,7 @@ pub fn expand_into<F: EdgeVisit>(
         let mut local = pool::take_ids();
         for &i in &large[s..e] {
             let v = items[i];
-            for eid in g.edge_range(v) {
-                visit(i, v, eid, g.col_indices[eid], &mut local);
-            }
+            g.for_each_neighbor(v, |eid, dst| visit(i, v, eid, dst, &mut local));
             let deg = g.degree(v);
             counters.record_run(deg); // cooperative: all lanes active
             counters.add_edges(deg as u64);
@@ -65,9 +63,7 @@ pub fn expand_into<F: EdgeVisit>(
         let mut local = pool::take_ids();
         for &i in &medium[s..e] {
             let v = items[i];
-            for eid in g.edge_range(v) {
-                visit(i, v, eid, g.col_indices[eid], &mut local);
-            }
+            g.for_each_neighbor(v, |eid, dst| visit(i, v, eid, dst, &mut local));
             let deg = g.degree(v);
             counters.record_run(deg);
             counters.add_edges(deg as u64);
@@ -92,9 +88,7 @@ pub fn expand_into<F: EdgeVisit>(
                 let deg = g.degree(v);
                 max_deg = max_deg.max(deg);
                 sum_deg += deg;
-                for eid in g.edge_range(v) {
-                    visit(i, v, eid, g.col_indices[eid], &mut local);
-                }
+                g.for_each_neighbor(v, |eid, dst| visit(i, v, eid, dst, &mut local));
             }
             if max_deg > 0 {
                 counters.record_simd(sum_deg as u64, max_deg as u64);
@@ -115,8 +109,8 @@ pub fn expand_into<F: EdgeVisit>(
 }
 
 /// TWC_FORWARD (allocating wrapper).
-pub fn expand<F: EdgeVisit>(
-    g: &Csr,
+pub fn expand<G: GraphRep, F: EdgeVisit>(
+    g: &G,
     items: &[VertexId],
     workers: usize,
     counters: &WarpCounters,

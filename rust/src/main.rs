@@ -3,6 +3,8 @@
 //! Subcommands:
 //!   run <primitive>    run a primitive on a dataset analog or graph file
 //!   generate           emit a synthetic dataset to an edge-list file
+//!   convert            compress a graph into the .gsr container
+//!   stats              report bits/edge for every codec on a graph
 //!   info               print dataset topology properties (Table 4 columns)
 //!   offload <what>     run PageRank / pull-BFS through the AOT XLA artifact
 //!   datasets           list registered paper-dataset analogs
@@ -10,14 +12,18 @@
 //! Examples:
 //!   gunrock run bfs --dataset soc-orkut --direction-optimized
 //!   gunrock run sssp --dataset roadnet_USA --strategy twc
+//!   gunrock convert --dataset rmat_s22_e64 --codec zeta2 --out /tmp/rmat.gsr
+//!   gunrock run bfs --graph /tmp/rmat.gsr          # decode-on-advance
+//!   gunrock stats --dataset soc-orkut
 //!   gunrock offload pagerank --dataset kron_g500-logn10
 //!   gunrock generate --dataset rmat_s22_e64 --out /tmp/rmat.txt
 
 use anyhow::{bail, Context, Result};
 
+use gunrock::graph::compressed::{raw_csr_bytes, Codec, CompressedCsr};
 use gunrock::config::{cli, Config};
 use gunrock::graph::{datasets, io, properties};
-use gunrock::harness::suite;
+use gunrock::harness::{self, suite};
 use gunrock::primitives::{bfs, cc, color, label_propagation, mst, pagerank, sssp, tc, traversal_extras, wtf};
 
 const BOOL_FLAGS: &[&str] =
@@ -39,7 +45,10 @@ fn usage() {
          \n\
          SUBCOMMANDS\n\
            run <bfs|sssp|bc|pagerank|cc|tc|wtf|mst|color|mis|lp|radii>\n\
-                                                  run a primitive\n\
+                                                  run a primitive (BFS/PageRank run\n\
+                                                  .gsr graphs without decompressing)\n\
+           convert                                compress to .gsr (--out, --codec)\n\
+           stats                                  bits/edge per codec for a graph\n\
            offload <pagerank|bfs>                 run through the AOT XLA artifact\n\
            info                                   dataset topology properties\n\
            generate                               write a dataset analog to a file\n\
@@ -47,7 +56,9 @@ fn usage() {
          \n\
          COMMON FLAGS\n\
            --dataset <name>      paper dataset analog (see `gunrock datasets`)\n\
-           --graph <path>        load .mtx or edge-list file instead\n\
+           --graph <path>        load .mtx, .gsr, or edge-list file instead\n\
+           --codec <c>           .gsr gap codec: varint (default) | zeta1..zeta8\n\
+           --out <path>          output path (convert, generate)\n\
            --config <path>       TOML config file\n\
            --threads <n>         worker threads (default: all cores)\n\
            --pool-threads <n>    persistent pool width (default: --threads)\n\
@@ -149,9 +160,101 @@ fn run(args: &[String]) -> Result<()> {
             println!("wrote {name} analog ({} vertices, {} edges) to {out}", g.num_vertices, g.num_edges());
             Ok(())
         }
+        Some("convert") => {
+            let (name, g) = load_graph(&p, p.get_bool("weighted"))?;
+            let out = p.get("out").context("--out <path.gsr> required")?;
+            let codec: Codec =
+                p.get_or("codec", "varint").parse().map_err(anyhow::Error::msg)?;
+            let cg = CompressedCsr::from_csr(&g, codec);
+            io::save_gsr(std::path::Path::new(out), &cg)?;
+            let raw = raw_csr_bytes(g.num_vertices, g.num_edges());
+            println!(
+                "wrote {name} ({} vertices, {} edges, {codec}) to {out}\n  \
+                 adjacency: {:.2} B/edge compressed vs {:.2} B/edge raw CSR ({:.0}%)",
+                g.num_vertices,
+                g.num_edges(),
+                cg.bytes_per_edge(),
+                raw as f64 / g.num_edges().max(1) as f64,
+                100.0 * cg.total_bytes() as f64 / raw.max(1) as f64,
+            );
+            Ok(())
+        }
+        Some("stats") => {
+            let (name, g) = load_graph(&p, false)?;
+            let raw = raw_csr_bytes(g.num_vertices, g.num_edges());
+            let raw_bpe = raw as f64 / g.num_edges().max(1) as f64;
+            let mut rows = vec![vec![
+                "raw CSR".to_string(),
+                format!("{raw_bpe:.2}"),
+                format!("{:.2}", raw_bpe * 8.0),
+                "100%".to_string(),
+            ]];
+            for codec in
+                [Codec::Varint, Codec::Zeta(1), Codec::Zeta(2), Codec::Zeta(3), Codec::Zeta(4)]
+            {
+                let cg = CompressedCsr::from_csr(&g, codec);
+                rows.push(vec![
+                    codec.to_string(),
+                    format!("{:.2}", cg.bytes_per_edge()),
+                    format!("{:.2}", cg.payload_bits_per_edge()),
+                    format!("{:.0}%", 100.0 * cg.total_bytes() as f64 / raw.max(1) as f64),
+                ]);
+            }
+            harness::print_table(
+                &format!(
+                    "Storage: {name} ({} vertices, {} edges)",
+                    g.num_vertices,
+                    g.num_edges()
+                ),
+                &["codec", "B/edge (incl. index)", "payload bits/edge", "vs raw"],
+                &rows,
+            );
+            Ok(())
+        }
         Some("run") => {
             let prim = p.positionals.first().context("run <primitive>")?.clone();
             let cfg = build_config(&p)?;
+            // Compressed-native path: BFS and PageRank traverse a .gsr
+            // payload directly (decode-on-advance, no CSR expansion).
+            if let Some(path) = p.get("graph") {
+                if path.ends_with(".gsr") && matches!(prim.as_str(), "bfs" | "pagerank" | "pr") {
+                    let cg = io::load_gsr(std::path::Path::new(path))?;
+                    println!(
+                        "{} on {path} [compressed {}, {:.2} B/edge]: {} vertices, {} edges, {} threads",
+                        prim,
+                        cg.codec,
+                        cg.bytes_per_edge(),
+                        cg.num_vertices,
+                        cg.num_edges(),
+                        cfg.effective_threads()
+                    );
+                    match prim.as_str() {
+                        "bfs" => {
+                            if cfg.direction_optimized {
+                                eprintln!(
+                                    "warning: --direction-optimized ignored: compressed graphs \
+                                     have no in-edge view yet, traversing push-only"
+                                );
+                            }
+                            let src =
+                                p.get_parse::<u32>("src")?.unwrap_or_else(|| suite::pick_source(&cg));
+                            let (prob, st) = bfs::bfs(&cg, src, &cfg);
+                            let reached =
+                                prob.labels.iter().filter(|&&d| d != bfs::INFINITY_DEPTH).count();
+                            report(&st.result, &format!(
+                                "src={src} reached={reached} push_iters={} pull_iters={}",
+                                st.push_iterations, st.pull_iterations
+                            ));
+                        }
+                        _ => {
+                            let (prob, r) = pagerank::pagerank(&cg, &cfg);
+                            let top: Vec<usize> = top_k(&prob.ranks, 5);
+                            report(&r, &format!("iters={} top5={top:?}", prob.iterations));
+                        }
+                    }
+                    return Ok(());
+                }
+            }
             let weighted = matches!(prim.as_str(), "sssp" | "mst");
             let (name, g) = load_graph(&p, weighted)?;
             let src = p.get_parse::<u32>("src")?.unwrap_or_else(|| suite::pick_source(&g));

@@ -5,7 +5,7 @@
 //! directions, and idempotent (atomic-free) operation.
 
 use crate::frontier::{Frontier, FrontierKind};
-use crate::graph::{Csr, VertexId};
+use crate::graph::{GraphRep, VertexId};
 use crate::load_balance::{self, StrategyKind};
 use crate::operators::OpContext;
 use crate::util::bitset::AtomicBitset;
@@ -52,8 +52,8 @@ where
 /// *destination* vertices of its edge ids (the paper's E-to-* advance
 /// visits the far end's neighbor list), materialized into the caller's
 /// reusable scratch buffer.
-fn expansion_sources<'a>(
-    g: &Csr,
+fn expansion_sources<'a, G: GraphRep>(
+    g: &G,
     input: &'a Frontier,
     scratch: &'a mut Option<Vec<VertexId>>,
 ) -> &'a [VertexId] {
@@ -78,10 +78,12 @@ fn recycle_sources(scratch: Option<Vec<VertexId>>) {
 
 /// Push-based advance through a load-balancing strategy, writing the
 /// output frontier into a caller-owned (enactor-owned, in practice)
-/// buffer. The input frontier is borrowed, never cloned.
-pub fn advance_into<F: AdvanceFunctor>(
+/// buffer. The input frontier is borrowed, never cloned. Generic over the
+/// graph representation ([`GraphRep`]): compressed graphs decode on
+/// advance, on the same worker pool, with the same edge-id space.
+pub fn advance_into<G: GraphRep, F: AdvanceFunctor>(
     ctx: &OpContext,
-    g: &Csr,
+    g: &G,
     input: &Frontier,
     ty: AdvanceType,
     strategy: StrategyKind,
@@ -109,9 +111,9 @@ pub fn advance_into<F: AdvanceFunctor>(
 }
 
 /// Push-based advance (allocating wrapper).
-pub fn advance<F: AdvanceFunctor>(
+pub fn advance<G: GraphRep, F: AdvanceFunctor>(
     ctx: &OpContext,
-    g: &Csr,
+    g: &G,
     input: &Frontier,
     ty: AdvanceType,
     strategy: StrategyKind,
@@ -126,9 +128,9 @@ pub fn advance<F: AdvanceFunctor>(
 /// traversal operators"): the per-destination cull (an atomic bitmask
 /// claim) runs inside the expansion, so duplicate destinations never
 /// materialize in the output frontier and no second kernel is launched.
-pub fn advance_culled_into<F: AdvanceFunctor>(
+pub fn advance_culled_into<G: GraphRep, F: AdvanceFunctor>(
     ctx: &OpContext,
-    g: &Csr,
+    g: &G,
     input: &Frontier,
     strategy: StrategyKind,
     functor: &F,
@@ -155,9 +157,9 @@ pub fn advance_culled_into<F: AdvanceFunctor>(
 }
 
 /// LB_CULL-style fused advance+filter (allocating wrapper).
-pub fn advance_culled<F: AdvanceFunctor>(
+pub fn advance_culled<G: GraphRep, F: AdvanceFunctor>(
     ctx: &OpContext,
-    g: &Csr,
+    g: &G,
     input: &Frontier,
     strategy: StrategyKind,
     functor: &F,
@@ -175,28 +177,30 @@ pub fn advance_culled<F: AdvanceFunctor>(
 /// scale-free graphs). `in_frontier` must answer membership in the current
 /// active frontier. Per-worker discovery lists are recycled scratch
 /// buffers storing (vertex, parent) pairs flat.
-pub fn advance_pull_into(
+pub fn advance_pull_into<G: GraphRep>(
     ctx: &OpContext,
-    g: &Csr,
+    g: &G,
     unvisited: &[VertexId],
     in_frontier: &AtomicBitset,
     mut on_discover: impl FnMut(VertexId, VertexId),
     out: &mut Frontier,
 ) {
-    assert!(g.has_csc(), "pull traversal requires the CSC view");
+    assert!(g.has_in_edges(), "pull traversal requires an in-edge view");
     out.reset(FrontierKind::Vertex);
     let results = par::run_partitioned(unvisited.len(), ctx.workers, |_, s, e| {
         let mut found = pool::take_ids(); // flat (vertex, parent) pairs
         let mut scanned = 0u64;
         for &v in &unvisited[s..e] {
-            for &u in g.in_neighbors(v) {
+            g.for_each_in_neighbor_until(v, |u| {
                 scanned += 1;
                 if in_frontier.get(u as usize) {
                     found.push(v);
                     found.push(u);
-                    break; // early exit: one visited parent suffices
+                    false // early exit: one visited parent suffices
+                } else {
+                    true
                 }
-            }
+            });
         }
         ctx.counters.add_edges(scanned);
         ctx.counters.record_run(scanned as usize);
@@ -213,9 +217,9 @@ pub fn advance_pull_into(
 }
 
 /// Pull-based advance (allocating wrapper).
-pub fn advance_pull(
+pub fn advance_pull<G: GraphRep>(
     ctx: &OpContext,
-    g: &Csr,
+    g: &G,
     unvisited: &[VertexId],
     in_frontier: &AtomicBitset,
     on_discover: impl FnMut(VertexId, VertexId),
@@ -229,7 +233,7 @@ pub fn advance_pull(
 mod tests {
     use super::*;
     use crate::gpu_sim::WarpCounters;
-    use crate::graph::builder;
+    use crate::graph::{builder, Csr};
 
     fn diamond() -> Csr {
         // 0 -> {1,2} -> 3 -> 4

@@ -8,6 +8,11 @@
 //!   tables — that remove *most* duplicates without guaranteeing full
 //!   dedup, trading exactness for avoiding atomics. Idempotent primitives
 //!   (BFS) tolerate the leftovers.
+//!
+//! Filter operates on frontiers only — it never touches adjacency — so it
+//! is representation-agnostic by construction and composes unchanged with
+//! any [`crate::graph::GraphRep`] advance (including the fused LB_CULL
+//! path over compressed graphs).
 
 use crate::frontier::Frontier;
 use crate::graph::VertexId;

@@ -3,51 +3,115 @@
 //! PageRank/BC-style computations, with the paper's atomic-avoidance: the
 //! reduction runs hierarchically (per-thread partials, then a single
 //! combine) instead of one atomic per edge.
+//!
+//! Both variants expose `*_into` entry points that write one result per
+//! input item straight into a caller-owned buffer (workers own disjoint
+//! contiguous ranges — single writer per slot, no locks), so a warm
+//! iteration performs no output allocation; the out-neighborhood variant
+//! is generic over the graph representation ([`GraphRep`]).
 
-use crate::graph::{Csr, VertexId};
+use crate::graph::{Csr, GraphRep, VertexId};
 use crate::operators::OpContext;
 use crate::util::par;
 
-/// Reduce `map(neighbor, edge_id)` over each input vertex's (out-)neighbor
-/// list with `combine`, starting from `identity`. Returns one value per
-/// input item, in order.
-pub fn neighborhood_reduce<T, M, C>(
+/// Reduce `map(src, neighbor, edge_id)` over each input vertex's
+/// (out-)neighbor list with `combine`, starting from `identity`, writing
+/// one value per input item (in order) into `out`.
+pub fn neighborhood_reduce_into<G, T, M, C>(
     ctx: &OpContext,
-    g: &Csr,
+    g: &G,
+    items: &[VertexId],
+    identity: T,
+    map: M,
+    combine: C,
+    out: &mut Vec<T>,
+) where
+    G: GraphRep,
+    T: Send + Sync + Clone,
+    M: Fn(VertexId, VertexId, usize) -> T + Sync, // (src, neighbor, edge_id)
+    C: Fn(T, T) -> T + Sync,
+{
+    ctx.counters.add_kernel_launch();
+    out.clear();
+    out.resize(items.len(), identity.clone());
+    let slots = par::Slots::new(out.as_mut_slice());
+    let slots = &slots;
+    par::run_partitioned(items.len(), ctx.workers, |_, s, e| {
+        let mut edges = 0u64;
+        for (i, &v) in items[s..e].iter().enumerate() {
+            // Option dance: `combine` takes the accumulator by value, and
+            // a captured variable cannot be moved out of an FnMut closure.
+            let mut acc = Some(identity.clone());
+            g.for_each_neighbor(v, |eid, u| {
+                acc = Some(combine(acc.take().unwrap(), map(v, u, eid)));
+            });
+            edges += g.degree(v) as u64;
+            // SAFETY: slot s+i belongs to this worker's exclusive range.
+            unsafe { slots.set(s + i, acc.unwrap()) };
+        }
+        ctx.counters.add_edges(edges);
+        ctx.counters.record_run(edges as usize);
+    });
+}
+
+/// Out-neighborhood reduce (allocating wrapper).
+pub fn neighborhood_reduce<G, T, M, C>(
+    ctx: &OpContext,
+    g: &G,
     items: &[VertexId],
     identity: T,
     map: M,
     combine: C,
 ) -> Vec<T>
 where
+    G: GraphRep,
     T: Send + Sync + Clone,
-    M: Fn(VertexId, VertexId, usize) -> T + Sync, // (src, neighbor, edge_id)
+    M: Fn(VertexId, VertexId, usize) -> T + Sync,
     C: Fn(T, T) -> T + Sync,
 {
-    ctx.counters.add_kernel_launch();
-    let chunks = par::run_partitioned(items.len(), ctx.workers, |_, s, e| {
-        let mut out = Vec::with_capacity(e - s);
-        let mut edges = 0u64;
-        for &v in &items[s..e] {
-            let mut acc = identity.clone();
-            for eid in g.edge_range(v) {
-                acc = combine(acc, map(v, g.col_indices[eid], eid));
-            }
-            edges += g.degree(v) as u64;
-            out.push(acc);
-        }
-        ctx.counters.add_edges(edges);
-        ctx.counters.record_run(edges as usize);
-        out
-    });
     let mut out = Vec::with_capacity(items.len());
-    for c in chunks {
-        out.extend(c);
-    }
+    neighborhood_reduce_into(ctx, g, items, identity, map, combine, &mut out);
     out
 }
 
-/// In-neighborhood variant (pull gather over the CSC view).
+/// In-neighborhood variant (pull gather over the CSC view), writing one
+/// value per input item into `out`.
+pub fn in_neighborhood_reduce_into<T, M, C>(
+    ctx: &OpContext,
+    g: &Csr,
+    items: &[VertexId],
+    identity: T,
+    map: M,
+    combine: C,
+    out: &mut Vec<T>,
+) where
+    T: Send + Sync + Clone,
+    M: Fn(VertexId, VertexId) -> T + Sync, // (dst, in_neighbor)
+    C: Fn(T, T) -> T + Sync,
+{
+    assert!(g.has_csc());
+    ctx.counters.add_kernel_launch();
+    out.clear();
+    out.resize(items.len(), identity.clone());
+    let slots = par::Slots::new(out.as_mut_slice());
+    let slots = &slots;
+    par::run_partitioned(items.len(), ctx.workers, |_, s, e| {
+        let mut edges = 0u64;
+        for (i, &v) in items[s..e].iter().enumerate() {
+            let mut acc = identity.clone();
+            for &u in g.in_neighbors(v) {
+                acc = combine(acc, map(v, u));
+            }
+            edges += g.in_degree(v) as u64;
+            // SAFETY: slot s+i belongs to this worker's exclusive range.
+            unsafe { slots.set(s + i, acc) };
+        }
+        ctx.counters.add_edges(edges);
+        ctx.counters.record_run(edges as usize);
+    });
+}
+
+/// In-neighborhood reduce (allocating wrapper).
 pub fn in_neighborhood_reduce<T, M, C>(
     ctx: &OpContext,
     g: &Csr,
@@ -58,30 +122,11 @@ pub fn in_neighborhood_reduce<T, M, C>(
 ) -> Vec<T>
 where
     T: Send + Sync + Clone,
-    M: Fn(VertexId, VertexId) -> T + Sync, // (dst, in_neighbor)
+    M: Fn(VertexId, VertexId) -> T + Sync,
     C: Fn(T, T) -> T + Sync,
 {
-    assert!(g.has_csc());
-    ctx.counters.add_kernel_launch();
-    let chunks = par::run_partitioned(items.len(), ctx.workers, |_, s, e| {
-        let mut out = Vec::with_capacity(e - s);
-        let mut edges = 0u64;
-        for &v in &items[s..e] {
-            let mut acc = identity.clone();
-            for &u in g.in_neighbors(v) {
-                acc = combine(acc, map(v, u));
-            }
-            edges += g.in_degree(v) as u64;
-            out.push(acc);
-        }
-        ctx.counters.add_edges(edges);
-        ctx.counters.record_run(edges as usize);
-        out
-    });
     let mut out = Vec::with_capacity(items.len());
-    for c in chunks {
-        out.extend(c);
-    }
+    in_neighborhood_reduce_into(ctx, g, items, identity, map, combine, &mut out);
     out
 }
 
@@ -117,5 +162,34 @@ mod tests {
         let ctx = OpContext::new(1, &c);
         let got = in_neighborhood_reduce(&ctx, &g, &[2], 0u32, |_, u| u + 1, |a, b| a + b);
         assert_eq!(got, vec![3]); // (0+1) + (1+1)
+    }
+
+    #[test]
+    fn into_variant_reuses_buffer_and_matches() {
+        let g = builder::from_edges(5, &[(0, 1), (0, 2), (1, 3), (3, 4), (4, 0), (4, 2)]);
+        let items: Vec<u32> = (0..5).collect();
+        let c = WarpCounters::new();
+        let ctx = OpContext::new(3, &c);
+        let mut out: Vec<u32> = Vec::new();
+        neighborhood_reduce_into(&ctx, &g, &items, 0u32, |_, n, _| n + 1, |a, b| a + b, &mut out);
+        let want = neighborhood_reduce(&ctx, &g, &items, 0u32, |_, n, _| n + 1, |a, b| a + b);
+        assert_eq!(out, want);
+        let cap = out.capacity();
+        neighborhood_reduce_into(&ctx, &g, &items, 0u32, |_, n, _| n + 1, |a, b| a + b, &mut out);
+        assert_eq!(out, want);
+        assert_eq!(out.capacity(), cap, "warm buffer must not grow");
+    }
+
+    #[test]
+    fn reduce_over_compressed_matches_csr() {
+        use crate::graph::{Codec, CompressedCsr};
+        let g = builder::from_edges(6, &[(0, 1), (0, 4), (1, 5), (2, 3), (4, 5), (5, 0)]);
+        let cg = CompressedCsr::from_csr(&g, Codec::Varint);
+        let items: Vec<u32> = (0..6).collect();
+        let c = WarpCounters::new();
+        let ctx = OpContext::new(2, &c);
+        let a = neighborhood_reduce(&ctx, &g, &items, 0u32, |_, n, _| n, |x, y| x + y);
+        let b = neighborhood_reduce(&ctx, &cg, &items, 0u32, |_, n, _| n, |x, y| x + y);
+        assert_eq!(a, b);
     }
 }

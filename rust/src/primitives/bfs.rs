@@ -13,7 +13,7 @@ use std::sync::atomic::{AtomicU32, Ordering};
 use crate::config::Config;
 use crate::enactor::{Direction, DirectionHeuristic, Enactor, RunResult};
 use crate::frontier::Frontier;
-use crate::graph::{Csr, VertexId};
+use crate::graph::{GraphRep, VertexId};
 use crate::load_balance::StrategyKind;
 use crate::operators::{advance, filter};
 use crate::util::bitset::AtomicBitset;
@@ -36,8 +36,15 @@ pub struct BfsStats {
 }
 
 /// Run BFS from `src` under `config`. Returns (problem, stats).
-pub fn bfs(g: &Csr, src: VertexId, config: &Config) -> (BfsProblem, BfsStats) {
-    let n = g.num_vertices;
+///
+/// Generic over the graph representation: runs identically over raw
+/// [`Csr`](crate::graph::Csr) and
+/// [`CompressedCsr`](crate::graph::CompressedCsr) (decode-on-advance),
+/// with bit-identical depth labels. Pull direction requires an in-edge
+/// view; representations without one (compressed graphs) traverse
+/// push-only even when direction optimization is enabled.
+pub fn bfs<G: GraphRep>(g: &G, src: VertexId, config: &Config) -> (BfsProblem, BfsStats) {
+    let n = g.num_vertices();
     let mut enactor = Enactor::new(config.clone());
     enactor.begin_run();
 
@@ -75,7 +82,11 @@ pub fn bfs(g: &Csr, src: VertexId, config: &Config) -> (BfsProblem, BfsStats) {
         let prev_edges = enactor.counters.edges();
         let input_len = bufs.current().len();
         depth += 1;
-        let dir = heuristic.decide(n, g.num_edges(), input_len, n - visited_count);
+        let dir = if g.has_in_edges() {
+            heuristic.decide(n, g.num_edges(), input_len, n - visited_count)
+        } else {
+            Direction::Push
+        };
 
         match dir {
             Direction::Pull => {
@@ -256,6 +267,18 @@ mod tests {
         let (dopt, stats) = bfs(&g, 7, &cfg);
         assert_eq!(push.labels, dopt.labels);
         assert!(stats.pull_iterations > 0, "scale-free BFS should enter pull phase");
+    }
+
+    #[test]
+    fn compressed_representation_matches_csr() {
+        use crate::graph::{Codec, CompressedCsr};
+        let g = rmat(&RmatParams { scale: 10, edge_factor: 16, ..Default::default() });
+        let (want, _) = bfs(&g, 5, &Config::default());
+        for codec in [Codec::Varint, Codec::Zeta(2)] {
+            let cg = CompressedCsr::from_csr(&g, codec);
+            let (got, _) = bfs(&cg, 5, &Config::default());
+            assert_eq!(want.labels, got.labels, "{codec}");
+        }
     }
 
     #[test]

@@ -9,7 +9,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use crate::config::Config;
 use crate::enactor::{Enactor, RunResult};
 use crate::frontier::Frontier;
-use crate::graph::{Csr, VertexId};
+use crate::graph::{Csr, GraphRep, VertexId};
 use crate::operators::{advance, filter, neighborhood_reduce};
 use crate::util::timer::Timer;
 
@@ -33,8 +33,13 @@ fn atomic_add_f64(slot: &AtomicU64, add: f64) {
 }
 
 /// Push-mode PageRank: scatter rank/deg contributions along out-edges.
-pub fn pagerank(g: &Csr, config: &Config) -> (PageRankProblem, RunResult) {
-    let n = g.num_vertices;
+///
+/// Generic over the graph representation — runs over raw CSR or the
+/// compressed gap-encoded payload through the same advance pipeline. With
+/// equal worker counts the per-edge visit order matches between
+/// representations, so single-threaded runs are bit-identical.
+pub fn pagerank<G: GraphRep>(g: &G, config: &Config) -> (PageRankProblem, RunResult) {
+    let n = g.num_vertices();
     let damp = config.pr_damping;
     let eps = config.pr_epsilon;
     let mut enactor = Enactor::new(config.clone());
@@ -97,6 +102,9 @@ pub fn pagerank(g: &Csr, config: &Config) -> (PageRankProblem, RunResult) {
 
 /// Pull-mode PageRank: gather over in-neighbors (atomic-free, the
 /// neighborhood-reduce operator) — the mode the AOT ELL artifact mirrors.
+/// The contribution buffer is enactor-lifetime scratch reused across
+/// iterations (`in_neighborhood_reduce_into`): a warm iteration performs
+/// no rank-sized allocation beyond the new-ranks vector itself.
 pub fn pagerank_pull(g: &Csr, config: &Config) -> (PageRankProblem, RunResult) {
     assert!(g.has_csc());
     let n = g.num_vertices;
@@ -106,6 +114,7 @@ pub fn pagerank_pull(g: &Csr, config: &Config) -> (PageRankProblem, RunResult) {
 
     let mut ranks: Vec<f64> = vec![1.0 / n as f64; n];
     let all: Vec<VertexId> = (0..n as VertexId).collect();
+    let mut contribs: Vec<f64> = Vec::new();
     let mut iters = 0usize;
     loop {
         let t = Timer::start();
@@ -116,13 +125,14 @@ pub fn pagerank_pull(g: &Csr, config: &Config) -> (PageRankProblem, RunResult) {
             .sum();
         let ctx = enactor.ctx();
         let ranks_ref = &ranks;
-        let contribs = neighborhood_reduce::in_neighborhood_reduce(
+        neighborhood_reduce::in_neighborhood_reduce_into(
             &ctx,
             g,
             &all,
             0.0f64,
             |_v, u| ranks_ref[u as usize] / g.degree(u) as f64,
             |a, b| a + b,
+            &mut contribs,
         );
         let base = (1.0 - damp) / n as f64 + damp * dangling / n as f64;
         let new_ranks: Vec<f64> = contribs.iter().map(|c| base + damp * c).collect();
@@ -179,6 +189,19 @@ mod tests {
         let (push, _) = pagerank(&g, &cfg);
         let (pull, _) = pagerank_pull(&g, &cfg);
         close(&push.ranks, &pull.ranks, 1e-9);
+    }
+
+    #[test]
+    fn compressed_representation_bit_identical_single_thread() {
+        use crate::graph::{Codec, CompressedCsr};
+        let g = rmat(&RmatParams { scale: 9, edge_factor: 8, ..Default::default() });
+        let mut cfg = Config::default();
+        cfg.threads = 1; // serial visit order => identical f64 add order
+        cfg.pr_max_iters = 10;
+        let (want, _) = pagerank(&g, &cfg);
+        let cg = CompressedCsr::from_csr(&g, Codec::Varint);
+        let (got, _) = pagerank(&cg, &cfg);
+        assert_eq!(want.ranks, got.ranks, "same edge order must give bit-identical ranks");
     }
 
     #[test]

@@ -28,29 +28,38 @@ pub fn num_threads() -> usize {
 }
 
 /// A raw pointer into a slice whose disjoint elements are written by
-/// distinct logical workers. SAFETY: every `set`/`get_mut` index must be
-/// owned by exactly one logical worker of the enclosing dispatch, and the
-/// dispatch barrier orders the writes before the caller reads them.
-struct Slots<T>(*mut T);
+/// distinct logical workers. SAFETY: every `set`/`get_mut`/`slice_mut`
+/// index or range must be owned by exactly one logical worker of the
+/// enclosing dispatch, and the dispatch barrier orders the writes before
+/// the caller reads them. Shared (pub(crate)) so operator and builder
+/// internals reuse one audited wrapper instead of hand-rolling copies.
+pub(crate) struct Slots<T>(*mut T);
 
 unsafe impl<T: Send> Send for Slots<T> {}
 unsafe impl<T: Send> Sync for Slots<T> {}
 
 impl<T> Slots<T> {
-    fn new(xs: &mut [T]) -> Self {
+    pub(crate) fn new(xs: &mut [T]) -> Self {
         Slots(xs.as_mut_ptr())
     }
 
-    /// Replace element `i`. SAFETY: see type docs — `i` must be this
-    /// worker's exclusive slot and in bounds.
-    unsafe fn set(&self, i: usize, value: T) {
+    /// Replace element `i` (the old value is dropped). SAFETY: see type
+    /// docs — `i` must be this worker's exclusive slot and in bounds.
+    pub(crate) unsafe fn set(&self, i: usize, value: T) {
         *self.0.add(i) = value;
     }
 
     /// Exclusive reference to element `i`. SAFETY: see type docs.
     #[allow(clippy::mut_from_ref)]
-    unsafe fn get_mut(&self, i: usize) -> &mut T {
+    pub(crate) unsafe fn get_mut(&self, i: usize) -> &mut T {
         &mut *self.0.add(i)
+    }
+
+    /// Exclusive subslice `[start, start + len)`. SAFETY: see type docs —
+    /// the whole range must belong to this worker alone and be in bounds.
+    #[allow(clippy::mut_from_ref)]
+    pub(crate) unsafe fn slice_mut(&self, start: usize, len: usize) -> &mut [T] {
+        std::slice::from_raw_parts_mut(self.0.add(start), len)
     }
 }
 

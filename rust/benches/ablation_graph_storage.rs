@@ -1,18 +1,22 @@
 //! Ablation: compressed graph storage — bytes/edge and traversal MTEPS,
 //! raw CSR vs gap-compressed (`graph/compressed/`), per dataset.
 //!
-//! Three questions, per dataset class:
+//! Four questions, per dataset class:
 //!
 //! 1. footprint: adjacency bytes/edge (offsets + columns for raw CSR;
 //!    payload + both indexes for compressed) under each codec;
 //! 2. traversal cost: full-stack BFS MTEPS over `Csr` vs `CompressedCsr`
 //!    (decode-on-advance through the same operator pipeline), results
 //!    cross-checked for equality;
-//! 3. determinism: single-threaded PageRank must be bit-identical across
+//! 3. pull traversal: direction-optimized BFS over the v2 in-edge view —
+//!    MTEPS plus the pull-iteration count, cross-checked against raw-CSR
+//!    direction-optimized BFS (compressed graphs no longer fall back to
+//!    push-only);
+//! 4. determinism: single-threaded PageRank must be bit-identical across
 //!    representations (same edge-id space, same visit order).
 //!
 //! Emits BENCH_graph_storage.json for the experiment ledger (CI uploads
-//! it next to BENCH_launch_overhead.json).
+//! it and `check_bench` gates it against ci/bench_baselines.json).
 
 use gunrock::config::Config;
 use gunrock::graph::compressed::raw_csr_bytes;
@@ -34,9 +38,13 @@ struct DatasetReport {
     vertices: usize,
     edges: usize,
     raw_bpe: f64,
+    in_view_bpe: f64,
     codec_bpe: Vec<(Codec, f64, f64)>, // (codec, bytes/edge, payload bits/edge)
     bfs_csr_mteps: f64,
     bfs_gsr_mteps: f64,
+    do_csr_mteps: f64,
+    do_gsr_mteps: f64,
+    do_gsr_pull_iters: usize,
     results_match: bool,
 }
 
@@ -57,7 +65,7 @@ fn main() {
 
         // Traversal: BFS over both representations (varint payload), warm
         // run first, timed second; labels must agree exactly.
-        let cg = CompressedCsr::from_csr(&g, Codec::Varint);
+        let cg = CompressedCsr::from_csr_with_in_edges(&g, Codec::Varint);
         let src = suite::pick_source(&g);
         let cfg = Config::default();
         let (want, _) = bfs::bfs(&g, src, &cfg);
@@ -66,22 +74,45 @@ fn main() {
         let (_, gsr_stats) = bfs::bfs(&cg, src, &cfg);
         let mut results_match = want.labels == got.labels;
 
-        // Determinism: single-threaded PageRank bit-identical across reps.
+        // Pull / direction-optimized: the v2 in-edge view lets compressed
+        // BFS switch directions; labels must still match raw CSR, and the
+        // heuristic must take the same schedule (same frontier sizes).
+        let mut do_cfg = Config::default();
+        do_cfg.direction_optimized = true;
+        let (do_want, _) = bfs::bfs(&g, src, &do_cfg);
+        let (_, do_csr_stats) = bfs::bfs(&g, src, &do_cfg);
+        let (do_got, _) = bfs::bfs(&cg, src, &do_cfg);
+        let (_, do_gsr_stats) = bfs::bfs(&cg, src, &do_cfg);
+        results_match &= do_want.labels == do_got.labels;
+        results_match &= do_csr_stats.pull_iterations == do_gsr_stats.pull_iterations;
+
+        // Determinism: single-threaded PageRank bit-identical across reps,
+        // and pull PageRank bit-identical over the in-edge view.
         let mut pr_cfg = Config::default();
         pr_cfg.threads = 1;
         pr_cfg.pr_max_iters = 5;
         let (pr_a, _) = pagerank::pagerank(&g, &pr_cfg);
         let (pr_b, _) = pagerank::pagerank(&cg, &pr_cfg);
         results_match &= pr_a.ranks == pr_b.ranks;
+        let mut pull_cfg = Config::default();
+        pull_cfg.pr_max_iters = 5;
+        pull_cfg.pr_epsilon = 0.0;
+        let (pull_a, _) = pagerank::pagerank_pull(&g, &pull_cfg);
+        let (pull_b, _) = pagerank::pagerank_pull(&cg, &pull_cfg);
+        results_match &= pull_a.ranks == pull_b.ranks;
 
         reports.push(DatasetReport {
             name: name.to_string(),
             vertices: g.num_vertices,
             edges: g.num_edges(),
             raw_bpe,
+            in_view_bpe: cg.in_view_bytes() as f64 / g.num_edges().max(1) as f64,
             codec_bpe,
             bfs_csr_mteps: csr_stats.result.mteps(),
             bfs_gsr_mteps: gsr_stats.result.mteps(),
+            do_csr_mteps: do_csr_stats.result.mteps(),
+            do_gsr_mteps: do_gsr_stats.result.mteps(),
+            do_gsr_pull_iters: do_gsr_stats.pull_iterations,
             results_match,
         });
     }
@@ -100,12 +131,24 @@ fn main() {
             format!("{:.0}%", 100.0 * best / r.raw_bpe),
             format!("{:.1}", r.bfs_csr_mteps),
             format!("{:.1}", r.bfs_gsr_mteps),
+            format!("{:.1}", r.do_csr_mteps),
+            format!("{:.1} ({} pull)", r.do_gsr_mteps, r.do_gsr_pull_iters),
             r.results_match.to_string(),
         ]);
     }
     harness::print_table(
         "Ablation: graph storage (raw CSR vs gap-compressed)",
-        &["dataset", "raw B/e", "best B/e", "ratio", "BFS MTEPS csr", "BFS MTEPS gsr", "match"],
+        &[
+            "dataset",
+            "raw B/e",
+            "best B/e",
+            "ratio",
+            "BFS MTEPS csr",
+            "BFS MTEPS gsr",
+            "DO MTEPS csr",
+            "DO MTEPS gsr",
+            "match",
+        ],
         &rows,
     );
 
@@ -122,15 +165,21 @@ fn main() {
         }
         json.push_str(&format!(
             "    {{\"name\": \"{}\", \"vertices\": {}, \"edges\": {}, \
-             \"raw_bytes_per_edge\": {:.3}, \"codecs\": {{{codecs}}}, \
+             \"raw_bytes_per_edge\": {:.3}, \"in_view_bytes_per_edge\": {:.3}, \
+             \"codecs\": {{{codecs}}}, \
              \"bfs_mteps\": {{\"csr\": {:.2}, \"compressed\": {:.2}}}, \
+             \"do_bfs_mteps\": {{\"csr\": {:.2}, \"compressed\": {:.2}, \"pull_iterations\": {}}}, \
              \"results_match\": {}}}{}\n",
             r.name,
             r.vertices,
             r.edges,
             r.raw_bpe,
+            r.in_view_bpe,
             r.bfs_csr_mteps,
             r.bfs_gsr_mteps,
+            r.do_csr_mteps,
+            r.do_gsr_mteps,
+            r.do_gsr_pull_iters,
             r.results_match,
             if i + 1 < reports.len() { "," } else { "" },
         ));

@@ -1,0 +1,408 @@
+//! CI bench regression gate: compare emitted `BENCH_*.json` files against
+//! the committed baselines in `ci/bench_baselines.json` and fail (exit 1)
+//! on regression.
+//!
+//! Usage: `check_bench <baselines.json> <BENCH_a.json> [BENCH_b.json ...]`
+//!
+//! The baseline file drives three check kinds per bench (matched by the
+//! emitted file's top-level `"bench"` name):
+//!
+//! - `require_true`: every value at the path must be boolean `true`
+//!   (correctness gates, e.g. cross-representation `results_match`);
+//! - `bounds`: numeric values at the path must satisfy `max` / `min`
+//!   (hard invariants, e.g. the 60%-of-raw compression target);
+//! - `near`: numeric values must stay within `tolerance` (default ±25%)
+//!   of the recorded baseline. A `null` baseline means "not recorded
+//!   yet": the check prints the measured value so it can be committed,
+//!   and passes — the gate tightens as numbers land.
+//!
+//! Paths are dot-separated; `*` fans out over array elements. Everything
+//! is dependency-free (a ~100-line JSON reader below) so the gate builds
+//! in the offline CI image.
+
+use std::process::ExitCode;
+
+// ---------------------------------------------------------------------------
+// Minimal JSON value + parser (no external deps in the offline build).
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug, PartialEq)]
+enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(pairs) => pairs.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s.as_str()),
+            _ => None,
+        }
+    }
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    p: usize,
+}
+
+impl Parser<'_> {
+    fn new(s: &str) -> Parser<'_> {
+        Parser { b: s.as_bytes(), p: 0 }
+    }
+
+    fn err(&self, msg: &str) -> String {
+        format!("{msg} at byte {}", self.p)
+    }
+
+    fn skip_ws(&mut self) {
+        while self.p < self.b.len() && matches!(self.b[self.p], b' ' | b'\t' | b'\n' | b'\r') {
+            self.p += 1;
+        }
+    }
+
+    fn peek(&mut self) -> Option<u8> {
+        self.skip_ws();
+        self.b.get(self.p).copied()
+    }
+
+    fn expect(&mut self, c: u8) -> Result<(), String> {
+        if self.peek() == Some(c) {
+            self.p += 1;
+            Ok(())
+        } else {
+            Err(self.err(&format!("expected '{}'", c as char)))
+        }
+    }
+
+    fn value(&mut self) -> Result<Json, String> {
+        match self.peek().ok_or_else(|| self.err("unexpected end of input"))? {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => Ok(Json::Str(self.string()?)),
+            b't' => self.literal("true", Json::Bool(true)),
+            b'f' => self.literal("false", Json::Bool(false)),
+            b'n' => self.literal("null", Json::Null),
+            _ => self.number(),
+        }
+    }
+
+    fn literal(&mut self, word: &str, v: Json) -> Result<Json, String> {
+        if self.b[self.p..].starts_with(word.as_bytes()) {
+            self.p += word.len();
+            Ok(v)
+        } else {
+            Err(self.err(&format!("expected '{word}'")))
+        }
+    }
+
+    fn number(&mut self) -> Result<Json, String> {
+        let start = self.p;
+        while self.p < self.b.len()
+            && matches!(self.b[self.p], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+        {
+            self.p += 1;
+        }
+        std::str::from_utf8(&self.b[start..self.p])
+            .ok()
+            .and_then(|s| s.parse::<f64>().ok())
+            .map(Json::Num)
+            .ok_or_else(|| self.err("bad number"))
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            let c = *self.b.get(self.p).ok_or_else(|| self.err("unterminated string"))?;
+            self.p += 1;
+            match c {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    let e = *self.b.get(self.p).ok_or_else(|| self.err("bad escape"))?;
+                    self.p += 1;
+                    match e {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b't' => out.push('\t'),
+                        b'r' => out.push('\r'),
+                        b'b' => out.push('\u{0008}'),
+                        b'f' => out.push('\u{000C}'),
+                        b'u' => {
+                            let hex = self
+                                .b
+                                .get(self.p..self.p + 4)
+                                .and_then(|h| std::str::from_utf8(h).ok())
+                                .and_then(|h| u32::from_str_radix(h, 16).ok())
+                                .ok_or_else(|| self.err("bad \\u escape"))?;
+                            self.p += 4;
+                            out.push(char::from_u32(hex).unwrap_or('\u{FFFD}'));
+                        }
+                        _ => return Err(self.err("unknown escape")),
+                    }
+                }
+                _ => out.push(c as char),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json, String> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        if self.peek() == Some(b']') {
+            self.p += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            items.push(self.value()?);
+            match self.peek() {
+                Some(b',') => self.p += 1,
+                Some(b']') => {
+                    self.p += 1;
+                    return Ok(Json::Arr(items));
+                }
+                _ => return Err(self.err("expected ',' or ']'")),
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<Json, String> {
+        self.expect(b'{')?;
+        let mut pairs = Vec::new();
+        if self.peek() == Some(b'}') {
+            self.p += 1;
+            return Ok(Json::Obj(pairs));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.expect(b':')?;
+            pairs.push((key, self.value()?));
+            match self.peek() {
+                Some(b',') => self.p += 1,
+                Some(b'}') => {
+                    self.p += 1;
+                    return Ok(Json::Obj(pairs));
+                }
+                _ => return Err(self.err("expected ',' or '}'")),
+            }
+        }
+    }
+}
+
+fn parse(s: &str) -> Result<Json, String> {
+    let mut p = Parser::new(s);
+    let v = p.value()?;
+    p.skip_ws();
+    if p.p != p.b.len() {
+        return Err(p.err("trailing garbage"));
+    }
+    Ok(v)
+}
+
+// ---------------------------------------------------------------------------
+// Path lookup: dot-separated keys / array indexes, `*` fans out.
+// ---------------------------------------------------------------------------
+
+fn lookup<'a>(root: &'a Json, path: &str) -> Vec<&'a Json> {
+    let mut cur = vec![root];
+    for seg in path.split('.') {
+        let mut next = Vec::new();
+        for v in cur {
+            match (seg, v) {
+                ("*", Json::Arr(items)) => next.extend(items.iter()),
+                ("*", Json::Obj(pairs)) => next.extend(pairs.iter().map(|(_, x)| x)),
+                (_, Json::Obj(_)) => {
+                    if let Some(x) = v.get(seg) {
+                        next.push(x);
+                    }
+                }
+                (_, Json::Arr(items)) => {
+                    if let Ok(i) = seg.parse::<usize>() {
+                        if let Some(x) = items.get(i) {
+                            next.push(x);
+                        }
+                    }
+                }
+                _ => {}
+            }
+        }
+        cur = next;
+    }
+    cur
+}
+
+// ---------------------------------------------------------------------------
+// Checks
+// ---------------------------------------------------------------------------
+
+struct Outcome {
+    failures: usize,
+    checks: usize,
+    pending: usize,
+}
+
+fn check_bench_file(bench: &Json, cfg: &Json, tolerance: f64, out: &mut Outcome) {
+    if let Some(Json::Arr(paths)) = cfg.get("require_true") {
+        for p in paths {
+            let Some(path) = p.as_str() else { continue };
+            let hits = lookup(bench, path);
+            out.checks += 1;
+            if hits.is_empty() {
+                println!("  FAIL require_true {path}: path matched nothing");
+                out.failures += 1;
+                continue;
+            }
+            let bad = hits.iter().filter(|v| !matches!(**v, Json::Bool(true))).count();
+            if bad > 0 {
+                println!("  FAIL require_true {path}: {bad}/{} values are not true", hits.len());
+                out.failures += 1;
+            } else {
+                println!("  ok   require_true {path} ({} values)", hits.len());
+            }
+        }
+    }
+    if let Some(Json::Arr(entries)) = cfg.get("bounds") {
+        for e in entries {
+            let Some(path) = e.get("path").and_then(Json::as_str) else { continue };
+            let hits = lookup(bench, path);
+            out.checks += 1;
+            if hits.is_empty() {
+                println!("  FAIL bounds {path}: path matched nothing");
+                out.failures += 1;
+                continue;
+            }
+            let max = e.get("max").and_then(Json::as_f64);
+            let min = e.get("min").and_then(Json::as_f64);
+            let mut ok = true;
+            for v in &hits {
+                let Some(x) = v.as_f64() else {
+                    println!("  FAIL bounds {path}: non-numeric value");
+                    ok = false;
+                    continue;
+                };
+                if let Some(hi) = max {
+                    if x > hi {
+                        println!("  FAIL bounds {path}: {x} > max {hi}");
+                        ok = false;
+                    }
+                }
+                if let Some(lo) = min {
+                    if x < lo {
+                        println!("  FAIL bounds {path}: {x} < min {lo}");
+                        ok = false;
+                    }
+                }
+            }
+            if ok {
+                println!("  ok   bounds {path} ({} values)", hits.len());
+            } else {
+                out.failures += 1;
+            }
+        }
+    }
+    if let Some(Json::Arr(entries)) = cfg.get("near") {
+        for e in entries {
+            let Some(path) = e.get("path").and_then(Json::as_str) else { continue };
+            let hits = lookup(bench, path);
+            out.checks += 1;
+            let Some(got) = hits.first().and_then(|v| v.as_f64()) else {
+                println!("  FAIL near {path}: no numeric value in bench output");
+                out.failures += 1;
+                continue;
+            };
+            match e.get("value") {
+                Some(Json::Num(base)) => {
+                    let rel = if base.abs() > f64::EPSILON {
+                        (got - base).abs() / base.abs()
+                    } else {
+                        got.abs()
+                    };
+                    if rel > tolerance {
+                        println!(
+                            "  FAIL near {path}: {got} deviates {:.0}% from baseline {base} \
+                             (tolerance {:.0}%)",
+                            rel * 100.0,
+                            tolerance * 100.0
+                        );
+                        out.failures += 1;
+                    } else {
+                        let pct = tolerance * 100.0;
+                        println!("  ok   near {path}: {got} within {pct:.0}% of {base}");
+                    }
+                }
+                _ => {
+                    println!("  PENDING near {path}: measured {got} — record it in the baseline");
+                    out.pending += 1;
+                }
+            }
+        }
+    }
+}
+
+fn run() -> Result<Outcome, String> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.len() < 2 {
+        return Err("usage: check_bench <baselines.json> <BENCH_a.json> [...]".into());
+    }
+    let baseline_text = std::fs::read_to_string(&args[0]).map_err(|e| format!("{}: {e}", args[0]))?;
+    let baselines = parse(&baseline_text).map_err(|e| format!("{}: {e}", args[0]))?;
+    let tolerance = baselines.get("tolerance").and_then(Json::as_f64).unwrap_or(0.25);
+    let benches = baselines.get("benches").ok_or("baselines missing \"benches\" map")?;
+
+    let mut out = Outcome { failures: 0, checks: 0, pending: 0 };
+    for file in &args[1..] {
+        let text = std::fs::read_to_string(file).map_err(|e| format!("{file}: {e}"))?;
+        let bench = parse(&text).map_err(|e| format!("{file}: {e}"))?;
+        let name = bench
+            .get("bench")
+            .and_then(Json::as_str)
+            .ok_or_else(|| format!("{file}: missing top-level \"bench\" name"))?;
+        println!("{file} (bench \"{name}\"):");
+        match benches.get(name) {
+            Some(cfg) => check_bench_file(&bench, cfg, tolerance, &mut out),
+            None => println!("  note: no baseline entry for \"{name}\" — nothing gated"),
+        }
+    }
+    Ok(out)
+}
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(out) => {
+            println!(
+                "\ncheck_bench: {} checks, {} failures, {} pending baselines",
+                out.checks, out.failures, out.pending
+            );
+            if out.failures > 0 {
+                ExitCode::FAILURE
+            } else {
+                ExitCode::SUCCESS
+            }
+        }
+        Err(e) => {
+            eprintln!("check_bench: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}

@@ -30,6 +30,13 @@ use super::rep::GraphRep;
 use super::{Coo, Csr, SizeT, VertexId, Weight};
 
 /// Gap-compressed CSR. See module docs for the layout.
+///
+/// The optional **in-edge view** (format v2) mirrors the out-edge layout
+/// in CSC order: gap-compressed per-destination source lists under the
+/// same codec, plus a permutation mapping each CSC position to its global
+/// *out-edge id* — the GraphBLAST-style transposed-matrix view of the same
+/// graph, keeping the edge-id space identical to raw CSR so pull-direction
+/// functors observe the same ids (and weights) as push.
 #[derive(Clone, Debug, Default)]
 pub struct CompressedCsr {
     pub num_vertices: usize,
@@ -45,11 +52,25 @@ pub struct CompressedCsr {
     /// Per-edge weights in global edge-id order; empty = unweighted.
     /// Kept uncompressed: weights are random-accessed by edge id.
     pub edge_weights: Vec<Weight>,
+    /// Prefix in-degree index (n+1) of the optional in-edge view;
+    /// empty = no in-edge view (push-only traversal).
+    pub in_edge_offsets: Vec<SizeT>,
+    /// Byte offset (n+1) of each vertex's encoded in-neighbor stream.
+    pub in_byte_offsets: Vec<u64>,
+    /// Concatenated per-vertex gap streams of in-neighbor (source) lists.
+    pub in_payload: Vec<u8>,
+    /// CSC position -> global out-edge id (len = num_edges when the
+    /// in-edge view exists). `in_edge_perm[p]` is the edge id of the p-th
+    /// in-edge in CSC order, so pull traversal reads the same weights and
+    /// reports the same ids as push.
+    pub in_edge_perm: Vec<SizeT>,
 }
 
 impl CompressedCsr {
     /// Compress a CSR graph (neighbor lists must be sorted ascending,
-    /// which the builders guarantee).
+    /// which the builders guarantee). No in-edge view; see
+    /// [`attach_in_edges`](CompressedCsr::attach_in_edges) /
+    /// [`from_csr_with_in_edges`](CompressedCsr::from_csr_with_in_edges).
     pub fn from_csr(g: &Csr, codec: Codec) -> Self {
         let n = g.num_vertices;
         let mut payload = Vec::new();
@@ -66,7 +87,92 @@ impl CompressedCsr {
             byte_offsets,
             payload,
             edge_weights: g.edge_weights.clone(),
+            in_edge_offsets: Vec::new(),
+            in_byte_offsets: Vec::new(),
+            in_payload: Vec::new(),
+            in_edge_perm: Vec::new(),
         }
+    }
+
+    /// Compress a CSR graph and build the in-edge view in one step — the
+    /// `convert` CLI default, so `.gsr` graphs traverse pull-direction
+    /// (direction-optimized BFS, pull PageRank) compressed-natively.
+    pub fn from_csr_with_in_edges(g: &Csr, codec: Codec) -> Self {
+        let mut cg = CompressedCsr::from_csr(g, codec);
+        cg.attach_in_edges();
+        cg
+    }
+
+    /// Whether the in-edge (CSC-order) view is present.
+    pub fn has_in_view(&self) -> bool {
+        !self.in_edge_offsets.is_empty()
+    }
+
+    /// In-degree of `v` (requires the in-edge view).
+    #[inline]
+    pub fn in_degree(&self, v: VertexId) -> usize {
+        (self.in_edge_offsets[v as usize + 1] - self.in_edge_offsets[v as usize]) as usize
+    }
+
+    /// Streaming decoder over v's in-neighbor (source) list.
+    pub fn decode_in_neighbors(&self, v: VertexId) -> NeighborDecoder<'_> {
+        let s = self.in_byte_offsets[v as usize] as usize;
+        let e = self.in_byte_offsets[v as usize + 1] as usize;
+        NeighborDecoder::new(self.codec, &self.in_payload[s..e], self.in_degree(v))
+    }
+
+    /// Visit v's in-edges as `f(out_edge_id, src)` — the permutation makes
+    /// the global edge-id space identical to push traversal, so a pull
+    /// functor can read `weight(out_edge_id)` like its push twin.
+    pub fn for_each_in_edge(&self, v: VertexId, mut f: impl FnMut(usize, VertexId)) {
+        let s = self.in_edge_offsets[v as usize] as usize;
+        for (i, u) in self.decode_in_neighbors(v).enumerate() {
+            f(self.in_edge_perm[s + i] as usize, u);
+        }
+    }
+
+    /// Build the in-edge view from the out-edge streams: a counting sort
+    /// on destination (sources scatter in ascending order, so every
+    /// in-neighbor list comes out sorted — gap-encodable without a per-row
+    /// sort), recording the out-edge-id permutation alongside.
+    pub fn attach_in_edges(&mut self) {
+        let n = self.num_vertices;
+        let m = self.num_edges();
+        let mut offsets = vec![0 as SizeT; n + 1];
+        for v in 0..n as VertexId {
+            for d in self.decode_neighbors(v) {
+                offsets[d as usize + 1] += 1;
+            }
+        }
+        for v in 0..n {
+            offsets[v + 1] += offsets[v];
+        }
+        let mut cursor: Vec<SizeT> = offsets[..n].to_vec();
+        let mut srcs = vec![0 as VertexId; m];
+        let mut perm = vec![0 as SizeT; m];
+        for v in 0..n as VertexId {
+            let mut e = self.edge_offsets[v as usize];
+            for d in self.decode_neighbors(v) {
+                let pos = cursor[d as usize] as usize;
+                cursor[d as usize] += 1;
+                srcs[pos] = v;
+                perm[pos] = e;
+                e += 1;
+            }
+        }
+        let mut payload = Vec::new();
+        let mut byte_offsets = Vec::with_capacity(n + 1);
+        byte_offsets.push(0u64);
+        for v in 0..n {
+            let s = offsets[v] as usize;
+            let e = offsets[v + 1] as usize;
+            codec::encode_list(self.codec, &srcs[s..e], &mut payload);
+            byte_offsets.push(payload.len() as u64);
+        }
+        self.in_edge_offsets = offsets;
+        self.in_byte_offsets = byte_offsets;
+        self.in_payload = payload;
+        self.in_edge_perm = perm;
     }
 
     pub fn num_edges(&self) -> usize {
@@ -164,9 +270,21 @@ impl CompressedCsr {
     }
 
     /// Total in-memory footprint of the adjacency structure (payload +
-    /// indexes; weights excluded — raw CSR carries the same weight array).
+    /// indexes; weights excluded — raw CSR carries the same weight array;
+    /// the optional in-edge view is tallied separately by
+    /// [`in_view_bytes`](CompressedCsr::in_view_bytes), mirroring how the
+    /// raw-CSR comparison excludes the CSC arrays).
     pub fn total_bytes(&self) -> usize {
         self.payload_bytes() + self.index_bytes()
+    }
+
+    /// Bytes of the optional in-edge view: encoded in-payload, both of its
+    /// indexes, and the out-edge-id permutation.
+    pub fn in_view_bytes(&self) -> usize {
+        self.in_payload.len()
+            + self.in_edge_offsets.len() * std::mem::size_of::<SizeT>()
+            + self.in_byte_offsets.len() * std::mem::size_of::<u64>()
+            + self.in_edge_perm.len() * std::mem::size_of::<SizeT>()
     }
 
     /// Adjacency bytes per edge, including index overhead.
@@ -236,11 +354,29 @@ impl GraphRep for CompressedCsr {
         }
     }
 
+    fn for_each_neighbor_until(&self, v: VertexId, mut f: impl FnMut(usize, VertexId) -> bool) {
+        let ebase = self.edge_offsets[v as usize] as usize;
+        for (i, d) in self.decode_neighbors(v).enumerate() {
+            if !f(ebase + i, d) {
+                return; // bounded decode: stop mid-stream
+            }
+        }
+    }
+
     fn edge_dst(&self, e: usize) -> VertexId {
         let v = self.edge_owner(e);
         let pos = e - self.edge_offsets[v as usize] as usize;
         self.decode_neighbors(v).nth(pos).expect("edge id out of range")
     }
+
+    #[inline]
+    fn edge_src(&self, e: usize) -> VertexId {
+        self.edge_owner(e)
+    }
+
+    /// Edge-id random access costs a binary search + prefix decode here;
+    /// edge-centric primitives build an endpoint table once instead.
+    const O1_EDGE_ACCESS: bool = false;
 
     #[inline]
     fn weight(&self, e: usize) -> Weight {
@@ -250,6 +386,40 @@ impl GraphRep for CompressedCsr {
     #[inline]
     fn is_weighted(&self) -> bool {
         CompressedCsr::is_weighted(self)
+    }
+
+    fn contains_edge(&self, v: VertexId, u: VertexId) -> bool {
+        // Lists are sorted ascending: stop decoding at the first id > u.
+        for d in self.decode_neighbors(v) {
+            if d >= u {
+                return d == u;
+            }
+        }
+        false
+    }
+
+    #[inline]
+    fn has_in_edges(&self) -> bool {
+        self.has_in_view()
+    }
+
+    #[inline]
+    fn in_degree(&self, v: VertexId) -> usize {
+        CompressedCsr::in_degree(self, v)
+    }
+
+    fn for_each_in_neighbor_until(&self, v: VertexId, mut f: impl FnMut(VertexId) -> bool) {
+        for u in self.decode_in_neighbors(v) {
+            if !f(u) {
+                return;
+            }
+        }
+    }
+
+    fn for_each_in_neighbor(&self, v: VertexId, mut f: impl FnMut(VertexId)) {
+        for u in self.decode_in_neighbors(v) {
+            f(u);
+        }
     }
 }
 
@@ -334,6 +504,54 @@ mod tests {
         }
         let empty = CompressedCsr::from_csr(&Csr::default(), Codec::Varint);
         assert_eq!(empty.num_edges(), 0);
+    }
+
+    #[test]
+    fn in_edge_view_matches_csc() {
+        let g = sample();
+        for codec in [Codec::Varint, Codec::Zeta(2)] {
+            let cg = CompressedCsr::from_csr_with_in_edges(&g, codec);
+            assert!(cg.has_in_view());
+            assert!(GraphRep::has_in_edges(&cg));
+            for v in 0..g.num_vertices as VertexId {
+                let indeg = CompressedCsr::in_degree(&cg, v);
+                assert_eq!(indeg, g.in_neighbors(v).len(), "{codec} v={v}");
+                let got: Vec<VertexId> = cg.decode_in_neighbors(v).collect();
+                assert_eq!(got, g.in_neighbors(v), "{codec} v={v}");
+            }
+        }
+    }
+
+    #[test]
+    fn in_edge_perm_maps_to_out_edge_ids() {
+        let g = sample();
+        let cg = CompressedCsr::from_csr_with_in_edges(&g, Codec::Varint);
+        let mut seen = vec![false; g.num_edges()];
+        for v in 0..g.num_vertices as VertexId {
+            cg.for_each_in_edge(v, |eid, u| {
+                assert_eq!(g.col_indices[eid], v, "edge {eid} must point at {v}");
+                assert_eq!(g.edge_src(eid), u, "edge {eid} must start at {u}");
+                assert!(!seen[eid], "edge {eid} referenced twice");
+                seen[eid] = true;
+            });
+        }
+        assert!(seen.iter().all(|&s| s), "permutation must cover every edge id");
+    }
+
+    #[test]
+    fn in_neighbor_visit_early_exits_and_contains_edge() {
+        let g = sample();
+        let cg = CompressedCsr::from_csr_with_in_edges(&g, Codec::Zeta(3));
+        // vertex 3 has in-neighbors [1, 2]; stop after the first
+        let mut seen = Vec::new();
+        cg.for_each_in_neighbor_until(3, |u| {
+            seen.push(u);
+            false
+        });
+        assert_eq!(seen, vec![1]);
+        assert!(cg.contains_edge(0, 5));
+        assert!(!cg.contains_edge(0, 4));
+        assert!(!cg.contains_edge(5, 0)); // degree-0 vertex
     }
 
     #[test]

@@ -125,11 +125,19 @@ fn rgg_weighted(p: RggParams, weighted: bool) -> Csr {
     g
 }
 
-/// Attach the paper's uniform random [1, 64] edge weights.
-pub fn attach_uniform_weights(g: &mut Csr, seed: u64) {
+/// The paper's uniform random [1, 64] edge weights, one per global edge
+/// id. Weights are positional, so the same (num_edges, seed) pair yields
+/// identical weights for every representation of the same graph — raw CSR
+/// and compressed `.gsr` stay bit-comparable for SSSP/MST.
+pub fn uniform_weights(num_edges: usize, seed: u64) -> Vec<super::Weight> {
     use crate::util::rng::Pcg32;
     let mut rng = Pcg32::new(seed ^ 0x57e1_6475);
-    g.edge_weights = (0..g.num_edges()).map(|_| rng.weight(1, 64)).collect();
+    (0..num_edges).map(|_| rng.weight(1, 64)).collect()
+}
+
+/// Attach the paper's uniform random [1, 64] edge weights.
+pub fn attach_uniform_weights(g: &mut Csr, seed: u64) {
+    g.edge_weights = uniform_weights(g.num_edges(), seed);
 }
 
 #[cfg(test)]

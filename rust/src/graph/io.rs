@@ -3,18 +3,26 @@
 //! datasets ship in — plus the `.gsr` compressed-graph container
 //! ([`save_gsr`] / [`load_gsr`]).
 //!
-//! ## `.gsr` container (version 1, little-endian)
+//! ## `.gsr` container (version 2, little-endian)
 //!
 //! ```text
 //! magic    "GSR1"
-//! u32      version (= 1)
+//! u32      version (1 | 2)
 //! u8       codec tag (0 = varint, 1 = zeta)   u8  zeta k (0 for varint)
-//! u8       flags (bit 0: weighted)            u8  reserved
+//! u8       flags (bit 0: weighted,
+//!                 bit 1: in-edge view, v2)     u8  reserved
 //! u64      num_vertices        u64 num_edges
 //! section  degrees      (u64 byte length + one varint per vertex)
 //! section  stream sizes (u64 byte length + one varint per vertex)
 //! section  payload      (u64 byte length + encoded gap streams)
-//! section  weights      (present iff weighted; u64 length + varints)
+//! section  weights      (present iff flag bit 0; u64 length + varints)
+//! -- v2, present iff flag bit 1 ------------------------------------
+//! section  in-degrees      (u64 byte length + one varint per vertex)
+//! section  in stream sizes (u64 byte length + one varint per vertex)
+//! section  in payload      (u64 byte length + encoded CSC gap streams)
+//! section  edge permutation (u64 byte length + one varint per edge:
+//!          CSC position -> global out-edge id)
+//! ------------------------------------------------------------------
 //! u64      FNV-1a checksum of every preceding byte
 //! ```
 //!
@@ -25,7 +33,13 @@
 //! checksum, the loader validates every vertex's stream structurally
 //! (decodes to exactly its degree, in bounds, sorted, ids < n) so an
 //! internally inconsistent file from a buggy writer fails at load — a
-//! loaded graph can never panic mid-traversal.
+//! loaded graph can never panic mid-traversal. The v2 in-edge sections
+//! get the same treatment plus permutation checks: the permutation must
+//! be a bijection over edge ids, and every in-edge (u -> v) at CSC
+//! position p must map to an out-edge id inside u's edge-id range whose
+//! destination is v — so the pull and push views provably describe the
+//! same edge set before any traversal runs. Version-1 files (no in-edge
+//! sections) still load; they simply traverse push-only.
 
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::path::Path;
@@ -38,8 +52,10 @@ use super::{builder, Coo, Csr, VertexId};
 
 /// `.gsr` magic bytes.
 pub const GSR_MAGIC: &[u8; 4] = b"GSR1";
-/// Current `.gsr` container version.
-pub const GSR_VERSION: u32 = 1;
+/// Current `.gsr` container version (v2 adds the optional in-edge view).
+pub const GSR_VERSION: u32 = 2;
+/// Oldest container version the loader still accepts.
+pub const GSR_MIN_VERSION: u32 = 1;
 
 /// Read a SNAP-style edge list: lines of `src dst [weight]`, `#` comments.
 /// Vertex ids are used as-is; num_vertices = max id + 1.
@@ -179,8 +195,11 @@ fn put_u64(out: &mut Vec<u8>, x: u64) {
     out.extend_from_slice(&x.to_le_bytes());
 }
 
-/// FNV-1a 64-bit (dependency-free integrity check).
-fn fnv1a(bytes: &[u8]) -> u64 {
+/// FNV-1a 64-bit (dependency-free integrity check). Public but hidden:
+/// integration tests re-checksum hand-corrupted containers with it
+/// rather than duplicating the constants.
+#[doc(hidden)]
+pub fn fnv1a(bytes: &[u8]) -> u64 {
     let mut h = 0xcbf2_9ce4_8422_2325u64;
     for &b in bytes {
         h ^= b as u64;
@@ -260,7 +279,7 @@ pub fn save_gsr(path: &Path, g: &CompressedCsr) -> Result<()> {
     };
     buf.push(tag);
     buf.push(k);
-    buf.push(u8::from(g.is_weighted()));
+    buf.push(u8::from(g.is_weighted()) | (u8::from(g.has_in_view()) << 1));
     buf.push(0); // reserved
     put_u64(&mut buf, n as u64);
     put_u64(&mut buf, g.num_edges() as u64);
@@ -291,6 +310,32 @@ pub fn save_gsr(path: &Path, g: &CompressedCsr) -> Result<()> {
         buf.extend_from_slice(&ws);
     }
 
+    if g.has_in_view() {
+        let mut indegs = Vec::new();
+        for v in 0..n {
+            write_varint(&mut indegs, (g.in_edge_offsets[v + 1] - g.in_edge_offsets[v]) as u64);
+        }
+        put_u64(&mut buf, indegs.len() as u64);
+        buf.extend_from_slice(&indegs);
+
+        let mut inlens = Vec::new();
+        for v in 0..n {
+            write_varint(&mut inlens, g.in_byte_offsets[v + 1] - g.in_byte_offsets[v]);
+        }
+        put_u64(&mut buf, inlens.len() as u64);
+        buf.extend_from_slice(&inlens);
+
+        put_u64(&mut buf, g.in_payload.len() as u64);
+        buf.extend_from_slice(&g.in_payload);
+
+        let mut perm = Vec::new();
+        for &e in &g.in_edge_perm {
+            write_varint(&mut perm, e as u64);
+        }
+        put_u64(&mut buf, perm.len() as u64);
+        buf.extend_from_slice(&perm);
+    }
+
     let checksum = fnv1a(&buf);
     put_u64(&mut buf, checksum);
     std::fs::write(path, &buf).with_context(|| format!("write {}", path.display()))?;
@@ -315,7 +360,7 @@ pub fn load_gsr(path: &Path) -> Result<CompressedCsr> {
         bail!("{}: bad magic (not a .gsr file)", path.display());
     }
     let version = c.u32()?;
-    if version != GSR_VERSION {
+    if !(GSR_MIN_VERSION..=GSR_VERSION).contains(&version) {
         bail!("{}: unsupported .gsr version {version}", path.display());
     }
     let tag = c.u8()?;
@@ -326,7 +371,14 @@ pub fn load_gsr(path: &Path) -> Result<CompressedCsr> {
         _ => bail!("{}: unknown codec tag {tag}/{k}", path.display()),
     };
     let flags = c.u8()?;
+    if flags & !0b11 != 0 {
+        bail!("{}: unknown flag bits {flags:#04x}", path.display());
+    }
     let weighted = flags & 1 != 0;
+    let has_in_view = flags & 2 != 0;
+    if has_in_view && version < 2 {
+        bail!("{}: in-edge flag set on a version-{version} container", path.display());
+    }
     let _reserved = c.u8()?;
     let n = c.u64()? as usize;
     let m = c.u64()? as usize;
@@ -363,6 +415,46 @@ pub fn load_gsr(path: &Path) -> Result<CompressedCsr> {
     } else {
         Vec::new()
     };
+
+    let (in_edge_offsets, in_byte_offsets, in_payload, in_edge_perm) = if has_in_view {
+        let indeg_section = c.section()?;
+        let in_prefix = read_varint_prefix(indeg_section, n, "in-degree")?;
+        if in_prefix[n] != m as u64 {
+            bail!("in-degree section sums to {} but header says {m} edges", in_prefix[n]);
+        }
+        let inlen_section = c.section()?;
+        let in_byte_offsets = read_varint_prefix(inlen_section, n, "in-stream-size")?;
+        let in_payload = c.section()?.to_vec();
+        if in_byte_offsets[n] != in_payload.len() as u64 {
+            bail!(
+                "in-stream sizes sum to {} but in-payload is {} bytes",
+                in_byte_offsets[n],
+                in_payload.len()
+            );
+        }
+        let perm_section = c.section()?;
+        let mut pos = 0usize;
+        let mut perm = Vec::with_capacity(m);
+        for i in 0..m {
+            match read_varint(perm_section, &mut pos) {
+                Some(e) if e < m as u64 => perm.push(e as super::SizeT),
+                Some(e) => bail!("permutation entry {i} is {e}, out of range (m = {m})"),
+                None => bail!("truncated permutation section at entry {i}"),
+            }
+        }
+        if pos != perm_section.len() {
+            bail!("permutation section has trailing bytes");
+        }
+        (
+            in_prefix.into_iter().map(|x| x as super::SizeT).collect(),
+            in_byte_offsets,
+            in_payload,
+            perm,
+        )
+    } else {
+        (Vec::new(), Vec::new(), Vec::new(), Vec::new())
+    };
+
     if c.p != body.len() {
         bail!("{}: {} trailing bytes after last section", path.display(), body.len() - c.p);
     }
@@ -374,6 +466,10 @@ pub fn load_gsr(path: &Path) -> Result<CompressedCsr> {
         byte_offsets,
         payload,
         edge_weights,
+        in_edge_offsets,
+        in_byte_offsets,
+        in_payload,
+        in_edge_perm,
     };
 
     // The checksum only proves the file arrived as written; a buggy or
@@ -400,6 +496,64 @@ pub fn load_gsr(path: &Path) -> Result<CompressedCsr> {
                 bail!("vertex {v}: neighbor list not sorted ascending");
             }
             prev = d;
+        }
+    }
+
+    if g.has_in_view() {
+        // The in-edge view must describe the *same* edge set the out view
+        // does, under the shared edge-id space. One O(m) pass materializes
+        // each edge id's destination (the only edge-sized scratch on the
+        // load path, released before return), then every in-edge (u -> v)
+        // at CSC position p is checked against its claimed out-edge id
+        // perm[p]: the id must fall inside u's edge-id range (so the edge
+        // starts at u) and its destination must be v. Together with the
+        // bijection check this proves pull traversal visits exactly the
+        // pushed edges — never a panic or silent divergence mid-traversal.
+        let mut expected_dst = vec![0 as VertexId; m];
+        for v in 0..n as VertexId {
+            let mut e = g.edge_offsets[v as usize] as usize;
+            for d in g.decode_neighbors(v) {
+                expected_dst[e] = d;
+                e += 1;
+            }
+        }
+        let mut seen = vec![false; m];
+        for v in 0..n as VertexId {
+            let s = g.in_byte_offsets[v as usize] as usize;
+            let e = g.in_byte_offsets[v as usize + 1] as usize;
+            let indeg = g.in_degree(v);
+            if !validate_stream(codec, &g.in_payload[s..e], indeg) {
+                bail!("vertex {v}: encoded in-stream does not decode to its in-degree ({indeg})");
+            }
+            let base = g.in_edge_offsets[v as usize] as usize;
+            let mut prev = 0u64;
+            for (i, u) in g.decode_in_neighbors(v).enumerate() {
+                if u as usize >= n {
+                    bail!("vertex {v}: in-neighbor {u} out of range (n = {n})");
+                }
+                if i > 0 && (u as u64) < prev {
+                    bail!("vertex {v}: in-neighbor list not sorted ascending");
+                }
+                prev = u as u64;
+                let eid = g.in_edge_perm[base + i] as usize;
+                if seen[eid] {
+                    bail!("permutation repeats edge id {eid} (not a bijection)");
+                }
+                seen[eid] = true;
+                let lo = g.edge_offsets[u as usize] as usize;
+                let hi = g.edge_offsets[u as usize + 1] as usize;
+                if !(lo..hi).contains(&eid) {
+                    bail!(
+                        "in-edge ({u} -> {v}): permuted edge id {eid} is not one of {u}'s out-edges"
+                    );
+                }
+                if expected_dst[eid] != v {
+                    bail!(
+                        "in-edge ({u} -> {v}): permuted edge id {eid} points at {} instead",
+                        expected_dst[eid]
+                    );
+                }
+            }
         }
     }
 
@@ -505,6 +659,106 @@ mod tests {
                 std::fs::remove_file(p).ok();
             }
         }
+    }
+
+    #[test]
+    fn gsr_v2_in_edge_round_trip() {
+        let g = builder::from_edges(6, &[(0, 1), (0, 5), (1, 3), (2, 3), (4, 0), (4, 5), (5, 2)]);
+        for codec in [Codec::Varint, Codec::Zeta(2)] {
+            let cg = CompressedCsr::from_csr_with_in_edges(&g, codec);
+            let p = tmp(&format!("v2_{codec}.gsr"));
+            save_gsr(&p, &cg).unwrap();
+            let back = load_gsr(&p).unwrap();
+            assert!(back.has_in_view());
+            assert_eq!(back.in_edge_offsets, cg.in_edge_offsets);
+            assert_eq!(back.in_byte_offsets, cg.in_byte_offsets);
+            assert_eq!(back.in_payload, cg.in_payload);
+            assert_eq!(back.in_edge_perm, cg.in_edge_perm);
+            std::fs::remove_file(p).ok();
+        }
+    }
+
+    #[test]
+    fn gsr_v1_files_still_load() {
+        // A v1 file is byte-identical to a v2 file without the in-edge
+        // flag, except for the version field — rewrite it and re-checksum.
+        let g = builder::from_edges(4, &[(0, 1), (1, 2), (2, 3), (3, 0)]);
+        let cg = CompressedCsr::from_csr(&g, Codec::Varint);
+        let p = tmp("v1_compat.gsr");
+        save_gsr(&p, &cg).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        bytes[4..8].copy_from_slice(&1u32.to_le_bytes());
+        let body_len = bytes.len() - 8;
+        let ck = fnv1a(&bytes[..body_len]).to_le_bytes();
+        bytes[body_len..].copy_from_slice(&ck);
+        std::fs::write(&p, &bytes).unwrap();
+        let back = load_gsr(&p).unwrap();
+        assert!(!back.has_in_view(), "v1 containers have no in-edge view");
+        assert_eq!(back.edge_offsets, cg.edge_offsets);
+        assert_eq!(back.payload, cg.payload);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn gsr_v2_truncated_in_stream_rejected() {
+        let g = builder::from_edges(5, &[(0, 1), (1, 2), (3, 2), (4, 0)]);
+        let mut cg = CompressedCsr::from_csr_with_in_edges(&g, Codec::Varint);
+        // Chop the last in-payload byte and shrink the last non-empty
+        // stream's size to match: sizes stay consistent with the payload
+        // length, but that stream no longer decodes to its in-degree.
+        cg.in_payload.pop();
+        let old_total = cg.in_payload.len() as u64 + 1;
+        for o in cg.in_byte_offsets.iter_mut() {
+            if *o == old_total {
+                *o -= 1;
+            }
+        }
+        let p = tmp("v2_truncated_in.gsr");
+        save_gsr(&p, &cg).unwrap();
+        let err = load_gsr(&p).unwrap_err().to_string();
+        assert!(err.contains("in-"), "want an in-view error, got: {err}");
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn gsr_v2_bad_permutation_rejected() {
+        let g = builder::from_edges(5, &[(0, 1), (1, 2), (3, 2), (4, 0)]);
+        // Duplicate entry (breaks the bijection).
+        let mut cg = CompressedCsr::from_csr_with_in_edges(&g, Codec::Varint);
+        cg.in_edge_perm[1] = cg.in_edge_perm[0];
+        let p = tmp("v2_perm_dup.gsr");
+        save_gsr(&p, &cg).unwrap();
+        assert!(load_gsr(&p).is_err(), "duplicate permutation entry must fail at load");
+        std::fs::remove_file(&p).ok();
+        // Out-of-range entry.
+        let mut cg = CompressedCsr::from_csr_with_in_edges(&g, Codec::Varint);
+        cg.in_edge_perm[0] = g.num_edges() as u32;
+        let p = tmp("v2_perm_range.gsr");
+        save_gsr(&p, &cg).unwrap();
+        assert!(load_gsr(&p).is_err(), "out-of-range permutation entry must fail at load");
+        std::fs::remove_file(&p).ok();
+        // Swapped entries: still a bijection, but edges land on the wrong
+        // endpoints — the cross-validation must notice.
+        let mut cg = CompressedCsr::from_csr_with_in_edges(&g, Codec::Varint);
+        cg.in_edge_perm.swap(0, 1);
+        let p = tmp("v2_perm_swap.gsr");
+        save_gsr(&p, &cg).unwrap();
+        assert!(load_gsr(&p).is_err(), "swapped permutation entries must fail at load");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn gsr_v2_flipped_checksum_rejected() {
+        let g = builder::from_edges(4, &[(0, 1), (1, 2), (2, 3)]);
+        let cg = CompressedCsr::from_csr_with_in_edges(&g, Codec::Zeta(2));
+        let p = tmp("v2_checksum.gsr");
+        save_gsr(&p, &cg).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x01;
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(load_gsr(&p).is_err(), "flipped checksum byte must fail at load");
+        std::fs::remove_file(p).ok();
     }
 
     #[test]

@@ -47,15 +47,71 @@ pub trait GraphRep: Sync {
         self.for_neighbor_range(v, 0, usize::MAX, f);
     }
 
+    /// Visit `v`'s neighbor list as `f(edge_id, dst)` until `f` returns
+    /// false — the out-neighbor twin of
+    /// [`for_each_in_neighbor_until`](GraphRep::for_each_in_neighbor_until),
+    /// for scans that usually disqualify early (local-maximum checks,
+    /// membership tests). The default visits every neighbor and merely
+    /// stops *calling* `f`; both concrete representations override it with
+    /// a real early exit (slice break / bounded decode).
+    fn for_each_neighbor_until(&self, v: VertexId, mut f: impl FnMut(usize, VertexId) -> bool) {
+        let mut go = true;
+        self.for_each_neighbor(v, |e, d| {
+            if go {
+                go = f(e, d);
+            }
+        });
+    }
+
     /// Destination of global edge id `e`. O(1) on CSR; O(log n + deg) on
     /// compressed representations (edge-frontier expansion only — never on
     /// the per-edge hot path).
     fn edge_dst(&self, e: usize) -> VertexId;
 
+    /// Source of global edge id `e` — the binary search over the
+    /// prefix-degree index both concrete representations already carry
+    /// (O(log n) everywhere, no decode needed).
+    fn edge_src(&self, e: usize) -> VertexId;
+
+    /// Whether [`edge_dst`](GraphRep::edge_dst) is O(1). Raw CSR indexes
+    /// the column array; compressed representations pay a binary search
+    /// plus a prefix decode per call, so edge-random-access primitives
+    /// (CC hooking) materialize an endpoint table once instead of decoding
+    /// every round.
+    const O1_EDGE_ACCESS: bool = true;
+
     /// Weight of edge id `e` (1 when unweighted).
     fn weight(&self, e: usize) -> Weight;
 
     fn is_weighted(&self) -> bool;
+
+    /// Borrow `v`'s neighbor list as a sorted slice, decoding into
+    /// `scratch` when the representation has no materialized columns.
+    /// Raw CSR returns its column slice and never touches `scratch`;
+    /// compressed representations decode into it. Used by the
+    /// set-intersection operators, which need two lists at once.
+    fn neighbor_slice<'a>(&'a self, v: VertexId, scratch: &'a mut Vec<VertexId>) -> &'a [VertexId] {
+        scratch.clear();
+        self.for_neighbor_range(v, 0, usize::MAX, |_, d| scratch.push(d));
+        scratch
+    }
+
+    /// Membership test `(v -> u) ∈ E` over the sorted neighbor list.
+    /// Binary search on CSR; bounded early-exit decode on compressed
+    /// representations (lists are sorted, so the scan stops at the first
+    /// id > `u`).
+    fn contains_edge(&self, v: VertexId, u: VertexId) -> bool {
+        let mut found = false;
+        self.for_each_neighbor_until(v, |_, d| {
+            if d >= u {
+                found = d == u;
+                false
+            } else {
+                true
+            }
+        });
+        found
+    }
 
     /// The paper's LB-selection metric (§5.1.3).
     fn average_degree(&self) -> f64 {
@@ -71,11 +127,26 @@ pub trait GraphRep: Sync {
         false
     }
 
+    /// In-degree of `v` — O(1) when an in-edge view exists (it carries its
+    /// own prefix-degree index in every representation).
+    fn in_degree(&self, _v: VertexId) -> usize {
+        panic!("this graph representation has no in-edge view (has_in_edges() == false)");
+    }
+
     /// Visit in-neighbors of `v` until `f` returns false (the early exit
     /// that makes bottom-up BFS win). Only meaningful when
     /// [`has_in_edges`](GraphRep::has_in_edges) is true.
     fn for_each_in_neighbor_until(&self, _v: VertexId, _f: impl FnMut(VertexId) -> bool) {
         panic!("this graph representation has no in-edge view (has_in_edges() == false)");
+    }
+
+    /// Visit every in-neighbor of `v` (the pull-gather walk:
+    /// neighborhood-reduce over the incoming view, no early exit).
+    fn for_each_in_neighbor(&self, v: VertexId, mut f: impl FnMut(VertexId)) {
+        self.for_each_in_neighbor_until(v, |u| {
+            f(u);
+            true
+        });
     }
 }
 
@@ -114,8 +185,24 @@ impl GraphRep for super::Csr {
     }
 
     #[inline]
+    fn for_each_neighbor_until(&self, v: VertexId, mut f: impl FnMut(usize, VertexId) -> bool) {
+        let s = self.row_offsets[v as usize] as usize;
+        let e = self.row_offsets[v as usize + 1] as usize;
+        for (i, &d) in self.col_indices[s..e].iter().enumerate() {
+            if !f(s + i, d) {
+                return;
+            }
+        }
+    }
+
+    #[inline]
     fn edge_dst(&self, e: usize) -> VertexId {
         self.col_indices[e]
+    }
+
+    #[inline]
+    fn edge_src(&self, e: usize) -> VertexId {
+        super::Csr::edge_src(self, e)
     }
 
     #[inline]
@@ -129,8 +216,27 @@ impl GraphRep for super::Csr {
     }
 
     #[inline]
+    fn neighbor_slice<'a>(
+        &'a self,
+        v: VertexId,
+        _scratch: &'a mut Vec<VertexId>,
+    ) -> &'a [VertexId] {
+        self.neighbors(v)
+    }
+
+    #[inline]
+    fn contains_edge(&self, v: VertexId, u: VertexId) -> bool {
+        self.neighbors(v).binary_search(&u).is_ok()
+    }
+
+    #[inline]
     fn has_in_edges(&self) -> bool {
         self.has_csc()
+    }
+
+    #[inline]
+    fn in_degree(&self, v: VertexId) -> usize {
+        super::Csr::in_degree(self, v)
     }
 
     #[inline]
@@ -139,6 +245,13 @@ impl GraphRep for super::Csr {
             if !f(u) {
                 return;
             }
+        }
+    }
+
+    #[inline]
+    fn for_each_in_neighbor(&self, v: VertexId, mut f: impl FnMut(VertexId)) {
+        for &u in self.in_neighbors(v) {
+            f(u);
         }
     }
 }
@@ -177,6 +290,29 @@ mod tests {
         got.clear();
         g.for_neighbor_range(0, 2, 5, |_, d| got.push(d));
         assert!(got.is_empty());
+    }
+
+    #[test]
+    fn neighbor_visit_until_early_exits() {
+        let g = sample();
+        let mut seen = Vec::new();
+        g.for_each_neighbor_until(0, |e, d| {
+            seen.push((e, d));
+            false // stop after the first
+        });
+        assert_eq!(seen, vec![(0, 1)]);
+    }
+
+    #[test]
+    fn neighbor_slice_and_contains_edge() {
+        let g = sample();
+        let mut scratch = Vec::new();
+        assert_eq!(g.neighbor_slice(0, &mut scratch), &[1, 2]);
+        assert!(scratch.is_empty(), "CSR must not touch the scratch buffer");
+        assert!(GraphRep::contains_edge(&g, 0, 2));
+        assert!(!GraphRep::contains_edge(&g, 0, 3));
+        assert_eq!(GraphRep::edge_src(&g, 2), 1);
+        assert_eq!(GraphRep::in_degree(&g, 3), 2);
     }
 
     #[test]

@@ -165,7 +165,7 @@ pub fn expand_input_balanced<G: GraphRep, F: EdgeVisit>(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::graph::builder;
+    use crate::graph::{builder, Csr};
     use crate::util::rng::Pcg32;
 
     fn random_graph(n: u32, seed: u64) -> Csr {

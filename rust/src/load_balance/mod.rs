@@ -139,7 +139,7 @@ pub fn expand<G: GraphRep, F: EdgeVisit>(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::graph::builder;
+    use crate::graph::{builder, Csr};
 
     fn star() -> Csr {
         // hub 0 -> 1..=8, plus a few leaf->leaf edges

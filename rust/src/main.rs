@@ -20,14 +20,16 @@
 
 use anyhow::{bail, Context, Result};
 
-use gunrock::graph::compressed::{raw_csr_bytes, Codec, CompressedCsr};
 use gunrock::config::{cli, Config};
-use gunrock::graph::{datasets, io, properties};
+use gunrock::graph::compressed::{raw_csr_bytes, Codec, CompressedCsr};
+use gunrock::graph::{datasets, io, properties, GraphRep};
 use gunrock::harness::{self, suite};
-use gunrock::primitives::{bfs, cc, color, label_propagation, mst, pagerank, sssp, tc, traversal_extras, wtf};
+use gunrock::primitives::{
+    bfs, cc, color, label_propagation, mst, pagerank, sssp, tc, traversal_extras, wtf,
+};
 
 const BOOL_FLAGS: &[&str] =
-    &["direction-optimized", "idempotence", "weighted", "undirected", "pull"];
+    &["direction-optimized", "idempotence", "weighted", "undirected", "pull", "no-in-edges"];
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -45,9 +47,10 @@ fn usage() {
          \n\
          SUBCOMMANDS\n\
            run <bfs|sssp|bc|pagerank|cc|tc|wtf|mst|color|mis|lp|radii>\n\
-                                                  run a primitive (BFS/PageRank run\n\
-                                                  .gsr graphs without decompressing)\n\
-           convert                                compress to .gsr (--out, --codec)\n\
+                                                  run a primitive (every primitive\n\
+                                                  traverses .gsr compressed-natively)\n\
+           convert                                compress to .gsr (--out, --codec;\n\
+                                                  in-edge view by default)\n\
            stats                                  bits/edge per codec for a graph\n\
            offload <pagerank|bfs>                 run through the AOT XLA artifact\n\
            info                                   dataset topology properties\n\
@@ -58,6 +61,7 @@ fn usage() {
            --dataset <name>      paper dataset analog (see `gunrock datasets`)\n\
            --graph <path>        load .mtx, .gsr, or edge-list file instead\n\
            --codec <c>           .gsr gap codec: varint (default) | zeta1..zeta8\n\
+           --no-in-edges          convert: skip the .gsr v2 in-edge section\n\
            --out <path>          output path (convert, generate)\n\
            --config <path>       TOML config file\n\
            --threads <n>         worker threads (default: all cores)\n\
@@ -66,6 +70,7 @@ fn usage() {
            --src <v>             source vertex (default: max-degree vertex)\n\
            --direction-optimized  enable push/pull switching (BFS)\n\
            --idempotence          enable idempotent advance (BFS)\n\
+           --pull                 pagerank: pull-mode gather (needs in-edge view)\n\
            --do-a <f> --do-b <f>  direction heuristic parameters\n\
            --delta <n>            SSSP near/far delta (0 = Bellman-Ford)\n"
     );
@@ -106,18 +111,33 @@ fn build_config(p: &cli::ParsedArgs) -> Result<Config> {
     Ok(cfg)
 }
 
+/// SSSP/MST need weights. When the source (file, dataset analog — some,
+/// like the WTF follow graphs, ignore the `weighted` request — or `.gsr`
+/// container) provides none, attach the deterministic positional array:
+/// one seed, one code path, so every representation of the same graph
+/// gets the identical weights and runs stay bit-comparable across them.
+fn ensure_uniform_weights(
+    weights: &mut Vec<gunrock::graph::Weight>,
+    num_edges: usize,
+    weighted: bool,
+) {
+    if weighted && weights.is_empty() {
+        *weights = datasets::uniform_weights(num_edges, 42);
+    }
+}
+
 fn load_graph(p: &cli::ParsedArgs, weighted: bool) -> Result<(String, gunrock::graph::Csr)> {
-    if let Some(path) = p.get("graph") {
+    let (name, mut g) = if let Some(path) = p.get("graph") {
         let g = io::load_graph(std::path::Path::new(path), p.get_bool("undirected"))?;
-        let mut g = g;
-        if weighted && !g.is_weighted() {
-            datasets::attach_uniform_weights(&mut g, 42);
-        }
-        Ok((path.to_string(), g))
+        (path.to_string(), g)
     } else {
         let name = p.get_or("dataset", "rmat_s22_e64").to_string();
-        Ok((name.clone(), datasets::load(&name, weighted)))
-    }
+        let g = datasets::load(&name, weighted);
+        (name, g)
+    };
+    let m = g.num_edges();
+    ensure_uniform_weights(&mut g.edge_weights, m, weighted);
+    Ok((name, g))
 }
 
 fn run(args: &[String]) -> Result<()> {
@@ -165,17 +185,33 @@ fn run(args: &[String]) -> Result<()> {
             let out = p.get("out").context("--out <path.gsr> required")?;
             let codec: Codec =
                 p.get_or("codec", "varint").parse().map_err(anyhow::Error::msg)?;
-            let cg = CompressedCsr::from_csr(&g, codec);
+            // The in-edge view is on by default: it is what lets
+            // direction-optimized BFS and pull PageRank traverse the
+            // container compressed-natively. --no-in-edges writes the
+            // leaner push-only layout.
+            let cg = if p.get_bool("no-in-edges") {
+                CompressedCsr::from_csr(&g, codec)
+            } else {
+                CompressedCsr::from_csr_with_in_edges(&g, codec)
+            };
             io::save_gsr(std::path::Path::new(out), &cg)?;
             let raw = raw_csr_bytes(g.num_vertices, g.num_edges());
             println!(
                 "wrote {name} ({} vertices, {} edges, {codec}) to {out}\n  \
-                 adjacency: {:.2} B/edge compressed vs {:.2} B/edge raw CSR ({:.0}%)",
+                 adjacency: {:.2} B/edge compressed vs {:.2} B/edge raw CSR ({:.0}%){}",
                 g.num_vertices,
                 g.num_edges(),
                 cg.bytes_per_edge(),
                 raw as f64 / g.num_edges().max(1) as f64,
                 100.0 * cg.total_bytes() as f64 / raw.max(1) as f64,
+                if cg.has_in_view() {
+                    format!(
+                        "\n  in-edge view: {:.2} B/edge (pull/direction-optimized traversal)",
+                        cg.in_view_bytes() as f64 / g.num_edges().max(1) as f64
+                    )
+                } else {
+                    String::new()
+                },
             );
             Ok(())
         }
@@ -214,120 +250,41 @@ fn run(args: &[String]) -> Result<()> {
         Some("run") => {
             let prim = p.positionals.first().context("run <primitive>")?.clone();
             let cfg = build_config(&p)?;
-            // Compressed-native path: BFS and PageRank traverse a .gsr
-            // payload directly (decode-on-advance, no CSR expansion).
-            if let Some(path) = p.get("graph") {
-                if path.ends_with(".gsr") && matches!(prim.as_str(), "bfs" | "pagerank" | "pr") {
-                    let cg = io::load_gsr(std::path::Path::new(path))?;
+            let weighted = matches!(prim.as_str(), "sssp" | "mst");
+            // Every primitive is generic over GraphRep: a `.gsr` graph is
+            // traversed compressed-natively (decode-on-advance, no
+            // decompress-to-CSR fallback), anything else goes through raw
+            // CSR. The two arms call the same generic runner.
+            match p.get("graph") {
+                Some(path) if path.ends_with(".gsr") => {
+                    let mut cg = io::load_gsr(std::path::Path::new(path))?;
+                    let m = cg.num_edges();
+                    ensure_uniform_weights(&mut cg.edge_weights, m, weighted);
                     println!(
-                        "{} on {path} [compressed {}, {:.2} B/edge]: {} vertices, {} edges, {} threads",
+                        "{} on {path} [compressed {}, {:.2} B/edge{}]: \
+                         {} vertices, {} edges, {} threads",
                         prim,
                         cg.codec,
                         cg.bytes_per_edge(),
+                        if cg.has_in_view() { ", in-edge view" } else { ", push-only" },
                         cg.num_vertices,
                         cg.num_edges(),
                         cfg.effective_threads()
                     );
-                    match prim.as_str() {
-                        "bfs" => {
-                            if cfg.direction_optimized {
-                                eprintln!(
-                                    "warning: --direction-optimized ignored: compressed graphs \
-                                     have no in-edge view yet, traversing push-only"
-                                );
-                            }
-                            let src =
-                                p.get_parse::<u32>("src")?.unwrap_or_else(|| suite::pick_source(&cg));
-                            let (prob, st) = bfs::bfs(&cg, src, &cfg);
-                            let reached =
-                                prob.labels.iter().filter(|&&d| d != bfs::INFINITY_DEPTH).count();
-                            report(&st.result, &format!(
-                                "src={src} reached={reached} push_iters={} pull_iters={}",
-                                st.push_iterations, st.pull_iterations
-                            ));
-                        }
-                        _ => {
-                            let (prob, r) = pagerank::pagerank(&cg, &cfg);
-                            let top: Vec<usize> = top_k(&prob.ranks, 5);
-                            report(&r, &format!("iters={} top5={top:?}", prob.iterations));
-                        }
-                    }
-                    return Ok(());
+                    run_primitive(&prim, &cg, &cfg, &p)
+                }
+                _ => {
+                    let (name, g) = load_graph(&p, weighted)?;
+                    println!(
+                        "{} on {name}: {} vertices, {} edges, {} threads",
+                        prim,
+                        g.num_vertices,
+                        g.num_edges(),
+                        cfg.effective_threads()
+                    );
+                    run_primitive(&prim, &g, &cfg, &p)
                 }
             }
-            let weighted = matches!(prim.as_str(), "sssp" | "mst");
-            let (name, g) = load_graph(&p, weighted)?;
-            let src = p.get_parse::<u32>("src")?.unwrap_or_else(|| suite::pick_source(&g));
-            println!(
-                "{} on {name}: {} vertices, {} edges, {} threads",
-                prim, g.num_vertices, g.num_edges(), cfg.effective_threads()
-            );
-            match prim.as_str() {
-                "bfs" => {
-                    let (prob, st) = bfs::bfs(&g, src, &cfg);
-                    let reached = prob.labels.iter().filter(|&&d| d != bfs::INFINITY_DEPTH).count();
-                    report(&st.result, &format!(
-                        "src={src} reached={reached} depth_max={} push_iters={} pull_iters={}",
-                        prob.labels.iter().filter(|&&d| d != bfs::INFINITY_DEPTH).max().unwrap_or(&0),
-                        st.push_iterations, st.pull_iterations
-                    ));
-                }
-                "sssp" => {
-                    let (prob, r) = sssp::sssp(&g, src, &cfg);
-                    let reached = prob.dist.iter().filter(|&&d| d < sssp::INFINITY_DIST).count();
-                    report(&r, &format!("src={src} reached={reached}"));
-                }
-                "bc" => {
-                    let (_, r) = gunrock::primitives::bc::bc_from_source(&g, src, &cfg);
-                    report(&r, &format!("src={src}"));
-                }
-                "pagerank" | "pr" => {
-                    let (prob, r) = pagerank::pagerank(&g, &cfg);
-                    let top: Vec<usize> = top_k(&prob.ranks, 5);
-                    report(&r, &format!("iters={} top5={top:?}", prob.iterations));
-                }
-                "cc" => {
-                    let (prob, r) = cc::cc(&g, &cfg);
-                    report(&r, &format!("components={}", prob.num_components));
-                }
-                "tc" => {
-                    let (res, r) = tc::tc_intersect_filtered(&g, &cfg);
-                    report(&r, &format!("triangles={}", res.triangles));
-                }
-                "wtf" => {
-                    let (res, r) = wtf::wtf(&g, src, 100, 10, &cfg);
-                    report(&r, &format!(
-                        "user={src} recs={:?} (ppr {:.2}ms, cot {:.2}ms, money {:.2}ms)",
-                        res.recommendations, res.ppr_ms, res.cot_ms, res.money_ms
-                    ));
-                }
-                "mst" => {
-                    let mut gw = g.clone();
-                    if !gw.is_weighted() {
-                        datasets::attach_uniform_weights(&mut gw, cfg.seed);
-                    }
-                    let (res, r) = mst::mst(&gw, &cfg);
-                    report(&r, &format!("forest_edges={} weight={}", res.tree_edges.len(), res.total_weight));
-                }
-                "color" => {
-                    let (res, r) = color::color(&g, &cfg);
-                    report(&r, &format!("colors={}", res.num_colors));
-                }
-                "mis" => {
-                    let (in_mis, r) = color::mis(&g, &cfg);
-                    report(&r, &format!("independent={}", in_mis.iter().filter(|&&b| b).count()));
-                }
-                "lp" | "label-propagation" => {
-                    let (res, r) = label_propagation::label_propagation(&g, &cfg);
-                    report(&r, &format!("communities={} iters={}", res.num_communities, res.iterations));
-                }
-                "radii" => {
-                    let (radius, eccs) = traversal_extras::estimate_radius(&g, 8, &cfg, cfg.seed);
-                    println!("  pseudo-radius {radius} from samples {eccs:?}");
-                }
-                other => bail!("unknown primitive {other}"),
-            }
-            Ok(())
         }
         Some("offload") => {
             let what = p.positionals.first().context("offload <pagerank|bfs>")?.clone();
@@ -367,6 +324,110 @@ fn run(args: &[String]) -> Result<()> {
             bail!("unknown subcommand {other}");
         }
     }
+}
+
+/// Run one primitive over any graph representation (raw CSR or the
+/// compressed `.gsr` payload) — the whole suite is generic over
+/// [`GraphRep`], so there is no per-representation dispatch below this
+/// point.
+fn run_primitive<G: GraphRep>(
+    prim: &str,
+    g: &G,
+    cfg: &Config,
+    p: &cli::ParsedArgs,
+) -> Result<()> {
+    let src = match p.get_parse::<u32>("src")? {
+        Some(s) => s,
+        None => suite::pick_source(g),
+    };
+    match prim {
+        "bfs" => {
+            if cfg.direction_optimized && !g.has_in_edges() {
+                eprintln!(
+                    "warning: --direction-optimized ignored: this graph has no in-edge \
+                     view (re-convert with in-edges for pull traversal), traversing push-only"
+                );
+            }
+            let (prob, st) = bfs::bfs(g, src, cfg);
+            let reached = prob.labels.iter().filter(|&&d| d != bfs::INFINITY_DEPTH).count();
+            report(
+                &st.result,
+                &format!(
+                    "src={src} reached={reached} depth_max={} push_iters={} pull_iters={}",
+                    prob.labels.iter().filter(|&&d| d != bfs::INFINITY_DEPTH).max().unwrap_or(&0),
+                    st.push_iterations,
+                    st.pull_iterations
+                ),
+            );
+        }
+        "sssp" => {
+            let (prob, r) = sssp::sssp(g, src, cfg);
+            let reached = prob.dist.iter().filter(|&&d| d < sssp::INFINITY_DIST).count();
+            report(&r, &format!("src={src} reached={reached}"));
+        }
+        "bc" => {
+            let (_, r) = gunrock::primitives::bc::bc_from_source(g, src, cfg);
+            report(&r, &format!("src={src}"));
+        }
+        "pagerank" | "pr" => {
+            if p.get_bool("pull") {
+                if !g.has_in_edges() {
+                    bail!("--pull requires an in-edge view (re-convert with in-edges)");
+                }
+                let (prob, r) = pagerank::pagerank_pull(g, cfg);
+                let top: Vec<usize> = top_k(&prob.ranks, 5);
+                report(&r, &format!("mode=pull iters={} top5={top:?}", prob.iterations));
+            } else {
+                let (prob, r) = pagerank::pagerank(g, cfg);
+                let top: Vec<usize> = top_k(&prob.ranks, 5);
+                report(&r, &format!("iters={} top5={top:?}", prob.iterations));
+            }
+        }
+        "cc" => {
+            let (prob, r) = cc::cc(g, cfg);
+            report(&r, &format!("components={}", prob.num_components));
+        }
+        "tc" => {
+            let (res, r) = tc::tc_intersect_filtered(g, cfg);
+            report(&r, &format!("triangles={}", res.triangles));
+        }
+        "wtf" => {
+            let (res, r) = wtf::wtf(g, src, 100, 10, cfg);
+            report(
+                &r,
+                &format!(
+                    "user={src} recs={:?} (ppr {:.2}ms, cot {:.2}ms, money {:.2}ms)",
+                    res.recommendations, res.ppr_ms, res.cot_ms, res.money_ms
+                ),
+            );
+        }
+        "mst" => {
+            // The loaders attach uniform weights for mst up front.
+            let (res, r) = mst::mst(g, cfg);
+            report(
+                &r,
+                &format!("forest_edges={} weight={}", res.tree_edges.len(), res.total_weight),
+            );
+        }
+        "color" => {
+            let (res, r) = color::color(g, cfg);
+            report(&r, &format!("colors={}", res.num_colors));
+        }
+        "mis" => {
+            let (in_mis, r) = color::mis(g, cfg);
+            report(&r, &format!("independent={}", in_mis.iter().filter(|&&b| b).count()));
+        }
+        "lp" | "label-propagation" => {
+            let (res, r) = label_propagation::label_propagation(g, cfg);
+            report(&r, &format!("communities={} iters={}", res.num_communities, res.iterations));
+        }
+        "radii" => {
+            let (radius, eccs) = traversal_extras::estimate_radius(g, 8, cfg, cfg.seed);
+            println!("  pseudo-radius {radius} from samples {eccs:?}");
+        }
+        other => bail!("unknown primitive {other}"),
+    }
+    Ok(())
 }
 
 fn top_k(xs: &[f64], k: usize) -> Vec<usize> {

@@ -10,7 +10,7 @@
 //! iteration performs no output allocation; the out-neighborhood variant
 //! is generic over the graph representation ([`GraphRep`]).
 
-use crate::graph::{Csr, GraphRep, VertexId};
+use crate::graph::{GraphRep, VertexId};
 use crate::operators::OpContext;
 use crate::util::par;
 
@@ -74,22 +74,25 @@ where
     out
 }
 
-/// In-neighborhood variant (pull gather over the CSC view), writing one
-/// value per input item into `out`.
-pub fn in_neighborhood_reduce_into<T, M, C>(
+/// In-neighborhood variant (pull gather over the incoming view — CSC on
+/// raw CSR, the compressed in-edge streams on `.gsr` graphs), writing one
+/// value per input item into `out`. Generic over the representation; the
+/// graph must carry an in-edge view ([`GraphRep::has_in_edges`]).
+pub fn in_neighborhood_reduce_into<G, T, M, C>(
     ctx: &OpContext,
-    g: &Csr,
+    g: &G,
     items: &[VertexId],
     identity: T,
     map: M,
     combine: C,
     out: &mut Vec<T>,
 ) where
+    G: GraphRep,
     T: Send + Sync + Clone,
     M: Fn(VertexId, VertexId) -> T + Sync, // (dst, in_neighbor)
     C: Fn(T, T) -> T + Sync,
 {
-    assert!(g.has_csc());
+    assert!(g.has_in_edges(), "in-neighborhood reduce requires an in-edge view");
     ctx.counters.add_kernel_launch();
     out.clear();
     out.resize(items.len(), identity.clone());
@@ -98,13 +101,15 @@ pub fn in_neighborhood_reduce_into<T, M, C>(
     par::run_partitioned(items.len(), ctx.workers, |_, s, e| {
         let mut edges = 0u64;
         for (i, &v) in items[s..e].iter().enumerate() {
-            let mut acc = identity.clone();
-            for &u in g.in_neighbors(v) {
-                acc = combine(acc, map(v, u));
-            }
+            // Option dance: `combine` takes the accumulator by value, and
+            // a captured variable cannot be moved out of an FnMut closure.
+            let mut acc = Some(identity.clone());
+            g.for_each_in_neighbor(v, |u| {
+                acc = Some(combine(acc.take().unwrap(), map(v, u)));
+            });
             edges += g.in_degree(v) as u64;
             // SAFETY: slot s+i belongs to this worker's exclusive range.
-            unsafe { slots.set(s + i, acc) };
+            unsafe { slots.set(s + i, acc.unwrap()) };
         }
         ctx.counters.add_edges(edges);
         ctx.counters.record_run(edges as usize);
@@ -112,15 +117,16 @@ pub fn in_neighborhood_reduce_into<T, M, C>(
 }
 
 /// In-neighborhood reduce (allocating wrapper).
-pub fn in_neighborhood_reduce<T, M, C>(
+pub fn in_neighborhood_reduce<G, T, M, C>(
     ctx: &OpContext,
-    g: &Csr,
+    g: &G,
     items: &[VertexId],
     identity: T,
     map: M,
     combine: C,
 ) -> Vec<T>
 where
+    G: GraphRep,
     T: Send + Sync + Clone,
     M: Fn(VertexId, VertexId) -> T + Sync,
     C: Fn(T, T) -> T + Sync,
@@ -178,6 +184,19 @@ mod tests {
         neighborhood_reduce_into(&ctx, &g, &items, 0u32, |_, n, _| n + 1, |a, b| a + b, &mut out);
         assert_eq!(out, want);
         assert_eq!(out.capacity(), cap, "warm buffer must not grow");
+    }
+
+    #[test]
+    fn in_reduce_over_compressed_matches_csr() {
+        use crate::graph::{Codec, CompressedCsr};
+        let g = builder::from_edges(5, &[(0, 2), (1, 2), (3, 2), (2, 4), (4, 0)]);
+        let cg = CompressedCsr::from_csr_with_in_edges(&g, Codec::Zeta(2));
+        let items: Vec<u32> = (0..5).collect();
+        let c = WarpCounters::new();
+        let ctx = OpContext::new(2, &c);
+        let a = in_neighborhood_reduce(&ctx, &g, &items, 0u32, |_, u| u + 1, |x, y| x + y);
+        let b = in_neighborhood_reduce(&ctx, &cg, &items, 0u32, |_, u| u + 1, |x, y| x + y);
+        assert_eq!(a, b);
     }
 
     #[test]

@@ -10,7 +10,7 @@
 //! **SmallLarge** (binary-search each small element in the large list).
 //! Both-large pairs currently use SmallLarge, as in the paper.
 
-use crate::graph::{Csr, VertexId};
+use crate::graph::{GraphRep, VertexId};
 use crate::operators::OpContext;
 use crate::util::par;
 
@@ -67,10 +67,13 @@ pub fn intersect_binary(
     n
 }
 
-/// Segmented intersection over explicit pairs.
-pub fn segmented_intersect(
+/// Segmented intersection over explicit pairs. Generic over the graph
+/// representation: raw CSR borrows its column slices; compressed graphs
+/// decode each pair's lists into per-worker scratch buffers
+/// ([`GraphRep::neighbor_slice`]) that live for the whole chunk.
+pub fn segmented_intersect<G: GraphRep>(
     ctx: &OpContext,
-    g: &Csr,
+    g: &G,
     pairs: &[(VertexId, VertexId)],
     collect_ids: bool,
 ) -> IntersectionResult {
@@ -80,8 +83,11 @@ pub fn segmented_intersect(
         let mut counts = Vec::with_capacity(e - s);
         let mut ids = Vec::new();
         let mut work = 0u64;
+        let mut scratch_u = Vec::new();
+        let mut scratch_v = Vec::new();
         for &(u, v) in &pairs[s..e] {
-            let (nu, nv) = (g.neighbors(u), g.neighbors(v));
+            let nu = g.neighbor_slice(u, &mut scratch_u);
+            let nv = g.neighbor_slice(v, &mut scratch_v);
             let (small, large) = if nu.len() <= nv.len() { (nu, nv) } else { (nv, nu) };
             let c = if large.len() <= SMALL_LIST_MAX {
                 work += (small.len() + large.len()) as u64;
@@ -126,9 +132,9 @@ pub fn segmented_intersect(
 /// Segmented intersection over an edge frontier: each edge id (u, v) is a
 /// pair (the paper's "if the input is an edge frontier, we treat each
 /// edge's two nodes as an input item pair").
-pub fn segmented_intersect_edges(
+pub fn segmented_intersect_edges<G: GraphRep>(
     ctx: &OpContext,
-    g: &Csr,
+    g: &G,
     edge_ids: &[VertexId],
     collect_ids: bool,
 ) -> IntersectionResult {
@@ -203,6 +209,25 @@ mod tests {
         // neighbor
         assert!(r.counts.iter().all(|&c| c == 1));
         assert_eq!(r.total, g.num_edges() as u64);
+    }
+
+    #[test]
+    fn compressed_representation_matches_csr() {
+        use crate::graph::{Codec, CompressedCsr};
+        let g = builder::undirected_from_edges(
+            6,
+            &[(0, 1), (0, 2), (1, 2), (1, 3), (2, 4), (3, 4), (4, 5)],
+        );
+        let cg = CompressedCsr::from_csr(&g, Codec::Zeta(2));
+        let pairs = vec![(0u32, 1u32), (1, 2), (3, 4), (0, 5)];
+        let c = WarpCounters::new();
+        let ctx = OpContext::new(2, &c);
+        let want = segmented_intersect(&ctx, &g, &pairs, true);
+        let got = segmented_intersect(&ctx, &cg, &pairs, true);
+        assert_eq!(got.counts, want.counts);
+        assert_eq!(got.total, want.total);
+        assert_eq!(got.ids, want.ids);
+        assert_eq!(got.offsets, want.offsets);
     }
 
     #[test]

@@ -9,7 +9,7 @@ use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 use crate::config::Config;
 use crate::enactor::{Enactor, RunResult};
 use crate::frontier::Frontier;
-use crate::graph::{Csr, VertexId};
+use crate::graph::{GraphRep, VertexId};
 use crate::operators::advance;
 use crate::util::bitset::AtomicBitset;
 use crate::util::timer::Timer;
@@ -36,8 +36,13 @@ fn atomic_add_f64(slot: &AtomicU64, add: f64) {
 
 /// Single-source BC contribution (run over many sources and sum for full
 /// BC; the benches use a sampled set of sources like McLaughlin-Bader).
-pub fn bc_from_source(g: &Csr, src: VertexId, config: &Config) -> (BcProblem, RunResult) {
-    let n = g.num_vertices;
+/// Generic over the graph representation (both phases are plain advances).
+pub fn bc_from_source<G: GraphRep>(
+    g: &G,
+    src: VertexId,
+    config: &Config,
+) -> (BcProblem, RunResult) {
+    let n = g.num_vertices();
     let mut enactor = Enactor::new(config.clone());
     enactor.begin_run();
 
@@ -137,8 +142,12 @@ pub fn bc_from_source(g: &Csr, src: VertexId, config: &Config) -> (BcProblem, Ru
 
 /// Multi-source (sampled) BC: sums per-source dependencies. `sources =
 /// None` runs all vertices (exact BC, small graphs only).
-pub fn bc(g: &Csr, sources: Option<&[VertexId]>, config: &Config) -> (Vec<f64>, RunResult) {
-    let n = g.num_vertices;
+pub fn bc<G: GraphRep>(
+    g: &G,
+    sources: Option<&[VertexId]>,
+    config: &Config,
+) -> (Vec<f64>, RunResult) {
+    let n = g.num_vertices();
     let all: Vec<VertexId>;
     let srcs = match sources {
         Some(s) => s,

@@ -16,8 +16,9 @@ use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
 use crate::config::Config;
 use crate::enactor::{Enactor, RunResult};
 use crate::frontier::Frontier;
-use crate::graph::{Csr, VertexId};
+use crate::graph::{GraphRep, VertexId};
 use crate::operators::{compute, filter};
+use crate::util::par;
 use crate::util::timer::Timer;
 
 pub struct CcProblem {
@@ -25,11 +26,52 @@ pub struct CcProblem {
     pub num_components: usize,
 }
 
-pub fn cc(g: &Csr, config: &Config) -> (CcProblem, RunResult) {
-    let n = g.num_vertices;
+/// Generic over the graph representation. Hooking random-accesses edge
+/// endpoints by id every round; raw CSR answers that in O(1) from its
+/// arrays, while a compressed representation would pay a binary search
+/// plus a prefix decode *per edge per round* — so for non-O(1)
+/// representations the endpoints are materialized once up front with a
+/// single streaming decode (working-set cost: two edge-sized arrays,
+/// amortized over every hooking round).
+pub fn cc<G: GraphRep>(g: &G, config: &Config) -> (CcProblem, RunResult) {
+    let n = g.num_vertices();
     let m = g.num_edges();
     let mut enactor = Enactor::new(config.clone());
     enactor.begin_run();
+
+    let table: Option<(Vec<VertexId>, Vec<VertexId>)> = if G::O1_EDGE_ACCESS {
+        None
+    } else {
+        // One streaming decode of the whole graph, on the worker pool:
+        // vertex ranges partition the edge-id space into disjoint slots,
+        // so per-worker writes need no synchronization (same pattern as
+        // neighborhood_reduce's exclusive output slots).
+        let mut srcs = vec![0 as VertexId; m];
+        let mut dsts = vec![0 as VertexId; m];
+        let src_slots = par::Slots::new(srcs.as_mut_slice());
+        let dst_slots = par::Slots::new(dsts.as_mut_slice());
+        let (src_slots, dst_slots) = (&src_slots, &dst_slots);
+        par::run_partitioned(n, enactor.workers, |_, s, e| {
+            for v in s..e {
+                let v = v as VertexId;
+                g.for_each_neighbor(v, |eid, d| {
+                    // SAFETY: edge id ranges of vertices s..e are disjoint
+                    // from every other worker's; each slot written once.
+                    unsafe {
+                        src_slots.set(eid, v);
+                        dst_slots.set(eid, d);
+                    }
+                });
+            }
+        });
+        Some((srcs, dsts))
+    };
+    let endpoints = |eid: usize| -> (VertexId, VertexId) {
+        match &table {
+            Some((srcs, dsts)) => (srcs[eid], dsts[eid]),
+            None => (g.edge_src(eid), g.edge_dst(eid)),
+        }
+    };
 
     let comp: Vec<AtomicU32> = (0..n).map(|v| AtomicU32::new(v as u32)).collect();
     let mut edge_frontier = Frontier::all_edges(m);
@@ -47,7 +89,7 @@ pub fn cc(g: &Csr, config: &Config) -> (CcProblem, RunResult) {
             let counters = &enactor.counters;
             let hook = |e: VertexId| {
                 let eid = e as usize;
-                let (s, d) = (g.edge_src(eid), g.edge_dst(eid));
+                let (s, d) = endpoints(eid);
                 let cs = comp[s as usize].load(Ordering::Relaxed);
                 let cd = comp[d as usize].load(Ordering::Relaxed);
                 counters.add_edges(1);
@@ -87,9 +129,9 @@ pub fn cc(g: &Csr, config: &Config) -> (CcProblem, RunResult) {
         {
             let ctx = enactor.ctx();
             let keep = |e: VertexId| {
-                let eid = e as usize;
-                let cs = comp[g.edge_src(eid) as usize].load(Ordering::Relaxed);
-                let cd = comp[g.edge_dst(eid) as usize].load(Ordering::Relaxed);
+                let (s, d) = endpoints(e as usize);
+                let cs = comp[s as usize].load(Ordering::Relaxed);
+                let cd = comp[d as usize].load(Ordering::Relaxed);
                 cs != cd
             };
             edge_frontier = filter::filter(&ctx, &edge_frontier, &keep);

@@ -9,7 +9,7 @@ use std::sync::atomic::{AtomicU32, Ordering};
 use crate::config::Config;
 use crate::enactor::{Enactor, RunResult};
 use crate::frontier::Frontier;
-use crate::graph::{Csr, VertexId};
+use crate::graph::{GraphRep, VertexId};
 use crate::operators::filter;
 use crate::util::rng::Pcg32;
 use crate::util::timer::Timer;
@@ -21,9 +21,10 @@ pub struct ColoringResult {
     pub num_colors: usize,
 }
 
-/// Jones-Plassmann greedy coloring over undirected graphs.
-pub fn color(g: &Csr, config: &Config) -> (ColoringResult, RunResult) {
-    let n = g.num_vertices;
+/// Jones-Plassmann greedy coloring over undirected graphs. Generic over
+/// the graph representation (neighborhood scans decode on the fly).
+pub fn color<G: GraphRep>(g: &G, config: &Config) -> (ColoringResult, RunResult) {
+    let n = g.num_vertices();
     let mut enactor = Enactor::new(config.clone());
     enactor.begin_run();
 
@@ -39,26 +40,31 @@ pub fn color(g: &Csr, config: &Config) -> (ColoringResult, RunResult) {
         let ctx = enactor.ctx();
         let counters = &enactor.counters;
 
-        // Local maxima among uncolored neighbors claim a color.
+        // Local maxima among uncolored neighbors claim a color. One
+        // early-exiting pass both tests the maximum and gathers the
+        // colors already used around v — a disqualifying neighbor stops
+        // the scan (and, on compressed graphs, the decode) immediately.
         let claim = |v: VertexId| -> bool {
             let pv = prio[v as usize];
             counters.add_edges(g.degree(v) as u64);
-            let is_max = g
-                .neighbors(v)
-                .iter()
-                .all(|&u| colors[u as usize].load(Ordering::Relaxed) != UNCOLORED || prio[u as usize] < pv);
+            let mut is_max = true;
+            let mut used: Vec<u32> = Vec::new();
+            g.for_each_neighbor_until(v, |_, u| {
+                let c = colors[u as usize].load(Ordering::Relaxed);
+                if c == UNCOLORED {
+                    if prio[u as usize] >= pv {
+                        is_max = false;
+                        return false; // disqualified: stop scanning
+                    }
+                } else {
+                    used.push(c);
+                }
+                true
+            });
             if !is_max {
                 return true; // stay in the frontier
             }
             // smallest color unused by colored neighbors
-            let mut used: Vec<u32> =
-                g.neighbors(v)
-                    .iter()
-                    .filter_map(|&u| {
-                        let c = colors[u as usize].load(Ordering::Relaxed);
-                        (c != UNCOLORED).then_some(c)
-                    })
-                    .collect();
             used.sort_unstable();
             used.dedup();
             let mut c = 0u32;
@@ -83,8 +89,8 @@ pub fn color(g: &Csr, config: &Config) -> (ColoringResult, RunResult) {
 }
 
 /// Maximal independent set via the same local-maxima rounds (Luby-style).
-pub fn mis(g: &Csr, config: &Config) -> (Vec<bool>, RunResult) {
-    let n = g.num_vertices;
+pub fn mis<G: GraphRep>(g: &G, config: &Config) -> (Vec<bool>, RunResult) {
+    let n = g.num_vertices();
     let mut enactor = Enactor::new(config.clone());
     enactor.begin_run();
 
@@ -106,16 +112,25 @@ pub fn mis(g: &Csr, config: &Config) -> (Vec<bool>, RunResult) {
             .copied()
             .filter(|&v| {
                 counters.add_edges(g.degree(v) as u64);
-                g.neighbors(v).iter().all(|&u| {
-                    state[u as usize].load(Ordering::Relaxed) != 0 || prio[u as usize] < prio[v as usize]
-                })
+                let mut is_max = true;
+                g.for_each_neighbor_until(v, |_, u| {
+                    if state[u as usize].load(Ordering::Relaxed) == 0
+                        && prio[u as usize] >= prio[v as usize]
+                    {
+                        is_max = false;
+                        return false; // disqualified: stop scanning
+                    }
+                    true
+                });
+                is_max
             })
             .collect();
         for &v in &winners {
             state[v as usize].store(1, Ordering::Relaxed);
-            for &u in g.neighbors(v) {
-                let _ = state[u as usize].compare_exchange(0, 2, Ordering::Relaxed, Ordering::Relaxed);
-            }
+            g.for_each_neighbor(v, |_, u| {
+                let _ =
+                    state[u as usize].compare_exchange(0, 2, Ordering::Relaxed, Ordering::Relaxed);
+            });
         }
         // Phase 2: drop decided vertices from the frontier.
         frontier = filter::filter(&ctx, &frontier, &|v: VertexId| {

@@ -9,7 +9,7 @@ use std::sync::atomic::{AtomicU32, Ordering};
 use crate::config::Config;
 use crate::enactor::{Enactor, RunResult};
 use crate::frontier::Frontier;
-use crate::graph::{Csr, VertexId};
+use crate::graph::{GraphRep, VertexId};
 use crate::operators::filter;
 use crate::util::bitset::AtomicBitset;
 use crate::util::timer::Timer;
@@ -20,8 +20,10 @@ pub struct LpResult {
     pub iterations: usize,
 }
 
-pub fn label_propagation(g: &Csr, config: &Config) -> (LpResult, RunResult) {
-    let n = g.num_vertices;
+/// Generic over the graph representation (neighborhood label counts
+/// decode on the fly; no neighbor slices are materialized).
+pub fn label_propagation<G: GraphRep>(g: &G, config: &Config) -> (LpResult, RunResult) {
+    let n = g.num_vertices();
     let mut enactor = Enactor::new(config.clone());
     enactor.begin_run();
 
@@ -41,15 +43,15 @@ pub fn label_propagation(g: &Csr, config: &Config) -> (LpResult, RunResult) {
         // adopt the plurality label of the neighborhood (ties -> smaller
         // label, for determinism)
         let update = |v: VertexId| -> bool {
-            let neigh = g.neighbors(v);
-            counters.add_edges(neigh.len() as u64);
-            if neigh.is_empty() {
+            let deg = g.degree(v);
+            counters.add_edges(deg as u64);
+            if deg == 0 {
                 return false;
             }
-            let mut counts: HashMap<u32, u32> = HashMap::with_capacity(neigh.len());
-            for &u in neigh {
+            let mut counts: HashMap<u32, u32> = HashMap::with_capacity(deg);
+            g.for_each_neighbor(v, |_, u| {
                 *counts.entry(labels[u as usize].load(Ordering::Relaxed)).or_insert(0) += 1;
-            }
+            });
             let (&best, _) = counts
                 .iter()
                 .max_by(|a, b| a.1.cmp(b.1).then(b.0.cmp(a.0)))
@@ -71,11 +73,11 @@ pub fn label_propagation(g: &Csr, config: &Config) -> (LpResult, RunResult) {
             if seen.set(v) {
                 next.push(v as VertexId);
             }
-            for &u in g.neighbors(v as VertexId) {
+            g.for_each_neighbor(v as VertexId, |_, u| {
                 if seen.set(u as usize) {
                     next.push(u);
                 }
-            }
+            });
         }
         frontier = Frontier::vertices(next);
         enactor.record_iteration(input_len, frontier.len(), t.elapsed_ms(), false);
@@ -92,7 +94,7 @@ pub fn label_propagation(g: &Csr, config: &Config) -> (LpResult, RunResult) {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::graph::builder;
+    use crate::graph::{builder, Csr};
 
     /// Two dense cliques joined by one bridge edge.
     fn two_cliques(k: usize) -> Csr {

@@ -12,7 +12,7 @@ use std::sync::atomic::{AtomicU32, Ordering};
 
 use crate::config::Config;
 use crate::enactor::{Enactor, RunResult};
-use crate::graph::{Csr, VertexId};
+use crate::graph::{GraphRep, VertexId};
 use crate::util::par;
 use crate::util::timer::Timer;
 
@@ -26,9 +26,14 @@ pub struct MstResult {
 
 /// Borůvka MST on an undirected weighted graph (each edge stored in both
 /// directions; ties broken by edge id so both directions agree).
-pub fn mst(g: &Csr, config: &Config) -> (MstResult, RunResult) {
+///
+/// Generic over the graph representation: the min-outgoing-edge scan
+/// streams every neighbor list (decode-on-scan for compressed graphs) and
+/// candidates carry their destination, so no phase random-accesses edges
+/// by id.
+pub fn mst<G: GraphRep>(g: &G, config: &Config) -> (MstResult, RunResult) {
     assert!(g.is_weighted(), "MST needs edge weights");
-    let n = g.num_vertices;
+    let n = g.num_vertices();
     let mut enactor = Enactor::new(config.clone());
     enactor.begin_run();
 
@@ -45,27 +50,25 @@ pub fn mst(g: &Csr, config: &Config) -> (MstResult, RunResult) {
         // (weight, canonical undirected endpoints, edge id) — a globally
         // consistent total order on *undirected* edges, which guarantees
         // the component pointer graph has only 2-cycles (mutual minima),
-        // the classical Boruvka cycle-safety argument.
-        type Cand = (u32, u32, u32, usize); // (w, min_end, max_end, eid)
-        let cand_of = |eid: usize, s: u32| -> Cand {
-            let d = g.edge_dst(eid);
-            (g.weight(eid), s.min(d), s.max(d), eid)
-        };
+        // the classical Boruvka cycle-safety argument. Each candidate
+        // records its destination vertex at scan time, so the hook phase
+        // never random-accesses an edge id (a decode on compressed reps).
+        type Cand = (u32, u32, u32, usize, VertexId); // (w, min_end, max_end, eid, dst)
         let candidates = par::run_partitioned(n, enactor.workers, |_, s, e| {
             let mut local: std::collections::HashMap<u32, Cand> = std::collections::HashMap::new();
             for v in s..e {
-                let cv = label(v as u32);
-                for eid in g.edge_range(v as u32) {
-                    let u = g.col_indices[eid];
+                let v = v as VertexId;
+                let cv = label(v);
+                g.for_each_neighbor(v, |eid, u| {
                     if label(u) == cv {
-                        continue; // internal edge
+                        return; // internal edge
                     }
-                    let cand = cand_of(eid, v as u32);
+                    let cand: Cand = (g.weight(eid), v.min(u), v.max(u), eid, u);
                     let entry = local.entry(cv).or_insert(cand);
                     if (cand.0, cand.1, cand.2) < (entry.0, entry.1, entry.2) {
                         *entry = cand;
                     }
-                }
+                });
             }
             local
         });
@@ -92,18 +95,18 @@ pub fn mst(g: &Csr, config: &Config) -> (MstResult, RunResult) {
         // 2-cycle: only the lower-labelled component performs that hook.
         let hooks: Vec<(u32, u32, u32, usize)> = best
             .iter()
-            .map(|(&c, &(w, _a, _b, eid))| {
-                let dst_comp = label(g.edge_dst(eid));
+            .map(|(&c, &(w, _a, _b, eid, dst))| {
+                let dst_comp = label(dst);
                 (c, dst_comp, w, eid)
             })
             .collect();
         let mut added = 0usize;
         for &(src_comp, dst_comp, w, eid) in &hooks {
             debug_assert_ne!(src_comp, dst_comp);
-            let (w1, a1, b1, _) = best[&src_comp];
+            let (w1, a1, b1, _, _) = best[&src_comp];
             let mutual = best
                 .get(&dst_comp)
-                .map(|&(w2, a2, b2, _)| (w2, a2, b2) == (w1, a1, b1))
+                .map(|&(w2, a2, b2, _, _)| (w2, a2, b2) == (w1, a1, b1))
                 .unwrap_or(false);
             let _ = w1;
             if mutual && src_comp > dst_comp {
@@ -145,7 +148,7 @@ pub fn mst(g: &Csr, config: &Config) -> (MstResult, RunResult) {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::graph::{builder, Coo};
+    use crate::graph::{builder, Coo, Csr};
 
     fn weighted_undirected(n: usize, edges: &[(u32, u32, u32)]) -> Csr {
         let mut coo = Coo::new(n);

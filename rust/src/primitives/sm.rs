@@ -7,7 +7,7 @@
 use crate::config::Config;
 use crate::enactor::{Enactor, RunResult};
 use crate::frontier::Frontier;
-use crate::graph::{Csr, VertexId};
+use crate::graph::{GraphRep, VertexId};
 use crate::operators::filter;
 use crate::util::timer::Timer;
 
@@ -40,13 +40,16 @@ pub struct SmResult {
 
 /// Find all embeddings of `q` in `g` (labels on data vertices given by
 /// `labels`). Isomorphism semantics: distinct data vertices per embedding.
-pub fn subgraph_match(
-    g: &Csr,
+/// Generic over the graph representation — adjacency checks in the join
+/// go through [`GraphRep::contains_edge`] (binary search on CSR, bounded
+/// early-exit decode on compressed graphs).
+pub fn subgraph_match<G: GraphRep>(
+    g: &G,
     labels: &[u32],
     q: &Query,
     config: &Config,
 ) -> (SmResult, RunResult) {
-    assert_eq!(labels.len(), g.num_vertices);
+    assert_eq!(labels.len(), g.num_vertices());
     let mut enactor = Enactor::new(config.clone());
     enactor.begin_run();
     let t = Timer::start();
@@ -56,7 +59,7 @@ pub fn subgraph_match(
     for (qi, &ql) in q.labels.iter().enumerate() {
         let qdeg = q.degree(qi);
         let ctx = enactor.ctx();
-        let all = Frontier::all_vertices(g.num_vertices);
+        let all = Frontier::all_vertices(g.num_vertices());
         let keep = |v: VertexId| labels[v as usize] == ql && g.degree(v) >= qdeg;
         let f = filter::filter(&ctx, &all, &keep);
         candidates.push(f.ids);
@@ -87,9 +90,7 @@ pub fn subgraph_match(
                 if partial.contains(&cand) {
                     continue; // isomorphism: injective mapping
                 }
-                let ok = back_edges
-                    .iter()
-                    .all(|&bq| g.neighbors(partial[bq]).binary_search(&cand).is_ok());
+                let ok = back_edges.iter().all(|&bq| g.contains_edge(partial[bq], cand));
                 if ok {
                     let mut e = partial.clone();
                     e.push(cand);

@@ -9,7 +9,7 @@ use crate::config::Config;
 use crate::enactor::{Enactor, RunResult};
 use crate::frontier::priority_queue::NearFarQueue;
 use crate::frontier::Frontier;
-use crate::graph::{Csr, VertexId};
+use crate::graph::{GraphRep, VertexId};
 use crate::operators::{advance, filter};
 use crate::util::timer::Timer;
 
@@ -37,9 +37,13 @@ fn atomic_min(slot: &AtomicU64, value: u64) -> u64 {
 /// Run SSSP from `src`. With `config.sssp_delta > 0` the near/far priority
 /// queue is used (delta-stepping); delta = 0 degenerates to Bellman-Ford
 /// style full-frontier relaxation.
-pub fn sssp(g: &Csr, src: VertexId, config: &Config) -> (SsspProblem, RunResult) {
+///
+/// Generic over the graph representation: the relax functor reads weights
+/// by global edge id, which is identical across representations, so raw
+/// CSR and compressed `.gsr` graphs produce identical distances.
+pub fn sssp<G: GraphRep>(g: &G, src: VertexId, config: &Config) -> (SsspProblem, RunResult) {
     assert!(g.is_weighted(), "SSSP needs edge weights (paper: uniform [1,64])");
-    let n = g.num_vertices;
+    let n = g.num_vertices();
     let mut enactor = Enactor::new(config.clone());
     enactor.begin_run();
 
@@ -153,7 +157,7 @@ mod tests {
     use super::*;
     use crate::baselines::dijkstra::dijkstra;
     use crate::graph::generators::{grid::GridParams, grid2d, rmat, rmat::RmatParams};
-    use crate::graph::{builder, Coo};
+    use crate::graph::{builder, Coo, Csr};
 
     fn weighted_triangle() -> Csr {
         let mut coo = Coo::new(3);

@@ -14,7 +14,7 @@
 use crate::config::Config;
 use crate::enactor::{Enactor, RunResult};
 use crate::frontier::Frontier;
-use crate::graph::{builder, Coo, Csr, VertexId};
+use crate::graph::{builder, Coo, GraphRep, VertexId};
 use crate::operators::segmented_intersection;
 use crate::util::timer::Timer;
 
@@ -28,7 +28,7 @@ pub struct TcResult {
 /// by id (paper: "only keep one edge that points from the node with larger
 /// degree to the node with smaller degree").
 #[inline]
-fn forward_edge(g: &Csr, u: VertexId, v: VertexId) -> bool {
+fn forward_edge<G: GraphRep>(g: &G, u: VertexId, v: VertexId) -> bool {
     let (du, dv) = (g.degree(u), g.degree(v));
     du > dv || (du == dv && u > v)
 }
@@ -36,8 +36,8 @@ fn forward_edge(g: &Csr, u: VertexId, v: VertexId) -> bool {
 /// Collect the filtered forward edge pairs with an expansion that emits
 /// (src, dst) directly — avoiding the per-edge `edge_src` binary search a
 /// V2E frontier would need on readback (§Perf iteration 4).
-fn forward_pairs(enactor: &Enactor, g: &Csr) -> Vec<(VertexId, VertexId)> {
-    let n = g.num_vertices;
+fn forward_pairs<G: GraphRep>(enactor: &Enactor, g: &G) -> Vec<(VertexId, VertexId)> {
+    let n = g.num_vertices();
     let all: Vec<VertexId> = Frontier::all_vertices(n).ids;
     let strategy = enactor.strategy_for(g, n);
     let flat = crate::load_balance::expand(
@@ -57,7 +57,7 @@ fn forward_pairs(enactor: &Enactor, g: &Csr) -> Vec<(VertexId, VertexId)> {
 }
 
 /// TC over the full adjacency lists ("tc-intersection-full").
-pub fn tc_intersect_full(g: &Csr, config: &Config) -> (TcResult, RunResult) {
+pub fn tc_intersect_full<G: GraphRep>(g: &G, config: &Config) -> (TcResult, RunResult) {
     let mut enactor = Enactor::new(config.clone());
     enactor.begin_run();
     let t = Timer::start();
@@ -74,8 +74,10 @@ pub fn tc_intersect_full(g: &Csr, config: &Config) -> (TcResult, RunResult) {
 
 /// TC over the induced forward subgraph ("tc-intersection-filtered"):
 /// rebuild a graph with only forward edges, so each triangle is counted
-/// exactly once and intersections scan ~half-length lists.
-pub fn tc_intersect_filtered(g: &Csr, config: &Config) -> (TcResult, RunResult) {
+/// exactly once and intersections scan ~half-length lists. The induced
+/// subgraph is a fresh run-time CSR whatever the input representation —
+/// it is the algorithm's working set, not a decompression of the input.
+pub fn tc_intersect_filtered<G: GraphRep>(g: &G, config: &Config) -> (TcResult, RunResult) {
     let mut enactor = Enactor::new(config.clone());
     enactor.begin_run();
     let t0 = Timer::start();
@@ -83,7 +85,7 @@ pub fn tc_intersect_filtered(g: &Csr, config: &Config) -> (TcResult, RunResult) 
 
     // Reform the induced subgraph (paper: "reforming the induced subgraph
     // with only the edges not filtered").
-    let mut coo = Coo::with_capacity(g.num_vertices, pairs.len(), false);
+    let mut coo = Coo::with_capacity(g.num_vertices(), pairs.len(), false);
     for &(u, v) in &pairs {
         coo.push(u, v);
     }
@@ -97,7 +99,7 @@ pub fn tc_intersect_filtered(g: &Csr, config: &Config) -> (TcResult, RunResult) 
 
 /// Clustering coefficient per vertex from the segmented counts (the other
 /// use the paper names for segmented intersection).
-pub fn clustering_coefficient(g: &Csr, config: &Config) -> Vec<f64> {
+pub fn clustering_coefficient<G: GraphRep>(g: &G, config: &Config) -> Vec<f64> {
     let mut enactor = Enactor::new(config.clone());
     enactor.begin_run();
     let pairs = forward_pairs(&enactor, g);
@@ -105,7 +107,7 @@ pub fn clustering_coefficient(g: &Csr, config: &Config) -> Vec<f64> {
     let r = segmented_intersection::segmented_intersect(&ctx, g, &pairs, false);
     // triangles per vertex: every intersection w of pair (u, v) closes a
     // triangle at u, v, and w.
-    let mut tri = vec![0u64; g.num_vertices];
+    let mut tri = vec![0u64; g.num_vertices()];
     for (i, &(u, v)) in pairs.iter().enumerate() {
         let c = r.counts[i] as u64;
         tri[u as usize] += c;
@@ -113,7 +115,7 @@ pub fn clustering_coefficient(g: &Csr, config: &Config) -> Vec<f64> {
     }
     // (w side counted via the other two edges' intersections; with full
     // lists each triangle contributes twice per vertex.)
-    (0..g.num_vertices)
+    (0..g.num_vertices())
         .map(|v| {
             let d = g.degree(v as VertexId);
             if d < 2 {

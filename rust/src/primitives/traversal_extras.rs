@@ -6,14 +6,15 @@ use std::collections::BinaryHeap;
 
 use crate::config::Config;
 use crate::enactor::RunResult;
-use crate::graph::{Csr, VertexId};
+use crate::graph::{GraphRep, VertexId};
 use crate::primitives::bfs;
 use crate::util::rng::Pcg32;
 
 /// st-connectivity: run BFS waves from s and t simultaneously; connected
 /// iff the waves meet. Returns (connected, meeting depth sum if met).
-pub fn st_connectivity(
-    g: &Csr,
+/// Generic over the graph representation (rides on the generic BFS).
+pub fn st_connectivity<G: GraphRep>(
+    g: &G,
     s: VertexId,
     t: VertexId,
     config: &Config,
@@ -29,15 +30,16 @@ pub fn st_connectivity(
 }
 
 /// A* over a weighted graph with a consistent heuristic `h`. Returns the
-/// path s -> t (empty if unreachable) and its cost.
-pub fn astar(
-    g: &Csr,
+/// path s -> t (empty if unreachable) and its cost. Generic over the
+/// graph representation (the relaxation streams each neighbor list).
+pub fn astar<G: GraphRep>(
+    g: &G,
     s: VertexId,
     t: VertexId,
     h: impl Fn(VertexId) -> u64,
 ) -> (Vec<VertexId>, Option<u64>) {
     assert!(g.is_weighted());
-    let n = g.num_vertices;
+    let n = g.num_vertices();
     let mut dist = vec![u64::MAX; n];
     let mut pred = vec![u32::MAX; n];
     dist[s as usize] = 0;
@@ -50,15 +52,15 @@ pub fn astar(
         if f > dist[v as usize].saturating_add(h(v)) {
             continue; // stale
         }
-        for e in g.edge_range(v) {
-            let u = g.col_indices[e];
-            let nd = dist[v as usize] + g.weight(e) as u64;
+        let dv = dist[v as usize];
+        g.for_each_neighbor(v, |e, u| {
+            let nd = dv + g.weight(e) as u64;
             if nd < dist[u as usize] {
                 dist[u as usize] = nd;
                 pred[u as usize] = v;
                 heap.push(std::cmp::Reverse((nd + h(u), u)));
             }
-        }
+        });
     }
     if dist[t as usize] == u64::MAX {
         return (Vec::new(), None);
@@ -75,9 +77,14 @@ pub fn astar(
 
 /// Radii estimation (k-sample BFS): max eccentricity over k random
 /// sources — a lower bound on the diameter.
-pub fn estimate_radius(g: &Csr, k: usize, config: &Config, seed: u64) -> (usize, Vec<usize>) {
+pub fn estimate_radius<G: GraphRep>(
+    g: &G,
+    k: usize,
+    config: &Config,
+    seed: u64,
+) -> (usize, Vec<usize>) {
     let mut rng = Pcg32::new(seed);
-    let n = g.num_vertices;
+    let n = g.num_vertices();
     let mut eccs = Vec::with_capacity(k);
     for _ in 0..k {
         let src = rng.below(n as u32);

@@ -16,7 +16,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use crate::config::Config;
 use crate::enactor::{Enactor, RunResult};
 use crate::frontier::Frontier;
-use crate::graph::{Csr, VertexId};
+use crate::graph::{GraphRep, VertexId};
 use crate::operators::advance;
 use crate::util::timer::Timer;
 
@@ -43,8 +43,14 @@ fn atomic_add_f64(slot: &AtomicU64, add: f64) {
 }
 
 /// Personalized PageRank with restart at `user` (push-mode advance).
-pub fn ppr(g: &Csr, user: VertexId, iters: usize, damp: f64, enactor: &mut Enactor) -> Vec<f64> {
-    let n = g.num_vertices;
+pub fn ppr<G: GraphRep>(
+    g: &G,
+    user: VertexId,
+    iters: usize,
+    damp: f64,
+    enactor: &mut Enactor,
+) -> Vec<f64> {
+    let n = g.num_vertices();
     let mut scores = vec![0.0f64; n];
     scores[user as usize] = 1.0;
     for _ in 0..iters {
@@ -91,13 +97,13 @@ pub fn circle_of_trust(scores: &[f64], user: VertexId, k: usize) -> Vec<VertexId
 
 /// Money/SALSA on the bipartite (CoT -> followed) graph; returns
 /// (authority_scores, hub_scores) dense over the data graph's vertices.
-pub fn money(
-    g: &Csr,
+pub fn money<G: GraphRep>(
+    g: &G,
     cot: &[VertexId],
     iters: usize,
     enactor: &mut Enactor,
 ) -> (Vec<f64>, Vec<f64>) {
-    let n = g.num_vertices;
+    let n = g.num_vertices();
     // in-CoT marker + hub scores init uniform
     let mut hub = vec![0.0f64; n];
     for &h in cot {
@@ -108,9 +114,9 @@ pub fn money(
     // normalization.
     let mut auth_indeg = vec![0u32; n];
     for &h in cot {
-        for &a in g.neighbors(h) {
+        g.for_each_neighbor(h, |_, a| {
             auth_indeg[a as usize] += 1;
-        }
+        });
     }
 
     for _ in 0..iters {
@@ -154,9 +160,10 @@ pub fn money(
 }
 
 /// Full WTF pipeline for `user`. K = CoT size (paper uses 1000),
-/// `num_recs` recommendations returned.
-pub fn wtf(
-    g: &Csr,
+/// `num_recs` recommendations returned. Generic over the graph
+/// representation (all three stages are advances / streaming scans).
+pub fn wtf<G: GraphRep>(
+    g: &G,
     user: VertexId,
     k: usize,
     num_recs: usize,
@@ -178,8 +185,11 @@ pub fn wtf(
     let money_ms = t.elapsed_ms();
 
     // Recommend top authorities the user does not already follow.
-    let follows: std::collections::HashSet<VertexId> = g.neighbors(user).iter().copied().collect();
-    let mut recs: Vec<VertexId> = (0..g.num_vertices as VertexId)
+    let mut follows: std::collections::HashSet<VertexId> = std::collections::HashSet::new();
+    g.for_each_neighbor(user, |_, u| {
+        follows.insert(u);
+    });
+    let mut recs: Vec<VertexId> = (0..g.num_vertices() as VertexId)
         .filter(|&v| v != user && !follows.contains(&v) && auth[v as usize] > 0.0)
         .collect();
     recs.sort_unstable_by(|&a, &b| {
@@ -187,7 +197,7 @@ pub fn wtf(
     });
     recs.truncate(num_recs);
 
-    enactor.record_iteration(g.num_vertices, recs.len(), ppr_ms + cot_ms + money_ms, false);
+    enactor.record_iteration(g.num_vertices(), recs.len(), ppr_ms + cot_ms + money_ms, false);
     let result = enactor.finish_run();
     (
         WtfResult {

@@ -1,0 +1,247 @@
+//! Cross-representation parity: every primitive that went generic over
+//! `GraphRep` must produce identical results over raw `Csr` and the
+//! gap-compressed `CompressedCsr` — the whole point of the shared edge-id
+//! space. Weighted primitives get positional weights (identical arrays on
+//! both sides), pull-direction primitives exercise the v2 in-edge view,
+//! and the `.gsr` round trip is covered end-to-end including a version-1
+//! (no in-edge section) backward-compat load.
+
+use gunrock::config::Config;
+use gunrock::graph::generators::{
+    rmat::{rmat, RmatParams},
+    smallworld::{smallworld, SmallWorldParams},
+};
+use gunrock::graph::{builder, datasets, io, Codec, CompressedCsr, Csr, GraphRep};
+use gunrock::primitives::{
+    bc, bfs, cc, color, label_propagation, mst, pagerank, sm, sssp, tc, traversal_extras, wtf,
+};
+
+fn scale_free() -> Csr {
+    rmat(&RmatParams { scale: 9, edge_factor: 8, ..Default::default() })
+}
+
+fn scale_free_weighted() -> Csr {
+    let mut g = scale_free();
+    datasets::attach_uniform_weights(&mut g, 42);
+    g
+}
+
+fn compress(g: &Csr) -> CompressedCsr {
+    CompressedCsr::from_csr_with_in_edges(g, Codec::Varint)
+}
+
+#[test]
+fn sssp_matches_across_representations() {
+    let g = scale_free_weighted();
+    let cg = compress(&g);
+    assert_eq!(cg.edge_weights, g.edge_weights, "positional weights must be identical");
+    let cfg = Config::default();
+    let (want, _) = sssp::sssp(&g, 3, &cfg);
+    let (got, _) = sssp::sssp(&cg, 3, &cfg);
+    assert_eq!(want.dist, got.dist);
+    // Bellman-Ford mode too (no priority queue).
+    let mut bf = Config::default();
+    bf.sssp_delta = 0;
+    let (want, _) = sssp::sssp(&g, 3, &bf);
+    let (got, _) = sssp::sssp(&cg, 3, &bf);
+    assert_eq!(want.dist, got.dist);
+}
+
+#[test]
+fn bc_matches_across_representations() {
+    let g = smallworld(&SmallWorldParams { n: 256, k: 6, beta: 0.2, ..Default::default() });
+    let cg = compress(&g);
+    let cfg = Config::default();
+    let (want, _) = bc::bc_from_source(&g, 0, &cfg);
+    let (got, _) = bc::bc_from_source(&cg, 0, &cfg);
+    assert_eq!(want.sigma, got.sigma);
+    assert_eq!(want.depth, got.depth);
+    for (v, (a, b)) in want.bc_values.iter().zip(&got.bc_values).enumerate() {
+        assert!((a - b).abs() < 1e-9, "v={v}: {a} vs {b}");
+    }
+}
+
+#[test]
+fn cc_matches_across_representations() {
+    let g = rmat(&RmatParams { scale: 9, edge_factor: 2, ..Default::default() });
+    let cg = compress(&g);
+    // Hooking is racy-but-correct in parallel (last writer wins per
+    // component); single-threaded the visit order — and thus every label —
+    // is identical across representations.
+    let mut cfg = Config::default();
+    cfg.threads = 1;
+    let (want, _) = cc::cc(&g, &cfg);
+    let (got, _) = cc::cc(&cg, &cfg);
+    assert_eq!(want.num_components, got.num_components);
+    assert_eq!(want.component, got.component);
+}
+
+#[test]
+fn tc_matches_across_representations() {
+    let g = smallworld(&SmallWorldParams { n: 256, k: 8, beta: 0.1, ..Default::default() });
+    let cg = compress(&g);
+    let cfg = Config::default();
+    let (want_full, _) = tc::tc_intersect_full(&g, &cfg);
+    let (got_full, _) = tc::tc_intersect_full(&cg, &cfg);
+    assert_eq!(want_full.triangles, got_full.triangles);
+    let (want_filt, _) = tc::tc_intersect_filtered(&g, &cfg);
+    let (got_filt, _) = tc::tc_intersect_filtered(&cg, &cfg);
+    assert_eq!(want_filt.triangles, got_filt.triangles);
+    assert_eq!(want_filt.per_edge, got_filt.per_edge);
+}
+
+#[test]
+fn color_and_mis_match_across_representations() {
+    let g = smallworld(&SmallWorldParams { n: 256, k: 6, beta: 0.2, ..Default::default() });
+    let cg = compress(&g);
+    // Jones-Plassmann claims race benignly in parallel; pin one thread so
+    // both representations take the identical claim schedule.
+    let mut cfg = Config::default();
+    cfg.threads = 1;
+    let (want, _) = color::color(&g, &cfg);
+    let (got, _) = color::color(&cg, &cfg);
+    assert_eq!(want.colors, got.colors);
+    assert_eq!(want.num_colors, got.num_colors);
+    let (want_mis, _) = color::mis(&g, &cfg);
+    let (got_mis, _) = color::mis(&cg, &cfg);
+    assert_eq!(want_mis, got_mis);
+}
+
+#[test]
+fn label_propagation_matches_across_representations() {
+    let g = smallworld(&SmallWorldParams { n: 200, k: 6, beta: 0.1, ..Default::default() });
+    let cg = compress(&g);
+    // Label reads race benignly against concurrent adopts; one thread
+    // makes the adoption schedule identical across representations.
+    let mut cfg = Config::default();
+    cfg.threads = 1;
+    let (want, _) = label_propagation::label_propagation(&g, &cfg);
+    let (got, _) = label_propagation::label_propagation(&cg, &cfg);
+    assert_eq!(want.labels, got.labels);
+    assert_eq!(want.iterations, got.iterations);
+}
+
+#[test]
+fn mst_matches_across_representations() {
+    let g = {
+        let mut g = smallworld(&SmallWorldParams { n: 256, k: 6, beta: 0.2, ..Default::default() });
+        datasets::attach_uniform_weights(&mut g, 7);
+        g
+    };
+    let cg = compress(&g);
+    let cfg = Config::default();
+    let (want, _) = mst::mst(&g, &cfg);
+    let (got, _) = mst::mst(&cg, &cfg);
+    assert_eq!(want.total_weight, got.total_weight);
+    assert_eq!(want.tree_edges.len(), got.tree_edges.len());
+    assert_eq!(want.component, got.component);
+}
+
+#[test]
+fn subgraph_match_matches_across_representations() {
+    let g = builder::undirected_from_edges(
+        6,
+        &[(0, 1), (1, 2), (0, 2), (2, 3), (3, 4), (4, 5), (3, 5)],
+    );
+    let cg = compress(&g);
+    let labels = vec![7u32; 6];
+    let q = sm::Query::triangle(7);
+    let cfg = Config::default();
+    let (want, _) = sm::subgraph_match(&g, &labels, &q, &cfg);
+    let (got, _) = sm::subgraph_match(&cg, &labels, &q, &cfg);
+    assert_eq!(want.embeddings, got.embeddings);
+}
+
+#[test]
+fn wtf_matches_across_representations() {
+    let g = scale_free();
+    let cg = compress(&g);
+    // PPR accumulates f64 via atomic adds whose order is thread-timing
+    // dependent; one thread gives a bit-identical scatter order.
+    let mut cfg = Config::default();
+    cfg.threads = 1;
+    let (want, _) = wtf::wtf(&g, 5, 50, 10, &cfg);
+    let (got, _) = wtf::wtf(&cg, 5, 50, 10, &cfg);
+    assert_eq!(want.circle_of_trust, got.circle_of_trust);
+    assert_eq!(want.recommendations, got.recommendations);
+}
+
+#[test]
+fn traversal_extras_match_across_representations() {
+    let g = scale_free_weighted();
+    let cg = compress(&g);
+    let cfg = Config::default();
+    let (a_conn, a_depth, _) = traversal_extras::st_connectivity(&g, 0, 9, &cfg);
+    let (b_conn, b_depth, _) = traversal_extras::st_connectivity(&cg, 0, 9, &cfg);
+    assert_eq!(a_conn, b_conn);
+    assert_eq!(a_depth, b_depth);
+    let (a_path, a_cost) = traversal_extras::astar(&g, 0, 9, |_| 0);
+    let (b_path, b_cost) = traversal_extras::astar(&cg, 0, 9, |_| 0);
+    assert_eq!(a_cost, b_cost);
+    assert_eq!(a_path, b_path);
+    let (a_rad, a_eccs) = traversal_extras::estimate_radius(&g, 4, &cfg, 11);
+    let (b_rad, b_eccs) = traversal_extras::estimate_radius(&cg, 4, &cfg, 11);
+    assert_eq!(a_rad, b_rad);
+    assert_eq!(a_eccs, b_eccs);
+}
+
+#[test]
+fn direction_optimized_bfs_and_pull_pagerank_over_gsr_file() {
+    // End-to-end over the container: save a v2 .gsr, load it back, and
+    // run the pull-direction primitives compressed-natively.
+    let g = rmat(&RmatParams { scale: 10, edge_factor: 16, ..Default::default() });
+    let cg = compress(&g);
+    let p = tmp("do_pull.gsr");
+    io::save_gsr(&p, &cg).unwrap();
+    let loaded = io::load_gsr(&p).unwrap();
+    assert!(loaded.has_in_view());
+
+    let mut do_cfg = Config::default();
+    do_cfg.direction_optimized = true;
+    let (want, want_stats) = bfs::bfs(&g, 7, &do_cfg);
+    let (got, got_stats) = bfs::bfs(&loaded, 7, &do_cfg);
+    assert_eq!(want.labels, got.labels, "DO-BFS must be identical over the loaded .gsr");
+    assert!(got_stats.pull_iterations > 0, "scale-free DO-BFS must enter the pull phase");
+    assert_eq!(want_stats.pull_iterations, got_stats.pull_iterations);
+
+    let mut pr_cfg = Config::default();
+    pr_cfg.pr_max_iters = 10;
+    pr_cfg.pr_epsilon = 0.0;
+    let (pr_want, _) = pagerank::pagerank_pull(&g, &pr_cfg);
+    let (pr_got, _) = pagerank::pagerank_pull(&loaded, &pr_cfg);
+    assert_eq!(pr_want.ranks, pr_got.ranks, "pull PageRank must be bit-identical");
+    std::fs::remove_file(p).ok();
+}
+
+#[test]
+fn v1_container_loads_and_traverses_push_only() {
+    // Backward compat: a v1 .gsr (no in-edge section) must still load and
+    // run every primitive — BFS falls back to push-only.
+    let g = scale_free();
+    let cg = CompressedCsr::from_csr(&g, Codec::Zeta(2));
+    let p = tmp("v1_compat_parity.gsr");
+    io::save_gsr(&p, &cg).unwrap();
+    let mut bytes = std::fs::read(&p).unwrap();
+    bytes[4..8].copy_from_slice(&1u32.to_le_bytes());
+    let body_len = bytes.len() - 8;
+    let ck = io::fnv1a(&bytes[..body_len]).to_le_bytes();
+    bytes[body_len..].copy_from_slice(&ck);
+    std::fs::write(&p, &bytes).unwrap();
+
+    let loaded = io::load_gsr(&p).unwrap();
+    assert!(!loaded.has_in_view());
+    assert!(!GraphRep::has_in_edges(&loaded));
+    let mut do_cfg = Config::default();
+    do_cfg.direction_optimized = true;
+    let (want, _) = bfs::bfs(&g, 7, &do_cfg);
+    let (got, stats) = bfs::bfs(&loaded, 7, &do_cfg);
+    assert_eq!(want.labels, got.labels);
+    assert_eq!(stats.pull_iterations, 0, "no in-edge view => push-only");
+    std::fs::remove_file(p).ok();
+}
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    let mut p = std::env::temp_dir();
+    p.push(format!("gunrock_rep_parity_{}_{}", std::process::id(), name));
+    p
+}

@@ -45,6 +45,26 @@ fn assert_storage_roundtrip(g: &Csr, label: &str) {
         assert_eq!(g2.row_offsets, g.row_offsets, "{label} {codec}");
         assert_eq!(g2.col_indices, g.col_indices, "{label} {codec}");
         assert_eq!(g2.edge_weights, g.edge_weights, "{label} {codec} weights");
+
+        // v2: the same chain with the in-edge view attached must reproduce
+        // the CSC lists and the out-edge-id permutation exactly.
+        let cg2 = CompressedCsr::from_csr_with_in_edges(g, codec);
+        let path = tmp(&format!("{label}_{codec}_v2.gsr"));
+        io::save_gsr(&path, &cg2).unwrap();
+        let back2 = io::load_gsr(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert!(back2.has_in_view(), "{label} {codec}");
+        assert_eq!(back2.in_edge_offsets, cg2.in_edge_offsets, "{label} {codec}");
+        assert_eq!(back2.in_payload, cg2.in_payload, "{label} {codec}");
+        assert_eq!(back2.in_edge_perm, cg2.in_edge_perm, "{label} {codec}");
+        let mut with_csc = g.clone();
+        if !with_csc.has_csc() {
+            builder::attach_csc_inplace(&mut with_csc);
+        }
+        for v in 0..g.num_vertices as u32 {
+            let got: Vec<u32> = back2.decode_in_neighbors(v).collect();
+            assert_eq!(got, with_csc.in_neighbors(v), "{label} {codec} in v={v}");
+        }
     }
 }
 

@@ -1,0 +1,197 @@
+//! Ablation: hybrid sparse/dense frontier engine.
+//!
+//! Three measurements on a scale-free graph:
+//!
+//! 1. **occupancy sweep**: one BFS-iteration-shaped step at several
+//!    frontier occupancies — the sparse pipeline (advance emitting into
+//!    per-worker queues + compaction + uniquify filter) against the fused
+//!    bitmap advance (dense-input word sweep writing the output bitmap
+//!    directly, duplicates discarded by `fetch_or`). Low occupancies
+//!    document where sparse wins; high occupancies are where the hybrid
+//!    engine must win (the CI gate checks the top row);
+//! 2. **end-to-end BFS** (direction-optimized) with the representation
+//!    forced sparse / forced dense / auto;
+//! 3. **end-to-end PageRank** under the same three modes.
+//!
+//! Emits BENCH_frontier_hybrid.json for the experiment ledger + CI gate.
+
+use gunrock::config::Config;
+use gunrock::frontier::{Frontier, HybridMode};
+use gunrock::graph::generators::{rmat, rmat::RmatParams};
+use gunrock::harness;
+use gunrock::load_balance::StrategyKind;
+use gunrock::operators::{advance, filter, OpContext};
+use gunrock::primitives::{bfs, pagerank};
+use gunrock::util::bitset::AtomicBitset;
+use gunrock::util::timer::Timer;
+use gunrock::util::{par, pool};
+
+const REPS: usize = 5;
+
+fn main() {
+    let workers = par::num_threads();
+    pool::ensure_capacity(workers);
+
+    let g = rmat(&RmatParams { scale: 15, edge_factor: 16, ..Default::default() });
+    let n = g.num_vertices;
+    let m = g.num_edges();
+    let mut all_match = true;
+
+    // --- 1. occupancy sweep: sparse pipeline vs fused bitmap -----------
+    let counters = gunrock::gpu_sim::WarpCounters::new();
+    let ctx = OpContext::new(workers, &counters);
+    let occupancies = [0.01f64, 0.1, 0.5, 0.9];
+    let mut rows = Vec::new();
+    let mask = AtomicBitset::new(n);
+    let mut raw = Frontier::default();
+    let mut sparse_out = Frontier::default();
+    let mut dense_out = Frontier::default();
+    for &occ in &occupancies {
+        let k = ((n as f64 * occ) as usize).max(1);
+        let stride = (n / k).max(1);
+        let ids: Vec<u32> = (0..n as u32).step_by(stride).take(k).collect();
+        let k = ids.len();
+        let sparse = Frontier::vertices(ids.clone());
+        let mut dense = Frontier::vertices(ids);
+        dense.to_dense(n);
+
+        // correctness: the fused bitmap output must equal the uniquified
+        // sparse pipeline's output set
+        mask.clear_all();
+        advance::advance_into(
+            &ctx,
+            &g,
+            &sparse,
+            advance::AdvanceType::V2V,
+            StrategyKind::Lb,
+            &|_, _, _| true,
+            &mut raw,
+        );
+        filter::filter_uniquify_into(&ctx, &raw, &|_| true, &mask, &mut sparse_out);
+        let mut want = sparse_out.ids().to_vec();
+        want.sort_unstable();
+        advance::advance_bitmap_into(
+            &ctx,
+            &g,
+            &dense,
+            StrategyKind::Lb,
+            &|_, _, _| true,
+            &mut dense_out,
+        );
+        let got: Vec<u32> = dense_out.iter().collect();
+        all_match &= want == got;
+
+        let t = Timer::start();
+        for _ in 0..REPS {
+            mask.clear_all();
+            advance::advance_into(
+                &ctx,
+                &g,
+                &sparse,
+                advance::AdvanceType::V2V,
+                StrategyKind::Lb,
+                &|_, _, _| true,
+                &mut raw,
+            );
+            filter::filter_uniquify_into(&ctx, &raw, &|_| true, &mask, &mut sparse_out);
+        }
+        let sparse_ms = t.elapsed_ms() / REPS as f64;
+        let t = Timer::start();
+        for _ in 0..REPS {
+            advance::advance_bitmap_into(
+                &ctx,
+                &g,
+                &dense,
+                StrategyKind::Lb,
+                &|_, _, _| true,
+                &mut dense_out,
+            );
+        }
+        let dense_ms = t.elapsed_ms() / REPS as f64;
+        rows.push((occ, k, sparse_ms, dense_ms, sparse_ms / dense_ms.max(1e-9)));
+    }
+
+    // --- 2. end-to-end direction-optimized BFS per mode ----------------
+    let bfs_time = |mode: HybridMode| {
+        let mut cfg = Config::default();
+        cfg.direction_optimized = true;
+        cfg.frontier_mode = mode;
+        let (p, _) = bfs::bfs(&g, 0, &cfg); // warmup
+        let t = Timer::start();
+        let (p2, _) = bfs::bfs(&g, 0, &cfg);
+        (t.elapsed_ms(), p.labels, p2.labels)
+    };
+    let (bfs_sparse_ms, bl_a, bl_b) = bfs_time(HybridMode::ForceSparse);
+    let (bfs_auto_ms, bl_c, bl_d) = bfs_time(HybridMode::Auto);
+    let (bfs_dense_ms, bl_e, bl_f) = bfs_time(HybridMode::ForceDense);
+    all_match &= bl_a == bl_b && bl_c == bl_d && bl_e == bl_f && bl_a == bl_c && bl_c == bl_e;
+
+    // --- 3. end-to-end PageRank per mode -------------------------------
+    let pr_time = |mode: HybridMode| {
+        let mut cfg = Config::default();
+        cfg.frontier_mode = mode;
+        cfg.pr_max_iters = 5;
+        cfg.pr_epsilon = 0.0;
+        let _ = pagerank::pagerank(&g, &cfg); // warmup
+        let t = Timer::start();
+        let (p, _) = pagerank::pagerank(&g, &cfg);
+        (t.elapsed_ms(), p.ranks)
+    };
+    let (pr_sparse_ms, pr_a) = pr_time(HybridMode::ForceSparse);
+    let (pr_auto_ms, pr_b) = pr_time(HybridMode::Auto);
+    let (pr_dense_ms, pr_c) = pr_time(HybridMode::ForceDense);
+    let close = |a: &[f64], b: &[f64]| {
+        a.len() == b.len() && a.iter().zip(b).all(|(x, y)| (x - y).abs() < 1e-6)
+    };
+    all_match &= close(&pr_a, &pr_b) && close(&pr_b, &pr_c);
+
+    // --- report --------------------------------------------------------
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|&(occ, k, s, d, sp)| {
+            vec![
+                format!("{:.0}%", occ * 100.0),
+                format!("{k}"),
+                format!("{s:.3}"),
+                format!("{d:.3}"),
+                format!("{sp:.2}x"),
+            ]
+        })
+        .collect();
+    harness::print_table(
+        "Ablation: hybrid frontier — sparse pipeline vs fused bitmap advance",
+        &["occupancy", "|F|", "sparse+uniquify ms", "fused bitmap ms", "speedup"],
+        &table,
+    );
+    println!(
+        "\nDO-BFS ms  sparse {bfs_sparse_ms:.1} | auto {bfs_auto_ms:.1} | dense {bfs_dense_ms:.1}"
+    );
+    println!(
+        "PageRank ms  sparse {pr_sparse_ms:.1} | auto {pr_auto_ms:.1} | dense {pr_dense_ms:.1}"
+    );
+    println!("results_match={all_match}");
+
+    let advance_json: Vec<String> = rows
+        .iter()
+        .map(|&(occ, k, s, d, sp)| {
+            format!(
+                "{{\"occupancy\": {occ}, \"frontier\": {k}, \"sparse_pipeline_ms\": {s:.3}, \
+                 \"fused_bitmap_ms\": {d:.3}, \"speedup_dense_vs_sparse\": {sp:.3}}}"
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\n  \"bench\": \"frontier_hybrid\",\n  \"workers\": {workers},\n  \
+         \"graph\": {{\"vertices\": {n}, \"edges\": {m}}},\n  \
+         \"advance\": [\n    {}\n  ],\n  \
+         \"bfs_modes\": {{\"sparse_ms\": {bfs_sparse_ms:.2}, \"auto_ms\": {bfs_auto_ms:.2}, \
+         \"dense_ms\": {bfs_dense_ms:.2}, \"speedup_auto_vs_sparse\": {bfs_speedup:.3}}},\n  \
+         \"pagerank_modes\": {{\"sparse_ms\": {pr_sparse_ms:.2}, \"auto_ms\": {pr_auto_ms:.2}, \
+         \"dense_ms\": {pr_dense_ms:.2}}},\n  \
+         \"results_match\": {all_match}\n}}\n",
+        advance_json.join(",\n    "),
+        bfs_speedup = bfs_sparse_ms / bfs_auto_ms.max(1e-9),
+    );
+    std::fs::write("BENCH_frontier_hybrid.json", &json).expect("write BENCH_frontier_hybrid.json");
+    println!("wrote BENCH_frontier_hybrid.json");
+}

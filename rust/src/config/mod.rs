@@ -10,6 +10,7 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
+use crate::frontier::HybridMode;
 use crate::load_balance::StrategyKind;
 
 /// Runtime configuration shared by the CLI, examples, and benches.
@@ -32,6 +33,12 @@ pub struct Config {
     pub idempotence: bool,
     /// LB input/output-balance switch threshold (paper: 4096).
     pub lb_switch_threshold: usize,
+    /// Hybrid-frontier switch threshold: densify an operator output when
+    /// the estimated touched-edge volume `|F|·(1 + d̄)` exceeds this
+    /// fraction of m (Ligra's rule; smaller switches to bitmaps earlier).
+    pub frontier_switch: f64,
+    /// Hybrid-frontier representation policy (auto | sparse | dense).
+    pub frontier_mode: HybridMode,
     /// Delta for the SSSP near/far priority queue.
     pub sssp_delta: u64,
     /// PageRank damping and convergence.
@@ -57,6 +64,8 @@ impl Default for Config {
             direction_optimized: false,
             idempotence: false,
             lb_switch_threshold: 4096,
+            frontier_switch: 0.05,
+            frontier_mode: HybridMode::Auto,
             sssp_delta: 32,
             pr_damping: 0.85,
             pr_epsilon: 1e-6,
@@ -107,6 +116,12 @@ impl Config {
                 "traversal.idempotence" | "idempotence" => self.idempotence = parse_bool(v)?,
                 "traversal.lb_switch_threshold" | "lb_switch_threshold" => {
                     self.lb_switch_threshold = v.parse()?
+                }
+                "runtime.frontier_switch" | "frontier_switch" => {
+                    self.frontier_switch = v.parse()?
+                }
+                "runtime.frontier_mode" | "frontier_mode" => {
+                    self.frontier_mode = v.parse().map_err(anyhow::Error::msg)?
                 }
                 "sssp.delta" | "sssp_delta" => self.sssp_delta = v.parse()?,
                 "pagerank.damping" | "pr_damping" => self.pr_damping = v.parse()?,
@@ -202,6 +217,19 @@ mod tests {
         assert!(cfg.idempotence);
         assert!(cfg.direction_optimized);
         assert_eq!(cfg.sssp_delta, 64);
+    }
+
+    #[test]
+    fn frontier_knobs_apply() {
+        let mut cfg = Config::default();
+        let kv = parse_toml_subset("[runtime]\nfrontier_switch = 0.1\nfrontier_mode = dense\n")
+            .unwrap();
+        cfg.apply(&kv).unwrap();
+        assert_eq!(cfg.frontier_switch, 0.1);
+        assert_eq!(cfg.frontier_mode, HybridMode::ForceDense);
+        let mut bad = BTreeMap::new();
+        bad.insert("frontier_mode".to_string(), "bogus".to_string());
+        assert!(cfg.apply(&bad).is_err());
     }
 
     #[test]

@@ -7,7 +7,7 @@
 pub mod problem;
 
 use crate::config::Config;
-use crate::frontier::DoubleBuffer;
+use crate::frontier::{DoubleBuffer, HybridMode};
 use crate::gpu_sim::WarpCounters;
 use crate::graph::GraphRep;
 use crate::load_balance::{self, StrategyKind};
@@ -99,6 +99,37 @@ impl Enactor {
                 frontier_len,
                 self.config.lb_switch_threshold,
             )
+        }
+    }
+
+    /// Ligra-style hybrid-frontier switch (see `frontier` module docs):
+    /// should an operator consuming a frontier of `frontier_len` items
+    /// produce a **dense** (bitmap) output? `Auto` estimates the touched
+    /// volume as `|F| + |F|·d̄` (the same m_f = n_f·m/n estimate the
+    /// direction heuristic uses — no degree gather) and densifies when it
+    /// crosses `frontier_switch · m`; the forced modes pin the choice
+    /// (ablation + parity testing).
+    pub fn densify_output<G: GraphRep>(&self, g: &G, frontier_len: usize) -> bool {
+        match self.config.frontier_mode {
+            HybridMode::ForceSparse => false,
+            HybridMode::ForceDense => true,
+            HybridMode::Auto => {
+                let m = g.num_edges().max(1) as f64;
+                let est = frontier_len as f64 * (1.0 + g.average_degree());
+                est > self.config.frontier_switch * m
+            }
+        }
+    }
+
+    /// Hybrid switch for frontiers that are pure id sets (no neighbor
+    /// expansion — convergence lists, edge-id sets): dense costs an
+    /// O(universe/64) word sweep, so it wins once occupancy clears a
+    /// small fraction of the universe.
+    pub fn densify_plain(&self, universe: usize, len: usize) -> bool {
+        match self.config.frontier_mode {
+            HybridMode::ForceSparse => false,
+            HybridMode::ForceDense => true,
+            HybridMode::Auto => len * 16 >= universe.max(1),
         }
     }
 
@@ -246,6 +277,35 @@ mod tests {
     fn disabled_always_push() {
         let mut d = DirectionHeuristic::new(false, 1e9, 0.0);
         assert_eq!(d.decide(100, 10_000, 99, 1), Direction::Push);
+    }
+
+    #[test]
+    fn densify_switches_on_estimated_volume() {
+        let mut cfg = Config::default();
+        cfg.frontier_switch = 0.05;
+        let e = Enactor::new(cfg);
+        // 4 vertices, 4 edges, avg degree 1: est = |F| * 2
+        let g = crate::graph::builder::from_edges(4, &[(0, 1), (1, 2), (2, 3), (3, 0)]);
+        assert!(!e.densify_output(&g, 0), "empty frontier stays sparse");
+        assert!(e.densify_output(&g, 3), "est 6 > 0.05 * 4");
+        let mut sparse_cfg = Config::default();
+        sparse_cfg.frontier_mode = crate::frontier::HybridMode::ForceSparse;
+        let es = Enactor::new(sparse_cfg);
+        assert!(!es.densify_output(&g, 4));
+        assert!(!es.densify_plain(10, 10));
+        let mut dense_cfg = Config::default();
+        dense_cfg.frontier_mode = crate::frontier::HybridMode::ForceDense;
+        let ed = Enactor::new(dense_cfg);
+        assert!(ed.densify_output(&g, 0));
+        assert!(ed.densify_plain(1000, 0));
+    }
+
+    #[test]
+    fn densify_plain_is_occupancy_based() {
+        let e = Enactor::new(Config::default());
+        assert!(e.densify_plain(1600, 100));
+        assert!(!e.densify_plain(1600, 99));
+        assert!(!e.densify_plain(0, 0), "degenerate universe stays sparse");
     }
 
     #[test]

@@ -3,11 +3,32 @@
 //! operators consume one or more input frontiers and produce output
 //! frontiers; primitives run until the frontier empties (or another
 //! convergence criterion fires).
+//!
+//! Since the hybrid-engine PR the representation is **sparse/dense
+//! adaptive** (the paper's idempotence and direction-optimization
+//! strategies both lean on bitmask frontiers; Ligra and GraphBLAST make
+//! the same duality the central traversal lever):
+//!
+//! - **Sparse**: an id queue (`Vec<VertexId>`) — compact when few items
+//!   are active, preserves production order;
+//! - **Dense**: an atomic bitmap over the id universe ([`DenseBits`]) —
+//!   O(1) membership, insertion via word-level `fetch_or` (concurrent
+//!   *and* naturally deduplicating, the idempotent-discard property), and
+//!   word-aligned sweeps for operators (64 items per load, no gather).
+//!
+//! Operators dispatch on [`Frontier::view`]; the enactor decides which
+//! representation an output should take (Ligra-style switch on estimated
+//! touched edges, see `Enactor::densify_output`). Both storages are
+//! retained across mode flips so a warm ping-pong iteration allocates
+//! nothing, and a recycled dense buffer zeroes only the words it actually
+//! touched (dirty-word high-water mark).
 
 pub mod priority_queue;
 
+use std::sync::atomic::{AtomicUsize, Ordering};
+
 use crate::graph::VertexId;
-use crate::util::bitset::AtomicBitset;
+use crate::util::bitset::{AtomicBitset, SetBits};
 
 /// Whether the ids in a frontier name vertices or edges. Gunrock is the
 /// only high-level GPU framework supporting both (Table 1: "v-c, e-c").
@@ -17,13 +38,198 @@ pub enum FrontierKind {
     Edge,
 }
 
-/// A frontier of vertex or edge ids. Double-buffering (input/output
-/// queues, paper §5.3) is handled by the enactor holding two of these and
-/// swapping.
+/// How the hybrid engine picks a frontier representation: `Auto` switches
+/// on estimated work (the Ligra rule), the forced modes pin it — used by
+/// the ablation bench and the representation-parity tests.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum HybridMode {
+    #[default]
+    Auto,
+    ForceSparse,
+    ForceDense,
+}
+
+impl std::str::FromStr for HybridMode {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "auto" => Ok(HybridMode::Auto),
+            "sparse" | "force_sparse" => Ok(HybridMode::ForceSparse),
+            "dense" | "force_dense" => Ok(HybridMode::ForceDense),
+            other => Err(format!("unknown frontier mode {other} (auto|sparse|dense)")),
+        }
+    }
+}
+
+impl std::fmt::Display for HybridMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            HybridMode::Auto => "auto",
+            HybridMode::ForceSparse => "sparse",
+            HybridMode::ForceDense => "dense",
+        })
+    }
+}
+
+/// Dense frontier payload: an atomic bitmap over the id universe, a
+/// cardinality sealed at the BSP step boundary, and a dirty-word
+/// high-water mark so recycling zeroes only touched words.
+#[derive(Debug)]
+pub struct DenseBits {
+    bits: AtomicBitset,
+    /// Cardinality — valid after [`seal`](DenseBits::seal) (operators
+    /// write concurrently between step boundaries).
+    count: usize,
+    /// Exclusive upper bound on word indexes that may hold set bits since
+    /// the last clear; words at or past it are guaranteed zero.
+    dirty: AtomicUsize,
+}
+
+impl Clone for DenseBits {
+    fn clone(&self) -> Self {
+        DenseBits {
+            bits: self.bits.clone(),
+            count: self.count,
+            dirty: AtomicUsize::new(self.dirty.load(Ordering::Relaxed)),
+        }
+    }
+}
+
+impl DenseBits {
+    pub fn new(universe: usize) -> Self {
+        DenseBits { bits: AtomicBitset::new(universe), count: 0, dirty: AtomicUsize::new(0) }
+    }
+
+    /// Size of the id universe (n for vertex frontiers, m for edge ones).
+    #[inline]
+    pub fn universe(&self) -> usize {
+        self.bits.len()
+    }
+
+    /// Sealed cardinality.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.count
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Concurrent, deduplicating insertion (word-level `fetch_or`);
+    /// returns true when this call set the bit. Callers [`seal`] at the
+    /// step boundary before reading [`len`](DenseBits::len).
+    #[inline]
+    pub fn insert(&self, i: usize) -> bool {
+        let newly = self.bits.set(i);
+        if newly {
+            self.dirty.fetch_max(i / 64 + 1, Ordering::Relaxed);
+        }
+        newly
+    }
+
+    /// Exclusive-access insertion that keeps the cardinality sealed.
+    pub fn insert_sealed(&mut self, i: usize) -> bool {
+        let newly = self.insert(i);
+        if newly {
+            self.count += 1;
+        }
+        newly
+    }
+
+    #[inline]
+    pub fn contains(&self, i: usize) -> bool {
+        self.bits.get(i)
+    }
+
+    /// Drop id `i` (cardinality stale until [`seal`](DenseBits::seal)).
+    #[inline]
+    pub fn remove(&self, i: usize) {
+        self.bits.clear_bit(i);
+    }
+
+    /// Recompute the cardinality — popcount over the dirty prefix only.
+    pub fn seal(&mut self) {
+        self.count = self.bits.count_first_words(self.dirty.load(Ordering::Relaxed));
+    }
+
+    /// Empty the set, zeroing only words touched since the last clear.
+    pub fn clear(&mut self) {
+        self.bits.clear_first_words(self.dirty.load(Ordering::Relaxed));
+        self.dirty.store(0, Ordering::Relaxed);
+        self.count = 0;
+    }
+
+    /// Fill with the whole universe — O(universe/64).
+    pub fn fill(&mut self) {
+        self.bits.set_all();
+        self.dirty.store(self.bits.num_words(), Ordering::Relaxed);
+        self.count = self.bits.len();
+    }
+
+    /// Shared view of the bitmap (pull-phase membership oracle; word
+    /// sweeps in the load-balance fast paths).
+    #[inline]
+    pub fn bits(&self) -> &AtomicBitset {
+        &self.bits
+    }
+
+    /// Exclusive upper bound on possibly-set words (for bounded sweeps).
+    #[inline]
+    pub fn dirty_words(&self) -> usize {
+        self.dirty.load(Ordering::Relaxed)
+    }
+
+    /// OR this set's dirty prefix into `target` word-wise — e.g. a
+    /// discovered frontier into the visited mask, no per-vertex loop.
+    pub fn union_into(&self, target: &AtomicBitset) {
+        target.union_from(&self.bits, self.dirty.load(Ordering::Relaxed));
+    }
+
+    pub fn iter(&self) -> SetBits<'_> {
+        self.bits.iter_set()
+    }
+
+    /// Retarget to `universe`, emptying the set. Same-size reuse zeroes
+    /// only the dirty prefix; a size change re-zeroes (rare).
+    fn ensure_universe(&mut self, universe: usize) {
+        if self.bits.len() == universe {
+            self.clear();
+        } else {
+            self.bits.resize(universe);
+            self.dirty.store(0, Ordering::Relaxed);
+            self.count = 0;
+        }
+    }
+}
+
+/// Active representation discriminant.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Mode {
+    Sparse,
+    Dense,
+}
+
+/// Borrowed representation view — the dispatch point for operators.
+pub enum FrontierView<'a> {
+    Sparse(&'a [VertexId]),
+    Dense(&'a DenseBits),
+}
+
+/// A frontier of vertex or edge ids in one of two representations (see
+/// module docs). Double-buffering (input/output queues, paper §5.3) is
+/// handled by the enactor holding two of these and swapping; both the id
+/// queue and the bitmap are retained across mode flips so recycled
+/// buffers keep their capacity.
 #[derive(Clone, Debug)]
 pub struct Frontier {
     pub kind: FrontierKind,
-    pub ids: Vec<VertexId>,
+    mode: Mode,
+    /// Sparse storage; empty while dense is active.
+    ids: Vec<VertexId>,
+    /// Dense storage, lazily allocated on first dense use, then retained.
+    dense: Option<DenseBits>,
 }
 
 impl Default for Frontier {
@@ -34,11 +240,15 @@ impl Default for Frontier {
 
 impl Frontier {
     pub fn vertices(ids: Vec<VertexId>) -> Self {
-        Frontier { kind: FrontierKind::Vertex, ids }
+        Frontier { kind: FrontierKind::Vertex, mode: Mode::Sparse, ids, dense: None }
     }
 
     pub fn edges(ids: Vec<VertexId>) -> Self {
-        Frontier { kind: FrontierKind::Edge, ids }
+        Frontier { kind: FrontierKind::Edge, mode: Mode::Sparse, ids, dense: None }
+    }
+
+    pub fn from_ids(kind: FrontierKind, ids: Vec<VertexId>) -> Self {
+        Frontier { kind, mode: Mode::Sparse, ids, dense: None }
     }
 
     pub fn single(v: VertexId) -> Self {
@@ -46,43 +256,262 @@ impl Frontier {
     }
 
     pub fn empty(kind: FrontierKind) -> Self {
-        Frontier { kind, ids: Vec::new() }
+        Frontier { kind, mode: Mode::Sparse, ids: Vec::new(), dense: None }
     }
 
-    /// All vertices 0..n (PageRank-style full frontier).
+    /// An empty dense frontier over `universe` ids.
+    pub fn dense_empty(kind: FrontierKind, universe: usize) -> Self {
+        Frontier { kind, mode: Mode::Dense, ids: Vec::new(), dense: Some(DenseBits::new(universe)) }
+    }
+
+    /// All vertices 0..n (PageRank-style full frontier) — a filled
+    /// bitmap, O(n/64); nothing materializes an id list.
     pub fn all_vertices(n: usize) -> Self {
-        Frontier::vertices((0..n as VertexId).collect())
+        let mut d = DenseBits::new(n);
+        d.fill();
+        Frontier { kind: FrontierKind::Vertex, mode: Mode::Dense, ids: Vec::new(), dense: Some(d) }
     }
 
-    /// All edge ids 0..m (CC hooking starts from the full edge frontier).
+    /// All edge ids 0..m (CC hooking starts from the full edge frontier)
+    /// — a filled bitmap, O(m/64).
     pub fn all_edges(m: usize) -> Self {
-        Frontier::edges((0..m as VertexId).collect())
+        let mut d = DenseBits::new(m);
+        d.fill();
+        Frontier { kind: FrontierKind::Edge, mode: Mode::Dense, ids: Vec::new(), dense: Some(d) }
+    }
+
+    #[inline]
+    pub fn is_dense(&self) -> bool {
+        self.mode == Mode::Dense
+    }
+
+    /// Borrowed representation view for operator dispatch.
+    pub fn view(&self) -> FrontierView<'_> {
+        match self.mode {
+            Mode::Sparse => FrontierView::Sparse(&self.ids),
+            Mode::Dense => {
+                FrontierView::Dense(self.dense.as_ref().expect("dense mode implies dense storage"))
+            }
+        }
+    }
+
+    /// Sparse id slice. Panics on a dense frontier — representation-aware
+    /// callers use [`view`](Frontier::view) / [`iter`](Frontier::iter) /
+    /// [`sparse_view`](Frontier::sparse_view) instead.
+    #[inline]
+    pub fn ids(&self) -> &[VertexId] {
+        match self.mode {
+            Mode::Sparse => &self.ids,
+            Mode::Dense => panic!("ids() on a dense frontier — use view()/iter()/sparse_view()"),
+        }
+    }
+
+    /// Mutable sparse id vector (operator output target). Panics on a
+    /// dense frontier.
+    #[inline]
+    pub fn ids_mut(&mut self) -> &mut Vec<VertexId> {
+        match self.mode {
+            Mode::Sparse => &mut self.ids,
+            Mode::Dense => panic!("ids_mut() on a dense frontier"),
+        }
+    }
+
+    /// Consume into an id vector (ascending order when dense).
+    pub fn into_ids(mut self) -> Vec<VertexId> {
+        if self.mode == Mode::Dense {
+            self.to_sparse();
+        }
+        self.ids
+    }
+
+    /// Replace the contents with a sparse id vector.
+    pub fn set_ids(&mut self, ids: Vec<VertexId>) {
+        self.mode = Mode::Sparse;
+        self.ids = ids;
+    }
+
+    /// Dense payload, if the dense representation is active.
+    pub fn dense_bits(&self) -> Option<&DenseBits> {
+        match self.mode {
+            Mode::Dense => self.dense.as_ref(),
+            Mode::Sparse => None,
+        }
     }
 
     pub fn len(&self) -> usize {
-        self.ids.len()
+        match self.mode {
+            Mode::Sparse => self.ids.len(),
+            Mode::Dense => self.dense.as_ref().map_or(0, DenseBits::len),
+        }
     }
 
     pub fn is_empty(&self) -> bool {
-        self.ids.is_empty()
+        self.len() == 0
     }
 
+    /// Membership test: O(1) dense, O(len) sparse.
+    pub fn contains(&self, v: VertexId) -> bool {
+        match self.view() {
+            FrontierView::Sparse(ids) => ids.contains(&v),
+            FrontierView::Dense(bits) => bits.contains(v as usize),
+        }
+    }
+
+    /// Append one id in the active representation (deduplicating when
+    /// dense).
+    pub fn push(&mut self, v: VertexId) {
+        match self.mode {
+            Mode::Sparse => self.ids.push(v),
+            Mode::Dense => {
+                self.dense.as_mut().expect("dense storage").insert_sealed(v as usize);
+            }
+        }
+    }
+
+    pub fn extend_from_slice(&mut self, xs: &[VertexId]) {
+        match self.mode {
+            Mode::Sparse => self.ids.extend_from_slice(xs),
+            Mode::Dense => {
+                let d = self.dense.as_mut().expect("dense storage");
+                for &v in xs {
+                    d.insert_sealed(v as usize);
+                }
+            }
+        }
+    }
+
+    /// Iterate the ids (production order sparse, ascending dense).
+    pub fn iter(&self) -> FrontierIter<'_> {
+        match self.view() {
+            FrontierView::Sparse(ids) => FrontierIter::Sparse(ids.iter()),
+            FrontierView::Dense(bits) => FrontierIter::Dense(bits.iter()),
+        }
+    }
+
+    pub fn for_each(&self, mut f: impl FnMut(VertexId)) {
+        for v in self.iter() {
+            f(v);
+        }
+    }
+
+    /// Borrow the ids as a slice, materializing a dense frontier into the
+    /// caller's scratch (the `neighbor_slice` pattern) — sparse frontiers
+    /// are borrowed in place and never touch the scratch.
+    pub fn sparse_view<'a>(&'a self, scratch: &'a mut Vec<VertexId>) -> &'a [VertexId] {
+        match self.view() {
+            FrontierView::Sparse(ids) => ids,
+            FrontierView::Dense(bits) => {
+                scratch.clear();
+                scratch.extend(bits.iter().map(|i| i as VertexId));
+                scratch
+            }
+        }
+    }
+
+    /// Sparse storage capacity (buffer-reuse assertions in tests).
+    pub fn capacity(&self) -> usize {
+        self.ids.capacity()
+    }
+
+    /// Empty the frontier in its current representation, keeping
+    /// capacity. A dense frontier zeroes only its dirty words.
     pub fn clear(&mut self) {
-        self.ids.clear();
+        match self.mode {
+            Mode::Sparse => self.ids.clear(),
+            Mode::Dense => {
+                if let Some(d) = self.dense.as_mut() {
+                    d.clear();
+                }
+            }
+        }
     }
 
-    /// Empty the frontier and retag it, keeping the allocated capacity —
-    /// the reuse primitive of the zero-alloc pipeline.
+    /// Empty the frontier, retag it, and make it sparse — the reuse
+    /// primitive of the zero-alloc pipeline. Dense storage (if any) is
+    /// kept parked for later [`reset_dense`](Frontier::reset_dense) reuse.
     pub fn reset(&mut self, kind: FrontierKind) {
         self.kind = kind;
+        self.mode = Mode::Sparse;
         self.ids.clear();
+    }
+
+    /// Empty the frontier, retag it, and make it dense over `universe`.
+    /// Reuses the parked bitmap, zeroing only its dirty words when the
+    /// universe is unchanged (no full O(n/64) wipe per iteration).
+    pub fn reset_dense(&mut self, kind: FrontierKind, universe: usize) {
+        self.kind = kind;
+        self.mode = Mode::Dense;
+        self.ids.clear();
+        match self.dense.as_mut() {
+            Some(d) => d.ensure_universe(universe),
+            None => self.dense = Some(DenseBits::new(universe)),
+        }
+    }
+
+    /// Re-derive the cardinality of a dense frontier after a concurrent
+    /// write phase (no-op when sparse).
+    pub fn seal(&mut self) {
+        if self.mode != Mode::Dense {
+            return;
+        }
+        if let Some(d) = self.dense.as_mut() {
+            d.seal();
+        }
+    }
+
+    /// Switch to the sparse representation, materializing ids in
+    /// ascending order. The bitmap stays parked for later dense reuse.
+    pub fn to_sparse(&mut self) {
+        if self.mode == Mode::Sparse {
+            return;
+        }
+        self.ids.clear();
+        if let Some(d) = self.dense.as_ref() {
+            self.ids.extend(d.iter().map(|i| i as VertexId));
+        }
+        self.mode = Mode::Sparse;
+    }
+
+    /// Switch to the dense representation over `universe`, inserting the
+    /// current ids (duplicates collapse). The id vector keeps capacity.
+    pub fn to_dense(&mut self, universe: usize) {
+        if self.mode == Mode::Dense {
+            return;
+        }
+        let kind = self.kind;
+        let ids = std::mem::take(&mut self.ids);
+        self.reset_dense(kind, universe);
+        let d = self.dense.as_mut().expect("reset_dense allocated dense storage");
+        for &v in &ids {
+            d.insert_sealed(v as usize);
+        }
+        self.ids = ids;
+        self.ids.clear();
+    }
+}
+
+/// Iterator over a frontier's ids in either representation.
+pub enum FrontierIter<'a> {
+    Sparse(std::slice::Iter<'a, VertexId>),
+    Dense(SetBits<'a>),
+}
+
+impl Iterator for FrontierIter<'_> {
+    type Item = VertexId;
+
+    fn next(&mut self) -> Option<VertexId> {
+        match self {
+            FrontierIter::Sparse(it) => it.next().copied(),
+            FrontierIter::Dense(it) => it.next().map(|i| i as VertexId),
+        }
     }
 }
 
 /// Double-buffered frontier pair (paper §5.3's ping-pong input/output
 /// queues). The enactor owns one of these per run; operators write into
 /// `next` while reading `current`, and the BSP step boundary is a `swap`
-/// — no per-iteration allocation once both buffers are warm.
+/// — no per-iteration allocation once both buffers are warm, in either
+/// representation.
 #[derive(Clone, Debug, Default)]
 pub struct DoubleBuffer {
     current: Frontier,
@@ -99,7 +528,7 @@ impl DoubleBuffer {
     pub fn reset_single(&mut self, v: VertexId) {
         self.current.reset(FrontierKind::Vertex);
         self.next.reset(FrontierKind::Vertex);
-        self.current.ids.push(v);
+        self.current.push(v);
     }
 
     pub fn current(&self) -> &Frontier {
@@ -130,22 +559,26 @@ impl DoubleBuffer {
     }
 }
 
-/// Pull-phase bookkeeping: the *unvisited* frontier plus visited bitmap
-/// (paper §5.1.4 keeps two active frontiers — the capability that
-/// "differentiates Gunrock from other GPU graph processing models").
+/// Pull-phase bookkeeping (paper §5.1.4 keeps two active frontiers — the
+/// capability that "differentiates Gunrock from other GPU graph
+/// processing models"). Since the hybrid-frontier PR the visited bitmap
+/// *is* the whole state: the pull advance sweeps its complement
+/// word-aligned in place, so no materialized unvisited list exists
+/// anywhere, and the active frontier's dense bitmap doubles as the
+/// membership oracle.
 pub struct DirectionState {
     pub visited: AtomicBitset,
-    /// Cached unvisited list, regenerated when switching push -> pull.
-    pub unvisited: Vec<VertexId>,
 }
 
 impl DirectionState {
     pub fn new(n: usize) -> Self {
-        DirectionState { visited: AtomicBitset::new(n), unvisited: Vec::new() }
+        DirectionState { visited: AtomicBitset::new(n) }
     }
 
-    pub fn rebuild_unvisited(&mut self) {
-        self.unvisited = self.visited.unset_indices();
+    /// Unvisited count (drives the push/pull heuristic) — popcount, no
+    /// list rebuild.
+    pub fn unvisited_count(&self) -> usize {
+        self.visited.len() - self.visited.count()
     }
 }
 
@@ -154,41 +587,141 @@ mod tests {
     use super::*;
 
     #[test]
-    fn constructors() {
+    fn sparse_constructors() {
         let f = Frontier::single(3);
         assert_eq!(f.len(), 1);
         assert_eq!(f.kind, FrontierKind::Vertex);
-        let a = Frontier::all_vertices(5);
-        assert_eq!(a.ids, vec![0, 1, 2, 3, 4]);
+        assert!(!f.is_dense());
+        assert_eq!(f.ids(), &[3]);
+    }
+
+    #[test]
+    fn all_vertices_and_edges_are_dense_and_full() {
+        let a = Frontier::all_vertices(70);
+        assert!(a.is_dense());
+        assert_eq!(a.len(), 70);
+        assert_eq!(a.iter().collect::<Vec<_>>(), (0..70).collect::<Vec<u32>>());
         let e = Frontier::all_edges(3);
         assert_eq!(e.kind, FrontierKind::Edge);
         assert_eq!(e.len(), 3);
+        assert!(e.contains(2));
+        assert!(!e.contains(3));
+    }
+
+    #[test]
+    fn dense_push_dedups_and_counts() {
+        let mut f = Frontier::dense_empty(FrontierKind::Vertex, 100);
+        f.push(7);
+        f.push(7);
+        f.push(64);
+        assert_eq!(f.len(), 2);
+        assert!(f.contains(7) && f.contains(64) && !f.contains(8));
+        assert_eq!(f.iter().collect::<Vec<_>>(), vec![7, 64]);
+    }
+
+    #[test]
+    fn round_trip_sparse_dense_sparse() {
+        let mut f = Frontier::vertices(vec![9, 3, 3, 70]);
+        f.to_dense(100);
+        assert!(f.is_dense());
+        assert_eq!(f.len(), 3, "duplicates collapse");
+        f.to_sparse();
+        assert_eq!(f.ids(), &[3, 9, 70], "ascending after densify");
+    }
+
+    #[test]
+    fn reset_dense_reuses_and_clears_dirty_words_only() {
+        let mut f = Frontier::dense_empty(FrontierKind::Vertex, 1024);
+        f.push(1000);
+        assert_eq!(f.dense_bits().unwrap().dirty_words(), 1000 / 64 + 1);
+        f.reset_dense(FrontierKind::Vertex, 1024);
+        assert_eq!(f.len(), 0);
+        assert!(!f.contains(1000));
+        assert_eq!(f.dense_bits().unwrap().dirty_words(), 0);
+        // same storage, new universe: content re-zeroed
+        f.push(5);
+        f.reset_dense(FrontierKind::Edge, 256);
+        assert_eq!(f.kind, FrontierKind::Edge);
+        assert_eq!(f.dense_bits().unwrap().universe(), 256);
+        assert_eq!(f.len(), 0);
+    }
+
+    #[test]
+    fn sparse_reset_parks_dense_storage() {
+        let mut f = Frontier::dense_empty(FrontierKind::Vertex, 64);
+        f.push(1);
+        f.reset(FrontierKind::Vertex);
+        assert!(!f.is_dense());
+        assert!(f.is_empty());
+        // parked bitmap comes back clean
+        f.reset_dense(FrontierKind::Vertex, 64);
+        assert!(f.is_empty());
+        assert!(!f.contains(1));
+    }
+
+    #[test]
+    fn concurrent_insert_matches_sequential_set() {
+        let f = Frontier::dense_empty(FrontierKind::Vertex, 4096);
+        let bits = f.dense_bits().unwrap();
+        let wins = crate::util::par::run_partitioned(8, 8, |w, _, _| {
+            let mut won = 0usize;
+            for i in (w % 4..4096).step_by(4) {
+                if bits.insert(i) {
+                    won += 1;
+                }
+            }
+            won
+        });
+        // workers 0..8 cover residues 0..4 twice: every id inserted, each
+        // id won by exactly one insert
+        assert_eq!(wins.iter().sum::<usize>(), 4096);
+        let mut f = f;
+        f.seal();
+        assert_eq!(f.len(), 4096);
+    }
+
+    #[test]
+    fn sparse_view_borrows_or_materializes() {
+        let mut scratch = Vec::new();
+        let s = Frontier::vertices(vec![5, 2]);
+        assert_eq!(s.sparse_view(&mut scratch), &[5, 2]);
+        assert!(scratch.is_empty(), "sparse view must not touch the scratch");
+        let mut d = Frontier::dense_empty(FrontierKind::Vertex, 64);
+        d.push(9);
+        d.push(2);
+        assert_eq!(d.sparse_view(&mut scratch), &[2, 9]);
     }
 
     #[test]
     fn double_buffer_swap_keeps_capacity() {
         let mut db = DoubleBuffer::new();
         db.reset_single(7);
-        assert_eq!(db.current().ids, vec![7]);
-        db.next_mut().ids.extend([1, 2, 3]);
+        assert_eq!(db.current().ids(), &[7]);
+        db.next_mut().extend_from_slice(&[1, 2, 3]);
         db.swap();
-        assert_eq!(db.current().ids, vec![1, 2, 3]);
-        assert_eq!(db.next().ids, vec![7]);
-        let cap = db.next().ids.capacity();
+        assert_eq!(db.current().ids(), &[1, 2, 3]);
+        assert_eq!(db.next().ids(), &[7]);
+        let cap = db.next().capacity();
         db.next_mut().reset(FrontierKind::Edge);
         assert!(db.next().is_empty());
         assert_eq!(db.next().kind, FrontierKind::Edge);
-        assert_eq!(db.next().ids.capacity(), cap);
+        assert_eq!(db.next().capacity(), cap);
     }
 
     #[test]
-    fn direction_state_unvisited() {
-        let mut ds = DirectionState::new(10);
+    fn direction_state_counts_unvisited() {
+        let ds = DirectionState::new(10);
         ds.visited.set(0);
         ds.visited.set(5);
-        ds.rebuild_unvisited();
-        assert_eq!(ds.unvisited.len(), 8);
-        assert!(!ds.unvisited.contains(&0));
-        assert!(!ds.unvisited.contains(&5));
+        assert_eq!(ds.unvisited_count(), 8);
+    }
+
+    #[test]
+    fn hybrid_mode_parses() {
+        assert_eq!("auto".parse::<HybridMode>().unwrap(), HybridMode::Auto);
+        assert_eq!("sparse".parse::<HybridMode>().unwrap(), HybridMode::ForceSparse);
+        assert_eq!("DENSE".parse::<HybridMode>().unwrap(), HybridMode::ForceDense);
+        assert!("bogus".parse::<HybridMode>().is_err());
+        assert_eq!(HybridMode::ForceDense.to_string(), "dense");
     }
 }

@@ -18,10 +18,11 @@
 //! draw their per-worker locals from the pool's scratch recycler, so a
 //! warm BSP iteration performs no frontier-sized allocations.
 
+use crate::frontier::DenseBits;
 use crate::gpu_sim::WarpCounters;
 use crate::graph::{GraphRep, VertexId};
 use crate::load_balance::{merge_path, EdgeVisit};
-use crate::util::{par, pool};
+use crate::util::{bitset, par, pool};
 
 /// Frontier size at which the degree prefix-sum switches to the parallel
 /// scan (matches `par::exclusive_scan`'s own serial cutoff).
@@ -116,6 +117,85 @@ pub fn expand_output_balanced<G: GraphRep, F: EdgeVisit>(
     let mut out = Vec::new();
     expand_output_balanced_into(g, items, workers, counters, visit, &mut out);
     out
+}
+
+/// Merge-based LB over a **dense** frontier, appending to `out`: the same
+/// scan-then-partition shape as the sparse LB, at word granularity. The
+/// "allocation" scan runs over per-word degree sums (O(n/64) entries, one
+/// slot per bitmap word), each equal-output chunk claims the words whose
+/// first edge lands in its output range, and workers sweep whole
+/// word-aligned vertex groups — no gather, and a compressed
+/// representation decodes each touched list exactly once, front to back.
+pub fn expand_dense_balanced_into<G: GraphRep, F: EdgeVisit>(
+    g: &G,
+    front: &DenseBits,
+    workers: usize,
+    counters: &WarpCounters,
+    visit: F,
+    out: &mut Vec<VertexId>,
+) {
+    let bits = front.bits();
+    let words = bits.num_words();
+    if words == 0 {
+        return;
+    }
+    // Per-word degree sums -> exclusive scan (offsets[wi] = edges before
+    // word wi, offsets[words] = total).
+    let mut offsets = pool::take_offsets();
+    offsets.resize(words + 1, 0);
+    {
+        let (sums, _last) = offsets.split_at_mut(words);
+        par::for_each_mut(sums, workers, |wi, slot| {
+            let mut sum = 0usize;
+            bitset::for_each_set_in(bits.word(wi), wi, |i| {
+                sum += g.degree(i as VertexId);
+            });
+            *slot = sum;
+        });
+    }
+    offsets[words] = 0;
+    let total = par::exclusive_scan(&mut offsets, workers);
+    if total == 0 {
+        pool::recycle_offsets(offsets);
+        return;
+    }
+
+    // Equal-output chunks of whole words: chunk p owns the words whose
+    // first output position falls in [p*per, (p+1)*per).
+    let parts = (workers * 4).max(1).min(total);
+    let per = total.div_ceil(parts);
+    let offsets_ref = &offsets;
+    let chunk_outputs = par::run_partitioned(parts, workers, |_, ps, pe| {
+        let mut local = pool::take_ids();
+        for p in ps..pe {
+            let lo = p * per;
+            let hi = ((p + 1) * per).min(total);
+            if lo >= hi {
+                continue;
+            }
+            let (w_start, w_end) = merge_path::word_range(offsets_ref, lo, hi);
+            let mut produced = 0usize;
+            for wi in w_start..w_end {
+                bitset::for_each_set_in(bits.word(wi), wi, |i| {
+                    let v = i as VertexId;
+                    g.for_each_neighbor(v, |e, dst| visit(i, v, e, dst, &mut local));
+                    produced += g.degree(v);
+                });
+            }
+            if produced > 0 {
+                counters.record_run(produced); // equal chunks: lanes busy
+                counters.add_edges(produced as u64);
+            }
+        }
+        local
+    });
+    pool::recycle_offsets(offsets);
+
+    out.reserve(chunk_outputs.iter().map(Vec::len).sum());
+    for c in chunk_outputs {
+        out.extend_from_slice(&c);
+        pool::recycle_ids(c);
+    }
 }
 
 /// LB_LIGHT: balance over the input frontier, appending to `out`.

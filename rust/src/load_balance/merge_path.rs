@@ -31,9 +31,40 @@ pub fn partition_output(offsets: &[usize], parts: usize) -> Vec<(usize, usize)> 
     out
 }
 
+/// Word-granular partition search for dense-frontier LB: given per-word
+/// exclusive-scanned edge offsets (len = words + 1, offsets[words] =
+/// total), find the word range a chunk owning output positions `[lo, hi)`
+/// must sweep. Whole words only — a word belongs to the chunk containing
+/// its first edge — so consecutive chunks tile the word space disjointly.
+#[inline]
+pub fn word_range(offsets: &[usize], lo: usize, hi: usize) -> (usize, usize) {
+    let inner = &offsets[..offsets.len() - 1];
+    (inner.partition_point(|&o| o < lo), inner.partition_point(|&o| o < hi))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn word_ranges_tile_disjointly() {
+        // per-word sums [5, 0, 7, 2] -> offsets [0, 5, 5, 12, 14]
+        let offsets = [0usize, 5, 5, 12, 14];
+        let total = 14usize;
+        let per = 5usize; // 3 chunks: [0,5) [5,10) [10,14)
+        let mut covered = Vec::new();
+        let mut prev_end = 0;
+        for p in 0..3 {
+            let (ws, we) = word_range(&offsets, p * per, ((p + 1) * per).min(total));
+            assert_eq!(ws, prev_end, "chunks must tile");
+            prev_end = we;
+            covered.extend(ws..we);
+        }
+        assert_eq!(covered, vec![0, 1, 2, 3]);
+        // word 1 (zero edges, offset 5) rides with the chunk owning pos 5
+        let (ws, we) = word_range(&offsets, 5, 10);
+        assert_eq!((ws, we), (1, 3));
+    }
 
     #[test]
     fn search_finds_owner() {

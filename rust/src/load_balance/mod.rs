@@ -20,6 +20,7 @@ pub mod merge_path;
 pub mod thread_expand;
 pub mod twc;
 
+use crate::frontier::DenseBits;
 use crate::gpu_sim::WarpCounters;
 use crate::graph::{GraphRep, VertexId};
 
@@ -122,6 +123,34 @@ pub fn expand_into<G: GraphRep, F: EdgeVisit>(
     }
 }
 
+/// Dispatch a **dense-input** expansion: workers sweep word-aligned
+/// vertex ranges of the frontier bitmap — no id gather, perfect locality,
+/// identical for raw and compressed representations. The visitor's
+/// `input_index` is the source vertex id itself (a bitmap has no queue
+/// positions). Strategy mapping: ThreadExpand sweeps statically
+/// partitioned word ranges; TWC grabs word chunks dynamically; the LB
+/// family runs a word-granular merge-path over the per-word degree scan.
+pub fn expand_dense_into<G: GraphRep, F: EdgeVisit>(
+    kind: StrategyKind,
+    g: &G,
+    front: &DenseBits,
+    workers: usize,
+    counters: &WarpCounters,
+    visit: F,
+    out: &mut Vec<VertexId>,
+) {
+    counters.add_kernel_launch();
+    match kind {
+        StrategyKind::ThreadExpand => {
+            thread_expand::expand_dense_into(g, front, workers, counters, visit, out)
+        }
+        StrategyKind::Twc => twc::expand_dense_into(g, front, workers, counters, visit, out),
+        StrategyKind::Lb | StrategyKind::LbLight | StrategyKind::LbCull => {
+            lb::expand_dense_balanced_into(g, front, workers, counters, visit, out)
+        }
+    }
+}
+
 /// Dispatch an expansion through the chosen strategy (allocating wrapper).
 pub fn expand<G: GraphRep, F: EdgeVisit>(
     kind: StrategyKind,
@@ -205,6 +234,48 @@ mod tests {
             want.sort_unstable();
             assert_eq!(got, want, "{kind}");
             assert_eq!(counters.edges(), c2.edges(), "{kind}");
+        }
+    }
+
+    #[test]
+    fn dense_expansion_matches_sparse_per_strategy() {
+        use crate::frontier::{Frontier, FrontierKind};
+        let g = star();
+        // subset frontier {0, 2, 3, 8} in both representations
+        let items = vec![0u32, 2, 3, 8];
+        let mut dense = Frontier::dense_empty(FrontierKind::Vertex, 9);
+        for &v in &items {
+            dense.push(v);
+        }
+        for kind in [
+            StrategyKind::ThreadExpand,
+            StrategyKind::Twc,
+            StrategyKind::Lb,
+            StrategyKind::LbLight,
+            StrategyKind::LbCull,
+        ] {
+            let cs = WarpCounters::new();
+            let mut want = expand(kind, &g, &items, 4, &cs, |_, s, e, d, o: &mut Vec<u32>| {
+                o.push(s * 1000 + e as u32 * 16 + d)
+            });
+            let cd = WarpCounters::new();
+            let mut got = Vec::new();
+            expand_dense_into(
+                kind,
+                &g,
+                dense.dense_bits().unwrap(),
+                4,
+                &cd,
+                |idx, s, e, d, o: &mut Vec<u32>| {
+                    assert_eq!(idx, s as usize, "dense visitor index is the vertex id");
+                    o.push(s * 1000 + e as u32 * 16 + d)
+                },
+                &mut got,
+            );
+            want.sort_unstable();
+            got.sort_unstable();
+            assert_eq!(want, got, "{kind}");
+            assert_eq!(cs.edges(), cd.edges(), "{kind}");
         }
     }
 

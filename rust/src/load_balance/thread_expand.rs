@@ -6,10 +6,11 @@
 //! lane-cycles — severe efficiency loss on skewed degree distributions,
 //! which is exactly what Table 8 / Fig 20 measure.
 
+use crate::frontier::DenseBits;
 use crate::gpu_sim::{WarpCounters, WARP_WIDTH};
 use crate::graph::{GraphRep, VertexId};
 use crate::load_balance::EdgeVisit;
-use crate::util::{par, pool};
+use crate::util::{bitset, par, pool};
 
 /// ThreadExpand, appending into a caller-owned buffer; per-worker locals
 /// come from the scratch recycler (zero allocations when warm).
@@ -41,6 +42,53 @@ pub fn expand_into<G: GraphRep, F: EdgeVisit>(
                 counters.record_simd(sum_deg as u64, max_deg as u64);
             }
             w = we;
+        }
+        counters.add_edges(edges);
+        local
+    });
+    out.reserve(chunks.iter().map(Vec::len).sum());
+    for c in chunks {
+        out.extend_from_slice(&c);
+        pool::recycle_ids(c);
+    }
+}
+
+/// ThreadExpand over a **dense** frontier: statically partitioned
+/// word-aligned sweeps of the bitmap — no id gather; one 64-bit word is
+/// one virtual warp (its set vertices run in lockstep), so the skew
+/// accounting matches the sparse path's 32-wide grouping in spirit while
+/// reading each cache line of the bitmap exactly once.
+pub fn expand_dense_into<G: GraphRep, F: EdgeVisit>(
+    g: &G,
+    front: &DenseBits,
+    workers: usize,
+    counters: &WarpCounters,
+    visit: F,
+    out: &mut Vec<VertexId>,
+) {
+    let bits = front.bits();
+    let words = bits.num_words();
+    let chunks = par::run_partitioned(words, workers, |_, ws, we| {
+        let mut local = pool::take_ids();
+        let mut edges = 0u64;
+        for wi in ws..we {
+            let w = bits.word(wi);
+            if w == 0 {
+                continue;
+            }
+            let mut max_deg = 0usize;
+            let mut sum_deg = 0usize;
+            bitset::for_each_set_in(w, wi, |i| {
+                let v = i as VertexId;
+                let deg = g.degree(v);
+                max_deg = max_deg.max(deg);
+                sum_deg += deg;
+                g.for_each_neighbor(v, |e, dst| visit(i, v, e, dst, &mut local));
+            });
+            edges += sum_deg as u64;
+            if max_deg > 0 {
+                counters.record_simd(sum_deg as u64, max_deg as u64);
+            }
         }
         counters.add_edges(edges);
         local

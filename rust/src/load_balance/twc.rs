@@ -10,10 +10,11 @@
 //! the small bucket retains lockstep loss. The classification itself (three
 //! sequential passes) is the "moderate cost" Table 3 mentions.
 
+use crate::frontier::DenseBits;
 use crate::gpu_sim::{WarpCounters, BLOCK_THREADS, WARP_WIDTH};
 use crate::graph::{GraphRep, VertexId};
 use crate::load_balance::EdgeVisit;
-use crate::util::{par, pool};
+use crate::util::{bitset, par, pool};
 
 /// TWC_FORWARD, appending into a caller-owned buffer. Classification lists
 /// and per-worker locals come from the scratch recycler.
@@ -106,6 +107,61 @@ pub fn expand_into<G: GraphRep, F: EdgeVisit>(
     pool::recycle_offsets(small);
     pool::recycle_offsets(medium);
     pool::recycle_offsets(large);
+}
+
+/// How many bitmap words one dynamic grab covers in the dense TWC sweep.
+const DENSE_CHUNK_WORDS: usize = 4;
+
+/// TWC_FORWARD over a **dense** frontier: dynamic grouping without the
+/// three-pass classification gather. Workers grab word-aligned chunks of
+/// the bitmap from a shared cursor (the dynamic part); within a chunk,
+/// warp-or-larger neighbor lists get cooperative accounting and sub-warp
+/// lists share lockstep accounting per word — the three buckets applied
+/// inline, per item, instead of via materialized index lists.
+pub fn expand_dense_into<G: GraphRep, F: EdgeVisit>(
+    g: &G,
+    front: &DenseBits,
+    workers: usize,
+    counters: &WarpCounters,
+    visit: F,
+    out: &mut Vec<VertexId>,
+) {
+    let bits = front.bits();
+    let words = bits.num_words();
+    let chunks = par::run_dynamic(words, workers, DENSE_CHUNK_WORDS, |_, ws, we| {
+        let mut local = pool::take_ids();
+        let mut edges = 0u64;
+        for wi in ws..we {
+            let w = bits.word(wi);
+            if w == 0 {
+                continue;
+            }
+            let mut small_sum = 0usize;
+            let mut small_max = 0usize;
+            bitset::for_each_set_in(w, wi, |i| {
+                let v = i as VertexId;
+                let deg = g.degree(v);
+                if deg >= WARP_WIDTH {
+                    counters.record_run(deg); // warp/CTA-cooperative
+                } else {
+                    small_sum += deg;
+                    small_max = small_max.max(deg);
+                }
+                edges += deg as u64;
+                g.for_each_neighbor(v, |e, dst| visit(i, v, e, dst, &mut local));
+            });
+            if small_max > 0 {
+                counters.record_simd(small_sum as u64, small_max as u64);
+            }
+        }
+        counters.add_edges(edges);
+        local
+    });
+    out.reserve(chunks.iter().map(Vec::len).sum());
+    for c in chunks {
+        out.extend_from_slice(&c);
+        pool::recycle_ids(c);
+    }
 }
 
 /// TWC_FORWARD (allocating wrapper).

@@ -72,7 +72,11 @@ fn usage() {
            --idempotence          enable idempotent advance (BFS)\n\
            --pull                 pagerank: pull-mode gather (needs in-edge view)\n\
            --do-a <f> --do-b <f>  direction heuristic parameters\n\
-           --delta <n>            SSSP near/far delta (0 = Bellman-Ford)\n"
+           --delta <n>            SSSP near/far delta (0 = Bellman-Ford)\n\
+           --frontier-switch <f>  hybrid frontier densify threshold as a\n\
+                                  fraction of m (default 0.05)\n\
+           --frontier-mode <m>    frontier representation: auto (default)\n\
+                                  | sparse | dense\n"
     );
 }
 
@@ -104,6 +108,12 @@ fn build_config(p: &cli::ParsedArgs) -> Result<Config> {
     }
     if let Some(v) = p.get_parse::<u64>("delta")? {
         cfg.sssp_delta = v;
+    }
+    if let Some(v) = p.get_parse::<f64>("frontier-switch")? {
+        cfg.frontier_switch = v;
+    }
+    if let Some(s) = p.get("frontier-mode") {
+        cfg.frontier_mode = s.parse().map_err(anyhow::Error::msg)?;
     }
     if let Some(v) = p.get("artifacts-dir") {
         cfg.artifacts_dir = v.to_string();

@@ -3,13 +3,21 @@
 //! produce an output frontier. Supports the four frontier-type
 //! combinations (V-to-V, V-to-E, E-to-V, E-to-E), push and pull
 //! directions, and idempotent (atomic-free) operation.
+//!
+//! Hybrid-frontier aware: a dense vertex-frontier input takes the
+//! word-sweep fast path through every load-balance policy (no id gather),
+//! and [`advance_bitmap_into`] fuses advance+filter by writing the next
+//! frontier's bits directly during expansion — the per-worker output
+//! queues and the compaction pass disappear, and the bitmap's `fetch_or`
+//! discards duplicates for free (the paper's idempotent-discard
+//! optimization, §5.2.1).
 
-use crate::frontier::{Frontier, FrontierKind};
+use crate::frontier::{DenseBits, Frontier, FrontierKind, FrontierView};
 use crate::graph::{GraphRep, VertexId};
 use crate::load_balance::{self, StrategyKind};
 use crate::operators::OpContext;
 use crate::util::bitset::AtomicBitset;
-use crate::util::{par, pool};
+use crate::util::{bitset, par, pool};
 
 /// What the output frontier contains.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -47,23 +55,34 @@ where
     }
 }
 
-/// Resolve the input items to expand: a vertex frontier expands its ids
-/// (borrowed in place — no clone); an edge frontier expands the
+/// Resolve the input items to expand: a sparse vertex frontier expands
+/// its ids (borrowed in place — no clone); an edge frontier expands the
 /// *destination* vertices of its edge ids (the paper's E-to-* advance
 /// visits the far end's neighbor list), materialized into the caller's
-/// reusable scratch buffer.
+/// reusable scratch buffer. Dense *vertex* frontiers never reach this —
+/// they take the word-sweep fast path — so only dense edge frontiers pay
+/// a materialization here.
 fn expansion_sources<'a, G: GraphRep>(
     g: &G,
     input: &'a Frontier,
     scratch: &'a mut Option<Vec<VertexId>>,
 ) -> &'a [VertexId] {
-    match input.kind {
-        FrontierKind::Vertex => &input.ids,
-        FrontierKind::Edge => {
+    match (input.view(), input.kind) {
+        (FrontierView::Sparse(ids), FrontierKind::Vertex) => ids,
+        (FrontierView::Sparse(ids), FrontierKind::Edge) => {
             // Lazy: only edge frontiers pay the recycler round-trip.
             let buf = scratch.get_or_insert_with(pool::take_ids);
             buf.clear();
-            buf.extend(input.ids.iter().map(|&e| g.edge_dst(e as usize)));
+            buf.extend(ids.iter().map(|&e| g.edge_dst(e as usize)));
+            buf
+        }
+        (FrontierView::Dense(bits), kind) => {
+            let buf = scratch.get_or_insert_with(pool::take_ids);
+            buf.clear();
+            match kind {
+                FrontierKind::Vertex => buf.extend(bits.iter().map(|v| v as VertexId)),
+                FrontierKind::Edge => buf.extend(bits.iter().map(|e| g.edge_dst(e))),
+            }
             buf
         }
     }
@@ -91,23 +110,40 @@ pub fn advance_into<G: GraphRep, F: AdvanceFunctor>(
     out: &mut Frontier,
 ) {
     out.reset(ty.output_kind());
-    let mut scratch = None;
-    let sources = expansion_sources(g, input, &mut scratch);
     let emit_edges = matches!(ty, AdvanceType::V2E | AdvanceType::E2E);
-    load_balance::expand_into(
-        strategy,
-        g,
-        sources,
-        ctx.workers,
-        ctx.counters,
-        |_idx, src, eid, dst, local: &mut Vec<VertexId>| {
-            if functor.apply(src, dst, eid) {
-                local.push(if emit_edges { eid as VertexId } else { dst });
-            }
-        },
-        &mut out.ids,
-    );
-    recycle_sources(scratch);
+    let visit = |_idx: usize, src: VertexId, eid: usize, dst: VertexId, local: &mut Vec<VertexId>| {
+        if functor.apply(src, dst, eid) {
+            local.push(if emit_edges { eid as VertexId } else { dst });
+        }
+    };
+    match input.view() {
+        // Dense vertex frontier: word-aligned bitmap sweep, no gather.
+        FrontierView::Dense(bits) if input.kind == FrontierKind::Vertex => {
+            load_balance::expand_dense_into(
+                strategy,
+                g,
+                bits,
+                ctx.workers,
+                ctx.counters,
+                visit,
+                out.ids_mut(),
+            );
+        }
+        _ => {
+            let mut scratch = None;
+            let sources = expansion_sources(g, input, &mut scratch);
+            load_balance::expand_into(
+                strategy,
+                g,
+                sources,
+                ctx.workers,
+                ctx.counters,
+                visit,
+                out.ids_mut(),
+            );
+            recycle_sources(scratch);
+        }
+    }
 }
 
 /// Push-based advance (allocating wrapper).
@@ -138,22 +174,38 @@ pub fn advance_culled_into<G: GraphRep, F: AdvanceFunctor>(
     out: &mut Frontier,
 ) {
     out.reset(FrontierKind::Vertex);
-    let mut scratch = None;
-    let sources = expansion_sources(g, input, &mut scratch);
-    load_balance::expand_into(
-        strategy,
-        g,
-        sources,
-        ctx.workers,
-        ctx.counters,
-        |_idx, src, eid, dst, local: &mut Vec<VertexId>| {
-            if functor.apply(src, dst, eid) && cull_mask.set(dst as usize) {
-                local.push(dst);
-            }
-        },
-        &mut out.ids,
-    );
-    recycle_sources(scratch);
+    let visit = |_idx: usize, src: VertexId, eid: usize, dst: VertexId, local: &mut Vec<VertexId>| {
+        if functor.apply(src, dst, eid) && cull_mask.set(dst as usize) {
+            local.push(dst);
+        }
+    };
+    match input.view() {
+        FrontierView::Dense(bits) if input.kind == FrontierKind::Vertex => {
+            load_balance::expand_dense_into(
+                strategy,
+                g,
+                bits,
+                ctx.workers,
+                ctx.counters,
+                visit,
+                out.ids_mut(),
+            );
+        }
+        _ => {
+            let mut scratch = None;
+            let sources = expansion_sources(g, input, &mut scratch);
+            load_balance::expand_into(
+                strategy,
+                g,
+                sources,
+                ctx.workers,
+                ctx.counters,
+                visit,
+                out.ids_mut(),
+            );
+            recycle_sources(scratch);
+        }
+    }
 }
 
 /// LB_CULL-style fused advance+filter (allocating wrapper).
@@ -170,62 +222,143 @@ pub fn advance_culled<G: GraphRep, F: AdvanceFunctor>(
     out
 }
 
-/// Pull-based advance ("Inverse_Expand", paper §5.1.4): instead of
-/// expanding the active frontier, scan each *unvisited* vertex's incoming
-/// neighbor list for a member of the current frontier; emit the vertex on
-/// first hit (early exit — the saving that makes bottom-up BFS win on
-/// scale-free graphs). `in_frontier` must answer membership in the current
-/// active frontier. Per-worker discovery lists are recycled scratch
-/// buffers storing (vertex, parent) pairs flat.
+/// Fused advance+filter with a **bitmap output** (paper §5.3 kernel
+/// fusion + §5.2.1 idempotent discard): the expansion writes the next
+/// frontier's bits directly via word-level `fetch_or` — no per-worker
+/// output queues, no compaction pass, and duplicate discoveries are
+/// discarded for free (harmless for idempotent primitives like BFS/CC).
+/// The output frontier is dense over the vertex universe; its cardinality
+/// is sealed at the step boundary before returning.
+pub fn advance_bitmap_into<G: GraphRep, F: AdvanceFunctor>(
+    ctx: &OpContext,
+    g: &G,
+    input: &Frontier,
+    strategy: StrategyKind,
+    functor: &F,
+    out: &mut Frontier,
+) {
+    out.reset_dense(FrontierKind::Vertex, g.num_vertices());
+    {
+        let out_bits = out.dense_bits().expect("reset_dense leaves a dense frontier");
+        let visit =
+            |_idx: usize, src: VertexId, eid: usize, dst: VertexId, _local: &mut Vec<VertexId>| {
+                if functor.apply(src, dst, eid) {
+                    out_bits.insert(dst as usize);
+                }
+            };
+        // The sparse output buffer goes unused in bitmap mode; lend a
+        // recycled scratch so the expansion signature stays uniform.
+        let mut sink = pool::take_ids();
+        match input.view() {
+            FrontierView::Dense(bits) if input.kind == FrontierKind::Vertex => {
+                load_balance::expand_dense_into(
+                    strategy,
+                    g,
+                    bits,
+                    ctx.workers,
+                    ctx.counters,
+                    visit,
+                    &mut sink,
+                );
+            }
+            _ => {
+                let mut scratch = None;
+                let sources = expansion_sources(g, input, &mut scratch);
+                load_balance::expand_into(
+                    strategy,
+                    g,
+                    sources,
+                    ctx.workers,
+                    ctx.counters,
+                    visit,
+                    &mut sink,
+                );
+                recycle_sources(scratch);
+            }
+        }
+        pool::recycle_ids(sink);
+    }
+    out.seal();
+}
+
+/// Fused bitmap advance (allocating wrapper).
+pub fn advance_bitmap<G: GraphRep, F: AdvanceFunctor>(
+    ctx: &OpContext,
+    g: &G,
+    input: &Frontier,
+    strategy: StrategyKind,
+    functor: &F,
+) -> Frontier {
+    let mut out = Frontier::empty(FrontierKind::Vertex);
+    advance_bitmap_into(ctx, g, input, strategy, functor, &mut out);
+    out
+}
+
+/// Pull-based advance ("Inverse_Expand", paper §5.1.4): sweep the
+/// **complement of the visited bitmap** word-aligned — no materialized
+/// unvisited list anywhere — scanning each unvisited vertex's incoming
+/// neighbor list for a member of the current frontier, whose dense bitmap
+/// is the membership oracle (shared with the push phases). The scan
+/// early-exits on the first hit (the saving that makes bottom-up BFS win
+/// on scale-free graphs). `on_discover` runs on the worker that owns the
+/// vertex — each unvisited vertex is examined by exactly one worker, so
+/// per-vertex discovery writes need no extra synchronization. The output
+/// frontier is dense; callers typically OR it into `visited` word-wise
+/// ([`crate::frontier::DenseBits::union_into`]).
 pub fn advance_pull_into<G: GraphRep>(
     ctx: &OpContext,
     g: &G,
-    unvisited: &[VertexId],
-    in_frontier: &AtomicBitset,
-    mut on_discover: impl FnMut(VertexId, VertexId),
+    visited: &AtomicBitset,
+    in_frontier: &DenseBits,
+    on_discover: impl Fn(VertexId, VertexId) + Sync,
     out: &mut Frontier,
 ) {
     assert!(g.has_in_edges(), "pull traversal requires an in-edge view");
-    out.reset(FrontierKind::Vertex);
-    let results = par::run_partitioned(unvisited.len(), ctx.workers, |_, s, e| {
-        let mut found = pool::take_ids(); // flat (vertex, parent) pairs
-        let mut scanned = 0u64;
-        for &v in &unvisited[s..e] {
-            g.for_each_in_neighbor_until(v, |u| {
-                scanned += 1;
-                if in_frontier.get(u as usize) {
-                    found.push(v);
-                    found.push(u);
-                    false // early exit: one visited parent suffices
-                } else {
-                    true
-                }
-            });
-        }
+    let n = g.num_vertices();
+    debug_assert_eq!(visited.len(), n, "visited bitmap must cover the vertex universe");
+    out.reset_dense(FrontierKind::Vertex, n);
+    {
+        let out_bits = out.dense_bits().expect("reset_dense leaves a dense frontier");
+        let frontier_bits = in_frontier.bits();
+        let words = visited.num_words();
+        let scanned_per_worker = par::run_partitioned(words, ctx.workers, |_, ws, we| {
+            let mut scanned = 0u64;
+            for wi in ws..we {
+                let unvisited = !visited.word(wi) & visited.word_mask(wi);
+                bitset::for_each_set_in(unvisited, wi, |i| {
+                    let v = i as VertexId;
+                    g.for_each_in_neighbor_until(v, |u| {
+                        scanned += 1;
+                        if frontier_bits.get(u as usize) {
+                            on_discover(v, u);
+                            out_bits.insert(i);
+                            false // early exit: one visited parent suffices
+                        } else {
+                            true
+                        }
+                    });
+                });
+            }
+            scanned
+        });
+        let scanned: u64 = scanned_per_worker.iter().sum();
         ctx.counters.add_edges(scanned);
         ctx.counters.record_run(scanned as usize);
-        found
-    });
-    ctx.counters.add_kernel_launch();
-    for chunk in results {
-        for pair in chunk.chunks_exact(2) {
-            on_discover(pair[0], pair[1]);
-            out.ids.push(pair[0]);
-        }
-        pool::recycle_ids(chunk);
+        ctx.counters.add_kernel_launch();
     }
+    out.seal();
 }
 
 /// Pull-based advance (allocating wrapper).
 pub fn advance_pull<G: GraphRep>(
     ctx: &OpContext,
     g: &G,
-    unvisited: &[VertexId],
-    in_frontier: &AtomicBitset,
-    on_discover: impl FnMut(VertexId, VertexId),
+    visited: &AtomicBitset,
+    in_frontier: &DenseBits,
+    on_discover: impl Fn(VertexId, VertexId) + Sync,
 ) -> Frontier {
     let mut out = Frontier::empty(FrontierKind::Vertex);
-    advance_pull_into(ctx, g, unvisited, in_frontier, on_discover, &mut out);
+    advance_pull_into(ctx, g, visited, in_frontier, on_discover, &mut out);
     out
 }
 
@@ -249,7 +382,7 @@ mod tests {
         let out = advance(&ctx, &g, &f, AdvanceType::V2V, StrategyKind::Lb, &|_s, _d, _e| true);
         assert_eq!(out.kind, FrontierKind::Vertex);
         // both 1 and 2 discover 3: duplicates retained without culling
-        assert_eq!(out.ids, vec![3, 3]);
+        assert_eq!(out.ids(), &[3, 3]);
     }
 
     #[test]
@@ -260,7 +393,7 @@ mod tests {
         let f = Frontier::single(0);
         let out = advance(&ctx, &g, &f, AdvanceType::V2E, StrategyKind::ThreadExpand, &|_, _, _| true);
         assert_eq!(out.kind, FrontierKind::Edge);
-        let mut ids = out.ids.clone();
+        let mut ids = out.ids().to_vec();
         ids.sort_unstable();
         assert_eq!(ids, vec![0, 1]); // edges 0->1, 0->2
     }
@@ -273,7 +406,7 @@ mod tests {
         // edge frontier containing edge id of (0 -> 1)
         let f = Frontier::edges(vec![0]);
         let out = advance(&ctx, &g, &f, AdvanceType::E2V, StrategyKind::Twc, &|_, _, _| true);
-        assert_eq!(out.ids, vec![3]); // neighbors of vertex 1
+        assert_eq!(out.ids(), &[3]); // neighbors of vertex 1
     }
 
     #[test]
@@ -284,7 +417,7 @@ mod tests {
         let f = Frontier::vertices(vec![0, 3]);
         let out =
             advance(&ctx, &g, &f, AdvanceType::V2V, StrategyKind::Lb, &|_s, d: u32, _e| d % 2 == 0);
-        let mut ids = out.ids.clone();
+        let mut ids = out.ids().to_vec();
         ids.sort_unstable();
         assert_eq!(ids, vec![2, 4]);
     }
@@ -297,7 +430,38 @@ mod tests {
         let f = Frontier::vertices(vec![1, 2]);
         let mask = AtomicBitset::new(5);
         let out = advance_culled(&ctx, &g, &f, StrategyKind::LbCull, &|_, _, _| true, &mask);
-        assert_eq!(out.ids, vec![3]); // duplicate 3 culled in-pass
+        assert_eq!(out.ids(), &[3]); // duplicate 3 culled in-pass
+    }
+
+    #[test]
+    fn dense_input_matches_sparse_input() {
+        let g = diamond();
+        let c = WarpCounters::new();
+        let ctx = OpContext::new(2, &c);
+        let sparse = Frontier::vertices(vec![1, 2]);
+        let want = advance(&ctx, &g, &sparse, AdvanceType::V2V, StrategyKind::Lb, &|_, _, _| true);
+        let mut dense = Frontier::dense_empty(FrontierKind::Vertex, 5);
+        dense.push(1);
+        dense.push(2);
+        let got = advance(&ctx, &g, &dense, AdvanceType::V2V, StrategyKind::Lb, &|_, _, _| true);
+        let mut a = want.ids().to_vec();
+        let mut b = got.ids().to_vec();
+        a.sort_unstable();
+        b.sort_unstable();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn bitmap_advance_fuses_dedup() {
+        let g = diamond();
+        let c = WarpCounters::new();
+        let ctx = OpContext::new(2, &c);
+        let f = Frontier::vertices(vec![1, 2]);
+        let out = advance_bitmap(&ctx, &g, &f, StrategyKind::Lb, &|_, _, _| true);
+        assert!(out.is_dense());
+        // both 1 and 2 discover 3; the fetch_or discards the duplicate
+        assert_eq!(out.len(), 1);
+        assert!(out.contains(3));
     }
 
     #[test]
@@ -305,12 +469,17 @@ mod tests {
         let g = diamond();
         let c = WarpCounters::new();
         let ctx = OpContext::new(2, &c);
-        let active = AtomicBitset::new(5);
-        active.set(1);
-        active.set(2);
-        let unvisited = vec![3u32, 4u32];
-        let out = advance_pull(&ctx, &g, &unvisited, &active, |_v, _p| {});
-        assert_eq!(out.ids, vec![3]); // 3 has visited in-parents; 4 does not
+        let visited = AtomicBitset::new(5);
+        for v in [0, 1, 2] {
+            visited.set(v);
+        }
+        let mut active = Frontier::dense_empty(FrontierKind::Vertex, 5);
+        active.push(1);
+        active.push(2);
+        let out = advance_pull(&ctx, &g, &visited, active.dense_bits().unwrap(), |_v, _p| {});
+        assert!(out.is_dense());
+        assert_eq!(out.len(), 1);
+        assert!(out.contains(3)); // 3 has visited in-parents; 4 does not
     }
 
     #[test]
@@ -321,12 +490,15 @@ mod tests {
         let g = builder::from_edges(65, &edges);
         let c = WarpCounters::new();
         let ctx = OpContext::new(1, &c);
-        let active = AtomicBitset::new(65);
+        let visited = AtomicBitset::new(65);
+        let mut active = Frontier::dense_empty(FrontierKind::Vertex, 65);
         for u in 0..64 {
-            active.set(u);
+            visited.set(u);
+            active.push(u as u32);
         }
-        let out = advance_pull(&ctx, &g, &[64], &active, |_, _| {});
-        assert_eq!(out.ids, vec![64]);
+        let out = advance_pull(&ctx, &g, &visited, active.dense_bits().unwrap(), |_, _| {});
+        assert_eq!(out.len(), 1);
+        assert!(out.contains(64));
         assert_eq!(c.edges(), 1, "early exit must stop at the first visited parent");
     }
 }

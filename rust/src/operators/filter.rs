@@ -14,11 +14,11 @@
 //! any [`crate::graph::GraphRep`] advance (including the fused LB_CULL
 //! path over compressed graphs).
 
-use crate::frontier::Frontier;
+use crate::frontier::{Frontier, FrontierView};
 use crate::graph::VertexId;
 use crate::operators::OpContext;
 use crate::util::bitset::AtomicBitset;
-use crate::util::{par, pool};
+use crate::util::{bitset, par, pool};
 
 /// Validity functor, mirroring the paper's `FilterFunctor(node, ...)`.
 pub trait FilterFunctor: Sync {
@@ -35,32 +35,62 @@ where
     }
 }
 
-/// Exact filter: keeps passing items, preserves relative order; writes the
-/// compacted frontier into a caller-owned buffer.
+/// Exact filter, representation-preserving: a sparse input compacts into
+/// a sparse output (parallel per-chunk collect, relative order kept); a
+/// dense input sweeps its bitmap word-aligned and writes a dense output
+/// bitmap directly — no queues, no compaction pass, O(universe/64) + one
+/// functor call per member.
 pub fn filter_into<F: FilterFunctor>(
     ctx: &OpContext,
     input: &Frontier,
     functor: &F,
     out: &mut Frontier,
 ) {
-    out.reset(input.kind);
     ctx.counters.add_kernel_launch();
-    let chunks = par::run_partitioned(input.ids.len(), ctx.workers, |_, s, e| {
-        let mut keep = pool::take_ids();
-        for &id in &input.ids[s..e] {
-            if functor.keep(id) {
-                keep.push(id);
+    match input.view() {
+        FrontierView::Sparse(ids) => {
+            out.reset(input.kind);
+            let chunks = par::run_partitioned(ids.len(), ctx.workers, |_, s, e| {
+                let mut keep = pool::take_ids();
+                for &id in &ids[s..e] {
+                    if functor.keep(id) {
+                        keep.push(id);
+                    }
+                }
+                ctx.counters.record_run(e - s);
+                keep
+            });
+            let kept: usize = chunks.iter().map(Vec::len).sum();
+            ctx.counters.add_culled((ids.len() - kept) as u64);
+            let sink = out.ids_mut();
+            sink.reserve(kept);
+            for c in chunks {
+                sink.extend_from_slice(&c);
+                pool::recycle_ids(c);
             }
         }
-        ctx.counters.record_run(e - s);
-        keep
-    });
-    let kept: usize = chunks.iter().map(Vec::len).sum();
-    ctx.counters.add_culled((input.ids.len() - kept) as u64);
-    out.ids.reserve(kept);
-    for c in chunks {
-        out.ids.extend_from_slice(&c);
-        pool::recycle_ids(c);
+        FrontierView::Dense(bits) => {
+            out.reset_dense(input.kind, bits.universe());
+            {
+                let out_bits = out.dense_bits().expect("dense output");
+                let src = bits.bits();
+                let words = src.num_words();
+                par::run_partitioned(words, ctx.workers, |_, ws, we| {
+                    let mut seen = 0usize;
+                    for wi in ws..we {
+                        bitset::for_each_set_in(src.word(wi), wi, |i| {
+                            seen += 1;
+                            if functor.keep(i as VertexId) {
+                                out_bits.insert(i);
+                            }
+                        });
+                    }
+                    ctx.counters.record_run(seen);
+                });
+            }
+            out.seal();
+            ctx.counters.add_culled((input.len() - out.len()) as u64);
+        }
     }
 }
 
@@ -92,11 +122,44 @@ pub fn filter_uniquify_into<F: FilterFunctor>(
 ) {
     out.reset(input.kind);
     ctx.counters.add_kernel_launch();
-    let chunks = par::run_partitioned(input.ids.len(), ctx.workers, |_, s, e| {
+    // A dense input is already duplicate-free (the bitmap discarded them
+    // at insertion), so the history heuristics would be pure overhead:
+    // sweep the bitmap word-aligned applying only the functor + the
+    // global claim.
+    if let FrontierView::Dense(bits) = input.view() {
+        let src = bits.bits();
+        let words = src.num_words();
+        let chunks = par::run_partitioned(words, ctx.workers, |_, ws, we| {
+            let mut keep = pool::take_ids();
+            let mut seen = 0usize;
+            for wi in ws..we {
+                bitset::for_each_set_in(src.word(wi), wi, |i| {
+                    seen += 1;
+                    let id = i as VertexId;
+                    if functor.keep(id) && visited_mask.set(i) {
+                        keep.push(id);
+                    }
+                });
+            }
+            ctx.counters.record_run(seen);
+            keep
+        });
+        let kept: usize = chunks.iter().map(Vec::len).sum();
+        ctx.counters.add_culled((input.len() - kept) as u64);
+        let sink = out.ids_mut();
+        sink.reserve(kept);
+        for c in chunks {
+            sink.extend_from_slice(&c);
+            pool::recycle_ids(c);
+        }
+        return;
+    }
+    let ids = input.ids();
+    let chunks = par::run_partitioned(ids.len(), ctx.workers, |_, s, e| {
         let mut keep = pool::take_ids();
         let mut block_hist = [VertexId::MAX; BLOCK_HASH];
         let mut warp_hist = [VertexId::MAX; WARP_HASH];
-        for &id in &input.ids[s..e] {
+        for &id in &ids[s..e] {
             // warp-level history: cheapest check first
             let wslot = (id as usize) % WARP_HASH;
             if warp_hist[wslot] == id {
@@ -122,10 +185,11 @@ pub fn filter_uniquify_into<F: FilterFunctor>(
         keep
     });
     let kept: usize = chunks.iter().map(Vec::len).sum();
-    ctx.counters.add_culled((input.ids.len() - kept) as u64);
-    out.ids.reserve(kept);
+    ctx.counters.add_culled((ids.len() - kept) as u64);
+    let sink = out.ids_mut();
+    sink.reserve(kept);
     for c in chunks {
-        out.ids.extend_from_slice(&c);
+        sink.extend_from_slice(&c);
         pool::recycle_ids(c);
     }
 }
@@ -150,10 +214,12 @@ pub fn split<F: FilterFunctor>(
     functor: &F,
 ) -> (Frontier, Frontier) {
     ctx.counters.add_kernel_launch();
-    let chunks = par::run_partitioned(input.ids.len(), ctx.workers, |_, s, e| {
+    let mut dense_scratch = pool::take_ids();
+    let ids = input.sparse_view(&mut dense_scratch);
+    let chunks = par::run_partitioned(ids.len(), ctx.workers, |_, s, e| {
         let mut pass = Vec::new();
         let mut fail = Vec::new();
-        for &id in &input.ids[s..e] {
+        for &id in &ids[s..e] {
             if functor.keep(id) {
                 pass.push(id);
             } else {
@@ -169,7 +235,8 @@ pub fn split<F: FilterFunctor>(
         pass.extend(p);
         fail.extend(f);
     }
-    (Frontier { kind: input.kind, ids: pass }, Frontier { kind: input.kind, ids: fail })
+    pool::recycle_ids(dense_scratch);
+    (Frontier::from_ids(input.kind, pass), Frontier::from_ids(input.kind, fail))
 }
 
 #[cfg(test)]
@@ -183,8 +250,21 @@ mod tests {
         let ctx = OpContext::new(3, &c);
         let f = Frontier::vertices((0..100).collect());
         let out = filter(&ctx, &f, &|v: u32| v % 7 == 0);
-        assert_eq!(out.ids, (0..100).filter(|v| v % 7 == 0).collect::<Vec<u32>>());
-        assert_eq!(c.culled(), 100 - out.ids.len() as u64);
+        assert_eq!(out.ids().to_vec(), (0..100).filter(|v| v % 7 == 0).collect::<Vec<u32>>());
+        assert_eq!(c.culled(), 100 - out.len() as u64);
+    }
+
+    #[test]
+    fn dense_filter_stays_dense_and_matches_sparse() {
+        let c = WarpCounters::new();
+        let ctx = OpContext::new(3, &c);
+        let sparse = Frontier::vertices((0..200).collect());
+        let want = filter(&ctx, &sparse, &|v: u32| v % 3 == 0);
+        let dense = Frontier::all_vertices(200);
+        let got = filter(&ctx, &dense, &|v: u32| v % 3 == 0);
+        assert!(got.is_dense());
+        assert_eq!(got.len(), want.len());
+        assert_eq!(got.iter().collect::<Vec<_>>(), want.ids().to_vec());
     }
 
     #[test]
@@ -194,7 +274,7 @@ mod tests {
         let mask = AtomicBitset::new(16);
         let f = Frontier::vertices(vec![3, 3, 5, 3, 5, 7, 7, 7, 3]);
         let out = filter_uniquify(&ctx, &f, &|_| true, &mask);
-        let mut ids = out.ids.clone();
+        let mut ids = out.ids().to_vec();
         ids.sort_unstable();
         assert_eq!(ids, vec![3, 5, 7]);
     }
@@ -207,7 +287,22 @@ mod tests {
         mask.set(2); // already visited in an earlier iteration
         let f = Frontier::vertices(vec![1, 2, 3]);
         let out = filter_uniquify(&ctx, &f, &|_| true, &mask);
-        assert_eq!(out.ids, vec![1, 3]);
+        assert_eq!(out.ids(), &[1, 3]);
+    }
+
+    #[test]
+    fn uniquify_dense_input_applies_claim_only() {
+        let c = WarpCounters::new();
+        let ctx = OpContext::new(2, &c);
+        let mask = AtomicBitset::new(64);
+        mask.set(2); // already visited in an earlier iteration
+        let mut f = Frontier::dense_empty(crate::frontier::FrontierKind::Vertex, 64);
+        for v in [1, 2, 3, 40] {
+            f.push(v);
+        }
+        let out = filter_uniquify(&ctx, &f, &|v: u32| v != 40, &mask);
+        assert_eq!(out.ids(), &[1, 3]); // 2 pre-claimed, 40 filtered out
+        assert!(mask.get(3) && !mask.get(40));
     }
 
     #[test]
@@ -216,8 +311,8 @@ mod tests {
         let ctx = OpContext::new(2, &c);
         let f = Frontier::vertices((0..10).collect());
         let (near, far) = split(&ctx, &f, &|v: u32| v < 5);
-        assert_eq!(near.ids, vec![0, 1, 2, 3, 4]);
-        assert_eq!(far.ids, vec![5, 6, 7, 8, 9]);
+        assert_eq!(near.ids(), &[0, 1, 2, 3, 4]);
+        assert_eq!(far.ids(), &[5, 6, 7, 8, 9]);
     }
 
     #[test]

@@ -7,10 +7,55 @@
 use crate::frontier::Frontier;
 use crate::graph::VertexId;
 use crate::operators::OpContext;
-use crate::util::par;
+use crate::util::{par, pool};
 
 /// Split `input` into `buckets` output frontiers by `bucket_of` (values
-/// >= buckets are clamped into the last bucket). Stable within buckets.
+/// >= buckets are clamped into the last bucket), writing into
+/// caller-owned frontiers — the zero-alloc variant: per-worker scratch
+/// comes from the recycler as one flat `(bucket, id)` pair stream (no
+/// per-worker-per-bucket vectors), and `outs` keeps its capacity across
+/// calls. Stable within buckets; dense inputs split in ascending order.
+pub fn multisplit_into<F>(
+    ctx: &OpContext,
+    input: &Frontier,
+    buckets: usize,
+    bucket_of: F,
+    outs: &mut Vec<Frontier>,
+) where
+    F: Fn(VertexId) -> usize + Sync,
+{
+    assert!(buckets >= 1);
+    assert!(buckets <= u32::MAX as usize, "bucket index must fit the flat pair encoding");
+    ctx.counters.add_kernel_launch();
+    outs.resize_with(buckets, Frontier::default);
+    for o in outs.iter_mut() {
+        o.reset(input.kind);
+    }
+    // Per-worker flat (bucket, id) pair streams, then a stable
+    // concatenation pass — the CPU analog of the GPU's per-block
+    // histogram + scan + scatter, with recycled scratch.
+    let mut dense_scratch = pool::take_ids();
+    let ids = input.sparse_view(&mut dense_scratch);
+    let chunks = par::run_partitioned(ids.len(), ctx.workers, |_, s, e| {
+        let mut pairs = pool::take_ids();
+        for &id in &ids[s..e] {
+            let b = bucket_of(id).min(buckets - 1);
+            pairs.push(b as u32);
+            pairs.push(id);
+        }
+        ctx.counters.record_run(e - s);
+        pairs
+    });
+    for pairs in chunks {
+        for pair in pairs.chunks_exact(2) {
+            outs[pair[0] as usize].push(pair[1]);
+        }
+        pool::recycle_ids(pairs);
+    }
+    pool::recycle_ids(dense_scratch);
+}
+
+/// Split `input` into `buckets` output frontiers (allocating wrapper).
 pub fn multisplit<F>(
     ctx: &OpContext,
     input: &Frontier,
@@ -20,26 +65,9 @@ pub fn multisplit<F>(
 where
     F: Fn(VertexId) -> usize + Sync,
 {
-    assert!(buckets >= 1);
-    ctx.counters.add_kernel_launch();
-    // Per-chunk bucket vectors, then stable concatenation per bucket —
-    // the CPU analog of the GPU's per-block histogram + scan + scatter.
-    let chunks = par::run_partitioned(input.ids.len(), ctx.workers, |_, s, e| {
-        let mut local: Vec<Vec<VertexId>> = vec![Vec::new(); buckets];
-        for &id in &input.ids[s..e] {
-            let b = bucket_of(id).min(buckets - 1);
-            local[b].push(id);
-        }
-        ctx.counters.record_run(e - s);
-        local
-    });
-    let mut out: Vec<Frontier> = (0..buckets).map(|_| Frontier::empty(input.kind)).collect();
-    for chunk in chunks {
-        for (b, ids) in chunk.into_iter().enumerate() {
-            out[b].ids.extend(ids);
-        }
-    }
-    out
+    let mut outs = Vec::new();
+    multisplit_into(ctx, input, buckets, bucket_of, &mut outs);
+    outs
 }
 
 /// Multi-level priority queue built on multisplit: maintains `levels`
@@ -105,7 +133,10 @@ mod tests {
         let out = multisplit(&ctx, &f, 4, |v| (v % 4) as usize);
         assert_eq!(out.len(), 4);
         for (b, fr) in out.iter().enumerate() {
-            assert_eq!(fr.ids, (0..100).filter(|v| (v % 4) as usize == b).collect::<Vec<u32>>());
+            assert_eq!(
+                fr.ids().to_vec(),
+                (0..100).filter(|v| (v % 4) as usize == b).collect::<Vec<u32>>()
+            );
         }
     }
 
@@ -115,8 +146,34 @@ mod tests {
         let ctx = OpContext::new(1, &c);
         let f = Frontier::vertices(vec![1, 2, 3]);
         let out = multisplit(&ctx, &f, 2, |v| v as usize * 10);
-        assert_eq!(out[1].ids, vec![1, 2, 3]);
+        assert_eq!(out[1].ids(), &[1, 2, 3]);
         assert!(out[0].is_empty());
+    }
+
+    #[test]
+    fn into_variant_reuses_output_frontiers() {
+        let c = WarpCounters::new();
+        let ctx = OpContext::new(2, &c);
+        let f = Frontier::vertices((0..64).collect());
+        let mut outs = Vec::new();
+        multisplit_into(&ctx, &f, 2, |v| (v % 2) as usize, &mut outs);
+        let caps: Vec<usize> = outs.iter().map(Frontier::capacity).collect();
+        multisplit_into(&ctx, &f, 2, |v| (v % 2) as usize, &mut outs);
+        assert_eq!(outs[0].ids(), (0..64).step_by(2).collect::<Vec<u32>>().as_slice());
+        for (o, cap) in outs.iter().zip(caps) {
+            assert_eq!(o.capacity(), cap, "warm output buffers must not grow");
+        }
+    }
+
+    #[test]
+    fn dense_input_splits_ascending() {
+        let c = WarpCounters::new();
+        let ctx = OpContext::new(2, &c);
+        let f = Frontier::all_vertices(10);
+        let out = multisplit(&ctx, &f, 3, |v| (v % 3) as usize);
+        assert_eq!(out[0].ids(), &[0, 3, 6, 9]);
+        assert_eq!(out[1].ids(), &[1, 4, 7]);
+        assert_eq!(out[2].ids(), &[2, 5, 8]);
     }
 
     #[test]

@@ -4,17 +4,20 @@
 
 use crate::frontier::Frontier;
 use crate::operators::OpContext;
-use crate::util::par;
 use crate::util::rng::Pcg32;
+use crate::util::{par, pool};
 
 /// Keep each frontier element independently with probability `p`
-/// (deterministic per seed; per-chunk RNG streams).
+/// (deterministic per seed; per-chunk RNG streams). Dense inputs sample
+/// in ascending id order.
 pub fn sample(ctx: &OpContext, input: &Frontier, p: f64, seed: u64) -> Frontier {
     ctx.counters.add_kernel_launch();
-    let chunks = par::run_partitioned(input.ids.len(), ctx.workers, |w, s, e| {
+    let mut dense_scratch = pool::take_ids();
+    let items = input.sparse_view(&mut dense_scratch);
+    let chunks = par::run_partitioned(items.len(), ctx.workers, |w, s, e| {
         let mut rng = Pcg32::with_stream(seed, w as u64);
         let mut keep = Vec::new();
-        for &id in &input.ids[s..e] {
+        for &id in &items[s..e] {
             if rng.f64() < p {
                 keep.push(id);
             }
@@ -26,14 +29,15 @@ pub fn sample(ctx: &OpContext, input: &Frontier, p: f64, seed: u64) -> Frontier 
     for c in chunks {
         ids.extend(c);
     }
-    Frontier { kind: input.kind, ids }
+    pool::recycle_ids(dense_scratch);
+    Frontier::from_ids(input.kind, ids)
 }
 
 /// Sample exactly `k` elements without replacement (reservoir).
 pub fn sample_k(input: &Frontier, k: usize, seed: u64) -> Frontier {
     let mut rng = Pcg32::new(seed);
     let mut reservoir: Vec<u32> = Vec::with_capacity(k);
-    for (i, &id) in input.ids.iter().enumerate() {
+    for (i, id) in input.iter().enumerate() {
         if i < k {
             reservoir.push(id);
         } else {
@@ -43,7 +47,7 @@ pub fn sample_k(input: &Frontier, k: usize, seed: u64) -> Frontier {
             }
         }
     }
-    Frontier { kind: input.kind, ids: reservoir }
+    Frontier::from_ids(input.kind, reservoir)
 }
 
 #[cfg(test)]
@@ -66,7 +70,7 @@ mod tests {
         let c = WarpCounters::new();
         let ctx = OpContext::new(2, &c);
         let f = Frontier::vertices((0..1000).collect());
-        assert_eq!(sample(&ctx, &f, 0.5, 7).ids, sample(&ctx, &f, 0.5, 7).ids);
+        assert_eq!(sample(&ctx, &f, 0.5, 7).into_ids(), sample(&ctx, &f, 0.5, 7).into_ids());
     }
 
     #[test]
@@ -74,8 +78,8 @@ mod tests {
         let f = Frontier::vertices((0..500).collect());
         let s = sample_k(&f, 50, 9);
         assert_eq!(s.len(), 50);
-        assert!(s.ids.iter().all(|&v| v < 500));
-        let mut uniq = s.ids.clone();
+        assert!(s.iter().all(|v| v < 500));
+        let mut uniq = s.ids().to_vec();
         uniq.sort_unstable();
         uniq.dedup();
         assert_eq!(uniq.len(), 50);

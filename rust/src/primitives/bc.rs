@@ -91,7 +91,7 @@ pub fn bc_from_source<G: GraphRep>(
         let next = advance::advance(&ctx, g, &frontier, advance::AdvanceType::V2V, strategy, &fun);
         enactor.record_iteration(input_len, next.len(), t.elapsed_ms(), false);
         if !next.is_empty() {
-            levels.push(next.ids.clone());
+            levels.push(next.ids().to_vec());
         }
         frontier = next;
     }

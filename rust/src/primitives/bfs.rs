@@ -64,15 +64,14 @@ pub fn bfs<G: GraphRep>(g: &G, src: VertexId, config: &Config) -> (BfsProblem, B
     let idempotent = config.idempotence;
 
     // Zero-alloc pipeline state: the enactor's ping-pong frontier queues
-    // (taken for the run, returned at the end), a reusable raw-output
-    // frontier for the idempotent advance+filter pair, and lazily-built
-    // pull-phase scratch (active bitmap + unvisited list) that survives
-    // across iterations.
+    // (taken for the run, returned at the end) plus a reusable raw-output
+    // frontier for the sparse idempotent advance+filter pair. The pull
+    // phase shares the input frontier's **dense bitmap** as its
+    // membership oracle and sweeps the complement of `visited` in place —
+    // no unvisited list, no second active bitmap anywhere.
     let mut bufs = std::mem::take(&mut enactor.frontiers);
     bufs.reset_single(src);
     let mut raw = Frontier::default();
-    let mut active: Option<AtomicBitset> = None;
-    let mut unvisited: Vec<VertexId> = Vec::new();
 
     let mut depth: u32 = 0;
     let mut visited_count: usize = 1;
@@ -92,35 +91,33 @@ pub fn bfs<G: GraphRep>(g: &G, src: VertexId, config: &Config) -> (BfsProblem, B
         match dir {
             Direction::Pull => {
                 pull_iters += 1;
-                // Rebuild the active-frontier bitmap + unvisited list in
-                // the reusable scratch.
-                let bitmap = active.get_or_insert_with(|| AtomicBitset::new(n));
-                bitmap.clear_all();
-                for &v in &bufs.current().ids {
-                    bitmap.set(v as usize);
-                }
-                visited.unset_indices_into(&mut unvisited);
+                // Share the dense bitmap: the current frontier *is* the
+                // pull membership oracle (converted in place on first
+                // use; a pull-worthy frontier is dense already in auto
+                // mode, so this is usually a no-op).
+                bufs.current_mut().to_dense(n);
                 let ctx = enactor.ctx();
                 let d = depth;
-                let (_, out) = bufs.split_mut();
+                let (input, out) = bufs.split_mut();
+                let in_bits = input.dense_bits().expect("pull input is dense");
                 advance::advance_pull_into(
                     &ctx,
                     g,
-                    &unvisited,
-                    bitmap,
+                    &visited,
+                    in_bits,
                     |v, parent| {
                         labels[v as usize].store(d, Ordering::Relaxed);
                         preds[v as usize].store(parent, Ordering::Relaxed);
                     },
                     out,
                 );
-                for &v in &out.ids {
-                    visited.set(v as usize);
-                }
+                // Word-wise visited |= discovered: no per-vertex loop.
+                out.dense_bits().expect("pull output is dense").union_into(&visited);
             }
             Direction::Push => {
                 push_iters += 1;
                 let strategy = enactor.strategy_for(g, input_len);
+                let dense_out = enactor.densify_output(g, input_len);
                 let ctx = enactor.ctx();
                 let d = depth;
                 if matches!(strategy, StrategyKind::LbCull) || !idempotent {
@@ -137,19 +134,41 @@ pub fn bfs<G: GraphRep>(g: &G, src: VertexId, config: &Config) -> (BfsProblem, B
                         }
                     };
                     let (input, out) = bufs.split_mut();
-                    advance::advance_into(
-                        &ctx,
-                        g,
-                        input,
-                        advance::AdvanceType::V2V,
-                        strategy,
-                        &fun,
-                        out,
-                    );
+                    if dense_out {
+                        advance::advance_bitmap_into(&ctx, g, input, strategy, &fun, out);
+                    } else {
+                        advance::advance_into(
+                            &ctx,
+                            g,
+                            input,
+                            advance::AdvanceType::V2V,
+                            strategy,
+                            &fun,
+                            out,
+                        );
+                    }
+                } else if dense_out {
+                    // Idempotent-discard path (§5.2.1): unconditional
+                    // label writes + bitmap output. Stale duplicate
+                    // discoveries are harmless and the fetch_or discards
+                    // them for free, so the follow-up uniquify pass
+                    // disappears entirely.
+                    let fun = |s: VertexId, dst: VertexId, _e: usize| {
+                        if labels[dst as usize].load(Ordering::Relaxed) == INFINITY_DEPTH {
+                            labels[dst as usize].store(d, Ordering::Relaxed);
+                            preds[dst as usize].store(s, Ordering::Relaxed);
+                            true
+                        } else {
+                            false
+                        }
+                    };
+                    let (input, out) = bufs.split_mut();
+                    advance::advance_bitmap_into(&ctx, g, input, strategy, &fun, out);
+                    // keep the visited mask (pull oracle + later sparse
+                    // uniquify rounds) coherent, word-wise
+                    out.dense_bits().expect("bitmap advance output").union_into(&visited);
                 } else {
-                    // Idempotent path: no atomics on discovery — write the
-                    // label unconditionally (idempotent op), emit dups, and
-                    // cull them inexactly in the follow-up filter.
+                    // Sparse idempotent path: emit dups, cull inexactly.
                     let fun = |s: VertexId, dst: VertexId, _e: usize| {
                         if labels[dst as usize].load(Ordering::Relaxed) == INFINITY_DEPTH {
                             labels[dst as usize].store(d, Ordering::Relaxed);
@@ -175,6 +194,11 @@ pub fn bfs<G: GraphRep>(g: &G, src: VertexId, config: &Config) -> (BfsProblem, B
 
         let out_len = bufs.next().len();
         visited_count += out_len;
+        // Ligra-style downswitch: a shrunken dense frontier converts back
+        // to a queue before the next iteration's expansion.
+        if bufs.next().is_dense() && !enactor.densify_output(g, out_len) {
+            bufs.next_mut().to_sparse();
+        }
         if dir == Direction::Push && !idempotent {
             // one visited-mask atomic per traversed edge (batched stat —
             // a per-edge atomic counter would double the atomic traffic)

@@ -1,23 +1,34 @@
 //! Connected components (paper §6.4), after Soman et al.: alternating
 //! **hooking** (an operation over the edge frontier trying to join the two
-//! endpoints' components) and **pointer-jumping** (a filter over the
-//! vertex frontier collapsing component trees to stars), repeated until no
-//! component id changes.
+//! endpoints' components) and **pointer-jumping** (a pass over the vertex
+//! frontier collapsing component trees to stars), repeated until no
+//! active edge remains.
 //!
 //! Within one hooking round every write is oriented consistently (odd
 //! rounds: higher root id hooks under lower; even rounds: the reverse —
 //! Soman's alternation, which speeds convergence), so the parent links
 //! cannot form cycles. Edges are only *dropped* from the frontier by the
-//! filter step after pointer-jumping has stabilized the labels — dropping
+//! settle pass after pointer-jumping has stabilized the labels — dropping
 //! on transient mid-round ids could split components (lost-update races).
+//!
+//! Frontier representation: the edge frontier starts as the full dense
+//! bitmap (`all_edges`, O(m/64) to build) and the vertex frontier for
+//! pointer-jumping is one hoisted dense full bitmap — the hybrid engine
+//! demotes the edge frontier to a queue once few edges stay active.
+//! Representations without O(1) edge-endpoint access take the
+//! **vertex-grouped hooking walk** ([`cc_walk`]): each round streams
+//! `for_each_neighbor` over vertices that still own live edges (word-
+//! probed in the edge bitmap), so no 2×m endpoint table is ever
+//! materialized — one m-bit bitmap replaces 8·m bytes of scratch.
 
 use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
 
 use crate::config::Config;
 use crate::enactor::{Enactor, RunResult};
-use crate::frontier::Frontier;
+use crate::frontier::{Frontier, FrontierKind};
 use crate::graph::{GraphRep, VertexId};
 use crate::operators::{compute, filter};
+use crate::util::bitset::AtomicBitset;
 use crate::util::par;
 use crate::util::timer::Timer;
 
@@ -26,55 +37,66 @@ pub struct CcProblem {
     pub num_components: usize,
 }
 
-/// Generic over the graph representation. Hooking random-accesses edge
-/// endpoints by id every round; raw CSR answers that in O(1) from its
-/// arrays, while a compressed representation would pay a binary search
-/// plus a prefix decode *per edge per round* — so for non-O(1)
-/// representations the endpoints are materialized once up front with a
-/// single streaming decode (working-set cost: two edge-sized arrays,
-/// amortized over every hooking round).
+/// Soman orientation: pick (winner, loser) roots for one hook.
+#[inline]
+fn orient(odd: bool, cs: u32, cd: u32) -> (u32, u32) {
+    if odd == (cs < cd) {
+        (cs, cd)
+    } else {
+        (cd, cs)
+    }
+}
+
+/// Pointer-jumping to stars: repeat `comp[v] = comp[comp[v]]` passes over
+/// the (dense, hoisted) vertex frontier until stable.
+fn pointer_jump(enactor: &Enactor, vertex_frontier: &Frontier, comp: &[AtomicU32]) {
+    let jumping = AtomicBool::new(true);
+    while jumping.swap(false, Ordering::Relaxed) {
+        let ctx = enactor.ctx();
+        compute::compute(&ctx, vertex_frontier, |v: VertexId| {
+            let c = comp[v as usize].load(Ordering::Relaxed);
+            let cc = comp[c as usize].load(Ordering::Relaxed);
+            if c != cc {
+                comp[v as usize].store(cc, Ordering::Relaxed);
+                jumping.store(true, Ordering::Relaxed);
+            }
+        });
+    }
+}
+
+fn finish(comp: &[AtomicU32]) -> CcProblem {
+    let component: Vec<u32> = comp.iter().map(|a| a.load(Ordering::Relaxed)).collect();
+    let mut roots: Vec<u32> = component.clone();
+    roots.sort_unstable();
+    roots.dedup();
+    CcProblem { component, num_components: roots.len() }
+}
+
+/// Generic over the graph representation. Raw CSR answers edge-endpoint
+/// lookups in O(1) and hooks straight off the hybrid edge frontier; a
+/// compressed representation would pay a binary search plus a prefix
+/// decode *per edge per round*, so it takes the vertex-grouped walk
+/// instead (see module docs) — no endpoint table either way.
 pub fn cc<G: GraphRep>(g: &G, config: &Config) -> (CcProblem, RunResult) {
     let n = g.num_vertices();
     let m = g.num_edges();
     let mut enactor = Enactor::new(config.clone());
     enactor.begin_run();
 
-    let table: Option<(Vec<VertexId>, Vec<VertexId>)> = if G::O1_EDGE_ACCESS {
-        None
-    } else {
-        // One streaming decode of the whole graph, on the worker pool:
-        // vertex ranges partition the edge-id space into disjoint slots,
-        // so per-worker writes need no synchronization (same pattern as
-        // neighborhood_reduce's exclusive output slots).
-        let mut srcs = vec![0 as VertexId; m];
-        let mut dsts = vec![0 as VertexId; m];
-        let src_slots = par::Slots::new(srcs.as_mut_slice());
-        let dst_slots = par::Slots::new(dsts.as_mut_slice());
-        let (src_slots, dst_slots) = (&src_slots, &dst_slots);
-        par::run_partitioned(n, enactor.workers, |_, s, e| {
-            for v in s..e {
-                let v = v as VertexId;
-                g.for_each_neighbor(v, |eid, d| {
-                    // SAFETY: edge id ranges of vertices s..e are disjoint
-                    // from every other worker's; each slot written once.
-                    unsafe {
-                        src_slots.set(eid, v);
-                        dst_slots.set(eid, d);
-                    }
-                });
-            }
-        });
-        Some((srcs, dsts))
-    };
-    let endpoints = |eid: usize| -> (VertexId, VertexId) {
-        match &table {
-            Some((srcs, dsts)) => (srcs[eid], dsts[eid]),
-            None => (g.edge_src(eid), g.edge_dst(eid)),
-        }
-    };
-
     let comp: Vec<AtomicU32> = (0..n).map(|v| AtomicU32::new(v as u32)).collect();
+    let vertex_frontier = Frontier::all_vertices(n);
+
+    if !G::O1_EDGE_ACCESS {
+        let problem = cc_walk(g, &mut enactor, &comp, &vertex_frontier);
+        let result = enactor.finish_run();
+        return (problem, result);
+    }
+
     let mut edge_frontier = Frontier::all_edges(m);
+    if !enactor.densify_plain(m, m) {
+        edge_frontier.to_sparse();
+    }
+    let mut settled = Frontier::empty(FrontierKind::Edge);
     let mut odd = true;
 
     while !edge_frontier.is_empty() && enactor.within_iteration_cap() {
@@ -89,15 +111,14 @@ pub fn cc<G: GraphRep>(g: &G, config: &Config) -> (CcProblem, RunResult) {
             let counters = &enactor.counters;
             let hook = |e: VertexId| {
                 let eid = e as usize;
-                let (s, d) = endpoints(eid);
+                let (s, d) = (g.edge_src(eid), g.edge_dst(eid));
                 let cs = comp[s as usize].load(Ordering::Relaxed);
                 let cd = comp[d as usize].load(Ordering::Relaxed);
                 counters.add_edges(1);
                 if cs == cd {
                     return;
                 }
-                let (winner, loser) =
-                    if odd == (cs < cd) { (cs, cd) } else { (cd, cs) };
+                let (winner, loser) = orient(odd, cs, cd);
                 counters.add_atomics(1);
                 comp[loser as usize].store(winner, Ordering::Relaxed);
             };
@@ -106,46 +127,137 @@ pub fn cc<G: GraphRep>(g: &G, config: &Config) -> (CcProblem, RunResult) {
         odd = !odd;
 
         // --- Pointer-jumping: collapse parent chains to stars.
-        let vertex_frontier = Frontier::all_vertices(n);
-        let jumping = AtomicBool::new(true);
-        while jumping.swap(false, Ordering::Relaxed) {
-            let ctx = enactor.ctx();
-            let jump = |v: VertexId| -> bool {
-                let c = comp[v as usize].load(Ordering::Relaxed);
-                let cc = comp[c as usize].load(Ordering::Relaxed);
-                if c != cc {
-                    comp[v as usize].store(cc, Ordering::Relaxed);
-                    jumping.store(true, Ordering::Relaxed);
-                    true
-                } else {
-                    false
-                }
-            };
-            filter::filter(&ctx, &vertex_frontier, &jump);
-        }
+        pointer_jump(&enactor, &vertex_frontier, &comp);
 
-        // --- Filter: drop edges whose endpoints now share a (stable,
-        // post-jump) component id.
+        // --- Settle: drop edges whose endpoints now share a (stable,
+        // post-jump) component id — representation-preserving filter into
+        // the recycled buffer, demoted once occupancy drops.
         {
             let ctx = enactor.ctx();
             let keep = |e: VertexId| {
-                let (s, d) = endpoints(e as usize);
-                let cs = comp[s as usize].load(Ordering::Relaxed);
-                let cd = comp[d as usize].load(Ordering::Relaxed);
+                let eid = e as usize;
+                let cs = comp[g.edge_src(eid) as usize].load(Ordering::Relaxed);
+                let cd = comp[g.edge_dst(eid) as usize].load(Ordering::Relaxed);
                 cs != cd
             };
-            edge_frontier = filter::filter(&ctx, &edge_frontier, &keep);
+            filter::filter_into(&ctx, &edge_frontier, &keep, &mut settled);
+            std::mem::swap(&mut edge_frontier, &mut settled);
+        }
+        if edge_frontier.is_dense() && !enactor.densify_plain(m, edge_frontier.len()) {
+            edge_frontier.to_sparse();
         }
 
         enactor.record_iteration(input_len, edge_frontier.len(), t.elapsed_ms(), false);
     }
 
-    let component: Vec<u32> = comp.into_iter().map(|a| a.into_inner()).collect();
-    let mut roots: Vec<u32> = component.clone();
-    roots.sort_unstable();
-    roots.dedup();
+    let problem = finish(&comp);
     let result = enactor.finish_run();
-    (CcProblem { component, num_components: roots.len() }, result)
+    (problem, result)
+}
+
+/// CC without O(1) edge-endpoint access (compressed representations):
+/// the edge frontier is a dense m-bit bitmap and every hooking/settle
+/// pass walks it **vertex-grouped** — vertices partition the worker
+/// range; a vertex whose edge-id range holds no live bit (one or two
+/// word probes) skips its neighbor decode entirely, and live edges hook
+/// with source vertex known from the walk, so endpoints never need
+/// random access. Replaces the former 2×m endpoint-table materialization
+/// (8·m bytes of scratch) with the m-bit bitmap the frontier already is.
+fn cc_walk<G: GraphRep>(
+    g: &G,
+    enactor: &mut Enactor,
+    comp: &[AtomicU32],
+    vertex_frontier: &Frontier,
+) -> CcProblem {
+    let n = g.num_vertices();
+    let m = g.num_edges();
+    let active = AtomicBitset::new(m);
+    active.set_all();
+    let mut remaining = m;
+    let mut odd = true;
+
+    while remaining > 0 && enactor.within_iteration_cap() {
+        let t = Timer::start();
+        let input_len = remaining;
+
+        // --- Hooking (vertex-grouped walk over live edges).
+        {
+            let counters = &enactor.counters;
+            let round_odd = odd;
+            par::run_partitioned(n, enactor.workers, |_, vs, ve| {
+                for v in vs..ve {
+                    let v = v as VertexId;
+                    let deg = g.degree(v);
+                    if deg == 0 {
+                        continue;
+                    }
+                    let estart = g.edge_start(v);
+                    if !active.any_in_range(estart, estart + deg) {
+                        continue;
+                    }
+                    g.for_each_neighbor(v, |eid, d| {
+                        if !active.get(eid) {
+                            return;
+                        }
+                        let cs = comp[v as usize].load(Ordering::Relaxed);
+                        let cd = comp[d as usize].load(Ordering::Relaxed);
+                        counters.add_edges(1);
+                        if cs == cd {
+                            return;
+                        }
+                        let (winner, loser) = orient(round_odd, cs, cd);
+                        counters.add_atomics(1);
+                        comp[loser as usize].store(winner, Ordering::Relaxed);
+                    });
+                }
+            });
+            enactor.counters.add_kernel_launch();
+        }
+        odd = !odd;
+
+        // --- Pointer-jumping.
+        pointer_jump(enactor, vertex_frontier, comp);
+
+        // --- Settle: clear bits of edges whose endpoints now agree.
+        // In-place bit clears are safe: each live edge is examined by
+        // exactly one worker, and clearing never resurrects work.
+        {
+            let cleared: Vec<usize> = par::run_partitioned(n, enactor.workers, |_, vs, ve| {
+                let mut dropped = 0usize;
+                for v in vs..ve {
+                    let v = v as VertexId;
+                    let deg = g.degree(v);
+                    if deg == 0 {
+                        continue;
+                    }
+                    let estart = g.edge_start(v);
+                    if !active.any_in_range(estart, estart + deg) {
+                        continue;
+                    }
+                    g.for_each_neighbor(v, |eid, d| {
+                        if !active.get(eid) {
+                            return;
+                        }
+                        let cs = comp[v as usize].load(Ordering::Relaxed);
+                        let cd = comp[d as usize].load(Ordering::Relaxed);
+                        if cs == cd {
+                            active.clear_bit(eid);
+                            dropped += 1;
+                        }
+                    });
+                }
+                dropped
+            });
+            enactor.counters.add_kernel_launch();
+            let dropped: usize = cleared.iter().sum();
+            enactor.counters.add_culled(dropped as u64);
+            remaining -= dropped;
+        }
+
+        enactor.record_iteration(input_len, remaining, t.elapsed_ms(), false);
+    }
+
+    finish(comp)
 }
 
 #[cfg(test)]
@@ -196,7 +308,42 @@ mod tests {
         let (p, _) = cc(&g, &Config::default());
         for v in 0..g.num_vertices {
             let c = p.component[v] as usize;
-            assert_eq!(p.component[c], p.component[v] , "non-star at {v}");
+            assert_eq!(p.component[c], p.component[v], "non-star at {v}");
+        }
+    }
+
+    #[test]
+    fn walk_path_matches_table_free_o1_path() {
+        // The compressed representation (no O(1) edge access) takes the
+        // vertex-grouped walk; partitions must agree with the CSR run.
+        use crate::graph::{Codec, CompressedCsr};
+        let g = rmat(&RmatParams { scale: 9, edge_factor: 4, ..Default::default() });
+        let cg = CompressedCsr::from_csr(&g, Codec::Varint);
+        let (want, _) = cc(&g, &Config::default());
+        let (got, _) = cc(&cg, &Config::default());
+        assert_eq!(want.num_components, got.num_components);
+        for v in 0..g.num_vertices {
+            for &u in g.neighbors(v as u32) {
+                assert_eq!(got.component[v], got.component[u as usize], "{v}-{u}");
+            }
+        }
+    }
+
+    #[test]
+    fn forced_modes_agree() {
+        use crate::frontier::HybridMode;
+        let g = rmat(&RmatParams { scale: 9, edge_factor: 4, ..Default::default() });
+        let (auto, _) = cc(&g, &Config::default());
+        for mode in [HybridMode::ForceSparse, HybridMode::ForceDense] {
+            let mut cfg = Config::default();
+            cfg.frontier_mode = mode;
+            let (got, _) = cc(&g, &cfg);
+            assert_eq!(auto.num_components, got.num_components, "{mode}");
+            for v in 0..g.num_vertices {
+                for &u in g.neighbors(v as u32) {
+                    assert_eq!(got.component[v], got.component[u as usize]);
+                }
+            }
         }
     }
 }

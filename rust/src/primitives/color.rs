@@ -34,6 +34,9 @@ pub fn color<G: GraphRep>(g: &G, config: &Config) -> (ColoringResult, RunResult)
     let colors: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(UNCOLORED)).collect();
 
     let mut frontier = Frontier::all_vertices(n);
+    if !enactor.densify_plain(n, n) {
+        frontier.to_sparse();
+    }
     while !frontier.is_empty() && enactor.within_iteration_cap() {
         let t = Timer::start();
         let input_len = frontier.len();
@@ -79,6 +82,9 @@ pub fn color<G: GraphRep>(g: &G, config: &Config) -> (ColoringResult, RunResult)
             false // colored: leave the frontier
         };
         frontier = filter::filter(&ctx, &frontier, &claim);
+        if frontier.is_dense() && !enactor.densify_plain(n, frontier.len()) {
+            frontier.to_sparse();
+        }
         enactor.record_iteration(input_len, frontier.len(), t.elapsed_ms(), false);
     }
 
@@ -100,6 +106,9 @@ pub fn mis<G: GraphRep>(g: &G, config: &Config) -> (Vec<bool>, RunResult) {
     let state: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(0)).collect();
 
     let mut frontier = Frontier::all_vertices(n);
+    if !enactor.densify_plain(n, n) {
+        frontier.to_sparse();
+    }
     while !frontier.is_empty() && enactor.within_iteration_cap() {
         let t = Timer::start();
         let input_len = frontier.len();
@@ -107,9 +116,7 @@ pub fn mis<G: GraphRep>(g: &G, config: &Config) -> (Vec<bool>, RunResult) {
         let counters = &enactor.counters;
         // Phase 1: local maxima among undecided neighbors join the MIS.
         let winners: Vec<VertexId> = frontier
-            .ids
             .iter()
-            .copied()
             .filter(|&v| {
                 counters.add_edges(g.degree(v) as u64);
                 let mut is_max = true;
@@ -136,6 +143,9 @@ pub fn mis<G: GraphRep>(g: &G, config: &Config) -> (Vec<bool>, RunResult) {
         frontier = filter::filter(&ctx, &frontier, &|v: VertexId| {
             state[v as usize].load(Ordering::Relaxed) == 0
         });
+        if frontier.is_dense() && !enactor.densify_plain(n, frontier.len()) {
+            frontier.to_sparse();
+        }
         enactor.record_iteration(input_len, frontier.len(), t.elapsed_ms(), false);
     }
     let in_mis: Vec<bool> = state.into_iter().map(|a| a.into_inner() == 1).collect();

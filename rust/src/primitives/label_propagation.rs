@@ -8,9 +8,9 @@ use std::sync::atomic::{AtomicU32, Ordering};
 
 use crate::config::Config;
 use crate::enactor::{Enactor, RunResult};
-use crate::frontier::Frontier;
+use crate::frontier::{Frontier, FrontierKind};
 use crate::graph::{GraphRep, VertexId};
-use crate::operators::filter;
+use crate::operators::compute;
 use crate::util::bitset::AtomicBitset;
 use crate::util::timer::Timer;
 
@@ -28,7 +28,17 @@ pub fn label_propagation<G: GraphRep>(g: &G, config: &Config) -> (LpResult, RunR
     enactor.begin_run();
 
     let labels: Vec<AtomicU32> = (0..n).map(|v| AtomicU32::new(v as u32)).collect();
+    // Full dense start (O(n/64)); the hybrid engine demotes to a queue
+    // once re-activation narrows.
     let mut frontier = Frontier::all_vertices(n);
+    if !enactor.densify_plain(n, n) {
+        frontier.to_sparse();
+    }
+    // Reused across rounds: changed-vertex bitmap and the dense next
+    // frontier (its fetch_or insertion replaces the old `seen` dedup set
+    // — a bitmap frontier deduplicates by construction).
+    let changed = AtomicBitset::new(n);
+    let mut next = Frontier::dense_empty(FrontierKind::Vertex, n);
     let mut iters = 0usize;
     let max_rounds = config.max_iters.min(100);
 
@@ -36,17 +46,17 @@ pub fn label_propagation<G: GraphRep>(g: &G, config: &Config) -> (LpResult, RunR
         let t = Timer::start();
         iters += 1;
         let input_len = frontier.len();
-        let changed = AtomicBitset::new(n);
+        changed.clear_all();
         let ctx = enactor.ctx();
         let counters = &enactor.counters;
 
         // adopt the plurality label of the neighborhood (ties -> smaller
         // label, for determinism)
-        let update = |v: VertexId| -> bool {
+        let update = |v: VertexId| {
             let deg = g.degree(v);
             counters.add_edges(deg as u64);
             if deg == 0 {
-                return false;
+                return;
             }
             let mut counts: HashMap<u32, u32> = HashMap::with_capacity(deg);
             g.for_each_neighbor(v, |_, u| {
@@ -59,27 +69,23 @@ pub fn label_propagation<G: GraphRep>(g: &G, config: &Config) -> (LpResult, RunR
             let old = labels[v as usize].swap(best, Ordering::Relaxed);
             if old != best {
                 changed.set(v as usize);
-                true
-            } else {
-                false
             }
         };
-        filter::filter(&ctx, &frontier, &update);
+        compute::compute(&ctx, &frontier, update);
 
         // next frontier: vertices adjacent to a change (plus the changed)
-        let mut next: Vec<VertexId> = Vec::new();
-        let seen = AtomicBitset::new(n);
+        // — inserted straight into the recycled dense bitmap.
+        next.reset_dense(FrontierKind::Vertex, n);
         for v in changed.iter_set() {
-            if seen.set(v) {
-                next.push(v as VertexId);
-            }
+            next.push(v as VertexId);
             g.for_each_neighbor(v as VertexId, |_, u| {
-                if seen.set(u as usize) {
-                    next.push(u);
-                }
+                next.push(u);
             });
         }
-        frontier = Frontier::vertices(next);
+        if !enactor.densify_plain(n, next.len()) {
+            next.to_sparse();
+        }
+        std::mem::swap(&mut frontier, &mut next);
         enactor.record_iteration(input_len, frontier.len(), t.elapsed_ms(), false);
     }
 

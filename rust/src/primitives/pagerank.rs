@@ -46,7 +46,19 @@ pub fn pagerank<G: GraphRep>(g: &G, config: &Config) -> (PageRankProblem, RunRes
     enactor.begin_run();
 
     let mut ranks: Vec<f64> = vec![1.0 / n as f64; n];
+    // Full-vertex scatter frontier, hoisted out of the loop: a filled
+    // bitmap (O(n/64) to build, word-swept by the advance — no 0..n id
+    // materialization per iteration). The convergence frontier starts
+    // identical and shrinks; the hybrid engine demotes it to a queue
+    // once occupancy drops.
+    let mut full = Frontier::all_vertices(n);
+    if !enactor.densify_output(g, n) {
+        full.to_sparse();
+    }
     let mut frontier = Frontier::all_vertices(n);
+    if !enactor.densify_plain(n, n) {
+        frontier.to_sparse();
+    }
     let mut iters = 0usize;
 
     while !frontier.is_empty() && iters < config.pr_max_iters {
@@ -76,7 +88,7 @@ pub fn pagerank<G: GraphRep>(g: &G, config: &Config) -> (PageRankProblem, RunRes
             atomic_add_f64(&next[d as usize], shares_ref[s as usize]);
             false // no output frontier from the advance itself
         };
-        advance::advance(&ctx, g, &Frontier::all_vertices(n), advance::AdvanceType::V2V, strategy, &scatter);
+        advance::advance(&ctx, g, &full, advance::AdvanceType::V2V, strategy, &scatter);
         // one accumulation atomic per edge (batched stat)
         enactor.counters.add_atomics(g.num_edges() as u64);
 
@@ -90,7 +102,12 @@ pub fn pagerank<G: GraphRep>(g: &G, config: &Config) -> (PageRankProblem, RunRes
         let input_len = frontier.len();
         let ranks_now = &ranks;
         let keep = |v: VertexId| (ranks_now[v as usize] - old_ranks[v as usize]).abs() > eps;
-        let next_frontier = filter::filter(&ctx, &frontier, &keep);
+        let mut next_frontier = filter::filter(&ctx, &frontier, &keep);
+        // Demote once few unconverged vertices remain (pure id set — the
+        // occupancy rule, not the expansion estimate).
+        if next_frontier.is_dense() && !enactor.densify_plain(n, next_frontier.len()) {
+            next_frontier.to_sparse();
+        }
 
         enactor.record_iteration(input_len, next_frontier.len(), t.elapsed_ms(), false);
         frontier = next_frontier;

@@ -62,7 +62,7 @@ pub fn subgraph_match<G: GraphRep>(
         let all = Frontier::all_vertices(g.num_vertices());
         let keep = |v: VertexId| labels[v as usize] == ql && g.degree(v) >= qdeg;
         let f = filter::filter(&ctx, &all, &keep);
-        candidates.push(f.ids);
+        candidates.push(f.into_ids());
     }
 
     // ---- Joining phase: extend partial embeddings in query-vertex order.

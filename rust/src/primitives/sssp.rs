@@ -76,6 +76,11 @@ pub fn sssp<G: GraphRep>(g: &G, src: VertexId, config: &Config) -> (SsspProblem,
         let qid = queue_id;
 
         let strategy = enactor.strategy_for(g, input_len);
+        // Hybrid: outside the near/far queue (which needs a sparse id
+        // list to split), a heavy iteration writes its output bitmap
+        // directly — the relax stamps plus the bitmap's fetch_or discard
+        // make the separate Remove_Redundant filter pass unnecessary.
+        let dense_out = !use_pq && enactor.densify_output(g, input_len);
         let ctx = enactor.ctx();
 
         // Advance: relax distances (Update_Label + Set_Pred fused).
@@ -90,25 +95,32 @@ pub fn sssp<G: GraphRep>(g: &G, src: VertexId, config: &Config) -> (SsspProblem,
                 false
             }
         };
-        advance::advance_into(
-            &ctx,
-            g,
-            bufs.current(),
-            advance::AdvanceType::V2V,
-            strategy,
-            &relax,
-            &mut raw,
-        );
+        if dense_out {
+            // Fused advance+filter: the bitmap output *is* the redundant-
+            // vertex removal (one bit per stamped vertex).
+            let (input, out) = bufs.split_mut();
+            advance::advance_bitmap_into(&ctx, g, input, strategy, &relax, out);
+        } else {
+            advance::advance_into(
+                &ctx,
+                g,
+                bufs.current(),
+                advance::AdvanceType::V2V,
+                strategy,
+                &relax,
+                &mut raw,
+            );
 
-        // Filter: Remove_Redundant — keep one copy per stamped vertex.
-        // (the stamp swap in the advance already collapses most dupes; the
-        // exact pass cleans up the rest deterministically.)
-        seen.clear_all();
-        filter::filter_into(&ctx, &raw, &|v: VertexId| seen.set(v as usize), bufs.next_mut());
+            // Filter: Remove_Redundant — keep one copy per stamped vertex.
+            // (the stamp swap in the advance already collapses most dupes;
+            // the exact pass cleans up the rest deterministically.)
+            seen.clear_all();
+            filter::filter_into(&ctx, &raw, &|v: VertexId| seen.set(v as usize), bufs.next_mut());
+        }
 
         // Priority queue: split into near/far, defer far work.
         if use_pq {
-            let near = pq.split(bufs.next().ids.iter().copied(), |v| {
+            let near = pq.split(bufs.next().ids().iter().copied(), |v| {
                 dist[v as usize].load(Ordering::Relaxed)
             });
             // Adopt the split's allocation (no copy); the replaced
@@ -119,16 +131,21 @@ pub fn sssp<G: GraphRep>(g: &G, src: VertexId, config: &Config) -> (SsspProblem,
                     |v| dist[v as usize].load(Ordering::Relaxed),
                     |v| dist[v as usize].load(Ordering::Relaxed) < INFINITY_DIST,
                 );
-                bufs.next_mut().ids = lvl;
+                bufs.next_mut().set_ids(lvl);
             } else {
-                bufs.next_mut().ids = near;
+                bufs.next_mut().set_ids(near);
             }
         }
 
         // one relaxation atomic per traversed edge (batched stat)
         let e_now = enactor.counters.edges();
         enactor.counters.add_atomics(e_now.saturating_sub(prev_edges));
-        enactor.record_iteration(input_len, bufs.next().len(), t.elapsed_ms(), false);
+        let out_len = bufs.next().len();
+        // Ligra-style downswitch before the next expansion.
+        if bufs.next().is_dense() && !enactor.densify_output(g, out_len) {
+            bufs.next_mut().to_sparse();
+        }
+        enactor.record_iteration(input_len, out_len, t.elapsed_ms(), false);
         bufs.swap();
     }
     enactor.frontiers = bufs;

@@ -13,7 +13,6 @@
 
 use crate::config::Config;
 use crate::enactor::{Enactor, RunResult};
-use crate::frontier::Frontier;
 use crate::graph::{builder, Coo, GraphRep, VertexId};
 use crate::operators::segmented_intersection;
 use crate::util::timer::Timer;
@@ -38,7 +37,7 @@ fn forward_edge<G: GraphRep>(g: &G, u: VertexId, v: VertexId) -> bool {
 /// V2E frontier would need on readback (§Perf iteration 4).
 fn forward_pairs<G: GraphRep>(enactor: &Enactor, g: &G) -> Vec<(VertexId, VertexId)> {
     let n = g.num_vertices();
-    let all: Vec<VertexId> = Frontier::all_vertices(n).ids;
+    let all: Vec<VertexId> = (0..n as VertexId).collect();
     let strategy = enactor.strategy_for(g, n);
     let flat = crate::load_balance::expand(
         strategy,

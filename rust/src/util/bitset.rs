@@ -11,6 +11,28 @@ pub struct AtomicBitset {
     len: usize,
 }
 
+impl Clone for AtomicBitset {
+    fn clone(&self) -> Self {
+        AtomicBitset {
+            words: self
+                .words
+                .iter()
+                .map(|w| AtomicU64::new(w.load(Ordering::Relaxed)))
+                .collect(),
+            len: self.len,
+        }
+    }
+}
+
+impl std::fmt::Debug for AtomicBitset {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("AtomicBitset")
+            .field("len", &self.len)
+            .field("count", &self.count())
+            .finish()
+    }
+}
+
 impl AtomicBitset {
     pub fn new(len: usize) -> Self {
         let words = (0..len.div_ceil(64)).map(|_| AtomicU64::new(0)).collect();
@@ -62,20 +84,115 @@ impl AtomicBitset {
         self.words.iter().map(|w| w.load(Ordering::Relaxed).count_ones() as usize).sum()
     }
 
+    // -- Word-level view (the dense-frontier fast paths sweep words
+    // directly: 64 membership tests per load, perfect locality). --------
+
+    /// Number of 64-bit words backing the set.
+    #[inline]
+    pub fn num_words(&self) -> usize {
+        self.words.len()
+    }
+
+    /// Load word `wi` (Relaxed — same BSP contract as [`get`](Self::get)).
+    #[inline]
+    pub fn word(&self, wi: usize) -> u64 {
+        self.words[wi].load(Ordering::Relaxed)
+    }
+
+    /// Mask of word `wi`'s *live* bits (indices < `len`): all-ones except
+    /// for a partial final word. Complement sweeps AND with this so the
+    /// tail's phantom bits never look like members.
+    #[inline]
+    pub fn word_mask(&self, wi: usize) -> u64 {
+        let lo = wi * 64;
+        if lo + 64 <= self.len {
+            !0u64
+        } else if lo >= self.len {
+            0
+        } else {
+            (1u64 << (self.len - lo)) - 1
+        }
+    }
+
+    /// Set every live bit — O(len/64), the `all_vertices` constructor.
+    pub fn set_all(&self) {
+        for wi in 0..self.words.len() {
+            self.words[wi].store(self.word_mask(wi), Ordering::Relaxed);
+        }
+    }
+
+    /// Zero words `[0, words)` — the dirty-prefix clear of a recycled
+    /// dense frontier (untouched words are already zero).
+    pub fn clear_first_words(&self, words: usize) {
+        for w in &self.words[..words.min(self.words.len())] {
+            w.store(0, Ordering::Relaxed);
+        }
+    }
+
+    /// Population count of words `[0, words)`.
+    pub fn count_first_words(&self, words: usize) -> usize {
+        self.words[..words.min(self.words.len())]
+            .iter()
+            .map(|w| w.load(Ordering::Relaxed).count_ones() as usize)
+            .sum()
+    }
+
+    /// Any set bit in index range `[start, end)`? Word-probed: a vertex's
+    /// whole edge-id range is usually answered by one or two loads.
+    pub fn any_in_range(&self, start: usize, end: usize) -> bool {
+        let end = end.min(self.len);
+        if start >= end {
+            return false;
+        }
+        let (ws, we) = (start / 64, (end - 1) / 64);
+        for wi in ws..=we {
+            let mut m = !0u64;
+            if wi == ws {
+                m &= !0u64 << (start & 63);
+            }
+            if wi == we {
+                let r = (end - 1) & 63;
+                m &= !0u64 >> (63 - r);
+            }
+            if self.word(wi) & m != 0 {
+                return true;
+            }
+        }
+        false
+    }
+
+    /// OR the first `words` words of `src` into this set (word-level
+    /// `fetch_or`) — e.g. discovered-frontier bits into the visited mask,
+    /// bounded by the source's dirty prefix.
+    pub fn union_from(&self, src: &AtomicBitset, words: usize) {
+        let w = words.min(self.words.len()).min(src.words.len());
+        for wi in 0..w {
+            let bits = src.word(wi);
+            if bits != 0 {
+                self.words[wi].fetch_or(bits, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Resize to `len` bits, zeroing all content (a size change means the
+    /// id universe changed); the word vector's capacity is reused.
+    pub fn resize(&mut self, len: usize) {
+        for w in &self.words {
+            w.store(0, Ordering::Relaxed);
+        }
+        let words = len.div_ceil(64);
+        if self.words.len() > words {
+            self.words.truncate(words);
+        }
+        while self.words.len() < words {
+            self.words.push(AtomicU64::new(0));
+        }
+        self.len = len;
+    }
+
     /// Iterate set bit indices (ascending).
-    pub fn iter_set(&self) -> impl Iterator<Item = usize> + '_ {
-        self.words.iter().enumerate().flat_map(move |(wi, w)| {
-            let mut bits = w.load(Ordering::Relaxed);
-            std::iter::from_fn(move || {
-                if bits == 0 {
-                    None
-                } else {
-                    let tz = bits.trailing_zeros() as usize;
-                    bits &= bits - 1;
-                    Some(wi * 64 + tz)
-                }
-            })
-        })
+    pub fn iter_set(&self) -> SetBits<'_> {
+        SetBits { bits: self, wi: 0, cur: 0 }
     }
 
     /// Collect unset bit indices < len (the "unvisited frontier" for pull).
@@ -95,6 +212,45 @@ impl AtomicBitset {
             if !self.get(i) {
                 out.push(i as u32);
             }
+        }
+    }
+}
+
+/// Visit the global index of every set bit in `word` (the word at index
+/// `wi`), ascending — the one implementation of the dense-frontier sweep
+/// idiom shared by every word-aligned fast path (load a word once, then
+/// `trailing_zeros` + clear-lowest per member).
+#[inline]
+pub fn for_each_set_in(mut word: u64, wi: usize, mut f: impl FnMut(usize)) {
+    while word != 0 {
+        f(wi * 64 + word.trailing_zeros() as usize);
+        word &= word - 1;
+    }
+}
+
+/// Concrete set-bit iterator (ascending) — a nameable type so the hybrid
+/// frontier can embed it in its own iterator enum.
+pub struct SetBits<'a> {
+    bits: &'a AtomicBitset,
+    wi: usize,
+    cur: u64,
+}
+
+impl Iterator for SetBits<'_> {
+    type Item = usize;
+
+    fn next(&mut self) -> Option<usize> {
+        loop {
+            if self.cur != 0 {
+                let tz = self.cur.trailing_zeros() as usize;
+                self.cur &= self.cur - 1;
+                return Some((self.wi - 1) * 64 + tz);
+            }
+            if self.wi >= self.bits.num_words() {
+                return None;
+            }
+            self.cur = self.bits.word(self.wi);
+            self.wi += 1;
         }
     }
 }
@@ -149,6 +305,89 @@ mod tests {
         let unset = b.unset_indices();
         assert!(unset.iter().all(|&i| i % 3 != 0));
         assert_eq!(unset.len() + b.count(), 50);
+    }
+
+    #[test]
+    fn set_all_masks_partial_tail_word() {
+        let b = AtomicBitset::new(70);
+        b.set_all();
+        assert_eq!(b.count(), 70);
+        assert_eq!(b.word_mask(0), !0u64);
+        assert_eq!(b.word_mask(1), (1u64 << 6) - 1);
+        assert_eq!(b.word(1) & !b.word_mask(1), 0, "phantom tail bits must stay clear");
+    }
+
+    #[test]
+    fn clear_and_count_prefix_words() {
+        let b = AtomicBitset::new(200);
+        for i in [0, 63, 64, 130, 199] {
+            b.set(i);
+        }
+        assert_eq!(b.count_first_words(2), 3); // 0, 63, 64
+        b.clear_first_words(2);
+        assert_eq!(b.count(), 2); // 130, 199 survive
+        assert!(!b.get(64));
+    }
+
+    #[test]
+    fn any_in_range_word_probes() {
+        let b = AtomicBitset::new(300);
+        b.set(150);
+        assert!(b.any_in_range(150, 151));
+        assert!(b.any_in_range(100, 200));
+        assert!(b.any_in_range(150, 10_000)); // end clamped to len
+        assert!(!b.any_in_range(0, 150));
+        assert!(!b.any_in_range(151, 300));
+        assert!(!b.any_in_range(200, 100)); // empty range
+    }
+
+    #[test]
+    fn union_from_ors_words() {
+        let a = AtomicBitset::new(128);
+        let b = AtomicBitset::new(128);
+        a.set(3);
+        b.set(3);
+        b.set(100);
+        a.union_from(&b, b.num_words());
+        assert!(a.get(3) && a.get(100));
+        assert_eq!(a.count(), 2);
+        // bounded union: only the first word
+        let c = AtomicBitset::new(128);
+        c.union_from(&b, 1);
+        assert!(c.get(3) && !c.get(100));
+    }
+
+    #[test]
+    fn resize_zeroes_and_reuses() {
+        let mut b = AtomicBitset::new(100);
+        b.set(5);
+        b.set(99);
+        b.resize(70);
+        assert_eq!(b.len(), 70);
+        assert_eq!(b.count(), 0, "resize zeroes content");
+        b.set(69);
+        b.resize(200);
+        assert_eq!(b.count(), 0);
+        assert_eq!(b.num_words(), 4);
+    }
+
+    #[test]
+    fn for_each_set_in_visits_word_members_ascending() {
+        let mut got = Vec::new();
+        for_each_set_in(0b1000_0101, 2, |i| got.push(i));
+        assert_eq!(got, vec![128, 130, 135]);
+        for_each_set_in(0, 7, |_| panic!("empty word must not call back"));
+    }
+
+    #[test]
+    fn clone_snapshots_bits() {
+        let b = AtomicBitset::new(80);
+        b.set(7);
+        b.set(79);
+        let c = b.clone();
+        b.set(8);
+        assert!(c.get(7) && c.get(79) && !c.get(8));
+        assert_eq!(c.len(), 80);
     }
 
     #[test]

@@ -1,0 +1,234 @@
+//! Hybrid sparse/dense frontier engine properties:
+//!
+//! - sparse <-> dense round trips preserve the id set;
+//! - concurrent word-level `fetch_or` insertion has exactly the
+//!   sequential set semantics (dedup, one winner per id);
+//! - representation parity: every converted primitive returns identical
+//!   results with switching forced off (sparse), forced on (dense), and
+//!   on auto — over both raw `Csr` and the compressed `.gsr`
+//!   representation (`CompressedCsr` with the v2 in-edge view).
+
+use gunrock::config::Config;
+use gunrock::frontier::{Frontier, FrontierKind, HybridMode};
+use gunrock::graph::generators::{
+    rmat::{rmat, RmatParams},
+    smallworld::{smallworld, SmallWorldParams},
+};
+use gunrock::graph::{datasets, Codec, CompressedCsr, Csr};
+use gunrock::primitives::{bfs, cc, color, label_propagation, pagerank, sssp};
+use gunrock::util::rng::Pcg32;
+
+const MODES: [HybridMode; 3] = [HybridMode::Auto, HybridMode::ForceSparse, HybridMode::ForceDense];
+
+fn scale_free() -> Csr {
+    rmat(&RmatParams { scale: 10, edge_factor: 8, ..Default::default() })
+}
+
+fn compress(g: &Csr) -> CompressedCsr {
+    CompressedCsr::from_csr_with_in_edges(g, Codec::Varint)
+}
+
+fn cfg_with(mode: HybridMode) -> Config {
+    let mut cfg = Config::default();
+    cfg.frontier_mode = mode;
+    cfg
+}
+
+#[test]
+fn prop_round_trip_preserves_set() {
+    let mut rng = Pcg32::new(0xD1CE);
+    for case in 0..30 {
+        let universe = 64 + rng.below_usize(5000);
+        let len = rng.below_usize(universe);
+        let ids: Vec<u32> = (0..len).map(|_| rng.below(universe as u32)).collect();
+        let mut want: Vec<u32> = ids.clone();
+        want.sort_unstable();
+        want.dedup();
+
+        let mut f = Frontier::vertices(ids);
+        f.to_dense(universe);
+        assert_eq!(f.len(), want.len(), "case {case}: dense dedup count");
+        for &v in &want {
+            assert!(f.contains(v), "case {case}: lost {v}");
+        }
+        f.to_sparse();
+        assert_eq!(f.ids(), want.as_slice(), "case {case}: round trip (ascending)");
+        // and back again: a second densify reuses the parked bitmap
+        f.to_dense(universe);
+        assert_eq!(f.iter().collect::<Vec<_>>(), want, "case {case}: second densify");
+    }
+}
+
+#[test]
+fn prop_concurrent_insertion_matches_sequential_set_semantics() {
+    use std::collections::BTreeSet;
+    let mut rng = Pcg32::new(0xF00D);
+    for case in 0..10 {
+        let universe = 512 + rng.below_usize(4096);
+        let inserts: Vec<u32> =
+            (0..2 * universe).map(|_| rng.below(universe as u32)).collect();
+        let want: BTreeSet<u32> = inserts.iter().copied().collect();
+
+        let f = Frontier::dense_empty(FrontierKind::Vertex, universe);
+        let bits = f.dense_bits().unwrap();
+        let inserts_ref = &inserts;
+        let wins: Vec<usize> = gunrock::util::par::run_partitioned(
+            inserts.len(),
+            8,
+            |_, s, e| {
+                let mut won = 0usize;
+                for &v in &inserts_ref[s..e] {
+                    if bits.insert(v as usize) {
+                        won += 1;
+                    }
+                }
+                won
+            },
+        );
+        // exactly one winner per distinct id, regardless of interleaving
+        assert_eq!(wins.iter().sum::<usize>(), want.len(), "case {case}");
+        let mut f = f;
+        f.seal();
+        assert_eq!(f.len(), want.len(), "case {case}: sealed count");
+        assert_eq!(
+            f.iter().collect::<Vec<_>>(),
+            want.iter().copied().collect::<Vec<_>>(),
+            "case {case}: set contents"
+        );
+    }
+}
+
+#[test]
+fn bfs_parity_across_modes_and_representations() {
+    let g = scale_free();
+    let cg = compress(&g);
+    let (want, _) = bfs::bfs(&g, 3, &cfg_with(HybridMode::Auto));
+    for mode in MODES {
+        for idempotent in [false, true] {
+            let mut cfg = cfg_with(mode);
+            cfg.idempotence = idempotent;
+            let (got, _) = bfs::bfs(&g, 3, &cfg);
+            assert_eq!(want.labels, got.labels, "csr mode={mode} idem={idempotent}");
+            let (got_c, _) = bfs::bfs(&cg, 3, &cfg);
+            assert_eq!(want.labels, got_c.labels, "gsr mode={mode} idem={idempotent}");
+        }
+    }
+}
+
+#[test]
+fn direction_optimized_bfs_parity_across_modes() {
+    let g = scale_free();
+    let cg = compress(&g);
+    let mut base = cfg_with(HybridMode::Auto);
+    base.direction_optimized = true;
+    let (want, want_stats) = bfs::bfs(&g, 7, &base);
+    assert!(want_stats.pull_iterations > 0, "scale-free DO-BFS should pull");
+    for mode in MODES {
+        let mut cfg = cfg_with(mode);
+        cfg.direction_optimized = true;
+        let (got, _) = bfs::bfs(&g, 7, &cfg);
+        assert_eq!(want.labels, got.labels, "csr mode={mode}");
+        let (got_c, _) = bfs::bfs(&cg, 7, &cfg);
+        assert_eq!(want.labels, got_c.labels, "gsr mode={mode}");
+    }
+}
+
+#[test]
+fn sssp_parity_across_modes_and_representations() {
+    let mut g = scale_free();
+    datasets::attach_uniform_weights(&mut g, 42);
+    let cg = compress(&g);
+    assert_eq!(cg.edge_weights, g.edge_weights);
+    let (want, _) = sssp::sssp(&g, 3, &cfg_with(HybridMode::Auto));
+    for mode in MODES {
+        for delta in [0u64, 32] {
+            let mut cfg = cfg_with(mode);
+            cfg.sssp_delta = delta;
+            let (got, _) = sssp::sssp(&g, 3, &cfg);
+            assert_eq!(want.dist, got.dist, "csr mode={mode} delta={delta}");
+            let (got_c, _) = sssp::sssp(&cg, 3, &cfg);
+            assert_eq!(want.dist, got_c.dist, "gsr mode={mode} delta={delta}");
+        }
+    }
+}
+
+#[test]
+fn cc_parity_across_modes_and_representations() {
+    let g = rmat(&RmatParams { scale: 9, edge_factor: 4, ..Default::default() });
+    let cg = compress(&g);
+    let (want, _) = cc::cc(&g, &cfg_with(HybridMode::Auto));
+    for mode in MODES {
+        let cfg = cfg_with(mode);
+        for (rep, got) in [("csr", cc::cc(&g, &cfg).0), ("gsr", cc::cc(&cg, &cfg).0)] {
+            assert_eq!(want.num_components, got.num_components, "{rep} mode={mode}");
+            // same partition: every edge's endpoints share a label
+            for v in 0..g.num_vertices {
+                for &u in g.neighbors(v as u32) {
+                    assert_eq!(
+                        got.component[v], got.component[u as usize],
+                        "{rep} mode={mode}: split edge {v}-{u}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn pagerank_parity_across_modes_single_thread() {
+    // One worker makes the f64 accumulation order identical in every
+    // representation/mode combination -> bit-identical ranks.
+    let g = rmat(&RmatParams { scale: 9, edge_factor: 8, ..Default::default() });
+    let cg = compress(&g);
+    let mut base = cfg_with(HybridMode::Auto);
+    base.threads = 1;
+    base.pr_max_iters = 10;
+    let (want, _) = pagerank::pagerank(&g, &base);
+    for mode in MODES {
+        let mut cfg = cfg_with(mode);
+        cfg.threads = 1;
+        cfg.pr_max_iters = 10;
+        let (got, _) = pagerank::pagerank(&g, &cfg);
+        assert_eq!(want.ranks, got.ranks, "csr mode={mode}");
+        let (got_c, _) = pagerank::pagerank(&cg, &cfg);
+        assert_eq!(want.ranks, got_c.ranks, "gsr mode={mode}");
+    }
+}
+
+#[test]
+fn label_propagation_parity_across_modes_single_thread() {
+    let g = smallworld(&SmallWorldParams { n: 200, k: 6, beta: 0.1, ..Default::default() });
+    let cg = compress(&g);
+    let mut base = cfg_with(HybridMode::Auto);
+    base.threads = 1;
+    let (want, _) = label_propagation::label_propagation(&g, &base);
+    for mode in MODES {
+        let mut cfg = cfg_with(mode);
+        cfg.threads = 1;
+        let (got, _) = label_propagation::label_propagation(&g, &cfg);
+        assert_eq!(want.labels, got.labels, "csr mode={mode}");
+        assert_eq!(want.iterations, got.iterations, "csr mode={mode}");
+        let (got_c, _) = label_propagation::label_propagation(&cg, &cfg);
+        assert_eq!(want.labels, got_c.labels, "gsr mode={mode}");
+    }
+}
+
+#[test]
+fn coloring_parity_across_modes_single_thread() {
+    let g = smallworld(&SmallWorldParams { n: 256, k: 6, beta: 0.2, ..Default::default() });
+    let cg = compress(&g);
+    let mut base = cfg_with(HybridMode::Auto);
+    base.threads = 1;
+    let (want, _) = color::color(&g, &base);
+    for mode in MODES {
+        let mut cfg = cfg_with(mode);
+        cfg.threads = 1;
+        let (got, _) = color::color(&g, &cfg);
+        assert_eq!(want.colors, got.colors, "csr mode={mode}");
+        let (got_c, _) = color::color(&cg, &cfg);
+        assert_eq!(want.colors, got_c.colors, "gsr mode={mode}");
+        let (want_mis, _) = color::mis(&g, &cfg);
+        let (got_mis, _) = color::mis(&cg, &cfg);
+        assert_eq!(want_mis, got_mis, "mis gsr mode={mode}");
+    }
+}

@@ -259,7 +259,7 @@ fn sampled_bc_correlates_with_exact() {
     let sources: Vec<u32> = {
         use gunrock::frontier::Frontier;
         use gunrock::operators::sampling;
-        sampling::sample_k(&Frontier::all_vertices(g.num_vertices), 64, 3).ids
+        sampling::sample_k(&Frontier::all_vertices(g.num_vertices), 64, 3).into_ids()
     };
     let (approx, _) = bc::bc(&g, Some(&sources), &Config::default());
     // rank correlation on the top vertices: the exact top-10 should rank

@@ -190,7 +190,7 @@ fn frontier_buffers_do_not_grow_after_warmup() {
         // iteration, so after one warm-up cycle of the ping-pong pair
         // neither buffer may ever reallocate.
         bufs.current_mut().reset(FrontierKind::Vertex);
-        bufs.current_mut().ids.extend_from_slice(&items);
+        bufs.current_mut().extend_from_slice(&items);
         {
             let (input, out) = bufs.split_mut();
             advance::advance_into(
@@ -206,7 +206,7 @@ fn frontier_buffers_do_not_grow_after_warmup() {
         bufs.swap();
         // Sort the pair: the swap alternates which physical buffer holds
         // the output, but the multiset of capacities must freeze.
-        let mut caps = [bufs.current().ids.capacity(), bufs.next().ids.capacity()];
+        let mut caps = [bufs.current().capacity(), bufs.next().capacity()];
         caps.sort_unstable();
         if iter >= 2 {
             match warm_caps {

@@ -121,7 +121,7 @@ fn prop_advance_emits_each_edge_exactly_once_per_strategy() {
         let frontier = Frontier::all_vertices(g.num_vertices);
         for strat in [StrategyKind::ThreadExpand, StrategyKind::Twc, StrategyKind::Lb, StrategyKind::LbLight] {
             let out = advance::advance(&ctx, &g, &frontier, advance::AdvanceType::V2E, strat, &|_, _, _| true);
-            let mut ids = out.ids.clone();
+            let mut ids = out.ids().to_vec();
             ids.sort_unstable();
             let want: Vec<u32> = (0..g.num_edges() as u32).collect();
             assert_eq!(ids, want, "seed {seed} {strat}");
@@ -141,11 +141,11 @@ fn prop_filter_partition_invariants() {
         let kept = filter::filter(&ctx, &f, &pred);
         // order-preserving subset
         let want: Vec<u32> = ids.iter().copied().filter(|&v| pred(v)).collect();
-        assert_eq!(kept.ids, want, "seed {seed}");
+        assert_eq!(kept.ids(), want.as_slice(), "seed {seed}");
         // split partitions losslessly
         let (pass, fail) = filter::split(&ctx, &f, &pred);
         assert_eq!(pass.len() + fail.len(), ids.len());
-        assert!(fail.ids.iter().all(|&v| v % 3 == 0));
+        assert!(fail.iter().all(|v| v % 3 == 0));
     }
 }
 

@@ -1,9 +1,8 @@
 //! End-to-end driver (DESIGN.md "End-to-end"): a full social-network
 //! analytics pipeline on an R-MAT social-graph analog, proving all layers
-//! compose — reachability (BFS), influence ranking (PageRank through both
-//! the native operator path and, when the graph fits, the AOT Pallas/XLA
-//! artifact), community structure (CC), recommendation (WTF), and
-//! clustering (TC) — reporting runtime + MTEPS per stage.
+//! compose — reachability (BFS), influence ranking (PageRank), community
+//! structure (CC), recommendation (WTF), and clustering (TC) — reporting
+//! runtime + MTEPS per stage.
 //!
 //!     cargo run --release --example social_ranking
 
@@ -44,25 +43,6 @@ fn main() {
         r.runtime_ms,
         &top[..5]
     );
-
-    // Stage 2b: same computation through the AOT XLA artifact on a
-    // fits-in-artifact subgraph (grid_1k), proving the L1/L2/L3 stack.
-    match gunrock::runtime::XlaRuntime::new(std::path::Path::new("artifacts")) {
-        Ok(mut rt) => {
-            let small = datasets::load("grid_1k", false);
-            let t = gunrock::util::timer::Timer::start();
-            match rt.pagerank(&small, 1e-6, 50) {
-                Ok((ranks, iters)) => println!(
-                    "[2b] XLA-offload PageRank (grid_1k, {} vertices): {iters} iters | {:.2} ms | mass {:.4}",
-                    small.num_vertices,
-                    t.elapsed_ms(),
-                    ranks.iter().sum::<f32>()
-                ),
-                Err(e) => println!("[2b] XLA offload skipped: {e}"),
-            }
-        }
-        Err(e) => println!("[2b] XLA offload unavailable (run `make artifacts`): {e}"),
-    }
 
     // Stage 3: community structure.
     let (comps, r) = cc::cc(&g, &cfg);

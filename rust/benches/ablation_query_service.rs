@@ -1,0 +1,183 @@
+//! Ablation: concurrent query service + 64-lane multi-source batching.
+//!
+//! Two measurements on a scale-free graph:
+//!
+//! 1. **batched vs sequential**: 64 distinct-source BFS and SSSP runs as
+//!    one lane-word traversal (`multi_source_*`) against 64 back-to-back
+//!    single-source runs — the paper's many-small-queries serving story.
+//!    Results are checked bit-identical; the CI gate requires parity and
+//!    batched speedup >= 1.
+//! 2. **service throughput**: client threads hammer the `QueryService`
+//!    with mixed point queries over a reused source pool — sustained
+//!    queries/sec plus p50/p99 latency, with coalescing and the landmark
+//!    cache engaged.
+//!
+//! Emits BENCH_query_service.json for the experiment ledger + CI gate.
+
+use std::sync::Arc;
+
+use gunrock::config::Config;
+use gunrock::graph::generators::{rmat, rmat::RmatParams};
+use gunrock::graph::datasets;
+use gunrock::harness;
+use gunrock::primitives::{bfs, sssp};
+use gunrock::service::{Query, QueryService};
+use gunrock::util::timer::Timer;
+use gunrock::util::{par, pool};
+
+const REPS: usize = 3;
+const CLIENTS: usize = 4;
+const QUERIES_PER_CLIENT: usize = 250;
+
+fn main() {
+    let workers = par::num_threads();
+    pool::ensure_capacity(workers);
+
+    let mut g = rmat(&RmatParams { scale: 14, edge_factor: 16, ..Default::default() });
+    datasets::attach_uniform_weights(&mut g, 42);
+    let n = g.num_vertices;
+    let m = g.num_edges();
+
+    // 64 distinct high-degree sources (worst case for sequential: every
+    // run covers most of the graph).
+    let mut by_degree: Vec<u32> = (0..n as u32).collect();
+    by_degree.sort_unstable_by_key(|&v| std::cmp::Reverse(g.degree(v)));
+    let sources: Vec<u32> = by_degree[..64].to_vec();
+
+    let cfg = Config::default();
+    let mut all_match = true;
+
+    // --- 1a. BFS: 64 sequential runs vs one 64-lane batch --------------
+    let seq_truth: Vec<Vec<u32>> =
+        sources.iter().map(|&s| bfs::bfs(&g, s, &cfg).0.labels).collect();
+    let t = Timer::start();
+    for _ in 0..REPS {
+        for &s in &sources {
+            let _ = bfs::bfs(&g, s, &cfg);
+        }
+    }
+    let bfs_seq_ms = t.elapsed_ms() / REPS as f64;
+
+    let (ms, _) = bfs::multi_source_bfs(&g, &sources, &cfg);
+    for (lane, want) in seq_truth.iter().enumerate() {
+        all_match &= &ms.labels[lane] == want;
+    }
+    let t = Timer::start();
+    for _ in 0..REPS {
+        let _ = bfs::multi_source_bfs(&g, &sources, &cfg);
+    }
+    let bfs_batch_ms = t.elapsed_ms() / REPS as f64;
+    let bfs_speedup = bfs_seq_ms / bfs_batch_ms.max(1e-9);
+
+    // --- 1b. SSSP likewise ---------------------------------------------
+    let seq_truth: Vec<Vec<u64>> =
+        sources.iter().map(|&s| sssp::sssp(&g, s, &cfg).0.dist).collect();
+    let t = Timer::start();
+    for _ in 0..REPS {
+        for &s in &sources {
+            let _ = sssp::sssp(&g, s, &cfg);
+        }
+    }
+    let sssp_seq_ms = t.elapsed_ms() / REPS as f64;
+
+    let (msd, _) = sssp::multi_source_sssp(&g, &sources, &cfg);
+    for (lane, want) in seq_truth.iter().enumerate() {
+        all_match &= &msd.dist[lane] == want;
+    }
+    let t = Timer::start();
+    for _ in 0..REPS {
+        let _ = sssp::multi_source_sssp(&g, &sources, &cfg);
+    }
+    let sssp_batch_ms = t.elapsed_ms() / REPS as f64;
+    let sssp_speedup = sssp_seq_ms / sssp_batch_ms.max(1e-9);
+
+    // --- 2. service throughput under concurrent clients ----------------
+    let garc = Arc::new(g);
+    let svc = QueryService::start(Arc::clone(&garc), cfg);
+    // 128-source pool: wider than one batch, narrow enough that the
+    // landmark cache and coalescing both engage.
+    let pool_srcs: Vec<u32> = by_degree[..128.min(n)].to_vec();
+    let latencies = std::sync::Mutex::new(Vec::<f64>::new());
+    let t = Timer::start();
+    std::thread::scope(|scope| {
+        for c in 0..CLIENTS {
+            let svc = &svc;
+            let pool_srcs = &pool_srcs;
+            let latencies = &latencies;
+            scope.spawn(move || {
+                let mut local = Vec::with_capacity(QUERIES_PER_CLIENT);
+                let mut state = (c as u64 + 1) * 0x9e37_79b9_7f4a_7c15;
+                for i in 0..QUERIES_PER_CLIENT {
+                    state ^= state << 13;
+                    state ^= state >> 7;
+                    state ^= state << 17;
+                    let src = pool_srcs[(state % pool_srcs.len() as u64) as usize];
+                    let dst = (state % n as u64) as u32;
+                    let q = if i % 2 == 0 { Query::bfs(src, dst) } else { Query::sssp(src, dst) };
+                    let qt = Timer::start();
+                    svc.submit(q).expect("point query");
+                    local.push(qt.elapsed_ms());
+                }
+                latencies.lock().unwrap().extend(local);
+            });
+        }
+    });
+    let wall_ms = t.elapsed_ms();
+    let stats = svc.stats();
+    let mut lat = latencies.into_inner().unwrap();
+    lat.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+    let total_queries = lat.len();
+    let pct = |p: f64| lat[((total_queries as f64 * p) as usize).min(total_queries - 1)];
+    let (p50, p99) = (pct(0.50), pct(0.99));
+    let qps = total_queries as f64 / (wall_ms / 1000.0).max(1e-9);
+    let cache_hit_rate = stats.cache_hits as f64 / stats.served.max(1) as f64;
+
+    // --- report --------------------------------------------------------
+    harness::print_table(
+        "Ablation: 64-source batching — sequential vs one lane-word traversal",
+        &["primitive", "64 sequential ms", "batched ms", "speedup"],
+        &[
+            vec![
+                "bfs".to_string(),
+                format!("{bfs_seq_ms:.1}"),
+                format!("{bfs_batch_ms:.1}"),
+                format!("{bfs_speedup:.2}x"),
+            ],
+            vec![
+                "sssp".to_string(),
+                format!("{sssp_seq_ms:.1}"),
+                format!("{sssp_batch_ms:.1}"),
+                format!("{sssp_speedup:.2}x"),
+            ],
+        ],
+    );
+    println!(
+        "\nservice: {total_queries} queries from {CLIENTS} clients in {wall_ms:.0} ms \
+         -> {qps:.0} q/s | p50 {p50:.2} ms | p99 {p99:.2} ms"
+    );
+    println!(
+        "counters: served={} batches={} cache_hits={} ({:.0}%) coalesced={} rejected={}",
+        stats.served,
+        stats.batches,
+        stats.cache_hits,
+        cache_hit_rate * 100.0,
+        stats.coalesced,
+        stats.rejected
+    );
+    println!("results_match={all_match}");
+
+    let json = format!(
+        "{{\n  \"bench\": \"query_service\",\n  \"workers\": {workers},\n  \
+         \"graph\": {{\"vertices\": {n}, \"edges\": {m}}},\n  \
+         \"batch\": {{\"sources\": 64, \
+         \"bfs_seq_ms\": {bfs_seq_ms:.2}, \"bfs_batch_ms\": {bfs_batch_ms:.2}, \
+         \"bfs_speedup\": {bfs_speedup:.3}, \
+         \"sssp_seq_ms\": {sssp_seq_ms:.2}, \"sssp_batch_ms\": {sssp_batch_ms:.2}, \
+         \"sssp_speedup\": {sssp_speedup:.3}, \"results_match\": {all_match}}},\n  \
+         \"service\": {{\"clients\": {CLIENTS}, \"queries\": {total_queries}, \
+         \"qps\": {qps:.0}, \"p50_ms\": {p50:.3}, \"p99_ms\": {p99:.3}, \
+         \"cache_hit_rate\": {cache_hit_rate:.3}}}\n}}\n"
+    );
+    std::fs::write("BENCH_query_service.json", &json).expect("write BENCH_query_service.json");
+    println!("wrote BENCH_query_service.json");
+}

@@ -49,8 +49,14 @@ pub struct Config {
     pub max_iters: usize,
     /// RNG seed for workloads.
     pub seed: u64,
-    /// Directory holding AOT artifacts for the XLA offload path.
-    pub artifacts_dir: String,
+    /// Query-service admission limit: pending queries beyond this are
+    /// rejected with `QueueFull` instead of queued.
+    pub service_max_queue: usize,
+    /// Query-service batch width (distinct sources per lane-batch);
+    /// clamped to 1..=64 — the lane-word is a `u64`.
+    pub service_lanes: usize,
+    /// Landmark-cache capacity (cached result columns; 0 disables).
+    pub service_cache: usize,
 }
 
 impl Default for Config {
@@ -72,7 +78,9 @@ impl Default for Config {
             pr_max_iters: 50,
             max_iters: 10_000,
             seed: 42,
-            artifacts_dir: "artifacts".to_string(),
+            service_max_queue: 4096,
+            service_lanes: 64,
+            service_cache: 1024,
         }
     }
 }
@@ -103,8 +111,12 @@ impl Config {
             match key.as_str() {
                 "runtime.threads" | "threads" => self.threads = v.parse()?,
                 "runtime.pool_threads" | "pool_threads" => self.pool_threads = v.parse()?,
-                "runtime.artifacts_dir" | "artifacts_dir" => self.artifacts_dir = v.to_string(),
                 "runtime.seed" | "seed" => self.seed = v.parse()?,
+                "service.max_queue" | "service_max_queue" => {
+                    self.service_max_queue = v.parse()?
+                }
+                "service.lanes" | "service_lanes" => self.service_lanes = v.parse()?,
+                "service.cache" | "service_cache" => self.service_cache = v.parse()?,
                 "traversal.strategy" | "strategy" => {
                     self.strategy = Some(v.parse().map_err(anyhow::Error::msg)?)
                 }
@@ -230,6 +242,17 @@ mod tests {
         let mut bad = BTreeMap::new();
         bad.insert("frontier_mode".to_string(), "bogus".to_string());
         assert!(cfg.apply(&bad).is_err());
+    }
+
+    #[test]
+    fn service_knobs_apply() {
+        let mut cfg = Config::default();
+        let kv =
+            parse_toml_subset("[service]\nmax_queue = 128\nlanes = 32\ncache = 0\n").unwrap();
+        cfg.apply(&kv).unwrap();
+        assert_eq!(cfg.service_max_queue, 128);
+        assert_eq!(cfg.service_lanes, 32);
+        assert_eq!(cfg.service_cache, 0);
     }
 
     #[test]

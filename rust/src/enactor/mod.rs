@@ -36,6 +36,10 @@ pub struct RunResult {
     pub warp_efficiency: f64,
     pub kernel_launches: u64,
     pub atomics: u64,
+    /// Traversal instances this run advanced in parallel: 1 for
+    /// single-source primitives, up to 64 for the lane-batched engines
+    /// (0 is treated as 1 by consumers; `Default` predates batching).
+    pub lanes: usize,
 }
 
 impl RunResult {
@@ -175,6 +179,7 @@ impl Enactor {
             warp_efficiency: self.counters.warp_efficiency(),
             kernel_launches: self.counters.launches(),
             atomics: self.counters.atomics(),
+            lanes: 1,
         }
     }
 }

@@ -1,0 +1,246 @@
+//! 64-lane frontier words for bit-parallel multi-source traversal.
+//!
+//! The hybrid-engine PR packed frontier membership into one bit per
+//! vertex ([`super::DenseBits`]); this module widens that bit to a full
+//! machine word — [`LaneBits`] stores one `u64` **lane word** per vertex,
+//! where lane `i` is the frontier membership of traversal instance `i`
+//! (GraphBLAST makes the same move when it widens SpMV frontiers to SpMM
+//! blocks). A single word sweep therefore advances up to [`LANES`]
+//! independent single-source runs at once, decoding each active vertex's
+//! adjacency exactly once for all of them — the batching engine behind
+//! the query service.
+//!
+//! The concurrency contract mirrors `DenseBits`: insertion is a
+//! word-level `fetch_or` (concurrent and deduplicating per lane),
+//! cardinalities are sealed at the BSP step boundary, and a dirty
+//! high-water mark bounds sweeps and recycling to the touched prefix.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+/// Lanes per word: the batch width of the multi-source engine.
+pub const LANES: usize = 64;
+
+/// A frontier of up to [`LANES`] concurrent traversal instances: one
+/// atomic `u64` of per-lane membership per vertex.
+#[derive(Debug)]
+pub struct LaneBits {
+    words: Vec<AtomicU64>,
+    /// Exclusive upper bound on vertex indexes whose words may be
+    /// nonzero since the last clear; everything at or past it is zero.
+    dirty: AtomicUsize,
+    /// Vertices with at least one active lane — valid after
+    /// [`seal`](LaneBits::seal) (workers merge concurrently in between).
+    active: usize,
+    /// OR of every lane word — the per-lane settle detector: a zero bit
+    /// here means that instance's frontier is empty. Valid after `seal`.
+    union: u64,
+}
+
+impl LaneBits {
+    pub fn new(universe: usize) -> Self {
+        LaneBits {
+            words: (0..universe).map(|_| AtomicU64::new(0)).collect(),
+            dirty: AtomicUsize::new(0),
+            active: 0,
+            union: 0,
+        }
+    }
+
+    /// Size of the vertex universe.
+    #[inline]
+    pub fn universe(&self) -> usize {
+        self.words.len()
+    }
+
+    /// Lane word of vertex `v`.
+    #[inline]
+    pub fn word(&self, v: usize) -> u64 {
+        self.words[v].load(Ordering::Relaxed)
+    }
+
+    /// Concurrent, per-lane-deduplicating merge (`fetch_or`): OR `mask`
+    /// into `v`'s lane word, returning the lanes this call newly set.
+    /// Callers [`seal`](LaneBits::seal) at the step boundary before
+    /// reading the sealed aggregates.
+    #[inline]
+    pub fn merge(&self, v: usize, mask: u64) -> u64 {
+        let prev = self.words[v].fetch_or(mask, Ordering::Relaxed);
+        let newly = mask & !prev;
+        if newly != 0 {
+            self.dirty.fetch_max(v + 1, Ordering::Relaxed);
+        }
+        newly
+    }
+
+    /// Exclusive upper bound on possibly-nonzero words (bounded sweeps).
+    #[inline]
+    pub fn dirty_bound(&self) -> usize {
+        self.dirty.load(Ordering::Relaxed)
+    }
+
+    /// Sealed count of vertices with at least one active lane — the
+    /// frontier length the strategy heuristics consume.
+    #[inline]
+    pub fn active_vertices(&self) -> usize {
+        self.active
+    }
+
+    /// Sealed OR of all lane words: bit `i` set means instance `i` still
+    /// has frontier work; a cleared bit is a settled lane.
+    #[inline]
+    pub fn lane_union(&self) -> u64 {
+        self.union
+    }
+
+    /// Sealed emptiness: every lane of every instance has settled.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.active == 0
+    }
+
+    /// Recompute the sealed aggregates — one pass over the dirty prefix.
+    pub fn seal(&mut self) {
+        let bound = self.dirty.load(Ordering::Relaxed);
+        let mut active = 0usize;
+        let mut union = 0u64;
+        for w in &self.words[..bound] {
+            let x = w.load(Ordering::Relaxed);
+            if x != 0 {
+                active += 1;
+                union |= x;
+            }
+        }
+        self.active = active;
+        self.union = union;
+    }
+
+    /// Empty the frontier, zeroing only the dirty prefix.
+    pub fn clear(&mut self) {
+        let bound = self.dirty.load(Ordering::Relaxed);
+        for w in &self.words[..bound] {
+            w.store(0, Ordering::Relaxed);
+        }
+        self.dirty.store(0, Ordering::Relaxed);
+        self.active = 0;
+        self.union = 0;
+    }
+
+    /// Retarget to `universe` and empty — same-size reuse zeroes only the
+    /// dirty prefix (the zero-alloc ping-pong the engine loop relies on).
+    pub fn reset(&mut self, universe: usize) {
+        if self.words.len() == universe {
+            self.clear();
+        } else {
+            self.words = (0..universe).map(|_| AtomicU64::new(0)).collect();
+            self.dirty.store(0, Ordering::Relaxed);
+            self.active = 0;
+            self.union = 0;
+        }
+    }
+
+    /// Visit every vertex with a nonzero lane word as `f(v, mask)`, in
+    /// ascending vertex order (serial — the parallel sweeps live in
+    /// `load_balance::expand_lanes_into`).
+    pub fn for_each_active(&self, mut f: impl FnMut(usize, u64)) {
+        let bound = self.dirty.load(Ordering::Relaxed);
+        for (v, w) in self.words[..bound].iter().enumerate() {
+            let x = w.load(Ordering::Relaxed);
+            if x != 0 {
+                f(v, x);
+            }
+        }
+    }
+}
+
+/// Iterate the set lanes of `mask` as `f(lane_index)` — the scatter-back
+/// helper engines use to fan a merged word out to per-instance state.
+#[inline]
+pub fn for_each_lane(mask: u64, mut f: impl FnMut(usize)) {
+    let mut m = mask;
+    while m != 0 {
+        f(m.trailing_zeros() as usize);
+        m &= m - 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_reports_newly_set_lanes() {
+        let l = LaneBits::new(8);
+        assert_eq!(l.merge(3, 0b101), 0b101);
+        assert_eq!(l.merge(3, 0b111), 0b010, "already-set lanes are not new");
+        assert_eq!(l.merge(3, 0b111), 0, "fully duplicate merge");
+        assert_eq!(l.word(3), 0b111);
+    }
+
+    #[test]
+    fn seal_counts_active_and_unions_lanes() {
+        let mut l = LaneBits::new(100);
+        l.merge(2, 1 << 0);
+        l.merge(70, 1 << 5);
+        l.merge(70, 1 << 0);
+        l.seal();
+        assert_eq!(l.active_vertices(), 2);
+        assert_eq!(l.lane_union(), (1 << 5) | 1);
+        assert!(!l.is_empty());
+        assert!(l.dirty_bound() >= 71);
+    }
+
+    #[test]
+    fn clear_zeroes_dirty_prefix_only_and_reset_reuses() {
+        let mut l = LaneBits::new(128);
+        l.merge(100, u64::MAX);
+        l.clear();
+        assert_eq!(l.word(100), 0);
+        assert_eq!(l.dirty_bound(), 0);
+        assert!(l.is_empty());
+        // same-size reset reuses storage; size change reallocates
+        l.merge(5, 1);
+        l.reset(128);
+        assert_eq!(l.word(5), 0);
+        l.reset(16);
+        assert_eq!(l.universe(), 16);
+    }
+
+    #[test]
+    fn for_each_active_visits_nonzero_words_in_order() {
+        let mut l = LaneBits::new(64);
+        l.merge(9, 0b10);
+        l.merge(2, 0b01);
+        l.seal();
+        let mut seen = Vec::new();
+        l.for_each_active(|v, m| seen.push((v, m)));
+        assert_eq!(seen, vec![(2, 0b01), (9, 0b10)]);
+    }
+
+    #[test]
+    fn lane_iteration_matches_popcount() {
+        let mask = 0b1010_0110_0001u64 | (1 << 63);
+        let mut lanes = Vec::new();
+        for_each_lane(mask, |i| lanes.push(i));
+        assert_eq!(lanes.len(), mask.count_ones() as usize);
+        assert_eq!(lanes, vec![0, 5, 6, 9, 11, 63]);
+    }
+
+    #[test]
+    fn concurrent_merges_claim_each_lane_once() {
+        let l = LaneBits::new(256);
+        let wins = crate::util::par::run_partitioned(8, 8, |w, _, _| {
+            let mut won = 0u32;
+            for v in 0..256 {
+                // workers 0..8 contend pairwise on lanes 0..4
+                won += l.merge(v, 1 << (w % 4)).count_ones();
+            }
+            won
+        });
+        // every (vertex, lane 0..4) pair claimed by exactly one merge
+        assert_eq!(wins.iter().sum::<u32>(), 256 * 4);
+        let mut l = l;
+        l.seal();
+        assert_eq!(l.active_vertices(), 256);
+        assert_eq!(l.lane_union(), 0b1111);
+    }
+}

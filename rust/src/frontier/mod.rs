@@ -22,7 +22,13 @@
 //! retained across mode flips so a warm ping-pong iteration allocates
 //! nothing, and a recycled dense buffer zeroes only the words it actually
 //! touched (dirty-word high-water mark).
+//!
+//! The query-service PR adds a third, wider shape: [`lanes::LaneBits`]
+//! packs 64 concurrent traversal instances into one `u64` lane word per
+//! vertex (the SpMM widening of the dense bitmap), powering bit-parallel
+//! multi-source BFS/SSSP/PPR.
 
+pub mod lanes;
 pub mod priority_queue;
 
 use std::sync::atomic::{AtomicUsize, Ordering};

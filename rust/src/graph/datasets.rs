@@ -74,10 +74,12 @@ pub fn spec(name: &str) -> DatasetSpec {
     DatasetSpec { name: Box::leak(name.to_string().into_boxed_str()), class, description }
 }
 
-/// Instantiate the analog for a paper dataset name. `weighted` attaches
-/// the paper's uniform [1, 64] SSSP weights.
-pub fn load(name: &str, weighted: bool) -> Csr {
-    match name {
+/// Instantiate the analog for a paper dataset name, or `None` for a name
+/// not registered here — lets query paths degrade to a typed error
+/// instead of panicking. `weighted` attaches the paper's uniform [1, 64]
+/// SSSP weights.
+pub fn try_load(name: &str, weighted: bool) -> Option<Csr> {
+    Some(match name {
         // Social graphs: R-MAT analogs with decreasing edge factor,
         // mirroring relative densities of the originals.
         "soc-orkut" => rmat(&RmatParams { scale: 14, edge_factor: 32, seed: 101, weighted, ..Default::default() }),
@@ -96,7 +98,7 @@ pub fn load(name: &str, weighted: bool) -> Csr {
         "gplus-SNAP" => bipartite_follow_graph(&FollowGraphParams { users: 1 << 12, avg_follows: 64, seed: 143, ..Default::default() }),
         "twitter09" => bipartite_follow_graph(&FollowGraphParams { users: 1 << 14, avg_follows: 22, seed: 144, ..Default::default() }),
         // Small mesh-class datasets sized for the AOT ELL artifacts
-        // (n <= 1024/4096, max in-degree <= 64/32): the XLA offload path.
+        // (n <= 1024/4096, max in-degree <= 64/32).
         "grid_1k" => grid2d(&GridParams { width: 32, height: 32, seed: 160, weighted, ..Default::default() }),
         "grid_4k" => grid2d(&GridParams { width: 64, height: 64, seed: 161, weighted, ..Default::default() }),
         "rgg_1k" => rgg_weighted(RggParams { n: 1 << 10, radius: None, seed: 162, weighted }, weighted),
@@ -105,8 +107,16 @@ pub fn load(name: &str, weighted: bool) -> Csr {
             let scale: u32 = n["kron_g500-logn".len()..].parse().unwrap_or(16);
             rmat(&RmatParams { scale, edge_factor: 16, seed: 150 + scale as u64, weighted, ..Default::default() })
         }
-        other => panic!("unknown dataset {other}; register it in graph::datasets"),
-    }
+        _ => return None,
+    })
+}
+
+/// Instantiate the analog for a paper dataset name; panics on an unknown
+/// name. Legacy entry point for benches/examples where a typo should
+/// abort loudly — request paths use [`try_load`].
+pub fn load(name: &str, weighted: bool) -> Csr {
+    try_load(name, weighted)
+        .unwrap_or_else(|| panic!("unknown dataset {name}; register it in graph::datasets"))
 }
 
 fn smallworld_weighted(p: SmallWorldParams, weighted: bool) -> Csr {

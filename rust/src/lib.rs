@@ -10,9 +10,10 @@
 //! architecture ([`enactor`]), and the paper's graph primitives
 //! ([`primitives`]) with their CPU comparators ([`baselines`]).
 //!
-//! Dense fixed-shape iteration steps (PageRank, pull-BFS) can also execute
-//! through AOT-compiled XLA artifacts authored in JAX/Pallas at build time
-//! ([`runtime`]); Python is never on the request path.
+//! Every primitive is invoked through one surface — the
+//! [`primitives::api`] request/response layer — and the concurrent query
+//! service ([`service`]) batches point queries through the bit-parallel
+//! 64-lane multi-source engines ([`frontier::lanes`]).
 //!
 //! See DESIGN.md for the paper -> module map and EXPERIMENTS.md for
 //! paper-vs-measured results on every table and figure.
@@ -44,4 +45,5 @@ pub mod multi_gpu;
 pub mod operators;
 pub mod primitives;
 pub mod runtime;
+pub mod service;
 pub mod util;

@@ -20,9 +20,11 @@ pub mod merge_path;
 pub mod thread_expand;
 pub mod twc;
 
+use crate::frontier::lanes::LaneBits;
 use crate::frontier::DenseBits;
 use crate::gpu_sim::WarpCounters;
 use crate::graph::{GraphRep, VertexId};
+use crate::util::par;
 
 /// Strategy selector (module names from paper Table 2).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -151,6 +153,62 @@ pub fn expand_dense_into<G: GraphRep, F: EdgeVisit>(
     }
 }
 
+/// Per-edge visitor for **lane-word** expansion: `(src, edge_id, dst,
+/// lane_mask)` — `lane_mask` is the source vertex's packed frontier word,
+/// i.e. the set of traversal instances for which this edge is live. The
+/// visitor runs once per edge *for all 64 lanes at once* (GraphBLAST's
+/// SpMM trick: one adjacency decode amortized across the whole batch).
+pub trait LaneVisit: Fn(VertexId, usize, VertexId, u64) + Sync {}
+impl<F: Fn(VertexId, usize, VertexId, u64) + Sync> LaneVisit for F {}
+
+/// Dispatch a **lane-word** expansion: sweep every vertex with a nonzero
+/// lane word and visit each of its out-edges with the packed mask. Like
+/// the dense sweep there is no id gather; unlike it, per-vertex work does
+/// not vary with batch width, so only two mappings are meaningful here:
+/// ThreadExpand (static vertex ranges) and a dynamic-chunk sweep for
+/// everything else (ragged degrees; TWC/LB collapse to the same
+/// word-granular dynamic grab since there is no output queue to
+/// merge-partition). Warp accounting models each edge visit as two
+/// 32-lane virtual warps with `popcount(mask)` active lanes.
+pub fn expand_lanes_into<G: GraphRep, F: LaneVisit>(
+    kind: StrategyKind,
+    g: &G,
+    front: &LaneBits,
+    workers: usize,
+    counters: &WarpCounters,
+    visit: F,
+) {
+    counters.add_kernel_launch();
+    let bound = front.dirty_bound().min(g.num_vertices());
+    let sweep = |_w: usize, start: usize, end: usize| -> (u64, u64) {
+        let mut edges = 0u64;
+        let mut lane_visits = 0u64;
+        for v in start..end {
+            let mask = front.word(v);
+            if mask == 0 {
+                continue;
+            }
+            let active = mask.count_ones() as u64;
+            let src = v as VertexId;
+            g.for_each_neighbor(src, |e, d| {
+                visit(src, e, d, mask);
+                edges += 1;
+                lane_visits += active;
+            });
+        }
+        (edges, lane_visits)
+    };
+    let parts = match kind {
+        StrategyKind::ThreadExpand => par::run_partitioned(bound, workers, sweep),
+        _ => par::run_dynamic(bound, workers, 256, sweep),
+    };
+    let (edges, lane_visits) =
+        parts.iter().fold((0u64, 0u64), |(e, l), &(pe, pl)| (e + pe, l + pl));
+    counters.add_edges(edges);
+    // One 64-lane word per edge = two virtual 32-lane warps.
+    counters.record_simd(lane_visits, 2 * edges);
+}
+
 /// Dispatch an expansion through the chosen strategy (allocating wrapper).
 pub fn expand<G: GraphRep, F: EdgeVisit>(
     kind: StrategyKind,
@@ -276,6 +334,35 @@ mod tests {
             got.sort_unstable();
             assert_eq!(want, got, "{kind}");
             assert_eq!(cs.edges(), cd.edges(), "{kind}");
+        }
+    }
+
+    #[test]
+    fn lane_expansion_visits_active_edges_with_masks() {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        let g = star();
+        let front = LaneBits::new(9);
+        front.merge(0, 0b11); // hub active in lanes 0 and 1
+        front.merge(3, 1 << 7); // leaf 3 (edge 3->4) in lane 7
+        for kind in [StrategyKind::ThreadExpand, StrategyKind::Twc, StrategyKind::Lb] {
+            let counters = WarpCounters::new();
+            let visited = AtomicU64::new(0);
+            let or_masks = AtomicU64::new(0);
+            expand_lanes_into(kind, &g, &front, 4, &counters, |s, _e, d, mask| {
+                assert!(s == 0 || s == 3, "only active vertices expand");
+                if s == 0 {
+                    assert_eq!(mask, 0b11);
+                } else {
+                    assert_eq!(mask, 1 << 7);
+                    assert_eq!(d, 4);
+                }
+                visited.fetch_add(1, Ordering::Relaxed);
+                or_masks.fetch_or(mask, Ordering::Relaxed);
+            });
+            // hub has 8 out-edges, vertex 3 has 1
+            assert_eq!(visited.load(Ordering::Relaxed), 9, "{kind}");
+            assert_eq!(or_masks.load(Ordering::Relaxed), 0b11 | (1 << 7), "{kind}");
+            assert_eq!(counters.edges(), 9, "{kind}");
         }
     }
 

@@ -2,11 +2,11 @@
 //!
 //! Subcommands:
 //!   run <primitive>    run a primitive on a dataset analog or graph file
+//!   serve              concurrent query service (stdin protocol or --demo)
 //!   generate           emit a synthetic dataset to an edge-list file
 //!   convert            compress a graph into the .gsr container
 //!   stats              report bits/edge for every codec on a graph
 //!   info               print dataset topology properties (Table 4 columns)
-//!   offload <what>     run PageRank / pull-BFS through the AOT XLA artifact
 //!   datasets           list registered paper-dataset analogs
 //!
 //! Examples:
@@ -15,18 +15,21 @@
 //!   gunrock convert --dataset rmat_s22_e64 --codec zeta2 --out /tmp/rmat.gsr
 //!   gunrock run bfs --graph /tmp/rmat.gsr          # decode-on-advance
 //!   gunrock stats --dataset soc-orkut
-//!   gunrock offload pagerank --dataset kron_g500-logn10
+//!   gunrock serve --dataset soc-livejournal1 --demo 1000
 //!   gunrock generate --dataset rmat_s22_e64 --out /tmp/rmat.txt
+//!
+//! Every primitive invocation — `run`, `serve`, and programmatic callers —
+//! dispatches through `primitives::api`, the one entry surface.
 
 use anyhow::{bail, Context, Result};
 
 use gunrock::config::{cli, Config};
 use gunrock::graph::compressed::{raw_csr_bytes, Codec, CompressedCsr};
 use gunrock::graph::{datasets, io, properties, GraphRep};
-use gunrock::harness::{self, suite};
-use gunrock::primitives::{
-    bfs, cc, color, label_propagation, mst, pagerank, sssp, tc, traversal_extras, wtf,
-};
+use gunrock::harness;
+use gunrock::primitives::api::{self, Output, PrimitiveKind, QueryError, Request};
+use gunrock::primitives::{bfs, sssp};
+use gunrock::service::{Answer, Query, QueryService};
 
 const BOOL_FLAGS: &[&str] =
     &["direction-optimized", "idempotence", "weighted", "undirected", "pull", "no-in-edges"];
@@ -46,13 +49,15 @@ fn usage() {
          USAGE: gunrock <subcommand> [flags]\n\
          \n\
          SUBCOMMANDS\n\
-           run <bfs|sssp|bc|pagerank|cc|tc|wtf|mst|color|mis|lp|radii>\n\
+           run <bfs|sssp|bc|pagerank|cc|tc|wtf|ppr|mst|color|mis|lp|radii>\n\
                                                   run a primitive (every primitive\n\
                                                   traverses .gsr compressed-natively)\n\
+           serve                                  concurrent query service: point\n\
+                                                  queries batched 64 sources wide\n\
+                                                  (stdin protocol, or --demo <n>)\n\
            convert                                compress to .gsr (--out, --codec;\n\
                                                   in-edge view by default)\n\
            stats                                  bits/edge per codec for a graph\n\
-           offload <pagerank|bfs>                 run through the AOT XLA artifact\n\
            info                                   dataset topology properties\n\
            generate                               write a dataset analog to a file\n\
            datasets                               list paper-dataset analogs\n\
@@ -76,7 +81,20 @@ fn usage() {
            --frontier-switch <f>  hybrid frontier densify threshold as a\n\
                                   fraction of m (default 0.05)\n\
            --frontier-mode <m>    frontier representation: auto (default)\n\
-                                  | sparse | dense\n"
+                                  | sparse | dense\n\
+         \n\
+         SERVE FLAGS\n\
+           --demo <n>            answer n synthetic mixed queries, print stats\n\
+           --max-queue <n>       admission-control queue limit (default 4096)\n\
+           --lanes <n>           batch width, 1..=64 (default 64)\n\
+           --cache <n>           landmark-cache capacity (default 1024)\n\
+         \n\
+         SERVE PROTOCOL (stdin, one query per line)\n\
+           bfs <src> <dst>       hop count src -> dst (or 'unreachable')\n\
+           sssp <src> <dst>      shortest-path distance src -> dst\n\
+           ppr <user>            top-k personalized-PageRank recommendations\n\
+           stats                 service counters (served, batches, cache hits)\n\
+           quit                  shut down\n"
     );
 }
 
@@ -115,8 +133,14 @@ fn build_config(p: &cli::ParsedArgs) -> Result<Config> {
     if let Some(s) = p.get("frontier-mode") {
         cfg.frontier_mode = s.parse().map_err(anyhow::Error::msg)?;
     }
-    if let Some(v) = p.get("artifacts-dir") {
-        cfg.artifacts_dir = v.to_string();
+    if let Some(v) = p.get_parse::<usize>("max-queue")? {
+        cfg.service_max_queue = v;
+    }
+    if let Some(v) = p.get_parse::<usize>("lanes")? {
+        cfg.service_lanes = v;
+    }
+    if let Some(v) = p.get_parse::<usize>("cache")? {
+        cfg.service_cache = v;
     }
     Ok(cfg)
 }
@@ -142,7 +166,8 @@ fn load_graph(p: &cli::ParsedArgs, weighted: bool) -> Result<(String, gunrock::g
         (path.to_string(), g)
     } else {
         let name = p.get_or("dataset", "rmat_s22_e64").to_string();
-        let g = datasets::load(&name, weighted);
+        let g = datasets::try_load(&name, weighted)
+            .ok_or(QueryError::UnknownDataset(name.clone()))?;
         (name, g)
     };
     let m = g.num_edges();
@@ -259,8 +284,9 @@ fn run(args: &[String]) -> Result<()> {
         }
         Some("run") => {
             let prim = p.positionals.first().context("run <primitive>")?.clone();
+            let kind: PrimitiveKind = prim.parse::<PrimitiveKind>()?;
             let cfg = build_config(&p)?;
-            let weighted = matches!(prim.as_str(), "sssp" | "mst");
+            let weighted = kind.needs_weights();
             // Every primitive is generic over GraphRep: a `.gsr` graph is
             // traversed compressed-natively (decode-on-advance, no
             // decompress-to-CSR fallback), anything else goes through raw
@@ -273,7 +299,7 @@ fn run(args: &[String]) -> Result<()> {
                     println!(
                         "{} on {path} [compressed {}, {:.2} B/edge{}]: \
                          {} vertices, {} edges, {} threads",
-                        prim,
+                        kind,
                         cg.codec,
                         cg.bytes_per_edge(),
                         if cg.has_in_view() { ", in-edge view" } else { ", push-only" },
@@ -281,53 +307,48 @@ fn run(args: &[String]) -> Result<()> {
                         cg.num_edges(),
                         cfg.effective_threads()
                     );
-                    run_primitive(&prim, &cg, &cfg, &p)
+                    run_primitive(kind, &cg, &cfg, &p)
                 }
                 _ => {
                     let (name, g) = load_graph(&p, weighted)?;
                     println!(
                         "{} on {name}: {} vertices, {} edges, {} threads",
-                        prim,
+                        kind,
                         g.num_vertices,
                         g.num_edges(),
                         cfg.effective_threads()
                     );
-                    run_primitive(&prim, &g, &cfg, &p)
+                    run_primitive(kind, &g, &cfg, &p)
                 }
             }
         }
-        Some("offload") => {
-            let what = p.positionals.first().context("offload <pagerank|bfs>")?.clone();
+        Some("serve") => {
             let cfg = build_config(&p)?;
-            // AOT artifacts exist at n in {1024, 4096}; default to a graph
-            // that fits the small variant.
-            let name = p.get_or("dataset", "grid_1k").to_string();
-            let g = datasets::load(&name, false);
-            let mut rt = gunrock::runtime::XlaRuntime::new(std::path::Path::new(&cfg.artifacts_dir))?;
-            println!("PJRT platform: {}", rt.platform());
-            match what.as_str() {
-                "pagerank" | "pr" => {
-                    let t = gunrock::util::timer::Timer::start();
-                    let (ranks, iters) = rt.pagerank(&g, 1e-6, 50)?;
+            // Load weighted so distance queries work out of the box (the
+            // weights are the paper's deterministic uniform [1, 64]).
+            match p.get("graph") {
+                Some(path) if path.ends_with(".gsr") => {
+                    let mut cg = io::load_gsr(std::path::Path::new(path))?;
+                    let m = cg.num_edges();
+                    ensure_uniform_weights(&mut cg.edge_weights, m, true);
                     println!(
-                        "XLA PageRank on {name}: {} vertices, {iters} iterations, {:.2} ms, top5={:?}",
-                        g.num_vertices, t.elapsed_ms(),
-                        top_k(&ranks.iter().map(|&x| x as f64).collect::<Vec<_>>(), 5)
+                        "serving {path} [compressed {}]: {} vertices, {} edges",
+                        cg.codec,
+                        cg.num_vertices,
+                        cg.num_edges()
                     );
+                    serve(std::sync::Arc::new(cg), cfg, &p)
                 }
-                "bfs" => {
-                    let src = p.get_parse::<u32>("src")?.unwrap_or_else(|| suite::pick_source(&g));
-                    let t = gunrock::util::timer::Timer::start();
-                    let (depth, iters) = rt.bfs_pull(&g, src, 1000)?;
-                    let reached = depth.iter().filter(|&&d| d != u32::MAX).count();
+                _ => {
+                    let (name, g) = load_graph(&p, true)?;
                     println!(
-                        "XLA pull-BFS on {name}: src={src} reached={reached} iters={iters} {:.2} ms",
-                        t.elapsed_ms()
+                        "serving {name}: {} vertices, {} edges",
+                        g.num_vertices,
+                        g.num_edges()
                     );
+                    serve(std::sync::Arc::new(g), cfg, &p)
                 }
-                other => bail!("unknown offload target {other}"),
             }
-            Ok(())
         }
         Some(other) => {
             usage();
@@ -337,107 +358,185 @@ fn run(args: &[String]) -> Result<()> {
 }
 
 /// Run one primitive over any graph representation (raw CSR or the
-/// compressed `.gsr` payload) — the whole suite is generic over
-/// [`GraphRep`], so there is no per-representation dispatch below this
-/// point.
+/// compressed `.gsr` payload) through the unified request surface — the
+/// per-primitive logic below is purely presentational.
 fn run_primitive<G: GraphRep>(
-    prim: &str,
+    kind: PrimitiveKind,
     g: &G,
     cfg: &Config,
     p: &cli::ParsedArgs,
 ) -> Result<()> {
-    let src = match p.get_parse::<u32>("src")? {
-        Some(s) => s,
-        None => suite::pick_source(g),
-    };
-    match prim {
-        "bfs" => {
-            if cfg.direction_optimized && !g.has_in_edges() {
-                eprintln!(
-                    "warning: --direction-optimized ignored: this graph has no in-edge \
-                     view (re-convert with in-edges for pull traversal), traversing push-only"
+    if kind == PrimitiveKind::Bfs && cfg.direction_optimized && !g.has_in_edges() {
+        eprintln!(
+            "warning: --direction-optimized ignored: this graph has no in-edge \
+             view (re-convert with in-edges for pull traversal), traversing push-only"
+        );
+    }
+    let mut req = Request::new(kind);
+    if let Some(s) = p.get_parse::<u32>("src")? {
+        req.sources = vec![s];
+    }
+    req.params.pull = p.get_bool("pull");
+    let resp = api::run_request(g, &req, cfg)?;
+    describe(&resp);
+    Ok(())
+}
+
+/// Render a response: one summary line per primitive, same fields the
+/// pre-API CLI printed.
+fn describe(resp: &api::Response) {
+    let src = resp.source.unwrap_or(0);
+    match &resp.output {
+        Output::Bfs { labels, push_iterations, pull_iterations, .. } => {
+            let reached = labels.iter().filter(|&&d| d != bfs::INFINITY_DEPTH).count();
+            let depth_max = labels.iter().filter(|&&d| d != bfs::INFINITY_DEPTH).max();
+            report(
+                &resp.run,
+                &format!(
+                    "src={src} reached={reached} depth_max={} push_iters={push_iterations} pull_iters={pull_iterations}",
+                    depth_max.unwrap_or(&0),
+                ),
+            );
+        }
+        Output::Sssp { dist, .. } => {
+            let reached = dist.iter().filter(|&&d| d < sssp::INFINITY_DIST).count();
+            report(&resp.run, &format!("src={src} reached={reached}"));
+        }
+        Output::Bc { .. } => report(&resp.run, &format!("src={src}")),
+        Output::PageRank { ranks, iterations } => {
+            let top: Vec<usize> = top_k(ranks, 5);
+            report(&resp.run, &format!("iters={iterations} top5={top:?}"));
+        }
+        Output::Cc { num_components, .. } => {
+            report(&resp.run, &format!("components={num_components}"));
+        }
+        Output::Tc { triangles } => report(&resp.run, &format!("triangles={triangles}")),
+        Output::Wtf { recommendations, .. } => {
+            report(&resp.run, &format!("user={src} recs={recommendations:?}"));
+        }
+        Output::Ppr { recommendations, .. } => {
+            report(&resp.run, &format!("user={src} recs={recommendations:?}"));
+        }
+        Output::Mst { tree_edges, total_weight } => {
+            report(&resp.run, &format!("forest_edges={tree_edges} weight={total_weight}"));
+        }
+        Output::Color { num_colors } => report(&resp.run, &format!("colors={num_colors}")),
+        Output::Mis { size } => report(&resp.run, &format!("independent={size}")),
+        Output::Lp { num_communities, iterations } => {
+            report(&resp.run, &format!("communities={num_communities} iters={iterations}"));
+        }
+        Output::Radii { radius, eccentricities } => {
+            println!("  pseudo-radius {radius} from samples {eccentricities:?}");
+        }
+    }
+}
+
+/// The `serve` loop: `--demo <n>` self-drives with synthetic queries;
+/// otherwise read the line protocol from stdin.
+fn serve<G: GraphRep + Send + Sync + 'static>(
+    g: std::sync::Arc<G>,
+    cfg: Config,
+    p: &cli::ParsedArgs,
+) -> Result<()> {
+    let n = g.num_vertices() as u32;
+    if n == 0 {
+        bail!(QueryError::Malformed("empty graph".to_string()));
+    }
+    let weighted = g.is_weighted();
+    let seed = cfg.seed;
+    let svc = QueryService::start(g, cfg);
+
+    if let Some(count) = p.get_parse::<usize>("demo")? {
+        // Mixed synthetic workload from a local xorshift: hop/distance
+        // point queries over a reused source pool (so batching and the
+        // landmark cache both engage) plus a PPR sprinkle.
+        let mut state = seed | 1;
+        let mut rng = move || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            state
+        };
+        let pool: Vec<u32> = (0..128).map(|_| (rng() % n as u64) as u32).collect();
+        let t = gunrock::util::timer::Timer::start();
+        let mut answered = 0usize;
+        let mut unreachable = 0usize;
+        for i in 0..count {
+            let src = pool[(rng() % pool.len() as u64) as usize];
+            let dst = (rng() % n as u64) as u32;
+            let q = match i % 3 {
+                0 => Query::bfs(src, dst),
+                1 if weighted => Query::sssp(src, dst),
+                _ => Query::ppr(src),
+            };
+            match svc.submit(q)? {
+                Answer::Hops(None) | Answer::Distance(None) => unreachable += 1,
+                _ => {}
+            }
+            answered += 1;
+        }
+        let ms = t.elapsed_ms();
+        let s = svc.stats();
+        println!(
+            "demo: {answered} queries in {ms:.1} ms ({:.0} q/s), {unreachable} unreachable",
+            answered as f64 / (ms / 1000.0).max(1e-9)
+        );
+        println!(
+            "stats: served={} batches={} cache_hits={} coalesced={} rejected={}",
+            s.served, s.batches, s.cache_hits, s.coalesced, s.rejected
+        );
+        return Ok(());
+    }
+
+    println!("ready (bfs <src> <dst> | sssp <src> <dst> | ppr <user> | stats | quit)");
+    let stdin = std::io::stdin();
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if std::io::BufRead::read_line(&mut stdin.lock(), &mut line)? == 0 {
+            break; // EOF
+        }
+        let words: Vec<&str> = line.split_whitespace().collect();
+        let reply = match words.as_slice() {
+            [] => continue,
+            ["quit"] | ["exit"] => break,
+            ["stats"] => {
+                let s = svc.stats();
+                println!(
+                    "served={} batches={} cache_hits={} coalesced={} rejected={}",
+                    s.served, s.batches, s.cache_hits, s.coalesced, s.rejected
                 );
+                continue;
             }
-            let (prob, st) = bfs::bfs(g, src, cfg);
-            let reached = prob.labels.iter().filter(|&&d| d != bfs::INFINITY_DEPTH).count();
-            report(
-                &st.result,
-                &format!(
-                    "src={src} reached={reached} depth_max={} push_iters={} pull_iters={}",
-                    prob.labels.iter().filter(|&&d| d != bfs::INFINITY_DEPTH).max().unwrap_or(&0),
-                    st.push_iterations,
-                    st.pull_iterations
-                ),
-            );
-        }
-        "sssp" => {
-            let (prob, r) = sssp::sssp(g, src, cfg);
-            let reached = prob.dist.iter().filter(|&&d| d < sssp::INFINITY_DIST).count();
-            report(&r, &format!("src={src} reached={reached}"));
-        }
-        "bc" => {
-            let (_, r) = gunrock::primitives::bc::bc_from_source(g, src, cfg);
-            report(&r, &format!("src={src}"));
-        }
-        "pagerank" | "pr" => {
-            if p.get_bool("pull") {
-                if !g.has_in_edges() {
-                    bail!("--pull requires an in-edge view (re-convert with in-edges)");
-                }
-                let (prob, r) = pagerank::pagerank_pull(g, cfg);
-                let top: Vec<usize> = top_k(&prob.ranks, 5);
-                report(&r, &format!("mode=pull iters={} top5={top:?}", prob.iterations));
-            } else {
-                let (prob, r) = pagerank::pagerank(g, cfg);
-                let top: Vec<usize> = top_k(&prob.ranks, 5);
-                report(&r, &format!("iters={} top5={top:?}", prob.iterations));
+            ["bfs", src, dst] => {
+                parse_pair(src, dst).and_then(|(s, d)| svc.submit(Query::bfs(s, d)))
             }
+            ["sssp", src, dst] => {
+                parse_pair(src, dst).and_then(|(s, d)| svc.submit(Query::sssp(s, d)))
+            }
+            ["ppr", user] => parse_vertex(user).and_then(|u| svc.submit(Query::ppr(u))),
+            other => Err(QueryError::Malformed(format!("unparsable query {other:?}"))),
+        };
+        // A malformed or rejected query is an error *response*; the
+        // service (and this loop) stay up.
+        match reply {
+            Ok(Answer::Hops(Some(h))) => println!("{h} hops"),
+            Ok(Answer::Distance(Some(d))) => println!("distance {d}"),
+            Ok(Answer::Hops(None)) | Ok(Answer::Distance(None)) => println!("unreachable"),
+            Ok(Answer::Recommendations(recs)) => println!("recommend {recs:?}"),
+            Err(e) => println!("error: {e}"),
         }
-        "cc" => {
-            let (prob, r) = cc::cc(g, cfg);
-            report(&r, &format!("components={}", prob.num_components));
-        }
-        "tc" => {
-            let (res, r) = tc::tc_intersect_filtered(g, cfg);
-            report(&r, &format!("triangles={}", res.triangles));
-        }
-        "wtf" => {
-            let (res, r) = wtf::wtf(g, src, 100, 10, cfg);
-            report(
-                &r,
-                &format!(
-                    "user={src} recs={:?} (ppr {:.2}ms, cot {:.2}ms, money {:.2}ms)",
-                    res.recommendations, res.ppr_ms, res.cot_ms, res.money_ms
-                ),
-            );
-        }
-        "mst" => {
-            // The loaders attach uniform weights for mst up front.
-            let (res, r) = mst::mst(g, cfg);
-            report(
-                &r,
-                &format!("forest_edges={} weight={}", res.tree_edges.len(), res.total_weight),
-            );
-        }
-        "color" => {
-            let (res, r) = color::color(g, cfg);
-            report(&r, &format!("colors={}", res.num_colors));
-        }
-        "mis" => {
-            let (in_mis, r) = color::mis(g, cfg);
-            report(&r, &format!("independent={}", in_mis.iter().filter(|&&b| b).count()));
-        }
-        "lp" | "label-propagation" => {
-            let (res, r) = label_propagation::label_propagation(g, cfg);
-            report(&r, &format!("communities={} iters={}", res.num_communities, res.iterations));
-        }
-        "radii" => {
-            let (radius, eccs) = traversal_extras::estimate_radius(g, 8, cfg, cfg.seed);
-            println!("  pseudo-radius {radius} from samples {eccs:?}");
-        }
-        other => bail!("unknown primitive {other}"),
     }
     Ok(())
+}
+
+fn parse_vertex(s: &str) -> Result<u32, QueryError> {
+    s.parse::<u32>()
+        .map_err(|_| QueryError::Malformed(format!("expected a vertex id, got {s:?}")))
+}
+
+fn parse_pair(a: &str, b: &str) -> Result<(u32, u32), QueryError> {
+    Ok((parse_vertex(a)?, parse_vertex(b)?))
 }
 
 fn top_k(xs: &[f64], k: usize) -> Vec<usize> {

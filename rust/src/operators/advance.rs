@@ -12,6 +12,7 @@
 //! discards duplicates for free (the paper's idempotent-discard
 //! optimization, §5.2.1).
 
+use crate::frontier::lanes::LaneBits;
 use crate::frontier::{DenseBits, Frontier, FrontierKind, FrontierView};
 use crate::graph::{GraphRep, VertexId};
 use crate::load_balance::{self, StrategyKind};
@@ -294,6 +295,45 @@ pub fn advance_bitmap<G: GraphRep, F: AdvanceFunctor>(
     out
 }
 
+/// Bit-parallel **multi-source** advance (GraphBLAST's SpMM widening of
+/// [`advance_bitmap_into`]): the input frontier packs up to 64 traversal
+/// instances into one `u64` lane word per vertex, and one expansion sweep
+/// advances all of them — each active vertex's adjacency is decoded once
+/// for the whole batch. The functor sees the packed mask and returns the
+/// surviving lanes (e.g. BFS returns the lanes that newly claimed `dst`);
+/// survivors are merged into the output's lane word via `fetch_or`, so
+/// per-lane duplicate discoveries are discarded for free exactly as in
+/// the one-bit engine. The output is sealed at the step boundary.
+pub fn advance_lanes_into<G: GraphRep, F>(
+    ctx: &OpContext,
+    g: &G,
+    input: &LaneBits,
+    strategy: StrategyKind,
+    functor: &F,
+    out: &mut LaneBits,
+) where
+    F: Fn(VertexId, VertexId, usize, u64) -> u64 + Sync,
+{
+    out.reset(g.num_vertices());
+    {
+        let out_ref = &*out;
+        load_balance::expand_lanes_into(
+            strategy,
+            g,
+            input,
+            ctx.workers,
+            ctx.counters,
+            |src, eid, dst, mask| {
+                let survive = functor(src, dst, eid, mask);
+                if survive != 0 {
+                    out_ref.merge(dst as usize, survive);
+                }
+            },
+        );
+    }
+    out.seal();
+}
+
 /// Pull-based advance ("Inverse_Expand", paper §5.1.4): sweep the
 /// **complement of the visited bitmap** word-aligned — no materialized
 /// unvisited list anywhere — scanning each unvisited vertex's incoming
@@ -462,6 +502,50 @@ mod tests {
         // both 1 and 2 discover 3; the fetch_or discards the duplicate
         assert_eq!(out.len(), 1);
         assert!(out.contains(3));
+    }
+
+    #[test]
+    fn lane_advance_matches_per_lane_bitmap_advance() {
+        let g = diamond();
+        let c = WarpCounters::new();
+        let ctx = OpContext::new(2, &c);
+        // lane 0 starts at 0, lane 1 starts at 1: one packed step
+        let input = LaneBits::new(5);
+        input.merge(0, 1 << 0);
+        input.merge(1, 1 << 1);
+        let mut out = LaneBits::new(5);
+        advance_lanes_into(&ctx, &g, &input, StrategyKind::Lb, &|_s, _d, _e, mask| mask, &mut out);
+        // lane 0 reaches {1,2}; lane 1 reaches {3}
+        assert_eq!(out.word(1), 1 << 0);
+        assert_eq!(out.word(2), 1 << 0);
+        assert_eq!(out.word(3), 1 << 1);
+        assert_eq!(out.active_vertices(), 3);
+        assert_eq!(out.lane_union(), 0b11);
+        // per-lane result equals the single-source bitmap advance
+        for (lane, src) in [(0u32, 0u32), (1, 1)] {
+            let f = Frontier::single(src);
+            let want = advance_bitmap(&ctx, &g, &f, StrategyKind::Lb, &|_, _, _| true);
+            for v in 0..5u32 {
+                let in_lane = out.word(v as usize) & (1 << lane) != 0;
+                assert_eq!(in_lane, want.contains(v), "lane {lane} vertex {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn lane_functor_masks_survivors() {
+        let g = diamond();
+        let c = WarpCounters::new();
+        let ctx = OpContext::new(1, &c);
+        let input = LaneBits::new(5);
+        input.merge(0, 0b11); // both lanes at the source
+        let mut out = LaneBits::new(5);
+        // only lane 1 survives any edge
+        let keep_lane1 = |_s: u32, _d: u32, _e: usize, mask: u64| mask & 0b10;
+        advance_lanes_into(&ctx, &g, &input, StrategyKind::Twc, &keep_lane1, &mut out);
+        assert_eq!(out.word(1), 0b10);
+        assert_eq!(out.word(2), 0b10);
+        assert_eq!(out.lane_union(), 0b10);
     }
 
     #[test]

@@ -1,0 +1,783 @@
+//! The unified primitive call surface: one [`Request`] in, one
+//! [`Response`] out, for every primitive in the suite.
+//!
+//! Before this layer each primitive had an ad-hoc signature (`bfs`
+//! returns `(BfsProblem, BfsStats)`, `sssp` returns `(SsspProblem,
+//! RunResult)`, `wtf` its own shape…), so every caller — the CLI, the
+//! query service, tests — needed a per-primitive arm. The [`Primitive`]
+//! trait normalizes them: a typed [`PrimitiveKind`] selects the
+//! algorithm, [`Params`] carries the knobs that are per-request rather
+//! than per-[`Config`], and the result is always an [`Output`] plus one
+//! [`RunResult`]. The CLI `run` arm, the CLI `serve` loop, and the
+//! programmatic API all dispatch through [`run_request`]/[`run_batch`] —
+//! there is no second way to invoke a primitive.
+//!
+//! Failures are values, not panics: [`QueryError`] covers malformed
+//! requests (bad source, missing weights, missing in-edge view) so a
+//! long-lived service degrades to an error response where the one-shot
+//! CLI used to be allowed to die.
+
+use crate::config::Config;
+use crate::enactor::RunResult;
+use crate::frontier::lanes::LANES;
+use crate::graph::{GraphRep, VertexId};
+use crate::harness::suite;
+use crate::primitives::{
+    bc, bfs, cc, color, label_propagation, mst, pagerank, sssp, tc, traversal_extras, wtf,
+};
+
+/// Which primitive a request runs (the paper's §6 suite plus the WTF
+/// sub-stage PPR, servable on its own).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PrimitiveKind {
+    Bfs,
+    Sssp,
+    Bc,
+    PageRank,
+    Cc,
+    Tc,
+    Wtf,
+    Ppr,
+    Mst,
+    Color,
+    Mis,
+    Lp,
+    Radii,
+}
+
+impl PrimitiveKind {
+    /// Kinds that traverse from a query vertex (the rest are whole-graph).
+    pub fn needs_source(self) -> bool {
+        matches!(
+            self,
+            PrimitiveKind::Bfs
+                | PrimitiveKind::Sssp
+                | PrimitiveKind::Bc
+                | PrimitiveKind::Wtf
+                | PrimitiveKind::Ppr
+        )
+    }
+
+    /// Kinds that require edge weights on the graph.
+    pub fn needs_weights(self) -> bool {
+        matches!(self, PrimitiveKind::Sssp | PrimitiveKind::Mst)
+    }
+
+    /// Kinds with a bit-parallel multi-source engine: a 64-source batch
+    /// runs as one lane-word traversal instead of 64 sequential runs.
+    pub fn batchable(self) -> bool {
+        matches!(self, PrimitiveKind::Bfs | PrimitiveKind::Sssp | PrimitiveKind::Ppr)
+    }
+}
+
+impl std::str::FromStr for PrimitiveKind {
+    type Err = QueryError;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "bfs" => Ok(PrimitiveKind::Bfs),
+            "sssp" => Ok(PrimitiveKind::Sssp),
+            "bc" => Ok(PrimitiveKind::Bc),
+            "pagerank" | "pr" => Ok(PrimitiveKind::PageRank),
+            "cc" => Ok(PrimitiveKind::Cc),
+            "tc" => Ok(PrimitiveKind::Tc),
+            "wtf" => Ok(PrimitiveKind::Wtf),
+            "ppr" => Ok(PrimitiveKind::Ppr),
+            "mst" => Ok(PrimitiveKind::Mst),
+            "color" => Ok(PrimitiveKind::Color),
+            "mis" => Ok(PrimitiveKind::Mis),
+            "lp" | "label-propagation" => Ok(PrimitiveKind::Lp),
+            "radii" => Ok(PrimitiveKind::Radii),
+            other => Err(QueryError::UnknownPrimitive(other.to_string())),
+        }
+    }
+}
+
+impl std::fmt::Display for PrimitiveKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            PrimitiveKind::Bfs => "bfs",
+            PrimitiveKind::Sssp => "sssp",
+            PrimitiveKind::Bc => "bc",
+            PrimitiveKind::PageRank => "pagerank",
+            PrimitiveKind::Cc => "cc",
+            PrimitiveKind::Tc => "tc",
+            PrimitiveKind::Wtf => "wtf",
+            PrimitiveKind::Ppr => "ppr",
+            PrimitiveKind::Mst => "mst",
+            PrimitiveKind::Color => "color",
+            PrimitiveKind::Mis => "mis",
+            PrimitiveKind::Lp => "lp",
+            PrimitiveKind::Radii => "radii",
+        };
+        f.write_str(s)
+    }
+}
+
+/// Per-request knobs (distinct from [`Config`], which configures the
+/// engine). Defaults match the paper's settings and the CLI's historical
+/// hardcoded values.
+#[derive(Clone, Debug)]
+pub struct Params {
+    /// PageRank: pull-mode gather (requires an in-edge view).
+    pub pull: bool,
+    /// WTF: Circle-of-Trust size (original WTF uses 1000).
+    pub cot_size: usize,
+    /// WTF/PPR: recommendations returned.
+    pub num_recs: usize,
+    /// PPR: power iterations.
+    pub ppr_iters: usize,
+    /// PPR: damping factor.
+    pub ppr_damping: f64,
+    /// Radii: BFS samples for the pseudo-radius estimate.
+    pub radii_samples: usize,
+}
+
+impl Default for Params {
+    fn default() -> Self {
+        Params {
+            pull: false,
+            cot_size: 100,
+            num_recs: 10,
+            ppr_iters: 10,
+            ppr_damping: 0.85,
+            radii_samples: 8,
+        }
+    }
+}
+
+/// A primitive invocation: what to run, from where, with which knobs.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub kind: PrimitiveKind,
+    /// Query vertices. Empty + a source-needing kind resolves to the
+    /// max-degree vertex (the suite's default); whole-graph kinds ignore
+    /// it. More than one source batches through the lane engine.
+    pub sources: Vec<VertexId>,
+    pub params: Params,
+}
+
+impl Request {
+    pub fn new(kind: PrimitiveKind) -> Self {
+        Request { kind, sources: Vec::new(), params: Params::default() }
+    }
+
+    pub fn with_source(kind: PrimitiveKind, src: VertexId) -> Self {
+        Request { kind, sources: vec![src], params: Params::default() }
+    }
+}
+
+/// Typed per-primitive results. Dense fields (labels, distances, ranks)
+/// are full vertex-indexed columns; point answers (one hop count, one
+/// distance) are reads into them, which is what makes the columns
+/// cacheable as landmarks in the query service.
+#[derive(Clone, Debug)]
+pub enum Output {
+    /// Depth labels ([`bfs::INFINITY_DEPTH`] = unreachable). `preds` is
+    /// empty in batched mode (see [`bfs::MsBfsProblem`]).
+    Bfs { labels: Vec<u32>, preds: Vec<i64>, push_iterations: usize, pull_iterations: usize },
+    /// Distances ([`sssp::INFINITY_DIST`] = unreachable). `preds` is
+    /// empty in batched mode.
+    Sssp { dist: Vec<u64>, preds: Vec<i64> },
+    Bc { scores: Vec<f64> },
+    PageRank { ranks: Vec<f64>, iterations: usize },
+    Cc { component: Vec<u32>, num_components: usize },
+    Tc { triangles: u64 },
+    Wtf { recommendations: Vec<VertexId>, circle_of_trust: Vec<VertexId>, scores: Vec<f64> },
+    Ppr { scores: Vec<f64>, recommendations: Vec<VertexId> },
+    Mst { tree_edges: usize, total_weight: u64 },
+    Color { num_colors: usize },
+    Mis { size: usize },
+    Lp { num_communities: usize, iterations: usize },
+    Radii { radius: usize, eccentricities: Vec<usize> },
+}
+
+/// One primitive run's result: the typed output plus the engine stats.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub kind: PrimitiveKind,
+    /// The resolved query vertex (None for whole-graph kinds).
+    pub source: Option<VertexId>,
+    pub output: Output,
+    /// Engine stats; in batched mode every lane's response shares the
+    /// batch's run (`run.lanes` > 1 tells them apart).
+    pub run: RunResult,
+}
+
+/// Typed failures for graph-load and query paths: a malformed request is
+/// an error response, never a panic — the query service stays up, the
+/// CLI maps it to a nonzero exit.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum QueryError {
+    UnknownPrimitive(String),
+    UnknownDataset(String),
+    InvalidSource { source: VertexId, num_vertices: usize },
+    NeedsWeights { primitive: PrimitiveKind },
+    NeedsInEdges { what: &'static str },
+    /// Admission control: the service queue is at capacity.
+    QueueFull { limit: usize },
+    /// The service shut down before this request was answered.
+    ServiceStopped,
+    Malformed(String),
+}
+
+impl std::fmt::Display for QueryError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            QueryError::UnknownPrimitive(s) => write!(f, "unknown primitive {s}"),
+            QueryError::UnknownDataset(s) => {
+                write!(f, "unknown dataset {s} (see `gunrock datasets`)")
+            }
+            QueryError::InvalidSource { source, num_vertices } => {
+                write!(f, "source vertex {source} out of range (graph has {num_vertices} vertices)")
+            }
+            QueryError::NeedsWeights { primitive } => {
+                write!(f, "{primitive} needs edge weights (load with --weighted)")
+            }
+            QueryError::NeedsInEdges { what } => {
+                write!(f, "{what} requires an in-edge view (re-convert with in-edges)")
+            }
+            QueryError::QueueFull { limit } => {
+                write!(f, "service queue full (limit {limit}), request rejected")
+            }
+            QueryError::ServiceStopped => write!(f, "query service stopped"),
+            QueryError::Malformed(s) => write!(f, "malformed request: {s}"),
+        }
+    }
+}
+
+impl std::error::Error for QueryError {}
+
+/// Validate a request against a graph and resolve its query vertex:
+/// bounds-check every source, default an absent one to the max-degree
+/// vertex, and check the graph provides what the primitive needs.
+fn validate<G: GraphRep>(g: &G, req: &Request) -> Result<Option<VertexId>, QueryError> {
+    let n = g.num_vertices();
+    if req.kind.needs_weights() && !g.is_weighted() {
+        return Err(QueryError::NeedsWeights { primitive: req.kind });
+    }
+    if req.kind == PrimitiveKind::PageRank && req.params.pull && !g.has_in_edges() {
+        return Err(QueryError::NeedsInEdges { what: "pull PageRank" });
+    }
+    for &s in &req.sources {
+        if s as usize >= n {
+            return Err(QueryError::InvalidSource { source: s, num_vertices: n });
+        }
+    }
+    if !req.kind.needs_source() {
+        return Ok(None);
+    }
+    Ok(Some(match req.sources.first() {
+        Some(&s) => s,
+        None => {
+            if n == 0 {
+                return Err(QueryError::Malformed("empty graph".to_string()));
+            }
+            suite::pick_source(g)
+        }
+    }))
+}
+
+/// Bounds-check a batch's sources (batch entry points take sources
+/// explicitly, so none is defaulted).
+fn validate_batch<G: GraphRep>(
+    g: &G,
+    sources: &[VertexId],
+    req: &Request,
+) -> Result<(), QueryError> {
+    if sources.is_empty() {
+        return Err(QueryError::Malformed("batch of zero sources".to_string()));
+    }
+    if req.kind.needs_weights() && !g.is_weighted() {
+        return Err(QueryError::NeedsWeights { primitive: req.kind });
+    }
+    let n = g.num_vertices();
+    for &s in sources {
+        if s as usize >= n {
+            return Err(QueryError::InvalidSource { source: s, num_vertices: n });
+        }
+    }
+    Ok(())
+}
+
+/// A primitive behind the unified surface. Implementations are marker
+/// structs (e.g. [`Bfs`]); the graph stays a method-level generic so one
+/// trait serves every [`GraphRep`]. `run_batch` defaults to sequential
+/// per-source runs; the lane-batched kinds override it with the
+/// bit-parallel engines.
+pub trait Primitive {
+    const KIND: PrimitiveKind;
+
+    fn run<G: GraphRep>(g: &G, req: &Request, cfg: &Config) -> Result<Response, QueryError>;
+
+    fn run_batch<G: GraphRep>(
+        g: &G,
+        sources: &[VertexId],
+        req: &Request,
+        cfg: &Config,
+    ) -> Result<Vec<Response>, QueryError> {
+        validate_batch(g, sources, req)?;
+        sources
+            .iter()
+            .map(|&s| {
+                let mut one = req.clone();
+                one.sources = vec![s];
+                Self::run(g, &one, cfg)
+            })
+            .collect()
+    }
+}
+
+/// Marker types implementing [`Primitive`] — named after the kinds.
+pub struct Bfs;
+pub struct Sssp;
+pub struct Bc;
+pub struct PageRank;
+pub struct Cc;
+pub struct Tc;
+pub struct Wtf;
+pub struct Ppr;
+pub struct Mst;
+pub struct ColorPrim;
+pub struct Mis;
+pub struct Lp;
+pub struct Radii;
+
+impl Primitive for Bfs {
+    const KIND: PrimitiveKind = PrimitiveKind::Bfs;
+
+    fn run<G: GraphRep>(g: &G, req: &Request, cfg: &Config) -> Result<Response, QueryError> {
+        let src = validate(g, req)?.expect("bfs needs a source");
+        let (prob, st) = bfs::bfs(g, src, cfg);
+        Ok(Response {
+            kind: Self::KIND,
+            source: Some(src),
+            output: Output::Bfs {
+                labels: prob.labels,
+                preds: prob.preds,
+                push_iterations: st.push_iterations,
+                pull_iterations: st.pull_iterations,
+            },
+            run: st.result,
+        })
+    }
+
+    fn run_batch<G: GraphRep>(
+        g: &G,
+        sources: &[VertexId],
+        req: &Request,
+        cfg: &Config,
+    ) -> Result<Vec<Response>, QueryError> {
+        validate_batch(g, sources, req)?;
+        let mut out = Vec::with_capacity(sources.len());
+        for chunk in sources.chunks(LANES) {
+            let (ms, run) = bfs::multi_source_bfs(g, chunk, cfg);
+            let iters = run.num_iterations();
+            for (lane, &src) in chunk.iter().enumerate() {
+                out.push(Response {
+                    kind: Self::KIND,
+                    source: Some(src),
+                    output: Output::Bfs {
+                        labels: ms.labels[lane].clone(),
+                        preds: Vec::new(),
+                        push_iterations: iters,
+                        pull_iterations: 0,
+                    },
+                    run: run.clone(),
+                });
+            }
+        }
+        Ok(out)
+    }
+}
+
+impl Primitive for Sssp {
+    const KIND: PrimitiveKind = PrimitiveKind::Sssp;
+
+    fn run<G: GraphRep>(g: &G, req: &Request, cfg: &Config) -> Result<Response, QueryError> {
+        let src = validate(g, req)?.expect("sssp needs a source");
+        let (prob, run) = sssp::sssp(g, src, cfg);
+        Ok(Response {
+            kind: Self::KIND,
+            source: Some(src),
+            output: Output::Sssp { dist: prob.dist, preds: prob.preds },
+            run,
+        })
+    }
+
+    fn run_batch<G: GraphRep>(
+        g: &G,
+        sources: &[VertexId],
+        req: &Request,
+        cfg: &Config,
+    ) -> Result<Vec<Response>, QueryError> {
+        validate_batch(g, sources, req)?;
+        let mut out = Vec::with_capacity(sources.len());
+        for chunk in sources.chunks(LANES) {
+            let (ms, run) = sssp::multi_source_sssp(g, chunk, cfg);
+            for (lane, &src) in chunk.iter().enumerate() {
+                out.push(Response {
+                    kind: Self::KIND,
+                    source: Some(src),
+                    output: Output::Sssp { dist: ms.dist[lane].clone(), preds: Vec::new() },
+                    run: run.clone(),
+                });
+            }
+        }
+        Ok(out)
+    }
+}
+
+impl Primitive for Bc {
+    const KIND: PrimitiveKind = PrimitiveKind::Bc;
+
+    fn run<G: GraphRep>(g: &G, req: &Request, cfg: &Config) -> Result<Response, QueryError> {
+        let src = validate(g, req)?.expect("bc needs a source");
+        let (prob, run) = bc::bc_from_source(g, src, cfg);
+        Ok(Response {
+            kind: Self::KIND,
+            source: Some(src),
+            output: Output::Bc { scores: prob.bc_values },
+            run,
+        })
+    }
+}
+
+impl Primitive for PageRank {
+    const KIND: PrimitiveKind = PrimitiveKind::PageRank;
+
+    fn run<G: GraphRep>(g: &G, req: &Request, cfg: &Config) -> Result<Response, QueryError> {
+        validate(g, req)?;
+        let (prob, run) = if req.params.pull {
+            pagerank::pagerank_pull(g, cfg)
+        } else {
+            pagerank::pagerank(g, cfg)
+        };
+        Ok(Response {
+            kind: Self::KIND,
+            source: None,
+            output: Output::PageRank { ranks: prob.ranks, iterations: prob.iterations },
+            run,
+        })
+    }
+}
+
+impl Primitive for Cc {
+    const KIND: PrimitiveKind = PrimitiveKind::Cc;
+
+    fn run<G: GraphRep>(g: &G, req: &Request, cfg: &Config) -> Result<Response, QueryError> {
+        validate(g, req)?;
+        let (prob, run) = cc::cc(g, cfg);
+        Ok(Response {
+            kind: Self::KIND,
+            source: None,
+            output: Output::Cc { component: prob.component, num_components: prob.num_components },
+            run,
+        })
+    }
+}
+
+impl Primitive for Tc {
+    const KIND: PrimitiveKind = PrimitiveKind::Tc;
+
+    fn run<G: GraphRep>(g: &G, req: &Request, cfg: &Config) -> Result<Response, QueryError> {
+        validate(g, req)?;
+        let (res, run) = tc::tc_intersect_filtered(g, cfg);
+        Ok(Response {
+            kind: Self::KIND,
+            source: None,
+            output: Output::Tc { triangles: res.triangles },
+            run,
+        })
+    }
+}
+
+impl Primitive for Wtf {
+    const KIND: PrimitiveKind = PrimitiveKind::Wtf;
+
+    fn run<G: GraphRep>(g: &G, req: &Request, cfg: &Config) -> Result<Response, QueryError> {
+        let user = validate(g, req)?.expect("wtf needs a user");
+        let (res, run) = wtf::wtf(g, user, req.params.cot_size, req.params.num_recs, cfg);
+        Ok(Response {
+            kind: Self::KIND,
+            source: Some(user),
+            output: Output::Wtf {
+                recommendations: res.recommendations,
+                circle_of_trust: res.circle_of_trust,
+                scores: res.ppr_scores,
+            },
+            run,
+        })
+    }
+}
+
+impl Primitive for Ppr {
+    const KIND: PrimitiveKind = PrimitiveKind::Ppr;
+
+    fn run<G: GraphRep>(g: &G, req: &Request, cfg: &Config) -> Result<Response, QueryError> {
+        let user = validate(g, req)?.expect("ppr needs a user");
+        // One lane of the batch engine: single-user PPR and service
+        // batches share one code path (and therefore one numeric
+        // behavior) by construction.
+        let mut responses = Self::run_batch(g, &[user], req, cfg)?;
+        Ok(responses.pop().expect("one source, one response"))
+    }
+
+    fn run_batch<G: GraphRep>(
+        g: &G,
+        sources: &[VertexId],
+        req: &Request,
+        cfg: &Config,
+    ) -> Result<Vec<Response>, QueryError> {
+        validate_batch(g, sources, req)?;
+        let mut out = Vec::with_capacity(sources.len());
+        for chunk in sources.chunks(LANES) {
+            let (cols, run) =
+                wtf::ppr_batch(g, chunk, req.params.ppr_iters, req.params.ppr_damping, cfg);
+            for (&user, col) in chunk.iter().zip(cols) {
+                let recommendations = wtf::circle_of_trust(&col, user, req.params.num_recs);
+                out.push(Response {
+                    kind: Self::KIND,
+                    source: Some(user),
+                    output: Output::Ppr { scores: col, recommendations },
+                    run: run.clone(),
+                });
+            }
+        }
+        Ok(out)
+    }
+}
+
+impl Primitive for Mst {
+    const KIND: PrimitiveKind = PrimitiveKind::Mst;
+
+    fn run<G: GraphRep>(g: &G, req: &Request, cfg: &Config) -> Result<Response, QueryError> {
+        validate(g, req)?;
+        let (res, run) = mst::mst(g, cfg);
+        Ok(Response {
+            kind: Self::KIND,
+            source: None,
+            output: Output::Mst {
+                tree_edges: res.tree_edges.len(),
+                total_weight: res.total_weight,
+            },
+            run,
+        })
+    }
+}
+
+impl Primitive for ColorPrim {
+    const KIND: PrimitiveKind = PrimitiveKind::Color;
+
+    fn run<G: GraphRep>(g: &G, req: &Request, cfg: &Config) -> Result<Response, QueryError> {
+        validate(g, req)?;
+        let (res, run) = color::color(g, cfg);
+        Ok(Response {
+            kind: Self::KIND,
+            source: None,
+            output: Output::Color { num_colors: res.num_colors },
+            run,
+        })
+    }
+}
+
+impl Primitive for Mis {
+    const KIND: PrimitiveKind = PrimitiveKind::Mis;
+
+    fn run<G: GraphRep>(g: &G, req: &Request, cfg: &Config) -> Result<Response, QueryError> {
+        validate(g, req)?;
+        let (in_mis, run) = color::mis(g, cfg);
+        Ok(Response {
+            kind: Self::KIND,
+            source: None,
+            output: Output::Mis { size: in_mis.iter().filter(|&&b| b).count() },
+            run,
+        })
+    }
+}
+
+impl Primitive for Lp {
+    const KIND: PrimitiveKind = PrimitiveKind::Lp;
+
+    fn run<G: GraphRep>(g: &G, req: &Request, cfg: &Config) -> Result<Response, QueryError> {
+        validate(g, req)?;
+        let (res, run) = label_propagation::label_propagation(g, cfg);
+        Ok(Response {
+            kind: Self::KIND,
+            source: None,
+            output: Output::Lp {
+                num_communities: res.num_communities,
+                iterations: res.iterations,
+            },
+            run,
+        })
+    }
+}
+
+impl Primitive for Radii {
+    const KIND: PrimitiveKind = PrimitiveKind::Radii;
+
+    fn run<G: GraphRep>(g: &G, req: &Request, cfg: &Config) -> Result<Response, QueryError> {
+        validate(g, req)?;
+        let (radius, eccentricities) =
+            traversal_extras::estimate_radius(g, req.params.radii_samples, cfg, cfg.seed);
+        Ok(Response {
+            kind: Self::KIND,
+            source: None,
+            output: Output::Radii { radius, eccentricities },
+            // the radius estimator aggregates its sample BFS runs
+            // internally and reports no per-run stats
+            run: RunResult::default(),
+        })
+    }
+}
+
+/// Run one request — the single dispatch point every caller goes through.
+pub fn run_request<G: GraphRep>(
+    g: &G,
+    req: &Request,
+    cfg: &Config,
+) -> Result<Response, QueryError> {
+    match req.kind {
+        PrimitiveKind::Bfs => Bfs::run(g, req, cfg),
+        PrimitiveKind::Sssp => Sssp::run(g, req, cfg),
+        PrimitiveKind::Bc => Bc::run(g, req, cfg),
+        PrimitiveKind::PageRank => PageRank::run(g, req, cfg),
+        PrimitiveKind::Cc => Cc::run(g, req, cfg),
+        PrimitiveKind::Tc => Tc::run(g, req, cfg),
+        PrimitiveKind::Wtf => Wtf::run(g, req, cfg),
+        PrimitiveKind::Ppr => Ppr::run(g, req, cfg),
+        PrimitiveKind::Mst => Mst::run(g, req, cfg),
+        PrimitiveKind::Color => ColorPrim::run(g, req, cfg),
+        PrimitiveKind::Mis => Mis::run(g, req, cfg),
+        PrimitiveKind::Lp => Lp::run(g, req, cfg),
+        PrimitiveKind::Radii => Radii::run(g, req, cfg),
+    }
+}
+
+/// Run one request over many sources: lane-batchable kinds go through
+/// their bit-parallel engines (in chunks of up to 64), everything else
+/// runs sequentially per source. One response per source, in order.
+pub fn run_batch<G: GraphRep>(
+    g: &G,
+    sources: &[VertexId],
+    req: &Request,
+    cfg: &Config,
+) -> Result<Vec<Response>, QueryError> {
+    match req.kind {
+        PrimitiveKind::Bfs => Bfs::run_batch(g, sources, req, cfg),
+        PrimitiveKind::Sssp => Sssp::run_batch(g, sources, req, cfg),
+        PrimitiveKind::Bc => Bc::run_batch(g, sources, req, cfg),
+        PrimitiveKind::PageRank => PageRank::run_batch(g, sources, req, cfg),
+        PrimitiveKind::Cc => Cc::run_batch(g, sources, req, cfg),
+        PrimitiveKind::Tc => Tc::run_batch(g, sources, req, cfg),
+        PrimitiveKind::Wtf => Wtf::run_batch(g, sources, req, cfg),
+        PrimitiveKind::Ppr => Ppr::run_batch(g, sources, req, cfg),
+        PrimitiveKind::Mst => Mst::run_batch(g, sources, req, cfg),
+        PrimitiveKind::Color => ColorPrim::run_batch(g, sources, req, cfg),
+        PrimitiveKind::Mis => Mis::run_batch(g, sources, req, cfg),
+        PrimitiveKind::Lp => Lp::run_batch(g, sources, req, cfg),
+        PrimitiveKind::Radii => Radii::run_batch(g, sources, req, cfg),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder;
+
+    fn path5() -> crate::graph::Csr {
+        builder::from_edges(5, &[(0, 1), (1, 2), (2, 3), (3, 4)])
+    }
+
+    #[test]
+    fn kind_parses_and_round_trips() {
+        for s in [
+            "bfs", "sssp", "bc", "pagerank", "cc", "tc", "wtf", "ppr", "mst", "color", "mis",
+            "lp", "radii",
+        ] {
+            let k: PrimitiveKind = s.parse().unwrap();
+            assert_eq!(k.to_string(), s, "{s}");
+        }
+        assert_eq!("pr".parse::<PrimitiveKind>().unwrap(), PrimitiveKind::PageRank);
+        assert!(matches!(
+            "bogus".parse::<PrimitiveKind>(),
+            Err(QueryError::UnknownPrimitive(_))
+        ));
+    }
+
+    #[test]
+    fn run_request_matches_direct_call() {
+        let g = path5();
+        let cfg = Config::default();
+        let resp = run_request(&g, &Request::with_source(PrimitiveKind::Bfs, 0), &cfg).unwrap();
+        let (want, _) = bfs::bfs(&g, 0, &cfg);
+        match resp.output {
+            Output::Bfs { labels, .. } => assert_eq!(labels, want.labels),
+            other => panic!("wrong output variant {other:?}"),
+        }
+        assert_eq!(resp.source, Some(0));
+        assert_eq!(resp.run.lanes, 1);
+    }
+
+    #[test]
+    fn invalid_source_is_an_error_value() {
+        let g = path5();
+        let err = run_request(&g, &Request::with_source(PrimitiveKind::Bfs, 99), &Config::default())
+            .unwrap_err();
+        assert_eq!(err, QueryError::InvalidSource { source: 99, num_vertices: 5 });
+    }
+
+    #[test]
+    fn weightless_sssp_is_an_error_value() {
+        let g = path5();
+        let err = run_request(&g, &Request::with_source(PrimitiveKind::Sssp, 0), &Config::default())
+            .unwrap_err();
+        assert_eq!(err, QueryError::NeedsWeights { primitive: PrimitiveKind::Sssp });
+    }
+
+    #[test]
+    fn pull_pagerank_without_in_edges_is_an_error_value() {
+        use crate::graph::{Codec, CompressedCsr};
+        let cg = CompressedCsr::from_csr(&path5(), Codec::Varint); // push-only
+        let mut req = Request::new(PrimitiveKind::PageRank);
+        req.params.pull = true;
+        let err = run_request(&cg, &req, &Config::default()).unwrap_err();
+        assert_eq!(err, QueryError::NeedsInEdges { what: "pull PageRank" });
+    }
+
+    #[test]
+    fn default_source_is_max_degree_vertex() {
+        let g = builder::from_edges(4, &[(2, 0), (2, 1), (2, 3), (0, 1)]);
+        let resp =
+            run_request(&g, &Request::new(PrimitiveKind::Bfs), &Config::default()).unwrap();
+        assert_eq!(resp.source, Some(2));
+    }
+
+    #[test]
+    fn batch_chunks_past_lane_width() {
+        let g = path5();
+        let sources: Vec<u32> = (0..70).map(|i| i % 5).collect();
+        let req = Request::new(PrimitiveKind::Bfs);
+        let resps = run_batch(&g, &sources, &req, &Config::default()).unwrap();
+        assert_eq!(resps.len(), 70);
+        let (want, _) = bfs::bfs(&g, 3, &Config::default());
+        for resp in resps.iter().filter(|r| r.source == Some(3)) {
+            match &resp.output {
+                Output::Bfs { labels, .. } => assert_eq!(labels, &want.labels),
+                other => panic!("wrong output variant {other:?}"),
+            }
+            assert!(resp.run.lanes > 1, "batched responses carry the lane count");
+        }
+    }
+
+    #[test]
+    fn non_batchable_kind_falls_back_to_sequential() {
+        let g = path5();
+        let req = Request::new(PrimitiveKind::Bc);
+        let resps = run_batch(&g, &[0, 1], &req, &Config::default()).unwrap();
+        assert_eq!(resps.len(), 2);
+        assert_eq!(resps[0].source, Some(0));
+        assert_eq!(resps[1].source, Some(1));
+        assert!(resps.iter().all(|r| r.run.lanes == 1));
+    }
+}

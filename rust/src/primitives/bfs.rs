@@ -12,6 +12,7 @@ use std::sync::atomic::{AtomicU32, Ordering};
 
 use crate::config::Config;
 use crate::enactor::{Direction, DirectionHeuristic, Enactor, RunResult};
+use crate::frontier::lanes::{for_each_lane, LaneBits, LANES};
 use crate::frontier::Frontier;
 use crate::graph::{GraphRep, VertexId};
 use crate::load_balance::StrategyKind;
@@ -230,6 +231,112 @@ pub fn bfs<G: GraphRep>(g: &G, src: VertexId, config: &Config) -> (BfsProblem, B
     (problem, stats)
 }
 
+/// Multi-source BFS problem state: lane-major depth labels, one column
+/// per source. Batched mode trades predecessors for width (64 pred
+/// arrays would octuple the memory traffic for a field point queries
+/// never read) — run single-source [`bfs`] when a parent tree is needed.
+pub struct MsBfsProblem {
+    pub sources: Vec<VertexId>,
+    /// `labels[lane][v]` = depth of `v` from `sources[lane]`
+    /// ([`INFINITY_DEPTH`] if unreachable).
+    pub labels: Vec<Vec<u32>>,
+    /// Iteration at which each lane's frontier emptied (its settle point;
+    /// the whole run stops when every lane has settled).
+    pub settled_at: Vec<u32>,
+}
+
+/// Bit-parallel multi-source BFS: up to [`LANES`] sources advance in one
+/// lane-word traversal ([`advance::advance_lanes_into`]) — each frontier
+/// vertex's adjacency is decoded once for the whole batch, and a lane's
+/// visited claim is a 1-bit `fetch_or` inside the shared word.
+///
+/// Per-lane results are **bit-identical** to [`bfs`] from the same
+/// source: both engines are level-synchronous, and a vertex's depth is
+/// the (deterministic) first BSP level that reaches it, independent of
+/// which engine or worker claims it. Holds over raw and compressed
+/// representations alike.
+pub fn multi_source_bfs<G: GraphRep>(
+    g: &G,
+    sources: &[VertexId],
+    config: &Config,
+) -> (MsBfsProblem, RunResult) {
+    let k = sources.len();
+    assert!(
+        (1..=LANES).contains(&k),
+        "multi_source_bfs takes 1..={LANES} sources, got {k}"
+    );
+    let n = g.num_vertices();
+    let mut enactor = Enactor::new(config.clone());
+    enactor.begin_run();
+
+    // Lane-major label columns: scatter-back touches one lane's column.
+    let labels: Vec<Vec<AtomicU32>> =
+        (0..k).map(|_| (0..n).map(|_| AtomicU32::new(INFINITY_DEPTH)).collect()).collect();
+    let visited = LaneBits::new(n);
+    let mut cur = LaneBits::new(n);
+    let mut next = LaneBits::new(n);
+    for (lane, &src) in sources.iter().enumerate() {
+        visited.merge(src as usize, 1 << lane);
+        cur.merge(src as usize, 1 << lane);
+        labels[lane][src as usize].store(0, Ordering::Relaxed);
+    }
+    cur.seal();
+
+    let mut settled_at = vec![0u32; k];
+    let mut live: u64 = if k == LANES { u64::MAX } else { (1u64 << k) - 1 };
+    let mut depth: u32 = 0;
+    while !cur.is_empty() && enactor.within_iteration_cap() {
+        let iter_timer = Timer::start();
+        let input_len = cur.active_vertices();
+        depth += 1;
+        let strategy = enactor.strategy_for(g, input_len);
+        let ctx = enactor.ctx();
+        let d = depth;
+        let labels = &labels;
+        let visited = &visited;
+        advance::advance_lanes_into(
+            &ctx,
+            g,
+            &cur,
+            strategy,
+            &|_s: VertexId, dst: VertexId, _e: usize, mask: u64| {
+                // Per-lane claim: fetch_or returns the lanes that newly
+                // visited dst — exactly those store their depth (unique
+                // claimer per lane, like the visited.set path in `bfs`).
+                let newly = visited.merge(dst as usize, mask);
+                if newly != 0 {
+                    for_each_lane(newly, |lane| {
+                        labels[lane][dst as usize].store(d, Ordering::Relaxed);
+                    });
+                }
+                newly
+            },
+            &mut next,
+        );
+        // Per-lane settle detection: a lane missing from the sealed
+        // union has an empty frontier and is done.
+        let gone = live & !next.lane_union();
+        if gone != 0 {
+            for_each_lane(gone, |lane| settled_at[lane] = depth);
+            live &= next.lane_union();
+        }
+        enactor.record_iteration(input_len, next.active_vertices(), iter_timer.elapsed_ms(), false);
+        std::mem::swap(&mut cur, &mut next);
+    }
+
+    let mut result = enactor.finish_run();
+    result.lanes = k;
+    let problem = MsBfsProblem {
+        sources: sources.to_vec(),
+        labels: labels
+            .into_iter()
+            .map(|col| col.into_iter().map(|a| a.into_inner()).collect())
+            .collect(),
+        settled_at,
+    };
+    (problem, result)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -320,6 +427,37 @@ mod tests {
         // Frontier sizes match per level (exact dedup both ways), so the
         // direction heuristic takes the same push/pull schedule.
         assert_eq!(want_stats.pull_iterations, got_stats.pull_iterations);
+    }
+
+    #[test]
+    fn multi_source_matches_sequential_bit_exact() {
+        let g = rmat(&RmatParams { scale: 9, edge_factor: 8, ..Default::default() });
+        let sources: Vec<u32> = (0..64u32).map(|i| (i * 7) % g.num_vertices as u32).collect();
+        let cfg = Config::default();
+        let (ms, r) = multi_source_bfs(&g, &sources, &cfg);
+        assert_eq!(r.lanes, 64);
+        for (lane, &src) in sources.iter().enumerate() {
+            let (p, _) = bfs(&g, src, &cfg);
+            assert_eq!(ms.labels[lane], p.labels, "lane {lane} src {src}");
+        }
+    }
+
+    #[test]
+    fn lanes_settle_independently() {
+        // 0->1->2 plus isolated 3: a source at 2 settles before one at 0.
+        let g = builder::from_edges(4, &[(0, 1), (1, 2)]);
+        let (ms, _) = multi_source_bfs(&g, &[0, 2], &Config::default());
+        assert_eq!(ms.labels[0], vec![0, 1, 2, INFINITY_DEPTH]);
+        assert_eq!(ms.labels[1], vec![INFINITY_DEPTH, INFINITY_DEPTH, 0, INFINITY_DEPTH]);
+        assert!(ms.settled_at[1] <= ms.settled_at[0]);
+    }
+
+    #[test]
+    fn duplicate_sources_share_a_word() {
+        let g = path_graph(6);
+        let (ms, _) = multi_source_bfs(&g, &[3, 3, 0], &Config::default());
+        assert_eq!(ms.labels[0], ms.labels[1], "duplicate lanes agree");
+        assert_eq!(ms.labels[2][5], 5);
     }
 
     #[test]

@@ -1,7 +1,12 @@
 //! The paper's graph primitives (§6), each assembled from the operator
 //! set: BFS, SSSP, BC, PageRank, CC, TC, the WTF (Who-To-Follow)
 //! pipeline, and subgraph matching.
+//!
+//! All of them are invoked through one surface: the [`api`] module's
+//! [`api::Primitive`] trait and [`api::run_request`]/[`api::run_batch`]
+//! dispatchers (CLI `run`, CLI `serve`, and programmatic callers alike).
 
+pub mod api;
 pub mod bc;
 pub mod bfs;
 pub mod cc;

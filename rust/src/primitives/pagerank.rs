@@ -1,8 +1,7 @@
 //! PageRank (paper §6.5): full-vertex frontier, per iteration an advance
 //! accumulates rank contributions (atomicAdd) and a filter retires
 //! converged vertices. Also exposes a pull-mode (CSC gather, atomic-free)
-//! variant and the XLA-offload path that executes the AOT Pallas/JAX
-//! artifact through PJRT (see `runtime`).
+//! variant over the in-edge view.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 

@@ -7,6 +7,7 @@ use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 
 use crate::config::Config;
 use crate::enactor::{Enactor, RunResult};
+use crate::frontier::lanes::{for_each_lane, LaneBits, LANES};
 use crate::frontier::priority_queue::NearFarQueue;
 use crate::frontier::Frontier;
 use crate::graph::{GraphRep, VertexId};
@@ -169,6 +170,109 @@ pub fn sssp<G: GraphRep>(g: &G, src: VertexId, config: &Config) -> (SsspProblem,
     (problem, result)
 }
 
+/// Multi-source SSSP problem state: lane-major distance columns (see
+/// [`crate::primitives::bfs::MsBfsProblem`] for why batched mode omits
+/// predecessors).
+pub struct MsSsspProblem {
+    pub sources: Vec<VertexId>,
+    /// `dist[lane][v]` = shortest distance from `sources[lane]` to `v`
+    /// ([`INFINITY_DIST`] if unreachable).
+    pub dist: Vec<Vec<u64>>,
+    /// Iteration at which each lane's frontier last emptied.
+    pub settled_at: Vec<u32>,
+}
+
+/// Bit-parallel multi-source SSSP: lane-masked Bellman-Ford relaxation.
+/// Each edge is decoded once per iteration for the whole batch; the relax
+/// runs an `atomicMin` per *active lane*, and a lane re-enters the
+/// frontier only where its distance improved. The near/far queue does not
+/// apply here (64 instances would need 64 independent priority levels —
+/// the batch's shared-decode win is the reordering win's replacement).
+///
+/// Per-lane distances are **bit-identical** to [`sssp`] from the same
+/// source: integer shortest distances are the unique fixed point of
+/// relaxation, reached exactly by both schedules.
+pub fn multi_source_sssp<G: GraphRep>(
+    g: &G,
+    sources: &[VertexId],
+    config: &Config,
+) -> (MsSsspProblem, RunResult) {
+    assert!(g.is_weighted(), "SSSP needs edge weights (paper: uniform [1,64])");
+    let k = sources.len();
+    assert!(
+        (1..=LANES).contains(&k),
+        "multi_source_sssp takes 1..={LANES} sources, got {k}"
+    );
+    let n = g.num_vertices();
+    let mut enactor = Enactor::new(config.clone());
+    enactor.begin_run();
+
+    let dist: Vec<Vec<AtomicU64>> =
+        (0..k).map(|_| (0..n).map(|_| AtomicU64::new(INFINITY_DIST)).collect()).collect();
+    let mut cur = LaneBits::new(n);
+    let mut next = LaneBits::new(n);
+    for (lane, &src) in sources.iter().enumerate() {
+        cur.merge(src as usize, 1 << lane);
+        dist[lane][src as usize].store(0, Ordering::Relaxed);
+    }
+    cur.seal();
+
+    let mut settled_at = vec![0u32; k];
+    let mut live: u64 = if k == LANES { u64::MAX } else { (1u64 << k) - 1 };
+    let mut round: u32 = 0;
+    while !cur.is_empty() && enactor.within_iteration_cap() {
+        let t = Timer::start();
+        let prev_edges = enactor.counters.edges();
+        let input_len = cur.active_vertices();
+        round += 1;
+        let strategy = enactor.strategy_for(g, input_len);
+        let ctx = enactor.ctx();
+        let dist = &dist;
+        advance::advance_lanes_into(
+            &ctx,
+            g,
+            &cur,
+            strategy,
+            &|s: VertexId, d: VertexId, e: usize, mask: u64| {
+                let w = g.weight(e) as u64;
+                let mut improved = 0u64;
+                for_each_lane(mask, |lane| {
+                    let nd = dist[lane][s as usize].load(Ordering::Relaxed) + w;
+                    let old = atomic_min(&dist[lane][d as usize], nd);
+                    if nd < old {
+                        improved |= 1 << lane;
+                    }
+                });
+                improved
+            },
+            &mut next,
+        );
+        let gone = live & !next.lane_union();
+        if gone != 0 {
+            for_each_lane(gone, |lane| settled_at[lane] = round);
+            live &= next.lane_union();
+        }
+        // one relaxation atomic per traversed lane word (batched stat,
+        // mirroring the single-source accounting)
+        let e_now = enactor.counters.edges();
+        enactor.counters.add_atomics(e_now.saturating_sub(prev_edges));
+        enactor.record_iteration(input_len, next.active_vertices(), t.elapsed_ms(), false);
+        std::mem::swap(&mut cur, &mut next);
+    }
+
+    let mut result = enactor.finish_run();
+    result.lanes = k;
+    let problem = MsSsspProblem {
+        sources: sources.to_vec(),
+        dist: dist
+            .into_iter()
+            .map(|col| col.into_iter().map(|a| a.into_inner()).collect())
+            .collect(),
+        settled_at,
+    };
+    (problem, result)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -211,6 +315,28 @@ mod tests {
         cfg.sssp_delta = 0; // Bellman-Ford mode
         let (no_pq, _) = sssp(&g, 0, &cfg);
         assert_eq!(no_pq.dist, want);
+    }
+
+    #[test]
+    fn multi_source_matches_sequential_bit_exact() {
+        let g =
+            rmat(&RmatParams { scale: 9, edge_factor: 8, weighted: true, ..Default::default() });
+        let sources: Vec<u32> = (0..32u32).map(|i| (i * 13) % g.num_vertices as u32).collect();
+        let cfg = Config::default();
+        let (ms, r) = multi_source_sssp(&g, &sources, &cfg);
+        assert_eq!(r.lanes, 32);
+        for (lane, &src) in sources.iter().enumerate() {
+            let (p, _) = sssp(&g, src, &cfg);
+            assert_eq!(ms.dist[lane], p.dist, "lane {lane} src {src}");
+        }
+    }
+
+    #[test]
+    fn batched_takes_cheaper_path_per_lane() {
+        let g = weighted_triangle();
+        let (ms, _) = multi_source_sssp(&g, &[0, 2], &Config::default());
+        assert_eq!(ms.dist[0], vec![0, 6, 3]);
+        assert_eq!(ms.dist[1], vec![INFINITY_DIST, 3, 0]);
     }
 
     #[test]

@@ -15,6 +15,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::config::Config;
 use crate::enactor::{Enactor, RunResult};
+use crate::frontier::lanes::{LaneBits, LANES};
 use crate::frontier::Frontier;
 use crate::graph::{GraphRep, VertexId};
 use crate::operators::advance;
@@ -80,6 +81,113 @@ pub fn ppr<G: GraphRep>(
         }
     }
     scores
+}
+
+/// Bit-parallel multi-source personalized PageRank: up to [`LANES`] query
+/// users share one lane-word scatter per iteration — the active mask at a
+/// vertex is "which walks have mass here", and each edge decode feeds all
+/// of them. Returns lane-major score columns (`out[lane][v]`).
+///
+/// Unlike the integer traversals, PPR parity with per-user [`ppr`] is
+/// **approximate** (float accumulation order differs between schedules);
+/// rankings and scores agree to tight tolerance, not bit-for-bit.
+pub fn multi_source_ppr<G: GraphRep>(
+    g: &G,
+    users: &[VertexId],
+    iters: usize,
+    damp: f64,
+    enactor: &mut Enactor,
+) -> Vec<Vec<f64>> {
+    let k = users.len();
+    assert!(
+        (1..=LANES).contains(&k),
+        "multi_source_ppr takes 1..={LANES} users, got {k}"
+    );
+    let n = g.num_vertices();
+    let mut scores: Vec<Vec<f64>> = (0..k).map(|_| vec![0.0f64; n]).collect();
+    let mut active = LaneBits::new(n);
+    let mut next_active = LaneBits::new(n);
+    for (lane, &u) in users.iter().enumerate() {
+        scores[lane][u as usize] = 1.0;
+        active.merge(u as usize, 1 << lane);
+    }
+    active.seal();
+
+    for _ in 0..iters {
+        let next: Vec<Vec<AtomicU64>> =
+            (0..k).map(|_| (0..n).map(|_| AtomicU64::new(0f64.to_bits())).collect()).collect();
+        let strategy = enactor.strategy_for(g, active.active_vertices());
+        let ctx = enactor.ctx();
+        let scores_ref = &scores;
+        let next_ref = &next;
+        advance::advance_lanes_into(
+            &ctx,
+            g,
+            &active,
+            strategy,
+            &|s: VertexId, d: VertexId, _e: usize, mask: u64| {
+                let deg = g.degree(s);
+                if deg == 0 {
+                    return 0;
+                }
+                let inv_deg = 1.0 / deg as f64;
+                let mut out = 0u64;
+                crate::frontier::lanes::for_each_lane(mask, |lane| {
+                    let x = scores_ref[lane][s as usize];
+                    if x != 0.0 {
+                        atomic_add_f64(&next_ref[lane][d as usize], x * inv_deg);
+                        out |= 1 << lane;
+                    }
+                });
+                out
+            },
+            &mut next_active,
+        );
+        // Per-lane damp + restart, column-parallel (lanes are disjoint).
+        crate::util::par::for_each_mut(&mut scores, ctx.workers, |lane, col| {
+            let dangling: f64 = (0..n as VertexId)
+                .filter(|&v| g.degree(v) == 0)
+                .map(|v| col[v as usize])
+                .sum();
+            let user = users[lane] as usize;
+            for (v, slot) in next[lane].iter().enumerate() {
+                let mut x = damp * f64::from_bits(slot.load(Ordering::Relaxed));
+                if v == user {
+                    x += (1.0 - damp) + damp * dangling;
+                }
+                col[v] = x;
+            }
+        });
+        // The restart keeps every user's own vertex live even when no
+        // mass flowed in; everything else active is exactly the inflow.
+        for (lane, &u) in users.iter().enumerate() {
+            next_active.merge(u as usize, 1 << lane);
+        }
+        next_active.seal();
+        std::mem::swap(&mut active, &mut next_active);
+    }
+    scores
+}
+
+/// Batched PPR entry point owning its enactor: the engine behind both
+/// single-user WTF/PPR requests (one lane) and the query service's
+/// recommendation batches. Returns lane-major score columns plus one
+/// [`RunResult`] covering the whole batch.
+pub fn ppr_batch<G: GraphRep>(
+    g: &G,
+    users: &[VertexId],
+    iters: usize,
+    damp: f64,
+    config: &Config,
+) -> (Vec<Vec<f64>>, RunResult) {
+    let mut enactor = Enactor::new(config.clone());
+    enactor.begin_run();
+    let t = Timer::start();
+    let cols = multi_source_ppr(g, users, iters, damp, &mut enactor);
+    enactor.record_iteration(g.num_vertices(), users.len(), t.elapsed_ms(), false);
+    let mut result = enactor.finish_run();
+    result.lanes = users.len();
+    (cols, result)
 }
 
 /// Top-k vertices by score, excluding the user (the Circle of Trust; the
@@ -227,6 +335,29 @@ mod tests {
         assert!(s[0] > s[2], "restart mass at user");
         assert!(s[1] > s[2], "1-hop beats 2-hop");
         assert!(s[3] < 1e-12, "nothing flows to non-reachable 3");
+    }
+
+    #[test]
+    fn batched_ppr_matches_per_user_within_tolerance() {
+        let g = bipartite_follow_graph(&FollowGraphParams {
+            users: 256,
+            avg_follows: 6,
+            ..Default::default()
+        });
+        let users: Vec<u32> = (0..16u32).map(|i| i * 3).collect();
+        let (cols, run) = ppr_batch(&g, &users, 10, 0.85, &Config::default());
+        assert_eq!(run.lanes, 16);
+        for (lane, &u) in users.iter().enumerate() {
+            let mut e = Enactor::new(Config::default());
+            let want = ppr(&g, u, 10, 0.85, &mut e);
+            for v in 0..g.num_vertices {
+                let (a, b) = (cols[lane][v], want[v]);
+                assert!(
+                    (a - b).abs() <= 1e-9 * b.abs().max(1.0),
+                    "lane {lane} user {u} v {v}: {a} vs {b}"
+                );
+            }
+        }
     }
 
     #[test]

@@ -1,19 +1,18 @@
-//! PJRT runtime: loads the AOT HLO-text artifacts produced by
-//! `python/compile/aot.py` and executes them on the XLA CPU client via the
-//! `xla` crate — the request-path half of the three-layer architecture
-//! (Python only ever runs at build time).
+//! AOT artifact manifests: descriptions of the HLO-text artifacts
+//! produced by `python/compile/aot.py` (`artifacts/manifest.txt` lines:
+//! `<name> <n> <k> <filename>`).
 //!
-//! Artifacts are described by `artifacts/manifest.txt` lines:
-//! `<name> <n> <k> <filename>`; executables are compiled on first use and
-//! cached per (name, n, k).
+//! This module used to also host `XlaRuntime`, a PJRT-backed executor
+//! with stub/real variants behind an `xla` feature — a second way to
+//! invoke PageRank and pull-BFS next to the enactor path. That duplicate
+//! entry point is gone: every primitive now runs through the unified
+//! [`crate::primitives::api`] surface, and the offload experiment lives
+//! on only as the build-time manifest format parsed here (the Pallas
+//! kernels themselves are validated on the Python side).
 
 use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
-#[cfg(feature = "xla")]
-use {anyhow::anyhow, std::collections::HashMap};
-
-use crate::graph::Csr;
 
 /// One artifact variant from the manifest.
 #[derive(Clone, Debug)]
@@ -47,185 +46,6 @@ pub fn read_manifest(dir: &Path) -> Result<Vec<ArtifactSpec>> {
         });
     }
     Ok(out)
-}
-
-/// Stub used when the crate is built without the `xla` feature (the
-/// offline default — the external `xla` crate cannot be vendored). Keeps
-/// the public API shape so callers compile; every entry point reports how
-/// to enable the real path.
-#[cfg(not(feature = "xla"))]
-pub struct XlaRuntime {
-    _private: (),
-}
-
-#[cfg(not(feature = "xla"))]
-impl XlaRuntime {
-    /// Validate the manifest, then report that offload is unavailable.
-    pub fn new(artifacts_dir: &Path) -> Result<Self> {
-        let _specs = read_manifest(artifacts_dir)?;
-        bail!(
-            "gunrock was built without the `xla` feature; rebuild with \
-             `cargo build --features xla` (requires the xla crate) to run AOT offload"
-        )
-    }
-
-    pub fn platform(&self) -> String {
-        "unavailable (built without the `xla` feature)".to_string()
-    }
-
-    pub fn pagerank(&mut self, _g: &Csr, _eps: f32, _max_iters: usize) -> Result<(Vec<f32>, usize)> {
-        bail!("AOT offload unavailable: built without the `xla` feature")
-    }
-
-    pub fn bfs_pull(&mut self, _g: &Csr, _src: u32, _max_iters: usize) -> Result<(Vec<u32>, usize)> {
-        bail!("AOT offload unavailable: built without the `xla` feature")
-    }
-}
-
-/// PJRT client + compiled-executable cache.
-#[cfg(feature = "xla")]
-pub struct XlaRuntime {
-    client: xla::PjRtClient,
-    specs: Vec<ArtifactSpec>,
-    cache: HashMap<(String, usize, usize), xla::PjRtLoadedExecutable>,
-}
-
-#[cfg(feature = "xla")]
-impl XlaRuntime {
-    /// Create a CPU PJRT client and load the manifest from `artifacts_dir`.
-    pub fn new(artifacts_dir: &Path) -> Result<Self> {
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT: {e:?}"))?;
-        let specs = read_manifest(artifacts_dir)?;
-        Ok(XlaRuntime { client, specs, cache: HashMap::new() })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Smallest manifest variant of `name` fitting (min_n, min_k).
-    fn pick_spec(&self, name: &str, min_n: usize, min_k: usize) -> Result<ArtifactSpec> {
-        self.specs
-            .iter()
-            .filter(|s| s.name == name && s.n >= min_n && s.k >= min_k)
-            .min_by_key(|s| (s.n, s.k))
-            .cloned()
-            .with_context(|| {
-                format!("no '{name}' artifact with n>={min_n}, k>={min_k}; rerun `make artifacts`")
-            })
-    }
-
-    /// Compile (with cache) and return the executable for a spec.
-    fn compiled(&mut self, spec: &ArtifactSpec) -> Result<&xla::PjRtLoadedExecutable> {
-        let key = (spec.name.clone(), spec.n, spec.k);
-        if !self.cache.contains_key(&key) {
-            let proto =
-                xla::HloModuleProto::from_text_file(spec.file.to_str().context("non-utf8 path")?)
-                    .map_err(|e| anyhow!("parse {}: {e:?}", spec.file.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self
-                .client
-                .compile(&comp)
-                .map_err(|e| anyhow!("compile {}: {e:?}", spec.file.display()))?;
-            self.cache.insert(key.clone(), exe);
-        }
-        Ok(self.cache.get(&key).unwrap())
-    }
-
-    /// Run PageRank on `g` through the AOT artifact: pads the graph into
-    /// the ELL slab, iterates `pagerank_step` until the on-device L1 delta
-    /// drops below eps. Returns (ranks, iterations).
-    pub fn pagerank(&mut self, g: &Csr, eps: f32, max_iters: usize) -> Result<(Vec<f32>, usize)> {
-        let nv = g.num_vertices;
-        let max_in = (0..nv).map(|v| g.in_degree(v as u32)).max().unwrap_or(0);
-        let spec = self.pick_spec("pagerank_step", nv, max_in.max(1))?;
-        let (n, k) = (spec.n, spec.k);
-        let (cols, vals, dangling, dropped) = g.to_ell_transposed(n, k);
-        if dropped > 0 {
-            bail!("graph exceeds ELL width k={k} (dropped {dropped} entries)");
-        }
-
-        let cols_lit =
-            xla::Literal::vec1(&cols).reshape(&[n as i64, k as i64]).map_err(|e| anyhow!("{e:?}"))?;
-        let vals_lit =
-            xla::Literal::vec1(&vals).reshape(&[n as i64, k as i64]).map_err(|e| anyhow!("{e:?}"))?;
-        let dang_lit = xla::Literal::vec1(&dangling);
-        // padded init: rank mass only on real vertices
-        let mut pr: Vec<f32> = vec![0.0; n];
-        for x in pr.iter_mut().take(nv) {
-            *x = 1.0 / nv as f32;
-        }
-
-        let exe = self.compiled(&spec)?;
-        let mut iters = 0usize;
-        loop {
-            iters += 1;
-            let pr_lit = xla::Literal::vec1(&pr);
-            let args: Vec<&xla::Literal> = vec![&cols_lit, &vals_lit, &pr_lit, &dang_lit];
-            let result = exe.execute::<&xla::Literal>(&args).map_err(|e| anyhow!("execute: {e:?}"))?
-                [0][0]
-                .to_literal_sync()
-                .map_err(|e| anyhow!("{e:?}"))?;
-            // jit lowered with return_tuple=True: (new_pr, delta)
-            let elems = result.to_tuple().map_err(|e| anyhow!("{e:?}"))?;
-            let new_pr = elems[0].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
-            let delta: f32 =
-                elems[1].get_first_element::<f32>().map_err(|e| anyhow!("{e:?}"))?;
-            pr = new_pr;
-            if delta < eps || iters >= max_iters {
-                break;
-            }
-        }
-        pr.truncate(nv);
-        Ok((pr, iters))
-    }
-
-    /// Run pull-direction BFS through the AOT artifact. Returns depth
-    /// labels (u32::MAX unreachable) and iteration count.
-    pub fn bfs_pull(&mut self, g: &Csr, src: u32, max_iters: usize) -> Result<(Vec<u32>, usize)> {
-        let nv = g.num_vertices;
-        let max_in = (0..nv).map(|v| g.in_degree(v as u32)).max().unwrap_or(0);
-        let spec = self.pick_spec("bfs_pull_step", nv, max_in.max(1))?;
-        let (n, k) = (spec.n, spec.k);
-        // incoming-neighbor ELL slab (cols only)
-        let (cols, _vals, _dang, dropped) = g.to_ell_transposed(n, k);
-        if dropped > 0 {
-            bail!("graph exceeds ELL width k={k}");
-        }
-        let cols_lit =
-            xla::Literal::vec1(&cols).reshape(&[n as i64, k as i64]).map_err(|e| anyhow!("{e:?}"))?;
-
-        let mut visited: Vec<f32> = vec![0.0; n];
-        visited[src as usize] = 1.0;
-        let mut depth = vec![u32::MAX; nv];
-        depth[src as usize] = 0;
-
-        let exe = self.compiled(&spec)?;
-        let mut iters = 0usize;
-        loop {
-            iters += 1;
-            let vis_lit = xla::Literal::vec1(&visited);
-            let args: Vec<&xla::Literal> = vec![&cols_lit, &vis_lit];
-            let result = exe.execute::<&xla::Literal>(&args).map_err(|e| anyhow!("execute: {e:?}"))?
-                [0][0]
-                .to_literal_sync()
-                .map_err(|e| anyhow!("{e:?}"))?;
-            let elems = result.to_tuple().map_err(|e| anyhow!("{e:?}"))?;
-            let frontier = elems[0].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
-            let new_visited = elems[1].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
-            let size: f32 = elems[2].get_first_element::<f32>().map_err(|e| anyhow!("{e:?}"))?;
-            for (v, d) in depth.iter_mut().enumerate().take(nv) {
-                if *d == u32::MAX && frontier[v] > 0.5 {
-                    *d = iters as u32;
-                }
-            }
-            visited = new_visited;
-            if size < 0.5 || iters >= max_iters {
-                break;
-            }
-        }
-        Ok((depth, iters))
-    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,563 @@
+//! Concurrent query service: thousands of point queries (BFS hop counts,
+//! SSSP distances, PPR recommendations) against one shared immutable
+//! graph, served by batching — not by running concurrent enactors.
+//!
+//! The paper's headline WTF scenario is Twitter-scale *serving*: many
+//! small personalized queries against one big graph. The worker pool
+//! serializes enactor dispatches (one BSP kernel at a time), so the
+//! throughput lever is not concurrency but **width**: a background
+//! batcher drains the queue, packs up to 64 distinct sources of the same
+//! primitive kind into one lane-word traversal
+//! ([`crate::primitives::bfs::multi_source_bfs`] and friends — the
+//! GraphBLAST SpMM widening of the PR 5 bitmap engine), and scatters the
+//! per-lane columns back to the waiting clients. Around that engine sit
+//! the three serving-stack pieces the roadmap points at:
+//!
+//! - **Admission control**: a bounded queue; a full queue rejects with
+//!   [`QueryError::QueueFull`] instead of growing without bound.
+//! - **Request coalescing**: queries duplicating an in-flight (kind,
+//!   source) pair join its ticket instead of occupying another lane.
+//! - **Landmark cache**: finished per-source columns (depths, distances,
+//!   recommendation lists) are kept — a repeat point query is a cache
+//!   read, no traversal at all. [`QueryService::swap_graph`] invalidates
+//!   atomically via an epoch stamp, so a batch that raced the swap can
+//!   never populate the new graph's cache with old-graph columns.
+//!
+//! All primitive work dispatches through the unified
+//! [`crate::primitives::api`] surface; the service adds scheduling, not a
+//! second invocation path.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, RwLock};
+
+use crate::config::Config;
+use crate::graph::{GraphRep, VertexId};
+use crate::primitives::api::{self, Output, PrimitiveKind, QueryError, Request};
+use crate::primitives::{bfs, sssp};
+
+/// A point query against the served graph. `target` is required for
+/// BFS/SSSP (the answer is one cell of the source's column) and ignored
+/// for PPR (the answer is the recommendation list).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Query {
+    pub kind: PrimitiveKind,
+    pub source: VertexId,
+    pub target: Option<VertexId>,
+}
+
+impl Query {
+    pub fn bfs(source: VertexId, target: VertexId) -> Self {
+        Query { kind: PrimitiveKind::Bfs, source, target: Some(target) }
+    }
+
+    pub fn sssp(source: VertexId, target: VertexId) -> Self {
+        Query { kind: PrimitiveKind::Sssp, source, target: Some(target) }
+    }
+
+    pub fn ppr(user: VertexId) -> Self {
+        Query { kind: PrimitiveKind::Ppr, source: user, target: None }
+    }
+}
+
+/// A point answer. `None` means unreachable.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Answer {
+    Hops(Option<u32>),
+    Distance(Option<u64>),
+    Recommendations(Vec<VertexId>),
+}
+
+/// One source's cached result column, shared between coalesced waiters
+/// and the landmark cache (an `Arc` clone per reader, no copies).
+#[derive(Clone, Debug)]
+enum Column {
+    Depths(Arc<Vec<u32>>),
+    Dists(Arc<Vec<u64>>),
+    Recs(Arc<Vec<VertexId>>),
+}
+
+impl Column {
+    fn answer(&self, target: Option<VertexId>) -> Result<Answer, QueryError> {
+        match self {
+            Column::Depths(d) => {
+                let t = target.ok_or_else(|| {
+                    QueryError::Malformed("bfs query needs a target vertex".to_string())
+                })? as usize;
+                let x = d[t];
+                Ok(Answer::Hops(if x == bfs::INFINITY_DEPTH { None } else { Some(x) }))
+            }
+            Column::Dists(d) => {
+                let t = target.ok_or_else(|| {
+                    QueryError::Malformed("sssp query needs a target vertex".to_string())
+                })? as usize;
+                let x = d[t];
+                Ok(Answer::Distance(if x >= sssp::INFINITY_DIST { None } else { Some(x) }))
+            }
+            Column::Recs(r) => Ok(Answer::Recommendations(r.as_ref().clone())),
+        }
+    }
+}
+
+/// Blocking completion ticket: the batcher resolves it, the submitting
+/// thread waits on it. Coalesced duplicates share one ticket.
+struct Ticket {
+    slot: Mutex<Option<Result<Column, QueryError>>>,
+    done: Condvar,
+}
+
+impl Ticket {
+    fn new() -> Arc<Self> {
+        Arc::new(Ticket { slot: Mutex::new(None), done: Condvar::new() })
+    }
+
+    fn resolve(&self, result: Result<Column, QueryError>) {
+        let mut slot = lock(&self.slot);
+        *slot = Some(result);
+        self.done.notify_all();
+    }
+
+    fn wait(&self) -> Result<Column, QueryError> {
+        let mut slot = lock(&self.slot);
+        loop {
+            if let Some(result) = slot.take() {
+                return result;
+            }
+            slot = self.done.wait(slot).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+}
+
+/// A queued unit of work: one (kind, source) pair and everyone waiting
+/// on it (coalesced duplicates share the entry).
+struct Pending {
+    kind: PrimitiveKind,
+    source: VertexId,
+    ticket: Arc<Ticket>,
+}
+
+struct QueueState {
+    pending: VecDeque<Pending>,
+    stopped: bool,
+}
+
+/// Counters surfaced by [`QueryService::stats`].
+#[derive(Default)]
+struct Stats {
+    served: AtomicU64,
+    batches: AtomicU64,
+    cache_hits: AtomicU64,
+    coalesced: AtomicU64,
+    rejected: AtomicU64,
+}
+
+/// Snapshot of the service counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StatsSnapshot {
+    /// Queries answered (from engine runs or the cache).
+    pub served: u64,
+    /// Lane-batched engine runs dispatched.
+    pub batches: u64,
+    /// Queries answered from the landmark cache without a traversal.
+    pub cache_hits: u64,
+    /// Queries that joined an already-queued (kind, source) ticket.
+    pub coalesced: u64,
+    /// Queries refused by admission control (queue full).
+    pub rejected: u64,
+}
+
+struct Inner<G> {
+    cfg: Config,
+    /// Lanes per batch, clamped to 1..=64 from `Config::service_lanes`.
+    lanes: usize,
+    graph: RwLock<Arc<G>>,
+    /// Bumped by every graph swap; a batch only populates the cache if
+    /// the epoch it snapshotted is still current.
+    epoch: AtomicU64,
+    queue: Mutex<QueueState>,
+    work_cv: Condvar,
+    cache: Mutex<LandmarkCache>,
+    stats: Stats,
+}
+
+/// FIFO-evicting landmark cache over finished (kind, source) columns.
+struct LandmarkCache {
+    map: HashMap<(PrimitiveKind, VertexId), Column>,
+    order: VecDeque<(PrimitiveKind, VertexId)>,
+    cap: usize,
+}
+
+impl LandmarkCache {
+    fn new(cap: usize) -> Self {
+        LandmarkCache { map: HashMap::new(), order: VecDeque::new(), cap }
+    }
+
+    fn get(&self, key: &(PrimitiveKind, VertexId)) -> Option<Column> {
+        self.map.get(key).cloned()
+    }
+
+    fn insert(&mut self, key: (PrimitiveKind, VertexId), col: Column) {
+        if self.cap == 0 {
+            return;
+        }
+        if self.map.insert(key, col).is_none() {
+            self.order.push_back(key);
+            while self.order.len() > self.cap {
+                if let Some(old) = self.order.pop_front() {
+                    self.map.remove(&old);
+                }
+            }
+        }
+    }
+
+    fn clear(&mut self) {
+        self.map.clear();
+        self.order.clear();
+    }
+}
+
+/// Poison-immune mutex lock: a worker panicking mid-batch must not wedge
+/// every subsequent client on a `PoisonError` — the service's state is
+/// counters and queues, all valid at every step.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// The concurrent query service. `start` spawns the background batcher;
+/// dropping the service (or calling [`QueryService::shutdown`]) stops it
+/// and fails leftover tickets with [`QueryError::ServiceStopped`].
+pub struct QueryService<G: GraphRep + Send + Sync + 'static> {
+    inner: Arc<Inner<G>>,
+    batcher: Option<std::thread::JoinHandle<()>>,
+}
+
+impl<G: GraphRep + Send + Sync + 'static> QueryService<G> {
+    /// Start serving `graph` under `cfg` (`service_*` keys size the
+    /// queue, the batch width, and the cache).
+    pub fn start(graph: Arc<G>, cfg: Config) -> Self {
+        let mut svc = Self::new_unstarted(graph, cfg);
+        let inner = Arc::clone(&svc.inner);
+        svc.batcher = Some(
+            std::thread::Builder::new()
+                .name("gunrock-batcher".to_string())
+                .spawn(move || batcher_loop(&inner))
+                .expect("spawn batcher thread"),
+        );
+        svc
+    }
+
+    /// Service without a batcher thread — deterministic unit tests drive
+    /// the queue by hand (e.g. to observe a full queue).
+    fn new_unstarted(graph: Arc<G>, cfg: Config) -> Self {
+        let lanes = cfg.service_lanes.clamp(1, crate::frontier::lanes::LANES);
+        let cache_cap = cfg.service_cache;
+        QueryService {
+            inner: Arc::new(Inner {
+                lanes,
+                graph: RwLock::new(graph),
+                epoch: AtomicU64::new(0),
+                queue: Mutex::new(QueueState { pending: VecDeque::new(), stopped: false }),
+                work_cv: Condvar::new(),
+                cache: Mutex::new(LandmarkCache::new(cache_cap)),
+                stats: Stats::default(),
+                cfg,
+            }),
+            batcher: None,
+        }
+    }
+
+    /// Submit one point query and block until its answer. Fast path: a
+    /// cached column answers without touching the queue. Otherwise the
+    /// query is admitted (or rejected if the queue is full), coalesced
+    /// onto an existing ticket when one is queued for the same (kind,
+    /// source), and resolved by the batcher.
+    pub fn submit(&self, q: Query) -> Result<Answer, QueryError> {
+        self.enqueue(q)?.wait()?.answer(q.target)
+    }
+
+    /// Submit without blocking; call [`Handle::wait`] for the answer.
+    pub fn submit_async(&self, q: Query) -> Result<Handle, QueryError> {
+        let ticket = self.enqueue(q)?;
+        Ok(Handle { ticket, target: q.target })
+    }
+
+    fn enqueue(&self, q: Query) -> Result<Arc<Ticket>, QueryError> {
+        if !q.kind.batchable() {
+            return Err(QueryError::Malformed(format!(
+                "service answers point queries (bfs|sssp|ppr), not {}",
+                q.kind
+            )));
+        }
+        let inner = &self.inner;
+        {
+            let g = inner.graph.read().unwrap_or_else(|e| e.into_inner());
+            let n = g.num_vertices();
+            if q.source as usize >= n {
+                return Err(QueryError::InvalidSource { source: q.source, num_vertices: n });
+            }
+            if let Some(t) = q.target {
+                if t as usize >= n {
+                    return Err(QueryError::InvalidSource { source: t, num_vertices: n });
+                }
+            }
+        }
+        // Cache fast path.
+        if let Some(col) = lock(&inner.cache).get(&(q.kind, q.source)) {
+            inner.stats.cache_hits.fetch_add(1, Ordering::Relaxed);
+            inner.stats.served.fetch_add(1, Ordering::Relaxed);
+            let ticket = Ticket::new();
+            ticket.resolve(Ok(col));
+            return Ok(ticket);
+        }
+        let mut queue = lock(&inner.queue);
+        if queue.stopped {
+            return Err(QueryError::ServiceStopped);
+        }
+        // Coalesce onto an in-queue duplicate.
+        if let Some(p) =
+            queue.pending.iter().find(|p| p.kind == q.kind && p.source == q.source)
+        {
+            inner.stats.coalesced.fetch_add(1, Ordering::Relaxed);
+            return Ok(Arc::clone(&p.ticket));
+        }
+        // Admission control.
+        if queue.pending.len() >= inner.cfg.service_max_queue {
+            inner.stats.rejected.fetch_add(1, Ordering::Relaxed);
+            return Err(QueryError::QueueFull { limit: inner.cfg.service_max_queue });
+        }
+        let ticket = Ticket::new();
+        queue.pending.push_back(Pending {
+            kind: q.kind,
+            source: q.source,
+            ticket: Arc::clone(&ticket),
+        });
+        drop(queue);
+        inner.work_cv.notify_one();
+        Ok(ticket)
+    }
+
+    /// Replace the served graph. In-flight batches finish against the
+    /// old snapshot (their `Arc` keeps it alive) but cannot populate the
+    /// cache — the epoch bump plus cache clear make the swap atomic from
+    /// a client's point of view.
+    pub fn swap_graph(&self, graph: Arc<G>) {
+        let inner = &self.inner;
+        {
+            let mut g = inner.graph.write().unwrap_or_else(|e| e.into_inner());
+            *g = graph;
+            // Bump inside the write lock: batches snapshot (graph, epoch)
+            // under the read lock, so they see either (old, old) or
+            // (new, new) — never a cross pairing.
+            inner.epoch.fetch_add(1, Ordering::SeqCst);
+        }
+        lock(&inner.cache).clear();
+    }
+
+    /// Current counter snapshot.
+    pub fn stats(&self) -> StatsSnapshot {
+        let s = &self.inner.stats;
+        StatsSnapshot {
+            served: s.served.load(Ordering::Relaxed),
+            batches: s.batches.load(Ordering::Relaxed),
+            cache_hits: s.cache_hits.load(Ordering::Relaxed),
+            coalesced: s.coalesced.load(Ordering::Relaxed),
+            rejected: s.rejected.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Stop the batcher and fail queued tickets with `ServiceStopped`.
+    /// Idempotent; also runs on drop.
+    pub fn shutdown(&mut self) {
+        {
+            let mut queue = lock(&self.inner.queue);
+            queue.stopped = true;
+            for p in queue.pending.drain(..) {
+                p.ticket.resolve(Err(QueryError::ServiceStopped));
+            }
+        }
+        self.inner.work_cv.notify_all();
+        if let Some(h) = self.batcher.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl<G: GraphRep + Send + Sync + 'static> Drop for QueryService<G> {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Async completion handle from [`QueryService::submit_async`].
+pub struct Handle {
+    ticket: Arc<Ticket>,
+    target: Option<VertexId>,
+}
+
+impl Handle {
+    /// Block until the batcher resolves this query.
+    pub fn wait(self) -> Result<Answer, QueryError> {
+        self.ticket.wait()?.answer(self.target)
+    }
+}
+
+/// The background batcher: wait for work, drain a same-kind batch of up
+/// to `lanes` distinct sources from the queue front (preserving order
+/// for the rest), run it through the unified primitive API, scatter the
+/// columns back, and cache them if the graph epoch is unchanged.
+fn batcher_loop<G: GraphRep + Send + Sync + 'static>(inner: &Inner<G>) {
+    loop {
+        let batch: Vec<Pending> = {
+            let mut queue = lock(&inner.queue);
+            loop {
+                if queue.stopped {
+                    return;
+                }
+                if !queue.pending.is_empty() {
+                    break;
+                }
+                queue = inner.work_cv.wait(queue).unwrap_or_else(|e| e.into_inner());
+            }
+            let kind = queue.pending.front().expect("non-empty queue").kind;
+            let mut batch = Vec::new();
+            let mut rest = VecDeque::new();
+            while let Some(p) = queue.pending.pop_front() {
+                if p.kind == kind && batch.len() < inner.lanes {
+                    batch.push(p);
+                } else {
+                    rest.push_back(p);
+                }
+            }
+            queue.pending = rest;
+            batch
+        };
+
+        // Snapshot (graph, epoch) under the read lock (see swap_graph).
+        let (graph, epoch) = {
+            let g = inner.graph.read().unwrap_or_else(|e| e.into_inner());
+            (Arc::clone(&g), inner.epoch.load(Ordering::SeqCst))
+        };
+        run_batch_and_resolve(inner, &graph, epoch, &batch);
+        if !batch.is_empty() {
+            inner.stats.batches.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+fn run_batch_and_resolve<G: GraphRep + Send + Sync + 'static>(
+    inner: &Inner<G>,
+    graph: &G,
+    epoch: u64,
+    batch: &[Pending],
+) {
+    let Some(first) = batch.first() else { return };
+    let kind = first.kind;
+    let sources: Vec<VertexId> = batch.iter().map(|p| p.source).collect();
+    let req = Request::new(kind);
+    match api::run_batch(graph, &sources, &req, &inner.cfg) {
+        Ok(responses) => {
+            let fresh = inner.epoch.load(Ordering::SeqCst) == epoch;
+            for (p, resp) in batch.iter().zip(responses) {
+                let col = match resp.output {
+                    Output::Bfs { labels, .. } => Column::Depths(Arc::new(labels)),
+                    Output::Sssp { dist, .. } => Column::Dists(Arc::new(dist)),
+                    Output::Ppr { recommendations, .. } => {
+                        Column::Recs(Arc::new(recommendations))
+                    }
+                    other => {
+                        p.ticket.resolve(Err(QueryError::Malformed(format!(
+                            "unexpected output variant for {kind}: {other:?}"
+                        ))));
+                        continue;
+                    }
+                };
+                if fresh {
+                    lock(&inner.cache).insert((p.kind, p.source), col.clone());
+                }
+                inner.stats.served.fetch_add(1, Ordering::Relaxed);
+                p.ticket.resolve(Ok(col));
+            }
+        }
+        Err(e) => {
+            for p in batch {
+                p.ticket.resolve(Err(e.clone()));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder;
+
+    fn path6() -> Arc<crate::graph::Csr> {
+        let edges: Vec<(u32, u32)> = (0..5u32).map(|v| (v, v + 1)).collect();
+        Arc::new(builder::from_edges(6, &edges))
+    }
+
+    #[test]
+    fn admission_control_rejects_at_capacity() {
+        // No batcher: the queue fills and stays full.
+        let mut cfg = Config::default();
+        cfg.service_max_queue = 2;
+        let svc = QueryService::new_unstarted(path6(), cfg);
+        assert!(svc.submit_async(Query::bfs(0, 5)).is_ok());
+        assert!(svc.submit_async(Query::bfs(1, 5)).is_ok());
+        let err = svc.submit_async(Query::bfs(2, 5)).unwrap_err();
+        assert_eq!(err, QueryError::QueueFull { limit: 2 });
+        assert_eq!(svc.stats().rejected, 1);
+        // A duplicate source coalesces instead of being rejected.
+        assert!(svc.submit_async(Query::bfs(0, 3)).is_ok());
+        assert_eq!(svc.stats().coalesced, 1);
+    }
+
+    #[test]
+    fn stopped_service_fails_tickets() {
+        let mut svc = QueryService::new_unstarted(path6(), Config::default());
+        let h = svc.submit_async(Query::bfs(0, 5)).unwrap();
+        svc.shutdown();
+        assert_eq!(h.wait().unwrap_err(), QueryError::ServiceStopped);
+        assert_eq!(svc.submit(Query::bfs(0, 5)).unwrap_err(), QueryError::ServiceStopped);
+    }
+
+    #[test]
+    fn serves_point_queries_and_caches() {
+        let svc = QueryService::start(path6(), Config::default());
+        assert_eq!(svc.submit(Query::bfs(0, 5)).unwrap(), Answer::Hops(Some(5)));
+        assert_eq!(svc.submit(Query::bfs(0, 2)).unwrap(), Answer::Hops(Some(2)));
+        assert_eq!(svc.submit(Query::bfs(5, 0)).unwrap(), Answer::Hops(None), "directed path");
+        let s = svc.stats();
+        assert_eq!(s.served, 3);
+        assert!(s.cache_hits >= 1, "second query on source 0 is a cache read");
+    }
+
+    #[test]
+    fn rejects_malformed_queries_as_values() {
+        let svc = QueryService::start(path6(), Config::default());
+        let err = svc.submit(Query::bfs(99, 0)).unwrap_err();
+        assert_eq!(err, QueryError::InvalidSource { source: 99, num_vertices: 6 });
+        let err = svc
+            .submit(Query { kind: PrimitiveKind::Bfs, source: 0, target: None })
+            .unwrap_err();
+        assert!(matches!(err, QueryError::Malformed(_)), "{err}");
+        let err = svc
+            .submit(Query { kind: PrimitiveKind::Cc, source: 0, target: None })
+            .unwrap_err();
+        assert!(matches!(err, QueryError::Malformed(_)), "{err}");
+        // sssp on an unweighted graph degrades to an error response
+        let err = svc.submit(Query::sssp(0, 5)).unwrap_err();
+        assert_eq!(err, QueryError::NeedsWeights { primitive: PrimitiveKind::Sssp });
+    }
+
+    #[test]
+    fn swap_graph_invalidates_cache() {
+        let svc = QueryService::start(path6(), Config::default());
+        assert_eq!(svc.submit(Query::bfs(0, 5)).unwrap(), Answer::Hops(Some(5)));
+        // Same vertices, but with a shortcut 0 -> 5.
+        let mut edges: Vec<(u32, u32)> = (0..5u32).map(|v| (v, v + 1)).collect();
+        edges.push((0, 5));
+        svc.swap_graph(Arc::new(builder::from_edges(6, &edges)));
+        assert_eq!(svc.submit(Query::bfs(0, 5)).unwrap(), Answer::Hops(Some(1)));
+    }
+}

@@ -1,0 +1,230 @@
+//! Query-service integration: the 64-lane batched engines must be
+//! bit-identical to sequential runs (over raw `Csr` AND the compressed
+//! `.gsr` view — the shared edge-id space makes the representations
+//! interchangeable under the lane engine too), and the service layer on
+//! top (admission, coalescing, landmark cache, graph swap) must answer
+//! concurrent point queries correctly.
+
+use std::sync::Arc;
+
+use gunrock::config::Config;
+use gunrock::graph::generators::rmat::{rmat, RmatParams};
+use gunrock::graph::{builder, datasets, Codec, CompressedCsr, Csr};
+use gunrock::primitives::api::{self, PrimitiveKind, QueryError, Request};
+use gunrock::primitives::{bfs, sssp, wtf};
+use gunrock::service::{Answer, Query, QueryService};
+
+fn scale_free() -> Csr {
+    rmat(&RmatParams { scale: 9, edge_factor: 8, ..Default::default() })
+}
+
+fn scale_free_weighted() -> Csr {
+    let mut g = scale_free();
+    datasets::attach_uniform_weights(&mut g, 42);
+    g
+}
+
+fn sources_64(n: usize) -> Vec<u32> {
+    (0..64u32).map(|i| (i * 7) % n as u32).collect()
+}
+
+/// 64 lanes of batched BFS == 64 independent runs, bit for bit, over
+/// both graph representations.
+#[test]
+fn batched_bfs_bit_identical_to_sequential_over_both_reps() {
+    let g = scale_free();
+    let cg = CompressedCsr::from_csr(&g, Codec::Varint);
+    let cfg = Config::default();
+    let sources = sources_64(g.num_vertices);
+    let (ms_csr, run) = bfs::multi_source_bfs(&g, &sources, &cfg);
+    assert_eq!(run.lanes, 64);
+    let (ms_gsr, _) = bfs::multi_source_bfs(&cg, &sources, &cfg);
+    for (lane, &src) in sources.iter().enumerate() {
+        let (want, _) = bfs::bfs(&g, src, &cfg);
+        assert_eq!(ms_csr.labels[lane], want.labels, "csr lane {lane} src {src}");
+        assert_eq!(ms_gsr.labels[lane], want.labels, "gsr lane {lane} src {src}");
+    }
+}
+
+/// Same for SSSP: the lane-masked Bellman-Ford reaches the same integer
+/// fixed point as the sequential solver.
+#[test]
+fn batched_sssp_bit_identical_to_sequential_over_both_reps() {
+    let g = scale_free_weighted();
+    let cg = CompressedCsr::from_csr(&g, Codec::Varint);
+    assert_eq!(cg.edge_weights, g.edge_weights, "positional weights must be identical");
+    let cfg = Config::default();
+    let sources: Vec<u32> = (0..64u32).map(|i| (i * 13) % g.num_vertices as u32).collect();
+    let (ms_csr, run) = sssp::multi_source_sssp(&g, &sources, &cfg);
+    assert_eq!(run.lanes, 64);
+    let (ms_gsr, _) = sssp::multi_source_sssp(&cg, &sources, &cfg);
+    for (lane, &src) in sources.iter().enumerate() {
+        let (want, _) = sssp::sssp(&g, src, &cfg);
+        assert_eq!(ms_csr.dist[lane], want.dist, "csr lane {lane} src {src}");
+        assert_eq!(ms_gsr.dist[lane], want.dist, "gsr lane {lane} src {src}");
+    }
+}
+
+/// The api::run_batch surface returns per-source responses equal to
+/// per-source api::run_request calls (the service depends on this).
+#[test]
+fn api_batch_matches_api_sequential() {
+    let g = scale_free();
+    let cfg = Config::default();
+    let sources = sources_64(g.num_vertices);
+    let req = Request::new(PrimitiveKind::Bfs);
+    let batched = api::run_batch(&g, &sources, &req, &cfg).unwrap();
+    assert_eq!(batched.len(), sources.len());
+    for (resp, &src) in batched.iter().zip(&sources) {
+        assert_eq!(resp.source, Some(src));
+        let one = api::run_request(&g, &Request::with_source(PrimitiveKind::Bfs, src), &cfg)
+            .unwrap();
+        match (&resp.output, &one.output) {
+            (api::Output::Bfs { labels: a, .. }, api::Output::Bfs { labels: b, .. }) => {
+                assert_eq!(a, b, "src {src}")
+            }
+            other => panic!("wrong output variants {other:?}"),
+        }
+    }
+}
+
+/// Batched PPR through the service engine tracks the WTF reference
+/// column within float tolerance.
+#[test]
+fn batched_ppr_matches_reference_columns() {
+    let g = scale_free();
+    let cfg = Config::default();
+    let users: Vec<u32> = (0..16u32).collect();
+    let mut req = Request::new(PrimitiveKind::Ppr);
+    req.params.ppr_iters = 10;
+    let resps = api::run_batch(&g, &users, &req, &cfg).unwrap();
+    for (resp, &user) in resps.iter().zip(&users) {
+        let (cols, _) = wtf::ppr_batch(&g, &[user], 10, 0.85, &cfg);
+        match &resp.output {
+            api::Output::Ppr { scores, .. } => {
+                for (v, (a, b)) in scores.iter().zip(&cols[0]).enumerate() {
+                    let tol = 1e-9 * (1.0 + b.abs());
+                    assert!((a - b).abs() <= tol, "user {user} v {v}: {a} vs {b}");
+                }
+            }
+            other => panic!("wrong output variant {other:?}"),
+        }
+    }
+}
+
+/// Concurrent submissions from many client threads: every answer equals
+/// the precomputed sequential ground truth, and the counters add up.
+#[test]
+fn concurrent_submissions_answer_correctly() {
+    let g = Arc::new(scale_free_weighted());
+    let cfg = Config::default();
+    let n = g.num_vertices as u32;
+    // Precompute ground truth for a small source pool.
+    let pool: Vec<u32> = (0..8u32).map(|i| (i * 31) % n).collect();
+    let truth: Vec<(Vec<u32>, Vec<u64>)> = pool
+        .iter()
+        .map(|&s| {
+            let (b, _) = bfs::bfs(g.as_ref(), s, &cfg);
+            let (d, _) = sssp::sssp(g.as_ref(), s, &cfg);
+            (b.labels, d.dist)
+        })
+        .collect();
+    let svc = QueryService::start(Arc::clone(&g), cfg);
+    let total = std::sync::atomic::AtomicU64::new(0);
+    std::thread::scope(|scope| {
+        for t in 0..8usize {
+            let svc = &svc;
+            let pool = &pool;
+            let truth = &truth;
+            let total = &total;
+            scope.spawn(move || {
+                for i in 0..50usize {
+                    let which = (t * 50 + i) % pool.len();
+                    let src = pool[which];
+                    let dst = ((t * 131 + i * 17) % n as usize) as u32;
+                    let (labels, dist) = &truth[which];
+                    if i % 2 == 0 {
+                        let want = match labels[dst as usize] {
+                            bfs::INFINITY_DEPTH => None,
+                            h => Some(h),
+                        };
+                        let got = svc.submit(Query::bfs(src, dst)).unwrap();
+                        assert_eq!(got, Answer::Hops(want), "bfs {src}->{dst}");
+                    } else {
+                        let want = match dist[dst as usize] {
+                            d if d >= sssp::INFINITY_DIST => None,
+                            d => Some(d),
+                        };
+                        let got = svc.submit(Query::sssp(src, dst)).unwrap();
+                        assert_eq!(got, Answer::Distance(want), "sssp {src}->{dst}");
+                    }
+                    total.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                }
+            });
+        }
+    });
+    let s = svc.stats();
+    let total = total.load(std::sync::atomic::Ordering::Relaxed);
+    assert_eq!(total, 400);
+    assert_eq!(s.served + s.coalesced, total, "every query answered: {s:?}");
+    assert!(s.cache_hits > 0, "8 sources x 400 queries must hit the landmark cache: {s:?}");
+    assert_eq!(s.rejected, 0, "default queue is deep enough: {s:?}");
+}
+
+/// Cache correctness across a graph swap: the landmark cache must never
+/// serve a column computed on the old graph.
+#[test]
+fn cache_invalidated_on_graph_swap() {
+    let path: Vec<(u32, u32)> = (0..5u32).map(|v| (v, v + 1)).collect();
+    let svc = QueryService::start(Arc::new(builder::from_edges(6, &path)), Config::default());
+    assert_eq!(svc.submit(Query::bfs(0, 5)).unwrap(), Answer::Hops(Some(5)));
+    // Warm cache, then swap in a graph with a 0 -> 5 shortcut.
+    assert_eq!(svc.submit(Query::bfs(0, 5)).unwrap(), Answer::Hops(Some(5)));
+    assert!(svc.stats().cache_hits >= 1);
+    let mut edges = path.clone();
+    edges.push((0, 5));
+    svc.swap_graph(Arc::new(builder::from_edges(6, &edges)));
+    assert_eq!(svc.submit(Query::bfs(0, 5)).unwrap(), Answer::Hops(Some(1)));
+    assert_eq!(svc.submit(Query::bfs(0, 4)).unwrap(), Answer::Hops(Some(4)));
+}
+
+/// Error paths: malformed queries come back as typed error values and
+/// the service keeps serving afterwards.
+#[test]
+fn malformed_queries_degrade_to_error_responses() {
+    let g = Arc::new(scale_free()); // unweighted
+    let n = g.num_vertices;
+    let svc = QueryService::start(g, Config::default());
+    assert_eq!(
+        svc.submit(Query::bfs(u32::MAX, 0)).unwrap_err(),
+        QueryError::InvalidSource { source: u32::MAX, num_vertices: n }
+    );
+    assert_eq!(
+        svc.submit(Query::sssp(0, 1)).unwrap_err(),
+        QueryError::NeedsWeights { primitive: PrimitiveKind::Sssp }
+    );
+    assert!(matches!(
+        svc.submit(Query { kind: PrimitiveKind::Tc, source: 0, target: None }).unwrap_err(),
+        QueryError::Malformed(_)
+    ));
+    // Still alive.
+    assert!(matches!(svc.submit(Query::bfs(0, 1)).unwrap(), Answer::Hops(_)));
+}
+
+/// The service serves the compressed representation too — one generic
+/// service over any `GraphRep`.
+#[test]
+fn service_over_compressed_graph() {
+    let g = scale_free_weighted();
+    let cfg = Config::default();
+    let (want, _) = sssp::sssp(&g, 3, &cfg);
+    let cg = Arc::new(CompressedCsr::from_csr(&g, Codec::Varint));
+    let svc = QueryService::start(cg, cfg);
+    for dst in [0u32, 7, 200] {
+        let want = match want.dist[dst as usize] {
+            d if d >= sssp::INFINITY_DIST => None,
+            d => Some(d),
+        };
+        assert_eq!(svc.submit(Query::sssp(3, dst)).unwrap(), Answer::Distance(want));
+    }
+}

@@ -1,0 +1,152 @@
+//! Ablation: cost of the run-budget machinery (PR 7 robustness layer).
+//!
+//! Two measurements on a scale-free graph:
+//!
+//! 1. **budget-check overhead**: BFS and PageRank under a fully-armed
+//!    but never-tripping [`RunBudget`] (far deadline + live cancel token
+//!    + huge iteration cap — every check the enactor can pay) against
+//!    the same runs with no budget at all. The CI gate requires the
+//!    overhead under 3% and bit-identical results: per-iteration
+//!    deadline checks at BSP boundaries are supposed to be free.
+//! 2. **deadline enforcement**: a 1 ms-deadline BFS through the
+//!    `primitives::api` surface must come back as
+//!    [`QueryError::DeadlineExceeded`] with partial progress attached —
+//!    the trip is bounded by one BSP iteration, not one full run.
+//!
+//! Emits BENCH_robustness.json for the experiment ledger + CI gate.
+
+use gunrock::config::Config;
+use gunrock::graph::datasets;
+use gunrock::graph::generators::{rmat, rmat::RmatParams};
+use gunrock::harness;
+use gunrock::primitives::api::{self, PrimitiveKind, QueryError, Request};
+use gunrock::primitives::{bfs, pagerank};
+use gunrock::util::budget::{CancelToken, RunBudget};
+use gunrock::util::timer::Timer;
+use gunrock::util::{par, pool};
+
+const REPS: usize = 7;
+
+/// Min-of-reps: the budget checks are a fixed per-iteration cost, so the
+/// fastest rep of each side is the fairest pair to compare.
+fn min_ms<F: FnMut()>(mut f: F) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..REPS {
+        let t = Timer::start();
+        f();
+        best = best.min(t.elapsed_ms());
+    }
+    best
+}
+
+fn main() {
+    let workers = par::num_threads();
+    pool::ensure_capacity(workers);
+
+    let mut g = rmat(&RmatParams { scale: 14, edge_factor: 16, ..Default::default() });
+    datasets::attach_uniform_weights(&mut g, 42);
+    let n = g.num_vertices;
+    let m = g.num_edges();
+
+    let clean_cfg = Config::default();
+    // Fully-armed budget that can never trip: every per-iteration check
+    // (cancel load, deadline clock read, cap compare) is paid.
+    let token = CancelToken::new();
+    let mut budget_cfg = Config::default();
+    budget_cfg.budget = RunBudget {
+        deadline: RunBudget::with_deadline_ms(3_600_000).deadline,
+        cancel: Some(token.clone()),
+        max_iterations: Some(usize::MAX),
+    };
+
+    let src = 0u32;
+    let mut results_match = true;
+
+    // --- 1. clean vs budget, BFS + PageRank ----------------------------
+    let (clean_bfs, _) = bfs::bfs(&g, src, &clean_cfg);
+    let (budget_bfs, run) = bfs::bfs(&g, src, &budget_cfg);
+    results_match &= clean_bfs.labels == budget_bfs.labels;
+    results_match &= run.interrupted.is_none();
+    let bfs_clean_ms = min_ms(|| {
+        let _ = bfs::bfs(&g, src, &clean_cfg);
+    });
+    let bfs_budget_ms = min_ms(|| {
+        let _ = bfs::bfs(&g, src, &budget_cfg);
+    });
+
+    let (clean_pr, _) = pagerank::pagerank(&g, &clean_cfg);
+    let (budget_pr, run) = pagerank::pagerank(&g, &budget_cfg);
+    results_match &= clean_pr.ranks == budget_pr.ranks;
+    results_match &= run.interrupted.is_none();
+    let pr_clean_ms = min_ms(|| {
+        let _ = pagerank::pagerank(&g, &clean_cfg);
+    });
+    let pr_budget_ms = min_ms(|| {
+        let _ = pagerank::pagerank(&g, &budget_cfg);
+    });
+
+    let frac = |clean: f64, budget: f64| (budget / clean.max(1e-9) - 1.0).max(0.0);
+    let bfs_overhead = frac(bfs_clean_ms, bfs_budget_ms);
+    let pr_overhead = frac(pr_clean_ms, pr_budget_ms);
+    let overhead_frac = bfs_overhead.max(pr_overhead);
+
+    // --- 2. a 1 ms deadline trips as a typed error with progress -------
+    // Bigger graph so one full BFS comfortably outlives the deadline;
+    // the trip must land at a BSP iteration boundary, not run to the end.
+    let big = rmat(&RmatParams { scale: 17, edge_factor: 32, ..Default::default() });
+    let mut req = Request::with_source(PrimitiveKind::Bfs, 0);
+    req.params.budget = RunBudget::with_deadline_ms(1);
+    let t = Timer::start();
+    let outcome = api::run_request(&big, &req, &clean_cfg);
+    let deadline_wall_ms = t.elapsed_ms();
+    let (error_is_deadline, completed_iterations, reported_elapsed_ms) = match outcome {
+        Err(QueryError::DeadlineExceeded { elapsed_ms, completed_iterations }) => {
+            (true, completed_iterations, elapsed_ms)
+        }
+        other => {
+            println!("deadline probe did NOT trip: {other:?}");
+            (false, 0, 0)
+        }
+    };
+
+    // --- report --------------------------------------------------------
+    harness::print_table(
+        "Ablation: budget-check overhead (never-tripping full budget vs none)",
+        &["primitive", "clean ms", "budget ms", "overhead"],
+        &[
+            vec![
+                "bfs".to_string(),
+                format!("{bfs_clean_ms:.2}"),
+                format!("{bfs_budget_ms:.2}"),
+                format!("{:.2}%", bfs_overhead * 100.0),
+            ],
+            vec![
+                "pagerank".to_string(),
+                format!("{pr_clean_ms:.2}"),
+                format!("{pr_budget_ms:.2}"),
+                format!("{:.2}%", pr_overhead * 100.0),
+            ],
+        ],
+    );
+    println!("results_match={results_match} (budget runs bit-identical, no interrupt)");
+    println!(
+        "deadline: 1 ms budget on scale-17 bfs -> deadline_error={error_is_deadline} \
+         after {completed_iterations} iterations, {reported_elapsed_ms} ms reported \
+         ({deadline_wall_ms:.1} ms wall)"
+    );
+
+    let json = format!(
+        "{{\n  \"bench\": \"robustness\",\n  \"workers\": {workers},\n  \
+         \"graph\": {{\"vertices\": {n}, \"edges\": {m}}},\n  \
+         \"clean\": {{\"bfs_clean_ms\": {bfs_clean_ms:.3}, \
+         \"bfs_budget_ms\": {bfs_budget_ms:.3}, \
+         \"pr_clean_ms\": {pr_clean_ms:.3}, \"pr_budget_ms\": {pr_budget_ms:.3}, \
+         \"overhead_frac\": {overhead_frac:.4}, \"results_match\": {results_match}}},\n  \
+         \"deadline\": {{\"deadline_ms\": 1, \"error_is_deadline\": {error_is_deadline}, \
+         \"completed_iterations\": {completed_iterations}, \
+         \"reported_elapsed_ms\": {reported_elapsed_ms}, \
+         \"wall_ms\": {deadline_wall_ms:.2}}}\n}}\n"
+    );
+    std::fs::write("BENCH_robustness.json", &json).expect("write BENCH_robustness.json");
+    println!("wrote BENCH_robustness.json");
+}

@@ -12,6 +12,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::frontier::HybridMode;
 use crate::load_balance::StrategyKind;
+use crate::util::budget::RunBudget;
 
 /// Runtime configuration shared by the CLI, examples, and benches.
 #[derive(Clone, Debug)]
@@ -57,6 +58,21 @@ pub struct Config {
     pub service_lanes: usize,
     /// Landmark-cache capacity (cached result columns; 0 disables).
     pub service_cache: usize,
+    /// Per-query service deadline in milliseconds (0 = none): the
+    /// batcher runs each batch under the earliest member deadline and
+    /// expired queries resolve to `DeadlineExceeded`.
+    pub service_deadline_ms: u64,
+    /// Batch re-dispatch attempts after a transient failure (a panic
+    /// caught from the engine) before degrading to per-source fallback.
+    pub service_max_retries: u32,
+    /// Shed queries older than this many ms at drain time with
+    /// `Overloaded` instead of running them (0 = never shed).
+    pub service_shed_after_ms: u64,
+    /// Run budget applied to every run under this config (deadline /
+    /// cancellation / iteration cap, checked at BSP boundaries). Not a
+    /// file key — deadlines are relative, so callers set it per run;
+    /// `primitives::api` merges in any per-request budget.
+    pub budget: RunBudget,
 }
 
 impl Default for Config {
@@ -81,6 +97,10 @@ impl Default for Config {
             service_max_queue: 4096,
             service_lanes: 64,
             service_cache: 1024,
+            service_deadline_ms: 0,
+            service_max_retries: 2,
+            service_shed_after_ms: 0,
+            budget: RunBudget::none(),
         }
     }
 }
@@ -117,6 +137,15 @@ impl Config {
                 }
                 "service.lanes" | "service_lanes" => self.service_lanes = v.parse()?,
                 "service.cache" | "service_cache" => self.service_cache = v.parse()?,
+                "service.deadline_ms" | "service_deadline_ms" => {
+                    self.service_deadline_ms = v.parse()?
+                }
+                "service.max_retries" | "service_max_retries" => {
+                    self.service_max_retries = v.parse()?
+                }
+                "service.shed_after_ms" | "service_shed_after_ms" => {
+                    self.service_shed_after_ms = v.parse()?
+                }
                 "traversal.strategy" | "strategy" => {
                     self.strategy = Some(v.parse().map_err(anyhow::Error::msg)?)
                 }
@@ -253,6 +282,20 @@ mod tests {
         assert_eq!(cfg.service_max_queue, 128);
         assert_eq!(cfg.service_lanes, 32);
         assert_eq!(cfg.service_cache, 0);
+    }
+
+    #[test]
+    fn service_robustness_knobs_apply() {
+        let mut cfg = Config::default();
+        let kv = parse_toml_subset(
+            "[service]\ndeadline_ms = 250\nmax_retries = 5\nshed_after_ms = 100\n",
+        )
+        .unwrap();
+        cfg.apply(&kv).unwrap();
+        assert_eq!(cfg.service_deadline_ms, 250);
+        assert_eq!(cfg.service_max_retries, 5);
+        assert_eq!(cfg.service_shed_after_ms, 100);
+        assert!(cfg.budget.is_unlimited(), "file keys never set the in-process budget");
     }
 
     #[test]

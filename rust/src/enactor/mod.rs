@@ -12,6 +12,7 @@ use crate::gpu_sim::WarpCounters;
 use crate::graph::GraphRep;
 use crate::load_balance::{self, StrategyKind};
 use crate::operators::OpContext;
+use crate::util::budget::Interrupt;
 use crate::util::timer::Timer;
 use crate::util::{pool, stats};
 
@@ -40,6 +41,10 @@ pub struct RunResult {
     /// single-source primitives, up to 64 for the lane-batched engines
     /// (0 is treated as 1 by consumers; `Default` predates batching).
     pub lanes: usize,
+    /// Set when the run stopped early on a [`RunBudget`]
+    /// (`crate::util::budget`) trip rather than converging; the partial
+    /// results and iteration stats above cover the work done so far.
+    pub interrupted: Option<Interrupt>,
 }
 
 impl RunResult {
@@ -68,6 +73,7 @@ pub struct Enactor {
     timer: Timer,
     iterations: Vec<IterationStats>,
     edges_at_iter_start: u64,
+    interrupted: Option<Interrupt>,
 }
 
 impl Enactor {
@@ -84,6 +90,7 @@ impl Enactor {
             timer: Timer::start(),
             iterations: Vec::new(),
             edges_at_iter_start: 0,
+            interrupted: None,
         }
     }
 
@@ -142,6 +149,7 @@ impl Enactor {
         self.counters.reset();
         self.iterations.clear();
         self.edges_at_iter_start = 0;
+        self.interrupted = None;
         self.timer = Timer::start();
     }
 
@@ -170,6 +178,38 @@ impl Enactor {
         self.iterations.len() < self.config.max_iters
     }
 
+    /// Budget-only gate for loops with their own iteration counters
+    /// (WTF's fixed-round stages, BC's backward level walk): checks the
+    /// run budget at this BSP boundary and records any trip. The
+    /// iteration cap is NOT consulted — callers own that.
+    pub fn budget_ok(&mut self) -> bool {
+        if self.interrupted.is_some() {
+            return false;
+        }
+        match self.config.budget.check(self.iterations.len()) {
+            None => true,
+            Some(i) => {
+                self.interrupted = Some(i);
+                false
+            }
+        }
+    }
+
+    /// The per-iteration gate for BSP loops: the legacy convergence cap
+    /// (a silent finish, preserving pre-budget semantics) AND the run
+    /// budget (a recorded [`Interrupt`]). Drop-in replacement for
+    /// `within_iteration_cap()` in `while` conditions.
+    pub fn proceed(&mut self) -> bool {
+        self.within_iteration_cap() && self.budget_ok()
+    }
+
+    /// Record a trip observed outside the iteration gates (a
+    /// [`crate::util::budget::BudgetProbe`] polled inside a chunked
+    /// sweep). First trip wins.
+    pub fn note_interrupt(&mut self, interrupt: Interrupt) {
+        self.interrupted.get_or_insert(interrupt);
+    }
+
     /// Finish the run, producing the result record.
     pub fn finish_run(&mut self) -> RunResult {
         RunResult {
@@ -180,6 +220,7 @@ impl Enactor {
             kernel_launches: self.counters.launches(),
             atomics: self.counters.atomics(),
             lanes: 1,
+            interrupted: self.interrupted.take(),
         }
     }
 }
@@ -311,6 +352,62 @@ mod tests {
         assert!(e.densify_plain(1600, 100));
         assert!(!e.densify_plain(1600, 99));
         assert!(!e.densify_plain(0, 0), "degenerate universe stays sparse");
+    }
+
+    #[test]
+    fn proceed_records_budget_trips_in_the_result() {
+        use crate::util::budget::{CancelToken, RunBudget};
+        let tok = CancelToken::new();
+        let mut cfg = Config::default();
+        cfg.budget = RunBudget::with_cancel(tok.clone());
+        let mut e = Enactor::new(cfg);
+        e.begin_run();
+        assert!(e.proceed());
+        e.record_iteration(1, 1, 0.1, false);
+        tok.cancel();
+        assert!(!e.proceed());
+        let r = e.finish_run();
+        assert_eq!(r.interrupted, Some(Interrupt::Cancelled));
+        assert_eq!(r.num_iterations(), 1, "partial progress is kept");
+        // begin_run clears the trip: a fresh run that never consults the
+        // budget finishes clean even though the token stays cancelled.
+        e.begin_run();
+        assert_eq!(e.finish_run().interrupted, None);
+    }
+
+    #[test]
+    fn iteration_cap_stays_a_silent_finish() {
+        let mut cfg = Config::default();
+        cfg.max_iters = 1;
+        let mut e = Enactor::new(cfg);
+        e.begin_run();
+        assert!(e.proceed());
+        e.record_iteration(1, 1, 0.1, false);
+        assert!(!e.proceed(), "cap reached");
+        let r = e.finish_run();
+        assert_eq!(r.interrupted, None, "config cap is convergence, not an interrupt");
+    }
+
+    #[test]
+    fn budget_iteration_cap_is_a_reported_interrupt() {
+        use crate::util::budget::RunBudget;
+        let mut cfg = Config::default();
+        cfg.budget = RunBudget { max_iterations: Some(1), ..RunBudget::default() };
+        let mut e = Enactor::new(cfg);
+        e.begin_run();
+        assert!(e.proceed());
+        e.record_iteration(1, 1, 0.1, false);
+        assert!(!e.proceed());
+        assert_eq!(e.finish_run().interrupted, Some(Interrupt::IterationBudget));
+    }
+
+    #[test]
+    fn note_interrupt_first_trip_wins() {
+        let mut e = Enactor::new(Config::default());
+        e.begin_run();
+        e.note_interrupt(Interrupt::Deadline);
+        e.note_interrupt(Interrupt::Cancelled);
+        assert_eq!(e.finish_run().interrupted, Some(Interrupt::Deadline));
     }
 
     #[test]

@@ -246,6 +246,12 @@ impl<'a> Cur<'a> {
 /// 0. Returns the n+1 prefix array; fails if the section is truncated or
 /// has trailing garbage.
 fn read_varint_prefix(section: &[u8], count: usize, what: &str) -> Result<Vec<u64>> {
+    // Every varint is at least one byte, so a count beyond the section
+    // length is a corrupt header — refuse before sizing the prefix
+    // allocation from attacker-controlled bytes.
+    if count > section.len() {
+        bail!("{what} section has {} bytes but claims {count} entries", section.len());
+    }
     let mut prefix = Vec::with_capacity(count + 1);
     prefix.push(0u64);
     let mut pos = 0usize;
@@ -346,6 +352,9 @@ pub fn save_gsr(path: &Path, g: &CompressedCsr) -> Result<()> {
 /// consistency before handing back the compressed graph.
 pub fn load_gsr(path: &Path) -> Result<CompressedCsr> {
     let bytes = std::fs::read(path).with_context(|| format!("open {}", path.display()))?;
+    if let Err(e) = crate::util::faults::maybe_error(crate::util::faults::Seam::GsrDecode) {
+        bail!("{}: {e}", path.display());
+    }
     if bytes.len() < GSR_MAGIC.len() + 8 {
         bail!("{} is too short to be a .gsr file", path.display());
     }
@@ -400,6 +409,9 @@ pub fn load_gsr(path: &Path) -> Result<CompressedCsr> {
     }
     let edge_weights = if weighted {
         let ws = c.section()?;
+        if m > ws.len() {
+            bail!("weight section has {} bytes but needs {m} entries", ws.len());
+        }
         let mut pos = 0usize;
         let mut out = Vec::with_capacity(m);
         for i in 0..m {
@@ -433,6 +445,9 @@ pub fn load_gsr(path: &Path) -> Result<CompressedCsr> {
             );
         }
         let perm_section = c.section()?;
+        if m > perm_section.len() {
+            bail!("permutation section has {} bytes but needs {m} entries", perm_section.len());
+        }
         let mut pos = 0usize;
         let mut perm = Vec::with_capacity(m);
         for i in 0..m {
@@ -794,6 +809,117 @@ mod tests {
         bytes[body_len..].copy_from_slice(&ck);
         std::fs::write(&p, &bytes).unwrap();
         assert!(load_gsr(&p).is_err(), "inconsistent stream sizes must fail at load");
+        std::fs::remove_file(p).ok();
+    }
+
+    /// Rewrite the trailing FNV-1a checksum after a hand-edit so the
+    /// mutated header field — not the integrity check — is what the
+    /// loader trips on.
+    fn rechecksum(bytes: &mut [u8]) {
+        let body_len = bytes.len() - 8;
+        let ck = fnv1a(&bytes[..body_len]).to_le_bytes();
+        bytes[body_len..].copy_from_slice(&ck);
+    }
+
+    fn small_gsr(name: &str) -> (std::path::PathBuf, Vec<u8>) {
+        let g = builder::from_edges(4, &[(0, 1), (1, 2), (2, 3), (3, 0)]);
+        let cg = CompressedCsr::from_csr(&g, Codec::Varint);
+        let p = tmp(name);
+        save_gsr(&p, &cg).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        (p, bytes)
+    }
+
+    #[test]
+    fn gsr_truncation_at_every_prefix_rejected() {
+        // A torn write can stop at any byte. Every proper prefix must
+        // come back as a typed error — short-file guard, checksum
+        // mismatch, or a truncated-section error — never a panic.
+        let (p, bytes) = small_gsr("trunc_sweep.gsr");
+        for cut in 0..bytes.len() {
+            std::fs::write(&p, &bytes[..cut]).unwrap();
+            assert!(load_gsr(&p).is_err(), "prefix of {cut}/{} bytes must fail", bytes.len());
+        }
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn gsr_header_corruption_matrix_rejected() {
+        // Header layout: magic 0..4, version 4..8, codec tag 8, zeta-k 9,
+        // flags 10, reserved 11, n 12..20, m 20..28. Each case mutates one
+        // field and re-checksums, so the field's own validation (not the
+        // integrity check) produces the error.
+        let (p, pristine) = small_gsr("header_matrix.gsr");
+        let cases: &[(&str, &[(usize, u8)], &str)] = &[
+            ("bad magic", &[(0, b'X')], "bad magic"),
+            ("version 0", &[(4, 0), (5, 0), (6, 0), (7, 0)], "unsupported .gsr version 0"),
+            ("version 99", &[(4, 99)], "unsupported .gsr version 99"),
+            ("unknown codec tag", &[(8, 7)], "unknown codec tag 7"),
+            ("zeta k = 0", &[(8, 1), (9, 0)], "unknown codec tag 1/0"),
+            ("zeta k = 9", &[(8, 1), (9, 9)], "unknown codec tag 1/9"),
+            ("unknown flag bits", &[(10, 0b1000)], "unknown flag bits"),
+            ("in-view flag on v1", &[(4, 1), (10, 0b10)], "in-edge flag set on a version-1"),
+        ];
+        for &(what, edits, want) in cases {
+            let mut bytes = pristine.clone();
+            for &(off, val) in edits {
+                bytes[off] = val;
+            }
+            rechecksum(&mut bytes);
+            std::fs::write(&p, &bytes).unwrap();
+            let err = load_gsr(&p).unwrap_err().to_string();
+            assert!(err.contains(want), "{what}: want {want:?} in error, got: {err}");
+        }
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn gsr_out_of_range_header_counts_rejected() {
+        // m inflated past the degree sum: caught by the cross-check.
+        let (p, pristine) = small_gsr("header_counts.gsr");
+        let mut bytes = pristine.clone();
+        bytes[20] = bytes[20].wrapping_add(1);
+        rechecksum(&mut bytes);
+        std::fs::write(&p, &bytes).unwrap();
+        let err = load_gsr(&p).unwrap_err().to_string();
+        assert!(err.contains("degree section sums to"), "{err}");
+
+        // n far beyond the file: the bounds-checked cursor must refuse to
+        // read a degree section that size rather than over-allocating or
+        // walking off the buffer.
+        let mut bytes = pristine.clone();
+        bytes[12..20].copy_from_slice(&(1u64 << 40).to_le_bytes());
+        rechecksum(&mut bytes);
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(load_gsr(&p).is_err(), "absurd vertex count must fail at load");
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn gsr_payload_bytes_past_declared_sections_rejected() {
+        // Checksum-valid trailing garbage after the last section.
+        let (p, pristine) = small_gsr("trailing_garbage.gsr");
+        let mut bytes = pristine;
+        let body_len = bytes.len() - 8;
+        bytes.splice(body_len..body_len, [0xde, 0xad, 0xbe, 0xef]);
+        rechecksum(&mut bytes);
+        std::fs::write(&p, &bytes).unwrap();
+        let err = load_gsr(&p).unwrap_err().to_string();
+        assert!(err.contains("trailing"), "want a trailing-bytes error, got: {err}");
+        std::fs::remove_file(p).ok();
+    }
+
+    #[cfg(feature = "fault-injection")]
+    #[test]
+    fn gsr_injected_decode_fault_is_a_typed_error() {
+        use crate::util::faults::{self, FailPlan, Seam};
+        let (p, _) = small_gsr("injected_decode.gsr");
+        faults::install(FailPlan::seeded(0, 0.0).panic_at(Seam::GsrDecode, 0));
+        let err = load_gsr(&p).unwrap_err().to_string();
+        faults::clear();
+        assert!(err.contains("injected fault"), "{err}");
+        // With the plan cleared the same file loads fine.
+        assert!(load_gsr(&p).is_ok());
         std::fs::remove_file(p).ok();
     }
 

@@ -45,5 +45,9 @@ pub mod multi_gpu;
 pub mod operators;
 pub mod primitives;
 pub mod runtime;
+// The serving stack must never die on an unwrap: every failure path is a
+// typed QueryError a client can observe. Enforced at the module root
+// (tests re-allow locally).
+#[deny(clippy::unwrap_used, clippy::expect_used)]
 pub mod service;
 pub mod util;

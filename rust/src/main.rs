@@ -29,7 +29,7 @@ use gunrock::graph::{datasets, io, properties, GraphRep};
 use gunrock::harness;
 use gunrock::primitives::api::{self, Output, PrimitiveKind, QueryError, Request};
 use gunrock::primitives::{bfs, sssp};
-use gunrock::service::{Answer, Query, QueryService};
+use gunrock::service::{protocol, Answer, Query, QueryService};
 
 const BOOL_FLAGS: &[&str] =
     &["direction-optimized", "idempotence", "weighted", "undirected", "pull", "no-in-edges"];
@@ -88,6 +88,12 @@ fn usage() {
            --max-queue <n>       admission-control queue limit (default 4096)\n\
            --lanes <n>           batch width, 1..=64 (default 64)\n\
            --cache <n>           landmark-cache capacity (default 1024)\n\
+           --deadline-ms <n>     per-query deadline; an expired query answers\n\
+                                  'error: deadline exceeded' (0 = unlimited)\n\
+           --max-retries <n>     batch retries after a caught engine panic\n\
+                                  before per-source isolation (default 2)\n\
+           --shed-after-ms <n>   shed queries older than this at drain time\n\
+                                  (0 = never shed)\n\
          \n\
          SERVE PROTOCOL (stdin, one query per line)\n\
            bfs <src> <dst>       hop count src -> dst (or 'unreachable')\n\
@@ -141,6 +147,15 @@ fn build_config(p: &cli::ParsedArgs) -> Result<Config> {
     }
     if let Some(v) = p.get_parse::<usize>("cache")? {
         cfg.service_cache = v;
+    }
+    if let Some(v) = p.get_parse::<u64>("deadline-ms")? {
+        cfg.service_deadline_ms = v;
+    }
+    if let Some(v) = p.get_parse::<u32>("max-retries")? {
+        cfg.service_max_retries = v;
+    }
+    if let Some(v) = p.get_parse::<u64>("shed-after-ms")? {
+        cfg.service_shed_after_ms = v;
     }
     Ok(cfg)
 }
@@ -482,61 +497,31 @@ fn serve<G: GraphRep + Send + Sync + 'static>(
             answered as f64 / (ms / 1000.0).max(1e-9)
         );
         println!(
-            "stats: served={} batches={} cache_hits={} coalesced={} rejected={}",
-            s.served, s.batches, s.cache_hits, s.coalesced, s.rejected
+            "stats: served={} batches={} cache_hits={} coalesced={} rejected={} \
+             shed={} retries={} batcher_restarts={}",
+            s.served,
+            s.batches,
+            s.cache_hits,
+            s.coalesced,
+            s.rejected,
+            s.shed,
+            s.retries,
+            s.batcher_restarts
         );
         return Ok(());
     }
 
     println!("ready (bfs <src> <dst> | sssp <src> <dst> | ppr <user> | stats | quit)");
+    // The protocol loop lives in service::protocol so its resilience
+    // (malformed lines, oversized lines, garbage bytes) is unit-tested;
+    // this is the only stdin/stdout binding.
     let stdin = std::io::stdin();
-    let mut line = String::new();
-    loop {
-        line.clear();
-        if std::io::BufRead::read_line(&mut stdin.lock(), &mut line)? == 0 {
-            break; // EOF
-        }
-        let words: Vec<&str> = line.split_whitespace().collect();
-        let reply = match words.as_slice() {
-            [] => continue,
-            ["quit"] | ["exit"] => break,
-            ["stats"] => {
-                let s = svc.stats();
-                println!(
-                    "served={} batches={} cache_hits={} coalesced={} rejected={}",
-                    s.served, s.batches, s.cache_hits, s.coalesced, s.rejected
-                );
-                continue;
-            }
-            ["bfs", src, dst] => {
-                parse_pair(src, dst).and_then(|(s, d)| svc.submit(Query::bfs(s, d)))
-            }
-            ["sssp", src, dst] => {
-                parse_pair(src, dst).and_then(|(s, d)| svc.submit(Query::sssp(s, d)))
-            }
-            ["ppr", user] => parse_vertex(user).and_then(|u| svc.submit(Query::ppr(u))),
-            other => Err(QueryError::Malformed(format!("unparsable query {other:?}"))),
-        };
-        // A malformed or rejected query is an error *response*; the
-        // service (and this loop) stay up.
-        match reply {
-            Ok(Answer::Hops(Some(h))) => println!("{h} hops"),
-            Ok(Answer::Distance(Some(d))) => println!("distance {d}"),
-            Ok(Answer::Hops(None)) | Ok(Answer::Distance(None)) => println!("unreachable"),
-            Ok(Answer::Recommendations(recs)) => println!("recommend {recs:?}"),
-            Err(e) => println!("error: {e}"),
-        }
+    let stdout = std::io::stdout();
+    let stats = protocol::serve_loop(&svc, &mut stdin.lock(), &mut stdout.lock())?;
+    if stats.malformed_requests > 0 {
+        eprintln!("note: {} malformed request line(s) ignored", stats.malformed_requests);
     }
     Ok(())
-}
-
-fn parse_vertex(s: &str) -> Result<u32, QueryError> {
-    s.parse::<u32>()
-        .map_err(|_| QueryError::Malformed(format!("expected a vertex id, got {s:?}")))
-}
-
-fn parse_pair(a: &str, b: &str) -> Result<(u32, u32), QueryError> {
-    Ok((parse_vertex(a)?, parse_vertex(b)?))
 }
 
 fn top_k(xs: &[f64], k: usize) -> Vec<usize> {

@@ -22,6 +22,7 @@ use crate::enactor::RunResult;
 use crate::frontier::lanes::LANES;
 use crate::graph::{GraphRep, VertexId};
 use crate::harness::suite;
+use crate::util::budget::{Interrupt, RunBudget};
 use crate::primitives::{
     bc, bfs, cc, color, label_propagation, mst, pagerank, sssp, tc, traversal_extras, wtf,
 };
@@ -130,6 +131,12 @@ pub struct Params {
     pub ppr_damping: f64,
     /// Radii: BFS samples for the pseudo-radius estimate.
     pub radii_samples: usize,
+    /// Run budget for this request (deadline / cancellation token /
+    /// iteration cap). Merged with the config's budget — the tighter of
+    /// both wins — and checked at every BSP iteration boundary; a trip
+    /// turns the whole call into [`QueryError::DeadlineExceeded`] /
+    /// [`QueryError::Cancelled`] with partial-progress stats.
+    pub budget: RunBudget,
 }
 
 impl Default for Params {
@@ -141,6 +148,7 @@ impl Default for Params {
             ppr_iters: 10,
             ppr_damping: 0.85,
             radii_samples: 8,
+            budget: RunBudget::none(),
         }
     }
 }
@@ -218,6 +226,21 @@ pub enum QueryError {
     /// The service shut down before this request was answered.
     ServiceStopped,
     Malformed(String),
+    /// The run budget's deadline expired mid-run; the counters report
+    /// the partial progress made (wall clock spent, BSP iterations
+    /// completed before the trip).
+    DeadlineExceeded { elapsed_ms: u64, completed_iterations: usize },
+    /// The request's cancellation token fired mid-run.
+    Cancelled { completed_iterations: usize },
+    /// The run budget's own iteration cap was reached (distinct from
+    /// the engine's silent `max_iters` convergence guard).
+    IterationLimit { completed_iterations: usize },
+    /// The engine failed internally (a panic caught and contained by
+    /// the service); the query was isolated, the service stays up.
+    Internal(String),
+    /// Load shedding: the query aged out of the queue before the
+    /// batcher could run it.
+    Overloaded { queued_ms: u64 },
 }
 
 impl std::fmt::Display for QueryError {
@@ -241,6 +264,20 @@ impl std::fmt::Display for QueryError {
             }
             QueryError::ServiceStopped => write!(f, "query service stopped"),
             QueryError::Malformed(s) => write!(f, "malformed request: {s}"),
+            QueryError::DeadlineExceeded { elapsed_ms, completed_iterations } => write!(
+                f,
+                "deadline exceeded after {elapsed_ms} ms ({completed_iterations} iterations done)"
+            ),
+            QueryError::Cancelled { completed_iterations } => {
+                write!(f, "cancelled ({completed_iterations} iterations done)")
+            }
+            QueryError::IterationLimit { completed_iterations } => {
+                write!(f, "iteration budget exhausted after {completed_iterations} iterations")
+            }
+            QueryError::Internal(s) => write!(f, "internal error: {s}"),
+            QueryError::Overloaded { queued_ms } => {
+                write!(f, "service overloaded: shed after {queued_ms} ms in queue")
+            }
         }
     }
 }
@@ -620,24 +657,59 @@ impl Primitive for Radii {
         validate(g, req)?;
         let (radius, eccentricities) =
             traversal_extras::estimate_radius(g, req.params.radii_samples, cfg, cfg.seed);
+        // The radius estimator aggregates its sample BFS runs internally
+        // and reports no per-run stats; each sample BFS honours the
+        // budget on its own, so re-check here to surface a trip.
+        let mut run = RunResult::default();
+        run.interrupted = cfg.budget.check(0);
         Ok(Response {
             kind: Self::KIND,
             source: None,
             output: Output::Radii { radius, eccentricities },
-            // the radius estimator aggregates its sample BFS runs
-            // internally and reports no per-run stats
-            run: RunResult::default(),
+            run,
         })
     }
 }
 
+/// Merge the request's own budget into the config: the tighter of both
+/// wins, so a service-wide deadline and a per-request deadline compose.
+fn effective_config(req: &Request, cfg: &Config) -> Config {
+    if req.params.budget.is_unlimited() {
+        return cfg.clone();
+    }
+    let mut out = cfg.clone();
+    out.budget = cfg.budget.merge(&req.params.budget);
+    out
+}
+
+/// Map a budget trip recorded by the enactor into the typed error the
+/// caller sees, carrying the partial-progress counters.
+fn interrupted_to_error(run: &RunResult) -> Option<QueryError> {
+    run.interrupted.map(|i| match i {
+        Interrupt::Deadline => QueryError::DeadlineExceeded {
+            elapsed_ms: run.runtime_ms as u64,
+            completed_iterations: run.num_iterations(),
+        },
+        Interrupt::Cancelled => QueryError::Cancelled {
+            completed_iterations: run.num_iterations(),
+        },
+        Interrupt::IterationBudget => QueryError::IterationLimit {
+            completed_iterations: run.num_iterations(),
+        },
+    })
+}
+
 /// Run one request — the single dispatch point every caller goes through.
+/// A budget trip mid-run comes back as a typed error with the partial
+/// progress made, not as a silently truncated answer.
 pub fn run_request<G: GraphRep>(
     g: &G,
     req: &Request,
     cfg: &Config,
 ) -> Result<Response, QueryError> {
-    match req.kind {
+    let cfg = effective_config(req, cfg);
+    let cfg = &cfg;
+    let resp = match req.kind {
         PrimitiveKind::Bfs => Bfs::run(g, req, cfg),
         PrimitiveKind::Sssp => Sssp::run(g, req, cfg),
         PrimitiveKind::Bc => Bc::run(g, req, cfg),
@@ -651,6 +723,10 @@ pub fn run_request<G: GraphRep>(
         PrimitiveKind::Mis => Mis::run(g, req, cfg),
         PrimitiveKind::Lp => Lp::run(g, req, cfg),
         PrimitiveKind::Radii => Radii::run(g, req, cfg),
+    }?;
+    match interrupted_to_error(&resp.run) {
+        Some(e) => Err(e),
+        None => Ok(resp),
     }
 }
 
@@ -663,7 +739,10 @@ pub fn run_batch<G: GraphRep>(
     req: &Request,
     cfg: &Config,
 ) -> Result<Vec<Response>, QueryError> {
-    match req.kind {
+    crate::util::faults::maybe_panic_sources(sources);
+    let cfg = effective_config(req, cfg);
+    let cfg = &cfg;
+    let responses = match req.kind {
         PrimitiveKind::Bfs => Bfs::run_batch(g, sources, req, cfg),
         PrimitiveKind::Sssp => Sssp::run_batch(g, sources, req, cfg),
         PrimitiveKind::Bc => Bc::run_batch(g, sources, req, cfg),
@@ -677,6 +756,13 @@ pub fn run_batch<G: GraphRep>(
         PrimitiveKind::Mis => Mis::run_batch(g, sources, req, cfg),
         PrimitiveKind::Lp => Lp::run_batch(g, sources, req, cfg),
         PrimitiveKind::Radii => Radii::run_batch(g, sources, req, cfg),
+    }?;
+    // Lane-batched kinds share one traversal per chunk, so a budget trip
+    // anywhere fails the whole call; the service layer decides which
+    // members actually expired and re-runs the rest.
+    match responses.iter().find_map(|r| interrupted_to_error(&r.run)) {
+        Some(e) => Err(e),
+        None => Ok(responses),
     }
 }
 
@@ -779,5 +865,81 @@ mod tests {
         assert_eq!(resps[0].source, Some(0));
         assert_eq!(resps[1].source, Some(1));
         assert!(resps.iter().all(|r| r.run.lanes == 1));
+    }
+
+    #[test]
+    fn expired_deadline_is_a_typed_error_with_progress() {
+        let g = path5();
+        let mut req = Request::with_source(PrimitiveKind::Bfs, 0);
+        req.params.budget = RunBudget {
+            deadline: Some(std::time::Instant::now() - std::time::Duration::from_millis(5)),
+            ..RunBudget::default()
+        };
+        match run_request(&g, &req, &Config::default()) {
+            Err(QueryError::DeadlineExceeded { completed_iterations, .. }) => {
+                // the trip fires at the first iteration boundary
+                assert!(completed_iterations <= 1, "trip bounded by one BSP iteration");
+            }
+            other => panic!("expected DeadlineExceeded, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn pre_cancelled_request_is_a_typed_error() {
+        use crate::util::budget::CancelToken;
+        let mut g = path5();
+        crate::graph::datasets::attach_uniform_weights(&mut g, 7);
+        let token = CancelToken::new();
+        token.cancel();
+        let mut req = Request::with_source(PrimitiveKind::Sssp, 0);
+        req.params.budget = RunBudget::with_cancel(token);
+        match run_request(&g, &req, &Config::default()) {
+            Err(QueryError::Cancelled { completed_iterations }) => {
+                assert!(completed_iterations <= 1);
+            }
+            other => panic!("expected Cancelled, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn iteration_budget_is_reported_not_silent() {
+        // path graph needs 4 BFS iterations; cap the budget at 1
+        let g = path5();
+        let mut req = Request::with_source(PrimitiveKind::Bfs, 0);
+        req.params.budget = RunBudget { max_iterations: Some(1), ..RunBudget::default() };
+        match run_request(&g, &req, &Config::default()) {
+            Err(QueryError::IterationLimit { completed_iterations }) => {
+                assert_eq!(completed_iterations, 1);
+            }
+            other => panic!("expected IterationLimit, got {other:?}"),
+        }
+        // ...while the engine's own max_iters cap stays a silent finish
+        let mut cfg = Config::default();
+        cfg.max_iters = 1;
+        let req = Request::with_source(PrimitiveKind::Bfs, 0);
+        let resp = run_request(&g, &req, &cfg).unwrap();
+        assert!(resp.run.interrupted.is_none());
+    }
+
+    #[test]
+    fn budget_trip_fails_the_whole_lane_batch() {
+        let g = path5();
+        let mut req = Request::new(PrimitiveKind::Bfs);
+        req.params.budget = RunBudget { max_iterations: Some(1), ..RunBudget::default() };
+        let err = run_batch(&g, &[0, 1, 2], &req, &Config::default()).unwrap_err();
+        assert!(matches!(err, QueryError::IterationLimit { .. }), "{err:?}");
+    }
+
+    #[test]
+    fn generous_budget_changes_nothing() {
+        let g = path5();
+        let mut req = Request::with_source(PrimitiveKind::Bfs, 0);
+        req.params.budget = RunBudget::with_deadline_ms(60_000);
+        let resp = run_request(&g, &req, &Config::default()).unwrap();
+        let (want, _) = bfs::bfs(&g, 0, &Config::default());
+        match resp.output {
+            Output::Bfs { labels, .. } => assert_eq!(labels, want.labels),
+            other => panic!("wrong output variant {other:?}"),
+        }
     }
 }

@@ -58,7 +58,7 @@ pub fn bc_from_source<G: GraphRep>(
     let mut levels: Vec<Vec<VertexId>> = vec![vec![src]];
     let mut frontier = Frontier::single(src);
     let mut d: u32 = 0;
-    while !frontier.is_empty() && enactor.within_iteration_cap() {
+    while !frontier.is_empty() && enactor.proceed() {
         let t = Timer::start();
         let input_len = frontier.len();
         d += 1;
@@ -99,6 +99,9 @@ pub fn bc_from_source<G: GraphRep>(
     // ---- Backward phase: dependency accumulation over levels in reverse.
     let delta: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0f64.to_bits())).collect();
     for level in levels.iter().rev().take(levels.len().saturating_sub(1)) {
+        if !enactor.budget_ok() {
+            break;
+        }
         let t = Timer::start();
         let lvl_frontier = Frontier::vertices(level.clone());
         let strategy = enactor.strategy_for(g, lvl_frontier.len());
@@ -169,6 +172,11 @@ pub fn bc<G: GraphRep>(
         agg.atomics += r.atomics;
         agg.warp_efficiency = r.warp_efficiency; // last run's figure
         agg.iterations.extend(r.iterations);
+        if let Some(interrupt) = r.interrupted {
+            // budget tripped mid-source: stop sampling, report the trip
+            agg.interrupted = Some(interrupt);
+            break;
+        }
     }
     (total, agg)
 }

@@ -78,7 +78,7 @@ pub fn bfs<G: GraphRep>(g: &G, src: VertexId, config: &Config) -> (BfsProblem, B
     let mut visited_count: usize = 1;
     let mut pull_iters = 0usize;
     let mut push_iters = 0usize;
-    while !bufs.current().is_empty() && enactor.within_iteration_cap() {
+    while !bufs.current().is_empty() && enactor.proceed() {
         let iter_timer = Timer::start();
         let prev_edges = enactor.counters.edges();
         let input_len = bufs.current().len();
@@ -285,7 +285,7 @@ pub fn multi_source_bfs<G: GraphRep>(
     let mut settled_at = vec![0u32; k];
     let mut live: u64 = if k == LANES { u64::MAX } else { (1u64 << k) - 1 };
     let mut depth: u32 = 0;
-    while !cur.is_empty() && enactor.within_iteration_cap() {
+    while !cur.is_empty() && enactor.proceed() {
         let iter_timer = Timer::start();
         let input_len = cur.active_vertices();
         depth += 1;

@@ -99,7 +99,7 @@ pub fn cc<G: GraphRep>(g: &G, config: &Config) -> (CcProblem, RunResult) {
     let mut settled = Frontier::empty(FrontierKind::Edge);
     let mut odd = true;
 
-    while !edge_frontier.is_empty() && enactor.within_iteration_cap() {
+    while !edge_frontier.is_empty() && enactor.proceed() {
         let t = Timer::start();
         let input_len = edge_frontier.len();
 
@@ -176,7 +176,7 @@ fn cc_walk<G: GraphRep>(
     let mut remaining = m;
     let mut odd = true;
 
-    while remaining > 0 && enactor.within_iteration_cap() {
+    while remaining > 0 && enactor.proceed() {
         let t = Timer::start();
         let input_len = remaining;
 

@@ -37,7 +37,7 @@ pub fn color<G: GraphRep>(g: &G, config: &Config) -> (ColoringResult, RunResult)
     if !enactor.densify_plain(n, n) {
         frontier.to_sparse();
     }
-    while !frontier.is_empty() && enactor.within_iteration_cap() {
+    while !frontier.is_empty() && enactor.proceed() {
         let t = Timer::start();
         let input_len = frontier.len();
         let ctx = enactor.ctx();
@@ -109,7 +109,7 @@ pub fn mis<G: GraphRep>(g: &G, config: &Config) -> (Vec<bool>, RunResult) {
     if !enactor.densify_plain(n, n) {
         frontier.to_sparse();
     }
-    while !frontier.is_empty() && enactor.within_iteration_cap() {
+    while !frontier.is_empty() && enactor.proceed() {
         let t = Timer::start();
         let input_len = frontier.len();
         let ctx = enactor.ctx();

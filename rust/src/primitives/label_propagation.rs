@@ -42,7 +42,7 @@ pub fn label_propagation<G: GraphRep>(g: &G, config: &Config) -> (LpResult, RunR
     let mut iters = 0usize;
     let max_rounds = config.max_iters.min(100);
 
-    while !frontier.is_empty() && iters < max_rounds {
+    while !frontier.is_empty() && iters < max_rounds && enactor.budget_ok() {
         let t = Timer::start();
         iters += 1;
         let input_len = frontier.len();

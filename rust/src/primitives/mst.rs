@@ -13,6 +13,7 @@ use std::sync::atomic::{AtomicU32, Ordering};
 use crate::config::Config;
 use crate::enactor::{Enactor, RunResult};
 use crate::graph::{GraphRep, VertexId};
+use crate::util::budget::BudgetProbe;
 use crate::util::par;
 use crate::util::timer::Timer;
 
@@ -40,6 +41,10 @@ pub fn mst<G: GraphRep>(g: &G, config: &Config) -> (MstResult, RunResult) {
     let comp: Vec<AtomicU32> = (0..n).map(|v| AtomicU32::new(v as u32)).collect();
     let mut tree_edges: Vec<usize> = Vec::new();
     let mut total_weight = 0u64;
+    // The candidate scan is the long pole of a round, so the deadline is
+    // also polled inside it (amortized probe shared by all workers); a
+    // trip discards the round's partial candidates and stops cleanly.
+    let probe = BudgetProbe::new(&config.budget);
 
     loop {
         let t = Timer::start();
@@ -57,6 +62,9 @@ pub fn mst<G: GraphRep>(g: &G, config: &Config) -> (MstResult, RunResult) {
         let candidates = par::run_partitioned(n, enactor.workers, |_, s, e| {
             let mut local: std::collections::HashMap<u32, Cand> = std::collections::HashMap::new();
             for v in s..e {
+                if !probe.poll() {
+                    break;
+                }
                 let v = v as VertexId;
                 let cv = label(v);
                 g.for_each_neighbor(v, |eid, u| {
@@ -73,6 +81,12 @@ pub fn mst<G: GraphRep>(g: &G, config: &Config) -> (MstResult, RunResult) {
             local
         });
         enactor.counters.add_edges(g.num_edges() as u64);
+        if let Some(interrupt) = probe.tripped() {
+            // partial candidates must not be hooked — drop the round
+            enactor.note_interrupt(interrupt);
+            enactor.record_iteration(n, 0, t.elapsed_ms(), false);
+            break;
+        }
         let mut best: std::collections::HashMap<u32, Cand> = std::collections::HashMap::new();
         for chunk in candidates {
             for (c, cand) in chunk {
@@ -135,7 +149,7 @@ pub fn mst<G: GraphRep>(g: &G, config: &Config) -> (MstResult, RunResult) {
         }
 
         enactor.record_iteration(n, added, t.elapsed_ms(), false);
-        if added == 0 || !enactor.within_iteration_cap() {
+        if added == 0 || !enactor.proceed() {
             break;
         }
     }

@@ -60,7 +60,7 @@ pub fn pagerank<G: GraphRep>(g: &G, config: &Config) -> (PageRankProblem, RunRes
     }
     let mut iters = 0usize;
 
-    while !frontier.is_empty() && iters < config.pr_max_iters {
+    while !frontier.is_empty() && iters < config.pr_max_iters && enactor.budget_ok() {
         let t = Timer::start();
         iters += 1;
         let next: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0f64.to_bits())).collect();
@@ -136,6 +136,9 @@ pub fn pagerank_pull<G: GraphRep>(g: &G, config: &Config) -> (PageRankProblem, R
     let mut contribs: Vec<f64> = Vec::new();
     let mut iters = 0usize;
     loop {
+        if !enactor.budget_ok() {
+            break;
+        }
         let t = Timer::start();
         iters += 1;
         let dangling: f64 = (0..n as VertexId)

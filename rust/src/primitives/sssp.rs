@@ -69,7 +69,7 @@ pub fn sssp<G: GraphRep>(g: &G, src: VertexId, config: &Config) -> (SsspProblem,
     let mut raw = Frontier::default();
     let seen = crate::util::bitset::AtomicBitset::new(n);
 
-    while !bufs.current().is_empty() && enactor.within_iteration_cap() {
+    while !bufs.current().is_empty() && enactor.proceed() {
         let t = Timer::start();
         let prev_edges = enactor.counters.edges();
         let input_len = bufs.current().len();
@@ -220,7 +220,7 @@ pub fn multi_source_sssp<G: GraphRep>(
     let mut settled_at = vec![0u32; k];
     let mut live: u64 = if k == LANES { u64::MAX } else { (1u64 << k) - 1 };
     let mut round: u32 = 0;
-    while !cur.is_empty() && enactor.within_iteration_cap() {
+    while !cur.is_empty() && enactor.proceed() {
         let t = Timer::start();
         let prev_edges = enactor.counters.edges();
         let input_len = cur.active_vertices();

@@ -15,6 +15,7 @@ use crate::config::Config;
 use crate::enactor::{Enactor, RunResult};
 use crate::graph::{builder, Coo, GraphRep, VertexId};
 use crate::operators::segmented_intersection;
+use crate::util::budget::BudgetProbe;
 use crate::util::timer::Timer;
 
 pub struct TcResult {
@@ -35,7 +36,15 @@ fn forward_edge<G: GraphRep>(g: &G, u: VertexId, v: VertexId) -> bool {
 /// Collect the filtered forward edge pairs with an expansion that emits
 /// (src, dst) directly — avoiding the per-edge `edge_src` binary search a
 /// V2E frontier would need on readback (§Perf iteration 4).
-fn forward_pairs<G: GraphRep>(enactor: &Enactor, g: &G) -> Vec<(VertexId, VertexId)> {
+/// TC is iteration-free, so the deadline is polled inside the expansion
+/// itself (amortized [`BudgetProbe`] shared by the workers). A trip means
+/// the pair list is partial: callers must check `probe.tripped()` and
+/// abandon the result rather than intersect a truncated list.
+fn forward_pairs<G: GraphRep>(
+    enactor: &Enactor,
+    g: &G,
+    probe: &BudgetProbe,
+) -> Vec<(VertexId, VertexId)> {
     let n = g.num_vertices();
     let all: Vec<VertexId> = (0..n as VertexId).collect();
     let strategy = enactor.strategy_for(g, n);
@@ -46,7 +55,7 @@ fn forward_pairs<G: GraphRep>(enactor: &Enactor, g: &G) -> Vec<(VertexId, Vertex
         enactor.workers,
         &enactor.counters,
         |_i, s, _e, d, out: &mut Vec<VertexId>| {
-            if forward_edge(g, s, d) {
+            if probe.poll() && forward_edge(g, s, d) {
                 out.push(s);
                 out.push(d);
             }
@@ -60,7 +69,13 @@ pub fn tc_intersect_full<G: GraphRep>(g: &G, config: &Config) -> (TcResult, RunR
     let mut enactor = Enactor::new(config.clone());
     enactor.begin_run();
     let t = Timer::start();
-    let pairs = forward_pairs(&enactor, g);
+    let probe = BudgetProbe::new(&config.budget);
+    let pairs = forward_pairs(&enactor, g, &probe);
+    if let Some(interrupt) = probe.tripped() {
+        enactor.note_interrupt(interrupt);
+        enactor.record_iteration(pairs.len(), 0, t.elapsed_ms(), false);
+        return (TcResult { triangles: 0, per_edge: Vec::new() }, enactor.finish_run());
+    }
     let ctx = enactor.ctx();
     let r = segmented_intersection::segmented_intersect(&ctx, g, &pairs, false);
     enactor.record_iteration(pairs.len(), 0, t.elapsed_ms(), false);
@@ -80,7 +95,13 @@ pub fn tc_intersect_filtered<G: GraphRep>(g: &G, config: &Config) -> (TcResult, 
     let mut enactor = Enactor::new(config.clone());
     enactor.begin_run();
     let t0 = Timer::start();
-    let pairs = forward_pairs(&enactor, g);
+    let probe = BudgetProbe::new(&config.budget);
+    let pairs = forward_pairs(&enactor, g, &probe);
+    if let Some(interrupt) = probe.tripped() {
+        enactor.note_interrupt(interrupt);
+        enactor.record_iteration(pairs.len(), 0, t0.elapsed_ms(), false);
+        return (TcResult { triangles: 0, per_edge: Vec::new() }, enactor.finish_run());
+    }
 
     // Reform the induced subgraph (paper: "reforming the induced subgraph
     // with only the edges not filtered").
@@ -101,7 +122,8 @@ pub fn tc_intersect_filtered<G: GraphRep>(g: &G, config: &Config) -> (TcResult, 
 pub fn clustering_coefficient<G: GraphRep>(g: &G, config: &Config) -> Vec<f64> {
     let mut enactor = Enactor::new(config.clone());
     enactor.begin_run();
-    let pairs = forward_pairs(&enactor, g);
+    let probe = BudgetProbe::new(&config.budget);
+    let pairs = forward_pairs(&enactor, g, &probe);
     let ctx = enactor.ctx();
     let r = segmented_intersection::segmented_intersect(&ctx, g, &pairs, false);
     // triangles per vertex: every intersection w of pair (u, v) closes a

@@ -55,6 +55,9 @@ pub fn ppr<G: GraphRep>(
     let mut scores = vec![0.0f64; n];
     scores[user as usize] = 1.0;
     for _ in 0..iters {
+        if !enactor.budget_ok() {
+            break;
+        }
         let next: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0f64.to_bits())).collect();
         let strategy = enactor.strategy_for(g, n);
         let ctx = enactor.ctx();
@@ -114,6 +117,9 @@ pub fn multi_source_ppr<G: GraphRep>(
     active.seal();
 
     for _ in 0..iters {
+        if !enactor.budget_ok() {
+            break;
+        }
         let next: Vec<Vec<AtomicU64>> =
             (0..k).map(|_| (0..n).map(|_| AtomicU64::new(0f64.to_bits())).collect()).collect();
         let strategy = enactor.strategy_for(g, active.active_vertices());
@@ -228,6 +234,9 @@ pub fn money<G: GraphRep>(
     }
 
     for _ in 0..iters {
+        if !enactor.budget_ok() {
+            break;
+        }
         // forward: hubs scatter to authorities (2-hop bipartite advance)
         let next_auth: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0f64.to_bits())).collect();
         let hub_frontier = Frontier::vertices(cot.to_vec());

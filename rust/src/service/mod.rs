@@ -11,10 +11,11 @@
 //! ([`crate::primitives::bfs::multi_source_bfs`] and friends — the
 //! GraphBLAST SpMM widening of the PR 5 bitmap engine), and scatters the
 //! per-lane columns back to the waiting clients. Around that engine sit
-//! the three serving-stack pieces the roadmap points at:
+//! the serving-stack pieces the roadmap points at:
 //!
 //! - **Admission control**: a bounded queue; a full queue rejects with
-//!   [`QueryError::QueueFull`] instead of growing without bound.
+//!   [`QueryError::QueueFull`] instead of growing without bound, and a
+//!   per-kind cap stops one primitive kind from starving the others.
 //! - **Request coalescing**: queries duplicating an in-flight (kind,
 //!   source) pair join its ticket instead of occupying another lane.
 //! - **Landmark cache**: finished per-source columns (depths, distances,
@@ -23,18 +24,45 @@
 //!   atomically via an epoch stamp, so a batch that raced the swap can
 //!   never populate the new graph's cache with old-graph columns.
 //!
+//! # Fault tolerance
+//!
+//! The service assumes the engine can fail and stays up anyway:
+//!
+//! - **Deadlines** (`service.deadline_ms`): each admitted query carries
+//!   an absolute deadline; the batch runs under the earliest member
+//!   deadline as a cooperative [`crate::util::budget::RunBudget`], and an
+//!   expired member resolves with [`QueryError::DeadlineExceeded`] while
+//!   the still-alive members re-run immediately.
+//! - **Load shedding** (`service.shed_after_ms`): entries that aged past
+//!   the window while queued resolve with [`QueryError::Overloaded`]
+//!   instead of occupying lanes the clients stopped waiting for.
+//! - **Panic isolation**: a panic inside a batch is caught at the drain;
+//!   after `service.max_retries` backoff retries the batch is re-run
+//!   source-by-source so only the poisoned query fails (with
+//!   [`QueryError::Internal`]) and every other lane still gets its
+//!   answer. The batcher thread itself is supervised: a panic outside
+//!   the per-batch catch restarts the loop in place (counted by
+//!   `batcher_restarts`) and a [`DrainGuard`] resolves any in-flight
+//!   tickets first, so no waiter ever hangs.
+//!
 //! All primitive work dispatches through the unified
 //! [`crate::primitives::api`] surface; the service adds scheduling, not a
 //! second invocation path.
 
+pub mod protocol;
+
 use std::collections::{HashMap, VecDeque};
+use std::panic::AssertUnwindSafe;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard, RwLock};
+use std::time::{Duration, Instant};
 
 use crate::config::Config;
 use crate::graph::{GraphRep, VertexId};
 use crate::primitives::api::{self, Output, PrimitiveKind, QueryError, Request};
 use crate::primitives::{bfs, sssp};
+use crate::util::budget::RunBudget;
+use crate::util::faults;
 
 /// A point query against the served graph. `target` is required for
 /// BFS/SSSP (the answer is one cell of the source's column) and ignored
@@ -100,7 +128,10 @@ impl Column {
 }
 
 /// Blocking completion ticket: the batcher resolves it, the submitting
-/// thread waits on it. Coalesced duplicates share one ticket.
+/// thread waits on it. Coalesced duplicates share one ticket, so the
+/// value stays in the slot (readers clone) and resolution is
+/// first-write-wins — a [`DrainGuard`] double-resolve after a panic can
+/// never overwrite a real answer.
 struct Ticket {
     slot: Mutex<Option<Result<Column, QueryError>>>,
     done: Condvar,
@@ -113,15 +144,17 @@ impl Ticket {
 
     fn resolve(&self, result: Result<Column, QueryError>) {
         let mut slot = lock(&self.slot);
-        *slot = Some(result);
-        self.done.notify_all();
+        if slot.is_none() {
+            *slot = Some(result);
+            self.done.notify_all();
+        }
     }
 
     fn wait(&self) -> Result<Column, QueryError> {
         let mut slot = lock(&self.slot);
         loop {
-            if let Some(result) = slot.take() {
-                return result;
+            if let Some(result) = slot.as_ref() {
+                return result.clone();
             }
             slot = self.done.wait(slot).unwrap_or_else(|e| e.into_inner());
         }
@@ -134,6 +167,10 @@ struct Pending {
     kind: PrimitiveKind,
     source: VertexId,
     ticket: Arc<Ticket>,
+    /// When the entry was admitted (drives load shedding).
+    enqueued_at: Instant,
+    /// Absolute per-query deadline (`service.deadline_ms` past admission).
+    deadline: Option<Instant>,
 }
 
 struct QueueState {
@@ -149,6 +186,9 @@ struct Stats {
     cache_hits: AtomicU64,
     coalesced: AtomicU64,
     rejected: AtomicU64,
+    shed: AtomicU64,
+    retries: AtomicU64,
+    batcher_restarts: AtomicU64,
 }
 
 /// Snapshot of the service counters.
@@ -164,6 +204,12 @@ pub struct StatsSnapshot {
     pub coalesced: u64,
     /// Queries refused by admission control (queue full).
     pub rejected: u64,
+    /// Queries shed for aging past `service.shed_after_ms` in the queue.
+    pub shed: u64,
+    /// Batch re-runs after a caught engine panic.
+    pub retries: u64,
+    /// Times the supervised batcher loop restarted after a panic.
+    pub batcher_restarts: u64,
 }
 
 struct Inner<G> {
@@ -178,6 +224,22 @@ struct Inner<G> {
     work_cv: Condvar,
     cache: Mutex<LandmarkCache>,
     stats: Stats,
+}
+
+impl<G> Inner<G> {
+    /// Per-kind admission cap: no kind may occupy the whole queue, but
+    /// the cap never drops below one full batch.
+    fn kind_cap(&self) -> usize {
+        (self.cfg.service_max_queue / 2).max(self.lanes).max(1)
+    }
+
+    /// Load-shedding window, if configured.
+    fn shed_window(&self) -> Option<Duration> {
+        match self.cfg.service_shed_after_ms {
+            0 => None,
+            ms => Some(Duration::from_millis(ms)),
+        }
+    }
 }
 
 /// FIFO-evicting landmark cache over finished (kind, source) columns.
@@ -233,16 +295,18 @@ pub struct QueryService<G: GraphRep + Send + Sync + 'static> {
 
 impl<G: GraphRep + Send + Sync + 'static> QueryService<G> {
     /// Start serving `graph` under `cfg` (`service_*` keys size the
-    /// queue, the batch width, and the cache).
+    /// queue, the batch width, the cache, and the robustness knobs:
+    /// deadline, retry count, shed window).
     pub fn start(graph: Arc<G>, cfg: Config) -> Self {
         let mut svc = Self::new_unstarted(graph, cfg);
         let inner = Arc::clone(&svc.inner);
-        svc.batcher = Some(
-            std::thread::Builder::new()
-                .name("gunrock-batcher".to_string())
-                .spawn(move || batcher_loop(&inner))
-                .expect("spawn batcher thread"),
-        );
+        let spawned = std::thread::Builder::new()
+            .name("gunrock-batcher".to_string())
+            .spawn(move || supervise_batcher(&inner));
+        match spawned {
+            Ok(handle) => svc.batcher = Some(handle),
+            Err(e) => panic!("failed to spawn the batcher thread: {e}"),
+        }
         svc
     }
 
@@ -320,16 +384,28 @@ impl<G: GraphRep + Send + Sync + 'static> QueryService<G> {
             inner.stats.coalesced.fetch_add(1, Ordering::Relaxed);
             return Ok(Arc::clone(&p.ticket));
         }
-        // Admission control.
+        // Admission control: global bound first, then the per-kind cap.
         if queue.pending.len() >= inner.cfg.service_max_queue {
             inner.stats.rejected.fetch_add(1, Ordering::Relaxed);
             return Err(QueryError::QueueFull { limit: inner.cfg.service_max_queue });
         }
+        let cap = inner.kind_cap();
+        if queue.pending.iter().filter(|p| p.kind == q.kind).count() >= cap {
+            inner.stats.rejected.fetch_add(1, Ordering::Relaxed);
+            return Err(QueryError::QueueFull { limit: cap });
+        }
+        let now = Instant::now();
+        let deadline = match inner.cfg.service_deadline_ms {
+            0 => None,
+            ms => Some(now + Duration::from_millis(ms)),
+        };
         let ticket = Ticket::new();
         queue.pending.push_back(Pending {
             kind: q.kind,
             source: q.source,
             ticket: Arc::clone(&ticket),
+            enqueued_at: now,
+            deadline,
         });
         drop(queue);
         inner.work_cv.notify_one();
@@ -362,6 +438,9 @@ impl<G: GraphRep + Send + Sync + 'static> QueryService<G> {
             cache_hits: s.cache_hits.load(Ordering::Relaxed),
             coalesced: s.coalesced.load(Ordering::Relaxed),
             rejected: s.rejected.load(Ordering::Relaxed),
+            shed: s.shed.load(Ordering::Relaxed),
+            retries: s.retries.load(Ordering::Relaxed),
+            batcher_restarts: s.batcher_restarts.load(Ordering::Relaxed),
         }
     }
 
@@ -401,13 +480,64 @@ impl Handle {
     }
 }
 
-/// The background batcher: wait for work, drain a same-kind batch of up
-/// to `lanes` distinct sources from the queue front (preserving order
-/// for the rest), run it through the unified primitive API, scatter the
-/// columns back, and cache them if the graph epoch is unchanged.
+/// Owns a drained batch until every ticket is resolved: if the drain
+/// unwinds (engine panic escaping the per-batch catch, injected fault),
+/// `Drop` fails the leftover waiters with [`QueryError::Internal`] so no
+/// client ever hangs on a dead batcher. First-write-wins resolution
+/// makes the sweep a no-op for tickets already answered.
+struct DrainGuard {
+    entries: Vec<Pending>,
+}
+
+impl Drop for DrainGuard {
+    fn drop(&mut self) {
+        for p in self.entries.drain(..) {
+            p.ticket
+                .resolve(Err(QueryError::Internal("batcher died mid-drain".to_string())));
+        }
+    }
+}
+
+/// Supervisor for the batcher thread: restarts the drain loop in place
+/// when it panics (each restart is counted), exits cleanly on shutdown.
+fn supervise_batcher<G: GraphRep + Send + Sync + 'static>(inner: &Inner<G>) {
+    loop {
+        match std::panic::catch_unwind(AssertUnwindSafe(|| batcher_loop(inner))) {
+            Ok(()) => return, // clean stop
+            Err(_) => {
+                inner.stats.batcher_restarts.fetch_add(1, Ordering::Relaxed);
+                if lock(&inner.queue).stopped {
+                    return;
+                }
+            }
+        }
+    }
+}
+
+/// Remove entries older than `window` from the queue, returning them for
+/// resolution outside the lock.
+fn shed_aged(pending: &mut VecDeque<Pending>, window: Duration, now: Instant) -> Vec<Pending> {
+    let mut shed = Vec::new();
+    let mut keep = VecDeque::with_capacity(pending.len());
+    while let Some(p) = pending.pop_front() {
+        if now.duration_since(p.enqueued_at) > window {
+            shed.push(p);
+        } else {
+            keep.push_back(p);
+        }
+    }
+    *pending = keep;
+    shed
+}
+
+/// The background batcher: wait for work, shed aged entries, drain a
+/// same-kind batch of up to `lanes` distinct sources from the queue
+/// front (preserving order for the rest), run it through the unified
+/// primitive API, scatter the columns back, and cache them if the graph
+/// epoch is unchanged.
 fn batcher_loop<G: GraphRep + Send + Sync + 'static>(inner: &Inner<G>) {
     loop {
-        let batch: Vec<Pending> = {
+        let (batch, shed) = {
             let mut queue = lock(&inner.queue);
             loop {
                 if queue.stopped {
@@ -418,69 +548,169 @@ fn batcher_loop<G: GraphRep + Send + Sync + 'static>(inner: &Inner<G>) {
                 }
                 queue = inner.work_cv.wait(queue).unwrap_or_else(|e| e.into_inner());
             }
-            let kind = queue.pending.front().expect("non-empty queue").kind;
-            let mut batch = Vec::new();
-            let mut rest = VecDeque::new();
-            while let Some(p) = queue.pending.pop_front() {
-                if p.kind == kind && batch.len() < inner.lanes {
-                    batch.push(p);
-                } else {
-                    rest.push_back(p);
+            let now = Instant::now();
+            let shed = match inner.shed_window() {
+                Some(window) => shed_aged(&mut queue.pending, window, now),
+                None => Vec::new(),
+            };
+            // Checked pop: shedding (or a racing shutdown drain) may have
+            // emptied the queue entirely — never assume an entry is left.
+            let mut batch: Vec<Pending> = Vec::new();
+            if let Some(first) = queue.pending.pop_front() {
+                let kind = first.kind;
+                batch.push(first);
+                let mut rest = VecDeque::new();
+                while let Some(p) = queue.pending.pop_front() {
+                    if p.kind == kind && batch.len() < inner.lanes {
+                        batch.push(p);
+                    } else {
+                        rest.push_back(p);
+                    }
                 }
+                queue.pending = rest;
             }
-            queue.pending = rest;
-            batch
+            (batch, shed)
         };
+
+        for p in shed {
+            let queued_ms = p.enqueued_at.elapsed().as_millis() as u64;
+            inner.stats.shed.fetch_add(1, Ordering::Relaxed);
+            p.ticket.resolve(Err(QueryError::Overloaded { queued_ms }));
+        }
+        if batch.is_empty() {
+            continue;
+        }
 
         // Snapshot (graph, epoch) under the read lock (see swap_graph).
         let (graph, epoch) = {
             let g = inner.graph.read().unwrap_or_else(|e| e.into_inner());
             (Arc::clone(&g), inner.epoch.load(Ordering::SeqCst))
         };
-        run_batch_and_resolve(inner, &graph, epoch, &batch);
-        if !batch.is_empty() {
-            inner.stats.batches.fetch_add(1, Ordering::Relaxed);
-        }
+        run_batch_and_resolve(inner, &graph, epoch, batch);
+        inner.stats.batches.fetch_add(1, Ordering::Relaxed);
     }
 }
 
+/// Scatter one response back to its waiter (cache + stats + resolve).
+fn resolve_one<G>(inner: &Inner<G>, epoch: u64, p: &Pending, output: Output) {
+    let col = match output {
+        Output::Bfs { labels, .. } => Column::Depths(Arc::new(labels)),
+        Output::Sssp { dist, .. } => Column::Dists(Arc::new(dist)),
+        Output::Ppr { recommendations, .. } => Column::Recs(Arc::new(recommendations)),
+        other => {
+            p.ticket.resolve(Err(QueryError::Malformed(format!(
+                "unexpected output variant for {}: {other:?}",
+                p.kind
+            ))));
+            return;
+        }
+    };
+    if inner.epoch.load(Ordering::SeqCst) == epoch {
+        lock(&inner.cache).insert((p.kind, p.source), col.clone());
+    }
+    inner.stats.served.fetch_add(1, Ordering::Relaxed);
+    p.ticket.resolve(Ok(col));
+}
+
+/// Exponential backoff for batch retries after a caught panic.
+fn backoff(attempt: u32) -> Duration {
+    Duration::from_millis((1u64 << attempt.min(6)).min(50))
+}
+
+/// Run one drained batch to full resolution. Invariant: every ticket in
+/// `batch` is resolved by the time this returns — by an answer, a typed
+/// error, or (if this frame unwinds) the [`DrainGuard`] sweep.
 fn run_batch_and_resolve<G: GraphRep + Send + Sync + 'static>(
     inner: &Inner<G>,
     graph: &G,
     epoch: u64,
-    batch: &[Pending],
+    batch: Vec<Pending>,
 ) {
-    let Some(first) = batch.first() else { return };
-    let kind = first.kind;
-    let sources: Vec<VertexId> = batch.iter().map(|p| p.source).collect();
-    let req = Request::new(kind);
-    match api::run_batch(graph, &sources, &req, &inner.cfg) {
-        Ok(responses) => {
-            let fresh = inner.epoch.load(Ordering::SeqCst) == epoch;
-            for (p, resp) in batch.iter().zip(responses) {
-                let col = match resp.output {
-                    Output::Bfs { labels, .. } => Column::Depths(Arc::new(labels)),
-                    Output::Sssp { dist, .. } => Column::Dists(Arc::new(dist)),
-                    Output::Ppr { recommendations, .. } => {
-                        Column::Recs(Arc::new(recommendations))
-                    }
-                    other => {
-                        p.ticket.resolve(Err(QueryError::Malformed(format!(
-                            "unexpected output variant for {kind}: {other:?}"
-                        ))));
-                        continue;
-                    }
-                };
-                if fresh {
-                    lock(&inner.cache).insert((p.kind, p.source), col.clone());
-                }
-                inner.stats.served.fetch_add(1, Ordering::Relaxed);
-                p.ticket.resolve(Ok(col));
-            }
+    let mut guard = DrainGuard { entries: batch };
+    faults::maybe_panic(faults::Seam::BatcherDrain);
+    let mut attempt: u32 = 0;
+    loop {
+        let Some(first) = guard.entries.first() else { return };
+        let kind = first.kind;
+        let sources: Vec<VertexId> = guard.entries.iter().map(|p| p.source).collect();
+        let mut req = Request::new(kind);
+        // The batch runs under the earliest member deadline; members that
+        // outlive a trip re-run below with the next-earliest.
+        if let Some(d) = guard.entries.iter().filter_map(|p| p.deadline).min() {
+            req.params.budget = RunBudget { deadline: Some(d), ..RunBudget::default() };
         }
-        Err(e) => {
-            for p in batch {
-                p.ticket.resolve(Err(e.clone()));
+        let outcome = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            api::run_batch(graph, &sources, &req, &inner.cfg)
+        }));
+        match outcome {
+            Ok(Ok(responses)) => {
+                for (p, resp) in guard.entries.drain(..).zip(responses) {
+                    resolve_one(inner, epoch, &p, resp.output);
+                }
+                return;
+            }
+            Ok(Err(e @ (QueryError::DeadlineExceeded { .. } | QueryError::Cancelled { .. }))) => {
+                // The shared traversal tripped; fail only the members whose
+                // own deadline actually passed and re-run the rest. If no
+                // member expired (a config-wide budget tripped), the error
+                // belongs to everyone — resolving all avoids a re-run
+                // livelock against a budget that can never recover.
+                let now = Instant::now();
+                let (expired, alive): (Vec<Pending>, Vec<Pending>) = guard
+                    .entries
+                    .drain(..)
+                    .partition(|p| p.deadline.map(|d| d <= now).unwrap_or(false));
+                if expired.is_empty() {
+                    for p in alive {
+                        p.ticket.resolve(Err(e.clone()));
+                    }
+                    return;
+                }
+                for p in expired {
+                    p.ticket.resolve(Err(e.clone()));
+                }
+                guard.entries = alive;
+            }
+            Ok(Err(e)) => {
+                for p in guard.entries.drain(..) {
+                    p.ticket.resolve(Err(e.clone()));
+                }
+                return;
+            }
+            Err(_panic) => {
+                if attempt < inner.cfg.service_max_retries {
+                    attempt += 1;
+                    inner.stats.retries.fetch_add(1, Ordering::Relaxed);
+                    std::thread::sleep(backoff(attempt));
+                    continue;
+                }
+                // Retries exhausted: isolate the poisoned member by running
+                // source-by-source, each under its own catch. Only the
+                // panicking lane fails; every other waiter gets its answer.
+                for p in guard.entries.drain(..) {
+                    let mut one = Request::new(p.kind);
+                    if let Some(d) = p.deadline {
+                        one.params.budget =
+                            RunBudget { deadline: Some(d), ..RunBudget::default() };
+                    }
+                    let solo = std::panic::catch_unwind(AssertUnwindSafe(|| {
+                        api::run_batch(graph, &[p.source], &one, &inner.cfg)
+                    }));
+                    match solo {
+                        Ok(Ok(mut responses)) => match responses.pop() {
+                            Some(resp) => resolve_one(inner, epoch, &p, resp.output),
+                            None => p.ticket.resolve(Err(QueryError::Internal(
+                                "engine returned no response for the query".to_string(),
+                            ))),
+                        },
+                        Ok(Err(e)) => p.ticket.resolve(Err(e)),
+                        Err(_) => p.ticket.resolve(Err(QueryError::Internal(format!(
+                            "primitive panicked serving {} source {}",
+                            p.kind, p.source
+                        )))),
+                    }
+                }
+                return;
             }
         }
     }
@@ -488,12 +718,24 @@ fn run_batch_and_resolve<G: GraphRep + Send + Sync + 'static>(
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
     use super::*;
     use crate::graph::builder;
 
     fn path6() -> Arc<crate::graph::Csr> {
         let edges: Vec<(u32, u32)> = (0..5u32).map(|v| (v, v + 1)).collect();
         Arc::new(builder::from_edges(6, &edges))
+    }
+
+    fn pending(kind: PrimitiveKind, source: VertexId, age: Duration) -> Pending {
+        Pending {
+            kind,
+            source,
+            ticket: Ticket::new(),
+            enqueued_at: Instant::now() - age,
+            deadline: None,
+        }
     }
 
     #[test]
@@ -510,6 +752,21 @@ mod tests {
         // A duplicate source coalesces instead of being rejected.
         assert!(svc.submit_async(Query::bfs(0, 3)).is_ok());
         assert_eq!(svc.stats().coalesced, 1);
+    }
+
+    #[test]
+    fn per_kind_cap_leaves_room_for_other_kinds() {
+        let mut cfg = Config::default();
+        cfg.service_max_queue = 8;
+        cfg.service_lanes = 2; // kind cap = max(8/2, 2) = 4
+        let svc = QueryService::new_unstarted(path6(), cfg);
+        for s in 0..4 {
+            assert!(svc.submit_async(Query::bfs(s, 5)).is_ok());
+        }
+        let err = svc.submit_async(Query::bfs(4, 5)).unwrap_err();
+        assert_eq!(err, QueryError::QueueFull { limit: 4 });
+        // Another kind still gets in.
+        assert!(svc.submit_async(Query::ppr(0)).is_ok());
     }
 
     #[test]
@@ -559,5 +816,93 @@ mod tests {
         edges.push((0, 5));
         svc.swap_graph(Arc::new(builder::from_edges(6, &edges)));
         assert_eq!(svc.submit(Query::bfs(0, 5)).unwrap(), Answer::Hops(Some(1)));
+    }
+
+    #[test]
+    fn coalesced_waiters_all_get_the_answer() {
+        // Two handles on one ticket must both observe the resolution —
+        // the slot keeps its value (readers clone, resolve is sticky).
+        let mut cfg = Config::default();
+        cfg.service_cache = 0; // force both submissions through the queue
+        let svc = QueryService::new_unstarted(path6(), cfg);
+        let a = svc.submit_async(Query::bfs(0, 5)).unwrap();
+        let b = svc.submit_async(Query::bfs(0, 3)).unwrap();
+        assert_eq!(svc.stats().coalesced, 1);
+        // Resolve the shared ticket by hand (no batcher running).
+        let queue = lock(&svc.inner.queue);
+        let depths: Vec<u32> = vec![0, 1, 2, 3, 4, 5];
+        queue.pending[0].ticket.resolve(Ok(Column::Depths(Arc::new(depths))));
+        drop(queue);
+        assert_eq!(a.wait().unwrap(), Answer::Hops(Some(5)));
+        assert_eq!(b.wait().unwrap(), Answer::Hops(Some(3)));
+    }
+
+    #[test]
+    fn ticket_resolution_is_first_write_wins() {
+        let t = Ticket::new();
+        t.resolve(Ok(Column::Depths(Arc::new(vec![7]))));
+        t.resolve(Err(QueryError::Internal("late loser".to_string())));
+        assert_eq!(t.wait().unwrap().answer(Some(0)).unwrap(), Answer::Hops(Some(7)));
+    }
+
+    #[test]
+    fn shed_aged_splits_by_queue_age() {
+        let mut q: VecDeque<Pending> = VecDeque::new();
+        q.push_back(pending(PrimitiveKind::Bfs, 0, Duration::from_millis(500)));
+        q.push_back(pending(PrimitiveKind::Bfs, 1, Duration::from_millis(0)));
+        q.push_back(pending(PrimitiveKind::Ppr, 2, Duration::from_millis(500)));
+        let shed = shed_aged(&mut q, Duration::from_millis(100), Instant::now());
+        assert_eq!(shed.len(), 2);
+        assert_eq!(q.len(), 1);
+        assert_eq!(q[0].source, 1, "fresh entry survives in order");
+    }
+
+    #[test]
+    fn expired_member_gets_deadline_error_and_batch_still_resolves() {
+        let g = path6();
+        let mut cfg = Config::default();
+        cfg.service_cache = 0;
+        let svc = QueryService::new_unstarted(Arc::clone(&g), cfg);
+        let now = Instant::now();
+        let expired = Pending {
+            kind: PrimitiveKind::Bfs,
+            source: 0,
+            ticket: Ticket::new(),
+            enqueued_at: now - Duration::from_millis(50),
+            deadline: Some(now - Duration::from_millis(10)),
+        };
+        let alive = Pending {
+            kind: PrimitiveKind::Bfs,
+            source: 1,
+            ticket: Ticket::new(),
+            enqueued_at: now,
+            deadline: Some(now + Duration::from_secs(60)),
+        };
+        let (t_expired, t_alive) = (Arc::clone(&expired.ticket), Arc::clone(&alive.ticket));
+        run_batch_and_resolve(&svc.inner, g.as_ref(), 0, vec![expired, alive]);
+        assert!(
+            matches!(t_expired.wait().unwrap_err(), QueryError::DeadlineExceeded { .. }),
+            "expired member fails with the deadline error"
+        );
+        let col = t_alive.wait().unwrap();
+        assert_eq!(col.answer(Some(5)).unwrap(), Answer::Hops(Some(4)), "re-run answers 1->5");
+    }
+
+    #[test]
+    fn drain_guard_fails_leftover_tickets() {
+        let p = pending(PrimitiveKind::Bfs, 0, Duration::from_millis(0));
+        let t = Arc::clone(&p.ticket);
+        drop(DrainGuard { entries: vec![p] });
+        assert!(matches!(t.wait().unwrap_err(), QueryError::Internal(_)));
+    }
+
+    #[test]
+    fn service_deadline_applies_to_queued_queries() {
+        // With a 0 ms service deadline disabled and a generous one set,
+        // answers still come back correct.
+        let mut cfg = Config::default();
+        cfg.service_deadline_ms = 60_000;
+        let svc = QueryService::start(path6(), cfg);
+        assert_eq!(svc.submit(Query::bfs(0, 4)).unwrap(), Answer::Hops(Some(4)));
     }
 }

@@ -1,0 +1,268 @@
+//! The `serve` line protocol, factored out of the CLI so resilience is
+//! testable: one query per line (`bfs <src> <dst>`, `sssp <src> <dst>`,
+//! `ppr <user>`, `stats`, `quit`). A malformed, oversized, or non-UTF-8
+//! line produces an `error:` reply and a `malformed_requests` tick — the
+//! loop and the service stay up; only EOF or `quit` end the session.
+
+use std::io::{self, BufRead, Write};
+
+use crate::graph::GraphRep;
+use crate::primitives::api::QueryError;
+use crate::service::{Answer, Query, QueryService};
+
+/// Hard bound on one protocol line: anything longer is discarded up to
+/// its newline and answered with an error (a garbage or hostile stream
+/// must not balloon the line buffer).
+pub const MAX_LINE_BYTES: usize = 64 * 1024;
+
+/// Counters for one protocol session.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ProtocolStats {
+    /// Queries answered with a result (including "unreachable").
+    pub answered: u64,
+    /// Lines answered with an `error:` reply (malformed or query errors).
+    pub errors: u64,
+    /// Lines the parser could not form a query from (bad grammar,
+    /// oversized, invalid UTF-8).
+    pub malformed_requests: u64,
+}
+
+enum ReadOutcome {
+    Eof,
+    Line,
+    /// Line exceeded [`MAX_LINE_BYTES`]; payload discarded to its newline.
+    Oversized(usize),
+}
+
+/// Read one `\n`-terminated line with a hard size bound. Oversized input
+/// is consumed (so the stream stays in sync) but never buffered beyond
+/// the cap; invalid UTF-8 is lossy-decoded and left to the grammar to
+/// reject.
+fn read_bounded_line<R: BufRead>(input: &mut R, line: &mut String) -> io::Result<ReadOutcome> {
+    let mut raw: Vec<u8> = Vec::new();
+    let mut total = 0usize;
+    let mut overflow = false;
+    loop {
+        let buf = input.fill_buf()?;
+        if buf.is_empty() {
+            if total == 0 {
+                return Ok(ReadOutcome::Eof);
+            }
+            break;
+        }
+        let (chunk, saw_newline) = match buf.iter().position(|&b| b == b'\n') {
+            Some(i) => (i + 1, true),
+            None => (buf.len(), false),
+        };
+        if !overflow {
+            if total + chunk > MAX_LINE_BYTES {
+                overflow = true;
+                raw.clear();
+            } else {
+                raw.extend_from_slice(&buf[..chunk]);
+            }
+        }
+        total += chunk;
+        input.consume(chunk);
+        if saw_newline {
+            break;
+        }
+    }
+    if overflow {
+        return Ok(ReadOutcome::Oversized(total));
+    }
+    *line = String::from_utf8_lossy(&raw).into_owned();
+    Ok(ReadOutcome::Line)
+}
+
+fn parse_vertex(s: &str) -> Result<u32, QueryError> {
+    s.parse::<u32>()
+        .map_err(|_| QueryError::Malformed(format!("expected a vertex id, got {s:?}")))
+}
+
+fn parse_pair(a: &str, b: &str) -> Result<(u32, u32), QueryError> {
+    Ok((parse_vertex(a)?, parse_vertex(b)?))
+}
+
+/// Drive one protocol session from `input` to `out`, blocking on the
+/// service for each query. Returns the session counters at EOF/`quit`.
+pub fn serve_loop<G, R, W>(
+    svc: &QueryService<G>,
+    input: &mut R,
+    out: &mut W,
+) -> io::Result<ProtocolStats>
+where
+    G: GraphRep + Send + Sync + 'static,
+    R: BufRead,
+    W: Write,
+{
+    let mut stats = ProtocolStats::default();
+    let mut line = String::new();
+    loop {
+        line.clear();
+        match read_bounded_line(input, &mut line)? {
+            ReadOutcome::Eof => break,
+            ReadOutcome::Oversized(len) => {
+                stats.malformed_requests += 1;
+                stats.errors += 1;
+                writeln!(
+                    out,
+                    "error: malformed request: line of {len} bytes exceeds the \
+                     {MAX_LINE_BYTES}-byte bound"
+                )?;
+                continue;
+            }
+            ReadOutcome::Line => {}
+        }
+        let words: Vec<&str> = line.split_whitespace().collect();
+        let reply = match words.as_slice() {
+            [] => continue,
+            ["quit"] | ["exit"] => break,
+            ["stats"] => {
+                let s = svc.stats();
+                writeln!(
+                    out,
+                    "served={} batches={} cache_hits={} coalesced={} rejected={} \
+                     shed={} retries={} batcher_restarts={} malformed={}",
+                    s.served,
+                    s.batches,
+                    s.cache_hits,
+                    s.coalesced,
+                    s.rejected,
+                    s.shed,
+                    s.retries,
+                    s.batcher_restarts,
+                    stats.malformed_requests
+                )?;
+                continue;
+            }
+            ["bfs", src, dst] => {
+                parse_pair(src, dst).and_then(|(s, d)| svc.submit(Query::bfs(s, d)))
+            }
+            ["sssp", src, dst] => {
+                parse_pair(src, dst).and_then(|(s, d)| svc.submit(Query::sssp(s, d)))
+            }
+            ["ppr", user] => parse_vertex(user).and_then(|u| svc.submit(Query::ppr(u))),
+            other => Err(QueryError::Malformed(format!("unparsable query {other:?}"))),
+        };
+        // A malformed or rejected query is an error *response*; the
+        // service (and this loop) stay up.
+        match reply {
+            Ok(Answer::Hops(Some(h))) => {
+                stats.answered += 1;
+                writeln!(out, "{h} hops")?;
+            }
+            Ok(Answer::Distance(Some(d))) => {
+                stats.answered += 1;
+                writeln!(out, "distance {d}")?;
+            }
+            Ok(Answer::Hops(None)) | Ok(Answer::Distance(None)) => {
+                stats.answered += 1;
+                writeln!(out, "unreachable")?;
+            }
+            Ok(Answer::Recommendations(recs)) => {
+                stats.answered += 1;
+                writeln!(out, "recommend {recs:?}")?;
+            }
+            Err(e) => {
+                if matches!(e, QueryError::Malformed(_)) {
+                    stats.malformed_requests += 1;
+                }
+                stats.errors += 1;
+                writeln!(out, "error: {e}")?;
+            }
+        }
+    }
+    Ok(stats)
+}
+
+#[cfg(test)]
+mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
+    use std::io::Cursor;
+    use std::sync::Arc;
+
+    use super::*;
+    use crate::config::Config;
+    use crate::graph::builder;
+
+    fn start_path6() -> QueryService<crate::graph::Csr> {
+        let edges: Vec<(u32, u32)> = (0..5u32).map(|v| (v, v + 1)).collect();
+        QueryService::start(Arc::new(builder::from_edges(6, &edges)), Config::default())
+    }
+
+    fn run(svc: &QueryService<crate::graph::Csr>, input: &str) -> (ProtocolStats, Vec<String>) {
+        let mut out = Vec::new();
+        let stats = serve_loop(svc, &mut Cursor::new(input.as_bytes()), &mut out).unwrap();
+        let lines = String::from_utf8(out).unwrap().lines().map(String::from).collect();
+        (stats, lines)
+    }
+
+    #[test]
+    fn garbage_interleaved_with_valid_queries() {
+        let svc = start_path6();
+        let input = "bfs 0 5\nfrobnicate 12\nbfs zero five\nppr\n\nbfs 0 2\nquit\n";
+        let (stats, lines) = run(&svc, input);
+        assert_eq!(lines[0], "5 hops");
+        assert!(lines[1].starts_with("error: malformed request"), "{}", lines[1]);
+        assert!(lines[2].starts_with("error: malformed request"), "{}", lines[2]);
+        assert!(lines[3].starts_with("error: malformed request"), "{}", lines[3]);
+        assert_eq!(lines[4], "2 hops");
+        assert_eq!(stats.answered, 2);
+        assert_eq!(stats.malformed_requests, 3);
+        assert_eq!(stats.errors, 3);
+    }
+
+    #[test]
+    fn oversized_line_is_discarded_and_stream_continues() {
+        let svc = start_path6();
+        let mut input = "x".repeat(MAX_LINE_BYTES + 100);
+        input.push_str("\nbfs 0 1\n");
+        let (stats, lines) = run(&svc, &input);
+        assert!(lines[0].starts_with("error: malformed request"), "{}", lines[0]);
+        assert_eq!(lines[1], "1 hops", "stream stays in sync past the oversized line");
+        assert_eq!(stats.malformed_requests, 1);
+        assert_eq!(stats.answered, 1);
+    }
+
+    #[test]
+    fn invalid_utf8_is_an_error_not_a_crash() {
+        let svc = start_path6();
+        let mut bytes = b"bfs 0 1\n".to_vec();
+        bytes.extend_from_slice(&[0xff, 0xfe, b' ', 0x80, b'\n']);
+        bytes.extend_from_slice(b"bfs 0 2\n");
+        let mut out = Vec::new();
+        let stats = serve_loop(&svc, &mut Cursor::new(bytes), &mut out).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines[0], "1 hops");
+        assert!(lines[1].starts_with("error:"), "{}", lines[1]);
+        assert_eq!(lines[2], "2 hops");
+        assert_eq!(stats.malformed_requests, 1);
+    }
+
+    #[test]
+    fn eof_without_quit_ends_cleanly_and_unreachable_renders() {
+        let svc = start_path6();
+        // no trailing newline on the last line either
+        let (stats, lines) = run(&svc, "bfs 5 0\nstats");
+        assert_eq!(lines[0], "unreachable");
+        assert!(lines[1].starts_with("served="), "{}", lines[1]);
+        assert!(lines[1].contains("malformed=0"), "{}", lines[1]);
+        assert_eq!(stats.answered, 1);
+        assert_eq!(stats.errors, 0);
+    }
+
+    #[test]
+    fn query_errors_are_replies_not_exits() {
+        let svc = start_path6();
+        // out-of-range vertex, then weightless sssp, then a good query
+        let (stats, lines) = run(&svc, "bfs 99 0\nsssp 0 5\nppr 0\nquit\n");
+        assert!(lines[0].starts_with("error: source vertex"), "{}", lines[0]);
+        assert!(lines[1].starts_with("error:"), "{}", lines[1]);
+        assert!(lines[2].starts_with("recommend"), "{}", lines[2]);
+        assert_eq!(stats.errors, 2);
+        assert_eq!(stats.malformed_requests, 0, "valid grammar, failed queries");
+    }
+}

@@ -1,0 +1,284 @@
+//! Cooperative run budgets: a deadline, a cancellation token, and an
+//! iteration cap, checked at BSP iteration boundaries. Gunrock's
+//! bulk-synchronous model gives every primitive a natural safe point —
+//! the end of an iteration — so a budget check is one branch per BSP
+//! step, never a probe inside an operator inner loop. Iteration-free
+//! primitives (TC's segmented intersection, MST's candidate scan) poll a
+//! [`BudgetProbe`] once per work chunk instead.
+//!
+//! The budget travels on [`crate::config::Config`] (merged with any
+//! per-request budget by `primitives::api`), so the thirteen primitive
+//! signatures stay untouched: the enactor reads `config.budget` and
+//! reports a trip through `RunResult::interrupted`, which the API layer
+//! maps to `QueryError::DeadlineExceeded` / `Cancelled` with
+//! partial-progress stats.
+
+use std::sync::atomic::{AtomicBool, AtomicU8, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Shared cancellation flag. Clone freely; all clones observe `cancel`.
+#[derive(Clone, Debug, Default)]
+pub struct CancelToken(Arc<AtomicBool>);
+
+impl CancelToken {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Request cooperative cancellation: the run stops at its next
+    /// budget check (iteration boundary or probe chunk).
+    pub fn cancel(&self) {
+        self.0.store(true, Ordering::Release);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.0.load(Ordering::Acquire)
+    }
+}
+
+/// Why a run stopped early. Ordered by precedence: cancellation is
+/// checked before the deadline, the deadline before the iteration cap.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Interrupt {
+    /// The wall-clock deadline passed.
+    Deadline,
+    /// The [`CancelToken`] was triggered.
+    Cancelled,
+    /// The budget's own `max_iterations` cap was reached.
+    IterationBudget,
+}
+
+/// A run budget: all fields optional, `Default` is unlimited.
+#[derive(Clone, Debug, Default)]
+pub struct RunBudget {
+    /// Absolute wall-clock deadline.
+    pub deadline: Option<Instant>,
+    /// Cooperative cancellation flag.
+    pub cancel: Option<CancelToken>,
+    /// Hard cap on BSP iterations for this run (distinct from
+    /// `Config::max_iters`, which is a silent convergence guard: hitting
+    /// *this* cap is reported as an [`Interrupt`]).
+    pub max_iterations: Option<usize>,
+}
+
+impl RunBudget {
+    /// The unlimited budget (every check passes).
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    /// Budget with a deadline `ms` milliseconds from now (0 = unlimited).
+    pub fn with_deadline_ms(ms: u64) -> Self {
+        if ms == 0 {
+            return Self::default();
+        }
+        RunBudget { deadline: Some(Instant::now() + Duration::from_millis(ms)), ..Self::default() }
+    }
+
+    /// Budget carrying a cancellation token.
+    pub fn with_cancel(token: CancelToken) -> Self {
+        RunBudget { cancel: Some(token), ..Self::default() }
+    }
+
+    pub fn is_unlimited(&self) -> bool {
+        self.deadline.is_none() && self.cancel.is_none() && self.max_iterations.is_none()
+    }
+
+    /// One budget check, called at a BSP iteration boundary with the
+    /// number of iterations completed so far. Returns the first tripped
+    /// condition (cancel, then deadline, then iteration cap) or `None`.
+    #[inline]
+    pub fn check(&self, iterations: usize) -> Option<Interrupt> {
+        if let Some(tok) = &self.cancel {
+            if tok.is_cancelled() {
+                return Some(Interrupt::Cancelled);
+            }
+        }
+        if let Some(d) = self.deadline {
+            if Instant::now() >= d {
+                return Some(Interrupt::Deadline);
+            }
+        }
+        if let Some(cap) = self.max_iterations {
+            if iterations >= cap {
+                return Some(Interrupt::IterationBudget);
+            }
+        }
+        None
+    }
+
+    /// Combine two budgets into the tighter of both: earliest deadline,
+    /// smallest iteration cap; a token from `other` (the request) wins
+    /// over one from `self` (the config) since only one can be watched.
+    pub fn merge(&self, other: &RunBudget) -> RunBudget {
+        RunBudget {
+            deadline: match (self.deadline, other.deadline) {
+                (Some(a), Some(b)) => Some(a.min(b)),
+                (a, b) => a.or(b),
+            },
+            cancel: other.cancel.clone().or_else(|| self.cancel.clone()),
+            max_iterations: match (self.max_iterations, other.max_iterations) {
+                (Some(a), Some(b)) => Some(a.min(b)),
+                (a, b) => a.or(b),
+            },
+        }
+    }
+}
+
+/// Amortized budget probe for iteration-free primitives: shared by the
+/// parallel workers of one run, polled once per work chunk. The clock is
+/// read only every [`Self::STRIDE`]th poll (an atomic counter), so the
+/// probe costs one `fetch_add` per chunk in the common case; a trip is
+/// sticky and visible to all workers so they drain fast.
+#[derive(Debug)]
+pub struct BudgetProbe {
+    deadline: Option<Instant>,
+    cancel: Option<CancelToken>,
+    calls: AtomicUsize,
+    /// 0 = live, 1 = deadline tripped, 2 = cancelled.
+    tripped: AtomicU8,
+}
+
+impl BudgetProbe {
+    /// Polls between clock reads; a power of two so the modulo is a mask.
+    pub const STRIDE: usize = 256;
+
+    pub fn new(budget: &RunBudget) -> Self {
+        BudgetProbe {
+            deadline: budget.deadline,
+            cancel: budget.cancel.clone(),
+            calls: AtomicUsize::new(0),
+            tripped: AtomicU8::new(0),
+        }
+    }
+
+    /// `true` = keep working, `false` = budget exhausted (stop early).
+    #[inline]
+    pub fn poll(&self) -> bool {
+        if self.tripped.load(Ordering::Relaxed) != 0 {
+            return false;
+        }
+        if self.deadline.is_none() && self.cancel.is_none() {
+            return true;
+        }
+        let n = self.calls.fetch_add(1, Ordering::Relaxed);
+        if n & (Self::STRIDE - 1) != 0 {
+            return true;
+        }
+        if let Some(tok) = &self.cancel {
+            if tok.is_cancelled() {
+                self.tripped.store(2, Ordering::Relaxed);
+                return false;
+            }
+        }
+        if let Some(d) = self.deadline {
+            if Instant::now() >= d {
+                self.tripped.store(1, Ordering::Relaxed);
+                return false;
+            }
+        }
+        true
+    }
+
+    /// The sticky trip, if any, as an [`Interrupt`].
+    pub fn tripped(&self) -> Option<Interrupt> {
+        match self.tripped.load(Ordering::Relaxed) {
+            1 => Some(Interrupt::Deadline),
+            2 => Some(Interrupt::Cancelled),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unlimited_budget_always_passes() {
+        let b = RunBudget::none();
+        assert!(b.is_unlimited());
+        assert_eq!(b.check(0), None);
+        assert_eq!(b.check(usize::MAX), None);
+    }
+
+    #[test]
+    fn cancel_token_trips_all_clones() {
+        let tok = CancelToken::new();
+        let b = RunBudget::with_cancel(tok.clone());
+        assert_eq!(b.check(0), None);
+        tok.cancel();
+        assert_eq!(b.check(0), Some(Interrupt::Cancelled));
+    }
+
+    #[test]
+    fn expired_deadline_trips() {
+        let b = RunBudget { deadline: Some(Instant::now()), ..RunBudget::default() };
+        std::thread::sleep(Duration::from_millis(1));
+        assert_eq!(b.check(0), Some(Interrupt::Deadline));
+    }
+
+    #[test]
+    fn iteration_cap_trips_at_cap() {
+        let b = RunBudget { max_iterations: Some(3), ..RunBudget::default() };
+        assert_eq!(b.check(2), None);
+        assert_eq!(b.check(3), Some(Interrupt::IterationBudget));
+    }
+
+    #[test]
+    fn cancel_has_precedence_over_deadline() {
+        let tok = CancelToken::new();
+        tok.cancel();
+        let b = RunBudget {
+            deadline: Some(Instant::now()),
+            cancel: Some(tok),
+            max_iterations: Some(0),
+        };
+        std::thread::sleep(Duration::from_millis(1));
+        assert_eq!(b.check(5), Some(Interrupt::Cancelled));
+    }
+
+    #[test]
+    fn merge_takes_the_tighter_of_both() {
+        let near = Instant::now() + Duration::from_millis(5);
+        let far = Instant::now() + Duration::from_secs(60);
+        let a = RunBudget { deadline: Some(far), max_iterations: Some(10), ..RunBudget::default() };
+        let b = RunBudget { deadline: Some(near), max_iterations: Some(20), ..RunBudget::default() };
+        let m = a.merge(&b);
+        assert_eq!(m.deadline, Some(near));
+        assert_eq!(m.max_iterations, Some(10));
+        let m = RunBudget::none().merge(&b);
+        assert_eq!(m.deadline, Some(near));
+        assert_eq!(m.max_iterations, Some(20));
+    }
+
+    #[test]
+    fn probe_trips_sticky_and_reports() {
+        let tok = CancelToken::new();
+        let probe = BudgetProbe::new(&RunBudget::with_cancel(tok.clone()));
+        assert!(probe.poll());
+        tok.cancel();
+        // The first poll of each stride window reads the flag; drain one
+        // full stride to guarantee a clock/flag check happened.
+        let mut saw_stop = false;
+        for _ in 0..=BudgetProbe::STRIDE {
+            if !probe.poll() {
+                saw_stop = true;
+                break;
+            }
+        }
+        assert!(saw_stop, "probe never observed the cancel");
+        assert!(!probe.poll(), "trip must be sticky");
+        assert_eq!(probe.tripped(), Some(Interrupt::Cancelled));
+    }
+
+    #[test]
+    fn probe_without_limits_never_trips() {
+        let probe = BudgetProbe::new(&RunBudget::none());
+        for _ in 0..2 * BudgetProbe::STRIDE {
+            assert!(probe.poll());
+        }
+        assert_eq!(probe.tripped(), None);
+    }
+}

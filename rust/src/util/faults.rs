@@ -1,0 +1,298 @@
+//! Deterministic seeded fault injection at named seams, for the chaos
+//! test suite and `GUNROCK_FAULTS=<seed>:<rate>` manual runs.
+//!
+//! A [`Seam`] is a place the robustness layer promises to survive a
+//! failure: an operator dispatch panicking mid-traversal, a `.gsr`
+//! decode erroring, the batcher thread dying mid-drain. Each seam
+//! crossing increments a per-seam counter; whether crossing `k` fires is
+//! a pure function of `(seed, seam, k)` (splitmix64), so a given seed
+//! replays the exact same fault schedule — flaky chaos failures
+//! reproduce from their seed alone.
+//!
+//! Without the `fault-injection` cargo feature every entry point is an
+//! inlined no-op and the plan machinery does not exist: the production
+//! binary carries zero injection code on its hot paths.
+
+/// Named injection points. Matching is by seam, not call site, so a
+/// seam crossed from several places shares one deterministic schedule.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Seam {
+    /// Top of a worker-pool broadcast (`util::pool`): a fired crossing
+    /// panics inside the dispatch, exercising panic isolation.
+    OperatorDispatch,
+    /// `.gsr` load path (`graph::io`): a fired crossing reports a
+    /// decode error, exercising typed-error degradation.
+    GsrDecode,
+    /// Batcher drain loop (`service`): a fired crossing kills the
+    /// batcher thread, exercising supervision and waiter rescue.
+    BatcherDrain,
+}
+
+#[cfg(feature = "fault-injection")]
+mod active {
+    use super::Seam;
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::{Mutex, Once};
+    use std::time::Duration;
+
+    /// A compiled fault schedule. Rate-based firing is derived from the
+    /// seed; `exact` entries additionally force specific crossings (for
+    /// targeted tests: "kill the batcher on its first drain").
+    #[derive(Clone, Debug, Default)]
+    pub struct FailPlan {
+        pub seed: u64,
+        /// Probability in [0, 1] that any given seam crossing fires.
+        pub rate: f64,
+        /// Always fire at the `k`-th crossing of the seam (0-based).
+        pub exact: Vec<(Seam, u64)>,
+        /// Panic any batch whose source list contains this vertex
+        /// (exercises poisoned-lane isolation).
+        pub poison_source: Option<u32>,
+    }
+
+    impl FailPlan {
+        pub fn seeded(seed: u64, rate: f64) -> Self {
+            FailPlan { seed, rate, ..Self::default() }
+        }
+
+        /// Parse `GUNROCK_FAULTS=<seed>:<rate>`.
+        pub fn from_env() -> Option<Self> {
+            let raw = std::env::var("GUNROCK_FAULTS").ok()?;
+            let (seed, rate) = raw.split_once(':')?;
+            match (seed.trim().parse::<u64>(), rate.trim().parse::<f64>()) {
+                (Ok(s), Ok(r)) if (0.0..=1.0).contains(&r) => Some(FailPlan::seeded(s, r)),
+                _ => {
+                    eprintln!("faults: ignoring malformed GUNROCK_FAULTS={raw:?} (want <seed>:<rate>)");
+                    None
+                }
+            }
+        }
+
+        pub fn panic_at(mut self, seam: Seam, crossing: u64) -> Self {
+            self.exact.push((seam, crossing));
+            self
+        }
+
+        pub fn poison(mut self, source: u32) -> Self {
+            self.poison_source = Some(source);
+            self
+        }
+    }
+
+    static PLAN: Mutex<Option<FailPlan>> = Mutex::new(None);
+    static COUNTERS: [AtomicU64; 3] = [AtomicU64::new(0), AtomicU64::new(0), AtomicU64::new(0)];
+    static ENV_INIT: Once = Once::new();
+
+    fn idx(seam: Seam) -> usize {
+        match seam {
+            Seam::OperatorDispatch => 0,
+            Seam::GsrDecode => 1,
+            Seam::BatcherDrain => 2,
+        }
+    }
+
+    fn splitmix64(mut x: u64) -> u64 {
+        x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+        x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+        x ^ (x >> 31)
+    }
+
+    fn plan_lock() -> std::sync::MutexGuard<'static, Option<FailPlan>> {
+        // The lock is only held across plan reads/writes, never across a
+        // panic, so poisoning here means a bug in this module itself.
+        match PLAN.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        }
+    }
+
+    /// Install a plan (replacing any previous one) and reset the seam
+    /// counters so schedules are reproducible per install.
+    pub fn install(plan: FailPlan) {
+        let mut g = plan_lock();
+        for c in &COUNTERS {
+            c.store(0, Ordering::Relaxed);
+        }
+        *g = Some(plan);
+    }
+
+    /// Remove the active plan; subsequent crossings never fire.
+    pub fn clear() {
+        *plan_lock() = None;
+    }
+
+    pub fn active() -> bool {
+        init_from_env();
+        plan_lock().is_some()
+    }
+
+    fn init_from_env() {
+        ENV_INIT.call_once(|| {
+            if let Some(plan) = FailPlan::from_env() {
+                let mut g = plan_lock();
+                if g.is_none() {
+                    *g = Some(plan);
+                }
+            }
+        });
+    }
+
+    /// What crossing `k` of `seam` should do, decided under the lock and
+    /// acted on after releasing it (the panic must not poison the plan).
+    enum Action {
+        Nothing,
+        Delay,
+        Panic(u64),
+        Error(u64),
+    }
+
+    fn decide(seam: Seam, want_error: bool) -> Action {
+        init_from_env();
+        let g = plan_lock();
+        let Some(plan) = g.as_ref() else { return Action::Nothing };
+        let k = COUNTERS[idx(seam)].fetch_add(1, Ordering::Relaxed);
+        if plan.exact.iter().any(|&(s, c)| s == seam && c == k) {
+            return if want_error { Action::Error(k) } else { Action::Panic(k) };
+        }
+        if plan.rate <= 0.0 {
+            return Action::Nothing;
+        }
+        let h = splitmix64(plan.seed ^ (idx(seam) as u64 + 1).wrapping_mul(0xa076_1d64_78bd_642f) ^ k);
+        let fired = ((h >> 11) as f64 / (1u64 << 53) as f64) < plan.rate;
+        if !fired {
+            return Action::Nothing;
+        }
+        if want_error {
+            Action::Error(k)
+        } else if h & 3 == 0 {
+            Action::Delay
+        } else {
+            Action::Panic(k)
+        }
+    }
+
+    /// Crossing point for seams that fail by panicking (or, one firing
+    /// in four, by a short injected delay to shake out timing holes).
+    pub fn maybe_panic(seam: Seam) {
+        match decide(seam, false) {
+            Action::Nothing => {}
+            Action::Delay => std::thread::sleep(Duration::from_micros(200)),
+            Action::Panic(k) | Action::Error(k) => {
+                panic!("injected fault: {seam:?} crossing {k}")
+            }
+        }
+    }
+
+    /// Crossing point for seams that fail by returning a typed error.
+    pub fn maybe_error(seam: Seam) -> Result<(), String> {
+        match decide(seam, true) {
+            Action::Nothing => Ok(()),
+            Action::Delay => {
+                std::thread::sleep(Duration::from_micros(200));
+                Ok(())
+            }
+            Action::Panic(k) | Action::Error(k) => {
+                Err(format!("injected fault: {seam:?} crossing {k}"))
+            }
+        }
+    }
+
+    /// Panic when the active plan poisons a source in `sources` —
+    /// deterministic "one bad query" for lane-isolation tests.
+    pub fn maybe_panic_sources(sources: &[u32]) {
+        init_from_env();
+        let poisoned = {
+            let g = plan_lock();
+            match g.as_ref().and_then(|p| p.poison_source) {
+                Some(v) if sources.contains(&v) => Some(v),
+                _ => None,
+            }
+        };
+        if let Some(v) = poisoned {
+            panic!("injected fault: poisoned source {v}");
+        }
+    }
+}
+
+#[cfg(feature = "fault-injection")]
+pub use active::*;
+
+#[cfg(not(feature = "fault-injection"))]
+mod inert {
+    use super::Seam;
+
+    #[inline(always)]
+    pub fn active() -> bool {
+        false
+    }
+
+    #[inline(always)]
+    pub fn maybe_panic(_seam: Seam) {}
+
+    #[inline(always)]
+    pub fn maybe_error(_seam: Seam) -> Result<(), String> {
+        Ok(())
+    }
+
+    #[inline(always)]
+    pub fn maybe_panic_sources(_sources: &[u32]) {}
+}
+
+#[cfg(not(feature = "fault-injection"))]
+pub use inert::*;
+
+#[cfg(all(test, feature = "fault-injection"))]
+mod tests {
+    use super::*;
+
+    // These tests mutate the process-global plan; they share the crate's
+    // test binary with everything else, so each one installs, asserts,
+    // and clears while holding this lock.
+    static GUARD: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+    fn locked() -> std::sync::MutexGuard<'static, ()> {
+        match GUARD.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        }
+    }
+
+    #[test]
+    fn same_seed_same_schedule() {
+        let _g = locked();
+        let fire_pattern = |seed: u64| -> Vec<bool> {
+            install(FailPlan::seeded(seed, 0.3));
+            let out =
+                (0..64).map(|_| maybe_error(Seam::GsrDecode).is_err()).collect::<Vec<bool>>();
+            clear();
+            out
+        };
+        let a = fire_pattern(7);
+        let b = fire_pattern(7);
+        let c = fire_pattern(8);
+        assert_eq!(a, b, "same seed must replay the same schedule");
+        assert!(a.iter().any(|&f| f), "rate 0.3 over 64 crossings should fire at least once");
+        assert_ne!(a, c, "different seeds should differ (or the hash is broken)");
+    }
+
+    #[test]
+    fn exact_crossing_fires_exactly_there() {
+        let _g = locked();
+        install(FailPlan::seeded(1, 0.0).panic_at(Seam::GsrDecode, 2));
+        assert!(maybe_error(Seam::GsrDecode).is_ok());
+        assert!(maybe_error(Seam::GsrDecode).is_ok());
+        assert!(maybe_error(Seam::GsrDecode).is_err());
+        assert!(maybe_error(Seam::GsrDecode).is_ok());
+        clear();
+    }
+
+    #[test]
+    fn cleared_plan_never_fires() {
+        let _g = locked();
+        clear();
+        for _ in 0..32 {
+            assert!(maybe_error(Seam::GsrDecode).is_ok());
+        }
+    }
+}

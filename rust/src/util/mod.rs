@@ -6,6 +6,8 @@
 //! bitset, timers and summary statistics.
 
 pub mod bitset;
+pub mod budget;
+pub mod faults;
 pub mod par;
 pub mod pool;
 pub mod rng;

@@ -171,14 +171,41 @@ impl WorkerPool {
     where
         F: Fn(usize) + Sync,
     {
+        if let Err(payload) = self.try_broadcast(workers, f) {
+            std::panic::resume_unwind(payload);
+        }
+    }
+
+    /// [`broadcast`](Self::broadcast), but a panic inside `f` (on any
+    /// path — pooled, serial, or nested-inline) comes back as `Err`
+    /// carrying the first panic payload instead of unwinding the caller.
+    /// Barrier semantics are unchanged: on the pooled path every logical
+    /// id still runs before the call returns. This is the panic-isolation
+    /// entry point long-lived dispatchers (the query-service batcher)
+    /// build on — a poisoned operator dispatch degrades to an error value
+    /// instead of killing the dispatching thread.
+    pub fn try_broadcast<F>(
+        &self,
+        workers: usize,
+        f: F,
+    ) -> Result<(), Box<dyn std::any::Any + Send>>
+    where
+        F: Fn(usize) + Sync,
+    {
+        // Fault seam: an injected dispatch panic surfaces exactly like a
+        // panic from `f` (the closure captures nothing, so it is unwind-
+        // safe by construction).
+        if let Err(payload) =
+            catch_unwind(|| crate::util::faults::maybe_panic(crate::util::faults::Seam::OperatorDispatch))
+        {
+            return Err(payload);
+        }
         let count = workers.max(1);
         // Serial fast paths: single logical worker or a nested call from
-        // inside a job.
+        // inside a job. A panic stops the remaining ids (same order and
+        // early-exit a propagating serial panic always had).
         if count == 1 || BUSY.with(|b| b.get()) {
-            for id in 0..count {
-                f(id);
-            }
-            return;
+            return run_serial(count, &f);
         }
         // Demand-driven sizing (global pool): spawn just enough parked
         // workers for this dispatch width, capped at machine width — a
@@ -190,10 +217,7 @@ impl WorkerPool {
         // No pool threads (single-core, or fixed zero-width test pool):
         // run serially on the caller.
         if self.threads() == 0 {
-            for id in 0..count {
-                f(id);
-            }
-            return;
+            return run_serial(count, &f);
         }
 
         let fref: &JobFn = &f;
@@ -231,10 +255,22 @@ impl WorkerPool {
         }
         drop(dispatch);
 
-        if let Some(payload) = job.panic.lock().unwrap().take() {
-            std::panic::resume_unwind(payload);
+        match job.panic.lock().unwrap().take() {
+            Some(payload) => Err(payload),
+            None => Ok(()),
         }
     }
+}
+
+/// Serial execution with the same panic capture the pooled path has.
+fn run_serial<F>(count: usize, f: &F) -> Result<(), Box<dyn std::any::Any + Send>>
+where
+    F: Fn(usize) + Sync,
+{
+    for id in 0..count {
+        catch_unwind(AssertUnwindSafe(|| f(id)))?;
+    }
+    Ok(())
 }
 
 impl Drop for WorkerPool {
@@ -457,6 +493,50 @@ mod tests {
             ok.fetch_add(1, Ordering::Relaxed);
         });
         assert_eq!(ok.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn try_broadcast_returns_err_on_pooled_panic() {
+        let pool = WorkerPool::new(2);
+        let ran = AtomicU64::new(0);
+        let r = pool.try_broadcast(8, |id| {
+            ran.fetch_add(1, Ordering::Relaxed);
+            if id == 5 {
+                panic!("pooled boom");
+            }
+        });
+        let payload = r.expect_err("panic must come back as Err");
+        let msg = payload.downcast_ref::<&str>().copied().unwrap_or("");
+        assert_eq!(msg, "pooled boom");
+        assert_eq!(ran.load(Ordering::Relaxed), 8, "barrier still ran every id");
+        assert!(pool.try_broadcast(4, |_| {}).is_ok(), "pool reusable after Err");
+    }
+
+    #[test]
+    fn try_broadcast_catches_serial_paths_too() {
+        // count == 1 fast path.
+        let pool = WorkerPool::new(2);
+        assert!(pool.try_broadcast(1, |_| panic!("single")).is_err());
+        // zero-thread serial path: panic stops the remaining ids.
+        let zero = WorkerPool::new(0);
+        let ran = AtomicU64::new(0);
+        let r = zero.try_broadcast(8, |id| {
+            ran.fetch_add(1, Ordering::Relaxed);
+            if id == 2 {
+                panic!("serial");
+            }
+        });
+        assert!(r.is_err());
+        assert_eq!(ran.load(Ordering::Relaxed), 3, "serial path fails fast");
+        // nested-inline path: the outer broadcast sees the Err, not a panic.
+        let g = global();
+        let nested_err = AtomicU64::new(0);
+        g.broadcast(2, |_| {
+            if g.try_broadcast(2, |_| panic!("nested")).is_err() {
+                nested_err.fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert_eq!(nested_err.load(Ordering::Relaxed), 2);
     }
 
     #[test]

@@ -1,0 +1,205 @@
+//! Chaos suite: deterministic seeded fault injection against the full
+//! serving stack (`--features fault-injection`). The invariants are the
+//! fault-model contract, not any particular schedule:
+//!
+//! - every submitted query *resolves* — an answer or a typed
+//!   [`QueryError`] — no waiter ever hangs;
+//! - no panic escapes to a client thread;
+//! - a killed batcher restarts (counted) and its in-flight waiters are
+//!   rescued with typed errors;
+//! - a poisoned query fails alone; every other lane still answers;
+//! - with the plan cleared, answers are bit-identical to pre-chaos
+//!   ground truth (faults never corrupt state they only interrupt).
+//!
+//! Fault schedules are pure functions of (seed, seam, crossing), so a
+//! failure here reproduces from the seed in the test body alone.
+
+#![cfg(feature = "fault-injection")]
+
+use std::sync::{mpsc, Arc, Mutex, MutexGuard};
+use std::time::Duration;
+
+use gunrock::config::Config;
+use gunrock::graph::generators::rmat::{rmat, RmatParams};
+use gunrock::graph::Csr;
+use gunrock::primitives::api::QueryError;
+use gunrock::primitives::bfs;
+use gunrock::service::{Answer, Query, QueryService};
+use gunrock::util::faults::{self, FailPlan, Seam};
+
+/// The fault plan is process-global; these tests serialize on this lock
+/// so one test's schedule can never fire inside another.
+static GUARD: Mutex<()> = Mutex::new(());
+
+fn locked() -> MutexGuard<'static, ()> {
+    GUARD.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Clears the installed plan even when the test body panics, so a
+/// failing test cannot leak faults into the rest of the binary.
+struct PlanGuard;
+
+impl Drop for PlanGuard {
+    fn drop(&mut self) {
+        faults::clear();
+    }
+}
+
+/// Run `f` under a wall-clock watchdog: the no-hung-waiter invariant
+/// must fail loudly as a timeout, not wedge the whole test binary.
+fn with_watchdog<F>(secs: u64, what: &'static str, f: F)
+where
+    F: FnOnce() + Send + 'static,
+{
+    let (tx, rx) = mpsc::channel();
+    let t = std::thread::spawn(move || {
+        f();
+        tx.send(()).ok();
+    });
+    match rx.recv_timeout(Duration::from_secs(secs)) {
+        Ok(()) | Err(mpsc::RecvTimeoutError::Disconnected) => {
+            if let Err(payload) = t.join() {
+                std::panic::resume_unwind(payload);
+            }
+        }
+        Err(mpsc::RecvTimeoutError::Timeout) => {
+            panic!("watchdog: {what} wedged for {secs}s (hung waiter or deadlock)")
+        }
+    }
+}
+
+fn scale_free() -> Csr {
+    rmat(&RmatParams { scale: 9, edge_factor: 8, ..Default::default() })
+}
+
+fn hops(labels: &[u32], dst: u32) -> Option<u32> {
+    match labels[dst as usize] {
+        bfs::INFINITY_DEPTH => None,
+        h => Some(h),
+    }
+}
+
+/// Rate-based chaos across every seam while client threads hammer the
+/// service; then cleared-plan answers must match pre-chaos truth.
+#[test]
+fn chaos_hammer_every_query_resolves_and_state_recovers() {
+    let _serial = locked();
+    let _plan = PlanGuard;
+    with_watchdog(180, "chaos hammer", || {
+        let g = Arc::new(scale_free());
+        let n = g.num_vertices as u32;
+        let cfg = Config::default();
+        // Ground truth before any fault is armed.
+        let sources: Vec<u32> = (0..8u32).map(|i| (i * 31) % n).collect();
+        let truth: Vec<Vec<u32>> =
+            sources.iter().map(|&s| bfs::bfs(g.as_ref(), s, &cfg).0.labels).collect();
+        let svc = QueryService::start(Arc::clone(&g), cfg);
+        faults::install(FailPlan::seeded(0xC4A05, 0.05));
+        std::thread::scope(|scope| {
+            for t in 0..4usize {
+                let svc = &svc;
+                let sources = &sources;
+                let truth = &truth;
+                scope.spawn(move || {
+                    for i in 0..40usize {
+                        let which = (t * 40 + i) % sources.len();
+                        let src = sources[which];
+                        let dst = ((t * 131 + i * 17) % n as usize) as u32;
+                        if i % 5 == 4 {
+                            // Mixed-kind pressure: PPR shares the queue.
+                            match svc.submit(Query::ppr(src)) {
+                                Ok(Answer::Recommendations(_)) | Err(_) => {}
+                                Ok(other) => panic!("ppr answered {other:?}"),
+                            }
+                            continue;
+                        }
+                        // Under chaos a query may fail — but only with a
+                        // typed error, and a success is still correct.
+                        match svc.submit(Query::bfs(src, dst)) {
+                            Ok(got) => assert_eq!(
+                                got,
+                                Answer::Hops(hops(&truth[which], dst)),
+                                "chaos-run success must still be right: {src}->{dst}"
+                            ),
+                            Err(_typed) => {}
+                        }
+                    }
+                });
+            }
+        });
+        faults::clear();
+        // Post-chaos determinism: same queries, bit-identical answers.
+        for (i, &src) in sources.iter().enumerate() {
+            for dst in [0u32, 1, n / 2, n - 1] {
+                assert_eq!(
+                    svc.submit(Query::bfs(src, dst)).unwrap(),
+                    Answer::Hops(hops(&truth[i], dst)),
+                    "post-chaos {src}->{dst}"
+                );
+            }
+        }
+    });
+}
+
+/// Kill the batcher on its very first drain: the waiter is rescued with
+/// a typed error, the supervisor restarts the loop, and the restarted
+/// batcher serves correctly.
+#[test]
+fn killed_batcher_restarts_and_rescues_waiters() {
+    let _serial = locked();
+    let _plan = PlanGuard;
+    with_watchdog(60, "batcher restart", || {
+        let g = Arc::new(scale_free());
+        let cfg = Config::default();
+        let svc = QueryService::start(Arc::clone(&g), cfg.clone());
+        faults::install(FailPlan::seeded(0, 0.0).panic_at(Seam::BatcherDrain, 0));
+        let err = svc.submit(Query::bfs(0, 5)).unwrap_err();
+        assert!(matches!(err, QueryError::Internal(_)), "rescued waiter gets Internal: {err}");
+        faults::clear();
+        let (want, _) = bfs::bfs(g.as_ref(), 1, &cfg);
+        assert_eq!(
+            svc.submit(Query::bfs(1, 7)).unwrap(),
+            Answer::Hops(hops(&want.labels, 7)),
+            "restarted batcher serves correctly"
+        );
+        assert!(svc.stats().batcher_restarts >= 1, "{:?}", svc.stats());
+    });
+}
+
+/// Poison one source: its query fails with `Internal` after the batch
+/// retries drain; every other lane in the same service still answers.
+#[test]
+fn poisoned_source_fails_alone_other_lanes_answer() {
+    let _serial = locked();
+    let _plan = PlanGuard;
+    with_watchdog(60, "poisoned lane", || {
+        let g = Arc::new(scale_free());
+        let n = g.num_vertices as u32;
+        let cfg = Config::default();
+        let poisoned = 3u32;
+        let sources: Vec<u32> = (0..8u32).collect();
+        let truth: Vec<Vec<u32>> =
+            sources.iter().map(|&s| bfs::bfs(g.as_ref(), s, &cfg).0.labels).collect();
+        let svc = QueryService::start(Arc::clone(&g), cfg);
+        faults::install(FailPlan::seeded(0, 0.0).poison(poisoned));
+        let handles: Vec<_> = sources
+            .iter()
+            .map(|&s| svc.submit_async(Query::bfs(s, n - 1)).unwrap())
+            .collect();
+        for (i, h) in handles.into_iter().enumerate() {
+            let src = sources[i];
+            let got = h.wait();
+            if src == poisoned {
+                let err = got.unwrap_err();
+                assert!(matches!(err, QueryError::Internal(_)), "poisoned lane: {err}");
+            } else {
+                assert_eq!(
+                    got.unwrap(),
+                    Answer::Hops(hops(&truth[i], n - 1)),
+                    "lane {src} must still answer"
+                );
+            }
+        }
+        assert!(svc.stats().retries >= 1, "poisoned batch retried first: {:?}", svc.stats());
+    });
+}

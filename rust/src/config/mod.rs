@@ -73,6 +73,17 @@ pub struct Config {
     /// file key — deadlines are relative, so callers set it per run;
     /// `primitives::api` merges in any per-request budget.
     pub budget: RunBudget,
+    /// Arm the observability subsystem (`crate::obs`): per-thread event
+    /// rings, the metrics registry, and the flight recorder. Off by
+    /// default — every trace seam is a single relaxed load when disabled.
+    pub obs_enable: bool,
+    /// Per-thread trace-ring capacity in events (clamped to at least 16;
+    /// each event is 40 bytes). Oldest events are overwritten, so this
+    /// bounds the flight-recorder window, not the run length.
+    pub obs_ring: usize,
+    /// Write a Chrome `trace_event` JSON file here at CLI exit (empty =
+    /// no trace). Setting it implies `obs_enable`.
+    pub obs_trace: String,
 }
 
 impl Default for Config {
@@ -101,6 +112,9 @@ impl Default for Config {
             service_max_retries: 2,
             service_shed_after_ms: 0,
             budget: RunBudget::none(),
+            obs_enable: false,
+            obs_ring: 4096,
+            obs_trace: String::new(),
         }
     }
 }
@@ -169,6 +183,9 @@ impl Config {
                 "pagerank.epsilon" | "pr_epsilon" => self.pr_epsilon = v.parse()?,
                 "pagerank.max_iters" | "pr_max_iters" => self.pr_max_iters = v.parse()?,
                 "runtime.max_iters" | "max_iters" => self.max_iters = v.parse()?,
+                "obs.enable" | "obs_enable" => self.obs_enable = parse_bool(v)?,
+                "obs.ring" | "obs_ring" => self.obs_ring = v.parse()?,
+                "obs.trace" | "obs_trace" => self.obs_trace = v.to_string(),
                 other => bail!("unknown config key: {other}"),
             }
         }
@@ -296,6 +313,18 @@ mod tests {
         assert_eq!(cfg.service_max_retries, 5);
         assert_eq!(cfg.service_shed_after_ms, 100);
         assert!(cfg.budget.is_unlimited(), "file keys never set the in-process budget");
+    }
+
+    #[test]
+    fn obs_knobs_apply() {
+        let mut cfg = Config::default();
+        assert!(!cfg.obs_enable, "observability is off by default");
+        let kv = parse_toml_subset("[obs]\nenable = true\nring = 1024\ntrace = \"out.json\"\n")
+            .unwrap();
+        cfg.apply(&kv).unwrap();
+        assert!(cfg.obs_enable);
+        assert_eq!(cfg.obs_ring, 1024);
+        assert_eq!(cfg.obs_trace, "out.json");
     }
 
     #[test]

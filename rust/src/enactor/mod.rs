@@ -11,6 +11,7 @@ use crate::frontier::{DoubleBuffer, HybridMode};
 use crate::gpu_sim::WarpCounters;
 use crate::graph::GraphRep;
 use crate::load_balance::{self, StrategyKind};
+use crate::obs;
 use crate::operators::OpContext;
 use crate::util::budget::Interrupt;
 use crate::util::timer::Timer;
@@ -102,7 +103,7 @@ impl Enactor {
     /// paper's topology + frontier-size heuristic (§5.1.3). Works on any
     /// graph representation (the heuristic only reads the average degree).
     pub fn strategy_for<G: GraphRep>(&self, g: &G, frontier_len: usize) -> StrategyKind {
-        if let Some(s) = self.config.strategy {
+        let s = if let Some(s) = self.config.strategy {
             s
         } else {
             load_balance::auto_select(
@@ -110,7 +111,9 @@ impl Enactor {
                 frontier_len,
                 self.config.lb_switch_threshold,
             )
-        }
+        };
+        obs::event(obs::EventKind::LbStrategy, s as u64, frontier_len as u64);
+        s
     }
 
     /// Ligra-style hybrid-frontier switch (see `frontier` module docs):
@@ -121,7 +124,7 @@ impl Enactor {
     /// crosses `frontier_switch · m`; the forced modes pin the choice
     /// (ablation + parity testing).
     pub fn densify_output<G: GraphRep>(&self, g: &G, frontier_len: usize) -> bool {
-        match self.config.frontier_mode {
+        let dense = match self.config.frontier_mode {
             HybridMode::ForceSparse => false,
             HybridMode::ForceDense => true,
             HybridMode::Auto => {
@@ -129,7 +132,9 @@ impl Enactor {
                 let est = frontier_len as f64 * (1.0 + g.average_degree());
                 est > self.config.frontier_switch * m
             }
-        }
+        };
+        obs::event(obs::EventKind::FrontierMode, dense as u64, frontier_len as u64);
+        dense
     }
 
     /// Hybrid switch for frontiers that are pure id sets (no neighbor
@@ -137,11 +142,13 @@ impl Enactor {
     /// O(universe/64) word sweep, so it wins once occupancy clears a
     /// small fraction of the universe.
     pub fn densify_plain(&self, universe: usize, len: usize) -> bool {
-        match self.config.frontier_mode {
+        let dense = match self.config.frontier_mode {
             HybridMode::ForceSparse => false,
             HybridMode::ForceDense => true,
             HybridMode::Auto => len * 16 >= universe.max(1),
-        }
+        };
+        obs::event(obs::EventKind::FrontierMode, dense as u64, len as u64);
+        dense
     }
 
     /// Restart timers/counters for a fresh run.
@@ -161,6 +168,14 @@ impl Enactor {
         iter_ms: f64,
         pull: bool,
     ) {
+        // Trace seam: the iteration boundary, as a complete span whose
+        // duration is the wall time the primitive already measured.
+        obs::event_with_dur(
+            if pull { obs::EventKind::BspIterationPull } else { obs::EventKind::BspIteration },
+            (iter_ms * 1e3) as u64,
+            input_frontier as u64,
+            output_frontier as u64,
+        );
         let edges_now = self.counters.edges();
         self.iterations.push(IterationStats {
             iteration: self.iterations.len(),
@@ -189,7 +204,7 @@ impl Enactor {
         match self.config.budget.check(self.iterations.len()) {
             None => true,
             Some(i) => {
-                self.interrupted = Some(i);
+                self.trip(i);
                 false
             }
         }
@@ -207,7 +222,25 @@ impl Enactor {
     /// [`crate::util::budget::BudgetProbe`] polled inside a chunked
     /// sweep). First trip wins.
     pub fn note_interrupt(&mut self, interrupt: Interrupt) {
-        self.interrupted.get_or_insert(interrupt);
+        if self.interrupted.is_none() {
+            self.trip(interrupt);
+        }
+    }
+
+    /// First budget trip of the run: record it, emit the trace event,
+    /// and trigger a flight-recorder dump so the typed error the caller
+    /// is about to see comes with its post-mortem.
+    fn trip(&mut self, interrupt: Interrupt) {
+        self.interrupted = Some(interrupt);
+        if obs::enabled() {
+            let completed = self.iterations.len();
+            let tag = interrupt_tag(interrupt);
+            obs::event(obs::EventKind::BudgetTrip, completed as u64, tag);
+            obs::flight_dump(&format!(
+                "budget trip: {} after {completed} completed iterations",
+                obs::interrupt_name(tag)
+            ));
+        }
     }
 
     /// Finish the run, producing the result record.
@@ -222,6 +255,16 @@ impl Enactor {
             lanes: 1,
             interrupted: self.interrupted.take(),
         }
+    }
+}
+
+/// Stable trace-payload encoding for [`Interrupt`] (the names live in
+/// [`obs::interrupt_name`]).
+pub fn interrupt_tag(i: Interrupt) -> u64 {
+    match i {
+        Interrupt::Deadline => 0,
+        Interrupt::Cancelled => 1,
+        Interrupt::IterationBudget => 2,
     }
 }
 
@@ -408,6 +451,16 @@ mod tests {
         e.note_interrupt(Interrupt::Deadline);
         e.note_interrupt(Interrupt::Cancelled);
         assert_eq!(e.finish_run().interrupted, Some(Interrupt::Deadline));
+    }
+
+    #[test]
+    fn interrupt_tags_match_obs_names() {
+        assert_eq!(obs::interrupt_name(interrupt_tag(Interrupt::Deadline)), "deadline");
+        assert_eq!(obs::interrupt_name(interrupt_tag(Interrupt::Cancelled)), "cancelled");
+        assert_eq!(
+            obs::interrupt_name(interrupt_tag(Interrupt::IterationBudget)),
+            "iteration_budget"
+        );
     }
 
     #[test]

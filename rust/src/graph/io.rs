@@ -352,6 +352,8 @@ pub fn save_gsr(path: &Path, g: &CompressedCsr) -> Result<()> {
 /// consistency before handing back the compressed graph.
 pub fn load_gsr(path: &Path) -> Result<CompressedCsr> {
     let bytes = std::fs::read(path).with_context(|| format!("open {}", path.display()))?;
+    // Trace seam: the whole validate + decode as one span.
+    let _span = crate::obs::span(crate::obs::EventKind::GsrDecode, bytes.len() as u64, 0);
     if let Err(e) = crate::util::faults::maybe_error(crate::util::faults::Seam::GsrDecode) {
         bail!("{}: {e}", path.display());
     }

@@ -42,6 +42,10 @@ pub mod graph;
 pub mod harness;
 pub mod load_balance;
 pub mod multi_gpu;
+// Observability shares the serving stack's no-unwrap discipline: the
+// flight recorder runs precisely when something else already failed.
+#[deny(clippy::unwrap_used, clippy::expect_used)]
+pub mod obs;
 pub mod operators;
 pub mod primitives;
 pub mod runtime;

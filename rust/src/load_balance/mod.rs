@@ -24,6 +24,7 @@ use crate::frontier::lanes::LaneBits;
 use crate::frontier::DenseBits;
 use crate::gpu_sim::WarpCounters;
 use crate::graph::{GraphRep, VertexId};
+use crate::obs;
 use crate::util::par;
 
 /// Strategy selector (module names from paper Table 2).
@@ -107,6 +108,8 @@ pub fn expand_into<G: GraphRep, F: EdgeVisit>(
     out: &mut Vec<VertexId>,
 ) {
     counters.add_kernel_launch();
+    // Trace seam: one operator dispatch ("kernel launch") per call.
+    let _span = obs::span(obs::EventKind::OperatorDispatch, kind as u64, items.len() as u64);
     match kind {
         StrategyKind::ThreadExpand => {
             thread_expand::expand_into(g, items, workers, counters, visit, out)
@@ -142,6 +145,7 @@ pub fn expand_dense_into<G: GraphRep, F: EdgeVisit>(
     out: &mut Vec<VertexId>,
 ) {
     counters.add_kernel_launch();
+    let _span = obs::span(obs::EventKind::OperatorDispatch, kind as u64, front.len() as u64);
     match kind {
         StrategyKind::ThreadExpand => {
             thread_expand::expand_dense_into(g, front, workers, counters, visit, out)
@@ -180,6 +184,7 @@ pub fn expand_lanes_into<G: GraphRep, F: LaneVisit>(
 ) {
     counters.add_kernel_launch();
     let bound = front.dirty_bound().min(g.num_vertices());
+    let _span = obs::span(obs::EventKind::OperatorDispatch, kind as u64, bound as u64);
     let sweep = |_w: usize, start: usize, end: usize| -> (u64, u64) {
         let mut edges = 0u64;
         let mut lane_visits = 0u64;
@@ -227,6 +232,21 @@ pub fn expand<G: GraphRep, F: EdgeVisit>(
 mod tests {
     use super::*;
     use crate::graph::{builder, Csr};
+
+    #[test]
+    fn strategy_tags_match_obs_names() {
+        // The trace payload for dispatch/strategy events is
+        // `StrategyKind as u64`; obs names must stay in sync.
+        for (k, name) in [
+            (StrategyKind::ThreadExpand, "thread_expand"),
+            (StrategyKind::Twc, "twc"),
+            (StrategyKind::Lb, "lb"),
+            (StrategyKind::LbLight, "lb_light"),
+            (StrategyKind::LbCull, "lb_cull"),
+        ] {
+            assert_eq!(obs::strategy_name(k as u64), name);
+        }
+    }
 
     fn star() -> Csr {
         // hub 0 -> 1..=8, plus a few leaf->leaf edges

@@ -31,8 +31,15 @@ use gunrock::primitives::api::{self, Output, PrimitiveKind, QueryError, Request}
 use gunrock::primitives::{bfs, sssp};
 use gunrock::service::{protocol, Answer, Query, QueryService};
 
-const BOOL_FLAGS: &[&str] =
-    &["direction-optimized", "idempotence", "weighted", "undirected", "pull", "no-in-edges"];
+const BOOL_FLAGS: &[&str] = &[
+    "direction-optimized",
+    "idempotence",
+    "weighted",
+    "undirected",
+    "pull",
+    "no-in-edges",
+    "obs",
+];
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -82,6 +89,11 @@ fn usage() {
                                   fraction of m (default 0.05)\n\
            --frontier-mode <m>    frontier representation: auto (default)\n\
                                   | sparse | dense\n\
+           --trace <path>        write a Chrome trace_event JSON of the run\n\
+                                  (chrome://tracing, Perfetto); implies --obs\n\
+           --obs                  arm observability (event rings + metrics\n\
+                                  registry + flight recorder) without a trace\n\
+           --obs-ring <n>        per-thread event-ring capacity (default 4096)\n\
          \n\
          SERVE FLAGS\n\
            --demo <n>            answer n synthetic mixed queries, print stats\n\
@@ -100,6 +112,8 @@ fn usage() {
            sssp <src> <dst>      shortest-path distance src -> dst\n\
            ppr <user>            top-k personalized-PageRank recommendations\n\
            stats                 service counters (served, batches, cache hits)\n\
+           metrics               JSON metrics snapshot (queue depth, per-kind\n\
+                                  pending, counters) + Prometheus-style text\n\
            quit                  shut down\n"
     );
 }
@@ -157,7 +171,35 @@ fn build_config(p: &cli::ParsedArgs) -> Result<Config> {
     if let Some(v) = p.get_parse::<u64>("shed-after-ms")? {
         cfg.service_shed_after_ms = v;
     }
+    if p.get_bool("obs") {
+        cfg.obs_enable = true;
+    }
+    if let Some(v) = p.get_parse::<usize>("obs-ring")? {
+        cfg.obs_ring = v;
+    }
+    if let Some(path) = p.get("trace") {
+        cfg.obs_trace = path.to_string();
+    }
+    // --trace implies arming: a trace of a disabled subsystem is empty.
+    if !cfg.obs_trace.is_empty() {
+        cfg.obs_enable = true;
+    }
+    gunrock::obs::configure(cfg.obs_enable, cfg.obs_ring);
     Ok(cfg)
+}
+
+/// Flush the Chrome trace at CLI exit when `--trace <path>` asked for one.
+fn finish_trace(cfg: &Config) -> Result<()> {
+    if !cfg.obs_trace.is_empty() {
+        gunrock::obs::export::write_chrome_trace(&cfg.obs_trace)
+            .with_context(|| format!("write trace {}", cfg.obs_trace))?;
+        println!(
+            "wrote Chrome trace ({} events recorded) to {}",
+            gunrock::obs::total_events_written(),
+            cfg.obs_trace
+        );
+    }
+    Ok(())
 }
 
 /// SSSP/MST need weights. When the source (file, dataset analog — some,
@@ -394,6 +436,13 @@ fn run_primitive<G: GraphRep>(
     req.params.pull = p.get_bool("pull");
     let resp = api::run_request(g, &req, cfg)?;
     describe(&resp);
+    if let Some(s) = resp.iterations {
+        println!(
+            "  frontier: max={} push_iters={} pull_iters={} edges={}",
+            s.max_frontier, s.push, s.pull, s.edges
+        );
+    }
+    finish_trace(cfg)?;
     Ok(())
 }
 
@@ -459,6 +508,7 @@ fn serve<G: GraphRep + Send + Sync + 'static>(
     }
     let weighted = g.is_weighted();
     let seed = cfg.seed;
+    let trace_cfg = cfg.clone();
     let svc = QueryService::start(g, cfg);
 
     if let Some(count) = p.get_parse::<usize>("demo")? {
@@ -497,8 +547,9 @@ fn serve<G: GraphRep + Send + Sync + 'static>(
             answered as f64 / (ms / 1000.0).max(1e-9)
         );
         println!(
-            "stats: served={} batches={} cache_hits={} coalesced={} rejected={} \
-             shed={} retries={} batcher_restarts={}",
+            "stats: submitted={} served={} batches={} cache_hits={} coalesced={} \
+             rejected={} shed={} retries={} batcher_restarts={}",
+            s.submitted,
             s.served,
             s.batches,
             s.cache_hits,
@@ -508,10 +559,13 @@ fn serve<G: GraphRep + Send + Sync + 'static>(
             s.retries,
             s.batcher_restarts
         );
+        finish_trace(&trace_cfg)?;
         return Ok(());
     }
 
-    println!("ready (bfs <src> <dst> | sssp <src> <dst> | ppr <user> | stats | quit)");
+    println!(
+        "ready (bfs <src> <dst> | sssp <src> <dst> | ppr <user> | stats | metrics | quit)"
+    );
     // The protocol loop lives in service::protocol so its resilience
     // (malformed lines, oversized lines, garbage bytes) is unit-tested;
     // this is the only stdin/stdout binding.
@@ -521,12 +575,15 @@ fn serve<G: GraphRep + Send + Sync + 'static>(
     if stats.malformed_requests > 0 {
         eprintln!("note: {} malformed request line(s) ignored", stats.malformed_requests);
     }
+    finish_trace(&trace_cfg)?;
     Ok(())
 }
 
 fn top_k(xs: &[f64], k: usize) -> Vec<usize> {
     let mut idx: Vec<usize> = (0..xs.len()).collect();
-    idx.sort_unstable_by(|&a, &b| xs[b].partial_cmp(&xs[a]).unwrap());
+    // total_cmp: a NaN rank (shouldn't happen, but data is data) sorts
+    // deterministically instead of panicking the report path.
+    idx.sort_unstable_by(|&a, &b| xs[b].total_cmp(&xs[a]));
     idx.truncate(k);
     idx
 }

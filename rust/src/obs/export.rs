@@ -1,0 +1,222 @@
+//! Exporters: Chrome `trace_event` JSON and Prometheus-style text.
+//!
+//! The Chrome format is the JSON array flavor documented by the Trace
+//! Event Profiling Tool: complete spans are `ph:"X"` with `ts`/`dur` in
+//! microseconds, instants are `ph:"i"` with thread scope. The output of
+//! [`write_chrome_trace`] loads directly in `chrome://tracing` or
+//! <https://ui.perfetto.dev>; each per-thread ring renders as one track.
+//!
+//! The Prometheus exporter is a plain-text snapshot (`# TYPE` headers,
+//! `name{labels} value` samples) built from a registry snapshot plus any
+//! caller-supplied extra counters — that is how the query service's
+//! `StatsSnapshot` fields are folded into the same exposition as the
+//! registry metrics (the serve protocol's `metrics` command).
+
+use std::fmt::Write as _;
+
+use super::registry::{MetricSnapshot, MetricValue};
+use super::{all_events_sorted, prim_name, strategy_name, EventKind};
+
+/// Render every retained ring event as a Chrome trace-event JSON string.
+pub fn chrome_trace_json() -> String {
+    let events = all_events_sorted();
+    let mut out = String::with_capacity(128 + 160 * events.len());
+    out.push_str("{\"displayTimeUnit\":\"ms\",\"traceEvents\":[");
+    let mut first = true;
+    let mut seen_tids: Vec<u32> = Vec::new();
+    for e in &events {
+        if !seen_tids.contains(&e.tid) {
+            seen_tids.push(e.tid);
+        }
+        if !first {
+            out.push(',');
+        }
+        first = false;
+        let (an, bn) = e.kind.arg_names();
+        let (av, bv) = (arg_value(e.kind, true, e.a), arg_value(e.kind, false, e.b));
+        out.push('\n');
+        if e.kind.is_instant() && e.dur_us == 0 {
+            let _ = write!(
+                out,
+                "{{\"name\":\"{}\",\"cat\":\"gunrock\",\"ph\":\"i\",\"s\":\"t\",\"pid\":0,\"tid\":{},\"ts\":{},\"args\":{{\"{}\":{},\"{}\":{},\"depth\":{}}}}}",
+                e.kind.name(), e.tid, e.ts_us, an, av, bn, bv, e.depth
+            );
+        } else {
+            let _ = write!(
+                out,
+                "{{\"name\":\"{}\",\"cat\":\"gunrock\",\"ph\":\"X\",\"pid\":0,\"tid\":{},\"ts\":{},\"dur\":{},\"args\":{{\"{}\":{},\"{}\":{},\"depth\":{}}}}}",
+                e.kind.name(), e.tid, e.ts_us, e.dur_us, an, av, bn, bv, e.depth
+            );
+        }
+    }
+    // Thread-name metadata so tracks are labeled in the viewer.
+    for tid in seen_tids {
+        let _ = write!(
+            out,
+            ",\n{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":0,\"tid\":{tid},\"args\":{{\"name\":\"ring-{tid}\"}}}}"
+        );
+    }
+    out.push_str("\n]}");
+    out
+}
+
+/// Render tag-typed payloads as their symbolic name (JSON string),
+/// everything else as a bare number.
+fn arg_value(kind: EventKind, is_a: bool, v: u64) -> String {
+    let named: Option<&'static str> = match (kind, is_a) {
+        (EventKind::OperatorDispatch | EventKind::LbStrategy, true) => Some(strategy_name(v)),
+        (EventKind::PrimitiveRun, true) => Some(prim_name(v)),
+        (
+            EventKind::QueueAdmit
+            | EventKind::QueueCoalesce
+            | EventKind::QueueReject
+            | EventKind::QueueShed
+            | EventKind::CacheHit
+            | EventKind::BatcherDrain,
+            true,
+        ) => Some(prim_name(v)),
+        (EventKind::BudgetTrip, false) => Some(super::interrupt_name(v)),
+        _ => None,
+    };
+    match named {
+        Some(n) => format!("\"{n}\""),
+        None => v.to_string(),
+    }
+}
+
+/// Write the Chrome trace to `path`.
+pub fn write_chrome_trace(path: &str) -> std::io::Result<()> {
+    std::fs::write(path, chrome_trace_json())
+}
+
+/// Prometheus-style text exposition: caller-supplied counters first
+/// (e.g. the service `StatsSnapshot` / queue introspection), then the
+/// registry snapshot. All sample names get a `gunrock_` prefix.
+pub fn prometheus_text(extra_counters: &[(&str, u64)], registry: &[MetricSnapshot]) -> String {
+    let mut out = String::new();
+    for (name, v) in extra_counters {
+        type_line(&mut out, name, "counter");
+        let _ = writeln!(out, "gunrock_{name} {v}");
+    }
+    for m in registry {
+        match &m.value {
+            MetricValue::Counter(v) => {
+                type_line(&mut out, &m.name, "counter");
+                let _ = writeln!(out, "gunrock_{} {v}", m.name);
+            }
+            MetricValue::Gauge(v) => {
+                type_line(&mut out, &m.name, "gauge");
+                let _ = writeln!(out, "gunrock_{} {v}", m.name);
+            }
+            MetricValue::Histogram { count, sum_ms, buckets, p50, p95, p99 } => {
+                type_line(&mut out, &m.name, "histogram");
+                let (base, labels) = split_labels(&m.name);
+                let mut cumulative = 0u64;
+                for (bound, c) in buckets {
+                    cumulative += c;
+                    let le = if bound.is_infinite() {
+                        "+Inf".to_string()
+                    } else {
+                        format!("{bound}")
+                    };
+                    let _ = writeln!(
+                        out,
+                        "gunrock_{base}_bucket{{{labels}le=\"{le}\"}} {cumulative}"
+                    );
+                }
+                let _ = writeln!(out, "gunrock_{base}_sum{{{labels_t}}} {sum_ms}", labels_t = labels.trim_end_matches(','));
+                let _ = writeln!(out, "gunrock_{base}_count{{{labels_t}}} {count}", labels_t = labels.trim_end_matches(','));
+                for (q, v) in [("0.5", p50), ("0.95", p95), ("0.99", p99)] {
+                    let _ = writeln!(
+                        out,
+                        "gunrock_{base}{{{labels}quantile=\"{q}\"}} {v}"
+                    );
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Emit a `# TYPE` header once per base metric name.
+fn type_line(out: &mut String, name: &str, ty: &str) {
+    let (base, _) = split_labels(name);
+    let header = format!("# TYPE gunrock_{base} {ty}\n");
+    if !out.contains(&header) {
+        out.push_str(&header);
+    }
+}
+
+/// Split `"run_ms{kind=\"bfs\"}"` into `("run_ms", "kind=\"bfs\",")` —
+/// the label part keeps a trailing comma (or is empty) so callers can
+/// append their own labels.
+fn split_labels(name: &str) -> (&str, String) {
+    match name.split_once('{') {
+        Some((base, rest)) => {
+            let inner = rest.trim_end_matches('}');
+            if inner.is_empty() {
+                (base, String::new())
+            } else {
+                (base, format!("{inner},"))
+            }
+        }
+        None => (name, String::new()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+    use super::super::{event, set_enabled, span, test_guard, EventKind, Registry};
+    use super::*;
+
+    #[test]
+    fn chrome_trace_is_wellformed_and_contains_spans() {
+        let _g = test_guard::hold();
+        set_enabled(true);
+        {
+            let _s = span(EventKind::OperatorDispatch, 1, 500);
+            event(EventKind::LbStrategy, 1, 500);
+        }
+        set_enabled(false);
+        let json = chrome_trace_json();
+        assert!(json.starts_with("{\"displayTimeUnit\":\"ms\",\"traceEvents\":["));
+        assert!(json.ends_with("\n]}"));
+        assert!(json.contains("\"name\":\"operator_dispatch\""));
+        assert!(json.contains("\"ph\":\"X\""));
+        assert!(json.contains("\"ph\":\"i\""));
+        assert!(json.contains("\"strategy\":\"twc\""), "tagged args render symbolically");
+        assert!(json.contains("\"name\":\"thread_name\""));
+        // Balanced braces/brackets as a cheap well-formedness check.
+        let opens = json.matches('{').count();
+        let closes = json.matches('}').count();
+        assert_eq!(opens, closes);
+        assert_eq!(json.matches('[').count(), json.matches(']').count());
+    }
+
+    #[test]
+    fn prometheus_text_has_types_labels_and_extras() {
+        let r = Registry::new();
+        r.counter("runs_total{kind=\"bfs\"}").add(5);
+        r.gauge("warp_efficiency_last").set(0.5);
+        let h = r.histogram_ms("run_ms{kind=\"bfs\"}");
+        h.observe_ms(0.2);
+        h.observe_ms(30.0);
+        let text = prometheus_text(&[("service_served_total", 9)], &r.snapshot());
+        assert!(text.contains("# TYPE gunrock_service_served_total counter"));
+        assert!(text.contains("gunrock_service_served_total 9"));
+        assert!(text.contains("gunrock_runs_total{kind=\"bfs\"} 5"));
+        assert!(text.contains("# TYPE gunrock_run_ms histogram"));
+        assert!(text.contains("gunrock_run_ms_bucket{kind=\"bfs\",le=\"0.25\"} 1"));
+        assert!(text.contains("gunrock_run_ms_bucket{kind=\"bfs\",le=\"+Inf\"} 2"));
+        assert!(text.contains("gunrock_run_ms_count{kind=\"bfs\"} 2"));
+        assert!(text.contains("quantile=\"0.5\""));
+        assert!(text.contains("gunrock_warp_efficiency_last 0.5"));
+    }
+
+    #[test]
+    fn split_labels_handles_bare_names() {
+        assert_eq!(split_labels("foo"), ("foo", String::new()));
+        assert_eq!(split_labels("foo{a=\"b\"}"), ("foo", "a=\"b\",".to_string()));
+    }
+}

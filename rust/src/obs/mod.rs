@@ -1,0 +1,621 @@
+//! Process-wide observability: lock-free event tracing, a unified
+//! metrics registry, and exporters (Chrome `trace_event` JSON,
+//! Prometheus-style text, flight recorder).
+//!
+//! Gunrock's contribution is characterization as much as speed — the
+//! paper's §7 explains each optimization with per-iteration frontier
+//! plots and per-stage timings. This module makes that data a first-class
+//! artifact of every run instead of per-layer fragments:
+//!
+//! - **Tracing ring** ([`ring`]): each thread owns a fixed-capacity,
+//!   drop-oldest event buffer (the tracing analog of the pool's scratch
+//!   recycler). Emitting an event is a handful of relaxed stores — no
+//!   lock, no allocation, no blocking — so instrumentation can sit on the
+//!   operator-dispatch and BSP-iteration hot paths. Spans are recorded at
+//!   the existing seams: operator dispatch, BSP iteration boundaries
+//!   (piggybacked on the budget `proceed()` check), load-balance
+//!   strategy / frontier-mode decisions, batcher drain, queue
+//!   admission / shed / coalesce, and `.gsr` decode.
+//! - **Metrics registry** ([`registry`]): counters / gauges / fixed-bucket
+//!   histograms fed by every primitive's `RunResult` (absorbing the
+//!   `WarpCounters`-derived fields) and folded together with the service
+//!   `StatsSnapshot` at export time.
+//! - **Exporters** ([`export`], [`recorder`]): `--trace out.json` writes a
+//!   Chrome trace; the serve protocol's `metrics` command returns a JSON
+//!   stats line plus a Prometheus-style text snapshot; the flight
+//!   recorder dumps the last N ring events on budget trips, batcher
+//!   panics, and load shedding.
+//!
+//! **Gating discipline** (same contract as `util/faults.rs`, but runtime-
+//! switchable because `--trace` must work on release binaries): every
+//! entry point starts with a single relaxed load of a static enable flag
+//! and returns immediately when off — no ring is ever created, no clock
+//! is read, nothing allocates. The `ablation_observability` bench gates
+//! the armed overhead at < 3 %.
+
+pub mod export;
+pub mod recorder;
+pub mod registry;
+pub mod ring;
+
+pub use recorder::{flight_dump, last_flight_dump};
+pub use registry::{metrics, Counter, Gauge, Histogram, MetricSnapshot, MetricValue, Registry};
+pub use ring::{Ring, RingSnapshot};
+
+use std::cell::{Cell, OnceCell};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+/// Poison-immune lock (observability must survive panics elsewhere —
+/// that is when the flight recorder is most needed).
+fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Enable gate + configuration
+// ---------------------------------------------------------------------------
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+/// Capacity for rings created after this point (existing rings keep the
+/// capacity they were born with).
+static RING_CAP: AtomicUsize = AtomicUsize::new(DEFAULT_RING_CAPACITY);
+
+pub const DEFAULT_RING_CAPACITY: usize = 4096;
+
+/// The static enable check every instrumentation point starts with.
+#[inline(always)]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Apply the `obs.*` config knobs: ring capacity first (so rings created
+/// by freshly spawned threads see it), then the enable flag.
+pub fn configure(enable: bool, ring_capacity: usize) {
+    RING_CAP.store(ring_capacity.clamp(Ring::MIN_CAPACITY, 1 << 24), Ordering::Relaxed);
+    ENABLED.store(enable, Ordering::Relaxed);
+}
+
+/// Process-relative monotonic clock, microseconds. All event timestamps
+/// share this epoch so cross-thread ordering in a trace is meaningful.
+pub fn now_us() -> u64 {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    EPOCH.get_or_init(Instant::now).elapsed().as_micros() as u64
+}
+
+// ---------------------------------------------------------------------------
+// Events and spans
+// ---------------------------------------------------------------------------
+
+/// What an event is about. The two payload words `a` / `b` are
+/// kind-specific; [`EventKind::arg_names`] documents them per kind.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum EventKind {
+    /// Decoding fallback for a torn/garbage meta word; never emitted.
+    Unknown = 0,
+    /// Load-balance dispatch of one operator pass. a = strategy tag
+    /// (see [`strategy_name`]), b = input items.
+    OperatorDispatch = 1,
+    /// One participant's share of a pool broadcast. a = logical worker
+    /// count, b = ids this participant claimed.
+    WorkerJob = 2,
+    /// One push-mode BSP iteration. a = input frontier, b = output
+    /// frontier; duration is the iteration wall time.
+    BspIteration = 3,
+    /// One pull-mode BSP iteration (same payloads as [`Self::BspIteration`]).
+    BspIterationPull = 4,
+    /// Load-balance strategy decision. a = strategy tag, b = frontier len.
+    LbStrategy = 5,
+    /// Frontier representation decision. a = 1 dense / 0 sparse,
+    /// b = frontier len.
+    FrontierMode = 6,
+    /// One primitive run end-to-end. a = primitive tag (see
+    /// [`prim_name`]), b = lanes.
+    PrimitiveRun = 7,
+    /// `.gsr` container decode. a = payload bytes, b = 0.
+    GsrDecode = 8,
+    /// Query admitted into the service queue. a = primitive tag,
+    /// b = queue depth after admission.
+    QueueAdmit = 9,
+    /// Query coalesced onto an in-flight ticket. a = primitive tag,
+    /// b = source.
+    QueueCoalesce = 10,
+    /// Query rejected at admission. a = primitive tag, b = queue depth.
+    QueueReject = 11,
+    /// Query shed for queue age. a = primitive tag, b = queued ms.
+    QueueShed = 12,
+    /// Landmark-cache hit at admission. a = primitive tag, b = source.
+    CacheHit = 13,
+    /// Batcher drained one same-kind batch. a = primitive tag,
+    /// b = batch size.
+    BatcherDrain = 14,
+    /// A run budget tripped. a = completed iterations, b = interrupt tag
+    /// (see [`interrupt_name`]).
+    BudgetTrip = 15,
+}
+
+impl EventKind {
+    pub fn from_u8(v: u8) -> EventKind {
+        match v {
+            1 => EventKind::OperatorDispatch,
+            2 => EventKind::WorkerJob,
+            3 => EventKind::BspIteration,
+            4 => EventKind::BspIterationPull,
+            5 => EventKind::LbStrategy,
+            6 => EventKind::FrontierMode,
+            7 => EventKind::PrimitiveRun,
+            8 => EventKind::GsrDecode,
+            9 => EventKind::QueueAdmit,
+            10 => EventKind::QueueCoalesce,
+            11 => EventKind::QueueReject,
+            12 => EventKind::QueueShed,
+            13 => EventKind::CacheHit,
+            14 => EventKind::BatcherDrain,
+            15 => EventKind::BudgetTrip,
+            _ => EventKind::Unknown,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            EventKind::Unknown => "unknown",
+            EventKind::OperatorDispatch => "operator_dispatch",
+            EventKind::WorkerJob => "worker_job",
+            EventKind::BspIteration => "bsp_iteration",
+            EventKind::BspIterationPull => "bsp_iteration_pull",
+            EventKind::LbStrategy => "lb_strategy",
+            EventKind::FrontierMode => "frontier_mode",
+            EventKind::PrimitiveRun => "primitive_run",
+            EventKind::GsrDecode => "gsr_decode",
+            EventKind::QueueAdmit => "queue_admit",
+            EventKind::QueueCoalesce => "queue_coalesce",
+            EventKind::QueueReject => "queue_reject",
+            EventKind::QueueShed => "queue_shed",
+            EventKind::CacheHit => "cache_hit",
+            EventKind::BatcherDrain => "batcher_drain",
+            EventKind::BudgetTrip => "budget_trip",
+        }
+    }
+
+    /// Semantic names for the `a` / `b` payloads (trace-viewer args).
+    pub fn arg_names(self) -> (&'static str, &'static str) {
+        match self {
+            EventKind::OperatorDispatch => ("strategy", "items"),
+            EventKind::WorkerJob => ("workers", "claimed"),
+            EventKind::BspIteration | EventKind::BspIterationPull => {
+                ("input_frontier", "output_frontier")
+            }
+            EventKind::LbStrategy => ("strategy", "frontier_len"),
+            EventKind::FrontierMode => ("dense", "frontier_len"),
+            EventKind::PrimitiveRun => ("primitive", "lanes"),
+            EventKind::GsrDecode => ("bytes", "b"),
+            EventKind::QueueAdmit | EventKind::QueueReject => ("primitive", "queue_depth"),
+            EventKind::QueueCoalesce | EventKind::CacheHit => ("primitive", "source"),
+            EventKind::QueueShed => ("primitive", "queued_ms"),
+            EventKind::BatcherDrain => ("primitive", "batch"),
+            EventKind::BudgetTrip => ("iteration", "interrupt"),
+            EventKind::Unknown => ("a", "b"),
+        }
+    }
+
+    /// Instant events render as `ph:"i"` in Chrome traces; the rest are
+    /// complete (`ph:"X"`) spans.
+    pub fn is_instant(self) -> bool {
+        matches!(
+            self,
+            EventKind::LbStrategy
+                | EventKind::FrontierMode
+                | EventKind::QueueAdmit
+                | EventKind::QueueCoalesce
+                | EventKind::QueueReject
+                | EventKind::QueueShed
+                | EventKind::CacheHit
+                | EventKind::BudgetTrip
+        )
+    }
+}
+
+/// One trace event. `depth` is the span-nesting depth on the emitting
+/// thread at record time (0 = outermost), which lets a reader validate
+/// the span tree independent of timestamps.
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    pub ts_us: u64,
+    pub dur_us: u64,
+    pub kind: EventKind,
+    pub a: u64,
+    pub b: u64,
+    pub tid: u32,
+    pub depth: u16,
+}
+
+// ---------------------------------------------------------------------------
+// Per-thread rings
+// ---------------------------------------------------------------------------
+
+static RINGS: Mutex<Vec<Arc<Ring>>> = Mutex::new(Vec::new());
+static NEXT_TID: AtomicU32 = AtomicU32::new(0);
+
+thread_local! {
+    static LOCAL_RING: OnceCell<Arc<Ring>> = const { OnceCell::new() };
+    static DEPTH: Cell<u16> = const { Cell::new(0) };
+}
+
+/// Run `f` against this thread's ring, creating + registering it on
+/// first use (the only locking step, once per thread lifetime). Returns
+/// `None` if thread-local storage is already torn down.
+fn with_local_ring<R>(f: impl FnOnce(&Ring) -> R) -> Option<R> {
+    LOCAL_RING
+        .try_with(|cell| {
+            let ring = cell.get_or_init(|| {
+                let r = Arc::new(Ring::new(
+                    RING_CAP.load(Ordering::Relaxed),
+                    NEXT_TID.fetch_add(1, Ordering::Relaxed),
+                ));
+                lock(&RINGS).push(Arc::clone(&r));
+                r
+            });
+            f(ring)
+        })
+        .ok()
+}
+
+fn current_depth() -> u16 {
+    DEPTH.try_with(Cell::get).unwrap_or(0)
+}
+
+fn emit_raw(kind: EventKind, ts_us: u64, dur_us: u64, a: u64, b: u64) {
+    let depth = current_depth();
+    let _ = with_local_ring(|ring| {
+        ring.push(&Event { ts_us, dur_us, kind, a, b, tid: ring.tid(), depth });
+    });
+}
+
+/// Record an instant event (duration 0).
+#[inline]
+pub fn event(kind: EventKind, a: u64, b: u64) {
+    if !enabled() {
+        return;
+    }
+    emit_raw(kind, now_us(), 0, a, b);
+}
+
+/// Record a complete event whose duration is already known (the span
+/// started `dur_us` ago): used where a caller measures its own elapsed
+/// time anyway, e.g. the enactor's per-iteration timer.
+#[inline]
+pub fn event_with_dur(kind: EventKind, dur_us: u64, a: u64, b: u64) {
+    if !enabled() {
+        return;
+    }
+    let now = now_us();
+    emit_raw(kind, now.saturating_sub(dur_us), dur_us, a, b);
+}
+
+/// RAII span: records one complete event covering its own lifetime when
+/// dropped. Disarmed (free) when tracing is disabled at creation.
+#[must_use = "a span records its duration when dropped"]
+pub struct Span {
+    kind: EventKind,
+    a: u64,
+    b: u64,
+    start_us: u64,
+    armed: bool,
+}
+
+/// Open a span. The nesting depth recorded with the event is the depth
+/// at open time; nested spans opened while this one is live record
+/// depth + 1, which is how the exporters reconstruct the tree.
+#[inline]
+pub fn span(kind: EventKind, a: u64, b: u64) -> Span {
+    if !enabled() {
+        return Span { kind, a, b, start_us: 0, armed: false };
+    }
+    let armed = DEPTH.try_with(|d| d.set(d.get().saturating_add(1))).is_ok();
+    Span { kind, a, b, start_us: now_us(), armed }
+}
+
+impl Span {
+    /// Update the `b` payload before the span closes (e.g. a result
+    /// count only known at the end).
+    pub fn set_b(&mut self, b: u64) {
+        self.b = b;
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if !self.armed {
+            return;
+        }
+        // Re-balance depth even if tracing was switched off mid-span.
+        let open_depth = DEPTH
+            .try_with(|d| {
+                let v = d.get().saturating_sub(1);
+                d.set(v);
+                v
+            })
+            .unwrap_or(0);
+        if !enabled() {
+            return;
+        }
+        let now = now_us();
+        let dur = now.saturating_sub(self.start_us);
+        let _ = with_local_ring(|ring| {
+            ring.push(&Event {
+                ts_us: self.start_us,
+                dur_us: dur,
+                kind: self.kind,
+                a: self.a,
+                b: self.b,
+                tid: ring.tid(),
+                depth: open_depth,
+            });
+        });
+    }
+}
+
+/// Snapshot every registered ring (one per thread that ever emitted).
+pub fn snapshot_all() -> Vec<RingSnapshot> {
+    lock(&RINGS).iter().map(|r| r.snapshot()).collect()
+}
+
+/// All retained events across every ring, sorted by timestamp.
+pub fn all_events_sorted() -> Vec<Event> {
+    let mut out: Vec<Event> = snapshot_all().into_iter().flat_map(|s| s.events).collect();
+    out.sort_by_key(|e| (e.ts_us, e.tid));
+    out
+}
+
+/// Total events ever written across all rings (including dropped ones);
+/// the bench uses the delta of this as its events/sec denominator.
+pub fn total_events_written() -> u64 {
+    lock(&RINGS).iter().map(|r| r.written()).sum()
+}
+
+// ---------------------------------------------------------------------------
+// Tag tables (stable u64 payload encodings for cross-layer enums; obs
+// sits below those layers, so they map *into* these tags — parity tests
+// live next to each enum)
+// ---------------------------------------------------------------------------
+
+/// Primitive tags: same order as `primitives::api::PrimitiveKind`.
+pub mod tags {
+    pub const BFS: u64 = 0;
+    pub const SSSP: u64 = 1;
+    pub const BC: u64 = 2;
+    pub const PAGERANK: u64 = 3;
+    pub const CC: u64 = 4;
+    pub const TC: u64 = 5;
+    pub const WTF: u64 = 6;
+    pub const PPR: u64 = 7;
+    pub const MST: u64 = 8;
+    pub const COLOR: u64 = 9;
+    pub const MIS: u64 = 10;
+    pub const LP: u64 = 11;
+    pub const RADII: u64 = 12;
+
+    /// Display names, indexed by tag.
+    pub const NAMES: [&str; 13] = [
+        "bfs", "sssp", "bc", "pagerank", "cc", "tc", "wtf", "ppr", "mst", "color", "mis", "lp",
+        "radii",
+    ];
+}
+
+/// Name for a primitive tag (tags beyond the table render as "?").
+pub fn prim_name(tag: u64) -> &'static str {
+    tags::NAMES.get(tag as usize).copied().unwrap_or("?")
+}
+
+/// Name for a load-balance strategy tag (`StrategyKind as u64`).
+pub fn strategy_name(tag: u64) -> &'static str {
+    match tag {
+        0 => "thread_expand",
+        1 => "twc",
+        2 => "lb",
+        3 => "lb_light",
+        4 => "lb_cull",
+        _ => "?",
+    }
+}
+
+/// Name for an interrupt tag (`Interrupt` discriminant order).
+pub fn interrupt_name(tag: u64) -> &'static str {
+    match tag {
+        0 => "deadline",
+        1 => "cancelled",
+        2 => "iteration_budget",
+        _ => "?",
+    }
+}
+
+// ---------------------------------------------------------------------------
+// RunResult feed
+// ---------------------------------------------------------------------------
+
+struct KindMetrics {
+    runs: Counter,
+    interrupted: Counter,
+    edges: Counter,
+    iterations: Counter,
+    latency: Histogram,
+}
+
+struct RunFeed {
+    per_kind: Vec<KindMetrics>,
+    kernel_launches: Counter,
+    atomics: Counter,
+    lanes: Counter,
+    warp_efficiency: Gauge,
+}
+
+fn run_feed() -> &'static RunFeed {
+    static FEED: OnceLock<RunFeed> = OnceLock::new();
+    FEED.get_or_init(|| {
+        let r = metrics();
+        let per_kind = tags::NAMES
+            .iter()
+            .map(|name| KindMetrics {
+                runs: r.counter(&format!("runs_total{{kind=\"{name}\"}}")),
+                interrupted: r.counter(&format!("runs_interrupted_total{{kind=\"{name}\"}}")),
+                edges: r.counter(&format!("edges_visited_total{{kind=\"{name}\"}}")),
+                iterations: r.counter(&format!("bsp_iterations_total{{kind=\"{name}\"}}")),
+                latency: r.histogram_ms(&format!("run_ms{{kind=\"{name}\"}}")),
+            })
+            .collect();
+        RunFeed {
+            per_kind,
+            kernel_launches: r.counter("kernel_launches_total"),
+            atomics: r.counter("atomics_total"),
+            lanes: r.counter("lanes_total"),
+            warp_efficiency: r.gauge("warp_efficiency_last"),
+        }
+    })
+}
+
+/// Feed one primitive `RunResult` into the registry (called by the api
+/// dispatchers for every run; scalar arguments because obs sits below
+/// the enactor). Absorbs the `WarpCounters`-derived fields
+/// (kernel launches, atomics, warp efficiency) that used to be visible
+/// only on the per-run struct.
+#[allow(clippy::too_many_arguments)]
+pub fn record_run(
+    prim_tag: u64,
+    runtime_ms: f64,
+    edges_visited: u64,
+    iterations: u64,
+    lanes: u64,
+    warp_efficiency: f64,
+    kernel_launches: u64,
+    atomics: u64,
+    interrupted: bool,
+) {
+    if !enabled() {
+        return;
+    }
+    let feed = run_feed();
+    let idx = (prim_tag as usize).min(feed.per_kind.len() - 1);
+    let m = &feed.per_kind[idx];
+    m.runs.inc();
+    if interrupted {
+        m.interrupted.inc();
+    }
+    m.edges.add(edges_visited);
+    m.iterations.add(iterations);
+    m.latency.observe_ms(runtime_ms);
+    feed.kernel_launches.add(kernel_launches);
+    feed.atomics.add(atomics);
+    feed.lanes.add(lanes.max(1));
+    feed.warp_efficiency.set(warp_efficiency);
+}
+
+/// Tests that toggle the process-global enable flag serialize on this
+/// guard (same discipline as the `util::faults` tests).
+#[cfg(test)]
+pub(crate) mod test_guard {
+    use std::sync::{Mutex, MutexGuard};
+
+    static GUARD: Mutex<()> = Mutex::new(());
+
+    pub fn hold() -> MutexGuard<'static, ()> {
+        match GUARD.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+    use super::*;
+
+    fn guard() -> std::sync::MutexGuard<'static, ()> {
+        test_guard::hold()
+    }
+
+    #[test]
+    fn disabled_emit_is_a_noop() {
+        let _g = guard();
+        set_enabled(false);
+        let before = total_events_written();
+        for _ in 0..100 {
+            event(EventKind::QueueAdmit, 1, 2);
+            let _s = span(EventKind::OperatorDispatch, 0, 0);
+        }
+        assert_eq!(total_events_written(), before, "disabled mode must emit nothing");
+    }
+
+    #[test]
+    fn span_records_duration_and_depth() {
+        let _g = guard();
+        set_enabled(true);
+        let marker = 0xC0FFEE;
+        {
+            let _outer = span(EventKind::PrimitiveRun, marker, 0);
+            let _inner = span(EventKind::OperatorDispatch, marker, 1);
+        }
+        set_enabled(false);
+        let evs = all_events_sorted();
+        let outer = evs
+            .iter()
+            .find(|e| e.kind == EventKind::PrimitiveRun && e.a == marker)
+            .expect("outer span recorded");
+        let inner = evs
+            .iter()
+            .find(|e| e.kind == EventKind::OperatorDispatch && e.a == marker)
+            .expect("inner span recorded");
+        assert_eq!(outer.depth, 0);
+        assert_eq!(inner.depth, 1);
+        assert!(inner.ts_us >= outer.ts_us);
+        assert!(inner.ts_us + inner.dur_us <= outer.ts_us + outer.dur_us);
+    }
+
+    #[test]
+    fn kind_roundtrips_through_meta_byte() {
+        for v in 0..=20u8 {
+            let k = EventKind::from_u8(v);
+            if k != EventKind::Unknown {
+                assert_eq!(k as u8, v);
+                assert_ne!(k.name(), "unknown");
+            }
+        }
+    }
+
+    #[test]
+    fn tag_names_cover_all_primitives() {
+        assert_eq!(tags::NAMES.len(), 13);
+        assert_eq!(prim_name(tags::PPR), "ppr");
+        assert_eq!(prim_name(999), "?");
+        assert_eq!(strategy_name(4), "lb_cull");
+        assert_eq!(interrupt_name(0), "deadline");
+    }
+
+    #[test]
+    fn record_run_feeds_registry() {
+        let _g = guard();
+        set_enabled(true);
+        record_run(tags::BFS, 1.5, 1000, 7, 1, 0.9, 12, 34, false);
+        record_run(tags::BFS, 2.5, 2000, 8, 1, 0.8, 1, 1, true);
+        set_enabled(false);
+        let snap = metrics().snapshot();
+        let get = |name: &str| {
+            snap.iter().find(|m| m.name == name).map(|m| match m.value {
+                MetricValue::Counter(v) => v,
+                _ => panic!("expected counter {name}"),
+            })
+        };
+        assert!(get("runs_total{kind=\"bfs\"}").unwrap() >= 2);
+        assert!(get("runs_interrupted_total{kind=\"bfs\"}").unwrap() >= 1);
+        assert!(get("edges_visited_total{kind=\"bfs\"}").unwrap() >= 3000);
+    }
+}

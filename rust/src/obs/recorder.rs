@@ -1,0 +1,136 @@
+//! Flight recorder: a post-mortem for typed failures.
+//!
+//! When something trips — a run budget (deadline / cancellation /
+//! iteration cap), a batcher panic, or load shedding — the last N ring
+//! events are formatted into a compact text dump, written to stderr, and
+//! retained in memory so callers (and tests) can fetch the most recent
+//! one with [`last_flight_dump`]. The error value a client sees (PR 7's
+//! typed `QueryError`s) therefore comes with the trace that led up to
+//! it, without anyone having asked for a trace in advance.
+//!
+//! Dumps are no-ops while tracing is disabled. Shed dumps are
+//! rate-limited (sheds arrive in bursts under overload; one dump per
+//! burst is the useful signal) — budget trips and batcher panics are
+//! never rate-limited, they are one-per-failure by construction.
+
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use super::{enabled, lock, now_us};
+
+/// How many trailing events a dump includes.
+pub const FLIGHT_TAIL: usize = 96;
+
+/// Minimum spacing between shed-triggered dumps.
+const SHED_DUMP_MIN_INTERVAL_US: u64 = 500_000;
+
+static LAST_DUMP: Mutex<Option<String>> = Mutex::new(None);
+/// `u64::MAX` = "never dumped for shed yet".
+static LAST_SHED_DUMP_US: AtomicU64 = AtomicU64::new(u64::MAX);
+
+/// Dump the last [`FLIGHT_TAIL`] events across all rings. Returns the
+/// dump text (also written to stderr and retained for
+/// [`last_flight_dump`]), or `None` when tracing is disabled.
+pub fn flight_dump(reason: &str) -> Option<String> {
+    if !enabled() {
+        return None;
+    }
+    let events = super::all_events_sorted();
+    let tail_start = events.len().saturating_sub(FLIGHT_TAIL);
+    let tail = &events[tail_start..];
+    let mut s = String::with_capacity(64 + 80 * tail.len());
+    let _ = writeln!(
+        s,
+        "flight-recorder: {reason} ({} of {} retained events, newest last)",
+        tail.len(),
+        events.len()
+    );
+    for e in tail {
+        let (an, bn) = e.kind.arg_names();
+        let _ = writeln!(
+            s,
+            "  t={:>10}us dur={:>8}us tid={:<3} depth={} {:<18} {}={} {}={}",
+            e.ts_us,
+            e.dur_us,
+            e.tid,
+            e.depth,
+            e.kind.name(),
+            an,
+            e.a,
+            bn,
+            e.b
+        );
+    }
+    *lock(&LAST_DUMP) = Some(s.clone());
+    eprint!("{s}");
+    Some(s)
+}
+
+/// [`flight_dump`] for load shedding: identical, but bursts within
+/// 500 ms collapse into one dump.
+pub fn flight_dump_shed(reason: &str) -> Option<String> {
+    if !enabled() {
+        return None;
+    }
+    let now = now_us();
+    let last = LAST_SHED_DUMP_US.load(Ordering::Relaxed);
+    if last != u64::MAX && now.saturating_sub(last) < SHED_DUMP_MIN_INTERVAL_US {
+        return None;
+    }
+    LAST_SHED_DUMP_US.store(now, Ordering::Relaxed);
+    flight_dump(reason)
+}
+
+/// The most recent dump, if any.
+pub fn last_flight_dump() -> Option<String> {
+    lock(&LAST_DUMP).clone()
+}
+
+/// Forget the retained dump (test isolation).
+pub fn clear_last_dump() {
+    *lock(&LAST_DUMP) = None;
+    LAST_SHED_DUMP_US.store(u64::MAX, Ordering::Relaxed);
+}
+
+#[cfg(test)]
+mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+    use super::super::{event, set_enabled, test_guard, EventKind};
+    use super::*;
+
+    #[test]
+    fn dump_contains_recent_events_and_reason() {
+        let _g = test_guard::hold();
+        set_enabled(true);
+        clear_last_dump();
+        event(EventKind::BudgetTrip, 41, 0);
+        let dump = flight_dump("unit-test trip").expect("armed dump");
+        set_enabled(false);
+        assert!(dump.contains("unit-test trip"));
+        assert!(dump.contains("budget_trip"));
+        assert!(dump.contains("iteration=41"));
+        assert_eq!(last_flight_dump().as_deref(), Some(dump.as_str()));
+    }
+
+    #[test]
+    fn disabled_dump_is_none() {
+        let _g = test_guard::hold();
+        set_enabled(false);
+        clear_last_dump();
+        assert!(flight_dump("nope").is_none());
+        assert!(last_flight_dump().is_none());
+    }
+
+    #[test]
+    fn shed_dumps_are_rate_limited() {
+        let _g = test_guard::hold();
+        set_enabled(true);
+        clear_last_dump();
+        event(EventKind::QueueShed, 1, 2);
+        assert!(flight_dump_shed("first").is_some());
+        assert!(flight_dump_shed("burst").is_none(), "second dump within 500ms suppressed");
+        set_enabled(false);
+        clear_last_dump();
+    }
+}

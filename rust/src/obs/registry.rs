@@ -1,0 +1,313 @@
+//! Unified metrics registry: named counters, gauges, and fixed-bucket
+//! latency histograms behind lock-free handles.
+//!
+//! Registration (name lookup) takes a mutex; it happens once per handle
+//! and the handles themselves are plain atomics, so the record path never
+//! blocks. Histograms keep a small reservoir of recent samples so the
+//! snapshot can report p50/p95/p99 through [`crate::util::stats::percentile`]
+//! alongside the cumulative buckets; the reservoir uses `try_lock` and
+//! drops the sample on contention rather than ever stalling a recorder.
+//!
+//! This registry is the one export surface for numbers that used to be
+//! siloed per layer: every primitive's `RunResult` feeds it (see
+//! [`super::record_run`], which absorbs the `gpu_sim::WarpCounters`-derived
+//! fields), and the query service's `StatsSnapshot` is folded in at
+//! export time by the `metrics` protocol command.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::util::stats;
+
+/// Poison-immune lock: observability must keep working after a panic
+/// elsewhere (that is exactly when the flight recorder matters).
+fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+/// Upper bucket bounds in milliseconds; one extra implicit +inf bucket.
+pub const BUCKET_BOUNDS_MS: [f64; 14] =
+    [0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0, 25.0, 50.0, 100.0, 250.0, 500.0, 1000.0, 2500.0];
+
+/// Recent-sample reservoir size per histogram (for percentile reporting).
+const RECENT_CAP: usize = 512;
+
+/// Monotonic counter handle. Cloning shares the underlying cell.
+#[derive(Clone)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins f64 gauge (stored as bits in an atomic).
+#[derive(Clone)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+struct HistInner {
+    /// One count per `BUCKET_BOUNDS_MS` entry plus a final +inf bucket.
+    counts: [AtomicU64; BUCKET_BOUNDS_MS.len() + 1],
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    recent: Mutex<Recent>,
+}
+
+struct Recent {
+    vals: Vec<f64>,
+    next: usize,
+}
+
+/// Fixed-bucket latency histogram handle (milliseconds).
+#[derive(Clone)]
+pub struct Histogram(Arc<HistInner>);
+
+impl Histogram {
+    fn new() -> Self {
+        Histogram(Arc::new(HistInner {
+            counts: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            recent: Mutex::new(Recent { vals: Vec::new(), next: 0 }),
+        }))
+    }
+
+    pub fn observe_ms(&self, v: f64) {
+        let idx = BUCKET_BOUNDS_MS
+            .iter()
+            .position(|b| v <= *b)
+            .unwrap_or(BUCKET_BOUNDS_MS.len());
+        self.0.counts[idx].fetch_add(1, Ordering::Relaxed);
+        self.0.count.fetch_add(1, Ordering::Relaxed);
+        self.0.sum_us.fetch_add((v.max(0.0) * 1e3) as u64, Ordering::Relaxed);
+        // Reservoir is best-effort: skip under contention, never block.
+        if let Ok(mut r) = self.0.recent.try_lock() {
+            if r.vals.len() < RECENT_CAP {
+                r.vals.push(v);
+            } else {
+                let i = r.next;
+                r.vals[i] = v;
+                r.next = (i + 1) % RECENT_CAP;
+            }
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.0.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum_ms(&self) -> f64 {
+        self.0.sum_us.load(Ordering::Relaxed) as f64 / 1e3
+    }
+
+    /// Percentile over the recent-sample reservoir (nearest-rank via
+    /// `util::stats`, which is NaN-tolerant).
+    pub fn percentile(&self, p: f64) -> f64 {
+        let vals = lock(&self.0.recent).vals.clone();
+        stats::percentile(&vals, p)
+    }
+
+    fn value_snapshot(&self) -> MetricValue {
+        let mut buckets = Vec::with_capacity(BUCKET_BOUNDS_MS.len() + 1);
+        for (i, c) in self.0.counts.iter().enumerate() {
+            let bound = BUCKET_BOUNDS_MS.get(i).copied().unwrap_or(f64::INFINITY);
+            buckets.push((bound, c.load(Ordering::Relaxed)));
+        }
+        MetricValue::Histogram {
+            count: self.count(),
+            sum_ms: self.sum_ms(),
+            buckets,
+            p50: self.percentile(50.0),
+            p95: self.percentile(95.0),
+            p99: self.percentile(99.0),
+        }
+    }
+}
+
+/// One exported metric: registered name (may embed `{label="..."}`
+/// pairs) plus its current value.
+#[derive(Clone, Debug)]
+pub struct MetricSnapshot {
+    pub name: String,
+    pub value: MetricValue,
+}
+
+#[derive(Clone, Debug)]
+pub enum MetricValue {
+    Counter(u64),
+    Gauge(f64),
+    Histogram {
+        count: u64,
+        sum_ms: f64,
+        /// Per-bucket (non-cumulative) counts keyed by upper bound;
+        /// the final entry's bound is `f64::INFINITY`.
+        buckets: Vec<(f64, u64)>,
+        p50: f64,
+        p95: f64,
+        p99: f64,
+    },
+}
+
+/// Find-or-create registry of named metrics. One process-wide instance
+/// (see [`metrics`]); standalone instances exist for tests.
+#[derive(Default)]
+pub struct Registry {
+    counters: Mutex<Vec<(String, Counter)>>,
+    gauges: Mutex<Vec<(String, Gauge)>>,
+    hists: Mutex<Vec<(String, Histogram)>>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Registry::default()
+    }
+
+    /// Find-or-create a counter. Callers should cache the handle; the
+    /// lookup takes the registration lock.
+    pub fn counter(&self, name: &str) -> Counter {
+        let mut list = lock(&self.counters);
+        if let Some((_, c)) = list.iter().find(|(n, _)| n == name) {
+            return c.clone();
+        }
+        let c = Counter(Arc::new(AtomicU64::new(0)));
+        list.push((name.to_string(), c.clone()));
+        c
+    }
+
+    pub fn gauge(&self, name: &str) -> Gauge {
+        let mut list = lock(&self.gauges);
+        if let Some((_, g)) = list.iter().find(|(n, _)| n == name) {
+            return g.clone();
+        }
+        let g = Gauge(Arc::new(AtomicU64::new(0f64.to_bits())));
+        list.push((name.to_string(), g.clone()));
+        g
+    }
+
+    pub fn histogram_ms(&self, name: &str) -> Histogram {
+        let mut list = lock(&self.hists);
+        if let Some((_, h)) = list.iter().find(|(n, _)| n == name) {
+            return h.clone();
+        }
+        let h = Histogram::new();
+        list.push((name.to_string(), h.clone()));
+        h
+    }
+
+    /// Point-in-time copy of every registered metric, in registration
+    /// order (counters, then gauges, then histograms).
+    pub fn snapshot(&self) -> Vec<MetricSnapshot> {
+        let mut out = Vec::new();
+        for (n, c) in lock(&self.counters).iter() {
+            out.push(MetricSnapshot { name: n.clone(), value: MetricValue::Counter(c.get()) });
+        }
+        for (n, g) in lock(&self.gauges).iter() {
+            out.push(MetricSnapshot { name: n.clone(), value: MetricValue::Gauge(g.get()) });
+        }
+        for (n, h) in lock(&self.hists).iter() {
+            out.push(MetricSnapshot { name: n.clone(), value: h.value_snapshot() });
+        }
+        out
+    }
+}
+
+/// The process-wide registry.
+pub fn metrics() -> &'static Registry {
+    static R: OnceLock<Registry> = OnceLock::new();
+    R.get_or_init(Registry::new)
+}
+
+#[cfg(test)]
+mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+    use super::*;
+
+    #[test]
+    fn counter_find_or_create_shares_cell() {
+        let r = Registry::new();
+        let a = r.counter("runs_total{kind=\"bfs\"}");
+        let b = r.counter("runs_total{kind=\"bfs\"}");
+        a.inc();
+        b.add(2);
+        assert_eq!(a.get(), 3);
+        let snap = r.snapshot();
+        assert_eq!(snap.len(), 1);
+        match &snap[0].value {
+            MetricValue::Counter(v) => assert_eq!(*v, 3),
+            other => panic!("expected counter, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn gauge_roundtrips_f64() {
+        let r = Registry::new();
+        let g = r.gauge("warp_efficiency");
+        g.set(0.75);
+        assert_eq!(g.get(), 0.75);
+    }
+
+    #[test]
+    fn histogram_buckets_and_percentiles() {
+        let r = Registry::new();
+        let h = r.histogram_ms("latency_ms");
+        for v in [0.05, 0.2, 0.2, 3.0, 40.0, 9000.0] {
+            h.observe_ms(v);
+        }
+        assert_eq!(h.count(), 6);
+        assert!((h.sum_ms() - 9043.45).abs() < 1.0);
+        match r.snapshot().pop().unwrap().value {
+            MetricValue::Histogram { count, buckets, p50, .. } => {
+                assert_eq!(count, 6);
+                // 0.05 -> le=0.1; 0.2 x2 -> le=0.25; 3.0 -> le=5; 40 -> le=50;
+                // 9000 -> +inf.
+                let get = |bound: f64| {
+                    buckets.iter().find(|(b, _)| *b == bound).map(|(_, c)| *c).unwrap()
+                };
+                assert_eq!(get(0.1), 1);
+                assert_eq!(get(0.25), 2);
+                assert_eq!(get(5.0), 1);
+                assert_eq!(get(50.0), 1);
+                assert_eq!(get(f64::INFINITY), 1);
+                assert!(p50 > 0.0);
+            }
+            other => panic!("expected histogram, got {other:?}"),
+        }
+        // Percentiles come from the recent reservoir via util::stats.
+        assert_eq!(h.percentile(0.0), 0.05);
+        assert_eq!(h.percentile(100.0), 9000.0);
+    }
+
+    #[test]
+    fn reservoir_wraps_at_cap() {
+        let r = Registry::new();
+        let h = r.histogram_ms("wrap");
+        for i in 0..(RECENT_CAP * 2) {
+            h.observe_ms(i as f64);
+        }
+        // Oldest half has been overwritten: min recent sample >= cap.
+        assert!(h.percentile(0.0) >= RECENT_CAP as f64);
+        assert_eq!(h.count(), (RECENT_CAP * 2) as u64);
+    }
+}

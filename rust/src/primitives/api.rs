@@ -20,6 +20,7 @@
 use crate::config::Config;
 use crate::enactor::RunResult;
 use crate::frontier::lanes::LANES;
+use crate::obs;
 use crate::graph::{GraphRep, VertexId};
 use crate::harness::suite;
 use crate::util::budget::{Interrupt, RunBudget};
@@ -68,6 +69,27 @@ impl PrimitiveKind {
     /// runs as one lane-word traversal instead of 64 sequential runs.
     pub fn batchable(self) -> bool {
         matches!(self, PrimitiveKind::Bfs | PrimitiveKind::Sssp | PrimitiveKind::Ppr)
+    }
+
+    /// Stable numeric tag for tracing and metrics — the index into
+    /// [`crate::obs::tags::NAMES`], so `obs::prim_name(kind.tag())`
+    /// renders the same string as `Display`.
+    pub fn tag(self) -> u64 {
+        match self {
+            PrimitiveKind::Bfs => obs::tags::BFS,
+            PrimitiveKind::Sssp => obs::tags::SSSP,
+            PrimitiveKind::Bc => obs::tags::BC,
+            PrimitiveKind::PageRank => obs::tags::PAGERANK,
+            PrimitiveKind::Cc => obs::tags::CC,
+            PrimitiveKind::Tc => obs::tags::TC,
+            PrimitiveKind::Wtf => obs::tags::WTF,
+            PrimitiveKind::Ppr => obs::tags::PPR,
+            PrimitiveKind::Mst => obs::tags::MST,
+            PrimitiveKind::Color => obs::tags::COLOR,
+            PrimitiveKind::Mis => obs::tags::MIS,
+            PrimitiveKind::Lp => obs::tags::LP,
+            PrimitiveKind::Radii => obs::tags::RADII,
+        }
     }
 }
 
@@ -199,6 +221,45 @@ pub enum Output {
     Radii { radius: usize, eccentricities: Vec<usize> },
 }
 
+/// Compact per-run traversal profile derived from the engine's
+/// per-iteration trail: how many BSP iterations ran, the widest frontier
+/// seen, and the push/pull split. Carried on [`Response`] so service
+/// clients see the traversal shape without the full per-iteration vector.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct IterationSummary {
+    /// BSP iterations completed.
+    pub count: usize,
+    /// Largest frontier (input or output side) across iterations.
+    pub max_frontier: usize,
+    /// Iterations run in push (scatter) mode.
+    pub push: usize,
+    /// Iterations run in pull (gather) mode.
+    pub pull: usize,
+    /// Edges touched across all iterations.
+    pub edges: u64,
+}
+
+impl IterationSummary {
+    /// Summarize a run's iteration trail; `None` when the engine recorded
+    /// no iterations (non-iterative kinds such as TC or MST).
+    pub fn from_run(run: &RunResult) -> Option<IterationSummary> {
+        if run.iterations.is_empty() {
+            return None;
+        }
+        let mut s = IterationSummary { count: run.iterations.len(), ..Default::default() };
+        for it in &run.iterations {
+            s.max_frontier = s.max_frontier.max(it.input_frontier).max(it.output_frontier);
+            if it.pull {
+                s.pull += 1;
+            } else {
+                s.push += 1;
+            }
+            s.edges += it.edges_this_iter;
+        }
+        Some(s)
+    }
+}
+
 /// One primitive run's result: the typed output plus the engine stats.
 #[derive(Clone, Debug)]
 pub struct Response {
@@ -209,6 +270,10 @@ pub struct Response {
     /// Engine stats; in batched mode every lane's response shares the
     /// batch's run (`run.lanes` > 1 tells them apart).
     pub run: RunResult,
+    /// Traversal-shape summary of `run.iterations`, filled centrally by
+    /// [`run_request`]/[`run_batch`] (`None` when the engine recorded no
+    /// iteration trail).
+    pub iterations: Option<IterationSummary>,
 }
 
 /// Typed failures for graph-load and query paths: a malformed request is
@@ -395,6 +460,7 @@ impl Primitive for Bfs {
                 pull_iterations: st.pull_iterations,
             },
             run: st.result,
+            iterations: None,
         })
     }
 
@@ -420,6 +486,7 @@ impl Primitive for Bfs {
                         pull_iterations: 0,
                     },
                     run: run.clone(),
+                    iterations: None,
                 });
             }
         }
@@ -438,6 +505,7 @@ impl Primitive for Sssp {
             source: Some(src),
             output: Output::Sssp { dist: prob.dist, preds: prob.preds },
             run,
+            iterations: None,
         })
     }
 
@@ -457,6 +525,7 @@ impl Primitive for Sssp {
                     source: Some(src),
                     output: Output::Sssp { dist: ms.dist[lane].clone(), preds: Vec::new() },
                     run: run.clone(),
+                    iterations: None,
                 });
             }
         }
@@ -475,6 +544,7 @@ impl Primitive for Bc {
             source: Some(src),
             output: Output::Bc { scores: prob.bc_values },
             run,
+            iterations: None,
         })
     }
 }
@@ -494,6 +564,7 @@ impl Primitive for PageRank {
             source: None,
             output: Output::PageRank { ranks: prob.ranks, iterations: prob.iterations },
             run,
+            iterations: None,
         })
     }
 }
@@ -509,6 +580,7 @@ impl Primitive for Cc {
             source: None,
             output: Output::Cc { component: prob.component, num_components: prob.num_components },
             run,
+            iterations: None,
         })
     }
 }
@@ -524,6 +596,7 @@ impl Primitive for Tc {
             source: None,
             output: Output::Tc { triangles: res.triangles },
             run,
+            iterations: None,
         })
     }
 }
@@ -543,6 +616,7 @@ impl Primitive for Wtf {
                 scores: res.ppr_scores,
             },
             run,
+            iterations: None,
         })
     }
 }
@@ -577,6 +651,7 @@ impl Primitive for Ppr {
                     source: Some(user),
                     output: Output::Ppr { scores: col, recommendations },
                     run: run.clone(),
+                    iterations: None,
                 });
             }
         }
@@ -598,6 +673,7 @@ impl Primitive for Mst {
                 total_weight: res.total_weight,
             },
             run,
+            iterations: None,
         })
     }
 }
@@ -613,6 +689,7 @@ impl Primitive for ColorPrim {
             source: None,
             output: Output::Color { num_colors: res.num_colors },
             run,
+            iterations: None,
         })
     }
 }
@@ -628,6 +705,7 @@ impl Primitive for Mis {
             source: None,
             output: Output::Mis { size: in_mis.iter().filter(|&&b| b).count() },
             run,
+            iterations: None,
         })
     }
 }
@@ -646,6 +724,7 @@ impl Primitive for Lp {
                 iterations: res.iterations,
             },
             run,
+            iterations: None,
         })
     }
 }
@@ -667,6 +746,7 @@ impl Primitive for Radii {
             source: None,
             output: Output::Radii { radius, eccentricities },
             run,
+            iterations: None,
         })
     }
 }
@@ -680,6 +760,23 @@ fn effective_config(req: &Request, cfg: &Config) -> Config {
     let mut out = cfg.clone();
     out.budget = cfg.budget.merge(&req.params.budget);
     out
+}
+
+/// Feed one engine run into the metrics registry (no-op when obs is
+/// disabled). Called once per underlying engine invocation, never per
+/// lane, so batch counters reflect traversals actually executed.
+fn feed_obs(kind: PrimitiveKind, run: &RunResult) {
+    obs::record_run(
+        kind.tag(),
+        run.runtime_ms,
+        run.edges_visited,
+        run.num_iterations() as u64,
+        run.lanes.max(1) as u64,
+        run.warp_efficiency,
+        run.kernel_launches,
+        run.atomics,
+        run.interrupted.is_some(),
+    );
 }
 
 /// Map a budget trip recorded by the enactor into the typed error the
@@ -709,7 +806,7 @@ pub fn run_request<G: GraphRep>(
 ) -> Result<Response, QueryError> {
     let cfg = effective_config(req, cfg);
     let cfg = &cfg;
-    let resp = match req.kind {
+    let mut resp = match req.kind {
         PrimitiveKind::Bfs => Bfs::run(g, req, cfg),
         PrimitiveKind::Sssp => Sssp::run(g, req, cfg),
         PrimitiveKind::Bc => Bc::run(g, req, cfg),
@@ -724,6 +821,8 @@ pub fn run_request<G: GraphRep>(
         PrimitiveKind::Lp => Lp::run(g, req, cfg),
         PrimitiveKind::Radii => Radii::run(g, req, cfg),
     }?;
+    resp.iterations = IterationSummary::from_run(&resp.run);
+    feed_obs(req.kind, &resp.run);
     match interrupted_to_error(&resp.run) {
         Some(e) => Err(e),
         None => Ok(resp),
@@ -742,7 +841,7 @@ pub fn run_batch<G: GraphRep>(
     crate::util::faults::maybe_panic_sources(sources);
     let cfg = effective_config(req, cfg);
     let cfg = &cfg;
-    let responses = match req.kind {
+    let mut responses = match req.kind {
         PrimitiveKind::Bfs => Bfs::run_batch(g, sources, req, cfg),
         PrimitiveKind::Sssp => Sssp::run_batch(g, sources, req, cfg),
         PrimitiveKind::Bc => Bc::run_batch(g, sources, req, cfg),
@@ -757,6 +856,16 @@ pub fn run_batch<G: GraphRep>(
         PrimitiveKind::Lp => Lp::run_batch(g, sources, req, cfg),
         PrimitiveKind::Radii => Radii::run_batch(g, sources, req, cfg),
     }?;
+    for r in &mut responses {
+        r.iterations = IterationSummary::from_run(&r.run);
+    }
+    // Lane-mates share one engine run (`run.lanes` clones of it), so
+    // step by the lane width to feed each underlying traversal once.
+    let mut i = 0;
+    while i < responses.len() {
+        feed_obs(req.kind, &responses[i].run);
+        i += responses[i].run.lanes.max(1);
+    }
     // Lane-batched kinds share one traversal per chunk, so a budget trip
     // anywhere fails the whole call; the service layer decides which
     // members actually expired and re-runs the rest.
@@ -789,6 +898,47 @@ mod tests {
             "bogus".parse::<PrimitiveKind>(),
             Err(QueryError::UnknownPrimitive(_))
         ));
+    }
+
+    #[test]
+    fn kind_tags_match_obs_names() {
+        for s in [
+            "bfs", "sssp", "bc", "pagerank", "cc", "tc", "wtf", "ppr", "mst", "color", "mis",
+            "lp", "radii",
+        ] {
+            let k: PrimitiveKind = s.parse().unwrap();
+            assert_eq!(crate::obs::prim_name(k.tag()), k.to_string(), "{s}");
+        }
+    }
+
+    #[test]
+    fn response_carries_iteration_summary() {
+        let g = path5(); // BFS from 0 needs 4 push iterations
+        let resp = run_request(&g, &Request::with_source(PrimitiveKind::Bfs, 0), &Config::default())
+            .unwrap();
+        let summary = resp.iterations.expect("bfs records an iteration trail");
+        assert_eq!(summary.count, resp.run.num_iterations());
+        assert_eq!(summary.push + summary.pull, summary.count);
+        assert!(summary.max_frontier >= 1);
+        assert_eq!(summary.edges, resp.run.iterations.iter().map(|i| i.edges_this_iter).sum());
+        // A summary is never zero-filled: a kind that records no
+        // iteration trail gets None, not a count-0 summary.
+        let tc = run_request(&g, &Request::new(PrimitiveKind::Tc), &Config::default()).unwrap();
+        if let Some(s) = tc.iterations {
+            assert!(s.count > 0, "summary present implies a non-empty trail");
+        }
+    }
+
+    #[test]
+    fn batch_responses_carry_iteration_summaries() {
+        let g = path5();
+        let resps =
+            run_batch(&g, &[0, 1, 2], &Request::new(PrimitiveKind::Bfs), &Config::default())
+                .unwrap();
+        for r in &resps {
+            let s = r.iterations.expect("batched bfs records iterations");
+            assert_eq!(s.count, r.run.num_iterations());
+        }
     }
 
     #[test]

@@ -42,6 +42,7 @@ pub fn bc_from_source<G: GraphRep>(
     src: VertexId,
     config: &Config,
 ) -> (BcProblem, RunResult) {
+    let _span = crate::obs::span(crate::obs::EventKind::PrimitiveRun, crate::obs::tags::BC, 1);
     let n = g.num_vertices();
     let mut enactor = Enactor::new(config.clone());
     enactor.begin_run();

@@ -46,6 +46,7 @@ pub struct BfsStats {
 /// graphs); representations without one traverse push-only even when
 /// direction optimization is enabled.
 pub fn bfs<G: GraphRep>(g: &G, src: VertexId, config: &Config) -> (BfsProblem, BfsStats) {
+    let _span = crate::obs::span(crate::obs::EventKind::PrimitiveRun, crate::obs::tags::BFS, 1);
     let n = g.num_vertices();
     let mut enactor = Enactor::new(config.clone());
     enactor.begin_run();
@@ -265,6 +266,8 @@ pub fn multi_source_bfs<G: GraphRep>(
         (1..=LANES).contains(&k),
         "multi_source_bfs takes 1..={LANES} sources, got {k}"
     );
+    let _span =
+        crate::obs::span(crate::obs::EventKind::PrimitiveRun, crate::obs::tags::BFS, k as u64);
     let n = g.num_vertices();
     let mut enactor = Enactor::new(config.clone());
     enactor.begin_run();

@@ -78,6 +78,7 @@ fn finish(comp: &[AtomicU32]) -> CcProblem {
 /// decode *per edge per round*, so it takes the vertex-grouped walk
 /// instead (see module docs) — no endpoint table either way.
 pub fn cc<G: GraphRep>(g: &G, config: &Config) -> (CcProblem, RunResult) {
+    let _span = crate::obs::span(crate::obs::EventKind::PrimitiveRun, crate::obs::tags::CC, 1);
     let n = g.num_vertices();
     let m = g.num_edges();
     let mut enactor = Enactor::new(config.clone());

@@ -24,6 +24,7 @@ pub struct ColoringResult {
 /// Jones-Plassmann greedy coloring over undirected graphs. Generic over
 /// the graph representation (neighborhood scans decode on the fly).
 pub fn color<G: GraphRep>(g: &G, config: &Config) -> (ColoringResult, RunResult) {
+    let _span = crate::obs::span(crate::obs::EventKind::PrimitiveRun, crate::obs::tags::COLOR, 1);
     let n = g.num_vertices();
     let mut enactor = Enactor::new(config.clone());
     enactor.begin_run();
@@ -96,6 +97,7 @@ pub fn color<G: GraphRep>(g: &G, config: &Config) -> (ColoringResult, RunResult)
 
 /// Maximal independent set via the same local-maxima rounds (Luby-style).
 pub fn mis<G: GraphRep>(g: &G, config: &Config) -> (Vec<bool>, RunResult) {
+    let _span = crate::obs::span(crate::obs::EventKind::PrimitiveRun, crate::obs::tags::MIS, 1);
     let n = g.num_vertices();
     let mut enactor = Enactor::new(config.clone());
     enactor.begin_run();

@@ -23,6 +23,7 @@ pub struct LpResult {
 /// Generic over the graph representation (neighborhood label counts
 /// decode on the fly; no neighbor slices are materialized).
 pub fn label_propagation<G: GraphRep>(g: &G, config: &Config) -> (LpResult, RunResult) {
+    let _span = crate::obs::span(crate::obs::EventKind::PrimitiveRun, crate::obs::tags::LP, 1);
     let n = g.num_vertices();
     let mut enactor = Enactor::new(config.clone());
     enactor.begin_run();

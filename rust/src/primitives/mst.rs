@@ -34,6 +34,7 @@ pub struct MstResult {
 /// by id.
 pub fn mst<G: GraphRep>(g: &G, config: &Config) -> (MstResult, RunResult) {
     assert!(g.is_weighted(), "MST needs edge weights");
+    let _span = crate::obs::span(crate::obs::EventKind::PrimitiveRun, crate::obs::tags::MST, 1);
     let n = g.num_vertices();
     let mut enactor = Enactor::new(config.clone());
     enactor.begin_run();

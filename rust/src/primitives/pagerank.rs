@@ -38,6 +38,8 @@ fn atomic_add_f64(slot: &AtomicU64, add: f64) {
 /// equal worker counts the per-edge visit order matches between
 /// representations, so single-threaded runs are bit-identical.
 pub fn pagerank<G: GraphRep>(g: &G, config: &Config) -> (PageRankProblem, RunResult) {
+    let _span =
+        crate::obs::span(crate::obs::EventKind::PrimitiveRun, crate::obs::tags::PAGERANK, 1);
     let n = g.num_vertices();
     let damp = config.pr_damping;
     let eps = config.pr_epsilon;
@@ -126,6 +128,8 @@ pub fn pagerank<G: GraphRep>(g: &G, config: &Config) -> (PageRankProblem, RunRes
 /// arrays on raw CSR, the compressed in-edge streams on `.gsr` graphs).
 pub fn pagerank_pull<G: GraphRep>(g: &G, config: &Config) -> (PageRankProblem, RunResult) {
     assert!(g.has_in_edges(), "pull PageRank requires an in-edge view");
+    let _span =
+        crate::obs::span(crate::obs::EventKind::PrimitiveRun, crate::obs::tags::PAGERANK, 1);
     let n = g.num_vertices();
     let damp = config.pr_damping;
     let mut enactor = Enactor::new(config.clone());

@@ -44,6 +44,7 @@ fn atomic_min(slot: &AtomicU64, value: u64) -> u64 {
 /// CSR and compressed `.gsr` graphs produce identical distances.
 pub fn sssp<G: GraphRep>(g: &G, src: VertexId, config: &Config) -> (SsspProblem, RunResult) {
     assert!(g.is_weighted(), "SSSP needs edge weights (paper: uniform [1,64])");
+    let _span = crate::obs::span(crate::obs::EventKind::PrimitiveRun, crate::obs::tags::SSSP, 1);
     let n = g.num_vertices();
     let mut enactor = Enactor::new(config.clone());
     enactor.begin_run();
@@ -203,6 +204,8 @@ pub fn multi_source_sssp<G: GraphRep>(
         (1..=LANES).contains(&k),
         "multi_source_sssp takes 1..={LANES} sources, got {k}"
     );
+    let _span =
+        crate::obs::span(crate::obs::EventKind::PrimitiveRun, crate::obs::tags::SSSP, k as u64);
     let n = g.num_vertices();
     let mut enactor = Enactor::new(config.clone());
     enactor.begin_run();

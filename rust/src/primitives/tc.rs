@@ -66,6 +66,7 @@ fn forward_pairs<G: GraphRep>(
 
 /// TC over the full adjacency lists ("tc-intersection-full").
 pub fn tc_intersect_full<G: GraphRep>(g: &G, config: &Config) -> (TcResult, RunResult) {
+    let _span = crate::obs::span(crate::obs::EventKind::PrimitiveRun, crate::obs::tags::TC, 1);
     let mut enactor = Enactor::new(config.clone());
     enactor.begin_run();
     let t = Timer::start();
@@ -92,6 +93,7 @@ pub fn tc_intersect_full<G: GraphRep>(g: &G, config: &Config) -> (TcResult, RunR
 /// subgraph is a fresh run-time CSR whatever the input representation —
 /// it is the algorithm's working set, not a decompression of the input.
 pub fn tc_intersect_filtered<G: GraphRep>(g: &G, config: &Config) -> (TcResult, RunResult) {
+    let _span = crate::obs::span(crate::obs::EventKind::PrimitiveRun, crate::obs::tags::TC, 1);
     let mut enactor = Enactor::new(config.clone());
     enactor.begin_run();
     let t0 = Timer::start();

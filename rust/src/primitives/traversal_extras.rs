@@ -83,6 +83,8 @@ pub fn estimate_radius<G: GraphRep>(
     config: &Config,
     seed: u64,
 ) -> (usize, Vec<usize>) {
+    let _span =
+        crate::obs::span(crate::obs::EventKind::PrimitiveRun, crate::obs::tags::RADII, 1);
     let mut rng = Pcg32::new(seed);
     let n = g.num_vertices();
     let mut eccs = Vec::with_capacity(k);

@@ -186,6 +186,11 @@ pub fn ppr_batch<G: GraphRep>(
     damp: f64,
     config: &Config,
 ) -> (Vec<Vec<f64>>, RunResult) {
+    let _span = crate::obs::span(
+        crate::obs::EventKind::PrimitiveRun,
+        crate::obs::tags::PPR,
+        users.len() as u64,
+    );
     let mut enactor = Enactor::new(config.clone());
     enactor.begin_run();
     let t = Timer::start();
@@ -286,6 +291,7 @@ pub fn wtf<G: GraphRep>(
     num_recs: usize,
     config: &Config,
 ) -> (WtfResult, RunResult) {
+    let _span = crate::obs::span(crate::obs::EventKind::PrimitiveRun, crate::obs::tags::WTF, 1);
     let mut enactor = Enactor::new(config.clone());
     enactor.begin_run();
 

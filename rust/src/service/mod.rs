@@ -59,6 +59,7 @@ use std::time::{Duration, Instant};
 
 use crate::config::Config;
 use crate::graph::{GraphRep, VertexId};
+use crate::obs;
 use crate::primitives::api::{self, Output, PrimitiveKind, QueryError, Request};
 use crate::primitives::{bfs, sssp};
 use crate::util::budget::RunBudget;
@@ -178,22 +179,42 @@ struct QueueState {
     stopped: bool,
 }
 
-/// Counters surfaced by [`QueryService::stats`].
+/// Counters surfaced by [`QueryService::stats`], kept under one mutex so
+/// a snapshot is a linearization point rather than eight independent
+/// relaxed loads (which could observe e.g. `cache_hits` bumped but
+/// `served` not yet — a skew that made hit-rate computations lie).
+/// Counter bumps are rare relative to engine work (one or two per query,
+/// none inside a traversal), so the mutex is not on any hot path.
 #[derive(Default)]
-struct Stats {
-    served: AtomicU64,
-    batches: AtomicU64,
-    cache_hits: AtomicU64,
-    coalesced: AtomicU64,
-    rejected: AtomicU64,
-    shed: AtomicU64,
-    retries: AtomicU64,
-    batcher_restarts: AtomicU64,
+struct Stats(Mutex<StatsSnapshot>);
+
+impl Stats {
+    /// Apply one consistent counter update (all fields move together).
+    fn update(&self, f: impl FnOnce(&mut StatsSnapshot)) {
+        f(&mut lock(&self.0));
+    }
+
+    fn snapshot(&self) -> StatsSnapshot {
+        *lock(&self.0)
+    }
 }
 
 /// Snapshot of the service counters.
+///
+/// Snapshots are internally consistent (taken under the counters' own
+/// lock), which makes these invariants hold at *every* observation, not
+/// just after quiescence:
+///
+/// - `cache_hits <= served` — a cache hit bumps both in one update;
+/// - `served + coalesced <= submitted` — a query is counted submitted
+///   before it can resolve or join a ticket;
+/// - `rejected + shed <= submitted` — failures come from admitted
+///   submissions only.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct StatsSnapshot {
+    /// Valid queries that entered admission (cache hit, coalesce, queue,
+    /// or rejection) — malformed/out-of-range queries don't count.
+    pub submitted: u64,
     /// Queries answered (from engine runs or the cache).
     pub served: u64,
     /// Lane-batched engine runs dispatched.
@@ -365,10 +386,14 @@ impl<G: GraphRep + Send + Sync + 'static> QueryService<G> {
                 }
             }
         }
+        inner.stats.update(|s| s.submitted += 1);
         // Cache fast path.
         if let Some(col) = lock(&inner.cache).get(&(q.kind, q.source)) {
-            inner.stats.cache_hits.fetch_add(1, Ordering::Relaxed);
-            inner.stats.served.fetch_add(1, Ordering::Relaxed);
+            inner.stats.update(|s| {
+                s.cache_hits += 1;
+                s.served += 1;
+            });
+            obs::event(obs::EventKind::CacheHit, q.kind.tag(), q.source as u64);
             let ticket = Ticket::new();
             ticket.resolve(Ok(col));
             return Ok(ticket);
@@ -381,17 +406,20 @@ impl<G: GraphRep + Send + Sync + 'static> QueryService<G> {
         if let Some(p) =
             queue.pending.iter().find(|p| p.kind == q.kind && p.source == q.source)
         {
-            inner.stats.coalesced.fetch_add(1, Ordering::Relaxed);
+            inner.stats.update(|s| s.coalesced += 1);
+            obs::event(obs::EventKind::QueueCoalesce, q.kind.tag(), q.source as u64);
             return Ok(Arc::clone(&p.ticket));
         }
         // Admission control: global bound first, then the per-kind cap.
         if queue.pending.len() >= inner.cfg.service_max_queue {
-            inner.stats.rejected.fetch_add(1, Ordering::Relaxed);
+            inner.stats.update(|s| s.rejected += 1);
+            obs::event(obs::EventKind::QueueReject, q.kind.tag(), queue.pending.len() as u64);
             return Err(QueryError::QueueFull { limit: inner.cfg.service_max_queue });
         }
         let cap = inner.kind_cap();
         if queue.pending.iter().filter(|p| p.kind == q.kind).count() >= cap {
-            inner.stats.rejected.fetch_add(1, Ordering::Relaxed);
+            inner.stats.update(|s| s.rejected += 1);
+            obs::event(obs::EventKind::QueueReject, q.kind.tag(), queue.pending.len() as u64);
             return Err(QueryError::QueueFull { limit: cap });
         }
         let now = Instant::now();
@@ -407,6 +435,7 @@ impl<G: GraphRep + Send + Sync + 'static> QueryService<G> {
             enqueued_at: now,
             deadline,
         });
+        obs::event(obs::EventKind::QueueAdmit, q.kind.tag(), queue.pending.len() as u64);
         drop(queue);
         inner.work_cv.notify_one();
         Ok(ticket)
@@ -429,19 +458,79 @@ impl<G: GraphRep + Send + Sync + 'static> QueryService<G> {
         lock(&inner.cache).clear();
     }
 
-    /// Current counter snapshot.
+    /// Current counter snapshot (internally consistent — see
+    /// [`StatsSnapshot`] for the invariants this guarantees).
     pub fn stats(&self) -> StatsSnapshot {
-        let s = &self.inner.stats;
-        StatsSnapshot {
-            served: s.served.load(Ordering::Relaxed),
-            batches: s.batches.load(Ordering::Relaxed),
-            cache_hits: s.cache_hits.load(Ordering::Relaxed),
-            coalesced: s.coalesced.load(Ordering::Relaxed),
-            rejected: s.rejected.load(Ordering::Relaxed),
-            shed: s.shed.load(Ordering::Relaxed),
-            retries: s.retries.load(Ordering::Relaxed),
-            batcher_restarts: s.batcher_restarts.load(Ordering::Relaxed),
+        self.inner.stats.snapshot()
+    }
+
+    /// Entries currently queued (coalesced waiters count once).
+    pub fn queue_depth(&self) -> usize {
+        lock(&self.inner.queue).pending.len()
+    }
+
+    /// Queued entries per primitive kind, for the metrics exports.
+    pub fn pending_by_kind(&self) -> Vec<(PrimitiveKind, usize)> {
+        let queue = lock(&self.inner.queue);
+        let mut counts: Vec<(PrimitiveKind, usize)> = Vec::new();
+        for p in &queue.pending {
+            match counts.iter_mut().find(|(k, _)| *k == p.kind) {
+                Some((_, n)) => *n += 1,
+                None => counts.push((p.kind, 1)),
+            }
         }
+        counts
+    }
+
+    /// One-line JSON metrics snapshot: queue depth, per-kind pending
+    /// counts, and the full counter set. The serve protocol's `metrics`
+    /// command prints this verbatim.
+    pub fn metrics_json(&self) -> String {
+        let s = self.stats();
+        let pending = self.pending_by_kind();
+        let mut per_kind = String::new();
+        for (i, (k, n)) in pending.iter().enumerate() {
+            if i > 0 {
+                per_kind.push(',');
+            }
+            per_kind.push_str(&format!("\"{k}\":{n}"));
+        }
+        format!(
+            "{{\"queue_depth\":{},\"pending\":{{{}}},\"submitted\":{},\"served\":{},\
+             \"batches\":{},\"cache_hits\":{},\"coalesced\":{},\"rejected\":{},\
+             \"shed\":{},\"retries\":{},\"batcher_restarts\":{}}}",
+            self.queue_depth(),
+            per_kind,
+            s.submitted,
+            s.served,
+            s.batches,
+            s.cache_hits,
+            s.coalesced,
+            s.rejected,
+            s.shed,
+            s.retries,
+            s.batcher_restarts,
+        )
+    }
+
+    /// Prometheus-style text exposition: the service counters plus the
+    /// process-wide metrics registry (per-primitive run counters and
+    /// latency histograms when obs is armed).
+    pub fn metrics_prometheus(&self) -> String {
+        let s = self.stats();
+        let extras = [
+            ("service_queue_depth", self.queue_depth() as u64),
+            ("service_submitted_total", s.submitted),
+            ("service_served_total", s.served),
+            ("service_batches_total", s.batches),
+            ("service_cache_hits_total", s.cache_hits),
+            ("service_coalesced_total", s.coalesced),
+            ("service_rejected_total", s.rejected),
+            ("service_shed_total", s.shed),
+            ("service_retries_total", s.retries),
+            ("service_batcher_restarts_total", s.batcher_restarts),
+        ];
+        obs::export::prometheus_text(&extras, &obs::metrics().snapshot())
     }
 
     /// Stop the batcher and fail queued tickets with `ServiceStopped`.
@@ -505,7 +594,8 @@ fn supervise_batcher<G: GraphRep + Send + Sync + 'static>(inner: &Inner<G>) {
         match std::panic::catch_unwind(AssertUnwindSafe(|| batcher_loop(inner))) {
             Ok(()) => return, // clean stop
             Err(_) => {
-                inner.stats.batcher_restarts.fetch_add(1, Ordering::Relaxed);
+                inner.stats.update(|s| s.batcher_restarts += 1);
+                obs::flight_dump("batcher panic: supervisor restarting the drain loop");
                 if lock(&inner.queue).stopped {
                     return;
                 }
@@ -572,9 +662,16 @@ fn batcher_loop<G: GraphRep + Send + Sync + 'static>(inner: &Inner<G>) {
             (batch, shed)
         };
 
+        if !shed.is_empty() {
+            obs::recorder::flight_dump_shed(&format!(
+                "load shedding: {} queries aged out of the queue",
+                shed.len()
+            ));
+        }
         for p in shed {
             let queued_ms = p.enqueued_at.elapsed().as_millis() as u64;
-            inner.stats.shed.fetch_add(1, Ordering::Relaxed);
+            inner.stats.update(|s| s.shed += 1);
+            obs::event(obs::EventKind::QueueShed, p.kind.tag(), queued_ms);
             p.ticket.resolve(Err(QueryError::Overloaded { queued_ms }));
         }
         if batch.is_empty() {
@@ -587,7 +684,7 @@ fn batcher_loop<G: GraphRep + Send + Sync + 'static>(inner: &Inner<G>) {
             (Arc::clone(&g), inner.epoch.load(Ordering::SeqCst))
         };
         run_batch_and_resolve(inner, &graph, epoch, batch);
-        inner.stats.batches.fetch_add(1, Ordering::Relaxed);
+        inner.stats.update(|s| s.batches += 1);
     }
 }
 
@@ -608,7 +705,7 @@ fn resolve_one<G>(inner: &Inner<G>, epoch: u64, p: &Pending, output: Output) {
     if inner.epoch.load(Ordering::SeqCst) == epoch {
         lock(&inner.cache).insert((p.kind, p.source), col.clone());
     }
-    inner.stats.served.fetch_add(1, Ordering::Relaxed);
+    inner.stats.update(|s| s.served += 1);
     p.ticket.resolve(Ok(col));
 }
 
@@ -626,6 +723,11 @@ fn run_batch_and_resolve<G: GraphRep + Send + Sync + 'static>(
     epoch: u64,
     batch: Vec<Pending>,
 ) {
+    let _span = obs::span(
+        obs::EventKind::BatcherDrain,
+        batch.first().map(|p| p.kind.tag()).unwrap_or(0),
+        batch.len() as u64,
+    );
     let mut guard = DrainGuard { entries: batch };
     faults::maybe_panic(faults::Seam::BatcherDrain);
     let mut attempt: u32 = 0;
@@ -680,7 +782,7 @@ fn run_batch_and_resolve<G: GraphRep + Send + Sync + 'static>(
             Err(_panic) => {
                 if attempt < inner.cfg.service_max_retries {
                     attempt += 1;
-                    inner.stats.retries.fetch_add(1, Ordering::Relaxed);
+                    inner.stats.update(|s| s.retries += 1);
                     std::thread::sleep(backoff(attempt));
                     continue;
                 }
@@ -894,6 +996,36 @@ mod tests {
         let t = Arc::clone(&p.ticket);
         drop(DrainGuard { entries: vec![p] });
         assert!(matches!(t.wait().unwrap_err(), QueryError::Internal(_)));
+    }
+
+    #[test]
+    fn metrics_json_reports_queue_depth_and_counters() {
+        let mut cfg = Config::default();
+        cfg.service_cache = 0;
+        let svc = QueryService::new_unstarted(path6(), cfg);
+        svc.submit_async(Query::bfs(0, 5)).unwrap();
+        svc.submit_async(Query::ppr(1)).unwrap();
+        let json = svc.metrics_json();
+        assert!(json.contains("\"queue_depth\":2"), "{json}");
+        assert!(json.contains("\"bfs\":1"), "{json}");
+        assert!(json.contains("\"ppr\":1"), "{json}");
+        assert!(json.contains("\"submitted\":2"), "{json}");
+        assert!(json.contains("\"batcher_restarts\":0"), "{json}");
+        let prom = svc.metrics_prometheus();
+        assert!(prom.contains("gunrock_service_queue_depth 2"), "{prom}");
+        assert!(prom.contains("gunrock_service_submitted_total 2"), "{prom}");
+        assert!(prom.contains("# TYPE gunrock_service_queue_depth counter"), "{prom}");
+    }
+
+    #[test]
+    fn stats_snapshot_is_internally_consistent() {
+        let svc = QueryService::start(path6(), Config::default());
+        assert_eq!(svc.submit(Query::bfs(0, 5)).unwrap(), Answer::Hops(Some(5)));
+        assert_eq!(svc.submit(Query::bfs(0, 2)).unwrap(), Answer::Hops(Some(2)));
+        let s = svc.stats();
+        assert!(s.cache_hits <= s.served, "{s:?}");
+        assert!(s.served + s.coalesced <= s.submitted, "{s:?}");
+        assert_eq!(s.submitted, 2, "{s:?}");
     }
 
     #[test]

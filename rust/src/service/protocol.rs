@@ -1,8 +1,11 @@
 //! The `serve` line protocol, factored out of the CLI so resilience is
 //! testable: one query per line (`bfs <src> <dst>`, `sssp <src> <dst>`,
-//! `ppr <user>`, `stats`, `quit`). A malformed, oversized, or non-UTF-8
-//! line produces an `error:` reply and a `malformed_requests` tick — the
-//! loop and the service stay up; only EOF or `quit` end the session.
+//! `ppr <user>`, `stats`, `metrics`, `quit`). A malformed, oversized, or
+//! non-UTF-8 line produces an `error:` reply and a `malformed_requests`
+//! tick — the loop and the service stay up; only EOF or `quit` end the
+//! session. `metrics` prints a one-line JSON snapshot (queue depth,
+//! per-kind pending, counters) followed by the Prometheus-style text
+//! exposition of the process metrics registry.
 
 use std::io::{self, BufRead, Write};
 
@@ -122,8 +125,9 @@ where
                 let s = svc.stats();
                 writeln!(
                     out,
-                    "served={} batches={} cache_hits={} coalesced={} rejected={} \
-                     shed={} retries={} batcher_restarts={} malformed={}",
+                    "submitted={} served={} batches={} cache_hits={} coalesced={} \
+                     rejected={} shed={} retries={} batcher_restarts={} malformed={}",
+                    s.submitted,
                     s.served,
                     s.batches,
                     s.cache_hits,
@@ -134,6 +138,11 @@ where
                     s.batcher_restarts,
                     stats.malformed_requests
                 )?;
+                continue;
+            }
+            ["metrics"] => {
+                writeln!(out, "{}", svc.metrics_json())?;
+                out.write_all(svc.metrics_prometheus().as_bytes())?;
                 continue;
             }
             ["bfs", src, dst] => {
@@ -248,10 +257,27 @@ mod tests {
         // no trailing newline on the last line either
         let (stats, lines) = run(&svc, "bfs 5 0\nstats");
         assert_eq!(lines[0], "unreachable");
-        assert!(lines[1].starts_with("served="), "{}", lines[1]);
+        assert!(lines[1].starts_with("submitted="), "{}", lines[1]);
+        assert!(lines[1].contains("served="), "{}", lines[1]);
         assert!(lines[1].contains("malformed=0"), "{}", lines[1]);
         assert_eq!(stats.answered, 1);
         assert_eq!(stats.errors, 0);
+    }
+
+    #[test]
+    fn metrics_command_returns_json_then_prometheus_text() {
+        let svc = start_path6();
+        let (stats, lines) = run(&svc, "bfs 0 5\nmetrics\nquit\n");
+        assert_eq!(lines[0], "5 hops");
+        assert!(lines[1].starts_with("{\"queue_depth\":"), "{}", lines[1]);
+        assert!(lines[1].contains("\"served\":1"), "{}", lines[1]);
+        assert!(lines[1].contains("\"batcher_restarts\":0"), "{}", lines[1]);
+        assert!(
+            lines.iter().any(|l| l.starts_with("gunrock_service_served_total")),
+            "{lines:?}"
+        );
+        assert_eq!(stats.answered, 1);
+        assert_eq!(stats.errors, 0, "metrics is a command, not a query error");
     }
 
     #[test]

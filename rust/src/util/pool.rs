@@ -315,11 +315,18 @@ fn worker_loop(shared: &Shared) {
 /// Claim logical ids until the job is exhausted, running `f` for each.
 /// Every participant (pool threads and the dispatcher) runs this loop.
 fn run_job(job: &Job, shared: &Shared) {
+    // Trace seam: one span per participant per broadcast, recorded into
+    // the participant's own ring (this is what makes the rings genuinely
+    // per-worker). `b` is patched to the number of ids claimed.
+    let mut span = crate::obs::span(crate::obs::EventKind::WorkerJob, job.count as u64, 0);
+    let mut claimed = 0u64;
     loop {
         let id = job.next.fetch_add(1, Ordering::Relaxed);
         if id >= job.count {
             break;
         }
+        claimed += 1;
+        span.set_b(claimed);
         // SAFETY: id < count, so the dispatcher is still inside
         // `broadcast` waiting on the barrier and the borrow behind `f`
         // is alive (see Job docs).

@@ -19,13 +19,15 @@ pub fn geomean(xs: &[f64]) -> f64 {
     (log_sum / xs.len() as f64).exp()
 }
 
-/// p-th percentile (0..=100), nearest-rank on a sorted copy.
+/// p-th percentile (0..=100), nearest-rank on a sorted copy. NaN inputs
+/// are tolerated (total order: NaN sorts after +inf) instead of aborting
+/// mid-report — timing data can produce NaN through 0/0 rate math.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     let rank = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
     v[rank.min(v.len() - 1)]
 }
@@ -79,6 +81,18 @@ mod tests {
         assert_eq!(median(&xs), 3.0);
         assert_eq!(percentile(&xs, 0.0), 1.0);
         assert_eq!(percentile(&xs, 100.0), 5.0);
+    }
+
+    #[test]
+    fn percentile_tolerates_nan() {
+        // Regression: `sort_by(partial_cmp().unwrap())` aborted on NaN.
+        // total_cmp sorts NaN after +inf, so finite percentiles of a
+        // mostly-finite sample stay sensible and nothing panics.
+        let xs = [2.0, f64::NAN, 1.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(median(&xs), 2.0);
+        assert!(percentile(&xs, 100.0).is_nan());
+        assert!(percentile(&[f64::NAN], 50.0).is_nan());
     }
 
     #[test]

@@ -1,0 +1,241 @@
+//! Observability integration: the tracing rings, span tree, flight
+//! recorder, and Chrome exporter exercised through the public surface
+//! the way the CLI and service use them.
+//!
+//! Every test here toggles the process-global enable flag, so they all
+//! serialize on one local mutex (the crate-internal test guard is not
+//! visible to integration tests) and disarm tracing before returning.
+
+use std::sync::{Mutex, MutexGuard};
+
+use gunrock::config::Config;
+use gunrock::graph::builder;
+use gunrock::obs::{self, EventKind};
+use gunrock::primitives::api::{self, PrimitiveKind, QueryError, Request};
+use gunrock::util::budget::RunBudget;
+
+static GUARD: Mutex<()> = Mutex::new(());
+
+fn hold() -> MutexGuard<'static, ()> {
+    match GUARD.lock() {
+        Ok(g) => g,
+        Err(p) => p.into_inner(),
+    }
+}
+
+fn path_graph(n: u32) -> gunrock::graph::Csr {
+    let edges: Vec<(u32, u32)> = (0..n - 1).map(|v| (v, v + 1)).collect();
+    builder::from_edges(n as usize, &edges)
+}
+
+/// Concurrent writers on per-thread rings: every event written by a
+/// thread goes to that thread's own ring, and once a ring wraps, a
+/// quiescent snapshot retains the newest `capacity - 1` events — the
+/// drop-oldest contract loses at most one capacity window plus the one
+/// conservatively-discarded slot, never more.
+#[test]
+fn concurrent_writers_never_lose_more_than_capacity() {
+    let _g = hold();
+    const CAP: usize = 64;
+    const WRITES: u64 = 1000;
+    const THREADS: u64 = 4;
+    obs::configure(true, CAP);
+    let before: Vec<u32> = obs::snapshot_all().iter().map(|s| s.tid).collect();
+    std::thread::scope(|scope| {
+        for t in 0..THREADS {
+            scope.spawn(move || {
+                for i in 0..WRITES {
+                    obs::event(EventKind::QueueAdmit, t, i);
+                }
+            });
+        }
+    });
+    obs::set_enabled(false);
+    let fresh: Vec<_> = obs::snapshot_all()
+        .into_iter()
+        .filter(|s| !before.contains(&s.tid))
+        .collect();
+    assert_eq!(fresh.len(), THREADS as usize, "one new ring per writer thread");
+    for snap in &fresh {
+        assert_eq!(snap.written, WRITES, "nothing blocks, nothing is miscounted");
+        assert!(
+            snap.events.len() >= CAP - 1 && snap.events.len() <= CAP,
+            "retained {} of {} with capacity {}",
+            snap.events.len(),
+            snap.written,
+            CAP
+        );
+        // The retained suffix is the *newest* events, in order: the b
+        // payloads must be contiguous and end at WRITES - 1.
+        let first = WRITES - snap.events.len() as u64;
+        for (j, e) in snap.events.iter().enumerate() {
+            assert_eq!(e.kind, EventKind::QueueAdmit);
+            assert_eq!(e.b, first + j as u64, "drop-oldest must evict from the front");
+        }
+    }
+}
+
+/// Span nesting: the recorded depth fields plus timestamps reconstruct a
+/// valid tree — every non-root span is contained in some span one level
+/// shallower on the same thread.
+#[test]
+fn span_nesting_reconstructs_valid_tree() {
+    let _g = hold();
+    obs::configure(true, obs::DEFAULT_RING_CAPACITY);
+    // Fresh thread = fresh ring, so the tree under test is the whole ring.
+    let snap = std::thread::spawn(|| {
+        {
+            let _root = obs::span(EventKind::PrimitiveRun, obs::tags::BFS, 1);
+            {
+                let _mid = obs::span(EventKind::BspIteration, 10, 20);
+                let _leaf = obs::span(EventKind::OperatorDispatch, 2, 100);
+            }
+            let _sibling = obs::span(EventKind::BspIteration, 30, 40);
+        }
+        obs::snapshot_all()
+            .into_iter()
+            .max_by_key(|s| s.tid)
+            .expect("this thread just created a ring")
+    })
+    .join()
+    .expect("tracer thread");
+    obs::set_enabled(false);
+    let evs = &snap.events;
+    assert_eq!(evs.len(), 4, "four spans, four events: {evs:?}");
+    let depth_of = |kind: EventKind, a: u64| {
+        evs.iter().find(|e| e.kind == kind && e.a == a).expect("span recorded").depth
+    };
+    assert_eq!(depth_of(EventKind::PrimitiveRun, obs::tags::BFS), 0);
+    assert_eq!(depth_of(EventKind::BspIteration, 10), 1);
+    assert_eq!(depth_of(EventKind::OperatorDispatch, 2), 2);
+    assert_eq!(depth_of(EventKind::BspIteration, 30), 1, "sibling re-nests at the same depth");
+    // Structural validity: each depth-d event is inside a depth d-1 event.
+    for e in evs.iter().filter(|e| e.depth > 0) {
+        let parent = evs.iter().find(|p| {
+            p.depth == e.depth - 1
+                && p.ts_us <= e.ts_us
+                && p.ts_us + p.dur_us >= e.ts_us + e.dur_us
+        });
+        assert!(parent.is_some(), "no enclosing parent for {e:?} in {evs:?}");
+    }
+}
+
+/// Disabled mode is the default and must emit nothing: no events, no
+/// registry samples, no flight dumps, regardless of how hard the
+/// instrumented paths are driven.
+#[test]
+fn disabled_mode_emits_nothing() {
+    let _g = hold();
+    obs::configure(false, obs::DEFAULT_RING_CAPACITY);
+    obs::recorder::clear_last_dump();
+    let written_before = obs::total_events_written();
+    let g = path_graph(64);
+    let cfg = Config::default();
+    let resp = api::run_request(&g, &Request::with_source(PrimitiveKind::Bfs, 0), &cfg)
+        .expect("plain bfs");
+    assert!(resp.run.num_iterations() > 0, "the run itself must do real work");
+    obs::event(EventKind::QueueAdmit, 0, 0);
+    let _unarmed = obs::span(EventKind::PrimitiveRun, 0, 0);
+    assert!(obs::flight_dump("should be a no-op").is_none());
+    assert_eq!(obs::total_events_written(), written_before, "disabled mode wrote events");
+    assert!(obs::last_flight_dump().is_none());
+}
+
+/// A run-budget deadline trip dumps the flight recorder, and the dump
+/// names the tripping iteration — the same count the typed error carries
+/// back to the caller.
+#[test]
+fn deadline_trip_dumps_flight_recorder_with_tripping_iteration() {
+    let _g = hold();
+    obs::configure(true, 8192);
+    obs::recorder::clear_last_dump();
+    // A long path forces one BSP iteration per hop: a 1 ms deadline trips
+    // deep inside the run, long before the 200k iterations complete.
+    let g = path_graph(200_000);
+    let cfg = Config::default();
+    let mut req = Request::with_source(PrimitiveKind::Bfs, 0);
+    req.params.budget = RunBudget::with_deadline_ms(1);
+    let err = api::run_request(&g, &req, &cfg).expect_err("1ms deadline must trip");
+    obs::set_enabled(false);
+    let completed = match err {
+        QueryError::DeadlineExceeded { completed_iterations, .. } => completed_iterations,
+        other => panic!("expected DeadlineExceeded, got {other:?}"),
+    };
+    let dump = obs::last_flight_dump().expect("trip must leave a flight dump");
+    assert!(dump.contains("budget trip: deadline"), "dump reason names the interrupt:\n{dump}");
+    assert!(dump.contains("budget_trip"), "dump tail contains the trip event:\n{dump}");
+    assert!(
+        dump.contains(&format!("budget trip: deadline after {completed} completed iterations")),
+        "dump must name the tripping iteration ({completed}):\n{dump}"
+    );
+    // The events leading up to the trip are in the tail too.
+    assert!(dump.contains("bsp_iteration"), "dump shows the iterations before the trip:\n{dump}");
+}
+
+/// The Chrome exporter reflects a real run: at least one operator
+/// dispatch span per BSP iteration, and the written file is well-formed
+/// trace-event JSON.
+#[test]
+fn chrome_trace_has_a_dispatch_span_per_bsp_iteration() {
+    let _g = hold();
+    // Big enough to retain an entire small run across all rings.
+    obs::configure(true, 1 << 15);
+    // A path frontier never densifies, so every iteration goes through a
+    // push-mode advance — one load-balance dispatch per iteration.
+    let g = path_graph(64);
+    let cfg = Config::default();
+    let resp = api::run_request(&g, &Request::with_source(PrimitiveKind::Bfs, 0), &cfg)
+        .expect("bfs under tracing");
+    obs::set_enabled(false);
+    let iterations = resp.run.num_iterations();
+    assert!(iterations >= 63, "path-63 bfs runs one iteration per hop");
+    let json = obs::export::chrome_trace_json();
+    let dispatches = json.matches("\"name\":\"operator_dispatch\"").count();
+    assert!(
+        dispatches >= iterations,
+        "{dispatches} dispatch spans for {iterations} BSP iterations"
+    );
+    assert!(json.matches("\"name\":\"bsp_iteration\"").count() >= iterations);
+    assert!(json.contains("\"name\":\"primitive_run\""));
+    // File path exporter: what `run bfs --trace out.json` writes.
+    let path = std::env::temp_dir().join(format!("gunrock_obs_test_{}.json", std::process::id()));
+    let path = path.to_string_lossy().into_owned();
+    obs::export::write_chrome_trace(&path).expect("trace file written");
+    let on_disk = std::fs::read_to_string(&path).expect("trace file readable");
+    let _ = std::fs::remove_file(&path);
+    assert!(on_disk.starts_with("{\"displayTimeUnit\":\"ms\",\"traceEvents\":["));
+    assert!(on_disk.ends_with("\n]}"));
+    assert_eq!(on_disk.matches('{').count(), on_disk.matches('}').count());
+}
+
+/// Arming obs must not change results: bit-identical BFS labels with
+/// tracing off and on (the bench gates the *time* overhead; this gates
+/// the semantics).
+#[test]
+fn armed_tracing_is_semantically_invisible() {
+    let _g = hold();
+    let g = path_graph(256);
+    let cfg = Config::default();
+    let req = Request::with_source(PrimitiveKind::Bfs, 0);
+    obs::configure(false, obs::DEFAULT_RING_CAPACITY);
+    let clean = api::run_request(&g, &req, &cfg).expect("clean run");
+    obs::configure(true, obs::DEFAULT_RING_CAPACITY);
+    let traced = api::run_request(&g, &req, &cfg).expect("traced run");
+    obs::set_enabled(false);
+    match (&clean.output, &traced.output) {
+        (api::Output::Bfs { labels: a, .. }, api::Output::Bfs { labels: b, .. }) => {
+            assert_eq!(a, b, "tracing changed the answer")
+        }
+        other => panic!("wrong output variants {other:?}"),
+    }
+    // And the traced run fed the registry.
+    let snap = obs::metrics().snapshot();
+    let runs = snap
+        .iter()
+        .find(|m| m.name == "runs_total{kind=\"bfs\"}")
+        .expect("registry has the bfs run counter");
+    match runs.value {
+        obs::MetricValue::Counter(v) => assert!(v >= 1, "bfs run recorded"),
+        ref other => panic!("expected counter, got {other:?}"),
+    }
+}

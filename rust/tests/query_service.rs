@@ -131,13 +131,37 @@ fn concurrent_submissions_answer_correctly() {
         .collect();
     let svc = QueryService::start(Arc::clone(&g), cfg);
     let total = std::sync::atomic::AtomicU64::new(0);
+    let done = std::sync::atomic::AtomicBool::new(false);
     std::thread::scope(|scope| {
+        // Observer: every stats() snapshot taken *while* the clients are
+        // in flight must satisfy the documented StatsSnapshot invariants
+        // (each snapshot is a linearization point, not a racy read).
+        {
+            let svc = &svc;
+            let done = &done;
+            scope.spawn(move || {
+                while !done.load(std::sync::atomic::Ordering::Acquire) {
+                    let s = svc.stats();
+                    assert!(s.cache_hits <= s.served, "cache hit without a serve: {s:?}");
+                    assert!(
+                        s.served + s.coalesced <= s.submitted,
+                        "answered more than was submitted: {s:?}"
+                    );
+                    assert!(
+                        s.rejected + s.shed <= s.submitted,
+                        "dropped more than was submitted: {s:?}"
+                    );
+                    std::thread::yield_now();
+                }
+            });
+        }
+        let mut clients = Vec::new();
         for t in 0..8usize {
             let svc = &svc;
             let pool = &pool;
             let truth = &truth;
             let total = &total;
-            scope.spawn(move || {
+            clients.push(scope.spawn(move || {
                 for i in 0..50usize {
                     let which = (t * 50 + i) % pool.len();
                     let src = pool[which];
@@ -160,12 +184,17 @@ fn concurrent_submissions_answer_correctly() {
                     }
                     total.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
                 }
-            });
+            }));
         }
+        for c in clients {
+            c.join().expect("client thread");
+        }
+        done.store(true, std::sync::atomic::Ordering::Release);
     });
     let s = svc.stats();
     let total = total.load(std::sync::atomic::Ordering::Relaxed);
     assert_eq!(total, 400);
+    assert_eq!(s.submitted, total, "every submission counted exactly once: {s:?}");
     assert_eq!(s.served + s.coalesced, total, "every query answered: {s:?}");
     assert!(s.cache_hits > 0, "8 sources x 400 queries must hit the landmark cache: {s:?}");
     assert_eq!(s.rejected, 0, "default queue is deep enough: {s:?}");

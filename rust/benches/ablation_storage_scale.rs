@@ -1,0 +1,175 @@
+//! Ablation: storage at scale — the two PR-9 storage paths against their
+//! in-memory baselines.
+//!
+//! 1. load: owned `.gsr` load (read + whole-file checksum + full decode)
+//!    vs the zero-copy mmap load (framing + index decode + per-section
+//!    checksums; payload stays a page-cache window). Wall time and the
+//!    resident-set growth of each load are reported, and BFS over both
+//!    loads must produce identical labels.
+//! 2. build: in-memory convert (edge list -> Coo -> Csr -> compress ->
+//!    save) vs the out-of-core build (bounded sorted spill runs, k-way
+//!    merge straight into section emission) under a batch budget small
+//!    enough to force a real external sort. The two `.gsr` outputs must
+//!    be byte-identical.
+//!
+//! Emits BENCH_storage_scale.json for the experiment ledger (CI uploads
+//! it and `check_bench` gates it against ci/bench_baselines.json).
+
+use gunrock::config::Config;
+use gunrock::graph::builder::{build_gsr_out_of_core, SpillConfig};
+use gunrock::graph::generators::rmat::{rmat, RmatParams};
+use gunrock::graph::io::{self, MmapValidation};
+use gunrock::graph::{datasets, Codec, CompressedCsr};
+use gunrock::harness::{self, suite};
+use gunrock::primitives::bfs;
+use gunrock::util::par;
+use gunrock::util::timer::Timer;
+
+/// Resident-set size in kB from /proc/self/status (0 where unavailable):
+/// the honest way to see that an owned load pays for every payload byte
+/// while a mapped load pays only for the pages it touches.
+fn rss_kb() -> u64 {
+    let Ok(status) = std::fs::read_to_string("/proc/self/status") else { return 0 };
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmRSS:") {
+            return rest.trim().trim_end_matches(" kB").trim().parse().unwrap_or(0);
+        }
+    }
+    0
+}
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    let mut p = std::env::temp_dir();
+    p.push(format!("gunrock_storage_scale_{}_{}", std::process::id(), name));
+    p
+}
+
+fn main() {
+    gunrock::util::pool::ensure_capacity(par::num_threads());
+
+    // A graph big enough that load cost is visible but CI-friendly:
+    // scale-15 R-MAT, ~1M directed edges, weighted, with the in-edge view.
+    let mut g = rmat(&RmatParams { scale: 15, edge_factor: 32, seed: 9, ..Default::default() });
+    datasets::attach_uniform_weights(&mut g, 42);
+    let cg = CompressedCsr::from_csr_with_in_edges(&g, Codec::Zeta(2));
+    let gsr = tmp("scale.gsr");
+    io::save_gsr(&gsr, &cg).expect("save .gsr");
+    let file_bytes = std::fs::metadata(&gsr).expect("stat .gsr").len();
+
+    // --- load: owned vs mapped -------------------------------------------
+    let rss0 = rss_kb();
+    let t = Timer::start();
+    let owned = io::load_gsr(&gsr).expect("owned load");
+    let owned_ms = t.elapsed_ms();
+    let owned_rss_delta = rss_kb().saturating_sub(rss0);
+
+    let rss0 = rss_kb();
+    let t = Timer::start();
+    let mapped = io::load_gsr_mmap(&gsr, MmapValidation::Checksums).expect("mapped load");
+    let mmap_ms = t.elapsed_ms();
+    let mmap_rss_delta = rss_kb().saturating_sub(rss0);
+    assert!(mapped.payload.is_mapped(), "mapped load must return zero-copy windows");
+
+    // Bounds-only mapped load: the latency floor (framing + index decode).
+    let t = Timer::start();
+    let _bounds = io::load_gsr_mmap(&gsr, MmapValidation::Bounds).expect("bounds load");
+    let bounds_ms = t.elapsed_ms();
+
+    let src = suite::pick_source(&g);
+    let cfg = Config::default();
+    let (want, _) = bfs::bfs(&owned, src, &cfg);
+    let (got, _) = bfs::bfs(&mapped, src, &cfg);
+    let mut results_match = want.labels == got.labels;
+    results_match &= owned.edge_offsets == mapped.edge_offsets;
+    results_match &= owned.payload == mapped.payload;
+    results_match &= owned.edge_weights == mapped.edge_weights;
+    std::fs::remove_file(&gsr).ok();
+
+    // --- build: in-memory vs out-of-core ---------------------------------
+    let el = tmp("scale_edges.txt");
+    io::write_edge_list(&el, &g.to_coo()).expect("write edge list");
+
+    let t = Timer::start();
+    let mem_g = io::load_graph(&el, false).expect("in-memory load");
+    let mem_cg = CompressedCsr::from_csr_with_in_edges(&mem_g, Codec::Zeta(2));
+    let want_gsr = tmp("scale_mem.gsr");
+    io::save_gsr(&want_gsr, &mem_cg).expect("in-memory save");
+    let in_memory_ms = t.elapsed_ms();
+
+    let got_gsr = tmp("scale_ooc.gsr");
+    let spill = SpillConfig {
+        spill_dir: std::env::temp_dir(),
+        batch_edges: 1 << 16,
+        undirected: false,
+        weighted: false,
+        weight_seed: 42,
+        codec: Codec::Zeta(2),
+        with_in_edges: true,
+    };
+    let t = Timer::start();
+    let stats = build_gsr_out_of_core(&el, &got_gsr, &spill).expect("out-of-core build");
+    let out_of_core_ms = t.elapsed_ms();
+    let byte_identical = std::fs::read(&want_gsr).expect("read in-memory .gsr")
+        == std::fs::read(&got_gsr).expect("read out-of-core .gsr");
+    std::fs::remove_file(&el).ok();
+    std::fs::remove_file(&want_gsr).ok();
+    std::fs::remove_file(&got_gsr).ok();
+
+    harness::print_table(
+        "Ablation: storage at scale (mmap load, out-of-core build)",
+        &["metric", "owned / in-memory", "mapped / out-of-core", "notes"],
+        &[
+            vec![
+                "load ms".to_string(),
+                format!("{owned_ms:.1}"),
+                format!("{mmap_ms:.1}"),
+                format!("bounds-only {bounds_ms:.1} ms, file {file_bytes} B"),
+            ],
+            vec![
+                "load RSS delta kB".to_string(),
+                format!("{owned_rss_delta}"),
+                format!("{mmap_rss_delta}"),
+                "mapped pages stay in the page cache".to_string(),
+            ],
+            vec![
+                "build ms".to_string(),
+                format!("{in_memory_ms:.1}"),
+                format!("{out_of_core_ms:.1}"),
+                format!(
+                    "{} records, {} runs, batch {}",
+                    stats.spilled_records,
+                    stats.runs,
+                    spill.batch_edges
+                ),
+            ],
+            vec![
+                "correct".to_string(),
+                results_match.to_string(),
+                byte_identical.to_string(),
+                "BFS labels equal / .gsr bytes equal".to_string(),
+            ],
+        ],
+    );
+
+    let json = format!(
+        "{{\n  \"bench\": \"storage_scale\",\n  \
+         \"load\": {{\"file_bytes\": {file_bytes}, \"owned_ms\": {owned_ms:.2}, \
+         \"mmap_ms\": {mmap_ms:.2}, \"bounds_ms\": {bounds_ms:.2}, \
+         \"owned_rss_delta_kb\": {owned_rss_delta}, \
+         \"mmap_rss_delta_kb\": {mmap_rss_delta}, \
+         \"results_match\": {results_match}}},\n  \
+         \"build\": {{\"vertices\": {}, \"edges\": {}, \
+         \"in_memory_ms\": {in_memory_ms:.2}, \"out_of_core_ms\": {out_of_core_ms:.2}, \
+         \"spilled_records\": {}, \"runs\": {}, \
+         \"byte_identical\": {byte_identical}}}\n}}\n",
+        stats.num_vertices,
+        stats.final_edges,
+        stats.spilled_records,
+        stats.runs,
+    );
+    std::fs::write("BENCH_storage_scale.json", &json).expect("write BENCH_storage_scale.json");
+    println!("wrote BENCH_storage_scale.json");
+
+    assert!(results_match, "mapped load diverged from owned load");
+    assert!(byte_identical, "out-of-core .gsr diverged from in-memory build");
+}

@@ -84,6 +84,19 @@ pub struct Config {
     /// Write a Chrome `trace_event` JSON file here at CLI exit (empty =
     /// no trace). Setting it implies `obs_enable`.
     pub obs_trace: String,
+    /// Memory-map `.gsr` files instead of reading them into owned
+    /// buffers: payload sections stay zero-copy windows into the page
+    /// cache, so load cost is framing + index decode, not a whole-file
+    /// read.
+    pub storage_mmap: bool,
+    /// Validation depth for mapped loads (bounds | checksums | full).
+    pub storage_mmap_validate: crate::graph::io::MmapValidation,
+    /// Spill directory for the out-of-core `convert` build (empty = build
+    /// in memory).
+    pub storage_spill_dir: String,
+    /// Edge-record batch budget for the out-of-core build: each batch is
+    /// sorted and spilled when full, bounding peak memory.
+    pub storage_batch_edges: usize,
 }
 
 impl Default for Config {
@@ -115,6 +128,10 @@ impl Default for Config {
             obs_enable: false,
             obs_ring: 4096,
             obs_trace: String::new(),
+            storage_mmap: false,
+            storage_mmap_validate: crate::graph::io::MmapValidation::default(),
+            storage_spill_dir: String::new(),
+            storage_batch_edges: 4 << 20,
         }
     }
 }
@@ -186,6 +203,16 @@ impl Config {
                 "obs.enable" | "obs_enable" => self.obs_enable = parse_bool(v)?,
                 "obs.ring" | "obs_ring" => self.obs_ring = v.parse()?,
                 "obs.trace" | "obs_trace" => self.obs_trace = v.to_string(),
+                "storage.mmap" | "storage_mmap" => self.storage_mmap = parse_bool(v)?,
+                "storage.mmap_validate" | "storage_mmap_validate" => {
+                    self.storage_mmap_validate = v.parse()?
+                }
+                "storage.spill_dir" | "storage_spill_dir" => {
+                    self.storage_spill_dir = v.to_string()
+                }
+                "storage.batch_edges" | "storage_batch_edges" => {
+                    self.storage_batch_edges = v.parse()?
+                }
                 other => bail!("unknown config key: {other}"),
             }
         }
@@ -325,6 +352,27 @@ mod tests {
         assert!(cfg.obs_enable);
         assert_eq!(cfg.obs_ring, 1024);
         assert_eq!(cfg.obs_trace, "out.json");
+    }
+
+    #[test]
+    fn storage_knobs_apply() {
+        use crate::graph::io::MmapValidation;
+        let mut cfg = Config::default();
+        assert!(!cfg.storage_mmap, "mmap loading is opt-in");
+        assert_eq!(cfg.storage_mmap_validate, MmapValidation::Checksums);
+        let kv = parse_toml_subset(
+            "[storage]\nmmap = true\nmmap_validate = full\n\
+             spill_dir = \"/tmp/spill\"\nbatch_edges = 1024\n",
+        )
+        .unwrap();
+        cfg.apply(&kv).unwrap();
+        assert!(cfg.storage_mmap);
+        assert_eq!(cfg.storage_mmap_validate, MmapValidation::Full);
+        assert_eq!(cfg.storage_spill_dir, "/tmp/spill");
+        assert_eq!(cfg.storage_batch_edges, 1024);
+        let mut bad = BTreeMap::new();
+        bad.insert("storage_mmap_validate".to_string(), "paranoid".to_string());
+        assert!(cfg.apply(&bad).is_err());
     }
 
     #[test]

@@ -172,6 +172,474 @@ pub fn undirected_from_edges(n: usize, edges: &[(VertexId, VertexId)]) -> Csr {
     from_coo(&coo, true)
 }
 
+// ---------------------------------------------------------------------------
+// Out-of-core build: spill runs + k-way merge straight into .gsr emission
+// ---------------------------------------------------------------------------
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use super::compressed::codec::{encode_list, write_varint};
+use super::compressed::Codec;
+use super::datasets::UniformWeightStream;
+use super::io;
+
+/// Knobs for [`build_gsr_out_of_core`].
+pub struct SpillConfig {
+    /// Directory for spill runs and section temp files (created if
+    /// missing; this build's files are removed on success).
+    pub spill_dir: PathBuf,
+    /// Edge-record budget held in memory at once — each batch is sorted
+    /// and spilled when full, so peak memory is ~20 bytes x this, not
+    /// 2 x m. Sizing: total spill I/O is two passes over the edges, so
+    /// bigger batches only reduce the run count the merge heap sees.
+    pub batch_edges: usize,
+    /// Symmetrize (add the reverse of every edge) before dedup, exactly
+    /// like `Coo::to_undirected`.
+    pub undirected: bool,
+    /// Attach the positional uniform [1, 64] weights when the input
+    /// carries none (same stream the in-memory CLI path attaches).
+    pub weighted: bool,
+    /// Seed for those synthesized weights.
+    pub weight_seed: u64,
+    pub codec: Codec,
+    /// Emit the v2 in-edge view (a second external sort by destination).
+    pub with_in_edges: bool,
+}
+
+impl Default for SpillConfig {
+    fn default() -> Self {
+        SpillConfig {
+            spill_dir: std::env::temp_dir(),
+            batch_edges: 4 << 20,
+            undirected: false,
+            weighted: false,
+            weight_seed: 42,
+            codec: Codec::Varint,
+            with_in_edges: true,
+        }
+    }
+}
+
+/// What the out-of-core build did — surfaced by `convert` and the
+/// storage-scale bench.
+#[derive(Debug)]
+pub struct OocStats {
+    pub num_vertices: usize,
+    /// Edge records spilled (input edges plus undirected reverses,
+    /// before dedup).
+    pub spilled_records: u64,
+    /// Final deduped edge count written to the container.
+    pub final_edges: u64,
+    /// Sorted runs the forward merge consumed (>= 2 means the edge list
+    /// genuinely exceeded one batch).
+    pub runs: usize,
+}
+
+/// A forward spill record: (src, dst, seq, weight), 20 bytes LE on disk.
+///
+/// `seq` replicates the in-memory dedup order exactly: input edge i gets
+/// seq i, and its undirected reverse gets bit 62 | i — so reverses sort
+/// after every original (as `to_undirected`'s append does) and first-won
+/// weights match `Coo::dedup`'s input-position tie-break byte for byte.
+type FwdRec = (u32, u32, u64, u32);
+const REVERSE_SEQ: u64 = 1 << 62;
+
+fn read_record<const N: usize>(r: &mut impl Read) -> Result<Option<[u8; N]>> {
+    let mut buf = [0u8; N];
+    match r.read_exact(&mut buf) {
+        Ok(()) => Ok(Some(buf)),
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => Ok(None),
+        Err(e) => Err(e.into()),
+    }
+}
+
+fn read_fwd(r: &mut impl Read) -> Result<Option<FwdRec>> {
+    Ok(read_record::<20>(r)?.map(|b| {
+        (
+            u32::from_le_bytes(b[0..4].try_into().unwrap()),
+            u32::from_le_bytes(b[4..8].try_into().unwrap()),
+            u64::from_le_bytes(b[8..16].try_into().unwrap()),
+            u32::from_le_bytes(b[16..20].try_into().unwrap()),
+        )
+    }))
+}
+
+/// An in-edge spill record: (dst, src, out-edge id), 12 bytes LE.
+type InRec = (u32, u32, u32);
+
+fn read_in(r: &mut impl Read) -> Result<Option<InRec>> {
+    Ok(read_record::<12>(r)?.map(|b| {
+        (
+            u32::from_le_bytes(b[0..4].try_into().unwrap()),
+            u32::from_le_bytes(b[4..8].try_into().unwrap()),
+            u32::from_le_bytes(b[8..12].try_into().unwrap()),
+        )
+    }))
+}
+
+/// Byte-counting section temp file: varints and raw bytes stream to disk,
+/// and the running length becomes the section length at assembly time.
+struct SectionFile {
+    path: PathBuf,
+    w: BufWriter<std::fs::File>,
+    scratch: Vec<u8>,
+    len: u64,
+}
+
+impl SectionFile {
+    fn create(path: PathBuf) -> Result<SectionFile> {
+        let f = std::fs::File::create(&path)
+            .with_context(|| format!("create spill file {}", path.display()))?;
+        Ok(SectionFile { path, w: BufWriter::new(f), scratch: Vec::new(), len: 0 })
+    }
+
+    fn put_varint(&mut self, v: u64) -> Result<()> {
+        self.scratch.clear();
+        write_varint(&mut self.scratch, v);
+        self.len += self.scratch.len() as u64;
+        self.w.write_all(&self.scratch)?;
+        Ok(())
+    }
+
+    fn put_bytes(&mut self, b: &[u8]) -> Result<()> {
+        self.len += b.len() as u64;
+        self.w.write_all(b)?;
+        Ok(())
+    }
+
+    /// Flush and hand back (path, length) for the assembly pass.
+    fn seal(mut self) -> Result<(PathBuf, u64)> {
+        self.w.flush()?;
+        Ok((self.path, self.len))
+    }
+}
+
+fn spill_fwd_run(dir: &Path, prefix: &str, idx: usize, batch: &mut Vec<FwdRec>) -> Result<PathBuf> {
+    batch.sort_unstable();
+    let path = dir.join(format!("{prefix}_run_{idx}.spill"));
+    let f = std::fs::File::create(&path)
+        .with_context(|| format!("create spill run {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    for &(s, d, seq, wt) in batch.iter() {
+        w.write_all(&s.to_le_bytes())?;
+        w.write_all(&d.to_le_bytes())?;
+        w.write_all(&seq.to_le_bytes())?;
+        w.write_all(&wt.to_le_bytes())?;
+    }
+    w.flush()?;
+    batch.clear();
+    Ok(path)
+}
+
+fn spill_in_run(dir: &Path, prefix: &str, idx: usize, batch: &mut Vec<InRec>) -> Result<PathBuf> {
+    batch.sort_unstable();
+    let path = dir.join(format!("{prefix}_in_run_{idx}.spill"));
+    let f = std::fs::File::create(&path)
+        .with_context(|| format!("create spill run {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    for &(d, s, e) in batch.iter() {
+        w.write_all(&d.to_le_bytes())?;
+        w.write_all(&s.to_le_bytes())?;
+        w.write_all(&e.to_le_bytes())?;
+    }
+    w.flush()?;
+    batch.clear();
+    Ok(path)
+}
+
+/// Encode one vertex's (sorted) neighbor list: payload bytes to the
+/// payload temp file, degree and stream-size varints to the in-memory
+/// index buffers (O(n) bytes — the only per-vertex state this build
+/// keeps resident).
+fn emit_vertex(
+    codec: Codec,
+    list: &[VertexId],
+    scratch: &mut Vec<u8>,
+    deg_buf: &mut Vec<u8>,
+    size_buf: &mut Vec<u8>,
+    payload: &mut SectionFile,
+) -> Result<()> {
+    scratch.clear();
+    encode_list(codec, list, scratch);
+    write_varint(deg_buf, list.len() as u64);
+    write_varint(size_buf, scratch.len() as u64);
+    payload.put_bytes(scratch)
+}
+
+/// Build a `.gsr` container from a text edge list or MatrixMarket file
+/// without ever materializing the edge set: bounded batches are sorted
+/// and spilled to runs, and a k-way merge streams the deduped,
+/// final-order edges straight into section emission. Peak memory is
+/// O(batch) + O(n) index state — never the 2 x m the in-memory
+/// COO -> CSR path holds — and the output is byte-identical to
+/// `save_gsr` over the in-memory build of the same input (same dedup
+/// order, same weight stream, same section writer).
+pub fn build_gsr_out_of_core(input: &Path, output: &Path, cfg: &SpillConfig) -> Result<OocStats> {
+    if cfg.batch_edges < 2 {
+        bail!("batch-edges must be at least 2");
+    }
+    std::fs::create_dir_all(&cfg.spill_dir)
+        .with_context(|| format!("create spill dir {}", cfg.spill_dir.display()))?;
+    // Process-unique prefix so concurrent converts can share a spill dir.
+    let prefix = format!("gsr_ooc_{}", std::process::id());
+    let dir = cfg.spill_dir.clone();
+    let mut cleanup: Vec<PathBuf> = Vec::new();
+    let result = build_inner(input, output, cfg, &dir, &prefix, &mut cleanup);
+    for p in cleanup {
+        std::fs::remove_file(p).ok();
+    }
+    result
+}
+
+fn build_inner(
+    input: &Path,
+    output: &Path,
+    cfg: &SpillConfig,
+    dir: &Path,
+    prefix: &str,
+    cleanup: &mut Vec<PathBuf>,
+) -> Result<OocStats> {
+    // Pass 1: stream the input into sorted spill runs. Each input edge i
+    // becomes one record (plus its reverse when symmetrizing); self-loops
+    // and duplicates are left for the merge to drop, exactly where
+    // `Coo::dedup` drops them.
+    let mut batch: Vec<FwdRec> = Vec::with_capacity(cfg.batch_edges.min(1 << 24));
+    let mut runs: Vec<PathBuf> = Vec::new();
+    let mut spilled: u64 = 0;
+    let mut input_weighted = false;
+    let mut edge_idx: u64 = 0;
+    let ext = input.extension().and_then(|e| e.to_str());
+    if ext == Some("gsr") {
+        bail!("out-of-core build reads edge-list or MatrixMarket inputs, not .gsr");
+    }
+    let n = if ext == Some("mtx") {
+        let hdr = io::for_each_matrix_market_edge(input, |s, d, w| {
+            push_edge(
+                s, d, w, cfg, dir, prefix, &mut batch, &mut runs, &mut spilled,
+                &mut input_weighted, &mut edge_idx,
+            )
+        })?;
+        hdr.num_vertices
+    } else {
+        io::for_each_edge_list_edge(input, |s, d, w| {
+            push_edge(
+                s, d, w, cfg, dir, prefix, &mut batch, &mut runs, &mut spilled,
+                &mut input_weighted, &mut edge_idx,
+            )
+        })?
+    };
+    if !batch.is_empty() {
+        runs.push(spill_fwd_run(dir, prefix, runs.len(), &mut batch)?);
+    }
+    batch.shrink_to_fit();
+    cleanup.extend(runs.iter().cloned());
+    let fwd_runs = runs.len();
+
+    // Pass 2: k-way merge in (src, dst, seq) order. Post-dedup this IS
+    // final CSR edge order — `from_coo`'s counting sort by src plus the
+    // per-row dst sort reproduces exactly the sorted deduped sequence —
+    // so edges stream straight into per-vertex encoding with their final
+    // edge ids known on the spot.
+    let mut heap: BinaryHeap<Reverse<(FwdRec, usize)>> = BinaryHeap::new();
+    let mut readers: Vec<BufReader<std::fs::File>> = Vec::with_capacity(runs.len());
+    for (i, p) in runs.iter().enumerate() {
+        let mut r = BufReader::new(
+            std::fs::File::open(p).with_context(|| format!("open spill run {}", p.display()))?,
+        );
+        if let Some(rec) = read_fwd(&mut r)? {
+            heap.push(Reverse((rec, i)));
+        }
+        readers.push(r);
+    }
+
+    let synthesize = cfg.weighted && !input_weighted;
+    let mut wstream = UniformWeightStream::new(cfg.weight_seed);
+    let mut deg_buf: Vec<u8> = Vec::new();
+    let mut size_buf: Vec<u8> = Vec::new();
+    let mut scratch: Vec<u8> = Vec::new();
+    let mut payload = SectionFile::create(dir.join(format!("{prefix}_payload.tmp")))?;
+    cleanup.push(payload.path.clone());
+    let mut weights = SectionFile::create(dir.join(format!("{prefix}_weights.tmp")))?;
+    cleanup.push(weights.path.clone());
+
+    // In-edge records spill as the forward merge emits final edges.
+    let mut in_batch: Vec<InRec> = Vec::new();
+    let mut in_runs: Vec<PathBuf> = Vec::new();
+
+    let mut cur_list: Vec<VertexId> = Vec::new();
+    let mut next_vertex: usize = 0; // vertices < next_vertex are emitted
+    let mut last: Option<(u32, u32)> = None;
+    let mut m_final: u64 = 0;
+    while let Some(Reverse((rec, run))) = heap.pop() {
+        if let Some(nxt) = read_fwd(&mut readers[run])? {
+            heap.push(Reverse((nxt, run)));
+        }
+        let (s, d, _seq, w) = rec;
+        if s as usize >= n || d as usize >= n {
+            bail!("edge ({s}, {d}) out of range (n = {n})");
+        }
+        if s == d || last == Some((s, d)) {
+            continue; // self-loop or duplicate: first-popped record won
+        }
+        last = Some((s, d));
+        while next_vertex < s as usize {
+            emit_vertex(cfg.codec, &cur_list, &mut scratch, &mut deg_buf, &mut size_buf, &mut payload)?;
+            cur_list.clear();
+            next_vertex += 1;
+        }
+        let eid = m_final;
+        cur_list.push(d);
+        m_final += 1;
+        let w_final = if input_weighted { w } else { wstream.next_weight() };
+        if input_weighted || synthesize {
+            weights.put_varint(w_final as u64)?;
+        }
+        if cfg.with_in_edges {
+            if in_batch.len() == cfg.batch_edges {
+                in_runs.push(spill_in_run(dir, prefix, in_runs.len(), &mut in_batch)?);
+                cleanup.push(in_runs.last().unwrap().clone());
+            }
+            in_batch.push((d, s, eid as u32));
+        }
+    }
+    while next_vertex < n {
+        emit_vertex(cfg.codec, &cur_list, &mut scratch, &mut deg_buf, &mut size_buf, &mut payload)?;
+        cur_list.clear();
+        next_vertex += 1;
+    }
+    drop(readers);
+    let (payload_path, payload_len) = payload.seal()?;
+    let (weights_path, weights_len) = weights.seal()?;
+
+    // Weighted flag follows the in-memory path bit for bit: an empty
+    // graph keeps an empty weight vector, so its flag stays clear.
+    let weighted_final = (input_weighted || cfg.weighted) && m_final > 0;
+
+    // Pass 3 (optional): external sort of the in-edge records by
+    // (dst, src). Sources scatter in ascending order within each
+    // destination — the same order `attach_in_edges`'s counting sort
+    // produces — and the carried out-edge ids become the permutation.
+    let in_sections = if cfg.with_in_edges {
+        if !in_batch.is_empty() {
+            in_runs.push(spill_in_run(dir, prefix, in_runs.len(), &mut in_batch)?);
+            cleanup.push(in_runs.last().unwrap().clone());
+        }
+        in_batch.shrink_to_fit();
+        let mut heap: BinaryHeap<Reverse<(InRec, usize)>> = BinaryHeap::new();
+        let mut readers: Vec<BufReader<std::fs::File>> = Vec::with_capacity(in_runs.len());
+        for (i, p) in in_runs.iter().enumerate() {
+            let mut r = BufReader::new(
+                std::fs::File::open(p).with_context(|| format!("open spill run {}", p.display()))?,
+            );
+            if let Some(rec) = read_in(&mut r)? {
+                heap.push(Reverse((rec, i)));
+            }
+            readers.push(r);
+        }
+        let mut in_deg_buf: Vec<u8> = Vec::new();
+        let mut in_size_buf: Vec<u8> = Vec::new();
+        let mut in_payload = SectionFile::create(dir.join(format!("{prefix}_in_payload.tmp")))?;
+        cleanup.push(in_payload.path.clone());
+        let mut perm = SectionFile::create(dir.join(format!("{prefix}_perm.tmp")))?;
+        cleanup.push(perm.path.clone());
+        let mut cur_list: Vec<VertexId> = Vec::new();
+        let mut next_vertex: usize = 0;
+        while let Some(Reverse((rec, run))) = heap.pop() {
+            if let Some(nxt) = read_in(&mut readers[run])? {
+                heap.push(Reverse((nxt, run)));
+            }
+            let (d, s, eid) = rec;
+            while next_vertex < d as usize {
+                emit_vertex(cfg.codec, &cur_list, &mut scratch, &mut in_deg_buf, &mut in_size_buf, &mut in_payload)?;
+                cur_list.clear();
+                next_vertex += 1;
+            }
+            cur_list.push(s);
+            perm.put_varint(eid as u64)?;
+        }
+        while next_vertex < n {
+            emit_vertex(cfg.codec, &cur_list, &mut scratch, &mut in_deg_buf, &mut in_size_buf, &mut in_payload)?;
+            cur_list.clear();
+            next_vertex += 1;
+        }
+        let (in_payload_path, in_payload_len) = in_payload.seal()?;
+        let (perm_path, perm_len) = perm.seal()?;
+        Some((in_deg_buf, in_size_buf, in_payload_path, in_payload_len, perm_path, perm_len))
+    } else {
+        None
+    };
+
+    // Assembly: stream every section through the same GsrSink `save_gsr`
+    // uses — identical framing, checksum table, and trailing checksum.
+    let out = std::fs::File::create(output)
+        .with_context(|| format!("write {}", output.display()))?;
+    let mut sink = io::GsrSink::new(BufWriter::new(out), io::GSR_VERSION);
+    sink.header(&io::gsr_header_bytes(
+        io::GSR_VERSION,
+        cfg.codec,
+        weighted_final,
+        cfg.with_in_edges,
+        n as u64,
+        m_final,
+    ))?;
+    sink.section(&deg_buf)?;
+    sink.section(&size_buf)?;
+    sink.section_from_reader(payload_len, &mut BufReader::new(std::fs::File::open(&payload_path)?))?;
+    if weighted_final {
+        sink.section_from_reader(weights_len, &mut BufReader::new(std::fs::File::open(&weights_path)?))?;
+    }
+    if let Some((in_deg_buf, in_size_buf, in_payload_path, in_payload_len, perm_path, perm_len)) =
+        in_sections
+    {
+        sink.section(&in_deg_buf)?;
+        sink.section(&in_size_buf)?;
+        sink.section_from_reader(
+            in_payload_len,
+            &mut BufReader::new(std::fs::File::open(&in_payload_path)?),
+        )?;
+        sink.section_from_reader(perm_len, &mut BufReader::new(std::fs::File::open(&perm_path)?))?;
+    }
+    sink.finish().with_context(|| format!("write {}", output.display()))?;
+
+    Ok(OocStats { num_vertices: n, spilled_records: spilled, final_edges: m_final, runs: fwd_runs })
+}
+
+/// Shared per-edge spill step for both input formats (a free function
+/// because the two reader closures cannot both capture one `FnMut`).
+#[allow(clippy::too_many_arguments)]
+fn push_edge(
+    s: VertexId,
+    d: VertexId,
+    w: Option<Weight>,
+    cfg: &SpillConfig,
+    dir: &Path,
+    prefix: &str,
+    batch: &mut Vec<FwdRec>,
+    runs: &mut Vec<PathBuf>,
+    spilled: &mut u64,
+    input_weighted: &mut bool,
+    edge_idx: &mut u64,
+) -> Result<()> {
+    *input_weighted |= w.is_some();
+    let w = w.unwrap_or(1);
+    if batch.len() + 2 > cfg.batch_edges {
+        runs.push(spill_fwd_run(dir, prefix, runs.len(), batch)?);
+    }
+    batch.push((s, d, *edge_idx, w));
+    *spilled += 1;
+    if cfg.undirected {
+        batch.push((d, s, REVERSE_SEQ | *edge_idx, w));
+        *spilled += 1;
+    }
+    *edge_idx += 1;
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -236,5 +704,130 @@ mod tests {
         for w in g.row_offsets.windows(2) {
             assert!(w[0] <= w[1]);
         }
+    }
+
+    fn tmp(name: &str) -> PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("gunrock_builder_test_{}_{}", std::process::id(), name));
+        p
+    }
+
+    /// Run the full in-memory convert pipeline on an edge-list file — the
+    /// exact sequence the CLI executes — and save the `.gsr`.
+    fn in_memory_gsr(
+        input: &Path,
+        output: &Path,
+        codec: Codec,
+        undirected: bool,
+        weighted: bool,
+        with_in_edges: bool,
+    ) {
+        let mut g = io::load_graph(input, undirected).unwrap();
+        if weighted && !g.is_weighted() {
+            g.edge_weights = super::super::datasets::uniform_weights(g.num_edges(), 42);
+        }
+        let cg = if with_in_edges {
+            super::super::compressed::CompressedCsr::from_csr_with_in_edges(&g, codec)
+        } else {
+            super::super::compressed::CompressedCsr::from_csr(&g, codec)
+        };
+        io::save_gsr(output, &cg).unwrap();
+    }
+
+    #[test]
+    fn out_of_core_build_is_byte_identical_to_in_memory() {
+        // A messy input: duplicates with conflicting weights, a
+        // self-loop, unsorted order — with a 16-edge batch budget so the
+        // build genuinely spills multiple runs.
+        let input_w = tmp("ooc_input_w.txt");
+        let input_u = tmp("ooc_input_u.txt");
+        let (mut lines_w, mut lines_u) = (String::new(), String::new());
+        let mut rng = crate::util::rng::Pcg32::new(7);
+        for _ in 0..200 {
+            let s = rng.below(20);
+            let d = rng.below(20);
+            let w = 1 + rng.below(9);
+            lines_w.push_str(&format!("{s} {d} {w}\n"));
+            lines_u.push_str(&format!("{s} {d}\n"));
+        }
+        std::fs::write(&input_w, &lines_w).unwrap();
+        std::fs::write(&input_u, &lines_u).unwrap();
+
+        // (input, undirected, weighted, with_in): file-carried weights
+        // through dedup, synthesized seed-42 weights, and plain
+        // unweighted — directed and symmetrized.
+        for (case, input, undirected, weighted, with_in) in [
+            (0, &input_w, false, true, true),
+            (1, &input_w, true, true, true),
+            (2, &input_u, false, true, true),
+            (3, &input_u, true, false, false),
+        ] {
+            for codec in [Codec::Varint, Codec::Zeta(2)] {
+                let want = tmp(&format!("ooc_want_{case}_{codec}.gsr"));
+                let got = tmp(&format!("ooc_got_{case}_{codec}.gsr"));
+                in_memory_gsr(input, &want, codec, undirected, weighted, with_in);
+                let cfg = SpillConfig {
+                    spill_dir: std::env::temp_dir(),
+                    batch_edges: 16,
+                    undirected,
+                    weighted,
+                    weight_seed: 42,
+                    codec,
+                    with_in_edges: with_in,
+                };
+                let stats = build_gsr_out_of_core(input, &got, &cfg).unwrap();
+                assert!(stats.runs >= 2, "batch budget 16 must force multiple runs");
+                let a = std::fs::read(&want).unwrap();
+                let b = std::fs::read(&got).unwrap();
+                assert_eq!(a, b, "out-of-core output diverges (case {case}, codec {codec})");
+                // And the result must survive the strict owned loader.
+                let back = io::load_gsr(&got).unwrap();
+                assert_eq!(back.num_edges() as u64, stats.final_edges);
+                std::fs::remove_file(&want).ok();
+                std::fs::remove_file(&got).ok();
+            }
+        }
+        std::fs::remove_file(&input_w).ok();
+        std::fs::remove_file(&input_u).ok();
+    }
+
+    #[test]
+    fn out_of_core_matches_on_matrix_market_input() {
+        let input = tmp("ooc_input.mtx");
+        std::fs::write(
+            &input,
+            "%%MatrixMarket matrix coordinate pattern symmetric\n\
+             6 6 7\n2 1\n3 1\n3 2\n4 4\n5 2\n6 3\n6 5\n",
+        )
+        .unwrap();
+        let want = tmp("ooc_mtx_want.gsr");
+        let got = tmp("ooc_mtx_got.gsr");
+        in_memory_gsr(&input, &want, Codec::Varint, false, false, true);
+        let cfg = SpillConfig {
+            batch_edges: 4,
+            spill_dir: std::env::temp_dir(),
+            ..Default::default()
+        };
+        build_gsr_out_of_core(&input, &got, &cfg).unwrap();
+        assert_eq!(std::fs::read(&want).unwrap(), std::fs::read(&got).unwrap());
+        for p in [input, want, got] {
+            std::fs::remove_file(p).ok();
+        }
+    }
+
+    #[test]
+    fn out_of_core_handles_empty_and_rejects_gsr_input() {
+        let input = tmp("ooc_empty.txt");
+        std::fs::write(&input, "# only a comment\n").unwrap();
+        let out = tmp("ooc_empty.gsr");
+        let cfg = SpillConfig { spill_dir: std::env::temp_dir(), ..Default::default() };
+        let stats = build_gsr_out_of_core(&input, &out, &cfg).unwrap();
+        assert_eq!(stats.final_edges, 0);
+        std::fs::remove_file(&input).ok();
+        std::fs::remove_file(&out).ok();
+
+        let gsr_in = tmp("ooc_reject.gsr");
+        let err = build_gsr_out_of_core(&gsr_in, &out, &cfg).unwrap_err().to_string();
+        assert!(err.contains("not .gsr"), "{err}");
     }
 }

@@ -22,9 +22,11 @@
 
 pub mod codec;
 pub mod decoder;
+pub mod storage;
 
 pub use codec::Codec;
 pub use decoder::NeighborDecoder;
+pub use storage::Bytes;
 
 use super::rep::GraphRep;
 use super::{Coo, Csr, SizeT, VertexId, Weight};
@@ -47,8 +49,10 @@ pub struct CompressedCsr {
     pub edge_offsets: Vec<SizeT>,
     /// Byte offset (n+1) of each vertex's encoded stream in `payload`.
     pub byte_offsets: Vec<u64>,
-    /// Concatenated per-vertex gap streams (each byte-aligned).
-    pub payload: Vec<u8>,
+    /// Concatenated per-vertex gap streams (each byte-aligned). Either
+    /// heap-owned or a zero-copy window into a mapped `.gsr` container
+    /// — decoders only ever see `&[u8]`, so both behave identically.
+    pub payload: Bytes,
     /// Per-edge weights in global edge-id order; empty = unweighted.
     /// Kept uncompressed: weights are random-accessed by edge id.
     pub edge_weights: Vec<Weight>,
@@ -58,7 +62,7 @@ pub struct CompressedCsr {
     /// Byte offset (n+1) of each vertex's encoded in-neighbor stream.
     pub in_byte_offsets: Vec<u64>,
     /// Concatenated per-vertex gap streams of in-neighbor (source) lists.
-    pub in_payload: Vec<u8>,
+    pub in_payload: Bytes,
     /// CSC position -> global out-edge id (len = num_edges when the
     /// in-edge view exists). `in_edge_perm[p]` is the edge id of the p-th
     /// in-edge in CSC order, so pull traversal reads the same weights and
@@ -85,11 +89,11 @@ impl CompressedCsr {
             codec,
             edge_offsets: g.row_offsets.clone(),
             byte_offsets,
-            payload,
+            payload: payload.into(),
             edge_weights: g.edge_weights.clone(),
             in_edge_offsets: Vec::new(),
             in_byte_offsets: Vec::new(),
-            in_payload: Vec::new(),
+            in_payload: Bytes::default(),
             in_edge_perm: Vec::new(),
         }
     }
@@ -118,7 +122,7 @@ impl CompressedCsr {
     pub fn decode_in_neighbors(&self, v: VertexId) -> NeighborDecoder<'_> {
         let s = self.in_byte_offsets[v as usize] as usize;
         let e = self.in_byte_offsets[v as usize + 1] as usize;
-        NeighborDecoder::new(self.codec, &self.in_payload[s..e], self.in_degree(v))
+        NeighborDecoder::new(self.codec, &self.in_payload.as_slice()[s..e], self.in_degree(v))
     }
 
     /// Visit v's in-edges as `f(out_edge_id, src)` — the permutation makes
@@ -171,7 +175,7 @@ impl CompressedCsr {
         }
         self.in_edge_offsets = offsets;
         self.in_byte_offsets = byte_offsets;
-        self.in_payload = payload;
+        self.in_payload = payload.into();
         self.in_edge_perm = perm;
     }
 
@@ -202,7 +206,7 @@ impl CompressedCsr {
     pub fn decode_neighbors(&self, v: VertexId) -> NeighborDecoder<'_> {
         let s = self.byte_offsets[v as usize] as usize;
         let e = self.byte_offsets[v as usize + 1] as usize;
-        NeighborDecoder::new(self.codec, &self.payload[s..e], self.degree(v))
+        NeighborDecoder::new(self.codec, &self.payload.as_slice()[s..e], self.degree(v))
     }
 
     /// Vertex owning global edge id e (binary search over the prefix-degree

@@ -1,0 +1,157 @@
+//! Payload byte storage for [`CompressedCsr`](super::CompressedCsr).
+//!
+//! The compressed representation only ever *reads* its payload through
+//! `&[u8]` slices (the index gives byte offsets, the decoder streams
+//! from there), so the bytes can live anywhere that can hand out a
+//! stable slice. [`Bytes`] abstracts the two homes we support:
+//!
+//! - `Owned`: a plain `Vec<u8>` — the historical path, produced by the
+//!   in-memory builder and the copying loader.
+//! - `Mapped`: a window into a shared read-only [`Mmap`] of a `.gsr`
+//!   container. Loading is zero-copy — the payload section is never
+//!   duplicated into the heap — and N graphs (out- and in-views) can
+//!   window the same mapping through the `Arc`.
+//!
+//! `Bytes` derefs to `[u8]`, so decode paths are storage-oblivious.
+
+use std::sync::Arc;
+
+use crate::util::mmap::Mmap;
+
+/// Backing storage for a compressed payload section.
+#[derive(Clone)]
+pub enum Bytes {
+    /// Heap-owned bytes.
+    Owned(Vec<u8>),
+    /// A `[start, start + len)` window into a shared file mapping.
+    Mapped { map: Arc<Mmap>, start: usize, len: usize },
+}
+
+impl Bytes {
+    /// Window a region of a shared mapping. Panics if the window falls
+    /// outside the mapping — callers validate section framing first.
+    pub fn mapped(map: Arc<Mmap>, start: usize, len: usize) -> Bytes {
+        assert!(
+            start.checked_add(len).is_some_and(|end| end <= map.len()),
+            "Bytes window {start}+{len} out of mapping bounds ({})",
+            map.len()
+        );
+        Bytes::Mapped { map, start, len }
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        match self {
+            Bytes::Owned(v) => v,
+            Bytes::Mapped { map, start, len } => &map.as_slice()[*start..*start + *len],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Bytes::Owned(v) => v.len(),
+            Bytes::Mapped { len, .. } => *len,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// True when the bytes live in a file mapping rather than the heap.
+    pub fn is_mapped(&self) -> bool {
+        matches!(self, Bytes::Mapped { .. })
+    }
+
+    /// Copy out to an owned vector (used when serialising a graph whose
+    /// payload is currently mapped).
+    pub fn to_vec(&self) -> Vec<u8> {
+        self.as_slice().to_vec()
+    }
+}
+
+impl Default for Bytes {
+    fn default() -> Bytes {
+        Bytes::Owned(Vec::new())
+    }
+}
+
+impl From<Vec<u8>> for Bytes {
+    fn from(v: Vec<u8>) -> Bytes {
+        Bytes::Owned(v)
+    }
+}
+
+impl std::ops::Deref for Bytes {
+    type Target = [u8];
+
+    fn deref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+// Equality is over the byte contents, not the storage home: an owned
+// payload and a mapped window of the same bytes compare equal.
+impl PartialEq for Bytes {
+    fn eq(&self, other: &Bytes) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl Eq for Bytes {}
+
+impl std::fmt::Debug for Bytes {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Bytes::Owned(v) => write!(f, "Bytes::Owned({} bytes)", v.len()),
+            Bytes::Mapped { start, len, .. } => {
+                write!(f, "Bytes::Mapped({len} bytes at offset {start})")
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn owned_and_mapped_views_agree() {
+        let p = {
+            let mut p = std::env::temp_dir();
+            p.push(format!("gunrock_bytes_test_{}.bin", std::process::id()));
+            p
+        };
+        std::fs::write(&p, [0u8, 1, 2, 3, 4, 5, 6, 7]).unwrap();
+        let map = Arc::new(Mmap::open(&p).unwrap());
+        std::fs::remove_file(&p).ok();
+
+        let mapped = Bytes::mapped(map, 2, 4);
+        let owned = Bytes::from(vec![2u8, 3, 4, 5]);
+        assert!(mapped.is_mapped());
+        assert!(!owned.is_mapped());
+        assert_eq!(mapped, owned, "content equality must cross storage kinds");
+        assert_eq!(mapped.to_vec(), vec![2u8, 3, 4, 5]);
+        assert_eq!(&mapped[1..3], &[3u8, 4], "Deref slicing over a window");
+    }
+
+    #[test]
+    #[should_panic(expected = "out of mapping bounds")]
+    fn out_of_bounds_window_panics_at_construction() {
+        let p = {
+            let mut p = std::env::temp_dir();
+            p.push(format!("gunrock_bytes_oob_{}.bin", std::process::id()));
+            p
+        };
+        std::fs::write(&p, [0u8; 4]).unwrap();
+        let map = Arc::new(Mmap::open(&p).unwrap());
+        std::fs::remove_file(&p).ok();
+        let _ = Bytes::mapped(map, 2, 3);
+    }
+
+    #[test]
+    fn default_is_empty_owned() {
+        let b = Bytes::default();
+        assert!(b.is_empty());
+        assert!(!b.is_mapped());
+    }
+}

@@ -51,7 +51,11 @@ impl Coo {
     pub fn dedup(&mut self) {
         let weighted = self.is_weighted();
         let mut order: Vec<usize> = (0..self.num_edges()).collect();
-        order.sort_unstable_by_key(|&i| (self.src[i], self.dst[i]));
+        // Tie-break equal (src, dst) pairs by input position so "first
+        // weight seen" is deterministic — the out-of-core builder
+        // replicates this exact order, which is what makes its output
+        // byte-identical to the in-memory path on weighted duplicates.
+        order.sort_unstable_by_key(|&i| (self.src[i], self.dst[i], i));
         let mut src = Vec::with_capacity(self.src.len());
         let mut dst = Vec::with_capacity(self.dst.len());
         let mut weights = Vec::with_capacity(self.weights.len());
@@ -117,6 +121,21 @@ mod tests {
         assert_eq!(g.num_edges(), 4);
         let has = |s: u32, d: u32| (0..4).any(|i| g.src[i] == s && g.dst[i] == d);
         assert!(has(1, 0) && has(2, 1) && has(0, 1) && has(1, 2));
+    }
+
+    #[test]
+    fn dedup_keeps_first_seen_weight_deterministically() {
+        // Duplicates carrying different weights: the earliest input
+        // position must win every time, whatever the sort does with ties.
+        let mut g = Coo::new(4);
+        g.push_weighted(2, 3, 40);
+        g.push_weighted(0, 1, 10);
+        g.push_weighted(0, 1, 20);
+        g.push_weighted(0, 1, 30);
+        g.push_weighted(2, 3, 50);
+        g.dedup();
+        assert_eq!(g.num_edges(), 2);
+        assert_eq!(g.weights, vec![10, 40]);
     }
 
     #[test]

@@ -135,14 +135,33 @@ fn rgg_weighted(p: RggParams, weighted: bool) -> Csr {
     g
 }
 
+/// Positional generator behind [`uniform_weights`]: the k-th call to
+/// [`next_weight`](UniformWeightStream::next_weight) is the weight of
+/// global edge id k. The out-of-core builder draws from this stream as
+/// it emits edges in final edge-id order, so it produces the exact bytes
+/// the in-memory path gets from materializing the whole vector.
+pub struct UniformWeightStream {
+    rng: crate::util::rng::Pcg32,
+}
+
+impl UniformWeightStream {
+    pub fn new(seed: u64) -> Self {
+        UniformWeightStream { rng: crate::util::rng::Pcg32::new(seed ^ 0x57e1_6475) }
+    }
+
+    /// The paper's uniform random [1, 64] weight for the next edge id.
+    pub fn next_weight(&mut self) -> super::Weight {
+        self.rng.weight(1, 64)
+    }
+}
+
 /// The paper's uniform random [1, 64] edge weights, one per global edge
 /// id. Weights are positional, so the same (num_edges, seed) pair yields
 /// identical weights for every representation of the same graph — raw CSR
 /// and compressed `.gsr` stay bit-comparable for SSSP/MST.
 pub fn uniform_weights(num_edges: usize, seed: u64) -> Vec<super::Weight> {
-    use crate::util::rng::Pcg32;
-    let mut rng = Pcg32::new(seed ^ 0x57e1_6475);
-    (0..num_edges).map(|_| rng.weight(1, 64)).collect()
+    let mut stream = UniformWeightStream::new(seed);
+    (0..num_edges).map(|_| stream.next_weight()).collect()
 }
 
 /// Attach the paper's uniform random [1, 64] edge weights.

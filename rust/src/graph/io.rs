@@ -1,69 +1,101 @@
 //! Graph IO: whitespace edge lists (SNAP style), MatrixMarket coordinate
 //! files (UF Sparse Matrix Collection style) — the two formats the paper's
 //! datasets ship in — plus the `.gsr` compressed-graph container
-//! ([`save_gsr`] / [`load_gsr`]).
+//! ([`save_gsr`] / [`load_gsr`] / [`load_gsr_mmap`]).
 //!
-//! ## `.gsr` container (version 2, little-endian)
+//! ## `.gsr` container (version 3, little-endian)
 //!
 //! ```text
 //! magic    "GSR1"
-//! u32      version (1 | 2)
+//! u32      version (1 | 2 | 3)
 //! u8       codec tag (0 = varint, 1 = zeta)   u8  zeta k (0 for varint)
 //! u8       flags (bit 0: weighted,
-//!                 bit 1: in-edge view, v2)     u8  reserved
+//!                 bit 1: in-edge view, v2+)    u8  reserved
 //! u64      num_vertices        u64 num_edges
 //! section  degrees      (u64 byte length + one varint per vertex)
 //! section  stream sizes (u64 byte length + one varint per vertex)
 //! section  payload      (u64 byte length + encoded gap streams)
 //! section  weights      (present iff flag bit 0; u64 length + varints)
-//! -- v2, present iff flag bit 1 ------------------------------------
+//! -- v2+, present iff flag bit 1 -----------------------------------
 //! section  in-degrees      (u64 byte length + one varint per vertex)
 //! section  in stream sizes (u64 byte length + one varint per vertex)
 //! section  in payload      (u64 byte length + encoded CSC gap streams)
 //! section  edge permutation (u64 byte length + one varint per edge:
 //!          CSC position -> global out-edge id)
+//! -- v3 ------------------------------------------------------------
+//! section  checksum table (u64 length + 8 bytes per entry: entry 0 =
+//!          FNV-1a of the 28-byte header, then one FNV-1a per data
+//!          section's content bytes, in file order)
 //! ------------------------------------------------------------------
 //! u64      FNV-1a checksum of every preceding byte
 //! ```
 //!
 //! Degrees and per-vertex stream sizes are stored as varint *deltas* of
 //! the in-memory prefix arrays, which the loader reconstructs; both are
-//! cross-checked against `num_edges` / the payload length, and the
-//! trailing checksum rejects torn or corrupted files. Beyond the
-//! checksum, the loader validates every vertex's stream structurally
-//! (decodes to exactly its degree, in bounds, sorted, ids < n) so an
-//! internally inconsistent file from a buggy writer fails at load — a
-//! loaded graph can never panic mid-traversal. The v2 in-edge sections
-//! get the same treatment plus permutation checks: the permutation must
-//! be a bijection over edge ids, and every in-edge (u -> v) at CSC
-//! position p must map to an out-edge id inside u's edge-id range whose
-//! destination is v — so the pull and push views provably describe the
-//! same edge set before any traversal runs. Version-1 files (no in-edge
-//! sections) still load; they simply traverse push-only.
+//! cross-checked against `num_edges` / the payload length. Two loaders
+//! share one section decoder:
+//!
+//! - [`load_gsr`] reads the file into owned buffers and verifies the
+//!   trailing whole-file checksum up front, then validates every
+//!   vertex's stream structurally (decodes to exactly its degree, in
+//!   bounds, sorted, ids < n) so an internally inconsistent file from a
+//!   buggy writer fails at load — a loaded graph can never panic
+//!   mid-traversal. The in-edge sections get the same treatment plus
+//!   permutation checks: the permutation must be a bijection over edge
+//!   ids, and every in-edge (u -> v) at CSC position p must map to an
+//!   out-edge id inside u's edge-id range whose destination is v — so
+//!   the pull and push views provably describe the same edge set before
+//!   any traversal runs.
+//! - [`load_gsr_mmap`] maps the file and hands the decoder zero-copy
+//!   windows into it: payload bytes are never duplicated, open time is
+//!   independent of graph size, and co-located processes share one
+//!   page-cache copy. Validation is [tiered](MmapValidation): the v3
+//!   per-section checksum table lets it verify exactly as much as the
+//!   caller wants to pay for (pre-v3 containers fall back to the
+//!   whole-file pass). Every section bound is checked against the
+//!   mapped length before any byte is dereferenced, so truncated or
+//!   reframed files fail with typed errors — no SIGBUS, no panic.
+//!
+//! Version-1 files (no in-edge sections) and version-2 files (no
+//! checksum table) still load; [`save_gsr_versioned`] can write them
+//! for compatibility testing.
 
-use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
 use std::path::Path;
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
 use super::compressed::codec::{read_varint, write_varint};
-use super::compressed::{Codec, CompressedCsr};
-use super::{builder, Coo, Csr, VertexId};
+use super::compressed::{Bytes, Codec, CompressedCsr};
+use super::{builder, Coo, Csr, VertexId, Weight};
+use crate::util::mmap::Mmap;
 
 /// `.gsr` magic bytes.
 pub const GSR_MAGIC: &[u8; 4] = b"GSR1";
-/// Current `.gsr` container version (v2 adds the optional in-edge view).
-pub const GSR_VERSION: u32 = 2;
+/// Current `.gsr` container version (v2 added the optional in-edge view,
+/// v3 the per-section checksum table that makes mapped loads verifiable
+/// without a whole-file pass).
+pub const GSR_VERSION: u32 = 3;
 /// Oldest container version the loader still accepts.
 pub const GSR_MIN_VERSION: u32 = 1;
+/// First version carrying the per-section checksum table.
+const GSR_TABLE_VERSION: u32 = 3;
+/// Fixed header length: magic + version + codec/k + flags/reserved + n + m.
+const GSR_HEADER_LEN: usize = 28;
 
-/// Read a SNAP-style edge list: lines of `src dst [weight]`, `#` comments.
-/// Vertex ids are used as-is; num_vertices = max id + 1.
-pub fn read_edge_list(path: &Path) -> Result<Coo> {
-    let f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
-    let mut coo = Coo::new(0);
+/// Stream a SNAP-style edge list — lines of `src dst [weight]`, `#`/`%`
+/// comments — through `f` without materializing it. Returns the vertex
+/// count (max id + 1, matching [`read_edge_list`]). Weighted and
+/// unweighted lines must not mix.
+pub fn for_each_edge_list_edge(
+    path: &Path,
+    mut f: impl FnMut(VertexId, VertexId, Option<Weight>) -> Result<()>,
+) -> Result<usize> {
+    let file = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
     let mut max_id: u64 = 0;
-    for (lineno, line) in BufReader::new(f).lines().enumerate() {
+    let mut weighted: Option<bool> = None;
+    for (lineno, line) in BufReader::new(file).lines().enumerate() {
         let line = line?;
         let t = line.trim();
         if t.is_empty() || t.starts_with('#') || t.starts_with('%') {
@@ -73,16 +105,27 @@ pub fn read_edge_list(path: &Path) -> Result<Coo> {
         let s: u64 = it.next().context("missing src")?.parse().with_context(|| format!("line {}", lineno + 1))?;
         let d: u64 = it.next().context("missing dst")?.parse().with_context(|| format!("line {}", lineno + 1))?;
         max_id = max_id.max(s).max(d);
-        coo.src.push(s as VertexId);
-        coo.dst.push(d as VertexId);
-        if let Some(w) = it.next() {
-            coo.weights.push(w.parse().unwrap_or(1));
+        let w = it.next().map(|w| w.parse().unwrap_or(1));
+        if *weighted.get_or_insert(w.is_some()) != w.is_some() {
+            bail!("mixed weighted/unweighted lines in {}", path.display());
         }
+        f(s as VertexId, d as VertexId, w)?;
     }
-    if !coo.weights.is_empty() && coo.weights.len() != coo.src.len() {
-        bail!("mixed weighted/unweighted lines in {}", path.display());
-    }
-    coo.num_vertices = (max_id + 1) as usize;
+    Ok((max_id + 1) as usize)
+}
+
+/// Read a SNAP-style edge list: lines of `src dst [weight]`, `#` comments.
+/// Vertex ids are used as-is; num_vertices = max id + 1.
+pub fn read_edge_list(path: &Path) -> Result<Coo> {
+    let mut coo = Coo::new(0);
+    coo.num_vertices = for_each_edge_list_edge(path, |s, d, w| {
+        coo.src.push(s);
+        coo.dst.push(d);
+        if let Some(w) = w {
+            coo.weights.push(w);
+        }
+        Ok(())
+    })?;
     Ok(coo)
 }
 
@@ -101,11 +144,28 @@ pub fn write_edge_list(path: &Path, coo: &Coo) -> Result<()> {
     Ok(())
 }
 
-/// Read a MatrixMarket coordinate file (1-indexed; `%%MatrixMarket` header;
-/// optional `symmetric` qualifier which we expand).
-pub fn read_matrix_market(path: &Path) -> Result<Coo> {
-    let f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
-    let mut lines = BufReader::new(f).lines();
+/// Size-line facts of a MatrixMarket file, returned by
+/// [`for_each_matrix_market_edge`] after the stream completes.
+pub struct MtxHeader {
+    /// max(rows, cols) — the vertex-count convention [`read_matrix_market`]
+    /// has always used.
+    pub num_vertices: usize,
+    pub nnz: usize,
+    pub symmetric: bool,
+    pub pattern: bool,
+}
+
+/// Stream a MatrixMarket coordinate file through `f` (symmetric entries
+/// are expanded into both directions, exactly as [`read_matrix_market`]
+/// does). Entries outside the declared matrix size are typed errors —
+/// the streaming build path writes straight to disk, so garbage must be
+/// refused before it is spilled.
+pub fn for_each_matrix_market_edge(
+    path: &Path,
+    mut f: impl FnMut(VertexId, VertexId, Option<Weight>) -> Result<()>,
+) -> Result<MtxHeader> {
+    let file = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let mut lines = BufReader::new(file).lines();
     let header = loop {
         match lines.next() {
             Some(l) => {
@@ -140,7 +200,6 @@ pub fn read_matrix_market(path: &Path) -> Result<Coo> {
     let nnz: usize = it.next().context("nnz")?.parse()?;
     let n = rows.max(cols);
 
-    let mut coo = Coo::with_capacity(n, if symmetric { nnz * 2 } else { nnz }, !pattern);
     for line in lines {
         let line = line?;
         let t = line.trim();
@@ -150,24 +209,35 @@ pub fn read_matrix_market(path: &Path) -> Result<Coo> {
         let mut it = t.split_whitespace();
         let r: usize = it.next().context("row")?.parse()?;
         let c: usize = it.next().context("col")?.parse()?;
-        let w: u32 = if pattern {
-            1
+        if r == 0 || c == 0 || r > n || c > n {
+            bail!("entry ({r}, {c}) outside declared {rows}x{cols} matrix in {}", path.display());
+        }
+        let w: Option<Weight> = if pattern {
+            None
         } else {
-            it.next().map(|v| v.parse::<f64>().unwrap_or(1.0).abs().max(1.0) as u32).unwrap_or(1)
+            Some(it.next().map(|v| v.parse::<f64>().unwrap_or(1.0).abs().max(1.0) as u32).unwrap_or(1))
         };
         let (s, d) = ((r - 1) as VertexId, (c - 1) as VertexId);
-        if pattern {
-            coo.push(s, d);
-            if symmetric && s != d {
-                coo.push(d, s);
-            }
-        } else {
-            coo.push_weighted(s, d, w);
-            if symmetric && s != d {
-                coo.push_weighted(d, s, w);
-            }
+        f(s, d, w)?;
+        if symmetric && s != d {
+            f(d, s, w)?;
         }
     }
+    Ok(MtxHeader { num_vertices: n, nnz, symmetric, pattern })
+}
+
+/// Read a MatrixMarket coordinate file (1-indexed; `%%MatrixMarket` header;
+/// optional `symmetric` qualifier which we expand).
+pub fn read_matrix_market(path: &Path) -> Result<Coo> {
+    let mut coo = Coo::new(0);
+    let hdr = for_each_matrix_market_edge(path, |s, d, w| {
+        match w {
+            Some(w) => coo.push_weighted(s, d, w),
+            None => coo.push(s, d),
+        }
+        Ok(())
+    })?;
+    coo.num_vertices = hdr.num_vertices;
     Ok(coo)
 }
 
@@ -195,17 +265,97 @@ fn put_u64(out: &mut Vec<u8>, x: u64) {
     out.extend_from_slice(&x.to_le_bytes());
 }
 
-/// FNV-1a 64-bit (dependency-free integrity check). Public but hidden:
-/// integration tests re-checksum hand-corrupted containers with it
-/// rather than duplicating the constants.
-#[doc(hidden)]
-pub fn fnv1a(bytes: &[u8]) -> u64 {
-    let mut h = 0xcbf2_9ce4_8422_2325u64;
+/// FNV-1a 64-bit offset basis.
+pub(crate) const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// Fold `bytes` into a running FNV-1a 64 state (seed with [`FNV_OFFSET`]).
+pub(crate) fn fnv1a_update(mut h: u64, bytes: &[u8]) -> u64 {
     for &b in bytes {
         h ^= b as u64;
         h = h.wrapping_mul(0x0000_0100_0000_01b3);
     }
     h
+}
+
+/// FNV-1a 64-bit (dependency-free integrity check). Public but hidden:
+/// integration tests re-checksum hand-corrupted containers with it
+/// rather than duplicating the constants.
+#[doc(hidden)]
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    fnv1a_update(FNV_OFFSET, bytes)
+}
+
+/// Streaming `.gsr` writer: frames sections, keeps the running
+/// whole-file checksum and (v3) the per-section checksum table. Both
+/// [`save_gsr`] and the out-of-core builder emit through this one type,
+/// so their outputs are byte-identical by construction.
+pub(crate) struct GsrSink<W: Write> {
+    w: W,
+    version: u32,
+    file_hash: u64,
+    section_hashes: Vec<u64>,
+}
+
+impl<W: Write> GsrSink<W> {
+    pub(crate) fn new(w: W, version: u32) -> Self {
+        GsrSink { w, version, file_hash: FNV_OFFSET, section_hashes: Vec::new() }
+    }
+
+    fn write_raw(&mut self, bytes: &[u8]) -> Result<()> {
+        self.file_hash = fnv1a_update(self.file_hash, bytes);
+        self.w.write_all(bytes)?;
+        Ok(())
+    }
+
+    /// Write the fixed header; its checksum becomes table entry 0.
+    pub(crate) fn header(&mut self, bytes: &[u8]) -> Result<()> {
+        debug_assert_eq!(bytes.len(), GSR_HEADER_LEN);
+        self.section_hashes.push(fnv1a(bytes));
+        self.write_raw(bytes)
+    }
+
+    /// Write one framed section from an in-memory buffer.
+    pub(crate) fn section(&mut self, content: &[u8]) -> Result<()> {
+        self.write_raw(&(content.len() as u64).to_le_bytes())?;
+        self.section_hashes.push(fnv1a(content));
+        self.write_raw(content)
+    }
+
+    /// Write one framed section of known length streamed from a reader
+    /// in 1 MiB chunks — the out-of-core builder's path for payload
+    /// sections that never fit in memory.
+    pub(crate) fn section_from_reader(&mut self, len: u64, r: &mut impl Read) -> Result<()> {
+        self.write_raw(&len.to_le_bytes())?;
+        let mut hash = FNV_OFFSET;
+        let mut remaining = len;
+        let mut buf = vec![0u8; (1usize << 20).min(len.max(1) as usize)];
+        while remaining > 0 {
+            let take = buf.len().min(remaining as usize);
+            r.read_exact(&mut buf[..take])?;
+            hash = fnv1a_update(hash, &buf[..take]);
+            self.write_raw(&buf[..take])?;
+            remaining -= take as u64;
+        }
+        self.section_hashes.push(hash);
+        Ok(())
+    }
+
+    /// Emit the v3 checksum table (when the version carries one) and the
+    /// trailing whole-file checksum, then flush.
+    pub(crate) fn finish(mut self) -> Result<()> {
+        if self.version >= GSR_TABLE_VERSION {
+            let mut table = Vec::with_capacity(self.section_hashes.len() * 8);
+            for h in &self.section_hashes {
+                table.extend_from_slice(&h.to_le_bytes());
+            }
+            self.write_raw(&(table.len() as u64).to_le_bytes())?;
+            self.write_raw(&table)?;
+        }
+        let h = self.file_hash;
+        self.w.write_all(&h.to_le_bytes())?;
+        self.w.flush()?;
+        Ok(())
+    }
 }
 
 /// Bounds-checked little-endian cursor for parsing `.gsr` buffers.
@@ -216,12 +366,14 @@ struct Cur<'a> {
 
 impl<'a> Cur<'a> {
     fn take(&mut self, n: usize) -> Result<&'a [u8]> {
-        if self.p + n > self.b.len() {
-            bail!("truncated .gsr: wanted {n} bytes at offset {}", self.p);
+        match self.p.checked_add(n) {
+            Some(end) if end <= self.b.len() => {
+                let s = &self.b[self.p..self.p + n];
+                self.p += n;
+                Ok(s)
+            }
+            _ => bail!("truncated .gsr: wanted {n} bytes at offset {}", self.p),
         }
-        let s = &self.b[self.p..self.p + n];
-        self.p += n;
-        Ok(s)
     }
 
     fn u8(&mut self) -> Result<u8> {
@@ -236,9 +388,14 @@ impl<'a> Cur<'a> {
         Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
-    fn section(&mut self) -> Result<&'a [u8]> {
+    /// Frame one section, returning its `(start, len)` in the buffer
+    /// without dereferencing the content — the mapped loader turns these
+    /// into zero-copy windows.
+    fn section_range(&mut self) -> Result<(usize, usize)> {
         let len = self.u64()? as usize;
-        self.take(len)
+        let start = self.p;
+        self.take(len)?;
+        Ok((start, len))
     }
 }
 
@@ -275,45 +432,54 @@ fn read_varint_prefix(section: &[u8], count: usize, what: &str) -> Result<Vec<u6
 
 /// Serialize a compressed graph into the `.gsr` container format.
 pub fn save_gsr(path: &Path, g: &CompressedCsr) -> Result<()> {
+    save_gsr_versioned(path, g, GSR_VERSION)
+}
+
+/// Serialize at a specific container version. The public API always
+/// writes the current version; this exists so compatibility tests can
+/// produce genuine older files instead of byte-patching version fields.
+#[doc(hidden)]
+pub fn save_gsr_versioned(path: &Path, g: &CompressedCsr, version: u32) -> Result<()> {
+    if !(GSR_MIN_VERSION..=GSR_VERSION).contains(&version) {
+        bail!("cannot write .gsr version {version}");
+    }
+    if g.has_in_view() && version < 2 {
+        bail!("version-1 .gsr containers cannot carry an in-edge view");
+    }
     let n = g.num_vertices;
-    let mut buf: Vec<u8> = Vec::with_capacity(g.payload.len() + n * 2 + 64);
-    buf.extend_from_slice(GSR_MAGIC);
-    put_u32(&mut buf, GSR_VERSION);
-    let (tag, k) = match g.codec {
-        Codec::Varint => (0u8, 0u8),
-        Codec::Zeta(k) => (1u8, k as u8),
-    };
-    buf.push(tag);
-    buf.push(k);
-    buf.push(u8::from(g.is_weighted()) | (u8::from(g.has_in_view()) << 1));
-    buf.push(0); // reserved
-    put_u64(&mut buf, n as u64);
-    put_u64(&mut buf, g.num_edges() as u64);
+    let f = std::fs::File::create(path).with_context(|| format!("write {}", path.display()))?;
+    let mut sink = GsrSink::new(BufWriter::new(f), version);
+
+    let hdr = gsr_header_bytes(
+        version,
+        g.codec,
+        g.is_weighted(),
+        g.has_in_view(),
+        n as u64,
+        g.num_edges() as u64,
+    );
+    sink.header(&hdr)?;
 
     let mut degs = Vec::new();
     for v in 0..n {
         write_varint(&mut degs, (g.edge_offsets[v + 1] - g.edge_offsets[v]) as u64);
     }
-    put_u64(&mut buf, degs.len() as u64);
-    buf.extend_from_slice(&degs);
+    sink.section(&degs)?;
 
     let mut lens = Vec::new();
     for v in 0..n {
         write_varint(&mut lens, g.byte_offsets[v + 1] - g.byte_offsets[v]);
     }
-    put_u64(&mut buf, lens.len() as u64);
-    buf.extend_from_slice(&lens);
+    sink.section(&lens)?;
 
-    put_u64(&mut buf, g.payload.len() as u64);
-    buf.extend_from_slice(&g.payload);
+    sink.section(g.payload.as_slice())?;
 
     if g.is_weighted() {
         let mut ws = Vec::new();
         for &w in &g.edge_weights {
             write_varint(&mut ws, w as u64);
         }
-        put_u64(&mut buf, ws.len() as u64);
-        buf.extend_from_slice(&ws);
+        sink.section(&ws)?;
     }
 
     if g.has_in_view() {
@@ -321,52 +487,64 @@ pub fn save_gsr(path: &Path, g: &CompressedCsr) -> Result<()> {
         for v in 0..n {
             write_varint(&mut indegs, (g.in_edge_offsets[v + 1] - g.in_edge_offsets[v]) as u64);
         }
-        put_u64(&mut buf, indegs.len() as u64);
-        buf.extend_from_slice(&indegs);
+        sink.section(&indegs)?;
 
         let mut inlens = Vec::new();
         for v in 0..n {
             write_varint(&mut inlens, g.in_byte_offsets[v + 1] - g.in_byte_offsets[v]);
         }
-        put_u64(&mut buf, inlens.len() as u64);
-        buf.extend_from_slice(&inlens);
+        sink.section(&inlens)?;
 
-        put_u64(&mut buf, g.in_payload.len() as u64);
-        buf.extend_from_slice(&g.in_payload);
+        sink.section(g.in_payload.as_slice())?;
 
         let mut perm = Vec::new();
         for &e in &g.in_edge_perm {
             write_varint(&mut perm, e as u64);
         }
-        put_u64(&mut buf, perm.len() as u64);
-        buf.extend_from_slice(&perm);
+        sink.section(&perm)?;
     }
 
-    let checksum = fnv1a(&buf);
-    put_u64(&mut buf, checksum);
-    std::fs::write(path, &buf).with_context(|| format!("write {}", path.display()))?;
-    Ok(())
+    sink.finish().with_context(|| format!("write {}", path.display()))
 }
 
-/// Load a `.gsr` container, verifying checksum, version, and section
-/// consistency before handing back the compressed graph.
-pub fn load_gsr(path: &Path) -> Result<CompressedCsr> {
-    let bytes = std::fs::read(path).with_context(|| format!("open {}", path.display()))?;
-    // Trace seam: the whole validate + decode as one span.
-    let _span = crate::obs::span(crate::obs::EventKind::GsrDecode, bytes.len() as u64, 0);
-    if let Err(e) = crate::util::faults::maybe_error(crate::util::faults::Seam::GsrDecode) {
-        bail!("{}: {e}", path.display());
-    }
-    if bytes.len() < GSR_MAGIC.len() + 8 {
-        bail!("{} is too short to be a .gsr file", path.display());
-    }
-    let (body, tail) = bytes.split_at(bytes.len() - 8);
-    let stored = u64::from_le_bytes(tail.try_into().unwrap());
-    if fnv1a(body) != stored {
-        bail!("{}: checksum mismatch (corrupted or torn file)", path.display());
-    }
+/// Build the fixed 28-byte header. One function for both writers (the
+/// in-memory saver and the out-of-core builder) so their headers cannot
+/// drift apart.
+pub(crate) fn gsr_header_bytes(
+    version: u32,
+    codec: Codec,
+    weighted: bool,
+    has_in_view: bool,
+    n: u64,
+    m: u64,
+) -> Vec<u8> {
+    let mut hdr = Vec::with_capacity(GSR_HEADER_LEN);
+    hdr.extend_from_slice(GSR_MAGIC);
+    put_u32(&mut hdr, version);
+    let (tag, k) = match codec {
+        Codec::Varint => (0u8, 0u8),
+        Codec::Zeta(k) => (1u8, k as u8),
+    };
+    hdr.push(tag);
+    hdr.push(k);
+    hdr.push(u8::from(weighted) | (u8::from(has_in_view) << 1));
+    hdr.push(0); // reserved
+    put_u64(&mut hdr, n);
+    put_u64(&mut hdr, m);
+    hdr
+}
 
-    let mut c = Cur { b: body, p: 0 };
+/// Parsed fixed header of a `.gsr` container.
+struct GsrHeader {
+    version: u32,
+    codec: Codec,
+    weighted: bool,
+    has_in_view: bool,
+    n: usize,
+    m: usize,
+}
+
+fn parse_gsr_header(c: &mut Cur, path: &Path) -> Result<GsrHeader> {
     if c.take(4)? != GSR_MAGIC {
         bail!("{}: bad magic (not a .gsr file)", path.display());
     }
@@ -393,24 +571,66 @@ pub fn load_gsr(path: &Path) -> Result<CompressedCsr> {
     let _reserved = c.u8()?;
     let n = c.u64()? as usize;
     let m = c.u64()? as usize;
+    Ok(GsrHeader { version, codec, weighted, has_in_view, n, m })
+}
 
-    let deg_section = c.section()?;
-    let edge_prefix = read_varint_prefix(deg_section, n, "degree")?;
+/// Parse and cross-check every section of a `.gsr` body (the file minus
+/// its trailing whole-file checksum), shared by the owned and mapped
+/// loaders. With `mapped` set, payload sections become zero-copy windows
+/// into the mapping (`body` must start at mapping offset 0); otherwise
+/// they are copied into owned buffers.
+///
+/// Validation order is deliberate: framing first (every bound checked
+/// before any content is touched), then index-section decode with the
+/// header cross-checks, then the v3 checksum table (header + every
+/// section; the payload entries only when `verify_payload_checksums` —
+/// skipping them is what makes trusted-artifact opens O(index) instead
+/// of O(file)). Index sections are fully decoded either way, so their
+/// table entries cost nothing extra to verify.
+fn decode_sections(
+    body: &[u8],
+    path: &Path,
+    mapped: Option<&Arc<Mmap>>,
+    verify_payload_checksums: bool,
+) -> Result<(CompressedCsr, u32)> {
+    let mut c = Cur { b: body, p: 0 };
+    let hdr = parse_gsr_header(&mut c, path)?;
+    let (n, m) = (hdr.n, hdr.m);
+
+    // Framing walk: which sections the flags promise, and where they are.
+    let mut names: Vec<&'static str> = vec!["degree", "stream-size", "payload"];
+    if hdr.weighted {
+        names.push("weight");
+    }
+    if hdr.has_in_view {
+        names.extend(["in-degree", "in-stream-size", "in-payload", "permutation"]);
+    }
+    let mut ranges = Vec::with_capacity(names.len());
+    for _ in &names {
+        ranges.push(c.section_range()?);
+    }
+    let table_range = if hdr.version >= GSR_TABLE_VERSION { Some(c.section_range()?) } else { None };
+    if c.p != body.len() {
+        bail!("{}: {} trailing bytes after last section", path.display(), body.len() - c.p);
+    }
+    let sec = |r: (usize, usize)| &body[r.0..r.0 + r.1];
+
+    // Index sections: decode + cross-check against the header counts.
+    let deg_r = ranges[0];
+    let len_r = ranges[1];
+    let pay_r = ranges[2];
+    let mut next = 3;
+    let edge_prefix = read_varint_prefix(sec(deg_r), n, "degree")?;
     if edge_prefix[n] != m as u64 {
         bail!("degree section sums to {} but header says {m} edges", edge_prefix[n]);
     }
-    let len_section = c.section()?;
-    let byte_offsets = read_varint_prefix(len_section, n, "stream-size")?;
-    let payload = c.section()?.to_vec();
-    if byte_offsets[n] != payload.len() as u64 {
-        bail!(
-            "stream sizes sum to {} but payload is {} bytes",
-            byte_offsets[n],
-            payload.len()
-        );
+    let byte_offsets = read_varint_prefix(sec(len_r), n, "stream-size")?;
+    if byte_offsets[n] != pay_r.1 as u64 {
+        bail!("stream sizes sum to {} but payload is {} bytes", byte_offsets[n], pay_r.1);
     }
-    let edge_weights = if weighted {
-        let ws = c.section()?;
+    let edge_weights = if hdr.weighted {
+        let ws = sec(ranges[next]);
+        next += 1;
         if m > ws.len() {
             bail!("weight section has {} bytes but needs {m} entries", ws.len());
         }
@@ -430,23 +650,24 @@ pub fn load_gsr(path: &Path) -> Result<CompressedCsr> {
         Vec::new()
     };
 
-    let (in_edge_offsets, in_byte_offsets, in_payload, in_edge_perm) = if has_in_view {
-        let indeg_section = c.section()?;
-        let in_prefix = read_varint_prefix(indeg_section, n, "in-degree")?;
+    let (in_edge_offsets, in_byte_offsets, in_pay_r, in_edge_perm) = if hdr.has_in_view {
+        let indeg_r = ranges[next];
+        let inlen_r = ranges[next + 1];
+        let inp_r = ranges[next + 2];
+        let perm_r = ranges[next + 3];
+        let in_prefix = read_varint_prefix(sec(indeg_r), n, "in-degree")?;
         if in_prefix[n] != m as u64 {
             bail!("in-degree section sums to {} but header says {m} edges", in_prefix[n]);
         }
-        let inlen_section = c.section()?;
-        let in_byte_offsets = read_varint_prefix(inlen_section, n, "in-stream-size")?;
-        let in_payload = c.section()?.to_vec();
-        if in_byte_offsets[n] != in_payload.len() as u64 {
+        let in_byte_offsets = read_varint_prefix(sec(inlen_r), n, "in-stream-size")?;
+        if in_byte_offsets[n] != inp_r.1 as u64 {
             bail!(
                 "in-stream sizes sum to {} but in-payload is {} bytes",
                 in_byte_offsets[n],
-                in_payload.len()
+                inp_r.1
             );
         }
-        let perm_section = c.section()?;
+        let perm_section = sec(perm_r);
         if m > perm_section.len() {
             bail!("permutation section has {} bytes but needs {m} entries", perm_section.len());
         }
@@ -465,42 +686,79 @@ pub fn load_gsr(path: &Path) -> Result<CompressedCsr> {
         (
             in_prefix.into_iter().map(|x| x as super::SizeT).collect(),
             in_byte_offsets,
-            in_payload,
+            Some(inp_r),
             perm,
         )
     } else {
-        (Vec::new(), Vec::new(), Vec::new(), Vec::new())
+        (Vec::new(), Vec::new(), None, Vec::new())
     };
 
-    if c.p != body.len() {
-        bail!("{}: {} trailing bytes after last section", path.display(), body.len() - c.p);
+    // v3 checksum table. Verified *after* the index cross-checks so a
+    // wrong header count reports as a count mismatch, not a checksum one.
+    if let Some(tr) = table_range {
+        let table = sec(tr);
+        if table.len() != (names.len() + 1) * 8 {
+            bail!(
+                "{}: checksum table is {} bytes for {} sections",
+                path.display(),
+                table.len(),
+                names.len()
+            );
+        }
+        let entry = |i: usize| u64::from_le_bytes(table[i * 8..i * 8 + 8].try_into().unwrap());
+        if entry(0) != fnv1a(&body[..GSR_HEADER_LEN]) {
+            bail!("{}: header checksum mismatch (corrupted or torn file)", path.display());
+        }
+        for (i, (&name, &r)) in names.iter().zip(&ranges).enumerate() {
+            let is_payload = name == "payload" || name == "in-payload";
+            if is_payload && !verify_payload_checksums {
+                continue;
+            }
+            if entry(i + 1) != fnv1a(sec(r)) {
+                bail!("{}: {name} section checksum mismatch (corrupted or torn file)", path.display());
+            }
+        }
     }
 
+    // Payload bytes: zero-copy windows when mapped, owned copies otherwise
+    // (`body` starts at mapping offset 0, so body ranges are map ranges).
+    let make_bytes = |r: (usize, usize)| -> Bytes {
+        match mapped {
+            Some(map) => Bytes::mapped(Arc::clone(map), r.0, r.1),
+            None => sec(r).to_vec().into(),
+        }
+    };
     let g = CompressedCsr {
         num_vertices: n,
-        codec,
+        codec: hdr.codec,
         edge_offsets: edge_prefix.into_iter().map(|x| x as super::SizeT).collect(),
         byte_offsets,
-        payload,
+        payload: make_bytes(pay_r),
         edge_weights,
         in_edge_offsets,
         in_byte_offsets,
-        in_payload,
+        in_payload: in_pay_r.map(make_bytes).unwrap_or_default(),
         in_edge_perm,
     };
+    Ok((g, hdr.version))
+}
 
-    // The checksum only proves the file arrived as written; a buggy or
-    // adversarial writer can still emit internally inconsistent sections
-    // (e.g. swapped per-vertex stream sizes that sum correctly). Validate
-    // every stream structurally (never panics), then decode-check that
-    // neighbor ids are sorted and in range, so traversal can never blow
-    // up inside a pool worker on a loaded file.
+/// Structural + semantic validation of a decoded container: every stream
+/// decodes to exactly its degree with sorted in-range ids, and the
+/// in-edge view (if present) provably describes the same edge set as the
+/// out view. Checksums only prove the file arrived as written; this is
+/// what proves a buggy or adversarial *writer* can't hand traversal a
+/// graph that panics or silently diverges mid-run.
+pub(crate) fn validate_semantics(g: &CompressedCsr) -> Result<()> {
     use super::compressed::codec::validate_stream;
+    let n = g.num_vertices;
+    let m = g.num_edges();
+    let codec = g.codec;
     for v in 0..n as VertexId {
         let s = g.byte_offsets[v as usize] as usize;
         let e = g.byte_offsets[v as usize + 1] as usize;
         let deg = g.degree(v);
-        if !validate_stream(codec, &g.payload[s..e], deg) {
+        if !validate_stream(codec, &g.payload.as_slice()[s..e], deg) {
             bail!("vertex {v}: encoded stream does not decode to its degree ({deg})");
         }
         let mut prev = 0u64;
@@ -539,7 +797,7 @@ pub fn load_gsr(path: &Path) -> Result<CompressedCsr> {
             let s = g.in_byte_offsets[v as usize] as usize;
             let e = g.in_byte_offsets[v as usize + 1] as usize;
             let indeg = g.in_degree(v);
-            if !validate_stream(codec, &g.in_payload[s..e], indeg) {
+            if !validate_stream(codec, &g.in_payload.as_slice()[s..e], indeg) {
                 bail!("vertex {v}: encoded in-stream does not decode to its in-degree ({indeg})");
             }
             let base = g.in_edge_offsets[v as usize] as usize;
@@ -573,7 +831,119 @@ pub fn load_gsr(path: &Path) -> Result<CompressedCsr> {
             }
         }
     }
+    Ok(())
+}
 
+/// Load a `.gsr` container into owned buffers, verifying checksum,
+/// version, and section consistency before handing back the compressed
+/// graph.
+pub fn load_gsr(path: &Path) -> Result<CompressedCsr> {
+    let bytes = std::fs::read(path).with_context(|| format!("open {}", path.display()))?;
+    // Trace seam: the whole validate + decode as one span.
+    let _span = crate::obs::span(crate::obs::EventKind::GsrDecode, bytes.len() as u64, 0);
+    if let Err(e) = crate::util::faults::maybe_error(crate::util::faults::Seam::GsrDecode) {
+        bail!("{}: {e}", path.display());
+    }
+    if bytes.len() < GSR_MAGIC.len() + 8 {
+        bail!("{} is too short to be a .gsr file", path.display());
+    }
+    let (body, tail) = bytes.split_at(bytes.len() - 8);
+    let stored = u64::from_le_bytes(tail.try_into().unwrap());
+    if fnv1a(body) != stored {
+        bail!("{}: checksum mismatch (corrupted or torn file)", path.display());
+    }
+    // The whole-file pass above already proved integrity, so the
+    // per-section payload checksums would be redundant here.
+    let (g, _version) = decode_sections(body, path, None, false)?;
+    validate_semantics(&g)?;
+    Ok(g)
+}
+
+/// How much of a mapped `.gsr` [`load_gsr_mmap`] verifies before
+/// returning. Framing and the index sections (degrees, stream sizes,
+/// weights, permutation) are always fully decoded and cross-checked —
+/// those bounds are what keep every later payload access in range — so
+/// the levels only differ in how the *payload* bytes are treated.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum MmapValidation {
+    /// No payload verification: trust the artifact, start instantly
+    /// without paging it in. Only for containers you produced yourself —
+    /// a corrupted payload stream surfaces later as garbage neighbors or
+    /// a decode panic mid-traversal.
+    Bounds,
+    /// Verify the payload sections' v3 checksums (one sequential pass,
+    /// no decode). Pre-v3 containers fall back to the whole-file
+    /// checksum. The default: the same corruption guarantee
+    /// [`load_gsr`] gives, still zero-copy.
+    #[default]
+    Checksums,
+    /// Checksums plus the full structural/semantic pass the owned loader
+    /// runs — byte-for-byte the same acceptance criteria as
+    /// [`load_gsr`].
+    Full,
+}
+
+impl std::str::FromStr for MmapValidation {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<MmapValidation> {
+        match s {
+            "bounds" => Ok(MmapValidation::Bounds),
+            "checksums" => Ok(MmapValidation::Checksums),
+            "full" => Ok(MmapValidation::Full),
+            _ => bail!("unknown mmap validation level {s:?} (bounds | checksums | full)"),
+        }
+    }
+}
+
+impl std::fmt::Display for MmapValidation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            MmapValidation::Bounds => "bounds",
+            MmapValidation::Checksums => "checksums",
+            MmapValidation::Full => "full",
+        })
+    }
+}
+
+/// Load a `.gsr` container zero-copy: the payload sections stay in the
+/// file mapping (shared page cache, nothing duplicated into the heap)
+/// and only the index arrays are materialized. Open time is dominated by
+/// index decode, not file size, at the default validation level — see
+/// [`MmapValidation`] for the verification/latency trade.
+///
+/// The returned graph is a drop-in [`CompressedCsr`]: traversal,
+/// `serve`, and `swap_graph` cannot tell it from an owned load, and on
+/// unix the mapping keeps working even if the file is unlinked or
+/// replaced behind it.
+pub fn load_gsr_mmap(path: &Path, validation: MmapValidation) -> Result<CompressedCsr> {
+    let map = Arc::new(Mmap::open(path)?);
+    let _span = crate::obs::span(crate::obs::EventKind::GsrDecode, map.len() as u64, 0);
+    if let Err(e) = crate::util::faults::maybe_error(crate::util::faults::Seam::GsrDecode) {
+        bail!("{}: {e}", path.display());
+    }
+    if map.len() < GSR_MAGIC.len() + 8 {
+        bail!("{} is too short to be a .gsr file", path.display());
+    }
+    let body_len = map.len() - 8;
+    let g = {
+        let body = &map.as_slice()[..body_len];
+        let verify_payload = validation != MmapValidation::Bounds;
+        let (g, version) = decode_sections(body, path, Some(&map), verify_payload)?;
+        if version < GSR_TABLE_VERSION && verify_payload {
+            // Pre-table containers can only be verified wholesale. Still
+            // zero-copy — the pass pages the file in but copies nothing.
+            let stored =
+                u64::from_le_bytes(map.as_slice()[body_len..].try_into().unwrap());
+            if fnv1a(body) != stored {
+                bail!("{}: checksum mismatch (corrupted or torn file)", path.display());
+            }
+        }
+        g
+    };
+    if validation == MmapValidation::Full {
+        validate_semantics(&g)?;
+    }
     Ok(g)
 }
 
@@ -628,6 +998,15 @@ mod tests {
     }
 
     #[test]
+    fn edge_list_mixed_weightedness_rejected() {
+        let p = tmp("mixed.txt");
+        std::fs::write(&p, "0 1 5\n1 2\n").unwrap();
+        let err = read_edge_list(&p).unwrap_err().to_string();
+        assert!(err.contains("mixed weighted/unweighted"), "{err}");
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
     fn matrix_market_round_trip() {
         let mut coo = Coo::new(4);
         coo.push(0, 1);
@@ -656,6 +1035,19 @@ mod tests {
     }
 
     #[test]
+    fn matrix_market_out_of_range_entry_rejected() {
+        let p = tmp("oob.mtx");
+        std::fs::write(&p, "%%MatrixMarket matrix coordinate pattern general\n3 3 1\n4 1\n")
+            .unwrap();
+        let err = read_matrix_market(&p).unwrap_err().to_string();
+        assert!(err.contains("outside declared"), "{err}");
+        std::fs::write(&p, "%%MatrixMarket matrix coordinate pattern general\n3 3 1\n0 1\n")
+            .unwrap();
+        assert!(read_matrix_market(&p).is_err(), "0 index must fail (1-indexed format)");
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
     fn gsr_round_trip_weighted_and_unweighted() {
         use crate::graph::datasets::attach_uniform_weights;
         let mut g = builder::from_edges(7, &[(0, 1), (0, 2), (2, 5), (5, 6), (6, 0)]);
@@ -679,7 +1071,7 @@ mod tests {
     }
 
     #[test]
-    fn gsr_v2_in_edge_round_trip() {
+    fn gsr_in_edge_round_trip() {
         let g = builder::from_edges(6, &[(0, 1), (0, 5), (1, 3), (2, 3), (4, 0), (4, 5), (5, 2)]);
         for codec in [Codec::Varint, Codec::Zeta(2)] {
             let cg = CompressedCsr::from_csr_with_in_edges(&g, codec);
@@ -696,24 +1088,36 @@ mod tests {
     }
 
     #[test]
-    fn gsr_v1_files_still_load() {
-        // A v1 file is byte-identical to a v2 file without the in-edge
-        // flag, except for the version field — rewrite it and re-checksum.
+    fn gsr_v1_and_v2_files_still_load() {
+        // Genuine older containers written by the versioned saver: v1
+        // (no in-edge sections, no table), v2 (in-edge view, no table).
         let g = builder::from_edges(4, &[(0, 1), (1, 2), (2, 3), (3, 0)]);
         let cg = CompressedCsr::from_csr(&g, Codec::Varint);
         let p = tmp("v1_compat.gsr");
-        save_gsr(&p, &cg).unwrap();
-        let mut bytes = std::fs::read(&p).unwrap();
-        bytes[4..8].copy_from_slice(&1u32.to_le_bytes());
-        let body_len = bytes.len() - 8;
-        let ck = fnv1a(&bytes[..body_len]).to_le_bytes();
-        bytes[body_len..].copy_from_slice(&ck);
-        std::fs::write(&p, &bytes).unwrap();
+        save_gsr_versioned(&p, &cg, 1).unwrap();
         let back = load_gsr(&p).unwrap();
         assert!(!back.has_in_view(), "v1 containers have no in-edge view");
         assert_eq!(back.edge_offsets, cg.edge_offsets);
         assert_eq!(back.payload, cg.payload);
-        std::fs::remove_file(p).ok();
+        std::fs::remove_file(&p).ok();
+
+        let cg2 = CompressedCsr::from_csr_with_in_edges(&g, Codec::Zeta(2));
+        let p = tmp("v2_compat.gsr");
+        save_gsr_versioned(&p, &cg2, 2).unwrap();
+        let back = load_gsr(&p).unwrap();
+        assert!(back.has_in_view());
+        assert_eq!(back.in_edge_perm, cg2.in_edge_perm);
+        // The mapped loader accepts them too, falling back to the
+        // whole-file checksum in lieu of a table.
+        for lvl in [MmapValidation::Bounds, MmapValidation::Checksums, MmapValidation::Full] {
+            let m = load_gsr_mmap(&p, lvl).unwrap();
+            assert_eq!(m.in_payload, cg2.in_payload, "{lvl}");
+        }
+        std::fs::remove_file(&p).ok();
+
+        // A v1 container cannot carry an in-edge view.
+        let p = tmp("v1_inview.gsr");
+        assert!(save_gsr_versioned(&p, &cg2, 1).is_err());
     }
 
     #[test]
@@ -723,8 +1127,10 @@ mod tests {
         // Chop the last in-payload byte and shrink the last non-empty
         // stream's size to match: sizes stay consistent with the payload
         // length, but that stream no longer decodes to its in-degree.
-        cg.in_payload.pop();
-        let old_total = cg.in_payload.len() as u64 + 1;
+        let mut in_payload = cg.in_payload.to_vec();
+        in_payload.pop();
+        let old_total = in_payload.len() as u64 + 1;
+        cg.in_payload = in_payload.into();
         for o in cg.in_byte_offsets.iter_mut() {
             if *o == old_total {
                 *o -= 1;
@@ -815,7 +1221,7 @@ mod tests {
     }
 
     /// Rewrite the trailing FNV-1a checksum after a hand-edit so the
-    /// mutated header field — not the integrity check — is what the
+    /// mutated field — not the whole-file integrity check — is what the
     /// loader trips on.
     fn rechecksum(bytes: &mut [u8]) {
         let body_len = bytes.len() - 8;
@@ -871,6 +1277,12 @@ mod tests {
             std::fs::write(&p, &bytes).unwrap();
             let err = load_gsr(&p).unwrap_err().to_string();
             assert!(err.contains(want), "{what}: want {want:?} in error, got: {err}");
+            // The mapped loader must produce the same typed refusal at
+            // every validation level — never a panic, never a SIGBUS.
+            for lvl in [MmapValidation::Bounds, MmapValidation::Checksums, MmapValidation::Full] {
+                let err = load_gsr_mmap(&p, lvl).unwrap_err().to_string();
+                assert!(err.contains(want), "{what} ({lvl}): want {want:?}, got: {err}");
+            }
         }
         std::fs::remove_file(p).ok();
     }
@@ -885,6 +1297,8 @@ mod tests {
         std::fs::write(&p, &bytes).unwrap();
         let err = load_gsr(&p).unwrap_err().to_string();
         assert!(err.contains("degree section sums to"), "{err}");
+        let err = load_gsr_mmap(&p, MmapValidation::Bounds).unwrap_err().to_string();
+        assert!(err.contains("degree section sums to"), "mapped: {err}");
 
         // n far beyond the file: the bounds-checked cursor must refuse to
         // read a degree section that size rather than over-allocating or
@@ -894,6 +1308,10 @@ mod tests {
         rechecksum(&mut bytes);
         std::fs::write(&p, &bytes).unwrap();
         assert!(load_gsr(&p).is_err(), "absurd vertex count must fail at load");
+        assert!(
+            load_gsr_mmap(&p, MmapValidation::Bounds).is_err(),
+            "absurd vertex count must fail at mapped load"
+        );
         std::fs::remove_file(p).ok();
     }
 
@@ -908,7 +1326,138 @@ mod tests {
         std::fs::write(&p, &bytes).unwrap();
         let err = load_gsr(&p).unwrap_err().to_string();
         assert!(err.contains("trailing"), "want a trailing-bytes error, got: {err}");
+        let err = load_gsr_mmap(&p, MmapValidation::Bounds).unwrap_err().to_string();
+        assert!(err.contains("trailing"), "mapped: {err}");
         std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn gsr_mmap_round_trip_matches_owned_loader() {
+        use crate::graph::datasets::attach_uniform_weights;
+        let mut g =
+            builder::from_edges(6, &[(0, 1), (0, 5), (1, 3), (2, 3), (4, 0), (4, 5), (5, 2)]);
+        attach_uniform_weights(&mut g, 11);
+        let cg = CompressedCsr::from_csr_with_in_edges(&g, Codec::Zeta(2));
+        let p = tmp("mmap_rt.gsr");
+        save_gsr(&p, &cg).unwrap();
+        let owned = load_gsr(&p).unwrap();
+        for lvl in [MmapValidation::Bounds, MmapValidation::Checksums, MmapValidation::Full] {
+            let mapped = load_gsr_mmap(&p, lvl).unwrap();
+            assert!(mapped.payload.is_mapped(), "{lvl}: payload must stay in the mapping");
+            assert!(mapped.in_payload.is_mapped(), "{lvl}: in-payload must stay in the mapping");
+            assert_eq!(mapped.edge_offsets, owned.edge_offsets, "{lvl}");
+            assert_eq!(mapped.byte_offsets, owned.byte_offsets, "{lvl}");
+            assert_eq!(mapped.payload, owned.payload, "{lvl}");
+            assert_eq!(mapped.edge_weights, owned.edge_weights, "{lvl}");
+            assert_eq!(mapped.in_edge_offsets, owned.in_edge_offsets, "{lvl}");
+            assert_eq!(mapped.in_payload, owned.in_payload, "{lvl}");
+            assert_eq!(mapped.in_edge_perm, owned.in_edge_perm, "{lvl}");
+            // Decode through the mapping, then compare traversal output.
+            for v in 0..g.num_vertices as VertexId {
+                let a: Vec<VertexId> = mapped.decode_neighbors(v).collect();
+                let b: Vec<VertexId> = owned.decode_neighbors(v).collect();
+                assert_eq!(a, b, "{lvl} v={v}");
+            }
+        }
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn gsr_mmap_truncation_at_every_prefix_rejected() {
+        // The mapped loader must turn every torn prefix into a typed
+        // error purely from framing/bounds checks — it never gets to rely
+        // on the trailing whole-file checksum.
+        let (p, bytes) = small_gsr("mmap_trunc_sweep.gsr");
+        for cut in 0..bytes.len() {
+            std::fs::write(&p, &bytes[..cut]).unwrap();
+            for lvl in [MmapValidation::Bounds, MmapValidation::Checksums, MmapValidation::Full] {
+                assert!(
+                    load_gsr_mmap(&p, lvl).is_err(),
+                    "prefix of {cut}/{} bytes must fail at {lvl}",
+                    bytes.len()
+                );
+            }
+        }
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn gsr_mmap_payload_corruption_caught_by_section_checksum() {
+        // Flip one payload byte without touching any checksum. The mapped
+        // loader never reads the trailing whole-file checksum on a v3
+        // container — the per-section table is what must catch this.
+        let g = builder::from_edges(4, &[(0, 1), (1, 2), (2, 3), (3, 0)]);
+        let cg = CompressedCsr::from_csr(&g, Codec::Varint);
+        let p = tmp("mmap_payload_corrupt.gsr");
+        save_gsr(&p, &cg).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        // payload content starts at header(28) + deg(8+4) + sizes(8+4) +
+        // payload length prefix(8) = 60
+        bytes[60] ^= 0xff;
+        std::fs::write(&p, &bytes).unwrap();
+        let err = load_gsr_mmap(&p, MmapValidation::Checksums).unwrap_err().to_string();
+        assert!(err.contains("payload section checksum mismatch"), "{err}");
+        // Bounds mode trusts the payload by contract: same file opens.
+        assert!(
+            load_gsr_mmap(&p, MmapValidation::Bounds).is_ok(),
+            "bounds mode must skip payload verification"
+        );
+        // The owned loader still catches it via the whole-file pass.
+        let err = load_gsr(&p).unwrap_err().to_string();
+        assert!(err.contains("checksum mismatch"), "{err}");
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn gsr_mmap_pre_table_containers_fall_back_to_whole_file_checksum() {
+        let g = builder::from_edges(4, &[(0, 1), (1, 2), (2, 3), (3, 0)]);
+        let cg = CompressedCsr::from_csr(&g, Codec::Varint);
+        let p = tmp("mmap_v2_fallback.gsr");
+        save_gsr_versioned(&p, &cg, 2).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        // Flip a payload byte (v2 layout: same offsets as v3 up to the
+        // table): only the whole-file checksum can notice.
+        bytes[60] ^= 0xff;
+        std::fs::write(&p, &bytes).unwrap();
+        let err = load_gsr_mmap(&p, MmapValidation::Checksums).unwrap_err().to_string();
+        assert!(err.contains("checksum mismatch"), "{err}");
+        assert!(
+            load_gsr_mmap(&p, MmapValidation::Bounds).is_ok(),
+            "bounds mode skips the fallback pass too"
+        );
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn gsr_checksum_table_protects_header_and_index_sections() {
+        // Mutate the reserved header byte and re-checksum the trailing
+        // FNV: only the table's header entry can notice. (Every header
+        // field with semantics has its own check; reserved is the one
+        // byte whose corruption would otherwise slip through.)
+        let (p, pristine) = small_gsr("table_header.gsr");
+        let mut bytes = pristine.clone();
+        bytes[11] = 0x5a;
+        rechecksum(&mut bytes);
+        std::fs::write(&p, &bytes).unwrap();
+        for lvl in [MmapValidation::Bounds, MmapValidation::Checksums] {
+            let err = load_gsr_mmap(&p, lvl).unwrap_err().to_string();
+            assert!(err.contains("header checksum mismatch"), "{lvl}: {err}");
+        }
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn mmap_validation_parses_and_displays() {
+        for (s, lvl) in [
+            ("bounds", MmapValidation::Bounds),
+            ("checksums", MmapValidation::Checksums),
+            ("full", MmapValidation::Full),
+        ] {
+            assert_eq!(s.parse::<MmapValidation>().unwrap(), lvl);
+            assert_eq!(lvl.to_string(), s);
+        }
+        assert!("fast".parse::<MmapValidation>().is_err());
+        assert_eq!(MmapValidation::default(), MmapValidation::Checksums);
     }
 
     #[cfg(feature = "fault-injection")]

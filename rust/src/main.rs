@@ -39,6 +39,7 @@ const BOOL_FLAGS: &[&str] = &[
     "pull",
     "no-in-edges",
     "obs",
+    "mmap",
 ];
 
 fn main() {
@@ -75,6 +76,14 @@ fn usage() {
            --codec <c>           .gsr gap codec: varint (default) | zeta1..zeta8\n\
            --no-in-edges          convert: skip the .gsr v2 in-edge section\n\
            --out <path>          output path (convert, generate)\n\
+           --mmap                 map .gsr files zero-copy (page-cache windows)\n\
+                                  instead of reading them into owned buffers\n\
+           --mmap-validate <v>   mapped-load checks: bounds | checksums\n\
+                                  (default) | full\n\
+           --spill-dir <dir>     convert: build out-of-core, spilling sorted\n\
+                                  edge runs to this directory\n\
+           --batch-edges <n>     convert: spill batch budget in edge records\n\
+                                  (default 4194304)\n\
            --config <path>       TOML config file\n\
            --threads <n>         worker threads (default: all cores)\n\
            --pool-threads <n>    persistent pool width (default: --threads)\n\
@@ -180,6 +189,18 @@ fn build_config(p: &cli::ParsedArgs) -> Result<Config> {
     if let Some(path) = p.get("trace") {
         cfg.obs_trace = path.to_string();
     }
+    if p.get_bool("mmap") {
+        cfg.storage_mmap = true;
+    }
+    if let Some(s) = p.get("mmap-validate") {
+        cfg.storage_mmap_validate = s.parse()?;
+    }
+    if let Some(d) = p.get("spill-dir") {
+        cfg.storage_spill_dir = d.to_string();
+    }
+    if let Some(v) = p.get_parse::<usize>("batch-edges")? {
+        cfg.storage_batch_edges = v;
+    }
     // --trace implies arming: a trace of a disabled subsystem is empty.
     if !cfg.obs_trace.is_empty() {
         cfg.obs_enable = true;
@@ -214,6 +235,18 @@ fn ensure_uniform_weights(
 ) {
     if weighted && weights.is_empty() {
         *weights = datasets::uniform_weights(num_edges, 42);
+    }
+}
+
+/// Load a `.gsr` container honoring the storage config: `--mmap` maps it
+/// zero-copy (payload windows into the page cache, validated to
+/// `--mmap-validate` depth), otherwise the owned loader reads and fully
+/// verifies the file.
+fn load_gsr_cfg(path: &std::path::Path, cfg: &Config) -> Result<CompressedCsr> {
+    if cfg.storage_mmap {
+        io::load_gsr_mmap(path, cfg.storage_mmap_validate)
+    } else {
+        io::load_gsr(path)
     }
 }
 
@@ -273,10 +306,45 @@ fn run(args: &[String]) -> Result<()> {
             Ok(())
         }
         Some("convert") => {
-            let (name, g) = load_graph(&p, p.get_bool("weighted"))?;
+            let cfg = build_config(&p)?;
             let out = p.get("out").context("--out <path.gsr> required")?;
             let codec: Codec =
                 p.get_or("codec", "varint").parse().map_err(anyhow::Error::msg)?;
+            // --spill-dir switches to the out-of-core build: bounded
+            // sorted batches spill to runs, a k-way merge streams the
+            // final edge order straight into .gsr emission, and the
+            // output is byte-identical to the in-memory path below.
+            if !cfg.storage_spill_dir.is_empty() {
+                let input = p
+                    .get("graph")
+                    .context("--spill-dir converts a file on disk: pass --graph <edge-list|.mtx>")?;
+                let scfg = gunrock::graph::builder::SpillConfig {
+                    spill_dir: cfg.storage_spill_dir.clone().into(),
+                    batch_edges: cfg.storage_batch_edges,
+                    undirected: p.get_bool("undirected"),
+                    weighted: p.get_bool("weighted"),
+                    weight_seed: 42,
+                    codec,
+                    with_in_edges: !p.get_bool("no-in-edges"),
+                };
+                let stats = gunrock::graph::builder::build_gsr_out_of_core(
+                    std::path::Path::new(input),
+                    std::path::Path::new(out),
+                    &scfg,
+                )?;
+                println!(
+                    "wrote {input} ({} vertices, {} edges, {codec}) to {out}\n  \
+                     out-of-core: {} edge records spilled across {} sorted runs \
+                     (batch budget {} edges)",
+                    stats.num_vertices,
+                    stats.final_edges,
+                    stats.spilled_records,
+                    stats.runs,
+                    cfg.storage_batch_edges,
+                );
+                return Ok(());
+            }
+            let (name, g) = load_graph(&p, p.get_bool("weighted"))?;
             // The in-edge view is on by default: it is what lets
             // direction-optimized BFS and pull PageRank traverse the
             // container compressed-natively. --no-in-edges writes the
@@ -350,16 +418,17 @@ fn run(args: &[String]) -> Result<()> {
             // CSR. The two arms call the same generic runner.
             match p.get("graph") {
                 Some(path) if path.ends_with(".gsr") => {
-                    let mut cg = io::load_gsr(std::path::Path::new(path))?;
+                    let mut cg = load_gsr_cfg(std::path::Path::new(path), &cfg)?;
                     let m = cg.num_edges();
                     ensure_uniform_weights(&mut cg.edge_weights, m, weighted);
                     println!(
-                        "{} on {path} [compressed {}, {:.2} B/edge{}]: \
+                        "{} on {path} [compressed {}, {:.2} B/edge{}{}]: \
                          {} vertices, {} edges, {} threads",
                         kind,
                         cg.codec,
                         cg.bytes_per_edge(),
                         if cg.has_in_view() { ", in-edge view" } else { ", push-only" },
+                        if cfg.storage_mmap { ", mapped" } else { "" },
                         cg.num_vertices,
                         cg.num_edges(),
                         cfg.effective_threads()
@@ -385,11 +454,12 @@ fn run(args: &[String]) -> Result<()> {
             // weights are the paper's deterministic uniform [1, 64]).
             match p.get("graph") {
                 Some(path) if path.ends_with(".gsr") => {
-                    let mut cg = io::load_gsr(std::path::Path::new(path))?;
+                    let mut cg = load_gsr_cfg(std::path::Path::new(path), &cfg)?;
                     let m = cg.num_edges();
                     ensure_uniform_weights(&mut cg.edge_weights, m, true);
                     println!(
-                        "serving {path} [compressed {}]: {} vertices, {} edges",
+                        "serving {path}{} [compressed {}]: {} vertices, {} edges",
+                        if cfg.storage_mmap { " (mapped)" } else { "" },
                         cg.codec,
                         cg.num_vertices,
                         cg.num_edges()

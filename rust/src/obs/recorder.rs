@@ -12,6 +12,12 @@
 //! rate-limited (sheds arrive in bursts under overload; one dump per
 //! burst is the useful signal) — budget trips and batcher panics are
 //! never rate-limited, they are one-per-failure by construction.
+//!
+//! When `FLIGHT_DUMP_DIR` is set in the environment, every dump is also
+//! persisted there as `flight-<pid>-<seq>.txt` — CI points it at the
+//! workspace so failing jobs upload the dumps as artifacts. Persistence
+//! is strictly best-effort: a failure path must never fail harder
+//! because its post-mortem could not be written.
 
 use std::fmt::Write as _;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -28,6 +34,22 @@ const SHED_DUMP_MIN_INTERVAL_US: u64 = 500_000;
 static LAST_DUMP: Mutex<Option<String>> = Mutex::new(None);
 /// `u64::MAX` = "never dumped for shed yet".
 static LAST_SHED_DUMP_US: AtomicU64 = AtomicU64::new(u64::MAX);
+/// Monotone suffix for persisted dump filenames within this process.
+static DUMP_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Best-effort file persistence for a dump: no-op unless the
+/// `FLIGHT_DUMP_DIR` environment variable names a directory. Every
+/// failure is swallowed — a dump is diagnostics, never a new fault.
+fn persist_dump(text: &str) {
+    let Ok(dir) = std::env::var("FLIGHT_DUMP_DIR") else { return };
+    if dir.is_empty() {
+        return;
+    }
+    let n = DUMP_SEQ.fetch_add(1, Ordering::Relaxed);
+    let _ = std::fs::create_dir_all(&dir);
+    let path = format!("{dir}/flight-{}-{n}.txt", std::process::id());
+    let _ = std::fs::write(path, text);
+}
 
 /// Dump the last [`FLIGHT_TAIL`] events across all rings. Returns the
 /// dump text (also written to stderr and retained for
@@ -64,6 +86,7 @@ pub fn flight_dump(reason: &str) -> Option<String> {
     }
     *lock(&LAST_DUMP) = Some(s.clone());
     eprint!("{s}");
+    persist_dump(&s);
     Some(s)
 }
 
@@ -120,6 +143,29 @@ mod tests {
         clear_last_dump();
         assert!(flight_dump("nope").is_none());
         assert!(last_flight_dump().is_none());
+    }
+
+    #[test]
+    fn dump_persists_to_flight_dump_dir() {
+        let _g = test_guard::hold();
+        let dir = std::env::temp_dir()
+            .join(format!("gunrock_flight_{}", std::process::id()));
+        std::env::set_var("FLIGHT_DUMP_DIR", &dir);
+        set_enabled(true);
+        clear_last_dump();
+        event(EventKind::BudgetTrip, 7, 0);
+        let dump = flight_dump("persisted trip").expect("armed dump");
+        set_enabled(false);
+        std::env::remove_var("FLIGHT_DUMP_DIR");
+        let mut found = None;
+        for entry in std::fs::read_dir(&dir).expect("dump dir exists") {
+            let p = entry.unwrap().path();
+            if p.file_name().unwrap().to_str().unwrap().starts_with("flight-") {
+                found = Some(std::fs::read_to_string(&p).unwrap());
+            }
+        }
+        assert_eq!(found.as_deref(), Some(dump.as_str()), "dump file matches stderr dump");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -1,0 +1,208 @@
+//! Read-only file memory mapping without a libc crate dependency.
+//!
+//! [`Mmap`] maps a whole file `PROT_READ`/`MAP_PRIVATE` and derefs to
+//! `&[u8]`, so anything that reads slices — the `.gsr` section parser,
+//! the streaming `NeighborDecoder` — works unchanged over mapped bytes.
+//! The mapping is page-cache backed: N processes mapping the same
+//! container share one physical copy, and open time is independent of
+//! file size (pages fault in on first touch).
+//!
+//! On unix the implementation is two raw syscall bindings (`mmap` /
+//! `munmap`) declared here — the offline build has no libc crate.
+//! Elsewhere the type degrades to an owned buffer read with
+//! `std::fs::read`, keeping every caller compiling (zero-copy is a unix
+//! luxury; correctness isn't).
+//!
+//! Caveat, documented rather than solved: if another process truncates
+//! the file *after* it is mapped, touching pages past the new EOF raises
+//! SIGBUS — no user-space check can close that race. Every section bound
+//! is validated against the mapped length at open, which covers the torn
+//! write cases where the file is stable by the time it is mapped.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// A read-only mapping of an entire file.
+pub struct Mmap {
+    #[cfg(unix)]
+    ptr: *mut u8,
+    #[cfg(unix)]
+    len: usize,
+    #[cfg(not(unix))]
+    buf: Vec<u8>,
+}
+
+#[cfg(unix)]
+mod sys {
+    use std::os::raw::{c_int, c_void};
+
+    pub const PROT_READ: c_int = 1;
+    pub const MAP_PRIVATE: c_int = 2;
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> c_int;
+    }
+}
+
+impl Mmap {
+    /// Map `path` read-only. An empty file maps to an empty slice (the
+    /// kernel rejects zero-length mappings, so no syscall is made).
+    #[cfg(unix)]
+    pub fn open(path: &Path) -> Result<Mmap> {
+        use std::os::unix::io::AsRawFd;
+        let f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+        let len = f
+            .metadata()
+            .with_context(|| format!("stat {}", path.display()))?
+            .len() as usize;
+        if len == 0 {
+            return Ok(Mmap { ptr: std::ptr::NonNull::<u8>::dangling().as_ptr(), len: 0 });
+        }
+        let ptr = unsafe {
+            sys::mmap(
+                std::ptr::null_mut(),
+                len,
+                sys::PROT_READ,
+                sys::MAP_PRIVATE,
+                f.as_raw_fd(),
+                0,
+            )
+        };
+        if ptr as usize == usize::MAX {
+            anyhow::bail!("mmap {} failed ({len} bytes)", path.display());
+        }
+        Ok(Mmap { ptr: ptr as *mut u8, len })
+        // `f` drops here: the mapping holds its own reference to the file.
+    }
+
+    /// Fallback for non-unix targets: read the file into an owned buffer
+    /// behind the same interface.
+    #[cfg(not(unix))]
+    pub fn open(path: &Path) -> Result<Mmap> {
+        let buf = std::fs::read(path).with_context(|| format!("open {}", path.display()))?;
+        Ok(Mmap { buf })
+    }
+
+    #[cfg(unix)]
+    pub fn as_slice(&self) -> &[u8] {
+        if self.len == 0 {
+            return &[];
+        }
+        // SAFETY: ptr/len name a live PROT_READ mapping owned by self;
+        // unmapped only in Drop.
+        unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+    }
+
+    #[cfg(not(unix))]
+    pub fn as_slice(&self) -> &[u8] {
+        &self.buf
+    }
+
+    pub fn len(&self) -> usize {
+        self.as_slice().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(unix)]
+impl Drop for Mmap {
+    fn drop(&mut self) {
+        if self.len != 0 {
+            // SAFETY: ptr/len came from a successful mmap; nothing can
+            // observe the mapping after Drop.
+            unsafe {
+                sys::munmap(self.ptr as *mut std::os::raw::c_void, self.len);
+            }
+        }
+    }
+}
+
+// SAFETY: the mapping is immutable (PROT_READ, private) for its whole
+// lifetime, so sharing references or moving ownership across threads
+// cannot race.
+#[cfg(unix)]
+unsafe impl Send for Mmap {}
+#[cfg(unix)]
+unsafe impl Sync for Mmap {}
+
+impl std::ops::Deref for Mmap {
+    type Target = [u8];
+
+    fn deref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+impl std::fmt::Debug for Mmap {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Mmap({} bytes)", self.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("gunrock_mmap_test_{}_{}", std::process::id(), name));
+        p
+    }
+
+    #[test]
+    fn maps_file_contents_exactly() {
+        let p = tmp("contents.bin");
+        let data: Vec<u8> = (0..4096u32).map(|i| (i * 7 % 251) as u8).collect();
+        std::fs::write(&p, &data).unwrap();
+        let m = Mmap::open(&p).unwrap();
+        assert_eq!(m.len(), data.len());
+        assert_eq!(&m[..], &data[..], "mapped bytes must equal file bytes");
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn empty_file_maps_to_empty_slice() {
+        let p = tmp("empty.bin");
+        std::fs::write(&p, b"").unwrap();
+        let m = Mmap::open(&p).unwrap();
+        assert!(m.is_empty());
+        assert_eq!(m.as_slice(), &[] as &[u8]);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn missing_file_is_a_typed_error() {
+        let err = Mmap::open(&tmp("does_not_exist.bin")).unwrap_err().to_string();
+        assert!(err.contains("open"), "{err}");
+    }
+
+    #[test]
+    fn mapping_survives_unlink() {
+        // The page-cache reference outlives the directory entry (unix):
+        // serving can keep traversing a container that was replaced on
+        // disk, which is exactly what swap_graph relies on.
+        let p = tmp("unlinked.bin");
+        std::fs::write(&p, b"still here").unwrap();
+        let m = Mmap::open(&p).unwrap();
+        std::fs::remove_file(&p).ok();
+        assert_eq!(&m[..], b"still here");
+    }
+
+    #[test]
+    fn is_send_and_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Mmap>();
+    }
+}

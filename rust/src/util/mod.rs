@@ -8,6 +8,7 @@
 pub mod bitset;
 pub mod budget;
 pub mod faults;
+pub mod mmap;
 pub mod par;
 pub mod pool;
 pub mod rng;

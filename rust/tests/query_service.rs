@@ -240,6 +240,43 @@ fn malformed_queries_degrade_to_error_responses() {
     assert!(matches!(svc.submit(Query::bfs(0, 1)).unwrap(), Answer::Hops(_)));
 }
 
+/// A memory-mapped `.gsr` serves queries identically to the owned load,
+/// and `swap_graph` can hot-swap a mapped graph in — even after its file
+/// is unlinked, because the mapping pins the page-cache pages.
+#[test]
+fn service_over_mapped_gsr_and_mapped_swap() {
+    use gunrock::graph::io::{self, MmapValidation};
+    let g = scale_free_weighted();
+    let cfg = Config::default();
+    let (want, _) = sssp::sssp(&g, 3, &cfg);
+    let mut p = std::env::temp_dir();
+    p.push(format!("gunrock_qs_mmap_{}.gsr", std::process::id()));
+    io::save_gsr(&p, &CompressedCsr::from_csr_with_in_edges(&g, Codec::Varint)).unwrap();
+
+    let mapped = io::load_gsr_mmap(&p, MmapValidation::Checksums).unwrap();
+    assert!(mapped.payload.is_mapped());
+    let svc = QueryService::start(Arc::new(mapped), cfg);
+    for dst in [0u32, 7, 200] {
+        let want = match want.dist[dst as usize] {
+            d if d >= sssp::INFINITY_DIST => None,
+            d => Some(d),
+        };
+        assert_eq!(svc.submit(Query::sssp(3, dst)).unwrap(), Answer::Distance(want));
+    }
+
+    // Swap in a second mapping of the same file, then unlink it — the
+    // service must keep answering out of the pinned pages.
+    let remapped = io::load_gsr_mmap(&p, MmapValidation::Full).unwrap();
+    svc.swap_graph(Arc::new(remapped));
+    std::fs::remove_file(&p).unwrap();
+    let (want_bfs, _) = bfs::bfs(&g, 0, &Config::default());
+    let want_hops = match want_bfs.labels[9] {
+        bfs::INFINITY_DEPTH => None,
+        h => Some(h),
+    };
+    assert_eq!(svc.submit(Query::bfs(0, 9)).unwrap(), Answer::Hops(want_hops));
+}
+
 /// The service serves the compressed representation too — one generic
 /// service over any `GraphRep`.
 #[test]

@@ -34,6 +34,20 @@ fn assert_storage_roundtrip(g: &Csr, label: &str) {
         let path = tmp(&format!("{label}_{codec}.gsr"));
         io::save_gsr(&path, &cg).unwrap();
         let back = io::load_gsr(&path).unwrap();
+        // The zero-copy mapped loader must agree with the owned loader
+        // field for field at every validation depth.
+        for lvl in [
+            io::MmapValidation::Bounds,
+            io::MmapValidation::Checksums,
+            io::MmapValidation::Full,
+        ] {
+            let mapped = io::load_gsr_mmap(&path, lvl).unwrap();
+            assert!(mapped.payload.is_mapped(), "{label} {codec} {lvl}");
+            assert_eq!(mapped.edge_offsets, back.edge_offsets, "{label} {codec} {lvl}");
+            assert_eq!(mapped.byte_offsets, back.byte_offsets, "{label} {codec} {lvl}");
+            assert_eq!(mapped.payload, back.payload, "{label} {codec} {lvl}");
+            assert_eq!(mapped.edge_weights, back.edge_weights, "{label} {codec} {lvl}");
+        }
         std::fs::remove_file(&path).ok();
         assert_eq!(back.codec, codec, "{label}");
         assert_eq!(back.num_vertices, g.num_vertices, "{label} {codec}");
@@ -179,6 +193,51 @@ fn power_law_compression_meets_sixty_percent_target() {
         best <= 0.6 * raw,
         "compressed adjacency {best} bytes vs raw {raw} (want <= 60%)"
     );
+}
+
+#[test]
+fn out_of_core_build_matches_in_memory_bytes() {
+    // The spilling builder must produce the same bytes as load -> build
+    // -> compress -> save, for directed/undirected x weighted/unweighted,
+    // under a batch budget small enough to force many sorted runs.
+    use gunrock::graph::builder::SpillConfig;
+    let g = rmat(&RmatParams { scale: 8, edge_factor: 8, seed: 31, ..Default::default() });
+    let el = tmp("ooc_prop.txt");
+    io::write_edge_list(&el, &g.to_coo()).unwrap();
+
+    for (case, undirected, weighted) in
+        [(0, false, false), (1, true, false), (2, false, true), (3, true, true)]
+    {
+        // In-memory reference: the exact CLI convert pipeline.
+        let mut mem = io::load_graph(&el, undirected).unwrap();
+        if weighted && !mem.is_weighted() {
+            datasets::attach_uniform_weights(&mut mem, 42);
+        }
+        let cg = CompressedCsr::from_csr_with_in_edges(&mem, Codec::Zeta(2));
+        let want = tmp(&format!("ooc_prop_want_{case}.gsr"));
+        io::save_gsr(&want, &cg).unwrap();
+
+        let got = tmp(&format!("ooc_prop_got_{case}.gsr"));
+        let cfg = SpillConfig {
+            spill_dir: std::env::temp_dir(),
+            batch_edges: 64,
+            undirected,
+            weighted,
+            weight_seed: 42,
+            codec: Codec::Zeta(2),
+            with_in_edges: true,
+        };
+        let stats = builder::build_gsr_out_of_core(&el, &got, &cfg).unwrap();
+        assert!(stats.runs >= 2, "case {case}: 64-edge batches must spill multiple runs");
+        assert_eq!(
+            std::fs::read(&want).unwrap(),
+            std::fs::read(&got).unwrap(),
+            "case {case}: out-of-core .gsr must be byte-identical to the in-memory build"
+        );
+        std::fs::remove_file(&want).ok();
+        std::fs::remove_file(&got).ok();
+    }
+    std::fs::remove_file(&el).ok();
 }
 
 #[test]

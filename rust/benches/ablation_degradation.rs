@@ -1,0 +1,159 @@
+//! Ablation: cost and behavior of the resource governor (PR 10).
+//!
+//! Two measurements on a scale-free graph:
+//!
+//! 1. **armed-governor overhead**: the same sequential service workload
+//!    (cache disabled, so every query pays the full admit → batch →
+//!    acquire path) under an armed-but-never-tripping memory budget
+//!    (1 TiB) against the unarmed default (budget 0). The CI gate
+//!    requires the overhead under 3% and bit-identical answers: the
+//!    governor's admission estimate and ledger arithmetic are a few
+//!    atomic ops per query and must stay invisible.
+//! 2. **ladder trip + recovery**: pinning the budget at current usage
+//!    closes admission (`Shed`) — queries are denied with typed
+//!    `ResourceExhausted` errors and `max_level_seen` records the trip;
+//!    lifting the budget lets the ladder climb back to `Normal` one rung
+//!    per reassessment while queries flow again.
+//!
+//! Emits BENCH_degradation.json for the experiment ledger + CI gate.
+
+use std::sync::Arc;
+
+use gunrock::config::Config;
+use gunrock::graph::generators::{rmat, rmat::RmatParams};
+use gunrock::graph::{datasets, Csr};
+use gunrock::harness;
+use gunrock::service::{Answer, Query, QueryService};
+use gunrock::util::resources::{self, DegradationLevel};
+use gunrock::util::timer::Timer;
+use gunrock::util::{par, pool};
+
+const REPS: usize = 7;
+/// Queries per workload pass (cache off: each one runs a real batch).
+const QUERIES: usize = 192;
+
+fn min_ms<F: FnMut()>(mut f: F) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..REPS {
+        let t = Timer::start();
+        f();
+        best = best.min(t.elapsed_ms());
+    }
+    best
+}
+
+/// Deterministic mixed point-query workload (same sequence every call):
+/// BFS/SSSP over a reused source pool, all answers collected.
+fn workload(svc: &QueryService<Csr>, n: u32) -> Vec<Answer> {
+    let mut state = 0x9E3779B97F4A7C15u64;
+    let mut rng = move || {
+        state ^= state << 13;
+        state ^= state >> 7;
+        state ^= state << 17;
+        state
+    };
+    let pool: Vec<u32> = (0..64).map(|_| (rng() % n as u64) as u32).collect();
+    let mut out = Vec::with_capacity(QUERIES);
+    for i in 0..QUERIES {
+        let src = pool[(rng() % pool.len() as u64) as usize];
+        let dst = (rng() % n as u64) as u32;
+        let q = if i % 2 == 0 { Query::bfs(src, dst) } else { Query::sssp(src, dst) };
+        out.push(svc.submit(q).expect("no budget pressure in the overhead phase"));
+    }
+    out
+}
+
+fn main() {
+    let workers = par::num_threads();
+    pool::ensure_capacity(workers);
+
+    let mut g = rmat(&RmatParams { scale: 14, edge_factor: 16, ..Default::default() });
+    datasets::attach_uniform_weights(&mut g, 42);
+    let n = g.num_vertices;
+    let m = g.num_edges();
+    let graph = Arc::new(g);
+    let gov = resources::governor();
+
+    // Cache off so every query exercises the admission estimate and the
+    // batch-run acquisition instead of the cache fast path.
+    let mut cfg = Config::default();
+    cfg.service_cache = 0;
+
+    // --- 1. unarmed (budget 0) vs armed-but-never-tripping ------------
+    let svc_clean = QueryService::start(Arc::clone(&graph), cfg.clone());
+    let answers_clean = workload(&svc_clean, n as u32);
+    let clean_ms = min_ms(|| {
+        let _ = workload(&svc_clean, n as u32);
+    });
+    drop(svc_clean);
+
+    gov.set_budget_bytes(1 << 40); // 1 TiB: armed, pressure ~0, never trips
+    let svc_armed = QueryService::start(Arc::clone(&graph), cfg.clone());
+    let answers_armed = workload(&svc_armed, n as u32);
+    let armed_ms = min_ms(|| {
+        let _ = workload(&svc_armed, n as u32);
+    });
+    drop(svc_armed);
+
+    let results_match = answers_clean == answers_armed;
+    let overhead_frac = (armed_ms / clean_ms.max(1e-9) - 1.0).max(0.0);
+    assert_eq!(gov.level(), DegradationLevel::Normal, "armed budget must never trip");
+
+    // --- 2. ladder trip under a pinned budget, then recovery -----------
+    let svc = QueryService::start(Arc::clone(&graph), Config::default());
+    gov.reset_high_water();
+    let used = gov.used_bytes();
+    gov.set_budget_bytes(used.max(1)); // pressure 1.0 -> Shed on next reassess
+    let mut denied = 0u64;
+    for i in 0..20u32 {
+        if svc.submit(Query::bfs(i % n as u32, (i * 3) % n as u32)).is_err() {
+            denied += 1;
+        }
+    }
+    let max_level = gov.max_level_seen() as u8;
+    let tripped = max_level >= DegradationLevel::LaneShrink as u8;
+
+    // Lift the pressure: each fresh-source admission reassesses, and the
+    // ladder climbs one rung per pass (hysteresis) back to Normal.
+    gov.set_budget_bytes(1 << 40);
+    for src in 100..110u32 {
+        svc.submit(Query::bfs(src, 0)).expect("queries flow again after recovery");
+    }
+    let recovered = gov.level() == DegradationLevel::Normal;
+    let health = svc.health_json();
+    drop(svc);
+
+    // Leave the process-global governor unarmed for anything after us.
+    gov.set_budget_bytes(0);
+
+    // --- report --------------------------------------------------------
+    harness::print_table(
+        "Ablation: armed governor vs unarmed (sequential service workload)",
+        &["side", "workload ms", "overhead"],
+        &[
+            vec!["unarmed (budget 0)".to_string(), format!("{clean_ms:.2}"), "—".to_string()],
+            vec![
+                "armed (1 TiB)".to_string(),
+                format!("{armed_ms:.2}"),
+                format!("{:.2}%", overhead_frac * 100.0),
+            ],
+        ],
+    );
+    println!("results_match={results_match} (armed answers bit-identical)");
+    println!(
+        "ladder: pinned budget denied {denied}/20 queries, max_level={max_level}, \
+         tripped={tripped}, recovered={recovered}"
+    );
+    println!("health after recovery: {health}");
+
+    let json = format!(
+        "{{\n  \"bench\": \"degradation\",\n  \"workers\": {workers},\n  \
+         \"graph\": {{\"vertices\": {n}, \"edges\": {m}}},\n  \
+         \"clean\": {{\"clean_ms\": {clean_ms:.3}, \"armed_ms\": {armed_ms:.3}, \
+         \"overhead_frac\": {overhead_frac:.4}, \"results_match\": {results_match}}},\n  \
+         \"ladder\": {{\"denied\": {denied}, \"max_level\": {max_level}, \
+         \"tripped\": {tripped}, \"recovered\": {recovered}}}\n}}\n"
+    );
+    std::fs::write("BENCH_degradation.json", &json).expect("write BENCH_degradation.json");
+    println!("wrote BENCH_degradation.json");
+}

@@ -97,6 +97,11 @@ pub struct Config {
     /// Edge-record batch budget for the out-of-core build: each batch is
     /// sorted and spilled when full, bounding peak memory.
     pub storage_batch_edges: usize,
+    /// Memory budget for the resource governor in megabytes (0 = leave
+    /// the governor unlimited/untouched). When nonzero the query service
+    /// applies it at construction and admission control plus the
+    /// degradation ladder arm against it.
+    pub resources_mem_budget_mb: u64,
 }
 
 impl Default for Config {
@@ -132,6 +137,7 @@ impl Default for Config {
             storage_mmap_validate: crate::graph::io::MmapValidation::default(),
             storage_spill_dir: String::new(),
             storage_batch_edges: 4 << 20,
+            resources_mem_budget_mb: 0,
         }
     }
 }
@@ -212,6 +218,9 @@ impl Config {
                 }
                 "storage.batch_edges" | "storage_batch_edges" => {
                     self.storage_batch_edges = v.parse()?
+                }
+                "resources.mem_budget_mb" | "resources_mem_budget_mb" => {
+                    self.resources_mem_budget_mb = v.parse()?
                 }
                 other => bail!("unknown config key: {other}"),
             }
@@ -372,6 +381,18 @@ mod tests {
         assert_eq!(cfg.storage_batch_edges, 1024);
         let mut bad = BTreeMap::new();
         bad.insert("storage_mmap_validate".to_string(), "paranoid".to_string());
+        assert!(cfg.apply(&bad).is_err());
+    }
+
+    #[test]
+    fn resources_knobs_apply() {
+        let mut cfg = Config::default();
+        assert_eq!(cfg.resources_mem_budget_mb, 0, "governor is unlimited by default");
+        let kv = parse_toml_subset("[resources]\nmem_budget_mb = 512\n").unwrap();
+        cfg.apply(&kv).unwrap();
+        assert_eq!(cfg.resources_mem_budget_mb, 512);
+        let mut bad = BTreeMap::new();
+        bad.insert("resources_mem_budget_mb".to_string(), "lots".to_string());
         assert!(cfg.apply(&bad).is_err());
     }
 

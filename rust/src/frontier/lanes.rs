@@ -17,6 +17,8 @@
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 
+use crate::util::resources;
+
 /// Lanes per word: the batch width of the multi-source engine.
 pub const LANES: usize = 64;
 
@@ -34,6 +36,9 @@ pub struct LaneBits {
     /// OR of every lane word — the per-lane settle detector: a zero bit
     /// here means that instance's frontier is empty. Valid after `seal`.
     union: u64,
+    /// Governor accounting for the lane words (8 bytes per vertex — the
+    /// batch engine's dominant allocation).
+    mem: resources::Registration,
 }
 
 impl LaneBits {
@@ -43,6 +48,7 @@ impl LaneBits {
             dirty: AtomicUsize::new(0),
             active: 0,
             union: 0,
+            mem: resources::track(resources::AllocClass::Lanes, universe as u64 * 8),
         }
     }
 
@@ -135,6 +141,7 @@ impl LaneBits {
             self.dirty.store(0, Ordering::Relaxed);
             self.active = 0;
             self.union = 0;
+            self.mem.resize(universe as u64 * 8);
         }
     }
 

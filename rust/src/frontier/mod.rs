@@ -35,6 +35,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 
 use crate::graph::VertexId;
 use crate::util::bitset::{AtomicBitset, SetBits};
+use crate::util::resources;
 
 /// Whether the ids in a frontier name vertices or edges. Gunrock is the
 /// only high-level GPU framework supporting both (Table 1: "v-c, e-c").
@@ -89,6 +90,9 @@ pub struct DenseBits {
     /// Exclusive upper bound on word indexes that may hold set bits since
     /// the last clear; words at or past it are guaranteed zero.
     dirty: AtomicUsize,
+    /// Governor accounting for the bitmap's bytes (clones re-register —
+    /// each clone owns its own copy of the storage).
+    _mem: resources::Registration,
 }
 
 impl Clone for DenseBits {
@@ -97,13 +101,19 @@ impl Clone for DenseBits {
             bits: self.bits.clone(),
             count: self.count,
             dirty: AtomicUsize::new(self.dirty.load(Ordering::Relaxed)),
+            _mem: self._mem.clone(),
         }
     }
 }
 
 impl DenseBits {
     pub fn new(universe: usize) -> Self {
-        DenseBits { bits: AtomicBitset::new(universe), count: 0, dirty: AtomicUsize::new(0) }
+        DenseBits {
+            bits: AtomicBitset::new(universe),
+            count: 0,
+            dirty: AtomicUsize::new(0),
+            _mem: resources::track(resources::AllocClass::Frontier, universe.div_ceil(8) as u64),
+        }
     }
 
     /// Size of the id universe (n for vertex frontiers, m for edge ones).

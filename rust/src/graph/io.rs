@@ -409,6 +409,13 @@ fn read_varint_prefix(section: &[u8], count: usize, what: &str) -> Result<Vec<u6
     if count > section.len() {
         bail!("{what} section has {} bytes but claims {count} entries", section.len());
     }
+    // Second gate, same contract: the prefix array must also fit the
+    // resource governor's budget (and survive injected AllocPressure) —
+    // decode refuses with a typed error instead of allocating past the
+    // cap.
+    if let Err(e) = crate::util::resources::governor().guard((count as u64 + 1) * 8) {
+        bail!("{what} section: {e}");
+    }
     let mut prefix = Vec::with_capacity(count + 1);
     prefix.push(0u64);
     let mut pos = 0usize;
@@ -838,6 +845,15 @@ pub(crate) fn validate_semantics(g: &CompressedCsr) -> Result<()> {
 /// version, and section consistency before handing back the compressed
 /// graph.
 pub fn load_gsr(path: &Path) -> Result<CompressedCsr> {
+    // Reject-before-allocate: the owned load is about to materialize the
+    // whole file in the heap, so ask the governor about the file's size
+    // *before* reading it.
+    let file_len = std::fs::metadata(path)
+        .map(|m| m.len())
+        .with_context(|| format!("stat {}", path.display()))?;
+    if let Err(e) = crate::util::resources::governor().guard(file_len) {
+        bail!("{}: {e}", path.display());
+    }
     let bytes = std::fs::read(path).with_context(|| format!("open {}", path.display()))?;
     // Trace seam: the whole validate + decode as one span.
     let _span = crate::obs::span(crate::obs::EventKind::GsrDecode, bytes.len() as u64, 0);
@@ -918,6 +934,12 @@ impl std::fmt::Display for MmapValidation {
 /// replaced behind it.
 pub fn load_gsr_mmap(path: &Path, validation: MmapValidation) -> Result<CompressedCsr> {
     let map = Arc::new(Mmap::open(path)?);
+    // Fault seam: a mapping that opened but cannot be read (I/O error on
+    // page-in, injected here deterministically) degrades to a typed
+    // error — callers fall back to the owned loader or report upward.
+    if let Err(e) = crate::util::faults::maybe_error(crate::util::faults::Seam::MmapRead) {
+        bail!("{}: {e}", path.display());
+    }
     let _span = crate::obs::span(crate::obs::EventKind::GsrDecode, map.len() as u64, 0);
     if let Err(e) = crate::util::faults::maybe_error(crate::util::faults::Seam::GsrDecode) {
         bail!("{}: {e}", path.display());

@@ -115,6 +115,9 @@ fn usage() {
                                   before per-source isolation (default 2)\n\
            --shed-after-ms <n>   shed queries older than this at drain time\n\
                                   (0 = never shed)\n\
+           --mem-budget <mb>     memory budget for the resource governor;\n\
+                                  over-budget queries are rejected and the\n\
+                                  degradation ladder arms (0 = unlimited)\n\
          \n\
          SERVE PROTOCOL (stdin, one query per line)\n\
            bfs <src> <dst>       hop count src -> dst (or 'unreachable')\n\
@@ -123,6 +126,8 @@ fn usage() {
            stats                 service counters (served, batches, cache hits)\n\
            metrics               JSON metrics snapshot (queue depth, per-kind\n\
                                   pending, counters) + Prometheus-style text\n\
+           health                governor health JSON: ladder level, memory\n\
+                                  pressure, per-class usage, denials\n\
            quit                  shut down\n"
     );
 }
@@ -180,6 +185,9 @@ fn build_config(p: &cli::ParsedArgs) -> Result<Config> {
     if let Some(v) = p.get_parse::<u64>("shed-after-ms")? {
         cfg.service_shed_after_ms = v;
     }
+    if let Some(v) = p.get_parse::<u64>("mem-budget")? {
+        cfg.resources_mem_budget_mb = v;
+    }
     if p.get_bool("obs") {
         cfg.obs_enable = true;
     }
@@ -206,6 +214,9 @@ fn build_config(p: &cli::ParsedArgs) -> Result<Config> {
         cfg.obs_enable = true;
     }
     gunrock::obs::configure(cfg.obs_enable, cfg.obs_ring);
+    if cfg.resources_mem_budget_mb > 0 {
+        gunrock::util::resources::governor().set_budget_mb(cfg.resources_mem_budget_mb);
+    }
     Ok(cfg)
 }
 
@@ -596,6 +607,7 @@ fn serve<G: GraphRep + Send + Sync + 'static>(
         let t = gunrock::util::timer::Timer::start();
         let mut answered = 0usize;
         let mut unreachable = 0usize;
+        let mut errored = 0usize;
         for i in 0..count {
             let src = pool[(rng() % pool.len() as u64) as usize];
             let dst = (rng() % n as u64) as u32;
@@ -604,18 +616,25 @@ fn serve<G: GraphRep + Send + Sync + 'static>(
                 1 if weighted => Query::sssp(src, dst),
                 _ => Query::ppr(src),
             };
-            match svc.submit(q)? {
-                Answer::Hops(None) | Answer::Distance(None) => unreachable += 1,
-                _ => {}
+            // Typed errors (shed, deadline, resource-exhausted, injected
+            // faults) are the service doing its job under pressure — the
+            // demo counts them instead of aborting, so soak runs under a
+            // tight --mem-budget exercise the ladder end to end.
+            match svc.submit(q) {
+                Ok(Answer::Hops(None)) | Ok(Answer::Distance(None)) => unreachable += 1,
+                Ok(_) => {}
+                Err(_) => errored += 1,
             }
             answered += 1;
         }
         let ms = t.elapsed_ms();
         let s = svc.stats();
         println!(
-            "demo: {answered} queries in {ms:.1} ms ({:.0} q/s), {unreachable} unreachable",
+            "demo: {answered} queries in {ms:.1} ms ({:.0} q/s), {unreachable} unreachable, \
+             {errored} typed errors",
             answered as f64 / (ms / 1000.0).max(1e-9)
         );
+        println!("health: {}", svc.health_json());
         println!(
             "stats: submitted={} served={} batches={} cache_hits={} coalesced={} \
              rejected={} shed={} retries={} batcher_restarts={}",
@@ -634,7 +653,8 @@ fn serve<G: GraphRep + Send + Sync + 'static>(
     }
 
     println!(
-        "ready (bfs <src> <dst> | sssp <src> <dst> | ppr <user> | stats | metrics | quit)"
+        "ready (bfs <src> <dst> | sssp <src> <dst> | ppr <user> | stats | metrics | \
+         health | quit)"
     );
     // The protocol loop lives in service::protocol so its resilience
     // (malformed lines, oversized lines, garbage bytes) is unit-tested;

@@ -141,6 +141,11 @@ pub enum EventKind {
     /// A run budget tripped. a = completed iterations, b = interrupt tag
     /// (see [`interrupt_name`]).
     BudgetTrip = 15,
+    /// Degradation-ladder transition. a = new level (0 normal … 4 shed),
+    /// b = pressure percent at the transition.
+    GovernorLadder = 16,
+    /// Resource-governor refusal. a = requested bytes, b = ladder level.
+    GovernorDeny = 17,
 }
 
 impl EventKind {
@@ -161,6 +166,8 @@ impl EventKind {
             13 => EventKind::CacheHit,
             14 => EventKind::BatcherDrain,
             15 => EventKind::BudgetTrip,
+            16 => EventKind::GovernorLadder,
+            17 => EventKind::GovernorDeny,
             _ => EventKind::Unknown,
         }
     }
@@ -183,6 +190,8 @@ impl EventKind {
             EventKind::CacheHit => "cache_hit",
             EventKind::BatcherDrain => "batcher_drain",
             EventKind::BudgetTrip => "budget_trip",
+            EventKind::GovernorLadder => "governor_ladder",
+            EventKind::GovernorDeny => "governor_deny",
         }
     }
 
@@ -203,6 +212,8 @@ impl EventKind {
             EventKind::QueueShed => ("primitive", "queued_ms"),
             EventKind::BatcherDrain => ("primitive", "batch"),
             EventKind::BudgetTrip => ("iteration", "interrupt"),
+            EventKind::GovernorLadder => ("level", "pressure_pct"),
+            EventKind::GovernorDeny => ("bytes", "level"),
             EventKind::Unknown => ("a", "b"),
         }
     }
@@ -220,6 +231,8 @@ impl EventKind {
                 | EventKind::QueueShed
                 | EventKind::CacheHit
                 | EventKind::BudgetTrip
+                | EventKind::GovernorLadder
+                | EventKind::GovernorDeny
         )
     }
 }

@@ -36,14 +36,24 @@ pub const BUCKET_BOUNDS_MS: [f64; 14] =
 const RECENT_CAP: usize = 512;
 
 /// Monotonic counter handle. Cloning shares the underlying cell.
+///
+/// Overflow semantics: increments use atomic `fetch_add`, which wraps
+/// modulo 2^64 by definition — never a panic, in debug or release
+/// builds. At one increment per nanosecond a counter takes ~584 years
+/// to wrap, so wrap-around is a documented non-event rather than a
+/// guarded path; long-soak counters elsewhere (`service::StatsSnapshot`,
+/// the governor ledger) saturate instead because they are read back for
+/// arithmetic.
 #[derive(Clone)]
 pub struct Counter(Arc<AtomicU64>);
 
 impl Counter {
+    /// Add 1. Wraps modulo 2^64 at `u64::MAX`; never panics.
     pub fn inc(&self) {
         self.0.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Add `n`. Wraps modulo 2^64 on overflow; never panics.
     pub fn add(&self, n: u64) {
         self.0.fetch_add(n, Ordering::Relaxed);
     }
@@ -297,6 +307,21 @@ mod tests {
         // Percentiles come from the recent reservoir via util::stats.
         assert_eq!(h.percentile(0.0), 0.05);
         assert_eq!(h.percentile(100.0), 9000.0);
+    }
+
+    #[test]
+    fn counter_overflow_wraps_and_never_panics() {
+        // Regression: atomic fetch_add wraps modulo 2^64 even in debug
+        // builds (no overflow panic), so a counter pinned at the top of
+        // the range cannot crash a long soak.
+        let r = Registry::new();
+        let c = r.counter("wraps_total");
+        c.add(u64::MAX);
+        assert_eq!(c.get(), u64::MAX);
+        c.inc();
+        assert_eq!(c.get(), 0, "wraps modulo 2^64 by definition");
+        c.add(7);
+        assert_eq!(c.get(), 7);
     }
 
     #[test]

@@ -304,8 +304,13 @@ pub enum QueryError {
     /// the service); the query was isolated, the service stays up.
     Internal(String),
     /// Load shedding: the query aged out of the queue before the
-    /// batcher could run it.
-    Overloaded { queued_ms: u64 },
+    /// batcher could run it. `level` is the degradation-ladder rung at
+    /// the moment of shedding.
+    Overloaded { queued_ms: u64, level: crate::util::resources::DegradationLevel },
+    /// The resource governor refused the memory this query would need
+    /// (budget headroom exhausted, admission closed at `Shed`, or an
+    /// injected pressure fault). Carries the ladder rung at refusal.
+    ResourceExhausted { level: crate::util::resources::DegradationLevel, needed_bytes: u64 },
 }
 
 impl std::fmt::Display for QueryError {
@@ -340,9 +345,13 @@ impl std::fmt::Display for QueryError {
                 write!(f, "iteration budget exhausted after {completed_iterations} iterations")
             }
             QueryError::Internal(s) => write!(f, "internal error: {s}"),
-            QueryError::Overloaded { queued_ms } => {
-                write!(f, "service overloaded: shed after {queued_ms} ms in queue")
+            QueryError::Overloaded { queued_ms, level } => {
+                write!(f, "service overloaded (ladder {level}): shed after {queued_ms} ms in queue")
             }
+            QueryError::ResourceExhausted { level, needed_bytes } => write!(
+                f,
+                "resource exhausted (ladder {level}): {needed_bytes} bytes over the memory budget"
+            ),
         }
     }
 }

@@ -1,11 +1,13 @@
 //! The `serve` line protocol, factored out of the CLI so resilience is
 //! testable: one query per line (`bfs <src> <dst>`, `sssp <src> <dst>`,
-//! `ppr <user>`, `stats`, `metrics`, `quit`). A malformed, oversized, or
-//! non-UTF-8 line produces an `error:` reply and a `malformed_requests`
-//! tick — the loop and the service stay up; only EOF or `quit` end the
-//! session. `metrics` prints a one-line JSON snapshot (queue depth,
-//! per-kind pending, counters) followed by the Prometheus-style text
-//! exposition of the process metrics registry.
+//! `ppr <user>`, `stats`, `metrics`, `health`, `quit`). A malformed,
+//! oversized, or non-UTF-8 line produces an `error:` reply and a
+//! `malformed_requests` tick — the loop and the service stay up; only
+//! EOF or `quit` end the session. `metrics` prints a one-line JSON
+//! snapshot (queue depth, per-kind pending, counters) followed by the
+//! Prometheus-style text exposition of the process metrics registry;
+//! `health` prints the resource governor's one-line JSON view (ladder
+//! level, memory pressure, per-class usage, denial counts).
 
 use std::io::{self, BufRead, Write};
 
@@ -145,6 +147,10 @@ where
                 out.write_all(svc.metrics_prometheus().as_bytes())?;
                 continue;
             }
+            ["health"] => {
+                writeln!(out, "{}", svc.health_json())?;
+                continue;
+            }
             ["bfs", src, dst] => {
                 parse_pair(src, dst).and_then(|(s, d)| svc.submit(Query::bfs(s, d)))
             }
@@ -278,6 +284,17 @@ mod tests {
         );
         assert_eq!(stats.answered, 1);
         assert_eq!(stats.errors, 0, "metrics is a command, not a query error");
+    }
+
+    #[test]
+    fn health_command_reports_ladder_level_and_classes() {
+        let svc = start_path6();
+        let (stats, lines) = run(&svc, "health\nbfs 0 1\nquit\n");
+        assert!(lines[0].starts_with("{\"level\":"), "{}", lines[0]);
+        assert!(lines[0].contains("\"pressure\":"), "{}", lines[0]);
+        assert!(lines[0].contains("\"by_class\":"), "{}", lines[0]);
+        assert_eq!(lines[1], "1 hops", "health is a command, queries still flow");
+        assert_eq!(stats.errors, 0);
     }
 
     #[test]

@@ -26,6 +26,14 @@ pub enum Seam {
     /// Batcher drain loop (`service`): a fired crossing kills the
     /// batcher thread, exercising supervision and waiter rescue.
     BatcherDrain,
+    /// Resource-governor acquisition (`util::resources`): a fired
+    /// crossing makes the governor refuse, exercising the degradation
+    /// ladder and `ResourceExhausted` propagation without needing a real
+    /// memory squeeze.
+    AllocPressure,
+    /// Memory-mapped `.gsr` open (`graph::io`): a fired crossing reports
+    /// a mapping error, exercising the typed-error fallback path.
+    MmapRead,
 }
 
 #[cfg(feature = "fault-injection")]
@@ -48,6 +56,10 @@ mod active {
         /// Panic any batch whose source list contains this vertex
         /// (exercises poisoned-lane isolation).
         pub poison_source: Option<u32>,
+        /// Deny the next N governor acquisitions outright (consumed
+        /// before the rate-based schedule — a deterministic pressure
+        /// burst for overload tests).
+        pub deny_allocs: u64,
     }
 
     impl FailPlan {
@@ -77,10 +89,21 @@ mod active {
             self.poison_source = Some(source);
             self
         }
+
+        pub fn deny_allocs(mut self, n: u64) -> Self {
+            self.deny_allocs = n;
+            self
+        }
     }
 
     static PLAN: Mutex<Option<FailPlan>> = Mutex::new(None);
-    static COUNTERS: [AtomicU64; 3] = [AtomicU64::new(0), AtomicU64::new(0), AtomicU64::new(0)];
+    static COUNTERS: [AtomicU64; 5] = [
+        AtomicU64::new(0),
+        AtomicU64::new(0),
+        AtomicU64::new(0),
+        AtomicU64::new(0),
+        AtomicU64::new(0),
+    ];
     static ENV_INIT: Once = Once::new();
 
     fn idx(seam: Seam) -> usize {
@@ -88,6 +111,8 @@ mod active {
             Seam::OperatorDispatch => 0,
             Seam::GsrDecode => 1,
             Seam::BatcherDrain => 2,
+            Seam::AllocPressure => 3,
+            Seam::MmapRead => 4,
         }
     }
 
@@ -198,6 +223,29 @@ mod active {
         }
     }
 
+    /// Should the governor refuse this acquisition? Consumes one
+    /// `deny_allocs` burst token if any remain; otherwise falls back to
+    /// the seeded rate schedule on the [`Seam::AllocPressure`] seam.
+    pub fn maybe_deny_alloc() -> bool {
+        init_from_env();
+        {
+            let mut g = plan_lock();
+            match g.as_mut() {
+                None => return false,
+                Some(plan) if plan.deny_allocs > 0 => {
+                    plan.deny_allocs -= 1;
+                    COUNTERS[idx(Seam::AllocPressure)].fetch_add(1, Ordering::Relaxed);
+                    return true;
+                }
+                Some(_) => {}
+            }
+        }
+        match decide(Seam::AllocPressure, true) {
+            Action::Nothing | Action::Delay => false,
+            Action::Panic(_) | Action::Error(_) => true,
+        }
+    }
+
     /// Panic when the active plan poisons a source in `sources` —
     /// deterministic "one bad query" for lane-isolation tests.
     pub fn maybe_panic_sources(sources: &[u32]) {
@@ -237,6 +285,11 @@ mod inert {
 
     #[inline(always)]
     pub fn maybe_panic_sources(_sources: &[u32]) {}
+
+    #[inline(always)]
+    pub fn maybe_deny_alloc() -> bool {
+        false
+    }
 }
 
 #[cfg(not(feature = "fault-injection"))]
@@ -294,5 +347,41 @@ mod tests {
         for _ in 0..32 {
             assert!(maybe_error(Seam::GsrDecode).is_ok());
         }
+    }
+
+    #[test]
+    fn deny_allocs_burst_is_consumed_then_stops() {
+        let _g = locked();
+        install(FailPlan::seeded(3, 0.0).deny_allocs(3));
+        let denials: Vec<bool> = (0..6).map(|_| maybe_deny_alloc()).collect();
+        assert_eq!(denials, vec![true, true, true, false, false, false]);
+        clear();
+        assert!(!maybe_deny_alloc(), "no plan, no denial");
+    }
+
+    #[test]
+    fn alloc_pressure_rate_schedule_is_deterministic() {
+        let _g = locked();
+        let pattern = |seed: u64| -> Vec<bool> {
+            install(FailPlan::seeded(seed, 0.4));
+            let out = (0..64).map(|_| maybe_deny_alloc()).collect::<Vec<bool>>();
+            clear();
+            out
+        };
+        let a = pattern(11);
+        let b = pattern(11);
+        assert_eq!(a, b, "same seed must replay the same denial schedule");
+        assert!(a.iter().any(|&f| f), "rate 0.4 over 64 crossings should deny at least once");
+        assert!(a.iter().any(|&f| !f), "and also admit at least once");
+    }
+
+    #[test]
+    fn mmap_read_seam_has_its_own_counter() {
+        let _g = locked();
+        install(FailPlan::seeded(1, 0.0).panic_at(Seam::MmapRead, 0));
+        assert!(maybe_error(Seam::MmapRead).is_err(), "exact crossing 0 fires");
+        assert!(maybe_error(Seam::GsrDecode).is_ok(), "sibling seam unaffected");
+        assert!(maybe_error(Seam::MmapRead).is_ok());
+        clear();
     }
 }

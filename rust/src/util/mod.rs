@@ -11,6 +11,7 @@ pub mod faults;
 pub mod mmap;
 pub mod par;
 pub mod pool;
+pub mod resources;
 pub mod rng;
 pub mod stats;
 pub mod timer;

@@ -381,6 +381,28 @@ const MAX_RECYCLED_ELEMS: usize = 4 << 20;
 static ID_BUFFERS: Mutex<Vec<Vec<u32>>> = Mutex::new(Vec::new());
 static OFFSET_BUFFERS: Mutex<Vec<Vec<usize>>> = Mutex::new(Vec::new());
 
+/// Bytes a free-list currently retains: capacity (not length — retained
+/// buffers are empty) times element width, reported to the resource
+/// governor so the degradation ladder's `ScratchTrim` rung frees real,
+/// measured memory.
+fn retained_bytes<T>(pool: &[Vec<T>]) -> u64 {
+    pool.iter().map(|b| (b.capacity() * std::mem::size_of::<T>()) as u64).sum()
+}
+
+/// Re-sync the governor's `Scratch` class with both free-lists. Called
+/// under at most one free-list lock at a time; the accounting is a gauge,
+/// not a ledger, so a momentarily-stale sum between two calls is fine.
+fn republish_scratch() {
+    let bytes = {
+        let ids = ID_BUFFERS.lock().unwrap_or_else(|e| e.into_inner());
+        retained_bytes(&ids)
+    } + {
+        let offs = OFFSET_BUFFERS.lock().unwrap_or_else(|e| e.into_inner());
+        retained_bytes(&offs)
+    };
+    crate::util::resources::set_scratch_bytes(bytes);
+}
+
 /// Take a reusable `Vec<u32>` (vertex/edge id) scratch buffer. The buffer
 /// is empty but retains the capacity of its previous life.
 pub fn take_ids() -> Vec<u32> {
@@ -397,6 +419,8 @@ pub fn recycle_ids(mut buf: Vec<u32>) {
     if pool.len() < MAX_RECYCLED {
         pool.push(buf);
     }
+    drop(pool);
+    republish_scratch();
 }
 
 /// Take a reusable `Vec<usize>` (offset/index) scratch buffer.
@@ -414,6 +438,30 @@ pub fn recycle_offsets(mut buf: Vec<usize>) {
     if pool.len() < MAX_RECYCLED {
         pool.push(buf);
     }
+    drop(pool);
+    republish_scratch();
+}
+
+/// Release every retained scratch buffer (the degradation ladder's
+/// `ScratchTrim` rung) and return the bytes freed. The free-lists refill
+/// with use once pressure recedes — trimming costs re-warm-up, never
+/// correctness.
+pub fn trim_scratch() -> u64 {
+    let freed = {
+        let mut ids = ID_BUFFERS.lock().unwrap_or_else(|e| e.into_inner());
+        let b = retained_bytes(&ids);
+        ids.clear();
+        ids.shrink_to_fit();
+        b
+    } + {
+        let mut offs = OFFSET_BUFFERS.lock().unwrap_or_else(|e| e.into_inner());
+        let b = retained_bytes(&offs);
+        offs.clear();
+        offs.shrink_to_fit();
+        b
+    };
+    crate::util::resources::set_scratch_bytes(0);
+    freed
 }
 
 #[cfg(test)]

@@ -1,0 +1,650 @@
+//! Resource governor: a process-wide memory budget and a five-rung
+//! graceful-degradation ladder for the serving stack.
+//!
+//! Gunrock's frontier model allocates state proportional to graph size
+//! and batch width — frontier bitmaps, lane words, pool scratch, cached
+//! landmark columns, owned `.gsr` payloads. The multi-GPU follow-on work
+//! (arxiv 1504.04804) makes the production constraint explicit: memory
+//! budgets, not compute, bound graph analytics at scale. This module is
+//! the stack's answer on one node: every sized allocation class reports
+//! its bytes to one [`MemoryGovernor`] through RAII [`Registration`]
+//! handles, admission control asks the governor *before* a query is
+//! allowed to allocate, and when measured pressure crosses thresholds the
+//! service walks a typed [`DegradationLevel`] ladder instead of letting
+//! the process OOM-abort:
+//!
+//! ```text
+//! Normal → CacheEvict → LaneShrink → ScratchTrim → Shed
+//! ```
+//!
+//! Downward transitions jump straight to the deepest rung whose threshold
+//! the pressure exceeds; recovery climbs back **one rung at a time** and
+//! only once pressure has fallen [`HYSTERESIS`] below the rung's entry
+//! threshold, so a workload hovering at a boundary cannot flap the ladder
+//! (and the cache/lane state behind it) on every reassessment.
+//!
+//! The governor itself only *measures and decides*; the service applies
+//! the rung's mechanical consequences (cache clear, lane-width shrink,
+//! scratch trim, admission close) when it observes a transition. Budget
+//! `0` means unlimited: accounting still runs (it is a handful of relaxed
+//! atomics), but pressure is defined as `0.0` and the ladder never moves.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
+
+use crate::obs;
+use crate::primitives::api::PrimitiveKind;
+use crate::util::faults;
+
+/// Hysteresis margin for ladder recovery: a rung is only climbed back up
+/// once pressure is this far *below* the rung's entry threshold.
+pub const HYSTERESIS: f64 = 0.05;
+
+/// Entry thresholds (fraction of budget in use) for each rung below
+/// `Normal`, indexed by `level as usize - 1`.
+const ENTER: [f64; 4] = [0.70, 0.80, 0.90, 0.97];
+
+/// The degradation ladder, ordered from healthy to closed. Each rung
+/// names the *additional* measure in force at that level; deeper rungs
+/// keep every shallower measure active.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum DegradationLevel {
+    /// Full service: all lanes, cache on, scratch recycled.
+    Normal = 0,
+    /// Landmark-cache columns are dropped (and stay dropped).
+    CacheEvict = 1,
+    /// Batch width shrinks 64 → 16.
+    LaneShrink = 2,
+    /// Batch width 16 → 4 and the pool's recycled scratch is released.
+    ScratchTrim = 3,
+    /// Admission is closed; queued work still drains.
+    Shed = 4,
+}
+
+impl DegradationLevel {
+    pub fn from_u8(x: u8) -> DegradationLevel {
+        match x {
+            1 => DegradationLevel::CacheEvict,
+            2 => DegradationLevel::LaneShrink,
+            3 => DegradationLevel::ScratchTrim,
+            4 => DegradationLevel::Shed,
+            _ => DegradationLevel::Normal,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DegradationLevel::Normal => "normal",
+            DegradationLevel::CacheEvict => "cache_evict",
+            DegradationLevel::LaneShrink => "lane_shrink",
+            DegradationLevel::ScratchTrim => "scratch_trim",
+            DegradationLevel::Shed => "shed",
+        }
+    }
+}
+
+impl std::fmt::Display for DegradationLevel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Allocation classes the governor accounts separately (the per-class
+/// split is what `health` and the flight recorder report, so "what is
+/// eating the budget" has an answer).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AllocClass {
+    /// Single-bit frontier bitmaps (`frontier::DenseBits`).
+    Frontier,
+    /// 64-lane frontier words (`frontier::lanes::LaneBits`).
+    Lanes,
+    /// Pool-recycled id/offset scratch (`util::pool`).
+    Scratch,
+    /// Landmark-cache columns (`service`).
+    Cache,
+    /// Served graph payloads (owned `.gsr` bytes, CSR arrays).
+    Graph,
+}
+
+const CLASSES: usize = 5;
+
+impl AllocClass {
+    fn idx(self) -> usize {
+        match self {
+            AllocClass::Frontier => 0,
+            AllocClass::Lanes => 1,
+            AllocClass::Scratch => 2,
+            AllocClass::Cache => 3,
+            AllocClass::Graph => 4,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            AllocClass::Frontier => "frontier",
+            AllocClass::Lanes => "lanes",
+            AllocClass::Scratch => "scratch",
+            AllocClass::Cache => "cache",
+            AllocClass::Graph => "graph",
+        }
+    }
+}
+
+/// Why an acquisition or admission was refused.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Deny {
+    /// Ladder level at the moment of refusal.
+    pub level: DegradationLevel,
+    /// Bytes the caller asked for.
+    pub needed: u64,
+    /// Bytes registered at the moment of refusal.
+    pub used: u64,
+    /// The configured budget in bytes.
+    pub budget: u64,
+}
+
+impl std::fmt::Display for Deny {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "memory budget refused {} bytes at ladder level {} ({}/{} bytes in use)",
+            self.needed, self.level, self.used, self.budget
+        )
+    }
+}
+
+/// Point-in-time governor state, as reported by the `health` command.
+#[derive(Clone, Debug)]
+pub struct HealthView {
+    pub level: DegradationLevel,
+    pub pressure: f64,
+    pub used_bytes: u64,
+    pub budget_bytes: u64,
+    pub denied: u64,
+    pub transitions: u64,
+    /// `(class name, bytes)` for every allocation class.
+    pub by_class: [(&'static str, u64); CLASSES],
+}
+
+/// Central byte accountant + ladder state. One process-wide instance
+/// lives behind [`governor()`]; unit tests build standalone instances.
+pub struct MemoryGovernor {
+    /// Budget in bytes; 0 = unlimited (accounting on, ladder inert).
+    budget: AtomicU64,
+    used: [AtomicU64; CLASSES],
+    /// Current [`DegradationLevel`] as its `u8` discriminant.
+    level: AtomicU64,
+    /// Deepest level ever reached (ladder-trip proof for tests/benches).
+    max_level: AtomicU64,
+    /// Acquisitions + admissions refused (budget or injected pressure).
+    denied: AtomicU64,
+    /// Ladder transitions in either direction.
+    transitions: AtomicU64,
+}
+
+impl MemoryGovernor {
+    pub const fn new() -> Self {
+        MemoryGovernor {
+            budget: AtomicU64::new(0),
+            used: [
+                AtomicU64::new(0),
+                AtomicU64::new(0),
+                AtomicU64::new(0),
+                AtomicU64::new(0),
+                AtomicU64::new(0),
+            ],
+            level: AtomicU64::new(0),
+            max_level: AtomicU64::new(0),
+            denied: AtomicU64::new(0),
+            transitions: AtomicU64::new(0),
+        }
+    }
+
+    /// Set the budget in megabytes (0 = unlimited) and reassess at once,
+    /// so lowering the budget takes effect without waiting for traffic.
+    pub fn set_budget_mb(&self, mb: u64) {
+        self.set_budget_bytes(mb.saturating_mul(1024 * 1024));
+    }
+
+    /// Exact-byte variant; tests and benches use it to place the
+    /// pressure precisely relative to the ladder thresholds.
+    pub fn set_budget_bytes(&self, bytes: u64) {
+        self.budget.store(bytes, Ordering::Relaxed);
+        self.reassess();
+    }
+
+    pub fn budget_bytes(&self) -> u64 {
+        self.budget.load(Ordering::Relaxed)
+    }
+
+    pub fn used_bytes(&self) -> u64 {
+        self.used.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+
+    pub fn used_by(&self, class: AllocClass) -> u64 {
+        self.used[class.idx()].load(Ordering::Relaxed)
+    }
+
+    /// Fraction of the budget in use; 0.0 when unlimited.
+    pub fn pressure(&self) -> f64 {
+        match self.budget_bytes() {
+            0 => 0.0,
+            b => self.used_bytes() as f64 / b as f64,
+        }
+    }
+
+    pub fn level(&self) -> DegradationLevel {
+        DegradationLevel::from_u8(self.level.load(Ordering::Relaxed) as u8)
+    }
+
+    /// Deepest rung reached since the last [`reset_high_water`].
+    pub fn max_level_seen(&self) -> DegradationLevel {
+        DegradationLevel::from_u8(self.max_level.load(Ordering::Relaxed) as u8)
+    }
+
+    pub fn denied(&self) -> u64 {
+        self.denied.load(Ordering::Relaxed)
+    }
+
+    pub fn transitions(&self) -> u64 {
+        self.transitions.load(Ordering::Relaxed)
+    }
+
+    /// Forget the trip high-water mark (tests/benches bracket runs).
+    pub fn reset_high_water(&self) {
+        self.max_level.store(self.level.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+
+    fn credit(&self, class: AllocClass, bytes: u64) {
+        self.used[class.idx()].fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    fn debit(&self, class: AllocClass, bytes: u64) {
+        // Saturating: a stray double-debit must not wrap the gauge to
+        // ~u64::MAX and pin the ladder at Shed forever.
+        let _ = self.used[class.idx()].fetch_update(
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+            |x| Some(x.saturating_sub(bytes)),
+        );
+    }
+
+    /// Would `bytes` more fit under the budget right now? Refusal does
+    /// NOT depend on the ladder — headroom alone decides, so a huge
+    /// request is refused even at `Normal` and a tiny one can succeed
+    /// while degraded (the ladder's job is shrinking future demand, not
+    /// double-refusing).
+    fn fits(&self, bytes: u64) -> bool {
+        match self.budget_bytes() {
+            0 => true,
+            b => self.used_bytes().saturating_add(bytes) <= b,
+        }
+    }
+
+    fn deny(&self, needed: u64) -> Deny {
+        self.denied.fetch_add(1, Ordering::Relaxed);
+        let d = Deny {
+            level: self.level(),
+            needed,
+            used: self.used_bytes(),
+            budget: self.budget_bytes(),
+        };
+        obs::event(obs::EventKind::GovernorDeny, needed, d.level as u64);
+        d
+    }
+
+    /// Recompute the ladder level from current pressure. Downward moves
+    /// jump to the deepest rung whose threshold is exceeded; upward moves
+    /// climb exactly one rung, and only with [`HYSTERESIS`] margin below
+    /// that rung's entry threshold. Returns `(old, new)`.
+    pub fn reassess(&self) -> (DegradationLevel, DegradationLevel) {
+        let p = self.pressure();
+        let old = self.level();
+        // Deepest rung whose entry threshold the pressure meets.
+        let mut floor = 0usize;
+        for (i, &t) in ENTER.iter().enumerate() {
+            if p >= t {
+                floor = i + 1;
+            }
+        }
+        let new = if floor > old as usize {
+            DegradationLevel::from_u8(floor as u8)
+        } else if (old as usize) > floor && p < ENTER[old as usize - 1] - HYSTERESIS {
+            DegradationLevel::from_u8(old as u8 - 1)
+        } else {
+            old
+        };
+        if new != old {
+            self.level.store(new as u64, Ordering::Relaxed);
+            let _ = self.max_level.fetch_max(new as u64, Ordering::Relaxed);
+            self.transitions.fetch_add(1, Ordering::Relaxed);
+            obs::event(obs::EventKind::GovernorLadder, new as u64, (p * 100.0) as u64);
+            publish_gauges(self, p, new);
+        }
+        (old, new)
+    }
+
+    /// Register `bytes` unconditionally (the allocation already exists —
+    /// deep engine state mid-run cannot fail politely; the ladder reacts
+    /// on the next reassessment instead). Returns the accounting handle.
+    pub fn track_on(self: &'static Self, class: AllocClass, bytes: u64) -> Registration {
+        self.credit(class, bytes);
+        Registration { gov: self, class, bytes }
+    }
+
+    /// Fallible acquisition for boundary allocations (query admission,
+    /// `.gsr` section decode): refuses when injected pressure fires or
+    /// the bytes don't fit the budget; registers them otherwise.
+    pub fn try_acquire_on(
+        self: &'static Self,
+        class: AllocClass,
+        bytes: u64,
+    ) -> Result<Registration, Deny> {
+        if faults::maybe_deny_alloc() {
+            return Err(self.deny(bytes));
+        }
+        if !self.fits(bytes) {
+            self.reassess();
+            return Err(self.deny(bytes));
+        }
+        Ok(self.track_on(class, bytes))
+    }
+
+    /// Admission preflight: no bytes are registered — the estimate only
+    /// has to *fit* right now, and the ladder must not be at [`Shed`].
+    /// Reassesses first so admission always sees fresh pressure.
+    pub fn admit(&self, estimated_bytes: u64) -> Result<(), Deny> {
+        self.reassess();
+        if faults::maybe_deny_alloc() {
+            return Err(self.deny(estimated_bytes));
+        }
+        if self.level() == DegradationLevel::Shed || !self.fits(estimated_bytes) {
+            return Err(self.deny(estimated_bytes));
+        }
+        Ok(())
+    }
+
+    /// Plain-headroom guard for callers that cannot hold a handle (the
+    /// `.gsr` decode prefix guard): refuses, but registers nothing.
+    pub fn guard(&self, bytes: u64) -> Result<(), Deny> {
+        if faults::maybe_deny_alloc() {
+            return Err(self.deny(bytes));
+        }
+        if !self.fits(bytes) {
+            self.reassess();
+            return Err(self.deny(bytes));
+        }
+        Ok(())
+    }
+
+    pub fn health(&self) -> HealthView {
+        let mut by_class = [("", 0u64); CLASSES];
+        for (slot, class) in by_class.iter_mut().zip([
+            AllocClass::Frontier,
+            AllocClass::Lanes,
+            AllocClass::Scratch,
+            AllocClass::Cache,
+            AllocClass::Graph,
+        ]) {
+            *slot = (class.name(), self.used_by(class));
+        }
+        HealthView {
+            level: self.level(),
+            pressure: self.pressure(),
+            used_bytes: self.used_bytes(),
+            budget_bytes: self.budget_bytes(),
+            denied: self.denied(),
+            transitions: self.transitions(),
+            by_class,
+        }
+    }
+}
+
+impl Default for MemoryGovernor {
+    fn default() -> Self {
+        MemoryGovernor::new()
+    }
+}
+
+/// Push the governor gauges into the metrics registry (transition-time
+/// only — the registry lookup is find-or-create under a mutex, too heavy
+/// for per-allocation paths).
+fn publish_gauges(gov: &MemoryGovernor, pressure: f64, level: DegradationLevel) {
+    let m = obs::metrics();
+    m.gauge("governor_pressure").set(pressure);
+    m.gauge("governor_level").set(level as u8 as f64);
+    m.gauge("governor_used_bytes").set(gov.used_bytes() as f64);
+}
+
+/// RAII accounting handle: holds `bytes` registered against a class on
+/// the process-wide governor until dropped. `Clone` re-registers (a
+/// cloned frontier owns its own copy of the storage).
+#[derive(Debug)]
+pub struct Registration {
+    gov: &'static MemoryGovernor,
+    class: AllocClass,
+    bytes: u64,
+}
+
+impl Registration {
+    pub fn bytes(&self) -> u64 {
+        self.bytes
+    }
+
+    /// Re-register this handle for a different byte count (resized
+    /// storage, e.g. `LaneBits::reset` to a new universe).
+    pub fn resize(&mut self, bytes: u64) {
+        self.gov.debit(self.class, self.bytes);
+        self.gov.credit(self.class, bytes);
+        self.bytes = bytes;
+    }
+}
+
+impl Clone for Registration {
+    fn clone(&self) -> Self {
+        self.gov.credit(self.class, self.bytes);
+        Registration { gov: self.gov, class: self.class, bytes: self.bytes }
+    }
+}
+
+impl Drop for Registration {
+    fn drop(&mut self) {
+        self.gov.debit(self.class, self.bytes);
+    }
+}
+
+/// The process-wide governor every production allocation site reports to.
+pub fn governor() -> &'static MemoryGovernor {
+    static GOV: OnceLock<MemoryGovernor> = OnceLock::new();
+    GOV.get_or_init(MemoryGovernor::new)
+}
+
+/// [`MemoryGovernor::track_on`] against the process-wide governor.
+pub fn track(class: AllocClass, bytes: u64) -> Registration {
+    governor().track_on(class, bytes)
+}
+
+/// [`MemoryGovernor::try_acquire_on`] against the process-wide governor.
+pub fn try_acquire(class: AllocClass, bytes: u64) -> Result<Registration, Deny> {
+    governor().try_acquire_on(class, bytes)
+}
+
+/// Gauge-style setter for the pool's recycled-scratch class: the pool
+/// republishes its retained total rather than threading a `Registration`
+/// through every recycled buffer.
+pub fn set_scratch_bytes(bytes: u64) {
+    governor().used[AllocClass::Scratch.idx()].store(bytes, Ordering::Relaxed);
+}
+
+/// Estimated incremental bytes one query of `kind` costs against a graph
+/// of `n` vertices under a `lanes`-wide batch. Deliberately coarse (the
+/// admission contract is "reject what obviously won't fit before it
+/// allocates", not exact accounting): each lane's share of the batch
+/// engine's lane words (3 `LaneBits` ping-pong/visited structures of
+/// `n × 8` bytes amortized over the batch) plus the per-source answer
+/// column the kind scatters back.
+pub fn estimate_query_cost(n: usize, kind: PrimitiveKind, lanes: usize) -> u64 {
+    let n = n as u64;
+    let lane_share = (n * 8).saturating_mul(3) / lanes.max(1) as u64;
+    let column = match kind {
+        PrimitiveKind::Bfs => n * 4,
+        PrimitiveKind::Sssp => n * 8,
+        // PPR scatters a short recommendation list but runs over f64 rank
+        // columns shared per batch.
+        PrimitiveKind::Ppr => n * 8 / lanes.max(1) as u64 + 4096,
+        _ => n * 8,
+    };
+    lane_share.saturating_add(column)
+}
+
+/// Estimated resident bytes of a served graph: CSR-shaped adjacency
+/// (offsets + edge ids + optional weights) — used for the service's
+/// graph-payload registration where the concrete `GraphRep` does not
+/// expose its exact footprint.
+pub fn estimate_graph_bytes(n: usize, m: usize) -> u64 {
+    (n as u64 + 1) * 8 + (m as u64) * 4 + (m as u64) * 8
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Standalone instances exercise accounting; ladder walking needs a
+    /// `&'static` for Registration, so those tests leak one (bounded:
+    /// one small struct per test, intentional).
+    fn fresh() -> &'static MemoryGovernor {
+        Box::leak(Box::new(MemoryGovernor::new()))
+    }
+
+    #[test]
+    fn registration_credits_and_debits_by_class() {
+        let g = fresh();
+        let r = g.track_on(AllocClass::Frontier, 1000);
+        let r2 = g.track_on(AllocClass::Cache, 24);
+        assert_eq!(g.used_bytes(), 1024);
+        assert_eq!(g.used_by(AllocClass::Frontier), 1000);
+        assert_eq!(g.used_by(AllocClass::Cache), 24);
+        let r3 = r.clone();
+        assert_eq!(g.used_by(AllocClass::Frontier), 2000, "clone re-registers");
+        drop(r);
+        drop(r3);
+        drop(r2);
+        assert_eq!(g.used_bytes(), 0);
+    }
+
+    #[test]
+    fn resize_moves_the_registered_bytes() {
+        let g = fresh();
+        let mut r = g.track_on(AllocClass::Lanes, 512);
+        r.resize(2048);
+        assert_eq!(g.used_by(AllocClass::Lanes), 2048);
+        drop(r);
+        assert_eq!(g.used_by(AllocClass::Lanes), 0);
+    }
+
+    #[test]
+    fn double_debit_saturates_instead_of_wrapping() {
+        let g = fresh();
+        g.debit(AllocClass::Scratch, 4096);
+        assert_eq!(g.used_bytes(), 0, "stray debit must not wrap the gauge");
+    }
+
+    #[test]
+    fn unlimited_budget_never_degrades_or_refuses() {
+        let g = fresh();
+        let _r = g.track_on(AllocClass::Graph, u64::MAX / 2);
+        assert_eq!(g.pressure(), 0.0);
+        let (_, lvl) = g.reassess();
+        assert_eq!(lvl, DegradationLevel::Normal);
+        assert!(g.admit(u64::MAX / 2).is_ok());
+        assert!(g.guard(1 << 40).is_ok());
+    }
+
+    #[test]
+    fn ladder_jumps_down_and_climbs_back_one_rung_with_hysteresis() {
+        let g = fresh();
+        g.set_budget_bytes(1000);
+        let heavy = g.track_on(AllocClass::Graph, 950);
+        let (old, new) = g.reassess();
+        assert_eq!(old, DegradationLevel::Normal);
+        assert_eq!(new, DegradationLevel::ScratchTrim, "0.95 jumps straight past two rungs");
+        // Dropping to 0.88 is below ScratchTrim's 0.90 entry but NOT by
+        // the hysteresis margin — the ladder holds.
+        drop(heavy);
+        let _mid = g.track_on(AllocClass::Graph, 880);
+        assert_eq!(g.reassess().1, DegradationLevel::ScratchTrim, "within hysteresis: hold");
+        // 0.84 < 0.90 - 0.05: climb exactly one rung.
+        g.debit(AllocClass::Graph, 40);
+        assert_eq!(g.reassess().1, DegradationLevel::LaneShrink, "one rung per reassess");
+        assert_eq!(g.reassess().1, DegradationLevel::LaneShrink, "0.84 >= 0.80: hold");
+        g.debit(AllocClass::Graph, 840);
+        assert_eq!(g.reassess().1, DegradationLevel::CacheEvict);
+        assert_eq!(g.reassess().1, DegradationLevel::Normal);
+        assert_eq!(g.max_level_seen(), DegradationLevel::ScratchTrim);
+        assert!(g.transitions() >= 4);
+    }
+
+    #[test]
+    fn shed_closes_admission_but_small_acquisitions_still_fit() {
+        let g = fresh();
+        g.set_budget_bytes(1000);
+        let _r = g.track_on(AllocClass::Graph, 980);
+        g.reassess();
+        assert_eq!(g.level(), DegradationLevel::Shed);
+        let deny = g.admit(1).unwrap_err();
+        assert_eq!(deny.level, DegradationLevel::Shed);
+        assert!(g.denied() >= 1);
+        // try_acquire is headroom-gated, not level-gated: draining queued
+        // work may still need small registrations while shedding.
+        assert!(g.try_acquire_on(AllocClass::Cache, 10).is_ok());
+        assert!(g.try_acquire_on(AllocClass::Cache, 100).is_err(), "but not past the budget");
+    }
+
+    #[test]
+    fn admit_rejects_what_cannot_fit_even_at_normal() {
+        let g = fresh();
+        g.set_budget_bytes(1 << 20);
+        assert_eq!(g.level(), DegradationLevel::Normal);
+        let deny = g.admit(2 << 20).unwrap_err();
+        assert_eq!(deny.level, DegradationLevel::Normal);
+        assert_eq!(deny.budget, 1 << 20);
+        assert!(g.admit(1 << 10).is_ok());
+    }
+
+    #[test]
+    fn health_view_reports_per_class_split() {
+        let g = fresh();
+        let _a = g.track_on(AllocClass::Lanes, 64);
+        let _b = g.track_on(AllocClass::Graph, 100);
+        let h = g.health();
+        assert_eq!(h.used_bytes, 164);
+        assert_eq!(h.level, DegradationLevel::Normal);
+        let lanes = h.by_class.iter().find(|(k, _)| *k == "lanes").map(|(_, v)| *v);
+        assert_eq!(lanes, Some(64));
+    }
+
+    #[test]
+    fn cost_estimates_scale_with_graph_and_kind() {
+        use crate::primitives::api::PrimitiveKind;
+        let small = estimate_query_cost(1 << 10, PrimitiveKind::Bfs, 64);
+        let big = estimate_query_cost(1 << 20, PrimitiveKind::Bfs, 64);
+        assert!(big > small * 512, "cost tracks vertex count");
+        let bfs = estimate_query_cost(1 << 16, PrimitiveKind::Bfs, 64);
+        let sssp = estimate_query_cost(1 << 16, PrimitiveKind::Sssp, 64);
+        assert!(sssp > bfs, "wider distance columns cost more");
+        let narrow = estimate_query_cost(1 << 16, PrimitiveKind::Bfs, 4);
+        assert!(narrow > bfs, "fewer lanes amortize the engine less");
+        assert!(estimate_graph_bytes(100, 1000) > 0);
+    }
+
+    #[test]
+    fn level_roundtrips_and_orders() {
+        for x in 0..=4u8 {
+            assert_eq!(DegradationLevel::from_u8(x) as u8, x);
+        }
+        assert_eq!(DegradationLevel::from_u8(99), DegradationLevel::Normal);
+        assert!(DegradationLevel::Shed > DegradationLevel::Normal);
+        assert_eq!(DegradationLevel::LaneShrink.to_string(), "lane_shrink");
+    }
+}

@@ -21,11 +21,13 @@ use std::time::Duration;
 
 use gunrock::config::Config;
 use gunrock::graph::generators::rmat::{rmat, RmatParams};
-use gunrock::graph::Csr;
+use gunrock::graph::io::{self, MmapValidation};
+use gunrock::graph::{Codec, CompressedCsr, Csr};
 use gunrock::primitives::api::QueryError;
 use gunrock::primitives::bfs;
 use gunrock::service::{Answer, Query, QueryService};
 use gunrock::util::faults::{self, FailPlan, Seam};
+use gunrock::util::resources::{self, DegradationLevel};
 
 /// The fault plan is process-global; these tests serialize on this lock
 /// so one test's schedule can never fire inside another.
@@ -42,6 +44,23 @@ struct PlanGuard;
 impl Drop for PlanGuard {
     fn drop(&mut self) {
         faults::clear();
+    }
+}
+
+/// Restores the process-global governor to unlimited (and walks the
+/// ladder back to Normal) even when the test body panics, so a failing
+/// storm test cannot leak memory pressure into the rest of the binary.
+struct BudgetGuard;
+
+impl Drop for BudgetGuard {
+    fn drop(&mut self) {
+        let gov = resources::governor();
+        gov.set_budget_bytes(0);
+        // Recovery climbs one rung per reassessment (hysteresis), so a
+        // few passes walk any depth back to Normal at zero pressure.
+        for _ in 0..4 {
+            gov.reassess();
+        }
     }
 }
 
@@ -201,5 +220,121 @@ fn poisoned_source_fails_alone_other_lanes_answer() {
             }
         }
         assert!(svc.stats().retries >= 1, "poisoned batch retried first: {:?}", svc.stats());
+    });
+}
+
+/// Overload storm: a tight memory budget plus an injected-denial burst
+/// while client threads hammer the service and the graph is swapped
+/// mid-storm. Invariants: every query resolves (answer or typed error,
+/// never a hang or abort), the degradation ladder walks down under
+/// pressure and back up to Normal once it lifts, and post-storm answers
+/// are bit-identical to pre-storm ground truth.
+#[test]
+fn overload_storm_ladder_walks_down_and_recovers_every_query_resolves() {
+    let _serial = locked();
+    let _plan = PlanGuard;
+    let _budget = BudgetGuard;
+    with_watchdog(180, "overload storm", || {
+        let g = Arc::new(scale_free());
+        let n = g.num_vertices as u32;
+        let cfg = Config::default();
+        let sources: Vec<u32> = (0..8u32).map(|i| (i * 29) % n).collect();
+        let truth: Vec<Vec<u32>> =
+            sources.iter().map(|&s| bfs::bfs(g.as_ref(), s, &cfg).0.labels).collect();
+        let svc = QueryService::start(Arc::clone(&g), cfg);
+
+        // Budget with real headroom, then a tracked ballast that pins
+        // measured pressure at ~0.93 — above the ScratchTrim rung (0.90)
+        // but with room left for batch-run acquisitions to succeed.
+        let gov = resources::governor();
+        let used = gov.used_bytes();
+        let budget = used + 2_000_000;
+        gov.set_budget_bytes(budget);
+        gov.reset_high_water();
+        let target = (budget as f64 * 0.93) as u64;
+        let ballast =
+            resources::track(resources::AllocClass::Cache, target.saturating_sub(used));
+        // Deny the next three governor acquisitions outright: those
+        // batches must resolve every member ticket with a typed error.
+        faults::install(FailPlan::seeded(0xB06, 0.0).deny_allocs(3));
+
+        std::thread::scope(|scope| {
+            for t in 0..4usize {
+                let svc = &svc;
+                let sources = &sources;
+                let truth = &truth;
+                scope.spawn(move || {
+                    for i in 0..30usize {
+                        let which = (t * 30 + i) % sources.len();
+                        let src = sources[which];
+                        let dst = ((t * 137 + i * 19) % n as usize) as u32;
+                        // Under pressure a query may be denied — but only
+                        // with a typed error; a success must be correct.
+                        match svc.submit(Query::bfs(src, dst)) {
+                            Ok(got) => assert_eq!(
+                                got,
+                                Answer::Hops(hops(&truth[which], dst)),
+                                "storm success must still be right: {src}->{dst}"
+                            ),
+                            Err(QueryError::ResourceExhausted { .. })
+                            | Err(QueryError::Overloaded { .. }) => {}
+                            Err(other) => panic!("unexpected error kind: {other}"),
+                        }
+                    }
+                });
+            }
+            // Mid-storm graph swap while degraded: in-flight batches keep
+            // the old snapshot alive; the swap must not wedge anything.
+            svc.swap_graph(Arc::clone(&g));
+        });
+
+        assert!(
+            gov.max_level_seen() >= DegradationLevel::LaneShrink,
+            "storm never tripped the ladder: {}",
+            svc.health_json()
+        );
+        assert!(gov.denied() >= 3, "denial burst was not consumed: {}", svc.health_json());
+
+        // Lift the pressure: the ladder must climb back to Normal (one
+        // rung per reassessment) while queries keep flowing.
+        faults::clear();
+        drop(ballast);
+        for (i, &src) in sources.iter().enumerate() {
+            for dst in [0u32, 1, n / 2, n - 1] {
+                assert_eq!(
+                    svc.submit(Query::bfs(src, dst)).unwrap(),
+                    Answer::Hops(hops(&truth[i], dst)),
+                    "post-storm {src}->{dst} must be bit-identical"
+                );
+            }
+        }
+        assert_eq!(
+            gov.level(),
+            DegradationLevel::Normal,
+            "ladder recovered with pressure lifted: {}",
+            svc.health_json()
+        );
+    });
+}
+
+/// An injected mmap read fault surfaces as a typed load error — never a
+/// crash — and a clean retry succeeds against the same file.
+#[test]
+fn mmap_read_fault_is_a_typed_load_error_then_recovers() {
+    let _serial = locked();
+    let _plan = PlanGuard;
+    with_watchdog(60, "mmap read fault", || {
+        let g = scale_free();
+        let cg = CompressedCsr::from_csr(&g, Codec::Varint);
+        let mut p = std::env::temp_dir();
+        p.push(format!("gunrock_chaos_mmap_{}.gsr", std::process::id()));
+        io::save_gsr(&p, &cg).unwrap();
+        faults::install(FailPlan::seeded(0, 0.0).panic_at(Seam::MmapRead, 0));
+        let err = io::load_gsr_mmap(&p, MmapValidation::Checksums).unwrap_err();
+        assert!(err.to_string().contains("injected fault"), "{err:#}");
+        faults::clear();
+        let mapped = io::load_gsr_mmap(&p, MmapValidation::Full).unwrap();
+        assert_eq!(mapped.num_vertices, cg.num_vertices);
+        std::fs::remove_file(&p).ok();
     });
 }

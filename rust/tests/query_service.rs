@@ -277,6 +277,98 @@ fn service_over_mapped_gsr_and_mapped_swap() {
     assert_eq!(svc.submit(Query::bfs(0, 9)).unwrap(), Answer::Hops(want_hops));
 }
 
+/// `swap_graph` racing in-flight queries over memory-mapped graphs: the
+/// old mapping keeps answering (correctly) until its last in-flight
+/// reader drops — even with both backing files unlinked — nothing hangs,
+/// and the swap's epoch bump invalidates the landmark cache, so
+/// post-swap answers come from the new graph rather than a stale cached
+/// column.
+#[test]
+fn mapped_swap_races_inflight_queries_and_invalidates_cache() {
+    use gunrock::graph::io::{self, MmapValidation};
+    let a = scale_free_weighted();
+    let mut b = scale_free();
+    datasets::attach_uniform_weights(&mut b, 17); // same topology, new weights
+    let cfg = Config::default();
+    let n = a.num_vertices;
+    let sources: Vec<u32> = (0..8u32).map(|i| (i * 37) % n as u32).collect();
+    let truth: Vec<Vec<u32>> =
+        sources.iter().map(|&s| bfs::bfs(&a, s, &cfg).0.labels).collect();
+    let (da, _) = sssp::sssp(&a, 3, &cfg);
+    let (db, _) = sssp::sssp(&b, 3, &cfg);
+
+    let dir = std::env::temp_dir();
+    let pa = dir.join(format!("gunrock_swap_race_a_{}.gsr", std::process::id()));
+    let pb = dir.join(format!("gunrock_swap_race_b_{}.gsr", std::process::id()));
+    io::save_gsr(&pa, &CompressedCsr::from_csr(&a, Codec::Varint)).unwrap();
+    io::save_gsr(&pb, &CompressedCsr::from_csr(&b, Codec::Varint)).unwrap();
+    let ma = io::load_gsr_mmap(&pa, MmapValidation::Checksums).unwrap();
+    let mb = io::load_gsr_mmap(&pb, MmapValidation::Checksums).unwrap();
+    assert!(ma.payload.is_mapped() && mb.payload.is_mapped());
+    // Unlink both before serving: the mappings pin the page-cache pages.
+    std::fs::remove_file(&pa).unwrap();
+    std::fs::remove_file(&pb).unwrap();
+
+    let svc = QueryService::start(Arc::new(ma), cfg);
+    // Prime the landmark cache with a column the swap must invalidate.
+    let want_a = match da.dist[9] {
+        d if d >= sssp::INFINITY_DIST => None,
+        d => Some(d),
+    };
+    assert_eq!(svc.submit(Query::sssp(3, 9)).unwrap(), Answer::Distance(want_a));
+
+    // BFS hop counts are weight-blind, so they are identical over both
+    // graphs: every success during the race window has exactly one right
+    // answer no matter which snapshot served it.
+    std::thread::scope(|scope| {
+        for t in 0..4usize {
+            let svc = &svc;
+            let sources = &sources;
+            let truth = &truth;
+            scope.spawn(move || {
+                for i in 0..60usize {
+                    let which = (t * 60 + i) % sources.len();
+                    let src = sources[which];
+                    let dst = ((t * 131 + i * 7) % n) as u32;
+                    let want = match truth[which][dst as usize] {
+                        bfs::INFINITY_DEPTH => None,
+                        h => Some(h),
+                    };
+                    assert_eq!(
+                        svc.submit(Query::bfs(src, dst)).unwrap(),
+                        Answer::Hops(want),
+                        "racing swap: {src}->{dst}"
+                    );
+                }
+            });
+        }
+        // Swap mid-race: in-flight batches finish against the old
+        // mapping (their `Arc` keeps it alive past the unlink); batches
+        // formed after the epoch bump see the new one.
+        svc.swap_graph(Arc::new(mb));
+    });
+
+    // Epoch invalidation: the reseeded weights change at least one
+    // shortest path, and the swapped service must answer with the *new*
+    // distance — a stale cached column from graph `a` would be wrong.
+    let differing: Vec<u32> = (0..n as u32)
+        .filter(|&d| da.dist[d as usize] != db.dist[d as usize])
+        .take(4)
+        .collect();
+    assert!(!differing.is_empty(), "weight reseed changed no distance");
+    for &dst in &differing {
+        let want_b = match db.dist[dst as usize] {
+            d if d >= sssp::INFINITY_DIST => None,
+            d => Some(d),
+        };
+        assert_eq!(
+            svc.submit(Query::sssp(3, dst)).unwrap(),
+            Answer::Distance(want_b),
+            "post-swap 3->{dst} must come from the new graph"
+        );
+    }
+}
+
 /// The service serves the compressed representation too — one generic
 /// service over any `GraphRep`.
 #[test]
